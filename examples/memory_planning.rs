@@ -1,0 +1,80 @@
+//! Memory planning scenario (paper eq. 1 + Fig. 5): sweep device memory
+//! capacity and watch the segmentation adapt — on roomy devices Algorithm
+//! 1 optimizes latency alone; as memory tightens, replicated FC stages
+//! stop fitting and the planner is forced to IOP-pair the classifier,
+//! trading a little latency for a ~2x peak-memory reduction (this is the
+//! configuration that reproduces the paper's LeNet Fig. 5 number).
+//!
+//!     cargo run --release --example memory_planning
+
+use iop::cost;
+use iop::device::{Cluster, Device};
+use iop::model::zoo;
+use iop::partition::{Segment, Strategy};
+use iop::pipeline;
+use iop::segmentation::greedy;
+use iop::util::table::Table;
+use iop::util::units::{fmt_bytes, fmt_secs, pct_saving};
+
+fn main() {
+    let model = zoo::lenet();
+    println!("== eq. (1)-aware planning: {} ==\n", model.summary());
+
+    let mut t = Table::new(&[
+        "device mem",
+        "segmentation",
+        "IOP latency",
+        "IOP peak mem",
+        "CoEdge peak mem",
+        "saving",
+    ]);
+
+    for mem_kib in [512u64, 256, 200, 160, 128] {
+        let cluster = Cluster::new(
+            vec![Device::new(0.6e9, mem_kib * 1024); 3],
+            6.25e6,
+            4e-3,
+        );
+        let segs = greedy(&model, &cluster);
+        let seg_str: Vec<String> = segs
+            .iter()
+            .map(|s| match s {
+                Segment::Single(i) => format!("s{i}"),
+                Segment::Pair(i) => format!("p{i}{}", i + 1),
+            })
+            .collect();
+
+        let (_, iop) = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Iop);
+        let (_, co) = pipeline::plan_and_evaluate(&model, &cluster, Strategy::CoEdge);
+        t.row(vec![
+            fmt_bytes(mem_kib * 1024),
+            seg_str.join(","),
+            fmt_secs(iop.total_secs),
+            fmt_bytes(iop.memory.peak_footprint()),
+            fmt_bytes(co.memory.peak_footprint()),
+            format!(
+                "-{:.1}%",
+                pct_saving(
+                    co.memory.peak_footprint() as f64,
+                    iop.memory.peak_footprint() as f64
+                )
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // eq. (1) feasibility report across the zoo on the paper testbed.
+    println!("eq. (1) feasibility on 512 MiB devices:");
+    let cluster = iop::device::profiles::paper_default();
+    for m in zoo::all_models() {
+        let line: Vec<String> = Strategy::all()
+            .iter()
+            .map(|&s| {
+                let plan = pipeline::plan(&m, &cluster, s);
+                let ok = cost::memory::check_feasible(&m, &plan, &cluster).is_ok();
+                format!("{}={}", s.name(), if ok { "ok" } else { "OVERFLOW" })
+            })
+            .collect();
+        println!("  {:<8} {}", m.name, line.join("  "));
+    }
+}

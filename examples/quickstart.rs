@@ -1,0 +1,58 @@
+//! Quickstart: plan all three strategies for one model on the paper
+//! testbed, print the Fig. 4/Fig. 5 style comparison, and sanity-run the
+//! IOP plan on real tensors.
+//!
+//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- alexnet
+
+use iop::device::profiles;
+use iop::exec::compute::centralized_inference;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{run_plan, ExecOptions};
+use iop::metrics::{latency_table, memory_table, ModelComparison};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::util::units::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "lenet".into());
+    let model = zoo::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (try: iop models)"))?;
+    let cluster = profiles::paper_default();
+
+    println!("== {} on the paper testbed (m=3) ==\n", model.summary());
+
+    // 1) the analytic comparison the paper's figures plot
+    let cmp = ModelComparison::compute(&model, &cluster);
+    println!("{}", latency_table(std::slice::from_ref(&cmp)));
+    println!("{}", memory_table(std::slice::from_ref(&cmp)));
+
+    // 2) show the chosen IOP plan, stage by stage
+    let (plan, cost) = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Iop);
+    println!(
+        "IOP plan: {} connections, total {}",
+        plan.total_connections(),
+        fmt_secs(cost.total_secs)
+    );
+    println!(
+        "{}",
+        iop::metrics::stage_breakdown_table(&model, &plan, &cost)
+    );
+
+    // 3) really run it (thread-per-device, reference backend) and check
+    //    the numbers against the centralized model
+    if model.total_flops() < 50e6 {
+        let wb = WeightBundle::generate(&model);
+        let expect = centralized_inference(&model, &wb, &model_input(&model));
+        let got = run_plan(&model, &plan, &ExecOptions::default())?;
+        println!(
+            "distributed execution: max |Δ| vs centralized = {:.2e}  (msgs: {})",
+            got.output.max_abs_diff(&expect),
+            got.stats.messages_sent.iter().sum::<usize>(),
+        );
+    } else {
+        println!("(skipping real execution for a {} model — try lenet/vgg_mini)", name);
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Fig. 6 as a runnable example: the VGG family swept over connection
+//! establishment latency, printing the series the paper plots plus the
+//! IOP saving vs each baseline at the sweep ends.
+//!
+//!     cargo run --release --example vgg_sweep
+
+use iop::device::profiles;
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::util::table::Table;
+use iop::util::units::{fmt_secs, pct_saving};
+
+fn main() {
+    let t_ests_ms = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+    let mut table = Table::new(&["model", "t_est", "OC", "CoEdge", "IOP", "vs OC", "vs CoEdge"]);
+    let mut summary = Vec::new();
+
+    for model in zoo::fig6_models() {
+        let mut save_oc = Vec::new();
+        let mut save_co = Vec::new();
+        for &t in &t_ests_ms {
+            let cluster = profiles::paper_with_t_est(t * 1e-3);
+            let oc = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Oc).1.total_secs;
+            let co = pipeline::plan_and_evaluate(&model, &cluster, Strategy::CoEdge).1.total_secs;
+            let iop = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Iop).1.total_secs;
+            save_oc.push(pct_saving(oc, iop));
+            save_co.push(pct_saving(co, iop));
+            table.row(vec![
+                model.name.clone(),
+                format!("{t} ms"),
+                fmt_secs(oc),
+                fmt_secs(co),
+                fmt_secs(iop),
+                format!("-{:.2}%", pct_saving(oc, iop)),
+                format!("-{:.2}%", pct_saving(co, iop)),
+            ]);
+        }
+        summary.push(format!(
+            "{}: IOP saves {:.2}%..{:.2}% vs OC across the sweep (paper band for reference: \
+             VGG11 14.51–26.74, VGG13 12.99–24.99, VGG16 3.34–31.01, VGG19 15.01–34.87)",
+            model.name,
+            save_oc.first().unwrap(),
+            save_oc.last().unwrap(),
+        ));
+    }
+
+    println!("Fig. 6 — inference time vs connection establishment latency (m=3)");
+    println!("{}", table.render());
+    for s in summary {
+        println!("{s}");
+    }
+}

@@ -1,0 +1,177 @@
+"""AOT compiler: JAX/Pallas -> HLO *text* artifacts + manifest.json.
+
+Run once by ``make artifacts`` (never at inference time):
+
+1. ``iop emit-plans`` (rust) exports the canonical partition plans as
+   ``artifacts/plans.json``;
+2. this module lowers, per (model, strategy, stage, device), the shard
+   step functions of ``partition.py`` — plus the post-reduction tails and
+   the centralized whole-network executables — to HLO text;
+3. ``manifest.json`` maps semantic keys to files + shapes for the rust
+   runtime (`rust/src/runtime/manifest.rs`).
+
+HLO **text** (not serialized protos) is the interchange format: jax>=0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Identical step functions are deduplicated by content hash, so e.g. three
+equal OC shards share one executable file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .partition import build_step, build_tail, shape_after
+
+
+def to_hlo_text(fn, arg_shapes: List[Tuple[int, ...]]) -> str:
+    """Lower ``fn(*args)`` (returning a tuple) to HLO text."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in arg_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Exporter:
+    """Writes deduplicated HLO files + manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: Dict[str, dict] = {}
+        self._dedup: Dict[str, str] = {}  # content hash -> file name
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, key: str, fn, in_shapes, out_shape) -> None:
+        text = to_hlo_text(fn, in_shapes)
+        h = hashlib.sha256(text.encode()).hexdigest()[:16]
+        fname = self._dedup.get(h)
+        if fname is None:
+            fname = f"{h}.hlo.txt"
+            with open(os.path.join(self.out_dir, fname), "w") as f:
+                f.write(text)
+            self._dedup[h] = fname
+        self.entries[key] = {
+            "file": fname,
+            "inputs": [list(s) for s in in_shapes],
+            "output": list(out_shape),
+        }
+
+    def write_manifest(self) -> None:
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump({"entries": self.entries}, f, indent=1, sort_keys=True)
+
+
+def out_shape_of(model: M.ModelDef, op_idx: int, tail_end: int, dev: dict, in_shape):
+    """Output shape of a device's step (mirrors the executor semantics)."""
+    op = model.ops[op_idx]
+    kind = dev["kind"]
+
+    def tail_shape(shp, skip_flatten=False):
+        flat = None
+        for t in model.ops[op_idx + 1 : tail_end]:
+            if isinstance(t, M.Pool):
+                shp = (shp[0], (shp[1] - t.k) // t.stride + 1, (shp[2] - t.k) // t.stride + 1)
+            elif isinstance(t, M.Flatten) and not skip_flatten:
+                flat = shp[0] * shp[1] * shp[2]
+        return (flat,) if flat is not None else shp
+
+    if isinstance(op, M.Dense):
+        c_out = dev.get("count") if kind == "oc" else op.c_out
+        return (c_out,)
+
+    # conv head
+    _, h, w = in_shape
+    out_w = (w + 2 * op.pad - op.k) // op.stride + 1
+    if kind == "rows":
+        win_h = dev["win_hi"] - dev["win_lo"]
+        out_h = (win_h - op.k) // op.stride + 1  # pad_h = 0 on the window
+        return tail_shape((op.c_out, out_h, out_w), skip_flatten=True)
+    out_h = (h + 2 * op.pad - op.k) // op.stride + 1
+    if kind == "ic":
+        return (op.c_out, out_h, out_w)  # raw partial, no tail
+    c_out = dev["count"] if kind == "oc" else op.c_out
+    return tail_shape((c_out, out_h, out_w))
+
+
+def export_model(ex: Exporter, name: str, plan_doc: dict) -> None:
+    model = M.by_name(name)
+
+    # 1) centralized whole-network executable
+    wops = model.weighted_ops()
+
+    def central(x, *flat_params):
+        params = []
+        for i in range(len(wops)):
+            params.append((flat_params[2 * i], flat_params[2 * i + 1]))
+        return (M.forward(model, x, params),)
+
+    in_shapes: List[Tuple[int, ...]] = [model.input_shape]
+    for op in wops:
+        if isinstance(op, M.Conv):
+            in_shapes.append((op.c_out * op.c_in * op.k * op.k,))
+        else:
+            in_shapes.append((op.c_out * op.c_in,))
+        in_shapes.append((op.c_out,))
+    out = shape_after(model, len(model.ops), model.input_shape)
+    ex.add(f"{name}/central", central, in_shapes, out)
+
+    # 2) per-strategy shard executables
+    for strat, plan in plan_doc["strategies"].items():
+        for st in plan["stages"]:
+            op_idx = st["op_idx"]
+            tail_end = st["tail_end"]
+            in_shape = tuple(st["in_shape"])
+            if len(in_shape) == 3 and in_shape[1] == 1 and in_shape[2] == 1:
+                in_shape = (in_shape[0],)
+            si = st["stage"]
+            any_ic = False
+            for d, dev in enumerate(st["devices"]):
+                if dev["kind"] == "idle":
+                    continue
+                if dev["kind"] == "ic":
+                    any_ic = True
+                fn, shapes = build_step(model, op_idx, tail_end, dev, in_shape)
+                out = out_shape_of(model, op_idx, tail_end, dev, in_shape)
+                ex.add(f"{name}/{strat}/s{si}/d{d}", fn, shapes, out)
+            if any_ic:
+                raw = out_shape_of(
+                    model, op_idx, tail_end, {"kind": "ic", "count": 1}, in_shape
+                )
+                fn, shapes = build_tail(model, op_idx, tail_end, raw)
+                out = out_shape_of(model, op_idx, tail_end, {"kind": "full"}, in_shape)
+                ex.add(f"{name}/{strat}/s{si}/tail", fn, shapes, out)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--plans", default="../artifacts/plans.json")
+    p.add_argument("--out", default="../artifacts")
+    args = p.parse_args()
+
+    with open(args.plans) as f:
+        plans = json.load(f)
+
+    ex = Exporter(args.out)
+    for name, doc in plans.items():
+        print(f"exporting {name} ...")
+        export_model(ex, name, doc)
+    ex.write_manifest()
+    n_files = len(set(e["file"] for e in ex.entries.values()))
+    print(f"wrote {len(ex.entries)} manifest entries ({n_files} unique HLO files)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (interpret=True) + their pure-jnp oracles.
+
+Public surface: ``conv2d``, ``dense``, ``maxpool2d`` (Pallas) and
+``ref`` (the oracle module). The L2 model layer (`compile.model`) calls
+only these, so the kernels lower into every exported HLO artifact.
+"""
+
+from . import ref
+from .conv2d import conv2d
+from .matmul import dense
+from .pool import maxpool2d
+
+__all__ = ["conv2d", "dense", "maxpool2d", "ref"]

@@ -1,0 +1,109 @@
+"""Pallas direct-convolution kernel (L1).
+
+TPU-shaped structure, CPU-interpretable execution (``interpret=True`` —
+the CPU PJRT plugin cannot run Mosaic custom-calls; see DESIGN.md
+§Hardware-Adaptation):
+
+* the grid runs over **output-channel tiles** — each grid step keeps one
+  OC block of the OIHW weights plus the whole (padded) input window in
+  VMEM, which is exactly the blocking a TPU would want for these small
+  IoT CNNs (input plane ≪ 16 MiB VMEM);
+* inside a step the k_h·k_w taps are unrolled (static python loops) into
+  strided slices, each contributing an ``einsum`` over input channels —
+  an MXU-shaped contraction ``(OC_t, IC) × (IC, H·W)``;
+* bias add + optional ReLU are fused into the same kernel.
+
+The partitioned variants the paper needs fall out of the same kernel:
+an OC shard is just a call with sliced weights; an IC shard is a call
+with sliced input/weights and ``bias=None, relu=False`` (partial sums).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Output channels handled per grid step. 8 keeps the per-step weight
+#: block + accumulator comfortably inside a TPU core's VMEM for every
+#: layer in the zoo (see DESIGN.md §Perf for the block-size sweep).
+DEFAULT_OC_TILE = 8
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, k_h, k_w, stride, relu):
+    """One OC tile: full input in VMEM, unrolled taps, fused bias/ReLU."""
+    x = x_ref[...]  # (C, Hp, Wp) — pre-padded input window
+    w = w_ref[...]  # (OC_t, C, k_h, k_w)
+    oc_t, _, _, _ = w.shape
+    _, h_p, w_p = x.shape
+    out_h = (h_p - k_h) // stride + 1
+    out_w = (w_p - k_w) // stride + 1
+
+    acc = jnp.zeros((oc_t, out_h * out_w), dtype=jnp.float32)
+    for ky in range(k_h):
+        for kx in range(k_w):
+            # strided input window for this tap: (C, out_h, out_w)
+            xs = jax.lax.slice(
+                x,
+                (0, ky, kx),
+                (x.shape[0], ky + (out_h - 1) * stride + 1, kx + (out_w - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            # MXU-shaped contraction over input channels
+            acc = acc + jnp.einsum(
+                "oc,cp->op", w[:, :, ky, kx], xs.reshape(x.shape[0], -1)
+            )
+    y = acc.reshape(oc_t, out_h, out_w)
+    if b_ref is not None:
+        y = y + b_ref[...][:, None, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "pad_h", "pad_w", "relu", "oc_tile"),
+)
+def conv2d(x, w, b=None, *, stride=1, pad_h=0, pad_w=0, relu=False, oc_tile=DEFAULT_OC_TILE):
+    """Pallas conv2d. ``x``: (C,H,W) f32; ``w``: (O,I,kh,kw); ``b``: (O,)?"""
+    c_out, c_in, k_h, k_w = w.shape
+    assert x.shape[0] == c_in, f"input channels {x.shape[0]} != {c_in}"
+    xp = jnp.pad(x, ((0, 0), (pad_h, pad_h), (pad_w, pad_w)))
+    out_h = (xp.shape[1] - k_h) // stride + 1
+    out_w = (xp.shape[2] - k_w) // stride + 1
+
+    # Grid over OC tiles; pad OC up to a tile multiple, slice back after.
+    oc_tile = min(oc_tile, c_out)
+    oc_pad = (-c_out) % oc_tile
+    w_p = jnp.pad(w, ((0, oc_pad), (0, 0), (0, 0), (0, 0)))
+    b_p = None if b is None else jnp.pad(b, (0, oc_pad))
+    n_tiles = (c_out + oc_pad) // oc_tile
+
+    kernel = functools.partial(_conv_kernel, k_h=k_h, k_w=k_w, stride=stride, relu=relu)
+    in_specs = [
+        pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),  # full input each step
+        pl.BlockSpec((oc_tile, c_in, k_h, k_w), lambda i: (i, 0, 0, 0)),
+    ]
+    args = [xp, w_p]
+    if b is None:
+        kernel = functools.partial(_kernel_nobias, inner=kernel)
+    else:
+        in_specs.append(pl.BlockSpec((oc_tile,), lambda i: (i,)))
+        args.append(b_p)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((oc_tile, out_h, out_w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out + oc_pad, out_h, out_w), jnp.float32),
+        interpret=True,
+    )(*args)
+    return y[:c_out]
+
+
+def _kernel_nobias(x_ref, w_ref, o_ref, *, inner):
+    inner(x_ref, w_ref, None, o_ref)

@@ -1,0 +1,69 @@
+"""Pallas dense-layer (matmul) kernel (L1).
+
+Grid over output-row tiles: each step holds one `(ROW_TILE, c_in)` block
+of the weight matrix plus the input vector in VMEM and performs an
+MXU-shaped `(ROW_TILE, c_in) × (c_in,)` contraction, with bias and ReLU
+fused. Used for every FC operator in the zoo, including the OC/IC shard
+variants (sliced weights / sliced inputs are handled by the caller — the
+kernel is oblivious).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Output rows per grid step (MXU-friendly, small enough for any FC here).
+DEFAULT_ROW_TILE = 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]  # (c_in,)
+    w = w_ref[...]  # (ROW_TILE, c_in)
+    y = w @ x
+    if b_ref is not None:
+        y = y + b_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _dense_kernel_nobias(x_ref, w_ref, o_ref, *, relu):
+    _dense_kernel(x_ref, w_ref, None, o_ref, relu=relu)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "row_tile"))
+def dense(x, w, b=None, *, relu=False, row_tile=DEFAULT_ROW_TILE):
+    """Pallas dense layer. ``x``: (c_in,); ``w``: (c_out, c_in); ``b``: (c_out,)?"""
+    c_out, c_in = w.shape
+    assert x.shape == (c_in,), f"input {x.shape} != ({c_in},)"
+    row_tile = min(row_tile, c_out)
+    pad = (-c_out) % row_tile
+    w_p = jnp.pad(w, ((0, pad), (0, 0)))
+    b_p = None if b is None else jnp.pad(b, (0, pad))
+    n_tiles = (c_out + pad) // row_tile
+
+    in_specs = [
+        pl.BlockSpec((c_in,), lambda i: (0,)),
+        pl.BlockSpec((row_tile, c_in), lambda i: (i, 0)),
+    ]
+    args = [x, w_p]
+    if b is None:
+        kernel = functools.partial(_dense_kernel_nobias, relu=relu)
+    else:
+        kernel = functools.partial(_dense_kernel, relu=relu)
+        in_specs.append(pl.BlockSpec((row_tile,), lambda i: (i,)))
+        args.append(b_p)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c_out + pad,), jnp.float32),
+        interpret=True,
+    )(*args)
+    return y[:c_out]

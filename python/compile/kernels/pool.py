@@ -1,0 +1,55 @@
+"""Pallas max-pooling kernel (L1).
+
+Grid over channel tiles; inside a step the k×k window taps are unrolled
+(static python loops) into strided slices combined with `jnp.maximum` —
+this handles overlapping windows (AlexNet's 3×3/stride-2 pools) as well
+as the tiling 2×2/stride-2 case.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Channels per grid step.
+DEFAULT_C_TILE = 16
+
+
+def _pool_kernel(x_ref, o_ref, *, k, stride, out_h, out_w):
+    x = x_ref[...]  # (C_t, H, W)
+    acc = None
+    for ky in range(k):
+        for kx in range(k):
+            xs = jax.lax.slice(
+                x,
+                (0, ky, kx),
+                (x.shape[0], ky + (out_h - 1) * stride + 1, kx + (out_w - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            acc = xs if acc is None else jnp.maximum(acc, xs)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "c_tile"))
+def maxpool2d(x, *, k, stride, c_tile=DEFAULT_C_TILE):
+    """Pallas maxpool. ``x``: (C,H,W); window ``k``, stride ``stride``."""
+    c, h, w = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (w - k) // stride + 1
+    c_tile = min(c_tile, c)
+    pad = (-c) % c_tile
+    x_p = jnp.pad(x, ((0, pad), (0, 0), (0, 0)), constant_values=-jnp.inf)
+    n_tiles = (c + pad) // c_tile
+
+    y = pl.pallas_call(
+        functools.partial(_pool_kernel, k=k, stride=stride, out_h=out_h, out_w=out_w),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((c_tile, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((c_tile, out_h, out_w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c + pad, out_h, out_w), jnp.float32),
+        interpret=True,
+    )(x_p)
+    return y[:c]

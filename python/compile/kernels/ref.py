@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here is the *definition of correct* for the kernel layer: the
+Pallas kernels in this package are asserted against these functions by
+``python/tests/test_kernels.py`` (hypothesis sweeps), and the rust
+reference ops implement the same semantics independently.
+
+Shapes follow the coordinator's conventions: activations are CHW (batch
+elided), conv weights OIHW, dense weights (c_out, c_in).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b=None, *, stride=1, pad_h=0, pad_w=0, relu=False):
+    """Direct 2-D convolution. ``x``: (C,H,W); ``w``: (O,I,kh,kw)."""
+    y = jax.lax.conv_general_dilated(
+        x[None],  # NCHW
+        w,
+        window_strides=(stride, stride),
+        padding=((pad_h, pad_h), (pad_w, pad_w)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        y = y + b[:, None, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def maxpool2d_ref(x, k, stride):
+    """Max pooling, window ``k``, stride ``stride``, no padding."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, k, k),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )
+
+
+def dense_ref(x, w, b=None, *, relu=False):
+    """Dense layer. ``x``: (c_in,); ``w``: (c_out, c_in)."""
+    y = w @ x
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,221 @@
+"""L2 — the JAX model zoo, mirroring ``rust/src/model/zoo`` exactly.
+
+Each model is a declarative op list (the same `(c_in, c_out, k, s, p)`
+tuples as the rust IR) plus a forward pass built *only* from the L1
+Pallas kernels, so every exported HLO contains the kernel lowerings.
+
+Weights come from ``weights.py`` (mirrored PRNG) so rust-side
+distributed execution is numerically comparable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import weights as W
+from .kernels import conv2d, dense, maxpool2d
+
+
+@dataclass(frozen=True)
+class Conv:
+    name: str
+    c_in: int
+    c_out: int
+    k: int
+    stride: int
+    pad: int
+    relu: bool = True
+
+
+@dataclass(frozen=True)
+class Dense:
+    name: str
+    c_in: int
+    c_out: int
+    relu: bool
+
+
+@dataclass(frozen=True)
+class Pool:
+    name: str
+    k: int
+    stride: int
+
+
+@dataclass(frozen=True)
+class Flatten:
+    name: str = "flatten"
+
+
+Op = object  # Conv | Dense | Pool | Flatten
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    name: str
+    input_shape: Tuple[int, int, int]  # (C, H, W)
+    ops: Tuple[Op, ...]
+
+    def weighted_ops(self) -> List[Op]:
+        return [o for o in self.ops if isinstance(o, (Conv, Dense))]
+
+
+def lenet() -> ModelDef:
+    return ModelDef(
+        "lenet",
+        (1, 28, 28),
+        (
+            Conv("conv1", 1, 6, 5, 1, 2),
+            Pool("pool1", 2, 2),
+            Conv("conv2", 6, 16, 5, 1, 0),
+            Pool("pool2", 2, 2),
+            Flatten(),
+            Dense("fc1", 400, 120, True),
+            Dense("fc2", 120, 84, True),
+            Dense("fc3", 84, 10, False),
+        ),
+    )
+
+
+def alexnet() -> ModelDef:
+    return ModelDef(
+        "alexnet",
+        (3, 224, 224),
+        (
+            Conv("conv1", 3, 96, 11, 4, 2),
+            Pool("pool1", 3, 2),
+            Conv("conv2", 96, 256, 5, 1, 2),
+            Pool("pool2", 3, 2),
+            Conv("conv3", 256, 384, 3, 1, 1),
+            Conv("conv4", 384, 384, 3, 1, 1),
+            Conv("conv5", 384, 256, 3, 1, 1),
+            Pool("pool5", 3, 2),
+            Flatten(),
+            Dense("fc6", 9216, 4096, True),
+            Dense("fc7", 4096, 4096, True),
+            Dense("fc8", 4096, 1000, False),
+        ),
+    )
+
+
+def vgg(depth: int) -> ModelDef:
+    cfg = {
+        11: [(64, 1), (128, 1), (256, 2), (512, 2), (512, 2)],
+        13: [(64, 2), (128, 2), (256, 2), (512, 2), (512, 2)],
+        16: [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)],
+        19: [(64, 2), (128, 2), (256, 4), (512, 4), (512, 4)],
+    }[depth]
+    ops: List[Op] = []
+    c_in = 3
+    for block, (width, n) in enumerate(cfg):
+        for i in range(n):
+            ops.append(Conv(f"conv{block + 1}_{i + 1}", c_in, width, 3, 1, 1))
+            c_in = width
+        ops.append(Pool(f"pool{block + 1}", 2, 2))
+    ops.append(Flatten())
+    ops.append(Dense("fc1", 512 * 7 * 7, 4096, True))
+    ops.append(Dense("fc2", 4096, 4096, True))
+    ops.append(Dense("fc3", 4096, 1000, False))
+    return ModelDef(f"vgg{depth}", (3, 224, 224), tuple(ops))
+
+
+def vgg_mini() -> ModelDef:
+    return ModelDef(
+        "vgg_mini",
+        (3, 32, 32),
+        (
+            Conv("conv1", 3, 8, 3, 1, 1),
+            Pool("pool1", 2, 2),
+            Conv("conv2", 8, 16, 3, 1, 1),
+            Pool("pool2", 2, 2),
+            Conv("conv3", 16, 32, 3, 1, 1),
+            Pool("pool3", 2, 2),
+            Flatten(),
+            Dense("fc1", 512, 64, True),
+            Dense("fc2", 64, 10, False),
+        ),
+    )
+
+
+def by_name(name: str) -> ModelDef:
+    table = {
+        "lenet": lenet,
+        "alexnet": alexnet,
+        "vgg11": lambda: vgg(11),
+        "vgg13": lambda: vgg(13),
+        "vgg16": lambda: vgg(16),
+        "vgg19": lambda: vgg(19),
+        "vgg_mini": vgg_mini,
+    }
+    return table[name]()
+
+
+# ---------------- parameters ----------------
+
+
+def op_params(model: ModelDef, op: Op) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic (w, b) for a weighted op (mirrored PRNG streams)."""
+    if isinstance(op, Conv):
+        return (
+            W.conv_weight(model.name, op.name, op.c_out, op.c_in, op.k, op.k),
+            W.bias(model.name, op.name, op.c_out),
+        )
+    if isinstance(op, Dense):
+        return (
+            W.dense_weight(model.name, op.name, op.c_out, op.c_in),
+            W.bias(model.name, op.name, op.c_out),
+        )
+    raise TypeError(op)
+
+
+def all_params(model: ModelDef) -> List[Tuple[np.ndarray, np.ndarray]]:
+    return [op_params(model, o) for o in model.weighted_ops()]
+
+
+def model_input(model: ModelDef) -> np.ndarray:
+    c, h, w = model.input_shape
+    return W.input_tensor(model.name, c, h, w)
+
+
+# ---------------- forward passes (Pallas-kernel based) ----------------
+
+
+def apply_op(op: Op, x, w=None, b=None):
+    """Apply one op; weighted ops consume (w, b)."""
+    if isinstance(op, Conv):
+        return conv2d(x, w, b, stride=op.stride, pad_h=op.pad, pad_w=op.pad, relu=op.relu)
+    if isinstance(op, Dense):
+        return dense(x, w, b, relu=op.relu)
+    if isinstance(op, Pool):
+        return maxpool2d(x, k=op.k, stride=op.stride)
+    if isinstance(op, Flatten):
+        return x.reshape(-1)
+    raise TypeError(op)
+
+
+def forward(model: ModelDef, x, params):
+    """Full centralized forward pass. ``params``: [(w, b)] per weighted op,
+    each flattened or shaped (both accepted)."""
+    it = iter(params)
+    for op in model.ops:
+        if isinstance(op, (Conv, Dense)):
+            w, b = next(it)
+            w = reshape_weight(op, w)
+            x = apply_op(op, x, w, b)
+        else:
+            x = apply_op(op, x)
+    return x
+
+
+def reshape_weight(op: Op, w):
+    """Accept flat weight vectors (the AOT parameter convention)."""
+    w = jnp.asarray(w)
+    if isinstance(op, Conv):
+        return w.reshape(op.c_out, op.c_in, op.k, op.k)
+    if isinstance(op, Dense):
+        return w.reshape(op.c_out, op.c_in)
+    raise TypeError(op)

@@ -1,0 +1,191 @@
+"""Shard step builders — the python mirror of the executor's slice
+semantics (`rust/src/exec/compute.rs`), used by ``aot.py`` to lower one
+XLA executable per (stage, device) of the plans the rust coordinator
+exported via ``iop emit-plans``.
+
+Slice semantics (must stay in lock-step with the rust executor):
+
+* ``full`` / ``replicate`` — head op + whole tail (flatten applied);
+* ``oc``   — OC-sliced weights (+bias, +ReLU) then the tail;
+* ``ic``   — IC-sliced *linear* part only (no bias/ReLU): partial sums;
+  the post-reduction ``tail`` executable applies bias/ReLU/pool/flatten;
+* ``rows`` — input is a pre-assembled row window (halo + zero padding
+  materialized by the rust worker), conv runs with vertical padding 0,
+  pools apply row-locally, flatten is deferred to assembly.
+
+All weight parameters are *flat* f32 vectors (rank-1) — the rust side
+slices with ``tensor::slice`` and feeds plain vectors; each builder
+reshapes internally.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .kernels import conv2d, dense, maxpool2d
+from .model import Conv, Dense, Flatten, ModelDef, Pool
+
+Shape = Tuple[int, ...]
+
+
+def shape_after(model: ModelDef, upto: int, input_shape: Shape) -> Shape:
+    """Shape after ops[0..upto) — mirrors rust shape inference."""
+    c, h, w = input_shape
+    flat: Optional[int] = None
+    for op in model.ops[:upto]:
+        if isinstance(op, Conv):
+            h = (h + 2 * op.pad - op.k) // op.stride + 1
+            w = (w + 2 * op.pad - op.k) // op.stride + 1
+            c = op.c_out
+        elif isinstance(op, Pool):
+            h = (h - op.k) // op.stride + 1
+            w = (w - op.k) // op.stride + 1
+        elif isinstance(op, Flatten):
+            flat = c * h * w
+        elif isinstance(op, Dense):
+            flat = op.c_out
+    return (flat,) if flat is not None else (c, h, w)
+
+
+def run_tail(model: ModelDef, op_idx: int, tail_end: int, x, skip_flatten: bool):
+    for op in model.ops[op_idx + 1 : tail_end]:
+        if isinstance(op, Pool):
+            x = maxpool2d(x, k=op.k, stride=op.stride)
+        elif isinstance(op, Flatten):
+            if not skip_flatten:
+                x = x.reshape(-1)
+        else:
+            raise TypeError(f"weighted op {op} in tail")
+    return x
+
+
+def build_step(
+    model: ModelDef,
+    op_idx: int,
+    tail_end: int,
+    dev: dict,
+    in_shape: Shape,
+) -> Tuple[Callable, List[Shape]]:
+    """Build the jax step function + example input shapes for one device
+    slice (a `devices[j]` record from plans.json)."""
+    op = model.ops[op_idx]
+    kind = dev["kind"]
+
+    if kind in ("full", "replicate"):
+        if isinstance(op, Conv):
+            x_shape = (op.c_in, in_shape[1], in_shape[2])
+
+            def fn(x, w, b):
+                y = conv2d(
+                    x,
+                    w.reshape(op.c_out, op.c_in, op.k, op.k),
+                    b,
+                    stride=op.stride,
+                    pad_h=op.pad,
+                    pad_w=op.pad,
+                    relu=op.relu,
+                )
+                return (run_tail(model, op_idx, tail_end, y, False),)
+
+            return fn, [x_shape, (op.c_out * op.c_in * op.k * op.k,), (op.c_out,)]
+        else:
+            def fn(x, w, b):
+                y = dense(x, w.reshape(op.c_out, op.c_in), b, relu=op.relu)
+                return (run_tail(model, op_idx, tail_end, y, False),)
+
+            return fn, [(op.c_in,), (op.c_out * op.c_in,), (op.c_out,)]
+
+    if kind == "oc":
+        n = dev["count"]
+        if isinstance(op, Conv):
+            x_shape = (op.c_in, in_shape[1], in_shape[2])
+
+            def fn(x, w, b):
+                y = conv2d(
+                    x,
+                    w.reshape(n, op.c_in, op.k, op.k),
+                    b,
+                    stride=op.stride,
+                    pad_h=op.pad,
+                    pad_w=op.pad,
+                    relu=op.relu,
+                )
+                return (run_tail(model, op_idx, tail_end, y, False),)
+
+            return fn, [x_shape, (n * op.c_in * op.k * op.k,), (n,)]
+        else:
+            def fn(x, w, b):
+                y = dense(x, w.reshape(n, op.c_in), b, relu=op.relu)
+                return (run_tail(model, op_idx, tail_end, y, False),)
+
+            return fn, [(op.c_in,), (n * op.c_in,), (n,)]
+
+    if kind == "ic":
+        n = dev["count"]
+        if isinstance(op, Conv):
+            x_shape = (n, in_shape[1], in_shape[2])
+
+            def fn(x, w):
+                return (
+                    conv2d(
+                        x,
+                        w.reshape(op.c_out, n, op.k, op.k),
+                        None,
+                        stride=op.stride,
+                        pad_h=op.pad,
+                        pad_w=op.pad,
+                        relu=False,
+                    ),
+                )
+
+            return fn, [x_shape, (op.c_out * n * op.k * op.k,)]
+        else:
+            def fn(x, w):
+                return (dense(x, w.reshape(op.c_out, n), None, relu=False),)
+
+            return fn, [(n,), (op.c_out * n,)]
+
+    if kind == "rows":
+        assert isinstance(op, Conv), "row shards are conv-only"
+        win_h = dev["win_hi"] - dev["win_lo"]
+        x_shape = (op.c_in, win_h, in_shape[2])
+
+        def fn(x, w, b):
+            y = conv2d(
+                x,
+                w.reshape(op.c_out, op.c_in, op.k, op.k),
+                b,
+                stride=op.stride,
+                pad_h=0,  # vertical halo/padding pre-materialized
+                pad_w=op.pad,
+                relu=op.relu,
+            )
+            return (run_tail(model, op_idx, tail_end, y, True),)
+
+        return fn, [x_shape, (op.c_out * op.c_in * op.k * op.k,), (op.c_out,)]
+
+    raise ValueError(f"no executable for slice kind {kind!r}")
+
+
+def build_tail(model: ModelDef, op_idx: int, tail_end: int, raw_shape: Shape) -> Tuple[Callable, List[Shape]]:
+    """Post-reduction tail: bias + ReLU + tail ops on the reduced raw sum."""
+    op = model.ops[op_idx]
+
+    if isinstance(op, Conv):
+        def fn(raw, b):
+            y = raw + b[:, None, None]
+            if op.relu:
+                y = jnp.maximum(y, 0.0)
+            return (run_tail(model, op_idx, tail_end, y, False),)
+
+        return fn, [raw_shape, (op.c_out,)]
+    else:
+        def fn(raw, b):
+            y = raw + b
+            if op.relu:
+                y = jnp.maximum(y, 0.0)
+            return (run_tail(model, op_idx, tail_end, y, False),)
+
+        return fn, [raw_shape, (op.c_out,)]

@@ -1,0 +1,124 @@
+"""L1/L2 performance audit (EXPERIMENTS.md §Perf inputs).
+
+L1: per-conv-layer VMEM footprint + MXU-tile fit of the Pallas conv
+kernel's BlockSpec, as a function of the OC tile size — interpret=True
+gives no TPU wallclock, so the structural estimate is the optimization
+signal (DESIGN.md §Hardware-Adaptation) — plus an interpret-mode timing
+sweep as a secondary sanity signal.
+
+L2: op histogram of the exported HLO artifacts — checks that XLA fused
+the kernels (few large fusions, no stray transposes/copies on the hot
+path).
+
+Run:  cd python && python -m compile.perf_audit
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import re
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import weights as W
+from .kernels import conv2d
+
+VMEM_BYTES = 16 * 2**20  # per-core VMEM on current TPUs
+MXU = 128  # systolic array edge
+
+
+def conv_vmem(model: M.ModelDef, oc_tile: int):
+    """Per-grid-step VMEM bytes for each conv layer: padded input block +
+    weight OC-block + bias + output block (all f32)."""
+    rows = []
+    c, h, w = model.input_shape
+    for op in model.ops:
+        if isinstance(op, M.Conv):
+            hp, wp = h + 2 * op.pad, w + 2 * op.pad
+            out_h = (hp - op.k) // op.stride + 1
+            out_w = (wp - op.k) // op.stride + 1
+            t = min(oc_tile, op.c_out)
+            x_b = op.c_in * hp * wp * 4
+            w_b = t * op.c_in * op.k * op.k * 4
+            o_b = t * out_h * out_w * 4
+            total = x_b + w_b + o_b + t * 4
+            rows.append((op.name, x_b, w_b, o_b, total, total <= VMEM_BYTES,
+                         (t, op.c_in)))
+            c, h, w = op.c_out, out_h, out_w
+        elif isinstance(op, M.Pool):
+            h = (h - op.k) // op.stride + 1
+            w = (w - op.k) // op.stride + 1
+    return rows
+
+
+def audit_vmem():
+    print("== L1: Pallas conv BlockSpec VMEM audit ==")
+    for name in ["lenet", "alexnet", "vgg11"]:
+        md = M.by_name(name)
+        for tile in [4, 8, 16, 32]:
+            rows = conv_vmem(md, tile)
+            worst = max(rows, key=lambda r: r[4])
+            fits = all(r[5] for r in rows)
+            print(
+                f"  {name:<8} oc_tile={tile:<3} worst layer {worst[0]:<8} "
+                f"{worst[4]/2**20:6.2f} MiB of {VMEM_BYTES/2**20:.0f} MiB "
+                f"({'fits' if fits else 'OVERFLOWS'}); "
+                f"MXU contraction ({worst[6][0]}x{worst[6][1]}) vs {MXU}x{MXU}"
+            )
+
+
+def sweep_interpret_timing():
+    print("\n== L1: interpret-mode timing sweep (structure sanity, not TPU perf) ==")
+    md = M.by_name("vgg_mini")
+    x = jnp.asarray(W.input_tensor("sweep", 3, 32, 32))
+    wt = jnp.asarray(W.conv_weight("sweep", "c", 8, 3, 3, 3))
+    b = jnp.asarray(W.bias("sweep", "c", 8))
+    for tile in [2, 4, 8]:
+        y = conv2d(x, wt, b, pad_h=1, pad_w=1, relu=True, oc_tile=tile)
+        y.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            conv2d(x, wt, b, pad_h=1, pad_w=1, relu=True, oc_tile=tile).block_until_ready()
+        dt = (time.perf_counter() - t0) / 20
+        print(f"  conv1(vgg_mini) oc_tile={tile}: {dt*1e3:.2f} ms/call (interpret)")
+
+
+def audit_hlo(art_dir: str):
+    print("\n== L2: HLO artifact audit (op histogram per executable) ==")
+    man_path = os.path.join(art_dir, "manifest.json")
+    if not os.path.exists(man_path):
+        print("  (artifacts not built — run `make artifacts`)")
+        return
+    man = json.load(open(man_path))
+    files = sorted(set(e["file"] for e in man["entries"].values()))
+    op_re = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[^=]*?\b([a-z][a-z0-9\-]*)\(")
+    total_hist = collections.Counter()
+    worst = None
+    for f in files:
+        hist = collections.Counter()
+        for line in open(os.path.join(art_dir, f)):
+            m = op_re.match(line)
+            if m:
+                hist[m.group(1)] += 1
+        total_hist.update(hist)
+        n = sum(hist.values())
+        if worst is None or n > worst[1]:
+            worst = (f, n, hist)
+    print(f"  {len(files)} unique executables; total op histogram (top 12):")
+    for op, n in total_hist.most_common(12):
+        print(f"    {op:<22} {n}")
+    # red flags for the CPU/PJRT hot path
+    flags = {k: total_hist[k] for k in ("transpose", "copy", "sort") if total_hist[k]}
+    print(f"  red-flag ops: {flags if flags else 'none'}")
+    print(f"  largest executable: {worst[0]} ({worst[1]} ops)")
+
+
+if __name__ == "__main__":
+    audit_vmem()
+    sweep_interpret_timing()
+    audit_hlo(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))

@@ -1,0 +1,85 @@
+"""Deterministic weight generation — the python half of the mirrored PRNG.
+
+Bit-for-bit identical to ``rust/src/util/prng.rs`` (SplitMix64 seeded by
+FNV-1a of a tensor name; f32 values from the top 24 bits). The rust
+coordinator generates/slices weights with the same streams, so PJRT shard
+executables see exactly the numbers the python oracle validated.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_M64 = (1 << 64) - 1
+
+#: Default weight scale (mirrors prng.rs WEIGHT_SCALE in tensor/init.rs).
+WEIGHT_SCALE = np.float32(0.05)
+
+
+def fnv1a(name: str) -> int:
+    """FNV-1a 64-bit hash (stable across languages)."""
+    h = 0xCBF29CE484222325
+    for b in name.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & _M64
+    return h
+
+
+class SplitMix64:
+    """SplitMix64 PRNG (Vigna, 2015) — integer-only, trivially portable."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _M64
+
+    @classmethod
+    def from_name(cls, name: str) -> "SplitMix64":
+        return cls(fnv1a(name))
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return (z ^ (z >> 31)) & _M64
+
+    def fill_u24(self, n: int) -> np.ndarray:
+        """n raw 24-bit outputs (the f32 mantissa source)."""
+        out = np.empty(n, dtype=np.uint32)
+        for i in range(n):
+            out[i] = self.next_u64() >> 40
+        return out
+
+
+def uniform01(name: str, n: int) -> np.ndarray:
+    """n float32 values in [0, 1): ``top24 / 2^24`` exactly as rust does."""
+    bits = SplitMix64.from_name(name).fill_u24(n)
+    return bits.astype(np.float32) / np.float32(16777216.0)
+
+
+def named_tensor(name: str, n: int, scale: float = WEIGHT_SCALE) -> np.ndarray:
+    """n float32 values in [-scale, scale) — rust's ``named_tensor``."""
+    u = uniform01(name, n)
+    return (u * np.float32(2.0) - np.float32(1.0)) * np.float32(scale)
+
+
+# ---- model-level helpers (mirror rust tensor::init naming) ----
+
+
+def conv_weight(model: str, op: str, c_out: int, c_in: int, kh: int, kw: int) -> np.ndarray:
+    """OIHW conv weight for ``{model}/{op}/w``."""
+    flat = named_tensor(f"{model}/{op}/w", c_out * c_in * kh * kw)
+    return flat.reshape(c_out, c_in, kh, kw)
+
+
+def dense_weight(model: str, op: str, c_out: int, c_in: int) -> np.ndarray:
+    """(c_out, c_in) dense weight for ``{model}/{op}/w``."""
+    return named_tensor(f"{model}/{op}/w", c_out * c_in).reshape(c_out, c_in)
+
+
+def bias(model: str, op: str, c_out: int) -> np.ndarray:
+    return named_tensor(f"{model}/{op}/b", c_out)
+
+
+def input_tensor(model: str, c: int, h: int, w: int) -> np.ndarray:
+    """Synthetic inference input in [0, 1) for ``{model}/input``."""
+    return uniform01(f"{model}/input", c * h * w).reshape(c, h, w)

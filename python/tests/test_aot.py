@@ -1,0 +1,92 @@
+"""AOT pipeline tests. The heavyweight export is exercised by
+``make artifacts``; here we verify the manifest contract and a
+self-contained mini export round-trip."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import Exporter, out_shape_of, to_hlo_text
+from compile.partition import build_step, build_tail
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke(tmp_path):
+    import jax.numpy as jnp
+
+    def fn(x, y):
+        return (jnp.dot(x, y) + 1.0,)
+
+    text = to_hlo_text(fn, [(4,), (4,)])
+    assert "HloModule" in text
+
+
+def test_exporter_dedup(tmp_path):
+    import jax.numpy as jnp
+
+    ex = Exporter(str(tmp_path))
+
+    def fn(x):
+        return (x * 2.0,)
+
+    ex.add("a", fn, [(8,)], (8,))
+    ex.add("b", fn, [(8,)], (8,))
+    ex.write_manifest()
+    man = json.load(open(tmp_path / "manifest.json"))
+    assert man["entries"]["a"]["file"] == man["entries"]["b"]["file"]
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".hlo.txt")]
+    assert len(files) == 1
+
+
+def test_step_builder_shapes_oc():
+    md = M.lenet()
+    dev = {"kind": "oc", "start": 0, "count": 2}
+    fn, shapes = build_step(md, 0, 2, dev, (1, 28, 28))
+    assert shapes[0] == (1, 28, 28)
+    out = out_shape_of(md, 0, 2, dev, (1, 28, 28))
+    assert out == (2, 14, 14)  # conv1 (pad 2) + pool1, 2 channels
+
+
+def test_step_builder_shapes_rows():
+    md = M.lenet()
+    dev = {"kind": "rows", "start": 0, "count": 5, "win_lo": -2, "win_hi": 12}
+    out = out_shape_of(md, 0, 2, dev, (1, 28, 28))
+    # window 14 rows, conv k5 pad_h0 -> 10 rows, pool2 -> 5 rows
+    assert out == (6, 5, 14)
+
+
+def test_tail_builder_applies_bias_relu():
+    import jax.numpy as jnp
+
+    md = M.lenet()
+    fn, shapes = build_tail(md, 2, 5, (16, 10, 10))  # conv2+pool2+flatten
+    raw = jnp.full((16, 10, 10), -1.0)
+    b = jnp.zeros((16,))
+    (y,) = fn(raw, b)
+    assert y.shape == (400,)
+    assert float(jnp.abs(y).max()) == 0.0  # relu clamps the -1s
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_contract():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    entries = man["entries"]
+    assert any(k.endswith("/central") for k in entries)
+    for key, e in entries.items():
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), f"{key}: missing {e['file']}"
+        assert isinstance(e["inputs"], list) and isinstance(e["output"], list)
+    # every strategy of every exported model has stage-0 shards
+    plans = json.load(open(os.path.join(ART, "plans.json")))
+    for model, doc in plans.items():
+        for strat in doc["strategies"]:
+            assert any(
+                k.startswith(f"{model}/{strat}/s0/") for k in entries
+            ), f"{model}/{strat} has no stage-0 shards"

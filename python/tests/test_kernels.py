@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/strides/pads; every case asserts allclose.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import weights as W
+from compile.kernels import conv2d, dense, maxpool2d, ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def arr(name, shape, scale=1.0):
+    return jnp.asarray(W.named_tensor(name, int(np.prod(shape)), scale).reshape(shape))
+
+
+@given(
+    c_in=st.integers(1, 5),
+    c_out=st.integers(1, 9),
+    k=st.integers(1, 5),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 2),
+    hw=st.integers(5, 14),
+    relu=st.booleans(),
+    bias=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SET)
+def test_conv2d_matches_ref(c_in, c_out, k, stride, pad, hw, relu, bias, seed):
+    if hw + 2 * pad < k:
+        return
+    x = arr(f"x{seed}", (c_in, hw, hw))
+    w = arr(f"w{seed}", (c_out, c_in, k, k))
+    b = arr(f"b{seed}", (c_out,)) if bias else None
+    got = conv2d(x, w, b, stride=stride, pad_h=pad, pad_w=pad, relu=relu)
+    want = ref.conv2d_ref(x, w, b, stride=stride, pad_h=pad, pad_w=pad, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    c_in=st.integers(1, 300),
+    c_out=st.integers(1, 300),
+    relu=st.booleans(),
+    bias=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SET)
+def test_dense_matches_ref(c_in, c_out, relu, bias, seed):
+    x = arr(f"dx{seed}", (c_in,))
+    w = arr(f"dw{seed}", (c_out, c_in))
+    b = arr(f"db{seed}", (c_out,)) if bias else None
+    got = dense(x, w, b, relu=relu)
+    want = ref.dense_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    c=st.integers(1, 40),
+    k=st.integers(1, 4),
+    stride=st.integers(1, 3),
+    hw=st.integers(4, 16),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SET)
+def test_maxpool_matches_ref(c, k, stride, hw, seed):
+    if hw < k:
+        return
+    x = arr(f"px{seed}", (c, hw, hw))
+    got = maxpool2d(x, k=k, stride=stride)
+    want = ref.maxpool2d_ref(x, k, stride)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_conv_asymmetric_padding():
+    # pad_h=0, pad_w=p — the row-shard configuration.
+    x = arr("ax", (3, 10, 8))
+    w = arr("aw", (4, 3, 3, 3))
+    got = conv2d(x, w, None, stride=1, pad_h=0, pad_w=1)
+    want = ref.conv2d_ref(x, w, None, stride=1, pad_h=0, pad_w=1)
+    assert got.shape == (4, 8, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_oc_tile_not_dividing():
+    # c_out=9 with default oc_tile=8 exercises padding+slice-back.
+    x = arr("tx", (2, 6, 6))
+    w = arr("tw", (9, 2, 3, 3))
+    b = arr("tb", (9,))
+    got = conv2d(x, w, b, pad_h=1, pad_w=1, relu=True)
+    want = ref.conv2d_ref(x, w, b, pad_h=1, pad_w=1, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_alexnet_style_overlapping_pool():
+    x = arr("ox", (4, 13, 13))
+    got = maxpool2d(x, k=3, stride=2)
+    want = ref.maxpool2d_ref(x, 3, 2)
+    assert got.shape == (4, 6, 6)
+    np.testing.assert_allclose(got, want)
+
+
+def test_dense_row_tile_not_dividing():
+    x = arr("rx", (7,))
+    w = arr("rw", (200, 7))
+    got = dense(x, w, None, row_tile=128)
+    want = ref.dense_ref(x, w, None)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+def test_conv_strides_shapes(stride):
+    x = arr("sx", (1, 16, 16))
+    w = arr("sw", (2, 1, 3, 3))
+    y = conv2d(x, w, None, stride=stride, pad_h=1, pad_w=1)
+    expect_hw = (16 + 2 - 3) // stride + 1
+    assert y.shape == (2, expect_hw, expect_hw)

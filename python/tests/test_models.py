@@ -1,0 +1,84 @@
+"""L2 model zoo tests: shapes, parameter counts, and full forward passes
+for the small models (large ImageNet models are shape-checked only —
+interpret-mode Pallas on 224x224 inputs is build-time-scale work)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.partition import shape_after
+
+
+@pytest.mark.parametrize(
+    "name,convs,fcs",
+    [
+        ("lenet", 2, 3),
+        ("alexnet", 5, 3),
+        ("vgg11", 8, 3),
+        ("vgg13", 10, 3),
+        ("vgg16", 13, 3),
+        ("vgg19", 16, 3),
+        ("vgg_mini", 3, 2),
+    ],
+)
+def test_table1_op_counts(name, convs, fcs):
+    md = M.by_name(name)
+    assert sum(isinstance(o, M.Conv) for o in md.ops) == convs
+    assert sum(isinstance(o, M.Dense) for o in md.ops) == fcs
+
+
+@pytest.mark.parametrize("name", ["lenet", "alexnet", "vgg11", "vgg16", "vgg_mini"])
+def test_shape_inference_chains(name):
+    md = M.by_name(name)
+    out = shape_after(md, len(md.ops), md.input_shape)
+    assert out in [(10,), (1000,)]
+
+
+def test_lenet_canonical_shapes():
+    md = M.lenet()
+    assert shape_after(md, 4, md.input_shape) == (16, 5, 5)
+    assert shape_after(md, 5, md.input_shape) == (400,)
+
+
+def test_alexnet_flatten_is_9216():
+    md = M.alexnet()
+    assert shape_after(md, 9, md.input_shape) == (9216,)
+
+
+def test_param_counts_match_rust():
+    # LeNet total params, frozen in rust zoo tests.
+    md = M.lenet()
+    total = sum(w.size + b.size for w, b in M.all_params(md))
+    assert total == 156 + 2416 + 48120 + 10164 + 850
+
+
+@pytest.mark.parametrize("name", ["lenet", "vgg_mini"])
+def test_forward_runs_and_is_finite(name):
+    md = M.by_name(name)
+    params = [(jnp.asarray(w), jnp.asarray(b)) for w, b in M.all_params(md)]
+    y = M.forward(md, jnp.asarray(M.model_input(md)), params)
+    assert y.shape == (10,)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_lenet_logits_match_rust_reference():
+    # Frozen from rust exec::compute::centralized_inference with the
+    # mirrored weights — the cross-language anchor for the whole stack.
+    md = M.lenet()
+    params = [(jnp.asarray(w), jnp.asarray(b)) for w, b in M.all_params(md)]
+    y = np.asarray(M.forward(md, jnp.asarray(M.model_input(md)), params))
+    frozen = np.array(
+        [-0.03345, 0.03065, 0.02081, 0.04125, -0.02507,
+         -0.01543, 0.0036, 0.00526, -0.04151, 0.01823], np.float32
+    )
+    np.testing.assert_allclose(y, frozen, atol=1e-5)
+
+
+def test_forward_accepts_flat_weights():
+    md = M.vgg_mini()
+    params = [
+        (jnp.asarray(w).reshape(-1), jnp.asarray(b)) for w, b in M.all_params(md)
+    ]
+    y = M.forward(md, jnp.asarray(M.model_input(md)), params)
+    assert y.shape == (10,)

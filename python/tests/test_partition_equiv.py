@@ -1,0 +1,123 @@
+"""The paper's partition algebra, verified at the kernel level:
+
+* OC shards concatenated  == full operator output;
+* IC partial sums reduced (+bias/ReLU after) == full operator output;
+* row windows convolved with materialized padding == full conv rows.
+
+These are the python counterparts of rust's tensor::ops partition tests,
+and exactly the identities the AOT shard executables rely on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import weights as W
+from compile.kernels import conv2d, dense, ref
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def arr(name, shape):
+    return jnp.asarray(W.named_tensor(name, int(np.prod(shape))).reshape(shape))
+
+
+def splits(n, parts):
+    base = n // parts
+    counts = [base] * parts
+    for i in range(n - base * parts):
+        counts[i] += 1
+    out, s = [], 0
+    for c in counts:
+        out.append((s, c))
+        s += c
+    return [r for r in out if r[1] > 0]
+
+
+@given(
+    c_in=st.integers(2, 6),
+    c_out=st.integers(3, 12),
+    parts=st.integers(2, 4),
+    seed=st.integers(0, 999),
+)
+@settings(**SET)
+def test_conv_oc_concat_equals_full(c_in, c_out, parts, seed):
+    x = arr(f"i{seed}", (c_in, 9, 9))
+    w = arr(f"w{seed}", (c_out, c_in, 3, 3))
+    b = arr(f"b{seed}", (c_out,))
+    full = conv2d(x, w, b, pad_h=1, pad_w=1, relu=True)
+    shards = [
+        conv2d(x, w[s : s + n], b[s : s + n], pad_h=1, pad_w=1, relu=True)
+        for s, n in splits(c_out, parts)
+    ]
+    np.testing.assert_allclose(jnp.concatenate(shards, 0), full, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    c_in=st.integers(3, 9),
+    c_out=st.integers(2, 6),
+    parts=st.integers(2, 4),
+    seed=st.integers(0, 999),
+)
+@settings(**SET)
+def test_conv_ic_partials_reduce_to_full(c_in, c_out, parts, seed):
+    x = arr(f"ii{seed}", (c_in, 8, 8))
+    w = arr(f"iw{seed}", (c_out, c_in, 3, 3))
+    b = arr(f"ib{seed}", (c_out,))
+    full = ref.conv2d_ref(x, w, b, pad_h=1, pad_w=1, relu=True)
+    partials = [
+        conv2d(x[s : s + n], w[:, s : s + n], None, pad_h=1, pad_w=1, relu=False)
+        for s, n in splits(c_in, parts)
+    ]
+    raw = sum(partials)
+    y = jnp.maximum(raw + b[:, None, None], 0.0)
+    np.testing.assert_allclose(y, full, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    feats=st.integers(4, 64),
+    c_out=st.integers(2, 32),
+    parts=st.integers(2, 4),
+    seed=st.integers(0, 999),
+)
+@settings(**SET)
+def test_dense_ic_partials_reduce_to_full(feats, c_out, parts, seed):
+    x = arr(f"dx{seed}", (feats,))
+    w = arr(f"dw{seed}", (c_out, feats))
+    b = arr(f"db{seed}", (c_out,))
+    full = ref.dense_ref(x, w, b, relu=True)
+    partials = [dense(x[s : s + n], w[:, s : s + n], None) for s, n in splits(feats, parts)]
+    y = jnp.maximum(sum(partials) + b, 0.0)
+    np.testing.assert_allclose(y, full, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    rows=st.integers(6, 14),
+    parts=st.integers(2, 3),
+    pad=st.integers(0, 1),
+    seed=st.integers(0, 999),
+)
+@settings(**SET)
+def test_row_windows_concat_to_full_conv(rows, parts, pad, seed):
+    """CoEdge semantics: output rows [a,b) need input rows
+    [a-pad, b+k-1-pad); windows are zero-filled outside the image and the
+    shard convolves with pad_h=0."""
+    k = 3
+    c_in, c_out = 2, 4
+    x = arr(f"rx{seed}", (c_in, rows, 7))
+    w = arr(f"rw{seed}", (c_out, c_in, k, k))
+    b = arr(f"rb{seed}", (c_out,))
+    full = ref.conv2d_ref(x, w, b, pad_h=pad, pad_w=pad, relu=True)
+    out_rows = full.shape[1]
+
+    shards = []
+    for a, n in splits(out_rows, parts):
+        lo = a - pad
+        hi = (a + n - 1) + k - pad
+        win_h = hi - lo
+        window = jnp.zeros((c_in, win_h, x.shape[2]), jnp.float32)
+        src_lo, src_hi = max(lo, 0), min(hi, rows)
+        window = window.at[:, src_lo - lo : src_hi - lo].set(x[:, src_lo:src_hi])
+        shards.append(conv2d(window, w, b, pad_h=0, pad_w=pad, relu=True))
+    got = jnp.concatenate(shards, 1)
+    np.testing.assert_allclose(got, full, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,55 @@
+"""Mirrored-PRNG tests: python must generate bit-identical streams to
+rust/src/util/prng.rs (asserted there against the same frozen goldens)."""
+
+import numpy as np
+
+from compile import weights as W
+
+
+def test_fnv1a_known_vectors():
+    assert W.fnv1a("") == 0xCBF29CE484222325
+    assert W.fnv1a("a") == 0xAF63DC4C8601EC8C
+    assert W.fnv1a("foobar") == 0x85944171F73967E8
+
+
+def test_splitmix_reference_sequence():
+    r = W.SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+
+
+def test_golden_cross_language():
+    # Frozen in rust/src/util/prng.rs::golden_values_match_python.
+    v = W.named_tensor("golden", 4, 1.0)
+    expect = np.array([0.32074094, 0.9703958, -0.4739381, 0.18444812], np.float32)
+    np.testing.assert_allclose(v, expect, rtol=0, atol=1e-7)
+
+
+def test_uniform01_range_and_determinism():
+    a = W.uniform01("x", 10_000)
+    b = W.uniform01("x", 10_000)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0.0 and a.max() < 1.0
+    assert abs(a.mean() - 0.5) < 0.02
+
+
+def test_named_tensor_scale_and_keying():
+    a = W.named_tensor("k1", 256, 0.05)
+    b = W.named_tensor("k2", 256, 0.05)
+    assert abs(a).max() <= 0.05
+    assert not np.array_equal(a, b)
+
+
+def test_conv_weight_shape():
+    w = W.conv_weight("m", "c1", 6, 3, 5, 5)
+    assert w.shape == (6, 3, 5, 5)
+    # same stream as the flat request
+    flat = W.named_tensor("m/c1/w", 6 * 3 * 25)
+    np.testing.assert_array_equal(w.reshape(-1), flat)
+
+
+def test_input_tensor_shape_range():
+    x = W.input_tensor("m", 3, 8, 9)
+    assert x.shape == (3, 8, 9)
+    assert x.min() >= 0.0 and x.max() < 1.0

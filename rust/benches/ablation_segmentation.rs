@@ -1,0 +1,85 @@
+//! Ablation: how good is the paper's greedy Algorithm 1?
+//!
+//! Compares, per model × t_est, the end-to-end latency of IOP plans built
+//! from (a) greedy (Algorithm 1), (b) exact DP, (c) exhaustive oracle,
+//! (d) all-singles (≈ CoEdge), (e) all-pairs-where-possible — plus solver
+//! runtime microbenchmarks (the planner itself must be cheap enough for
+//! on-device replanning).
+//!
+//! Run: `cargo bench --bench ablation_segmentation`
+
+use iop::bench::Bencher;
+use iop::device::profiles;
+use iop::model::zoo;
+use iop::partition::iop::pairable;
+use iop::partition::Segment;
+use iop::segmentation::{dp, exhaustive, greedy, segmentation_cost};
+use iop::util::table::Table;
+use iop::util::units::fmt_secs;
+
+fn all_singles(n: usize) -> Vec<Segment> {
+    (0..n).map(Segment::Single).collect()
+}
+
+fn eager_pairs(model: &iop::model::Model) -> Vec<Segment> {
+    let stages = model.stages();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < stages.len() {
+        if i + 1 < stages.len() && pairable(model, stages[i], stages[i + 1]) {
+            out.push(Segment::Pair(i));
+            i += 2;
+        } else {
+            out.push(Segment::Single(i));
+            i += 1;
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("== Ablation: segmentation solvers ==\n");
+    let mut t = Table::new(&[
+        "model",
+        "t_est",
+        "greedy (Alg.1)",
+        "DP (exact)",
+        "exhaustive",
+        "all-singles",
+        "eager-pairs",
+        "greedy gap",
+    ]);
+    for model in zoo::all_models() {
+        for t_ms in [1.0, 4.0, 8.0] {
+            let cluster = profiles::paper_with_t_est(t_ms * 1e-3);
+            let n = model.stages().len();
+            let g = segmentation_cost(&model, &cluster, &greedy(&model, &cluster));
+            let d = segmentation_cost(&model, &cluster, &dp(&model, &cluster));
+            let e = segmentation_cost(&model, &cluster, &exhaustive(&model, &cluster));
+            let s = segmentation_cost(&model, &cluster, &all_singles(n));
+            let p = segmentation_cost(&model, &cluster, &eager_pairs(&model));
+            t.row(vec![
+                model.name.clone(),
+                format!("{t_ms} ms"),
+                fmt_secs(g),
+                fmt_secs(d),
+                fmt_secs(e),
+                fmt_secs(s),
+                fmt_secs(p),
+                format!("+{:.2}%", (g / d - 1.0) * 100.0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    println!("-- solver runtime (planning cost itself) --");
+    let cluster = profiles::paper_default();
+    let b = Bencher::default();
+    for model in [zoo::lenet(), zoo::vgg19()] {
+        b.report(&format!("greedy({})", model.name), || greedy(&model, &cluster));
+        b.report(&format!("dp({})", model.name), || dp(&model, &cluster));
+        b.report(&format!("exhaustive({})", model.name), || {
+            exhaustive(&model, &cluster)
+        });
+    }
+}

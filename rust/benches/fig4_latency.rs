@@ -1,0 +1,69 @@
+//! Fig. 4 regeneration: cooperative inference latency of OC / CoEdge /
+//! IOP on LeNet, AlexNet and VGG11 (m=3 paper testbed), with the savings
+//! the paper's caption reports, under both the analytic model (eq. 6) and
+//! the discrete-event simulator (strict + loose barriers).
+//!
+//! Run: `cargo bench --bench fig4_latency`
+
+use iop::device::profiles;
+use iop::metrics::{latency_table, ModelComparison};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::sim::{simulate, SimConfig};
+use iop::util::table::Table;
+use iop::util::units::fmt_secs;
+
+fn main() {
+    let cluster = profiles::paper_default();
+    println!("== Fig. 4 — inference latency, m=3 paper testbed ==");
+    println!(
+        "(devices: {:.1} GFLOP/s, {} Mbit/s shared medium, t_est {} ms)\n",
+        cluster.devices[0].flops_per_sec / 1e9,
+        cluster.bandwidth_bps * 8.0 / 1e6,
+        cluster.t_est * 1e3
+    );
+
+    let comparisons: Vec<ModelComparison> = zoo::fig4_models()
+        .iter()
+        .map(|m| ModelComparison::compute(m, &cluster))
+        .collect();
+    println!("{}", latency_table(&comparisons));
+
+    println!("paper caption: IOP vs OC -31.53 / -21.06 / -12.82 %;");
+    println!("               IOP vs CoEdge -12.05 / -16.83 / -6.39 %  (LeNet/AlexNet/VGG11)");
+    println!("measured:");
+    for c in &comparisons {
+        let (vs_oc, vs_co) = c.iop_latency_savings();
+        println!("  {:<8} IOP vs OC -{vs_oc:.2}%   IOP vs CoEdge -{vs_co:.2}%", c.model);
+    }
+
+    // Cross-check the three timing sources per strategy.
+    println!("\n-- analytic vs simulator (strict == analytic by construction; loose = pipelined) --");
+    let mut t = Table::new(&["model", "strategy", "analytic", "sim strict", "sim loose"]);
+    for model in zoo::fig4_models() {
+        for s in Strategy::all() {
+            let plan = pipeline::plan(&model, &cluster, s);
+            let analytic = iop::cost::evaluate(&model, &cluster, &plan).total_secs;
+            let strict = simulate(&model, &cluster, &plan, SimConfig::default()).total_secs;
+            let loose = simulate(
+                &model,
+                &cluster,
+                &plan,
+                SimConfig {
+                    strict_barriers: false,
+                    record_trace: false,
+                },
+            )
+            .total_secs;
+            t.row(vec![
+                model.name.clone(),
+                s.name().to_string(),
+                fmt_secs(analytic),
+                fmt_secs(strict),
+                fmt_secs(loose),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,71 @@
+//! Fig. 6 regeneration: inference time of VGG11/13/16/19 under OC /
+//! CoEdge / IOP as the connection establishment latency sweeps 1–8 ms
+//! (m=3 paper testbed) — the series the paper plots, plus the saving
+//! ranges its text quotes.
+//!
+//! Run: `cargo bench --bench fig6_vgg_sweep`
+
+use iop::device::profiles;
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::util::table::Table;
+use iop::util::units::{fmt_secs, pct_saving};
+
+fn main() {
+    println!("== Fig. 6 — VGG family vs connection establishment latency ==\n");
+    let t_ests_ms: Vec<f64> = (1..=8).map(|t| t as f64).collect();
+
+    let mut table = Table::new(&["model", "t_est(ms)", "OC", "CoEdge", "IOP", "IOP vs OC", "IOP vs CoEdge"]);
+    let mut ranges = Vec::new();
+
+    for model in zoo::fig6_models() {
+        let mut vs_oc = Vec::new();
+        let mut vs_best = Vec::new();
+        for &t in &t_ests_ms {
+            let cluster = profiles::paper_with_t_est(t * 1e-3);
+            let oc = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Oc).1.total_secs;
+            let co = pipeline::plan_and_evaluate(&model, &cluster, Strategy::CoEdge).1.total_secs;
+            let iop = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Iop).1.total_secs;
+            assert!(iop <= co.min(oc), "IOP must be minimal (paper claim)");
+            vs_oc.push(pct_saving(oc, iop));
+            vs_best.push(pct_saving(co.min(oc), iop));
+            table.row(vec![
+                model.name.clone(),
+                format!("{t}"),
+                fmt_secs(oc),
+                fmt_secs(co),
+                fmt_secs(iop),
+                format!("-{:.2}%", pct_saving(oc, iop)),
+                format!("-{:.2}%", pct_saving(co, iop)),
+            ]);
+        }
+        ranges.push((model.name.clone(), vs_oc, vs_best));
+    }
+    println!("{}", table.render());
+
+    println!("IOP saving vs OC across the sweep (paper quotes vs-range per model):");
+    let paper = [
+        ("vgg11", "14.51%..26.74%"),
+        ("vgg13", "12.99%..24.99%"),
+        ("vgg16", "3.34%..31.01%"),
+        ("vgg19", "15.01%..34.87%"),
+    ];
+    for ((name, vs_oc, vs_best), (pname, pband)) in ranges.iter().zip(paper.iter()) {
+        assert_eq!(name, pname);
+        println!(
+            "  {:<6} measured vs OC {:.2}%..{:.2}% (vs best baseline {:.2}%..{:.2}%); paper: {}",
+            name,
+            vs_oc.first().unwrap(),
+            vs_oc.last().unwrap(),
+            vs_best.first().unwrap(),
+            vs_best.last().unwrap(),
+            pband
+        );
+        // the paper's trend: larger t_est, larger advantage
+        assert!(
+            vs_oc.last().unwrap() > vs_oc.first().unwrap(),
+            "{name}: saving must grow with t_est"
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf is generated from
+//! these numbers): the L3 coordinator's request-path costs —
+//!
+//!  * plan construction per strategy (replanning cost),
+//!  * plan cost evaluation (the inner loop of every solver),
+//!  * discrete-event simulation throughput,
+//!  * weight-bundle generation + slicing (deployment-time),
+//!  * reference tensor ops (the distributed executor's compute),
+//!  * end-to-end reference distributed inference (thread harness
+//!    overhead + compute).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use iop::bench::Bencher;
+use iop::device::profiles;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{run_plan, ExecOptions};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::sim::{simulate, SimConfig};
+
+fn main() {
+    let cluster = profiles::paper_default();
+    let b = Bencher::default();
+
+    println!("== planner throughput ==");
+    for model in [zoo::lenet(), zoo::alexnet(), zoo::vgg19()] {
+        for s in Strategy::all() {
+            b.report(&format!("plan {} {}", model.name, s.name()), || {
+                pipeline::plan(&model, &cluster, s)
+            });
+        }
+    }
+
+    println!("\n== cost evaluation (solver inner loop) ==");
+    for model in [zoo::lenet(), zoo::vgg19()] {
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        b.report(&format!("evaluate {}", model.name), || {
+            iop::cost::evaluate(&model, &cluster, &plan)
+        });
+    }
+
+    println!("\n== simulator throughput ==");
+    for model in [zoo::alexnet(), zoo::vgg19()] {
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        let cfg = SimConfig {
+            strict_barriers: false,
+            record_trace: false,
+        };
+        b.report(&format!("simulate {} (no trace)", model.name), || {
+            simulate(&model, &cluster, &plan, cfg)
+        });
+        let cfg_t = SimConfig {
+            strict_barriers: false,
+            record_trace: true,
+        };
+        b.report(&format!("simulate {} (trace)", model.name), || {
+            simulate(&model, &cluster, &plan, cfg_t)
+        });
+    }
+
+    println!("\n== deployment-time: weights ==");
+    for model in [zoo::lenet(), zoo::vgg_mini()] {
+        b.report(&format!("WeightBundle::generate {}", model.name), || {
+            WeightBundle::generate(&model)
+        });
+    }
+
+    println!("\n== reference compute (executor backend) ==");
+    let model = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&model);
+    let x = model_input(&model);
+    b.report("centralized vgg_mini (reference ops)", || {
+        iop::exec::compute::centralized_inference(&model, &wb, &x)
+    });
+
+    println!("\n== end-to-end distributed inference (reference backend) ==");
+    for s in Strategy::all() {
+        let model = zoo::lenet();
+        let plan = pipeline::plan(&model, &cluster, s);
+        b.report(&format!("run_plan lenet {} (cold: spawn+infer)", s.name()), || {
+            run_plan(&model, &plan, &ExecOptions::default()).unwrap()
+        });
+        let mut session =
+            iop::exec::ExecSession::new(&model, &plan, iop::exec::Backend::Reference).unwrap();
+        let input = model_input(&model);
+        b.report(&format!("session.infer lenet {} (steady)", s.name()), || {
+            session.infer(input.clone()).unwrap()
+        });
+    }
+}

@@ -1,0 +1,149 @@
+//! In-house micro-benchmark harness (the offline build has no criterion).
+//!
+//! Measures a closure with warmup, fixed-duration sampling, and robust
+//! statistics (median + MAD, outlier-trimmed mean). `cargo bench` targets
+//! use [`Bencher`] for hot-path measurements and plain table printing for
+//! the paper-figure regenerations (which are analytic, not timing-bound).
+
+use std::time::{Duration, Instant};
+
+/// Robust summary of a sample of per-iteration times (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    pub median: f64,
+    pub mean_trimmed: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median absolute deviation (scaled): robust spread estimate.
+    pub mad: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let median = xs[n / 2];
+        let mut devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[n / 2] * 1.4826;
+        // trim 10% each side
+        let lo = n / 10;
+        let hi = n - lo;
+        let trimmed = &xs[lo..hi];
+        let mean_trimmed = trimmed.iter().sum::<f64>() / trimmed.len() as f64;
+        Stats {
+            samples: n,
+            median,
+            mean_trimmed,
+            min: xs[0],
+            max: xs[n - 1],
+            mad,
+        }
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        if self.median > 0.0 {
+            1.0 / self.median
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI/tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            max_samples: 2_000,
+        }
+    }
+
+    /// Measure `f`, preventing the result from being optimized away via
+    /// the returned value sink.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure && samples.len() < self.max_samples {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(samples)
+    }
+
+    /// Measure and print one line in a uniform format.
+    pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> Stats {
+        let st = self.run(f);
+        println!(
+            "bench {name:<44} median {:>12} ({:>10}/s)  n={}",
+            crate::util::units::fmt_secs(st.median),
+            format!("{:.1}", st.per_sec()),
+            st.samples
+        );
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_sample() {
+        let s = Stats::from_samples(vec![2.0; 50]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn stats_robust_to_outliers() {
+        let mut xs = vec![1.0; 99];
+        xs.push(1000.0);
+        let s = Stats::from_samples(xs);
+        assert_eq!(s.median, 1.0);
+        assert!(s.mean_trimmed < 1.5);
+    }
+
+    #[test]
+    fn bencher_measures_something() {
+        let b = Bencher::quick();
+        let st = b.run(|| {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(st.samples > 10);
+        assert!(st.median > 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Declarative-ish flag parsing: `--key value`, `--flag`, and positional
+//! arguments, with typed accessors and "unknown flag" detection.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Parsed argv.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv (without the binary name).
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut positionals = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positionals.push(a);
+            }
+        }
+        Args {
+            positionals,
+            flags,
+            consumed: Vec::new(),
+        }
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn str_opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&mut self, key: &str) -> bool {
+        self.str_opt(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&mut self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Comma-separated f64 list.
+    pub fn f64_list_or(&mut self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.str_opt(key) {
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad number '{s}'"))
+                })
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+
+    /// Error on flags nobody consumed (probable typos).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.flags.keys() {
+            if !self.consumed.contains(k) {
+                return Err(anyhow!("unknown flag --{k} (see `iop help`)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()).collect())
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let mut a = parse(&["plan", "--model", "lenet", "--json", "--t-est-ms=2.5"]);
+        assert_eq!(a.positional(0), Some("plan"));
+        assert_eq!(a.str_opt("model").as_deref(), Some("lenet"));
+        assert!(a.bool("json"));
+        assert_eq!(a.f64_or("t-est-ms", 1.0).unwrap(), 2.5);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse(&["x"]);
+        assert_eq!(a.usize_or("devices", 3).unwrap(), 3);
+        assert_eq!(a.str_or("strategy", "iop"), "iop");
+    }
+
+    #[test]
+    fn lists() {
+        let mut a = parse(&["x", "--models", "lenet, vgg11", "--t-est-ms", "1,2,4"]);
+        assert_eq!(a.list_or("models", &[]), vec!["lenet", "vgg11"]);
+        assert_eq!(a.f64_list_or("t-est-ms", &[]).unwrap(), vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = parse(&["x", "--modle", "lenet"]);
+        let _ = a.str_opt("model");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let mut a = parse(&["x", "--devices", "three"]);
+        assert!(a.usize_or("devices", 3).is_err());
+    }
+}

@@ -1,0 +1,473 @@
+//! CLI subcommand implementations — thin adapters over the library
+//! façades (`pipeline`, `metrics`, `sim`, `exec`).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::args::Args;
+use crate::device::{Cluster, Device};
+use crate::exec::{run_plan, Backend, ExecOptions};
+use crate::metrics::{latency_table, memory_table, stage_breakdown_table, ModelComparison};
+use crate::model::{zoo, Model};
+use crate::partition::Strategy;
+use crate::pipeline;
+use crate::sim::{simulate as run_sim, SimConfig};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bytes, fmt_secs};
+
+/// Parse the shared cluster flags (`--cluster-file` overrides the rest).
+pub fn cluster_from_args(a: &mut Args) -> Result<Cluster> {
+    if let Some(path) = a.str_opt("cluster-file") {
+        return crate::config::load_cluster(&path);
+    }
+    let t_est_ms = a.f64_or("t-est-ms", 4.0)?;
+    cluster_from_args_t_est(a, t_est_ms * 1e-3)
+}
+
+/// Cluster flags with an externally-supplied `t_est` (used by `sweep`,
+/// whose `--t-est-ms` is a list).
+pub fn cluster_from_args_t_est(a: &mut Args, t_est: f64) -> Result<Cluster> {
+    let m = a.usize_or("devices", 3)?;
+    let gflops = a.f64_or("flops", 0.6)?;
+    let mem_mib = a.usize_or("mem-mib", 512)?;
+    let bw_mbps = a.f64_or("bandwidth-mbps", 50.0)?;
+    Ok(Cluster::new(
+        vec![Device::new(gflops * 1e9, (mem_mib as u64) << 20); m],
+        bw_mbps * 1e6 / 8.0,
+        t_est,
+    ))
+}
+
+fn model_from_args(a: &mut Args) -> Result<Model> {
+    if let Some(path) = a.str_opt("model-file") {
+        return crate::config::load_model(&path);
+    }
+    let name = a
+        .str_opt("model")
+        .ok_or_else(|| anyhow!("--model or --model-file is required"))?;
+    zoo::by_name(&name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+}
+
+fn strategy_from_args(a: &mut Args) -> Result<Strategy> {
+    let name = a.str_or("strategy", "iop");
+    Strategy::parse(&name).ok_or_else(|| anyhow!("unknown strategy '{name}' (oc|coedge|iop)"))
+}
+
+/// `iop models` — Table 1.
+pub fn models(a: &mut Args) -> Result<()> {
+    let json = a.bool("json");
+    a.finish()?;
+    if json {
+        let arr = Json::arr(zoo::all_models().iter().map(|m| m.to_json()).collect());
+        println!("{}", arr.to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(&["CNN", "description", "conv", "fc", "dataset", "MFLOP", "params"]);
+    for info in zoo::table1() {
+        let m = zoo::by_name(info.name).unwrap();
+        t.row(vec![
+            info.name.to_string(),
+            info.description.to_string(),
+            m.count_kind("conv").to_string(),
+            m.count_kind("fc").to_string(),
+            info.dataset.to_string(),
+            format!("{:.1}", m.total_flops() / 1e6),
+            format!("{}", m.total_weight_bytes() / 4),
+        ]);
+    }
+    println!("Table 1 — CNNs and datasets used in the evaluation\n{}", t.render());
+    println!("Fig. 6 additionally uses: vgg13, vgg16, vgg19 (see `iop sweep`).");
+    Ok(())
+}
+
+/// `iop plan` — build & print one plan.
+pub fn plan(a: &mut Args) -> Result<()> {
+    let model = model_from_args(a)?;
+    let strategy = strategy_from_args(a)?;
+    let cluster = cluster_from_args(a)?;
+    let json = a.bool("json");
+    a.finish()?;
+    let (p, c) = pipeline::plan_and_evaluate(&model, &cluster, strategy);
+    p.validate(&model).map_err(|e| anyhow!(e))?;
+    if json {
+        let out = Json::obj(vec![("plan", p.to_json()), ("cost", c.to_json())]);
+        println!("{}", out.to_string_pretty());
+        return Ok(());
+    }
+    println!("{} on {} devices — {}", model.summary(), cluster.m(), strategy.name());
+    println!("{}", stage_breakdown_table(&model, &p, &c));
+    println!(
+        "total {}  (compute {}, comm {}), {} connections, {} moved, peak mem {}",
+        fmt_secs(c.total_secs),
+        fmt_secs(c.compute_secs),
+        fmt_secs(c.comm_secs),
+        c.connections,
+        fmt_bytes(c.comm_bytes),
+        fmt_bytes(c.memory.peak_footprint()),
+    );
+    Ok(())
+}
+
+/// `iop compare` — Fig. 4 + Fig. 5 tables.
+pub fn compare(a: &mut Args) -> Result<()> {
+    let names = a.list_or("models", &["lenet", "alexnet", "vgg11"]);
+    let cluster = cluster_from_args(a)?;
+    let json = a.bool("json");
+    a.finish()?;
+    let mut comparisons = Vec::new();
+    for n in &names {
+        let m = zoo::by_name(n).ok_or_else(|| anyhow!("unknown model '{n}'"))?;
+        comparisons.push(ModelComparison::compute(&m, &cluster));
+    }
+    if json {
+        let arr = Json::arr(comparisons.iter().map(|c| c.to_json()).collect());
+        println!("{}", arr.to_string_pretty());
+        return Ok(());
+    }
+    println!("Fig. 4 — inference latency\n{}", latency_table(&comparisons));
+    println!("Fig. 5 — peak memory footprint\n{}", memory_table(&comparisons));
+    Ok(())
+}
+
+/// `iop simulate` — discrete-event simulation.
+pub fn simulate(a: &mut Args) -> Result<()> {
+    let model = model_from_args(a)?;
+    let strategy = strategy_from_args(a)?;
+    let cluster = cluster_from_args(a)?;
+    let loose = a.bool("loose");
+    let gantt = a.bool("gantt");
+    let json = a.bool("json");
+    a.finish()?;
+    let p = pipeline::plan(&model, &cluster, strategy);
+    let cfg = SimConfig {
+        strict_barriers: !loose,
+        record_trace: true,
+    };
+    let r = run_sim(&model, &cluster, &p, cfg);
+    r.trace.check_consistency().map_err(|e| anyhow!(e))?;
+    if json {
+        let out = Json::obj(vec![
+            ("total_secs", Json::num(r.total_secs)),
+            ("trace", r.trace.to_json()),
+        ]);
+        println!("{}", out.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "{} / {} ({} barriers): makespan {}",
+        model.name,
+        strategy.name(),
+        if loose { "loose" } else { "strict" },
+        fmt_secs(r.total_secs)
+    );
+    let mut t = Table::new(&["device", "busy", "utilization"]);
+    for j in 0..cluster.m() {
+        let busy = r.trace.device_busy_secs(j);
+        t.row(vec![
+            format!("dev{j}"),
+            fmt_secs(busy),
+            format!("{:.1}%", busy / r.total_secs * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("medium busy: {}", fmt_secs(r.trace.medium_busy_secs()));
+    if gantt {
+        println!("\n{}", r.trace.render_gantt(cluster.m(), 100));
+    }
+    Ok(())
+}
+
+/// `iop scaling` — device-count study: how each strategy's latency and
+/// peak memory scale with m (an extension experiment; the paper fixes
+/// m=3).
+pub fn scaling(a: &mut Args) -> Result<()> {
+    let model = model_from_args(a)?;
+    let counts = a.f64_list_or("counts", &[1.0, 2.0, 3.0, 4.0, 6.0, 8.0])?;
+    let gflops = a.f64_or("flops", 0.6)?;
+    let mem_mib = a.usize_or("mem-mib", 512)?;
+    let bw_mbps = a.f64_or("bandwidth-mbps", 50.0)?;
+    let t_est_ms = a.f64_or("t-est-ms", 4.0)?;
+    let json = a.bool("json");
+    a.finish()?;
+
+    let mut t = Table::new(&["m", "OC", "CoEdge", "IOP", "IOP speedup vs m=1", "IOP peak mem"]);
+    let mut rows_json = Vec::new();
+    let mut base = None;
+    for &mf in &counts {
+        let m = mf as usize;
+        let cluster = Cluster::new(
+            vec![Device::new(gflops * 1e9, (mem_mib as u64) << 20); m],
+            bw_mbps * 1e6 / 8.0,
+            t_est_ms * 1e-3,
+        );
+        let mut lat = Vec::new();
+        for s in Strategy::all() {
+            lat.push(pipeline::plan_and_evaluate(&model, &cluster, s).1.total_secs);
+        }
+        let iop_cost = pipeline::plan_and_evaluate(&model, &cluster, Strategy::Iop).1;
+        if base.is_none() {
+            base = Some(lat[2]);
+        }
+        t.row(vec![
+            m.to_string(),
+            fmt_secs(lat[0]),
+            fmt_secs(lat[1]),
+            fmt_secs(lat[2]),
+            format!("{:.2}x", base.unwrap() / lat[2]),
+            fmt_bytes(iop_cost.memory.peak_footprint()),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("oc_secs", Json::num(lat[0])),
+            ("coedge_secs", Json::num(lat[1])),
+            ("iop_secs", Json::num(lat[2])),
+        ]));
+    }
+    if json {
+        println!("{}", Json::arr(rows_json).to_string_pretty());
+    } else {
+        println!(
+            "Device-count scaling — {} ({} GFLOP/s devices)\n{}",
+            model.name, gflops, t.render()
+        );
+    }
+    Ok(())
+}
+
+/// `iop sweep` — Fig. 6 (latency vs t_est for the VGG family).
+pub fn sweep(a: &mut Args) -> Result<()> {
+    let names = a.list_or("models", &["vgg11", "vgg13", "vgg16", "vgg19"]);
+    let t_ests = a.f64_list_or("t-est-ms", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])?;
+    let mut base = cluster_from_args_t_est(a, t_ests[0] * 1e-3)?;
+    let json = a.bool("json");
+    a.finish()?;
+
+    let mut rows = Vec::new();
+    for n in &names {
+        let model = zoo::by_name(n).ok_or_else(|| anyhow!("unknown model '{n}'"))?;
+        for &t_ms in &t_ests {
+            base.t_est = t_ms * 1e-3;
+            let mut cells = vec![n.clone(), format!("{t_ms}")];
+            let mut lat = Vec::new();
+            for s in Strategy::all() {
+                let (_, c) = pipeline::plan_and_evaluate(&model, &base, s);
+                lat.push(c.total_secs);
+                cells.push(fmt_secs(c.total_secs));
+            }
+            let best_base = lat[0].min(lat[1]);
+            cells.push(format!("-{:.2}%", (1.0 - lat[2] / best_base) * 100.0));
+            rows.push((n.clone(), t_ms, lat, cells));
+        }
+    }
+
+    if json {
+        let arr = Json::arr(
+            rows.iter()
+                .map(|(n, t, lat, _)| {
+                    Json::obj(vec![
+                        ("model", Json::str(n.clone())),
+                        ("t_est_ms", Json::num(*t)),
+                        ("oc_secs", Json::num(lat[0])),
+                        ("coedge_secs", Json::num(lat[1])),
+                        ("iop_secs", Json::num(lat[2])),
+                    ])
+                })
+                .collect(),
+        );
+        println!("{}", arr.to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(&["model", "t_est(ms)", "OC", "CoEdge", "IOP", "IOP vs best"]);
+    for (_, _, _, cells) in rows {
+        t.row(cells);
+    }
+    println!("Fig. 6 — inference time vs connection establishment latency\n{}", t.render());
+    Ok(())
+}
+
+/// `iop exec` — real distributed execution with correctness check.
+pub fn exec(a: &mut Args) -> Result<()> {
+    let model = model_from_args(a)?;
+    let strategy = strategy_from_args(a)?;
+    let cluster = cluster_from_args(a)?;
+    let backend = match a.str_or("backend", "reference").as_str() {
+        "reference" => Backend::Reference,
+        "pjrt" => Backend::Pjrt {
+            artifacts_dir: a.str_or("artifacts", "artifacts"),
+        },
+        other => bail!("unknown backend '{other}' (reference|pjrt)"),
+    };
+    a.finish()?;
+
+    let plan = pipeline::plan(&model, &cluster, strategy);
+    let wb = crate::exec::weights::WeightBundle::generate(&model);
+    let input = crate::exec::weights::model_input(&model);
+    let expect = crate::exec::compute::centralized_inference(&model, &wb, &input);
+
+    let r = run_plan(
+        &model,
+        &plan,
+        &ExecOptions {
+            backend,
+            input: Some(input),
+        },
+    )?;
+    let diff = r.output.max_abs_diff(&expect);
+    println!(
+        "{} / {} on {} devices: wall {} | compute {:?} ms | {} msgs, {} moved",
+        model.name,
+        strategy.name(),
+        cluster.m(),
+        fmt_secs(r.stats.wall_secs),
+        r.stats
+            .compute_secs
+            .iter()
+            .map(|s| (s * 1e3 * 100.0).round() / 100.0)
+            .collect::<Vec<_>>(),
+        r.stats.messages_sent.iter().sum::<usize>(),
+        fmt_bytes(r.stats.bytes_sent.iter().sum()),
+    );
+    println!("max |distributed - centralized| = {diff:.3e}");
+    if diff > 1e-3 {
+        bail!("distributed output diverged from the centralized model");
+    }
+    println!("OK — distributed inference matches the centralized model");
+    Ok(())
+}
+
+/// `iop emit-plans` — canonical plans as JSON for the python AOT compiler.
+pub fn emit_plans(a: &mut Args) -> Result<()> {
+    let names = a.list_or("models", &["lenet", "vgg_mini"]);
+    let cluster = cluster_from_args(a)?;
+    let out_path = a.str_or("out", "artifacts/plans.json");
+    a.finish()?;
+
+    let mut models_json = Vec::new();
+    for n in &names {
+        let model = zoo::by_name(n).ok_or_else(|| anyhow!("unknown model '{n}'"))?;
+        let mut strategies = Vec::new();
+        for s in Strategy::all() {
+            let p = pipeline::plan(&model, &cluster, s);
+            p.validate(&model).map_err(|e| anyhow!(e))?;
+            strategies.push((s.name().to_ascii_lowercase(), plan_export_json(&model, &p)));
+        }
+        models_json.push((
+            n.clone(),
+            Json::obj(vec![
+                ("model", model.to_json()),
+                (
+                    "strategies",
+                    Json::Obj(strategies.into_iter().collect()),
+                ),
+            ]),
+        ));
+    }
+    let out = Json::Obj(
+        models_json
+            .into_iter()
+            .map(|(k, v)| (k, v))
+            .collect(),
+    );
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out_path, out.to_string_pretty())?;
+    println!("wrote plans for {names:?} to {out_path}");
+    Ok(())
+}
+
+/// Detailed per-stage export (slices + shapes) for the AOT compiler.
+fn plan_export_json(model: &Model, plan: &crate::partition::Plan) -> Json {
+    use crate::partition::plan::SliceKind;
+    use crate::partition::rows::input_rows_needed;
+    let stages = plan
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(si, sp)| {
+            let op = &model.ops[sp.stage.op_idx];
+            let in_shape = model.in_shape(sp.stage.op_idx);
+            let devices = sp
+                .slices
+                .iter()
+                .map(|sl| match sl {
+                    SliceKind::Idle => Json::obj(vec![("kind", Json::str("idle"))]),
+                    SliceKind::Full => Json::obj(vec![("kind", Json::str("full"))]),
+                    SliceKind::Replicate => Json::obj(vec![("kind", Json::str("replicate"))]),
+                    SliceKind::Oc { start, count } => Json::obj(vec![
+                        ("kind", Json::str("oc")),
+                        ("start", Json::num(*start as f64)),
+                        ("count", Json::num(*count as f64)),
+                    ]),
+                    SliceKind::Ic { start, count } => Json::obj(vec![
+                        ("kind", Json::str("ic")),
+                        ("start", Json::num(*start as f64)),
+                        ("count", Json::num(*count as f64)),
+                    ]),
+                    SliceKind::Rows { start, count } => {
+                        let (lo, hi) =
+                            input_rows_needed(model, sp.stage, *start, *start + *count);
+                        Json::obj(vec![
+                            ("kind", Json::str("rows")),
+                            ("start", Json::num(*start as f64)),
+                            ("count", Json::num(*count as f64)),
+                            ("win_lo", Json::num(lo as f64)),
+                            ("win_hi", Json::num(hi as f64)),
+                        ])
+                    }
+                })
+                .collect();
+            Json::obj(vec![
+                ("stage", Json::num(si as f64)),
+                ("op", Json::str(op.name.clone())),
+                ("op_idx", Json::num(sp.stage.op_idx as f64)),
+                ("tail_end", Json::num(sp.stage.tail_end as f64)),
+                ("pre_comm", Json::str(sp.pre_comm.tag())),
+                ("in_shape", in_shape.to_json()),
+                ("devices", Json::Arr(devices)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("strategy", Json::str(plan.strategy.name())),
+        ("m", Json::num(plan.m as f64)),
+        ("final_comm", Json::str(plan.final_comm.tag())),
+        ("stages", Json::Arr(stages)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()).collect())
+    }
+
+    #[test]
+    fn cluster_defaults_match_paper_profile() {
+        let mut a = args(&["x"]);
+        let c = cluster_from_args(&mut a).unwrap();
+        let p = crate::device::profiles::paper_default();
+        assert_eq!(c.m(), p.m());
+        assert_eq!(c.bandwidth_bps, p.bandwidth_bps);
+        assert_eq!(c.t_est, p.t_est);
+        assert_eq!(c.devices[0].flops_per_sec, p.devices[0].flops_per_sec);
+    }
+
+    #[test]
+    fn models_command_runs() {
+        models(&mut args(&["models"])).unwrap();
+        models(&mut args(&["models", "--json"])).unwrap();
+    }
+
+    #[test]
+    fn plan_command_runs() {
+        plan(&mut args(&["plan", "--model", "lenet", "--strategy", "iop"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_model_fails() {
+        assert!(plan(&mut args(&["plan", "--model", "resnet"])).is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Command-line interface (in-house arg parsing; the offline build has no
+//! clap). `iop --help` lists the commands; each subcommand maps to a
+//! library façade call so the CLI stays thin.
+
+pub mod args;
+pub mod commands;
+
+use anyhow::Result;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut a = args::Args::parse(argv);
+    let cmd = a.positional(0).map(|s| s.to_string());
+    match cmd.as_deref() {
+        Some("models") => commands::models(&mut a),
+        Some("plan") => commands::plan(&mut a),
+        Some("simulate") => commands::simulate(&mut a),
+        Some("sweep") => commands::sweep(&mut a),
+        Some("scaling") => commands::scaling(&mut a),
+        Some("exec") => commands::exec(&mut a),
+        Some("emit-plans") => commands::emit_plans(&mut a),
+        Some("compare") => commands::compare(&mut a),
+        Some("help") | Some("--help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        r#"iop — cooperative CNN inference with Interleaved Operator Partitioning
+
+USAGE: iop <command> [options]
+
+COMMANDS:
+  models                         List the model zoo (Table 1 view)
+  plan       --model M --strategy S [cluster opts]
+                                 Build & print a partition plan
+  compare    [--models a,b,c] [cluster opts]
+                                 Fig. 4 + Fig. 5 tables (all strategies)
+  simulate   --model M --strategy S [--loose] [--gantt] [cluster opts]
+                                 Discrete-event simulation of a plan
+  sweep      [--models a,b,c] [--t-est-ms 1,2,4,8] [cluster opts]
+                                 Fig. 6: latency vs connection latency
+  scaling    --model M [--counts 1,2,3,4,6,8] [cluster opts]
+                                 Device-count scaling study (extension)
+  exec       --model M --strategy S [--backend reference|pjrt]
+                                 Real distributed execution (threads),
+                                 checked against the centralized model
+  emit-plans [--models a,b] --out FILE
+                                 Export canonical plans as JSON for the
+                                 python AOT shard compiler
+
+MODEL INPUT: --model NAME (zoo) or --model-file SPEC.json (custom CNN)
+
+CLUSTER OPTIONS (defaults = the paper testbed; --cluster-file SPEC.json
+overrides):
+  --devices N          number of devices            [3]
+  --flops GFLOPS       per-device compute           [0.6]
+  --mem-mib MIB        per-device memory            [512]
+  --bandwidth-mbps M   shared-medium bandwidth      [50]
+  --t-est-ms MS        connection establishment     [4]
+
+OUTPUT:
+  --json               machine-readable output where supported
+"#
+    );
+}

@@ -1,0 +1,94 @@
+//! JSON → `Cluster` (testbed definitions).
+
+use crate::device::{Cluster, Device};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Build a cluster from its JSON spec. `devices` is either a count
+/// (homogeneous, with shared `gflops`/`mem_mib`) or an array of
+/// per-device `{gflops, mem_mib}` objects.
+pub fn cluster_from_json(j: &Json) -> Result<Cluster> {
+    let bandwidth_mbps = j.get("bandwidth_mbps").as_f64().unwrap_or(50.0);
+    let t_est_ms = j.get("t_est_ms").as_f64().unwrap_or(4.0);
+
+    let devices = match j.get("devices") {
+        Json::Num(_) => {
+            let m = j
+                .get("devices")
+                .as_usize()
+                .ok_or_else(|| anyhow!("'devices' count must be a positive int"))?;
+            let gflops = j.get("gflops").as_f64().unwrap_or(0.6);
+            let mem_mib = j.get("mem_mib").as_f64().unwrap_or(512.0);
+            vec![Device::new(gflops * 1e9, (mem_mib * 1048576.0) as u64); m]
+        }
+        Json::Arr(list) => list
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let gflops = d
+                    .get("gflops")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("device {i}: missing 'gflops'"))?;
+                let mem_mib = d.get("mem_mib").as_f64().unwrap_or(512.0);
+                Ok(Device::new(gflops * 1e9, (mem_mib * 1048576.0) as u64))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        _ => return Err(anyhow!("cluster spec needs 'devices' (count or array)")),
+    };
+    if devices.is_empty() {
+        return Err(anyhow!("cluster needs at least one device"));
+    }
+    Ok(Cluster::new(
+        devices,
+        bandwidth_mbps * 1e6 / 8.0,
+        t_est_ms * 1e-3,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_shorthand() {
+        let j = Json::parse(
+            r#"{"devices": 3, "gflops": 0.6, "mem_mib": 512,
+                "bandwidth_mbps": 50, "t_est_ms": 4}"#,
+        )
+        .unwrap();
+        let c = cluster_from_json(&j).unwrap();
+        assert_eq!(c, crate::device::profiles::paper_default());
+    }
+
+    #[test]
+    fn per_device_list() {
+        let j = Json::parse(
+            r#"{"devices": [{"gflops": 1.2, "mem_mib": 1024},
+                             {"gflops": 0.6},
+                             {"gflops": 0.3, "mem_mib": 256}],
+                "bandwidth_mbps": 50, "t_est_ms": 4}"#,
+        )
+        .unwrap();
+        let c = cluster_from_json(&j).unwrap();
+        assert_eq!(c.m(), 3);
+        assert_eq!(c.devices[0].flops_per_sec, 1.2e9);
+        assert_eq!(c.devices[1].mem_bytes, 512 << 20); // default
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let c = cluster_from_json(&Json::parse(r#"{"devices": 2}"#).unwrap()).unwrap();
+        assert_eq!(c.m(), 2);
+        assert_eq!(c.bandwidth_bps, 50e6 / 8.0);
+    }
+
+    #[test]
+    fn rejects_bad() {
+        assert!(cluster_from_json(&Json::parse(r#"{"devices": []}"#).unwrap()).is_err());
+        assert!(cluster_from_json(&Json::parse(r#"{}"#).unwrap()).is_err());
+        assert!(cluster_from_json(
+            &Json::parse(r#"{"devices": [{"mem_mib": 5}]}"#).unwrap()
+        )
+        .is_err());
+    }
+}

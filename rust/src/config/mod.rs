@@ -1,0 +1,51 @@
+//! Config files: define custom models and clusters as JSON, so the
+//! framework is usable beyond the built-in zoo (the "composable model
+//! definition" a downstream user needs).
+//!
+//! Model spec (`examples/configs/tiny.json` ships one):
+//!
+//! ```json
+//! {
+//!   "name": "custom",
+//!   "input": [3, 32, 32],
+//!   "ops": [
+//!     {"type": "conv",    "name": "c1", "c_out": 8, "k": 3, "stride": 1,
+//!      "pad": 1, "relu": true},
+//!     {"type": "maxpool", "name": "p1", "k": 2, "stride": 2},
+//!     {"type": "flatten"},
+//!     {"type": "dense",   "name": "f1", "c_out": 10, "relu": false}
+//!   ]
+//! }
+//! ```
+//!
+//! `c_in` is inferred from the running shape, so specs stay minimal and
+//! cannot go out of sync.
+//!
+//! Cluster spec: either the shared form
+//! `{"devices": 3, "gflops": 0.6, "mem_mib": 512, "bandwidth_mbps": 50,
+//!   "t_est_ms": 4}` or per-device
+//! `{"devices": [{"gflops": 1.2, "mem_mib": 1024}, ...], ...}`.
+
+pub mod cluster_cfg;
+pub mod model_cfg;
+
+pub use cluster_cfg::cluster_from_json;
+pub use model_cfg::model_from_json;
+
+use crate::device::Cluster;
+use crate::model::Model;
+use anyhow::{anyhow, Context, Result};
+
+/// Load a model spec from a JSON file.
+pub fn load_model(path: &str) -> Result<Model> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    model_from_json(&json)
+}
+
+/// Load a cluster spec from a JSON file.
+pub fn load_cluster(path: &str) -> Result<Cluster> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    cluster_from_json(&json)
+}

@@ -1,0 +1,210 @@
+//! JSON → `Model` (custom CNN definitions).
+
+use crate::model::{Model, Op, OpKind, Shape};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Build a model from its JSON spec. Input channels of conv/dense ops are
+/// inferred from the running shape.
+pub fn model_from_json(j: &Json) -> Result<Model> {
+    let name = j
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("model spec needs a 'name'"))?
+        .to_string();
+    let input = parse_shape(j.get("input"))?;
+    let ops_json = j
+        .get("ops")
+        .as_arr()
+        .ok_or_else(|| anyhow!("model spec needs 'ops'"))?;
+
+    let mut ops: Vec<Op> = Vec::with_capacity(ops_json.len());
+    let mut cur = input;
+    for (i, oj) in ops_json.iter().enumerate() {
+        let ty = oj
+            .get("type")
+            .as_str()
+            .ok_or_else(|| anyhow!("op {i}: missing 'type'"))?;
+        let name_of = |d: &str| {
+            oj.get("name")
+                .as_str()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("{d}{i}"))
+        };
+        let op = match ty {
+            "conv" => {
+                let c_out = req_usize(oj, "c_out", i)?;
+                let k = req_usize(oj, "k", i)?;
+                let stride = opt_usize(oj, "stride", 1)?;
+                let pad = opt_usize(oj, "pad", 0)?;
+                let relu = oj.get("relu").as_bool().unwrap_or(true);
+                Op::new(
+                    name_of("conv"),
+                    OpKind::Conv2d {
+                        c_in: cur.c,
+                        c_out,
+                        k_h: k,
+                        k_w: k,
+                        stride,
+                        pad,
+                        relu,
+                    },
+                )
+            }
+            "dense" => {
+                let c_out = req_usize(oj, "c_out", i)?;
+                let relu = oj.get("relu").as_bool().unwrap_or(true);
+                Op::new(
+                    name_of("fc"),
+                    OpKind::Dense {
+                        c_in: cur.elems(),
+                        c_out,
+                        relu,
+                    },
+                )
+            }
+            "maxpool" => {
+                let k = req_usize(oj, "k", i)?;
+                let stride = opt_usize(oj, "stride", k)?;
+                Op::new(name_of("pool"), OpKind::MaxPool { k, stride })
+            }
+            "flatten" => Op::new(name_of("flatten"), OpKind::Flatten),
+            "relu" => Op::new(name_of("relu"), OpKind::Relu),
+            other => bail!("op {i}: unknown type '{other}'"),
+        };
+        // Dense after conv without an explicit flatten: insert one (the
+        // common shorthand).
+        if matches!(op.kind, OpKind::Dense { .. }) && cur.h * cur.w > 1 {
+            let had_flatten = ops
+                .last()
+                .map(|o| matches!(o.kind, OpKind::Flatten))
+                .unwrap_or(false);
+            if !had_flatten {
+                let f = Op::new(format!("flatten{i}"), OpKind::Flatten);
+                cur = f.out_shape(cur);
+                ops.push(f);
+            }
+        }
+        cur = op.out_shape(cur);
+        ops.push(op);
+    }
+    Ok(Model::new(name, input, ops))
+}
+
+fn parse_shape(j: &Json) -> Result<Shape> {
+    let a = j.as_arr().ok_or_else(|| anyhow!("'input' must be [c, h, w]"))?;
+    if a.len() != 3 {
+        bail!("'input' must have 3 dims");
+    }
+    let d = |i: usize| {
+        a[i].as_usize()
+            .ok_or_else(|| anyhow!("'input' dims must be positive ints"))
+    };
+    Ok(Shape::new(d(0)?, d(1)?, d(2)?))
+}
+
+fn req_usize(j: &Json, key: &str, op: usize) -> Result<usize> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("op {op}: missing/invalid '{key}'"))
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_usize()
+            .ok_or_else(|| anyhow!("invalid '{key}' (must be a positive int)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(s: &str) -> Result<Model> {
+        model_from_json(&Json::parse(s).unwrap())
+    }
+
+    const TINY: &str = r#"{
+        "name": "tiny",
+        "input": [3, 16, 16],
+        "ops": [
+            {"type": "conv", "name": "c1", "c_out": 4, "k": 3, "pad": 1},
+            {"type": "maxpool", "k": 2},
+            {"type": "conv", "name": "c2", "c_out": 8, "k": 3, "pad": 1},
+            {"type": "maxpool", "k": 2},
+            {"type": "dense", "name": "out", "c_out": 10, "relu": false}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_infers_channels() {
+        let m = spec(TINY).unwrap();
+        assert_eq!(m.name, "tiny");
+        // implicit flatten inserted before the dense
+        assert_eq!(m.count_kind("flatten"), 1);
+        assert_eq!(*m.shapes().last().unwrap(), crate::model::Shape::vector(10));
+        // c_in inferred: conv2 gets 4 input channels
+        assert_eq!(m.ops.iter().find(|o| o.name == "c2").unwrap().c_in(), Some(4));
+        // dense c_in inferred: 8 * 4 * 4
+        assert_eq!(m.ops.iter().find(|o| o.name == "out").unwrap().c_in(), Some(128));
+    }
+
+    #[test]
+    fn custom_model_plans_and_executes() {
+        use crate::device::profiles;
+        use crate::exec::compute::centralized_inference;
+        use crate::exec::weights::{model_input, WeightBundle};
+        use crate::exec::{run_plan, ExecOptions};
+        use crate::partition::Strategy;
+        let m = spec(TINY).unwrap();
+        let cluster = profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        let expect = centralized_inference(&m, &wb, &model_input(&m));
+        for s in Strategy::all() {
+            let plan = crate::pipeline::plan(&m, &cluster, s);
+            plan.validate(&m).unwrap();
+            let got = run_plan(&m, &plan, &ExecOptions::default()).unwrap();
+            assert!(got.output.allclose(&expect, 1e-4, 1e-5), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(spec(r#"{"input": [1,8,8], "ops": []}"#).is_err()); // no name
+        assert!(spec(r#"{"name": "x", "input": [1, 8], "ops": []}"#).is_err());
+        assert!(
+            spec(r#"{"name": "x", "input": [1,8,8], "ops": [{"type": "warp"}]}"#).is_err()
+        );
+        assert!(
+            spec(r#"{"name": "x", "input": [1,8,8], "ops": [{"type": "conv", "k": 3}]}"#)
+                .is_err()
+        ); // missing c_out
+    }
+
+    #[test]
+    fn zoo_equivalence_via_config() {
+        // vgg_mini expressed as a config equals the built-in builder.
+        let cfg = r#"{
+            "name": "vgg_mini",
+            "input": [3, 32, 32],
+            "ops": [
+                {"type": "conv", "name": "conv1", "c_out": 8, "k": 3, "pad": 1},
+                {"type": "maxpool", "name": "pool1", "k": 2},
+                {"type": "conv", "name": "conv2", "c_out": 16, "k": 3, "pad": 1},
+                {"type": "maxpool", "name": "pool2", "k": 2},
+                {"type": "conv", "name": "conv3", "c_out": 32, "k": 3, "pad": 1},
+                {"type": "maxpool", "name": "pool3", "k": 2},
+                {"type": "flatten", "name": "flatten"},
+                {"type": "dense", "name": "fc1", "c_out": 64},
+                {"type": "dense", "name": "fc2", "c_out": 10, "relu": false}
+            ]
+        }"#;
+        let a = spec(cfg).unwrap();
+        let b = crate::model::zoo::vgg_mini();
+        assert_eq!(a.shapes(), b.shapes());
+        assert_eq!(a.total_flops(), b.total_flops());
+        assert_eq!(a.total_weight_bytes(), b.total_weight_bytes());
+    }
+}

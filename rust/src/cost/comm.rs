@@ -1,0 +1,95 @@
+//! Communication pricing — paper eq. (8) plus the connection-establishment
+//! term the Fig. 6 sweep varies.
+//!
+//! Medium model (DESIGN.md §2/§4): the cluster shares a wireless medium, so
+//! unicast messages serialize; each message costs `t_est + bytes / b`.
+//! This is the model under which the paper's connection-count argument
+//! (IOP's `2(m-1)` vs OC's `m(m-1)` per layer-pair) turns into latency.
+
+use crate::device::Cluster;
+use crate::partition::plan::CommStep;
+
+/// Seconds for one unicast message.
+pub fn message_secs(cluster: &Cluster, bytes: u64) -> f64 {
+    cluster.t_est + cluster.xfer_secs(bytes)
+}
+
+/// Seconds for a whole communication step (serialized shared medium).
+pub fn step_secs(cluster: &Cluster, step: &CommStep) -> f64 {
+    step.messages(cluster.m())
+        .iter()
+        .map(|&(_, _, b)| message_secs(cluster, b))
+        .sum()
+}
+
+/// Decompose a step into (establishment seconds, transfer seconds).
+pub fn step_breakdown(cluster: &Cluster, step: &CommStep) -> (f64, f64) {
+    let msgs = step.messages(cluster.m());
+    let est = msgs.len() as f64 * cluster.t_est;
+    let xfer: f64 = msgs.iter().map(|&(_, _, b)| cluster.xfer_secs(b)).sum();
+    (est, xfer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Cluster;
+
+    fn cluster(t_est: f64) -> Cluster {
+        Cluster::homogeneous(3, 1e9, 1 << 30, 12.5e6, t_est)
+    }
+
+    #[test]
+    fn allgather_vs_reduce_broadcast_scaling() {
+        // The paper's core latency argument, in closed form for m=3 and
+        // equal per-layer activation size `a`:
+        //   OC over a layer pair:  2 AllGathers = 12 t_est + 4a/b
+        //   IOP over the pair:     1 ReduceBcast = 4 t_est + 4a/b
+        //   saving = 8 t_est — grows linearly in t_est (Fig. 6's trend).
+        let a = 120_000u64; // divisible by m so AG slices tile exactly
+        let m = 3usize;
+        let ag = CommStep::AllGather {
+            bytes_per_dev: vec![a / m as u64; m],
+        };
+        let rb = CommStep::ReduceBroadcast { root: 0, bytes: a };
+        for t in [0.001, 0.004, 0.008] {
+            let c = cluster(t);
+            let two_ag = 2.0 * step_secs(&c, &ag);
+            let one_rb = step_secs(&c, &rb);
+            assert_eq!(ag.connections(m) * 2, 12);
+            assert_eq!(rb.connections(m), 4);
+            let saving = two_ag - one_rb;
+            assert!((saving - 8.0 * t).abs() < 1e-9, "t={t}, saving={saving}");
+        }
+    }
+
+    #[test]
+    fn step_secs_counts_every_message() {
+        let c = cluster(0.002);
+        let g = CommStep::Gather {
+            root: 0,
+            bytes_per_dev: vec![0, 12_500, 25_000],
+        };
+        // two messages: 12.5 KB and 25 KB
+        let expect = 2.0 * 0.002 + (12_500.0 + 25_000.0) / 12.5e6;
+        assert!((step_secs(&c, &g) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let c = cluster(0.003);
+        let step = CommStep::ReduceBroadcast {
+            root: 1,
+            bytes: 99_000,
+        };
+        let (est, xfer) = step_breakdown(&c, &step);
+        assert!((est + xfer - step_secs(&c, &step)).abs() < 1e-12);
+        assert!((est - 4.0 * 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_is_free() {
+        let c = cluster(0.008);
+        assert_eq!(step_secs(&c, &CommStep::None), 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Compute-time pricing — paper eq. (7): `T^c_{i,j} = c_{i,j} / f_j`.
+//!
+//! The per-device workload `c_{i,j}` follows from the stage's slice kind:
+//!  * `Oc{count}`   — `count / c_out` of the stage (weighted op + tail);
+//!  * `Ic{count}`   — `count / c_in` of the weighted op's linear part, plus
+//!                    the *full* tail: an IC shard yields partial sums that
+//!                    are reduced before the (nonlinear) tail can run, and
+//!                    the tail is then evaluated replicated on each device
+//!                    (bias + ReLU + pool are negligible next to the conv);
+//!  * `Rows{count}` — `count / H` of the stage;
+//!  * `Full`        — the entire stage on that device;
+//!  * `Idle`        — nothing.
+
+use crate::device::Cluster;
+use crate::model::{Model, Stage};
+use crate::partition::plan::SliceKind;
+
+/// FLOPs device `j` performs for `stage` under `slice`.
+///
+/// For `Rows` slices this is the *stage-granular* view (the executor's
+/// work assignment); the cost model refines the head-op share via
+/// [`stage_device_flops`] — see below.
+pub fn slice_flops(model: &Model, stage: Stage, slice: &SliceKind) -> f64 {
+    let op = &model.ops[stage.op_idx];
+    let head_flops = model.flops(stage.op_idx);
+    let tail_flops: f64 = (stage.op_idx + 1..stage.tail_end)
+        .map(|i| model.flops(i))
+        .sum();
+    match slice {
+        SliceKind::Full | SliceKind::Replicate => head_flops + tail_flops,
+        SliceKind::Idle => 0.0,
+        SliceKind::Oc { count, .. } => {
+            let c_out = op.c_out().expect("weighted") as f64;
+            (head_flops + tail_flops) * *count as f64 / c_out
+        }
+        SliceKind::Ic { count, .. } => {
+            let c_in = op.c_in().expect("weighted") as f64;
+            head_flops * *count as f64 / c_in + tail_flops
+        }
+        SliceKind::Rows { count, .. } => {
+            let h = model.stage_spatial_out_shape(stage).h as f64;
+            (head_flops + tail_flops) * *count as f64 / h
+        }
+    }
+}
+
+/// FLOPs device `j` performs for `stage`, with CoEdge-faithful row
+/// accounting: CoEdge partitions *every operator* on its own row
+/// dimension, so the expensive head conv is balanced over its own (finer)
+/// output rows even when the stage's post-pool row count quantizes
+/// coarsely (e.g. AlexNet's 27-row convs feeding 13-row pools). The
+/// cheap pool tail keeps the stage-granular share.
+pub fn stage_device_flops(
+    model: &Model,
+    cluster: &Cluster,
+    stage: Stage,
+    slices: &[SliceKind],
+    j: usize,
+) -> f64 {
+    match &slices[j] {
+        SliceKind::Rows { count, .. } => {
+            let head_flops = model.flops(stage.op_idx);
+            let tail_flops: f64 = (stage.op_idx + 1..stage.tail_end)
+                .map(|i| model.flops(i))
+                .sum();
+            // Head conv balanced over its own output rows.
+            let h_head = model.out_shape(stage.op_idx).h;
+            let head_counts =
+                crate::partition::split::proportional_split(h_head, &cluster.compute_shares());
+            let h_tail = model.stage_spatial_out_shape(stage).h as f64;
+            head_flops * head_counts[j] as f64 / h_head as f64
+                + tail_flops * *count as f64 / h_tail
+        }
+        s => slice_flops(model, stage, s),
+    }
+}
+
+/// Per-device compute seconds for one stage.
+pub fn stage_compute_secs(
+    model: &Model,
+    cluster: &Cluster,
+    stage: Stage,
+    slices: &[SliceKind],
+) -> Vec<f64> {
+    (0..slices.len())
+        .map(|j| {
+            stage_device_flops(model, cluster, stage, slices, j)
+                / cluster.devices[j].flops_per_sec
+        })
+        .collect()
+}
+
+/// The stage's wall-clock compute phase: `max_j T^c_{i,j}` (eq. 6's inner
+/// max — devices compute in parallel, the stage ends when the slowest
+/// finishes).
+pub fn stage_compute_wall(
+    model: &Model,
+    cluster: &Cluster,
+    stage: Stage,
+    slices: &[SliceKind],
+) -> f64 {
+    stage_compute_secs(model, cluster, stage, slices)
+        .into_iter()
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    #[test]
+    fn fractions_sum_to_full_for_oc() {
+        let m = zoo::lenet();
+        let st = m.stages()[0];
+        let full = slice_flops(&m, st, &SliceKind::Full);
+        let parts = [
+            SliceKind::Oc { start: 0, count: 2 },
+            SliceKind::Oc { start: 2, count: 3 },
+            SliceKind::Oc { start: 5, count: 1 },
+        ];
+        let sum: f64 = parts.iter().map(|s| slice_flops(&m, st, s)).sum();
+        assert!((sum - full).abs() / full < 1e-12);
+    }
+
+    #[test]
+    fn ic_pays_full_tail() {
+        let m = zoo::lenet();
+        let st = m.stages()[1]; // conv2 + pool2 + flatten
+        let head = m.flops(st.op_idx);
+        let tail: f64 = (st.op_idx + 1..st.tail_end).map(|i| m.flops(i)).sum();
+        let f = slice_flops(&m, st, &SliceKind::Ic { start: 0, count: 3 });
+        assert!((f - (head * 3.0 / 6.0 + tail)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wall_is_max_over_devices() {
+        let m = zoo::lenet();
+        let c = profiles::heterogeneous();
+        let st = m.stages()[0];
+        let slices = vec![
+            SliceKind::Oc { start: 0, count: 2 },
+            SliceKind::Oc { start: 2, count: 2 },
+            SliceKind::Oc { start: 4, count: 2 },
+        ];
+        let per = stage_compute_secs(&m, &c, st, &slices);
+        // equal work, slowest device defines the wall
+        assert!((stage_compute_wall(&m, &c, st, &slices) - per[2]).abs() < 1e-15);
+        assert!(per[2] > per[0]);
+    }
+
+    #[test]
+    fn idle_costs_nothing() {
+        let m = zoo::lenet();
+        assert_eq!(slice_flops(&m, m.stages()[0], &SliceKind::Idle), 0.0);
+    }
+}

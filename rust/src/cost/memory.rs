@@ -1,0 +1,219 @@
+//! Memory accounting — paper eq. (1):
+//! `Σ_i ω_{i,j} + max_i a_{i,j} ≤ r_j`.
+//!
+//! Weights for every stage stay resident on the devices that need them
+//! (`Σ ω`); activations are transient, so only the largest per-stage
+//! working set counts (`max a`). The per-slice rules encode exactly why
+//! Fig. 5 comes out the way it does:
+//!  * OC/IC shards hold only their fraction of the weights — but an IC
+//!    shard must buffer a *full-size partial sum* output;
+//!  * row shards (CoEdge) replicate the *entire* conv weight tensor;
+//!  * a `Full` FC stage parks every FC weight on the root.
+
+use crate::model::{Model, OpKind, Stage};
+use crate::partition::plan::{Plan, SliceKind};
+use crate::partition::rows::input_rows_needed_clamped;
+
+/// Resident weight bytes a slice of `stage` requires.
+pub fn slice_weight_bytes(model: &Model, stage: Stage, slice: &SliceKind) -> u64 {
+    let op = &model.ops[stage.op_idx];
+    let total = op.weight_bytes();
+    match (slice, &op.kind) {
+        (SliceKind::Idle, _) => 0,
+        (SliceKind::Full, _) | (SliceKind::Replicate, _) => total,
+        // Row shards need every output channel for their rows: the whole
+        // kernel tensor is replicated.
+        (SliceKind::Rows { count, .. }, _) => {
+            if *count == 0 {
+                0
+            } else {
+                total
+            }
+        }
+        (SliceKind::Oc { count, .. }, OpKind::Conv2d { c_in, k_h, k_w, .. }) => {
+            4 * (*count * c_in * k_h * k_w + *count) as u64
+        }
+        (SliceKind::Oc { count, .. }, OpKind::Dense { c_in, .. }) => {
+            4 * (*count * c_in + *count) as u64
+        }
+        (SliceKind::Ic { count, .. }, OpKind::Conv2d { c_out, k_h, k_w, .. }) => {
+            // weight columns for `count` input channels + a replicated
+            // bias (applied after the partial-sum reduction)
+            4 * (c_out * count * k_h * k_w + c_out) as u64
+        }
+        (SliceKind::Ic { count, .. }, OpKind::Dense { c_out, .. }) => {
+            4 * (c_out * count + c_out) as u64
+        }
+        _ => unreachable!("slice kind incompatible with op kind"),
+    }
+}
+
+/// Peak activation working set of device `j` at `stage`: bytes of the input
+/// it must hold plus bytes of the output it produces.
+pub fn slice_activation_bytes(model: &Model, stage: Stage, slice: &SliceKind) -> u64 {
+    let in_bytes = model.in_shape(stage.op_idx).bytes();
+    let out_post_tail = model.stage_out_shape(stage).bytes();
+    // IC shards buffer the *raw* (pre-tail) op output as a full partial sum.
+    let raw_out = model.out_shape(stage.op_idx).bytes();
+    let op = &model.ops[stage.op_idx];
+    match slice {
+        SliceKind::Idle => 0,
+        SliceKind::Full | SliceKind::Replicate => in_bytes + out_post_tail,
+        SliceKind::Oc { count, .. } => {
+            // full input (replicated), fractional output
+            let c_out = op.c_out().unwrap() as u64;
+            in_bytes + out_post_tail * *count as u64 / c_out
+        }
+        SliceKind::Ic { count, .. } => {
+            // fractional input channels, full-size partial output
+            let c_in = op.c_in().unwrap() as u64;
+            in_bytes * *count as u64 / c_in + raw_out
+        }
+        SliceKind::Rows { start, count } => {
+            if *count == 0 {
+                return 0;
+            }
+            // input rows incl. receptive-field overlap + output rows
+            let spatial_out = model.stage_spatial_out_shape(stage);
+            let in_shape = model.in_shape(stage.op_idx);
+            let (lo, hi) = input_rows_needed_clamped(model, stage, *start, *start + *count);
+            let in_rows = (hi - lo) as u64;
+            let in_row_bytes = (in_shape.c * in_shape.w * 4) as u64;
+            let out_row_bytes = (spatial_out.c * spatial_out.w * 4) as u64;
+            in_rows * in_row_bytes + *count as u64 * out_row_bytes
+        }
+    }
+}
+
+/// Per-device memory report for a plan.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    /// Σ_i ω_{i,j}: resident weights per device.
+    pub weights: Vec<u64>,
+    /// max_i a_{i,j}: peak activation working set per device.
+    pub peak_activation: Vec<u64>,
+}
+
+impl MemoryReport {
+    /// Eq. (1) left-hand side per device.
+    pub fn footprint(&self) -> Vec<u64> {
+        self.weights
+            .iter()
+            .zip(&self.peak_activation)
+            .map(|(w, a)| w + a)
+            .collect()
+    }
+
+    /// Peak footprint across devices — the Fig. 5 metric.
+    pub fn peak_footprint(&self) -> u64 {
+        self.footprint().into_iter().max().unwrap_or(0)
+    }
+}
+
+/// Evaluate eq. (1) terms for every device.
+pub fn plan_memory(model: &Model, plan: &Plan) -> MemoryReport {
+    let m = plan.m;
+    let mut weights = vec![0u64; m];
+    let mut peak_act = vec![0u64; m];
+    for sp in &plan.stages {
+        for (j, slice) in sp.slices.iter().enumerate() {
+            weights[j] += slice_weight_bytes(model, sp.stage, slice);
+            peak_act[j] = peak_act[j].max(slice_activation_bytes(model, sp.stage, slice));
+        }
+    }
+    MemoryReport {
+        weights,
+        peak_activation: peak_act,
+    }
+}
+
+/// Check eq. (1) feasibility against device capacities.
+pub fn check_feasible(
+    model: &Model,
+    plan: &Plan,
+    cluster: &crate::device::Cluster,
+) -> Result<(), String> {
+    let rep = plan_memory(model, plan);
+    for (j, fp) in rep.footprint().iter().enumerate() {
+        let cap = cluster.devices[j].mem_bytes;
+        if *fp > cap {
+            return Err(format!(
+                "device {j}: footprint {fp} exceeds capacity {cap} (eq. 1)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::{coedge::plan_coedge, oc::plan_oc};
+
+    #[test]
+    fn oc_weight_slices_tile_total() {
+        let model = zoo::lenet();
+        let st = model.stages()[0];
+        let total = model.ops[st.op_idx].weight_bytes();
+        let parts: u64 = [(0usize, 2usize), (2, 2), (4, 2)]
+            .iter()
+            .map(|&(start, count)| {
+                slice_weight_bytes(&model, st, &SliceKind::Oc { start, count })
+            })
+            .sum();
+        assert_eq!(parts, total);
+    }
+
+    #[test]
+    fn coedge_replicates_conv_weights() {
+        let model = zoo::vgg11();
+        let plan = plan_coedge(&model, &profiles::paper_default());
+        let rep = plan_memory(&model, &plan);
+        let conv_bytes: u64 = model
+            .ops
+            .iter()
+            .filter(|o| o.kind_tag() == "conv")
+            .map(|o| o.weight_bytes())
+            .sum();
+        // every participating device carries all conv weights
+        for j in 0..plan.m {
+            assert!(rep.weights[j] >= conv_bytes, "device {j}");
+        }
+        // the root additionally carries all FC weights
+        let fc_bytes: u64 = model
+            .ops
+            .iter()
+            .filter(|o| o.kind_tag() == "fc")
+            .map(|o| o.weight_bytes())
+            .sum();
+        assert!(rep.weights[0] >= conv_bytes + fc_bytes);
+    }
+
+    #[test]
+    fn oc_memory_well_below_coedge_on_fc_heavy_models() {
+        // The Fig. 5 direction: partitioning FC layers slashes peak memory.
+        let model = zoo::alexnet();
+        let cluster = profiles::paper_default();
+        let oc = plan_memory(&model, &plan_oc(&model, &cluster));
+        let co = plan_memory(&model, &plan_coedge(&model, &cluster));
+        assert!(
+            oc.peak_footprint() < co.peak_footprint(),
+            "oc={} coedge={}",
+            oc.peak_footprint(),
+            co.peak_footprint()
+        );
+    }
+
+    #[test]
+    fn feasibility_detects_tiny_devices() {
+        let model = zoo::vgg16();
+        let cluster = profiles::tiny_memory(3, 1 << 20); // 1 MiB devices
+        let plan = plan_oc(&model, &cluster);
+        assert!(check_feasible(&model, &plan, &cluster).is_err());
+        let big = profiles::paper_default();
+        let plan = plan_oc(&model, &big);
+        check_feasible(&model, &plan, &big).unwrap();
+    }
+}

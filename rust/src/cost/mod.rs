@@ -1,0 +1,172 @@
+//! The analytical cost model — problem **P1** (paper eq. 6):
+//! `Σ_i max_j (T^c_{i,j}) + T^g_i`, with compute priced by eq. (7)
+//! (`compute`), communication by eq. (8) + establishment (`comm`), and the
+//! memory constraint of eq. (1) (`memory`).
+
+pub mod comm;
+pub mod compute;
+pub mod memory;
+
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::plan::Plan;
+use crate::util::json::Json;
+
+/// Per-stage latency breakdown.
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    /// Which op heads the stage (index into `Model::ops`).
+    pub op_idx: usize,
+    /// Communication phase before the stage (shared medium, serialized).
+    pub comm_secs: f64,
+    /// Compute phase (max over devices).
+    pub compute_secs: f64,
+}
+
+/// Full evaluation of a plan under the analytic model.
+#[derive(Debug, Clone)]
+pub struct PlanCost {
+    pub stages: Vec<StageCost>,
+    /// Final output assembly.
+    pub final_comm_secs: f64,
+    /// Total end-to-end inference latency (the Fig. 4 / Fig. 6 metric).
+    pub total_secs: f64,
+    /// Total compute share of the latency.
+    pub compute_secs: f64,
+    /// Total communication share of the latency.
+    pub comm_secs: f64,
+    /// Connection count (t_est-bearing messages).
+    pub connections: usize,
+    /// Total bytes moved.
+    pub comm_bytes: u64,
+    /// Eq. (1) memory report.
+    pub memory: memory::MemoryReport,
+}
+
+impl PlanCost {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_secs", Json::num(self.total_secs)),
+            ("compute_secs", Json::num(self.compute_secs)),
+            ("comm_secs", Json::num(self.comm_secs)),
+            ("connections", Json::num(self.connections as f64)),
+            ("comm_bytes", Json::num(self.comm_bytes as f64)),
+            (
+                "peak_memory_bytes",
+                Json::num(self.memory.peak_footprint() as f64),
+            ),
+            (
+                "stages",
+                Json::arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("op", Json::num(s.op_idx as f64)),
+                                ("comm_secs", Json::num(s.comm_secs)),
+                                ("compute_secs", Json::num(s.compute_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Evaluate a plan end-to-end: P1's objective plus the memory terms.
+pub fn evaluate(model: &Model, cluster: &Cluster, plan: &Plan) -> PlanCost {
+    let mut stages = Vec::with_capacity(plan.stages.len());
+    let mut total_compute = 0.0;
+    let mut total_comm = 0.0;
+    for sp in &plan.stages {
+        let comm_secs = comm::step_secs(cluster, &sp.pre_comm);
+        let compute_secs = compute::stage_compute_wall(model, cluster, sp.stage, &sp.slices);
+        total_comm += comm_secs;
+        total_compute += compute_secs;
+        stages.push(StageCost {
+            op_idx: sp.stage.op_idx,
+            comm_secs,
+            compute_secs,
+        });
+    }
+    let final_comm_secs = comm::step_secs(cluster, &plan.final_comm);
+    total_comm += final_comm_secs;
+    PlanCost {
+        stages,
+        final_comm_secs,
+        total_secs: total_compute + total_comm,
+        compute_secs: total_compute,
+        comm_secs: total_comm,
+        connections: plan.total_connections(),
+        comm_bytes: plan.total_comm_bytes(),
+        memory: memory::plan_memory(model, plan),
+    }
+}
+
+/// Convenience: latency of the centralized (single-device) baseline —
+/// Fig. 1(a): the whole model on the fastest device, no communication.
+pub fn centralized_secs(model: &Model, cluster: &Cluster) -> f64 {
+    let f = cluster
+        .devices
+        .iter()
+        .map(|d| d.flops_per_sec)
+        .fold(0.0, f64::max);
+    model.total_flops() / f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::{coedge::plan_coedge, oc::plan_oc};
+
+    #[test]
+    fn totals_are_consistent() {
+        let model = zoo::alexnet();
+        let cluster = profiles::paper_default();
+        let plan = plan_oc(&model, &cluster);
+        let c = evaluate(&model, &cluster, &plan);
+        let sum: f64 = c
+            .stages
+            .iter()
+            .map(|s| s.comm_secs + s.compute_secs)
+            .sum::<f64>()
+            + c.final_comm_secs;
+        assert!((sum - c.total_secs).abs() < 1e-12);
+        assert!((c.compute_secs + c.comm_secs - c.total_secs).abs() < 1e-12);
+        assert!(c.total_secs > 0.0);
+    }
+
+    #[test]
+    fn parallel_compute_beats_centralized() {
+        // With zero comm cost, 3-way OC partitioning should approach 1/3 of
+        // the centralized compute time.
+        let model = zoo::vgg11();
+        let mut cluster = profiles::paper_default();
+        cluster.t_est = 0.0;
+        cluster.bandwidth_bps = 1e15; // effectively free comm
+        let plan = plan_oc(&model, &cluster);
+        let c = evaluate(&model, &cluster, &plan);
+        let central = centralized_secs(&model, &cluster);
+        assert!(c.total_secs < central * 0.45, "{} vs {central}", c.total_secs);
+        assert!(c.total_secs > central / 3.0 * 0.95);
+    }
+
+    #[test]
+    fn coedge_fc_phase_serializes() {
+        // CoEdge compute time >= FC flops on one device.
+        let model = zoo::alexnet();
+        let cluster = profiles::paper_default();
+        let plan = plan_coedge(&model, &cluster);
+        let c = evaluate(&model, &cluster, &plan);
+        let fc_flops: f64 = model
+            .stages()
+            .iter()
+            .filter(|s| model.ops[s.op_idx].kind_tag() == "fc")
+            .map(|s| model.stage_flops(*s))
+            .sum();
+        assert!(c.compute_secs >= fc_flops / cluster.devices[0].flops_per_sec);
+    }
+}

@@ -1,0 +1,197 @@
+//! Device and cluster models — the `(f, r)_j` / `b` substrate of §3.
+//!
+//! The paper's testbed is a set of AIoT boards on a shared wireless medium;
+//! we model each device by its compute capability `f` (FLOP/s) and memory
+//! capacity `r` (bytes), and the cluster by a shared bandwidth `b` plus a
+//! per-connection establishment latency `t_est` (the Fig. 6 sweep
+//! parameter). See DESIGN.md §4 for the substitution record.
+
+use crate::util::json::Json;
+
+/// One cooperative device: `(f, r)_j` in the paper's notation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    /// Compute capability `f_j` in FLOP/s.
+    pub flops_per_sec: f64,
+    /// Available memory `r_j` in bytes.
+    pub mem_bytes: u64,
+}
+
+impl Device {
+    pub fn new(flops_per_sec: f64, mem_bytes: u64) -> Self {
+        assert!(flops_per_sec > 0.0, "device compute must be positive");
+        Self {
+            flops_per_sec,
+            mem_bytes,
+        }
+    }
+}
+
+/// A cooperative cluster: devices + the shared communication medium.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    pub devices: Vec<Device>,
+    /// Link bandwidth `b`, bytes/second (paper eq. 8 divides by `b`).
+    pub bandwidth_bps: f64,
+    /// Connection establishment latency, seconds per connection
+    /// (Fig. 6 x-axis, 1–8 ms).
+    pub t_est: f64,
+}
+
+impl Cluster {
+    pub fn new(devices: Vec<Device>, bandwidth_bps: f64, t_est: f64) -> Self {
+        assert!(!devices.is_empty(), "cluster needs at least one device");
+        assert!(bandwidth_bps > 0.0);
+        assert!(t_est >= 0.0);
+        Self {
+            devices,
+            bandwidth_bps,
+            t_est,
+        }
+    }
+
+    /// Homogeneous cluster of `m` identical devices.
+    pub fn homogeneous(m: usize, flops_per_sec: f64, mem_bytes: u64, bandwidth_bps: f64, t_est: f64) -> Self {
+        Self::new(
+            vec![Device::new(flops_per_sec, mem_bytes); m],
+            bandwidth_bps,
+            t_est,
+        )
+    }
+
+    pub fn m(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total cluster compute, `Σ_j f_j`.
+    pub fn total_flops_per_sec(&self) -> f64 {
+        self.devices.iter().map(|d| d.flops_per_sec).sum()
+    }
+
+    /// Relative compute share of each device (sums to 1).
+    pub fn compute_shares(&self) -> Vec<f64> {
+        let total = self.total_flops_per_sec();
+        self.devices.iter().map(|d| d.flops_per_sec / total).collect()
+    }
+
+    /// Seconds to push `bytes` over the shared medium (eq. 8).
+    pub fn xfer_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth_bps
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "devices",
+                Json::arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("flops_per_sec", Json::num(d.flops_per_sec)),
+                                ("mem_bytes", Json::num(d.mem_bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("bandwidth_bps", Json::num(self.bandwidth_bps)),
+            ("t_est", Json::num(self.t_est)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Cluster> {
+        let devices = j
+            .get("devices")
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                Some(Device::new(
+                    d.get("flops_per_sec").as_f64()?,
+                    d.get("mem_bytes").as_f64()? as u64,
+                ))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Cluster::new(
+            devices,
+            j.get("bandwidth_bps").as_f64()?,
+            j.get("t_est").as_f64()?,
+        ))
+    }
+}
+
+/// Named cluster presets used across examples / benches / tests.
+pub mod profiles {
+    use super::*;
+
+    /// 1 MiB = 2^20 bytes.
+    pub const MIB: u64 = 1 << 20;
+
+    /// The default evaluation testbed for Fig. 4 / Fig. 5: three identical
+    /// IoT-class boards (≈0.6 GFLOP/s effective CNN throughput, 512 MiB),
+    /// 50 Mbit/s shared wireless, 4 ms connection establishment (mid-range
+    /// of the Fig. 6 sweep). Calibration notes in EXPERIMENTS.md §Calib.
+    pub fn paper_default() -> Cluster {
+        Cluster::homogeneous(3, 0.6e9, 512 * MIB, 50e6 / 8.0, 4e-3)
+    }
+
+    /// Same testbed with a configurable establishment latency (Fig. 6).
+    pub fn paper_with_t_est(t_est: f64) -> Cluster {
+        let mut c = paper_default();
+        c.t_est = t_est;
+        c
+    }
+
+    /// A heterogeneous triple: one fast hub and two slower leaf nodes.
+    pub fn heterogeneous() -> Cluster {
+        Cluster::new(
+            vec![
+                Device::new(1.2e9, 1024 * MIB),
+                Device::new(0.6e9, 512 * MIB),
+                Device::new(0.3e9, 256 * MIB),
+            ],
+            50e6 / 8.0,
+            4e-3,
+        )
+    }
+
+    /// Memory-starved cluster for constraint (eq. 1) stress tests.
+    pub fn tiny_memory(m: usize, mem: u64) -> Cluster {
+        Cluster::homogeneous(m, 0.6e9, mem, 50e6 / 8.0, 4e-3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let c = profiles::heterogeneous();
+        let s: f64 = c.compute_shares().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        // fastest device gets the biggest share
+        let shares = c.compute_shares();
+        assert!(shares[0] > shares[1] && shares[1] > shares[2]);
+    }
+
+    #[test]
+    fn xfer_time() {
+        let c = Cluster::homogeneous(2, 1e9, 1 << 30, 12.5e6, 0.0);
+        assert!((c.xfer_secs(12_500_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = profiles::heterogeneous();
+        let j = c.to_json();
+        let c2 = Cluster::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_cluster_panics() {
+        Cluster::new(vec![], 1.0, 0.0);
+    }
+}

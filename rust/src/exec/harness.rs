@@ -1,0 +1,867 @@
+//! Thread-per-device execution harness.
+//!
+//! Protocol: workers advance stage by stage in lockstep implied by data
+//! dependencies (blocking receives). Messages are tagged with
+//! `(stage, phase)` so fast senders can run ahead without corrupting slow
+//! receivers (tags are buffered until consumed).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::{Model, OpKind};
+use crate::partition::plan::{CommStep, Plan, SliceKind};
+use crate::partition::rows::{halo_plan, input_rows_needed};
+use crate::tensor::slice::{
+    act_channel_slice, act_rows_window, concat_channels, concat_rows, copy_rows_into,
+};
+use crate::tensor::Tensor;
+
+use super::compute::{apply_tail, compute_slice};
+use super::pjrt::PjrtRunner;
+use super::weights::{model_input, WeightBundle};
+
+/// Which compute backend workers use.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Host reference ops (`tensor::ops`).
+    Reference,
+    /// AOT XLA shard executables from `artifacts/` via PJRT-CPU.
+    Pjrt { artifacts_dir: String },
+}
+
+/// Execution options.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    pub backend: Backend,
+    /// Override the inference input (defaults to the deterministic
+    /// synthetic input for the model).
+    pub input: Option<Tensor>,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Reference,
+            input: None,
+        }
+    }
+}
+
+/// Execution statistics.
+#[derive(Debug, Clone)]
+pub struct ExecStats {
+    pub wall_secs: f64,
+    /// Bytes each device sent.
+    pub bytes_sent: Vec<u64>,
+    /// Messages each device sent.
+    pub messages_sent: Vec<usize>,
+    /// Pure compute seconds per device.
+    pub compute_secs: Vec<f64>,
+}
+
+/// Execution result: the network output (assembled on device 0) + stats.
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    pub output: Tensor,
+    pub stats: ExecStats,
+}
+
+/// A tagged inter-device message.
+struct Msg {
+    from: usize,
+    /// Request id (sessions stream many inferences over one worker set).
+    req: usize,
+    stage: usize,
+    phase: u8,
+    tensor: Tensor,
+}
+
+const PHASE_MAIN: u8 = 0;
+const PHASE_BCAST: u8 = 1;
+const FINAL_STAGE: usize = usize::MAX;
+
+/// Per-worker mailbox with tag-based buffering.
+struct Mailbox {
+    rx: Receiver<Msg>,
+    pending: Vec<Msg>,
+}
+
+impl Mailbox {
+    fn recv_tagged(&mut self, req: usize, stage: usize, phase: u8) -> Result<Msg> {
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|m| m.req == req && m.stage == stage && m.phase == phase)
+        {
+            return Ok(self.pending.remove(pos));
+        }
+        loop {
+            let m = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("peer disconnected waiting for stage {stage}"))?;
+            if m.req == req && m.stage == stage && m.phase == phase {
+                return Ok(m);
+            }
+            self.pending.push(m);
+        }
+    }
+}
+
+/// Worker-side compute dispatch (reference ops or PJRT executables).
+enum Runner {
+    Reference,
+    Pjrt(Box<PjrtRunner>),
+}
+
+impl Runner {
+    #[allow(clippy::too_many_arguments)]
+    fn run_slice(
+        &mut self,
+        model: &Model,
+        wb: &WeightBundle,
+        plan: &Plan,
+        si: usize,
+        dev: usize,
+        slice: &SliceKind,
+        input: &Tensor,
+        window: Option<(isize, isize)>,
+    ) -> Result<Tensor> {
+        match self {
+            Runner::Reference => Ok(compute_slice(
+                model,
+                wb,
+                plan.stages[si].stage,
+                slice,
+                input,
+                window,
+            )),
+            Runner::Pjrt(r) => r.run_slice(si, dev, slice, input, window),
+        }
+    }
+
+    fn run_tail(
+        &mut self,
+        model: &Model,
+        wb: &WeightBundle,
+        plan: &Plan,
+        si: usize,
+        raw: &Tensor,
+    ) -> Result<Tensor> {
+        match self {
+            Runner::Reference => Ok(apply_tail(model, wb, plan.stages[si].stage, raw)),
+            Runner::Pjrt(r) => r.run_tail(si, raw),
+        }
+    }
+}
+
+/// What a worker holds between stages.
+enum Local {
+    /// Full activation (replicated layouts / root holding everything).
+    Full(Tensor),
+    /// Own shard: channel block or spatial rows (tagged by prev stage).
+    Shard(Tensor),
+    /// Nothing (idle / non-root after gather).
+    Nothing,
+}
+
+impl Local {
+    fn full(&self) -> Result<&Tensor> {
+        match self {
+            Local::Full(t) => Ok(t),
+            _ => Err(anyhow!("expected full activation locally")),
+        }
+    }
+}
+
+/// A persistent execution session: workers (and their compiled PJRT
+/// executables) stay alive across requests. This is the deployment shape —
+/// per-request cost drops from "compile everything" to "run everything"
+/// (EXPERIMENTS.md §Perf records the before/after).
+pub struct ExecSession {
+    m: usize,
+    ctrl_tx: Vec<Sender<Control>>,
+    done_rx: Receiver<(usize, usize, Result<WorkerOut>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    next_req: usize,
+}
+
+enum Control {
+    Request { req: usize, input: Tensor },
+    Shutdown,
+}
+
+impl ExecSession {
+    /// Validate the plan and spawn one worker thread per device.
+    pub fn new(model: &Model, plan: &Plan, backend: Backend) -> Result<ExecSession> {
+        plan.validate(model).map_err(|e| anyhow!(e))?;
+        let m = plan.m;
+        let model = Arc::new(model.clone());
+        let plan = Arc::new(plan.clone());
+        let wb = Arc::new(WeightBundle::generate(&model));
+
+        // Full-mesh data channels: tx[i][j] sends i -> j.
+        let mut rxs: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(m);
+        let mut to_dev: Vec<Sender<Msg>> = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = channel::<Msg>();
+            to_dev.push(tx);
+            rxs.push(Some(rx));
+        }
+        // Control + completion channels.
+        let mut ctrl_tx = Vec::with_capacity(m);
+        let (done_tx, done_rx) = channel::<(usize, usize, Result<WorkerOut>)>();
+
+        let mut handles = Vec::with_capacity(m);
+        for dev in 0..m {
+            let (ctx, crx) = channel::<Control>();
+            ctrl_tx.push(ctx);
+            let model = Arc::clone(&model);
+            let plan = Arc::clone(&plan);
+            let wb = Arc::clone(&wb);
+            let tx: Vec<Sender<Msg>> = to_dev.clone();
+            let rx = rxs[dev].take().unwrap();
+            let backend = backend.clone();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(dev, model, plan, wb, tx, rx, crx, done, backend)
+            }));
+        }
+        Ok(ExecSession {
+            m,
+            ctrl_tx,
+            done_rx,
+            handles,
+            next_req: 0,
+        })
+    }
+
+    /// Run one inference over the live worker set.
+    pub fn infer(&mut self, input: Tensor) -> Result<ExecResult> {
+        let req = self.next_req;
+        self.next_req += 1;
+        let t0 = Instant::now();
+        for c in &self.ctrl_tx {
+            c.send(Control::Request {
+                req,
+                input: input.clone(),
+            })
+            .map_err(|_| anyhow!("worker hung up"))?;
+        }
+        let mut output = None;
+        let mut stats = ExecStats {
+            wall_secs: 0.0,
+            bytes_sent: vec![0; self.m],
+            messages_sent: vec![0; self.m],
+            compute_secs: vec![0.0; self.m],
+        };
+        for _ in 0..self.m {
+            let (r, dev, w) = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("workers died mid-request"))?;
+            debug_assert_eq!(r, req);
+            let w = w.with_context(|| format!("worker {dev}"))?;
+            stats.bytes_sent[dev] = w.bytes_sent;
+            stats.messages_sent[dev] = w.messages_sent;
+            stats.compute_secs[dev] = w.compute_secs;
+            if dev == 0 {
+                output = w.output;
+            }
+        }
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        let output = output.ok_or_else(|| anyhow!("device 0 produced no output"))?;
+        Ok(ExecResult { output, stats })
+    }
+}
+
+impl Drop for ExecSession {
+    fn drop(&mut self) {
+        for c in &self.ctrl_tx {
+            let _ = c.send(Control::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute a plan once (spawns a fresh session). Returns the output
+/// assembled on device 0 plus stats. For request loops use [`ExecSession`]
+/// directly — it amortizes worker spawn and PJRT compilation.
+pub fn run_plan(model: &Model, plan: &Plan, options: &ExecOptions) -> Result<ExecResult> {
+    let mut session = ExecSession::new(model, plan, options.backend.clone())?;
+    let input = options
+        .input
+        .clone()
+        .unwrap_or_else(|| model_input(model));
+    session.infer(input)
+}
+
+/// Worker thread: initialize the backend once, then serve requests until
+/// shutdown.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    dev: usize,
+    model: Arc<Model>,
+    plan: Arc<Plan>,
+    wb: Arc<WeightBundle>,
+    tx: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    ctrl: Receiver<Control>,
+    done: Sender<(usize, usize, Result<WorkerOut>)>,
+    backend: Backend,
+) {
+    let mut mailbox = Mailbox {
+        rx,
+        pending: Vec::new(),
+    };
+    let mut runner = match &backend {
+        Backend::Reference => Ok(Runner::Reference),
+        Backend::Pjrt { artifacts_dir } => PjrtRunner::new(
+            Arc::clone(&model),
+            Arc::clone(&plan),
+            Arc::clone(&wb),
+            artifacts_dir,
+        )
+        .map(|r| Runner::Pjrt(Box::new(r))),
+    };
+    while let Ok(ctl) = ctrl.recv() {
+        match ctl {
+            Control::Shutdown => break,
+            Control::Request { req, input } => {
+                let result = match &mut runner {
+                    Err(e) => Err(anyhow!("backend init failed: {e:#}")),
+                    Ok(r) => worker_request(
+                        dev, &model, &plan, &wb, input, &tx, &mut mailbox, r, req,
+                    ),
+                };
+                if done.send((req, dev, result)).is_err() {
+                    break; // session dropped
+                }
+            }
+        }
+    }
+}
+
+struct WorkerOut {
+    output: Option<Tensor>,
+    bytes_sent: u64,
+    messages_sent: usize,
+    compute_secs: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_request(
+    dev: usize,
+    model: &Model,
+    plan: &Plan,
+    wb: &WeightBundle,
+    input: Tensor,
+    tx: &[Sender<Msg>],
+    mailbox: &mut Mailbox,
+    runner: &mut Runner,
+    req: usize,
+) -> Result<WorkerOut> {
+    let m = plan.m;
+    let mut bytes_sent = 0u64;
+    let mut messages_sent = 0usize;
+    let mut compute_secs = 0.0f64;
+
+    let send = |to: usize, stage: usize, phase: u8, tensor: Tensor,
+                    bytes_sent: &mut u64, messages_sent: &mut usize| {
+        *bytes_sent += tensor.bytes() as u64;
+        *messages_sent += 1;
+        let _ = tx[to].send(Msg {
+            from: dev,
+            req,
+            stage,
+            phase,
+            tensor,
+        });
+    };
+
+    let mut local = Local::Full(input);
+
+    for (si, sp) in plan.stages.iter().enumerate() {
+        // Previous stage context (for shard assembly semantics).
+        let prev = si.checked_sub(1).map(|p| &plan.stages[p]);
+
+        // ---------- communication phase ----------
+        match &sp.pre_comm {
+            CommStep::None => {}
+            CommStep::AllGather { .. } => {
+                let prev = prev.ok_or_else(|| anyhow!("allgather with no previous stage"))?;
+                // send own shard to everyone
+                if let Local::Shard(t) = &local {
+                    if t.len() > 0 {
+                        for k in 0..m {
+                            if k != dev {
+                                send(k, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                            }
+                        }
+                    }
+                }
+                // receive shards from every non-idle peer, assemble full
+                let mut parts: Vec<(usize, Tensor)> = Vec::new();
+                if let Local::Shard(t) = &local {
+                    if t.len() > 0 {
+                        parts.push((dev, t.clone()));
+                    }
+                }
+                for (peer, slice) in prev.slices.iter().enumerate() {
+                    if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
+                        continue;
+                    }
+                    let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                    parts.push((msg.from, msg.tensor));
+                }
+                parts.sort_by_key(|(from, _)| {
+                    prev.slices[*from].start_key()
+                });
+                let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                let full = assemble(&model, prev, &tensors)?;
+                local = Local::Full(full);
+            }
+            CommStep::ReduceBroadcast { root, .. } | CommStep::ReduceTo { root, .. } => {
+                let is_reduce_to = matches!(sp.pre_comm, CommStep::ReduceTo { .. });
+                let prev = prev.ok_or_else(|| anyhow!("reduce with no previous stage"))?;
+                let my_partial = match &local {
+                    Local::Shard(t) if t.len() > 0 => Some(t.clone()),
+                    _ => None,
+                };
+                if dev != *root {
+                    if let Some(t) = my_partial {
+                        send(*root, si, PHASE_MAIN, t, &mut bytes_sent, &mut messages_sent);
+                    }
+                    if is_reduce_to {
+                        local = Local::Nothing;
+                    } else {
+                        let msg = mailbox.recv_tagged(req, si, PHASE_BCAST)?;
+                        let tailed = runner.run_tail(&model, &wb, &plan, si - 1, &msg.tensor)?;
+                        local = Local::Full(tailed);
+                    }
+                } else {
+                    let mut acc = my_partial;
+                    for (peer, slice) in prev.slices.iter().enumerate() {
+                        if peer == dev || slice.count() == 0 {
+                            continue;
+                        }
+                        let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                        match &mut acc {
+                            Some(a) => a.add_assign(&msg.tensor),
+                            None => acc = Some(msg.tensor),
+                        }
+                    }
+                    let raw = acc.ok_or_else(|| anyhow!("no partials to reduce"))?;
+                    if !is_reduce_to {
+                        for k in 0..m {
+                            if k != dev {
+                                send(k, si, PHASE_BCAST, raw.clone(), &mut bytes_sent, &mut messages_sent);
+                            }
+                        }
+                    }
+                    let tailed = runner.run_tail(&model, &wb, &plan, si - 1, &raw)?;
+                    local = Local::Full(tailed);
+                }
+            }
+            CommStep::Gather { root, .. } => {
+                let prev = prev.ok_or_else(|| anyhow!("gather with no previous stage"))?;
+                if dev != *root {
+                    if let Local::Shard(t) = &local {
+                        if t.len() > 0 {
+                            send(*root, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                        }
+                    }
+                    local = Local::Nothing;
+                } else {
+                    let mut parts: Vec<(usize, Tensor)> = Vec::new();
+                    if let Local::Shard(t) = &local {
+                        if t.len() > 0 {
+                            parts.push((dev, t.clone()));
+                        }
+                    }
+                    for (peer, slice) in prev.slices.iter().enumerate() {
+                        if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
+                            continue;
+                        }
+                        let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                        parts.push((msg.from, msg.tensor));
+                    }
+                    parts.sort_by_key(|(from, _)| prev.slices[*from].start_key());
+                    let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                    local = Local::Full(assemble(&model, prev, &tensors)?);
+                }
+            }
+            CommStep::Broadcast { root, .. } => {
+                if dev == *root {
+                    let t = local.full()?.clone();
+                    for k in 0..m {
+                        if k != dev {
+                            send(k, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                        }
+                    }
+                } else {
+                    let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                    local = Local::Full(msg.tensor);
+                }
+            }
+            CommStep::HaloExchange { .. } => {
+                // Recompute the detailed halo plan (rows, not just bytes).
+                let prev = prev.ok_or_else(|| anyhow!("halo with no previous stage"))?;
+                let out_ranges = slices_to_ranges(&sp.slices);
+                let owned = slices_to_ranges(&prev.slices);
+                let halos = halo_plan(&model, sp.stage, &out_ranges, &owned);
+                let my_owned = owned[dev];
+                // send my overlap rows
+                for h in halos.iter().filter(|h| h.from == dev) {
+                    let t = match &local {
+                        Local::Shard(t) => t,
+                        _ => return Err(anyhow!("halo from non-sharded state")),
+                    };
+                    let local_start = h.row_start - my_owned.0;
+                    let mut frag = Tensor::zeros(t.c, h.row_count, t.w);
+                    copy_rows_into(&mut frag, 0, t, local_start, h.row_count);
+                    send(h.to, si, PHASE_MAIN, frag, &mut bytes_sent, &mut messages_sent);
+                }
+                // build my input window
+                let (my_start, my_count) = out_ranges[dev];
+                if my_count > 0 {
+                    let (lo, hi) =
+                        input_rows_needed(&model, sp.stage, my_start, my_start + my_count);
+                    let t = match &local {
+                        Local::Shard(t) => t.clone(),
+                        _ => return Err(anyhow!("halo into non-sharded state")),
+                    };
+                    let mut window = Tensor::zeros(t.c, (hi - lo) as usize, t.w);
+                    // own rows
+                    let own_lo = (my_owned.0 as isize).max(lo);
+                    let own_hi = ((my_owned.0 + my_owned.1) as isize).min(hi);
+                    if own_hi > own_lo {
+                        copy_rows_into(
+                            &mut window,
+                            (own_lo - lo) as usize,
+                            &t,
+                            (own_lo as usize) - my_owned.0,
+                            (own_hi - own_lo) as usize,
+                        );
+                    }
+                    // received fragments
+                    let inbound: Vec<_> = halos.iter().filter(|h| h.to == dev).collect();
+                    for h in &inbound {
+                        let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                        // find which inbound fragment this is (by sender)
+                        let hh = inbound
+                            .iter()
+                            .find(|x| x.from == msg.from)
+                            .ok_or_else(|| anyhow!("unexpected halo from {}", msg.from))?;
+                        let _ = h;
+                        copy_rows_into(
+                            &mut window,
+                            (hh.row_start as isize - lo) as usize,
+                            &msg.tensor,
+                            0,
+                            hh.row_count,
+                        );
+                    }
+                    local = Local::Full(window); // window tensor; used below
+                } else {
+                    local = Local::Nothing;
+                }
+            }
+        }
+
+        // ---------- compute phase ----------
+        let slice = &sp.slices[dev];
+        let is_halo_window = matches!(sp.pre_comm, CommStep::HaloExchange { .. });
+        let tc = Instant::now();
+        let out = match slice {
+            SliceKind::Idle => None,
+            SliceKind::Ic { .. } => {
+                // input is my channel/feature block from the paired stage
+                let shard = match &local {
+                    Local::Shard(t) => t.clone(),
+                    Local::Full(t) => {
+                        // stage_a was executed by a single device (m=1 or
+                        // degenerate split): cut my block locally
+                        let (start, count) = match slice {
+                            SliceKind::Ic { start, count } => (*start, *count),
+                            _ => unreachable!(),
+                        };
+                        cut_block(&model, &plan, si, t, start, count)?
+                    }
+                    Local::Nothing => return Err(anyhow!("IC slice with no local data")),
+                };
+                Some(runner.run_slice(&model, &wb, &plan, si, dev, slice, &shard, None)?)
+            }
+            SliceKind::Rows { start, count } => {
+                let (lo, hi) = input_rows_needed(&model, sp.stage, *start, *start + *count);
+                let input_t = if is_halo_window {
+                    local.full()?.clone() // window pre-assembled above
+                } else {
+                    match &local {
+                        // replicated input: cut the window locally
+                        Local::Full(t) => act_rows_window(t, lo, hi),
+                        // row-sharded input that needed no halo (this
+                        // device owns every row in its receptive field —
+                        // e.g. when slow peers were allocated zero rows):
+                        // map global window rows to shard-local rows.
+                        Local::Shard(t) => {
+                            let prev = prev.ok_or_else(|| anyhow!("rows with no previous stage"))?;
+                            let (own_start, own_count) = match prev.slices[dev] {
+                                SliceKind::Rows { start, count } => (start, count),
+                                _ => return Err(anyhow!("rows input from non-row shard")),
+                            };
+                            let mut window = Tensor::zeros(t.c, (hi - lo) as usize, t.w);
+                            let cov_lo = (own_start as isize).max(lo).max(0);
+                            let cov_hi = ((own_start + own_count) as isize).min(hi);
+                            if cov_hi > cov_lo {
+                                copy_rows_into(
+                                    &mut window,
+                                    (cov_lo - lo) as usize,
+                                    t,
+                                    (cov_lo as usize) - own_start,
+                                    (cov_hi - cov_lo) as usize,
+                                );
+                            }
+                            window
+                        }
+                        Local::Nothing => return Err(anyhow!("rows slice with no local data")),
+                    }
+                };
+                Some(runner.run_slice(&model, &wb, &plan, si, dev, slice, &input_t, Some((lo, hi)))?)
+            }
+            SliceKind::Oc { .. } | SliceKind::Full | SliceKind::Replicate => {
+                let t = local.full()?.clone();
+                Some(runner.run_slice(&model, &wb, &plan, si, dev, slice, &t, None)?)
+            }
+        };
+        compute_secs += tc.elapsed().as_secs_f64();
+
+        local = match (out, slice) {
+            (Some(t), SliceKind::Full | SliceKind::Replicate) => Local::Full(t),
+            (Some(t), _) => Local::Shard(t),
+            (None, _) => match local {
+                // idle devices keep replicated data if they have it
+                Local::Full(t) => Local::Full(t),
+                _ => Local::Nothing,
+            },
+        };
+    }
+
+    // ---------- final assembly on device 0 ----------
+    let last = plan.stages.last().unwrap();
+    let output = match &plan.final_comm {
+        CommStep::None => match &local {
+            Local::Full(t) if dev == 0 => Some(t.clone()),
+            _ if dev == 0 => return Err(anyhow!("device 0 lacks the final output")),
+            _ => None,
+        },
+        CommStep::Gather { root, .. } => {
+            if dev != *root {
+                if let Local::Shard(t) = &local {
+                    if t.len() > 0 {
+                        send(*root, FINAL_STAGE, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                    }
+                }
+                None
+            } else {
+                let mut parts: Vec<(usize, Tensor)> = Vec::new();
+                if let Local::Shard(t) = &local {
+                    if t.len() > 0 {
+                        parts.push((dev, t.clone()));
+                    }
+                }
+                for (peer, slice) in last.slices.iter().enumerate() {
+                    if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
+                        continue;
+                    }
+                    let msg = mailbox.recv_tagged(req, FINAL_STAGE, PHASE_MAIN)?;
+                    parts.push((msg.from, msg.tensor));
+                }
+                parts.sort_by_key(|(from, _)| last.slices[*from].start_key());
+                let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                Some(assemble(&model, last, &tensors)?)
+            }
+        }
+        CommStep::ReduceTo { root, .. } => {
+            let my_partial = match &local {
+                Local::Shard(t) if t.len() > 0 => Some(t.clone()),
+                _ => None,
+            };
+            if dev != *root {
+                if let Some(t) = my_partial {
+                    send(*root, FINAL_STAGE, PHASE_MAIN, t, &mut bytes_sent, &mut messages_sent);
+                }
+                None
+            } else {
+                let mut acc = my_partial;
+                for (peer, slice) in last.slices.iter().enumerate() {
+                    if peer == dev || slice.count() == 0 {
+                        continue;
+                    }
+                    let msg = mailbox.recv_tagged(req, FINAL_STAGE, PHASE_MAIN)?;
+                    match &mut acc {
+                        Some(a) => a.add_assign(&msg.tensor),
+                        None => acc = Some(msg.tensor),
+                    }
+                }
+                let raw = acc.ok_or_else(|| anyhow!("no partials in final reduce"))?;
+                Some(runner.run_tail(&model, &wb, &plan, plan.stages.len() - 1, &raw)?)
+            }
+        }
+        other => return Err(anyhow!("unsupported final comm {:?}", other.tag())),
+    };
+
+    Ok(WorkerOut {
+        output,
+        bytes_sent,
+        messages_sent,
+        compute_secs,
+    })
+}
+
+/// Assemble a full activation from ordered shards of `prev` stage.
+fn assemble(
+    model: &Model,
+    prev: &crate::partition::plan::StagePlan,
+    tensors: &[Tensor],
+) -> Result<Tensor> {
+    let kind = prev
+        .slices
+        .iter()
+        .find(|s| !matches!(s, SliceKind::Idle) && s.count() > 0 || matches!(s, SliceKind::Full))
+        .ok_or_else(|| anyhow!("no shards to assemble"))?;
+    match kind {
+        SliceKind::Full | SliceKind::Replicate => Ok(tensors[0].clone()),
+        SliceKind::Oc { .. } => Ok(concat_channels(tensors)),
+        SliceKind::Rows { .. } => {
+            let spatial = concat_rows(tensors);
+            // apply any deferred flatten from the prev stage tail
+            let has_flatten = (prev.stage.op_idx + 1..prev.stage.tail_end)
+                .any(|i| matches!(model.ops[i].kind, OpKind::Flatten));
+            Ok(if has_flatten {
+                spatial.flattened()
+            } else {
+                spatial
+            })
+        }
+        SliceKind::Ic { .. } => Err(anyhow!("cannot concat IC partials; use reduce")),
+        SliceKind::Idle => unreachable!(),
+    }
+}
+
+/// Cut the IC block `[start, start+count)` of a *full* activation feeding
+/// stage `si` (channel block for conv, feature block for dense).
+fn cut_block(
+    model: &Model,
+    plan: &Plan,
+    si: usize,
+    full: &Tensor,
+    start: usize,
+    count: usize,
+) -> Result<Tensor> {
+    let op = &model.ops[plan.stages[si].stage.op_idx];
+    match op.kind {
+        OpKind::Conv2d { .. } => Ok(act_channel_slice(full, start, count)),
+        OpKind::Dense { .. } => Ok(Tensor::vector(full.data[start..start + count].to_vec())),
+        _ => Err(anyhow!("IC block on unweighted op")),
+    }
+}
+
+fn slices_to_ranges(slices: &[SliceKind]) -> Vec<(usize, usize)> {
+    slices
+        .iter()
+        .map(|s| match s {
+            SliceKind::Rows { start, count } => (*start, *count),
+            SliceKind::Oc { start, count } | SliceKind::Ic { start, count } => (*start, *count),
+            _ => (0, 0),
+        })
+        .collect()
+}
+
+impl SliceKind {
+    /// Ordering key for shard assembly.
+    pub(crate) fn start_key(&self) -> usize {
+        match self {
+            SliceKind::Oc { start, .. }
+            | SliceKind::Ic { start, .. }
+            | SliceKind::Rows { start, .. } => *start,
+            SliceKind::Full | SliceKind::Replicate => 0,
+            SliceKind::Idle => usize::MAX,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::exec::compute::centralized_inference;
+    use crate::model::zoo;
+    use crate::partition::Strategy;
+    use crate::pipeline;
+
+    fn check_model_strategy(model: &crate::model::Model, strategy: Strategy) {
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(model, &cluster, strategy);
+        let wb = WeightBundle::generate(model);
+        let expect = centralized_inference(model, &wb, &model_input(model));
+        let got = run_plan(model, &plan, &ExecOptions::default()).unwrap();
+        assert!(
+            got.output.allclose(&expect, 1e-4, 1e-5),
+            "{} {}: diff={}",
+            model.name,
+            strategy.name(),
+            got.output.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn lenet_all_strategies_match_centralized() {
+        let m = zoo::lenet();
+        for s in Strategy::all() {
+            check_model_strategy(&m, s);
+        }
+    }
+
+    #[test]
+    fn vgg_mini_all_strategies_match_centralized() {
+        let m = zoo::vgg_mini();
+        for s in Strategy::all() {
+            check_model_strategy(&m, s);
+        }
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Oc);
+        let r = run_plan(&m, &plan, &ExecOptions::default()).unwrap();
+        assert!(r.stats.wall_secs > 0.0);
+        assert!(r.stats.messages_sent.iter().sum::<usize>() > 0);
+        assert!(r.stats.bytes_sent.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn heterogeneous_cluster_still_correct() {
+        let m = zoo::vgg_mini();
+        let cluster = profiles::heterogeneous();
+        let wb = WeightBundle::generate(&m);
+        let expect = centralized_inference(&m, &wb, &model_input(&m));
+        for s in Strategy::all() {
+            let plan = pipeline::plan(&m, &cluster, s);
+            let got = run_plan(&m, &plan, &ExecOptions::default()).unwrap();
+            assert!(
+                got.output.allclose(&expect, 1e-4, 1e-5),
+                "{}: diff={}",
+                s.name(),
+                got.output.max_abs_diff(&expect)
+            );
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Real distributed execution of partition plans.
+//!
+//! One OS thread per cooperative device, typed mpsc channels as links, and
+//! a stage-lockstep protocol that interprets the plan's `CommStep`s
+//! faithfully: AllGather, reduce(+broadcast), gather, broadcast, and halo
+//! exchange all move real tensors. Numerics are checked against the
+//! centralized reference model (and, in PJRT mode, executed by the AOT
+//! XLA artifacts produced from the JAX/Pallas layers).
+//!
+//! Two backends:
+//!  * [`Backend::Reference`] — host tensor ops (`tensor::ops`), no
+//!    external dependencies; used by tests and the pure-rust examples.
+//!  * [`Backend::Pjrt`] — each worker owns a PJRT CPU client and runs the
+//!    per-shard executables named in `artifacts/manifest.json`.
+
+pub mod compute;
+pub mod harness;
+pub mod pjrt;
+pub mod weights;
+
+pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats};

@@ -1,0 +1,130 @@
+//! PJRT compute backend for the distributed executor.
+//!
+//! Each worker thread owns one `Runtime` (the PJRT client is not `Send`)
+//! and lazily loads the shard executables named in
+//! `artifacts/manifest.json` under keys
+//! `"{model}/{strategy}/s{stage}/d{device}"` (and `"/tail"` for the
+//! post-reduction tails of IC-paired stages). The executables take the
+//! activation plus *flat* weight/bias vectors as parameters; the weight
+//! slices are cut here with `tensor::slice` — the same code paths the
+//! reference backend validates.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Model, OpKind};
+use crate::partition::plan::{Plan, SliceKind};
+use crate::runtime::{LoadedModule, Manifest, Runtime};
+use crate::tensor::slice::*;
+use crate::tensor::Tensor;
+
+use super::weights::WeightBundle;
+
+/// Per-worker PJRT execution state.
+pub struct PjrtRunner {
+    model: Arc<Model>,
+    plan: Arc<Plan>,
+    wb: Arc<WeightBundle>,
+    runtime: Runtime,
+    manifest: Manifest,
+    cache: HashMap<String, LoadedModule>,
+    strategy: String,
+}
+
+impl PjrtRunner {
+    pub fn new(
+        model: Arc<Model>,
+        plan: Arc<Plan>,
+        wb: Arc<WeightBundle>,
+        artifacts_dir: &str,
+    ) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let strategy = plan.strategy.name().to_ascii_lowercase();
+        Ok(Self {
+            model,
+            plan,
+            wb,
+            runtime,
+            manifest,
+            cache: HashMap::new(),
+            strategy,
+        })
+    }
+
+    fn load(&mut self, key: &str) -> Result<&LoadedModule> {
+        if !self.cache.contains_key(key) {
+            let entry = self.manifest.get(key)?;
+            let module = self.runtime.load_hlo_text(&self.manifest.path_of(entry))?;
+            self.cache.insert(key.to_string(), module);
+        }
+        Ok(&self.cache[key])
+    }
+
+    /// Weight-slice tensors (flat) for a stage slice, in the parameter
+    /// order the AOT export declares: `[w]` for IC, `[w, b]` otherwise.
+    pub fn weight_inputs(&self, si: usize, slice: &SliceKind) -> Result<Vec<Tensor>> {
+        let stage = self.plan.stages[si].stage;
+        let op = &self.model.ops[stage.op_idx];
+        let w = self.wb.w(&op.name);
+        let b = self.wb.b(&op.name);
+        let out = match (slice, &op.kind) {
+            (SliceKind::Full, _) | (SliceKind::Replicate, _) | (SliceKind::Rows { .. }, _) => vec![
+                Tensor::vector(w.to_vec()),
+                Tensor::vector(b.to_vec()),
+            ],
+            (SliceKind::Oc { start, count }, OpKind::Conv2d { c_in, c_out, k_h, k_w, .. }) => vec![
+                Tensor::vector(conv_weight_oc_slice(w, *c_out, *c_in, *k_h, *k_w, *start, *count)),
+                Tensor::vector(b[*start..*start + *count].to_vec()),
+            ],
+            (SliceKind::Oc { start, count }, OpKind::Dense { c_in, c_out, .. }) => vec![
+                Tensor::vector(dense_weight_oc_slice(w, *c_out, *c_in, *start, *count)),
+                Tensor::vector(b[*start..*start + *count].to_vec()),
+            ],
+            (SliceKind::Ic { start, count }, OpKind::Conv2d { c_in, c_out, k_h, k_w, .. }) => vec![
+                Tensor::vector(conv_weight_ic_slice(w, *c_out, *c_in, *k_h, *k_w, *start, *count)),
+            ],
+            (SliceKind::Ic { start, count }, OpKind::Dense { c_in, c_out, .. }) => vec![
+                Tensor::vector(dense_weight_ic_slice(w, *c_out, *c_in, *start, *count)),
+            ],
+            (SliceKind::Idle, _) => vec![],
+            _ => return Err(anyhow!("bad slice/op combination")),
+        };
+        Ok(out)
+    }
+
+    /// Execute the shard executable for `(stage, device)`.
+    pub fn run_slice(
+        &mut self,
+        si: usize,
+        dev: usize,
+        slice: &SliceKind,
+        input: &Tensor,
+        _window: Option<(isize, isize)>,
+    ) -> Result<Tensor> {
+        let key = format!(
+            "{}/{}/s{}/d{}",
+            self.model.name, self.strategy, si, dev
+        );
+        let mut inputs = vec![input.clone()];
+        inputs.extend(self.weight_inputs(si, slice)?);
+        let module = self.load(&key)?;
+        let mut out = module.run(&inputs)?;
+        out.pop()
+            .ok_or_else(|| anyhow!("executable {key} returned nothing"))
+    }
+
+    /// Execute the post-reduction tail for stage `si`.
+    pub fn run_tail(&mut self, si: usize, raw: &Tensor) -> Result<Tensor> {
+        let key = format!("{}/{}/s{}/tail", self.model.name, self.strategy, si);
+        let stage = self.plan.stages[si].stage;
+        let op = &self.model.ops[stage.op_idx];
+        let inputs = vec![raw.clone(), Tensor::vector(self.wb.b(&op.name).to_vec())];
+        let module = self.load(&key)?;
+        let mut out = module.run(&inputs)?;
+        out.pop()
+            .ok_or_else(|| anyhow!("tail executable {key} returned nothing"))
+    }
+}

@@ -1,0 +1,59 @@
+//! **iop** — Cooperative CNN inference with Interleaved Operator
+//! Partitioning.
+//!
+//! Rust + JAX + Pallas reproduction of *"Cooperative Inference with
+//! Interleaved Operator Partitioning for CNNs"* (CS.DC 2024). The crate is
+//! the L3 coordinator of the three-layer stack (see DESIGN.md):
+//!
+//! * [`model`] — sequential CNN IR + the evaluation zoo (Table 1, Fig. 6);
+//! * [`device`] — the `(f, r)_j` / `b` / `t_est` cluster substrate;
+//! * [`partition`] — the three partition planners (OC / CoEdge / IOP) and
+//!   the plan IR they share;
+//! * [`segmentation`] — Algorithm 1 (greedy) plus exact DP & exhaustive
+//!   solvers;
+//! * [`cost`] — the analytic model of P1 (eqs. 1, 6–8);
+//! * [`sim`] — discrete-event cluster simulator (per-device queues, shared
+//!   medium, establishment latency);
+//! * [`exec`] — real distributed execution on thread-per-device workers
+//!   (reference tensor ops or PJRT executables);
+//! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts built
+//!   by `python/compile/aot.py`;
+//! * [`tensor`] — host tensors, slicing, deterministic init (mirrored in
+//!   python);
+//! * [`metrics`], [`bench`], [`testing`], [`util`] — reporting and the
+//!   in-house substrates (JSON, PRNG, tables, bench harness, property
+//!   testing) this offline build provides for itself.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use iop::device::profiles;
+//! use iop::model::zoo;
+//! use iop::partition::Strategy;
+//! use iop::pipeline;
+//!
+//! let model = zoo::lenet();
+//! let cluster = profiles::paper_default();
+//! for strategy in Strategy::all() {
+//!     let plan = pipeline::plan(&model, &cluster, strategy);
+//!     let cost = pipeline::evaluate(&model, &cluster, &plan);
+//!     println!("{}: {:.3} ms", strategy.name(), cost.total_secs * 1e3);
+//! }
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod cost;
+pub mod device;
+pub mod exec;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod pipeline;
+pub mod runtime;
+pub mod segmentation;
+pub mod sim;
+pub mod tensor;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,12 @@
+//! `iop` binary — the L3 coordinator CLI.
+//!
+//! See `iop help` (or `cli::run`) for the command surface; DESIGN.md maps
+//! each command to the paper experiment it regenerates.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = iop::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

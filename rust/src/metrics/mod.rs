@@ -1,0 +1,189 @@
+//! Reporting: turn plans/costs/sim results into the tables the paper's
+//! figures plot, in both human (ASCII table) and machine (JSON) form.
+
+use crate::cost::PlanCost;
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::{Plan, Strategy};
+use crate::pipeline;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bytes, fmt_secs, pct_saving};
+
+/// One strategy's measurements on one model — a cell group of Fig. 4/5.
+#[derive(Debug, Clone)]
+pub struct StrategyReport {
+    pub strategy: Strategy,
+    pub latency_secs: f64,
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    pub peak_memory: u64,
+    pub connections: usize,
+    pub comm_bytes: u64,
+}
+
+impl StrategyReport {
+    pub fn from_cost(strategy: Strategy, c: &PlanCost) -> Self {
+        Self {
+            strategy,
+            latency_secs: c.total_secs,
+            compute_secs: c.compute_secs,
+            comm_secs: c.comm_secs,
+            peak_memory: c.memory.peak_footprint(),
+            connections: c.connections,
+            comm_bytes: c.comm_bytes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy.name())),
+            ("latency_secs", Json::num(self.latency_secs)),
+            ("compute_secs", Json::num(self.compute_secs)),
+            ("comm_secs", Json::num(self.comm_secs)),
+            ("peak_memory_bytes", Json::num(self.peak_memory as f64)),
+            ("connections", Json::num(self.connections as f64)),
+            ("comm_bytes", Json::num(self.comm_bytes as f64)),
+        ])
+    }
+}
+
+/// Full three-strategy comparison for one model (one group of bars in
+/// Fig. 4 and Fig. 5).
+#[derive(Debug, Clone)]
+pub struct ModelComparison {
+    pub model: String,
+    pub reports: Vec<StrategyReport>,
+}
+
+impl ModelComparison {
+    pub fn compute(model: &Model, cluster: &Cluster) -> Self {
+        let reports = Strategy::all()
+            .iter()
+            .map(|&s| {
+                let (_, c) = pipeline::plan_and_evaluate(model, cluster, s);
+                StrategyReport::from_cost(s, &c)
+            })
+            .collect();
+        Self {
+            model: model.name.clone(),
+            reports,
+        }
+    }
+
+    pub fn get(&self, s: Strategy) -> &StrategyReport {
+        self.reports.iter().find(|r| r.strategy == s).unwrap()
+    }
+
+    /// Fig. 4 caption numbers: IOP saving vs OC and vs CoEdge (percent).
+    pub fn iop_latency_savings(&self) -> (f64, f64) {
+        let iop = self.get(Strategy::Iop).latency_secs;
+        (
+            pct_saving(self.get(Strategy::Oc).latency_secs, iop),
+            pct_saving(self.get(Strategy::CoEdge).latency_secs, iop),
+        )
+    }
+
+    /// Fig. 5 caption numbers: IOP peak-memory saving vs CoEdge (percent).
+    pub fn iop_memory_saving_vs_coedge(&self) -> f64 {
+        pct_saving(
+            self.get(Strategy::CoEdge).peak_memory as f64,
+            self.get(Strategy::Iop).peak_memory as f64,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            (
+                "strategies",
+                Json::arr(self.reports.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Render a set of comparisons as the Fig. 4 latency table.
+pub fn latency_table(comparisons: &[ModelComparison]) -> String {
+    let mut t = Table::new(&[
+        "model",
+        "OC",
+        "CoEdge",
+        "IOP",
+        "IOP vs OC",
+        "IOP vs CoEdge",
+    ]);
+    for c in comparisons {
+        let (vs_oc, vs_co) = c.iop_latency_savings();
+        t.row(vec![
+            c.model.clone(),
+            fmt_secs(c.get(Strategy::Oc).latency_secs),
+            fmt_secs(c.get(Strategy::CoEdge).latency_secs),
+            fmt_secs(c.get(Strategy::Iop).latency_secs),
+            format!("-{vs_oc:.2}%"),
+            format!("-{vs_co:.2}%"),
+        ]);
+    }
+    t.render()
+}
+
+/// Render the Fig. 5 peak-memory table.
+pub fn memory_table(comparisons: &[ModelComparison]) -> String {
+    let mut t = Table::new(&["model", "OC", "CoEdge", "IOP", "IOP vs CoEdge"]);
+    for c in comparisons {
+        t.row(vec![
+            c.model.clone(),
+            fmt_bytes(c.get(Strategy::Oc).peak_memory),
+            fmt_bytes(c.get(Strategy::CoEdge).peak_memory),
+            fmt_bytes(c.get(Strategy::Iop).peak_memory),
+            format!("-{:.2}%", c.iop_memory_saving_vs_coedge()),
+        ]);
+    }
+    t.render()
+}
+
+/// Per-stage latency breakdown table for one plan.
+pub fn stage_breakdown_table(model: &Model, plan: &Plan, cost: &PlanCost) -> String {
+    let mut t = Table::new(&["stage", "op", "pre-comm", "comm", "compute"]);
+    for (sc, sp) in cost.stages.iter().zip(&plan.stages) {
+        t.row(vec![
+            format!("{}", sc.op_idx),
+            model.ops[sc.op_idx].name.clone(),
+            sp.pre_comm.tag().to_string(),
+            fmt_secs(sc.comm_secs),
+            fmt_secs(sc.compute_secs),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    #[test]
+    fn comparison_has_all_strategies() {
+        let c = ModelComparison::compute(&zoo::lenet(), &profiles::paper_default());
+        assert_eq!(c.reports.len(), 3);
+        let (vs_oc, vs_co) = c.iop_latency_savings();
+        assert!(vs_oc > 0.0 && vs_co > 0.0, "{vs_oc} {vs_co}");
+    }
+
+    #[test]
+    fn tables_render() {
+        let cs = vec![ModelComparison::compute(
+            &zoo::lenet(),
+            &profiles::paper_default(),
+        )];
+        assert!(latency_table(&cs).contains("lenet"));
+        assert!(memory_table(&cs).contains("CoEdge"));
+    }
+
+    #[test]
+    fn json_has_three_strategies() {
+        let c = ModelComparison::compute(&zoo::lenet(), &profiles::paper_default());
+        assert_eq!(c.to_json().get("strategies").as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,251 @@
+//! Model IR: a sequential operator chain with shape inference and
+//! per-operator workload/memory accounting — everything the cost model
+//! (eqs. 1, 7) needs to evaluate a partition plan.
+//!
+//! CNNs in the paper (LeNet/AlexNet/VGG) are pure chains, so the IR is a
+//! `Vec<Op>`; the *weighted-op view* (`weighted_indices`) with attached
+//! passthrough ops is what the partitioners and the segmentation algorithm
+//! operate on (DESIGN.md §2).
+
+use super::op::{Op, OpKind, Shape};
+use crate::util::json::Json;
+
+/// A sequential CNN model.
+///
+/// Shape inference and the weighted-stage view are computed once at
+/// construction and cached — they sit on the hot path of every solver
+/// (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub input: Shape,
+    pub ops: Vec<Op>,
+    /// Cached: output shape of each op.
+    shapes: Vec<Shape>,
+    /// Cached: weighted-stage decomposition.
+    stages: Vec<Stage>,
+}
+
+/// A weighted op together with the passthrough ops that directly follow it
+/// (pool/flatten/relu inherit the producer's partition layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stage {
+    /// Index of the weighted op in `Model::ops`.
+    pub op_idx: usize,
+    /// Indices `[op_idx+1 .. tail_end)` are the attached passthroughs.
+    pub tail_end: usize,
+}
+
+impl Model {
+    pub fn new(name: impl Into<String>, input: Shape, ops: Vec<Op>) -> Self {
+        assert!(
+            ops.first().map(|o| o.is_weighted()).unwrap_or(false),
+            "model must start with a weighted op"
+        );
+        // shape inference (panics early on inconsistent chains)
+        let mut shapes = Vec::with_capacity(ops.len());
+        let mut cur = input;
+        for op in &ops {
+            cur = op.out_shape(cur);
+            shapes.push(cur);
+        }
+        // weighted-stage decomposition
+        let mut stages = Vec::new();
+        let n = ops.len();
+        let mut i = 0;
+        while i < n {
+            assert!(
+                ops[i].is_weighted(),
+                "passthrough op {} with no preceding weighted op",
+                ops[i].name
+            );
+            let mut j = i + 1;
+            while j < n && !ops[j].is_weighted() {
+                j += 1;
+            }
+            stages.push(Stage {
+                op_idx: i,
+                tail_end: j,
+            });
+            i = j;
+        }
+        Self {
+            name: name.into(),
+            input,
+            ops,
+            shapes,
+            stages,
+        }
+    }
+
+    /// Shape after each op: `shapes()[i]` is the *output* of `ops[i]`;
+    /// the input of `ops[i]` is `shapes()[i-1]` (or `self.input` for i=0).
+    pub fn shapes(&self) -> &[Shape] {
+        &self.shapes
+    }
+
+    /// Input shape of op `i`.
+    #[inline]
+    pub fn in_shape(&self, i: usize) -> Shape {
+        if i == 0 {
+            self.input
+        } else {
+            self.shapes[i - 1]
+        }
+    }
+
+    /// Output shape of op `i`.
+    #[inline]
+    pub fn out_shape(&self, i: usize) -> Shape {
+        self.shapes[i]
+    }
+
+    /// FLOPs of op `i`.
+    pub fn flops(&self, i: usize) -> f64 {
+        self.ops[i].flops(self.in_shape(i))
+    }
+
+    /// Total model FLOPs.
+    pub fn total_flops(&self) -> f64 {
+        (0..self.ops.len()).map(|i| self.flops(i)).sum()
+    }
+
+    /// Total parameter bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.weight_bytes()).sum()
+    }
+
+    /// Number of conv / fc ops (Table 1 columns).
+    pub fn count_kind(&self, tag: &str) -> usize {
+        self.ops.iter().filter(|o| o.kind_tag() == tag).count()
+    }
+
+    /// The weighted-op view: each `Stage` is a conv/fc op plus the
+    /// passthrough ops attached behind it (cached).
+    #[inline]
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// FLOPs of a whole stage (weighted op + its passthrough tail).
+    pub fn stage_flops(&self, s: Stage) -> f64 {
+        (s.op_idx..s.tail_end).map(|i| self.flops(i)).sum()
+    }
+
+    /// Output shape of a stage (after its passthrough tail).
+    pub fn stage_out_shape(&self, s: Stage) -> Shape {
+        self.out_shape(s.tail_end - 1)
+    }
+
+    /// Output shape of a stage *before* any trailing `Flatten` — the
+    /// spatial view row-partitioning operates on (a flatten is a pure
+    /// re-view: a device owning spatial rows owns the corresponding
+    /// flattened elements).
+    pub fn stage_spatial_out_shape(&self, s: Stage) -> Shape {
+        let mut cur = self.in_shape(s.op_idx);
+        for i in s.op_idx..s.tail_end {
+            if matches!(self.ops[i].kind, OpKind::Flatten) {
+                break;
+            }
+            cur = self.ops[i].out_shape(cur);
+        }
+        cur
+    }
+
+    /// Whether any op in the stage's tail is a pooling op (matters for
+    /// row-partitioned execution halo accounting).
+    pub fn stage_has_pool(&self, s: Stage) -> bool {
+        (s.op_idx + 1..s.tail_end).any(|i| matches!(self.ops[i].kind, OpKind::MaxPool { .. }))
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ops ({} conv, {} fc), {:.1} MFLOP, {} params",
+            self.name,
+            self.ops.len(),
+            self.count_kind("conv"),
+            self.count_kind("fc"),
+            self.total_flops() / 1e6,
+            self.total_weight_bytes() / 4,
+        )
+    }
+
+    /// JSON description (used by `iop models --json` and test goldens).
+    pub fn to_json(&self) -> Json {
+        let shapes = self.shapes();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("input", self.input.to_json()),
+            (
+                "ops",
+                Json::arr(
+                    self.ops
+                        .iter()
+                        .enumerate()
+                        .map(|(i, o)| {
+                            Json::obj(vec![
+                                ("name", Json::str(o.name.clone())),
+                                ("kind", Json::str(o.kind_tag())),
+                                ("out", shapes[i].to_json()),
+                                ("flops", Json::num(self.flops(i))),
+                                ("weight_bytes", Json::num(o.weight_bytes() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_flops", Json::num(self.total_flops())),
+            ("total_weight_bytes", Json::num(self.total_weight_bytes() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn stages_group_passthroughs() {
+        let m = zoo::lenet();
+        let stages = m.stages();
+        // LeNet: conv1(+pool), conv2(+pool+flatten), fc1, fc2, fc3
+        assert_eq!(stages.len(), 5);
+        assert_eq!(stages[0].tail_end - stages[0].op_idx, 2); // conv1, pool1
+        assert_eq!(stages[1].tail_end - stages[1].op_idx, 3); // conv2, pool2, flatten
+        for s in &stages[2..] {
+            assert_eq!(s.tail_end - s.op_idx, 1);
+        }
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let m = zoo::lenet();
+        let shapes = m.shapes();
+        assert_eq!(shapes.last().unwrap(), &Shape::vector(10));
+        assert_eq!(m.in_shape(0), m.input);
+        for i in 1..m.ops.len() {
+            assert_eq!(m.in_shape(i), shapes[i - 1]);
+        }
+    }
+
+    #[test]
+    fn totals_positive() {
+        for m in zoo::all_models() {
+            assert!(m.total_flops() > 0.0, "{}", m.name);
+            assert!(m.total_weight_bytes() > 0, "{}", m.name);
+            assert!(!m.stages().is_empty());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let j = zoo::lenet().to_json();
+        assert_eq!(j.get("name").as_str(), Some("lenet"));
+        assert_eq!(
+            j.get("ops").as_arr().unwrap().len(),
+            zoo::lenet().ops.len()
+        );
+    }
+}

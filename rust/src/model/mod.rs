@@ -1,0 +1,9 @@
+//! Model IR: sequential CNN chains, shape/workload accounting, and the
+//! evaluation model zoo (Table 1 + Fig. 6 variants).
+
+pub mod graph;
+pub mod op;
+pub mod zoo;
+
+pub use graph::{Model, Stage};
+pub use op::{Op, OpKind, Shape};

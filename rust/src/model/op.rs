@@ -1,0 +1,266 @@
+//! Operator definitions — the paper's §3 operator tuple
+//! `(c_in, c_out, w_k, h_k, s, p)` plus the shape-preserving helpers
+//! (pool / flatten) CNNs are built from.
+//!
+//! ReLU is fused into conv/dense (`relu: bool`) exactly as deployment
+//! frameworks do; standalone `Relu` exists for models that need it between
+//! non-weighted ops.
+
+use crate::util::json::Json;
+
+/// 3-D activation shape (batch elided; `Dense` activations use
+/// `c = features, h = w = 1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    pub fn vector(n: usize) -> Self {
+        Self { c: n, h: 1, w: 1 }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.elems() as u64 * 4
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(vec![
+            Json::num(self.c as f64),
+            Json::num(self.h as f64),
+            Json::num(self.w as f64),
+        ])
+    }
+}
+
+/// Operator kinds. `Conv2d`/`Dense` are the *weighted* ops the partitioning
+/// strategies act on; the rest are passthrough ops that inherit the layout
+/// of their producer (DESIGN.md §2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpKind {
+    Conv2d {
+        c_in: usize,
+        c_out: usize,
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+    },
+    Dense {
+        c_in: usize,
+        c_out: usize,
+        relu: bool,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+    Flatten,
+    Relu,
+}
+
+/// A named operator in the chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+}
+
+impl Op {
+    pub fn new(name: impl Into<String>, kind: OpKind) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+        }
+    }
+
+    /// Weighted ops carry parameters the strategies partition
+    /// (conv & dense); passthrough ops do not.
+    pub fn is_weighted(&self) -> bool {
+        matches!(self.kind, OpKind::Conv2d { .. } | OpKind::Dense { .. })
+    }
+
+    /// Output-channel count of a weighted op.
+    pub fn c_out(&self) -> Option<usize> {
+        match self.kind {
+            OpKind::Conv2d { c_out, .. } | OpKind::Dense { c_out, .. } => Some(c_out),
+            _ => None,
+        }
+    }
+
+    /// Input-channel count of a weighted op.
+    pub fn c_in(&self) -> Option<usize> {
+        match self.kind {
+            OpKind::Conv2d { c_in, .. } | OpKind::Dense { c_in, .. } => Some(c_in),
+            _ => None,
+        }
+    }
+
+    /// Output shape for a given input shape. Panics on inconsistent wiring
+    /// (a model-zoo bug, not a runtime condition).
+    pub fn out_shape(&self, input: Shape) -> Shape {
+        match self.kind {
+            OpKind::Conv2d {
+                c_in,
+                c_out,
+                k_h,
+                k_w,
+                stride,
+                pad,
+                ..
+            } => {
+                assert_eq!(input.c, c_in, "op {}: input channels mismatch", self.name);
+                let h = (input.h + 2 * pad - k_h) / stride + 1;
+                let w = (input.w + 2 * pad - k_w) / stride + 1;
+                Shape::new(c_out, h, w)
+            }
+            OpKind::Dense { c_in, c_out, .. } => {
+                assert_eq!(
+                    input.elems(),
+                    c_in,
+                    "op {}: dense input features mismatch",
+                    self.name
+                );
+                Shape::vector(c_out)
+            }
+            OpKind::MaxPool { k, stride } => Shape::new(
+                input.c,
+                (input.h - k) / stride + 1,
+                (input.w - k) / stride + 1,
+            ),
+            OpKind::Flatten => Shape::vector(input.elems()),
+            OpKind::Relu => input,
+        }
+    }
+
+    /// FLOPs to evaluate this op on `input` (multiply-add = 2 FLOPs,
+    /// the convention the paper's eq. (7) workloads use).
+    pub fn flops(&self, input: Shape) -> f64 {
+        let out = self.out_shape(input);
+        match self.kind {
+            OpKind::Conv2d {
+                c_in, k_h, k_w, ..
+            } => 2.0 * out.elems() as f64 * (c_in * k_h * k_w) as f64,
+            OpKind::Dense { c_in, c_out, .. } => 2.0 * (c_in * c_out) as f64,
+            OpKind::MaxPool { k, .. } => out.elems() as f64 * (k * k) as f64,
+            OpKind::Flatten => 0.0,
+            OpKind::Relu => input.elems() as f64,
+        }
+    }
+
+    /// Parameter bytes (weights + bias), f32.
+    pub fn weight_bytes(&self) -> u64 {
+        match self.kind {
+            OpKind::Conv2d {
+                c_in,
+                c_out,
+                k_h,
+                k_w,
+                ..
+            } => 4 * (c_out * c_in * k_h * k_w + c_out) as u64,
+            OpKind::Dense { c_in, c_out, .. } => 4 * (c_out * c_in + c_out) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Short kind tag for reports.
+    pub fn kind_tag(&self) -> &'static str {
+        match self.kind {
+            OpKind::Conv2d { .. } => "conv",
+            OpKind::Dense { .. } => "fc",
+            OpKind::MaxPool { .. } => "pool",
+            OpKind::Flatten => "flatten",
+            OpKind::Relu => "relu",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_inference() {
+        let op = Op::new(
+            "c1",
+            OpKind::Conv2d {
+                c_in: 1,
+                c_out: 6,
+                k_h: 5,
+                k_w: 5,
+                stride: 1,
+                pad: 0,
+                relu: true,
+            },
+        );
+        let out = op.out_shape(Shape::new(1, 28, 28));
+        assert_eq!(out, Shape::new(6, 24, 24));
+        assert_eq!(op.flops(Shape::new(1, 28, 28)), 2.0 * 6.0 * 24.0 * 24.0 * 25.0);
+        assert_eq!(op.weight_bytes(), 4 * (6 * 25 + 6));
+    }
+
+    #[test]
+    fn pool_flatten_dense_chain() {
+        let s = Shape::new(6, 24, 24);
+        let pool = Op::new("p", OpKind::MaxPool { k: 2, stride: 2 });
+        let s2 = pool.out_shape(s);
+        assert_eq!(s2, Shape::new(6, 12, 12));
+        let flat = Op::new("f", OpKind::Flatten);
+        let s3 = flat.out_shape(s2);
+        assert_eq!(s3, Shape::vector(864));
+        let fc = Op::new(
+            "fc",
+            OpKind::Dense {
+                c_in: 864,
+                c_out: 10,
+                relu: false,
+            },
+        );
+        assert_eq!(fc.out_shape(s3), Shape::vector(10));
+        assert_eq!(fc.flops(s3), 2.0 * 864.0 * 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn channel_mismatch_panics() {
+        let op = Op::new(
+            "c",
+            OpKind::Conv2d {
+                c_in: 3,
+                c_out: 8,
+                k_h: 3,
+                k_w: 3,
+                stride: 1,
+                pad: 1,
+                relu: false,
+            },
+        );
+        op.out_shape(Shape::new(4, 8, 8));
+    }
+
+    #[test]
+    fn weighted_flags() {
+        assert!(Op::new(
+            "d",
+            OpKind::Dense {
+                c_in: 4,
+                c_out: 2,
+                relu: false
+            }
+        )
+        .is_weighted());
+        assert!(!Op::new("p", OpKind::MaxPool { k: 2, stride: 2 }).is_weighted());
+        assert!(!Op::new("f", OpKind::Flatten).is_weighted());
+    }
+}

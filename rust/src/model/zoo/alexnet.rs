@@ -1,0 +1,94 @@
+//! AlexNet (Krizhevsky et al., 2012), single-tower variant, on ImageNet
+//! 3×224×224 — Table 1 row 2: "12-layer CNN, 5 conv + 3 fc".
+//!
+//! This is also the origin of the paper's **OC baseline**: the original
+//! two-GPU AlexNet split its operators along the output-channel dimension.
+
+use crate::model::graph::Model;
+use crate::model::op::{Op, OpKind, Shape};
+
+pub fn alexnet() -> Model {
+    let conv = |name: &str, c_in, c_out, k, stride, pad| {
+        Op::new(
+            name,
+            OpKind::Conv2d {
+                c_in,
+                c_out,
+                k_h: k,
+                k_w: k,
+                stride,
+                pad,
+                relu: true,
+            },
+        )
+    };
+    let ops = vec![
+        conv("conv1", 3, 96, 11, 4, 2),
+        Op::new("pool1", OpKind::MaxPool { k: 3, stride: 2 }),
+        conv("conv2", 96, 256, 5, 1, 2),
+        Op::new("pool2", OpKind::MaxPool { k: 3, stride: 2 }),
+        conv("conv3", 256, 384, 3, 1, 1),
+        conv("conv4", 384, 384, 3, 1, 1),
+        conv("conv5", 384, 256, 3, 1, 1),
+        Op::new("pool5", OpKind::MaxPool { k: 3, stride: 2 }),
+        Op::new("flatten", OpKind::Flatten),
+        Op::new(
+            "fc6",
+            OpKind::Dense {
+                c_in: 9216,
+                c_out: 4096,
+                relu: true,
+            },
+        ),
+        Op::new(
+            "fc7",
+            OpKind::Dense {
+                c_in: 4096,
+                c_out: 4096,
+                relu: true,
+            },
+        ),
+        Op::new(
+            "fc8",
+            OpKind::Dense {
+                c_in: 4096,
+                c_out: 1000,
+                relu: false,
+            },
+        ),
+    ];
+    Model::new("alexnet", Shape::new(3, 224, 224), ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_shapes() {
+        let m = alexnet();
+        let s = m.shapes();
+        assert_eq!(s[0], Shape::new(96, 55, 55)); // conv1
+        assert_eq!(s[1], Shape::new(96, 27, 27)); // pool1
+        assert_eq!(s[2], Shape::new(256, 27, 27)); // conv2
+        assert_eq!(s[3], Shape::new(256, 13, 13)); // pool2
+        assert_eq!(s[6], Shape::new(256, 13, 13)); // conv5
+        assert_eq!(s[7], Shape::new(256, 6, 6)); // pool5
+        assert_eq!(s[8], Shape::vector(9216)); // flatten
+    }
+
+    #[test]
+    fn fc_dominates_parameters() {
+        // The paper's Fig. 5 analysis hinges on this: FC layers hold the
+        // bulk of AlexNet's parameters, so a strategy that does not
+        // partition FC (CoEdge) has a much larger peak memory.
+        let m = alexnet();
+        let fc_bytes: u64 = m
+            .ops
+            .iter()
+            .filter(|o| o.kind_tag() == "fc")
+            .map(|o| o.weight_bytes())
+            .sum();
+        assert!(fc_bytes as f64 / m.total_weight_bytes() as f64 > 0.9);
+    }
+}

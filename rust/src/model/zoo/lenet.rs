@@ -1,0 +1,89 @@
+//! LeNet-5 (LeCun et al., 1998) on MNIST 1×28×28 — Table 1 row 1:
+//! "7-layer CNN, 2 conv + 3 fc".
+//!
+//! The 28×28 variant pads conv1 by 2 (the classic 32×32 receptive field),
+//! giving the canonical 400-feature flatten into fc1.
+
+use crate::model::graph::Model;
+use crate::model::op::{Op, OpKind, Shape};
+
+pub fn lenet() -> Model {
+    let ops = vec![
+        Op::new(
+            "conv1",
+            OpKind::Conv2d {
+                c_in: 1,
+                c_out: 6,
+                k_h: 5,
+                k_w: 5,
+                stride: 1,
+                pad: 2,
+                relu: true,
+            },
+        ),
+        Op::new("pool1", OpKind::MaxPool { k: 2, stride: 2 }),
+        Op::new(
+            "conv2",
+            OpKind::Conv2d {
+                c_in: 6,
+                c_out: 16,
+                k_h: 5,
+                k_w: 5,
+                stride: 1,
+                pad: 0,
+                relu: true,
+            },
+        ),
+        Op::new("pool2", OpKind::MaxPool { k: 2, stride: 2 }),
+        Op::new("flatten", OpKind::Flatten),
+        Op::new(
+            "fc1",
+            OpKind::Dense {
+                c_in: 400,
+                c_out: 120,
+                relu: true,
+            },
+        ),
+        Op::new(
+            "fc2",
+            OpKind::Dense {
+                c_in: 120,
+                c_out: 84,
+                relu: true,
+            },
+        ),
+        Op::new(
+            "fc3",
+            OpKind::Dense {
+                c_in: 84,
+                c_out: 10,
+                relu: false,
+            },
+        ),
+    ];
+    Model::new("lenet", Shape::new(1, 28, 28), ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_follow_the_classic_pipeline() {
+        let m = lenet();
+        let s = m.shapes();
+        assert_eq!(s[0], Shape::new(6, 28, 28)); // conv1 (pad 2)
+        assert_eq!(s[1], Shape::new(6, 14, 14)); // pool1
+        assert_eq!(s[2], Shape::new(16, 10, 10)); // conv2
+        assert_eq!(s[3], Shape::new(16, 5, 5)); // pool2
+        assert_eq!(s[4], Shape::vector(400)); // flatten
+        assert_eq!(s[7], Shape::vector(10)); // fc3
+    }
+
+    #[test]
+    fn parameter_count() {
+        // conv1: 6*1*25+6=156; conv2: 16*6*25+16=2416;
+        // fc1: 120*400+120=48120; fc2: 84*120+84=10164; fc3: 10*84+10=850.
+        assert_eq!(lenet().total_weight_bytes() / 4, 156 + 2416 + 48120 + 10164 + 850);
+    }
+}

@@ -1,0 +1,131 @@
+//! Model zoo — the evaluation models of Table 1 (LeNet, AlexNet, VGG11)
+//! plus the Fig. 6 VGG family (VGG13/16/19) and a `vgg_mini` used by the
+//! real-execution examples/tests (small enough to run through PJRT-CPU and
+//! the reference ops quickly).
+
+mod alexnet;
+mod lenet;
+mod vgg;
+
+pub use alexnet::alexnet;
+pub use lenet::lenet;
+pub use vgg::{vgg, vgg11, vgg13, vgg16, vgg19, vgg_mini};
+
+use super::graph::Model;
+
+/// Table-1 style metadata for a zoo model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub dataset: &'static str,
+}
+
+/// Look up a model by name ("lenet", "alexnet", "vgg11", "vgg13",
+/// "vgg16", "vgg19", "vgg_mini").
+pub fn by_name(name: &str) -> Option<Model> {
+    match name {
+        "lenet" => Some(lenet()),
+        "alexnet" => Some(alexnet()),
+        "vgg11" => Some(vgg11()),
+        "vgg13" => Some(vgg13()),
+        "vgg16" => Some(vgg16()),
+        "vgg19" => Some(vgg19()),
+        "vgg_mini" => Some(vgg_mini()),
+        _ => None,
+    }
+}
+
+/// All zoo models (excluding vgg_mini, which is a test vehicle).
+pub fn all_models() -> Vec<Model> {
+    vec![lenet(), alexnet(), vgg11(), vgg13(), vgg16(), vgg19()]
+}
+
+/// The three Fig. 4 / Fig. 5 evaluation models.
+pub fn fig4_models() -> Vec<Model> {
+    vec![lenet(), alexnet(), vgg11()]
+}
+
+/// The four Fig. 6 VGG variants.
+pub fn fig6_models() -> Vec<Model> {
+    vec![vgg11(), vgg13(), vgg16(), vgg19()]
+}
+
+/// Table 1 metadata.
+pub fn table1() -> Vec<ModelInfo> {
+    vec![
+        ModelInfo {
+            name: "lenet",
+            description: "7-layer CNN",
+            dataset: "MNIST",
+        },
+        ModelInfo {
+            name: "alexnet",
+            description: "12-layer CNN",
+            dataset: "ImageNet",
+        },
+        ModelInfo {
+            name: "vgg11",
+            description: "17-layer CNN",
+            dataset: "ImageNet",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_counts_match_paper() {
+        // Table 1: LeNet 2 conv + 3 fc; AlexNet 5 conv + 3 fc;
+        // VGG11 8 conv + 3 fc.
+        let cases = [
+            ("lenet", 2, 3),
+            ("alexnet", 5, 3),
+            ("vgg11", 8, 3),
+            ("vgg13", 10, 3),
+            ("vgg16", 13, 3),
+            ("vgg19", 16, 3),
+        ];
+        for (name, conv, fc) in cases {
+            let m = by_name(name).unwrap();
+            assert_eq!(m.count_kind("conv"), conv, "{name} conv count");
+            assert_eq!(m.count_kind("fc"), fc, "{name} fc count");
+        }
+    }
+
+    #[test]
+    fn by_name_unknown_is_none() {
+        assert!(by_name("resnet50").is_none());
+    }
+
+    #[test]
+    fn known_parameter_counts() {
+        // Classic parameter-count sanity anchors (weights + biases).
+        let alex = alexnet();
+        let params = alex.total_weight_bytes() / 4;
+        // AlexNet (single-tower) ≈ 62.3M params.
+        assert!(
+            (60_000_000..65_000_000).contains(&params),
+            "alexnet params = {params}"
+        );
+        let v16 = vgg16();
+        let params = v16.total_weight_bytes() / 4;
+        // VGG16 ≈ 138M params.
+        assert!(
+            (135_000_000..142_000_000).contains(&params),
+            "vgg16 params = {params}"
+        );
+    }
+
+    #[test]
+    fn output_is_classifier() {
+        for m in all_models() {
+            let out = *m.shapes().last().unwrap();
+            assert_eq!(out.h, 1);
+            assert_eq!(out.w, 1);
+            assert!(out.c == 10 || out.c == 1000, "{}: {:?}", m.name, out);
+        }
+    }
+}

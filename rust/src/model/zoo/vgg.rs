@@ -1,0 +1,184 @@
+//! The VGG family (Simonyan & Zisserman, 2014) on ImageNet 3×224×224.
+//!
+//! Table 1 row 3 uses VGG11 ("17-layer CNN, 8 conv + 3 fc"); Fig. 6 sweeps
+//! VGG11/13/16/19. All variants share the 3×3/pad-1 conv idiom with
+//! 2×2/stride-2 max-pools between blocks and the 4096-4096-1000 classifier.
+//!
+//! `vgg_mini` is a structurally identical but tiny network (CIFAR-sized
+//! input, narrow channels) used where real tensor execution must be fast:
+//! the PJRT e2e example and the distributed-executor tests.
+
+use crate::model::graph::Model;
+use crate::model::op::{Op, OpKind, Shape};
+
+/// Block widths per variant: each entry is (out_channels, convs_in_block).
+fn config(depth: usize) -> Vec<(usize, usize)> {
+    match depth {
+        11 => vec![(64, 1), (128, 1), (256, 2), (512, 2), (512, 2)],
+        13 => vec![(64, 2), (128, 2), (256, 2), (512, 2), (512, 2)],
+        16 => vec![(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)],
+        19 => vec![(64, 2), (128, 2), (256, 4), (512, 4), (512, 4)],
+        _ => panic!("unsupported VGG depth {depth} (use 11/13/16/19)"),
+    }
+}
+
+/// Build a VGG-`depth` model.
+pub fn vgg(depth: usize) -> Model {
+    let mut ops = Vec::new();
+    let mut c_in = 3;
+    for (block, (width, n_convs)) in config(depth).into_iter().enumerate() {
+        for i in 0..n_convs {
+            ops.push(Op::new(
+                format!("conv{}_{}", block + 1, i + 1),
+                OpKind::Conv2d {
+                    c_in,
+                    c_out: width,
+                    k_h: 3,
+                    k_w: 3,
+                    stride: 1,
+                    pad: 1,
+                    relu: true,
+                },
+            ));
+            c_in = width;
+        }
+        ops.push(Op::new(
+            format!("pool{}", block + 1),
+            OpKind::MaxPool { k: 2, stride: 2 },
+        ));
+    }
+    ops.push(Op::new("flatten", OpKind::Flatten));
+    ops.push(Op::new(
+        "fc1",
+        OpKind::Dense {
+            c_in: 512 * 7 * 7,
+            c_out: 4096,
+            relu: true,
+        },
+    ));
+    ops.push(Op::new(
+        "fc2",
+        OpKind::Dense {
+            c_in: 4096,
+            c_out: 4096,
+            relu: true,
+        },
+    ));
+    ops.push(Op::new(
+        "fc3",
+        OpKind::Dense {
+            c_in: 4096,
+            c_out: 1000,
+            relu: false,
+        },
+    ));
+    Model::new(format!("vgg{depth}"), Shape::new(3, 224, 224), ops)
+}
+
+pub fn vgg11() -> Model {
+    vgg(11)
+}
+
+pub fn vgg13() -> Model {
+    vgg(13)
+}
+
+pub fn vgg16() -> Model {
+    vgg(16)
+}
+
+pub fn vgg19() -> Model {
+    vgg(19)
+}
+
+/// Tiny VGG-style network for real-execution tests: 3×32×32 input,
+/// three conv blocks (8/16/32 channels), two FC layers, 10 classes.
+pub fn vgg_mini() -> Model {
+    let conv = |name: &str, c_in, c_out| {
+        Op::new(
+            name,
+            OpKind::Conv2d {
+                c_in,
+                c_out,
+                k_h: 3,
+                k_w: 3,
+                stride: 1,
+                pad: 1,
+                relu: true,
+            },
+        )
+    };
+    let ops = vec![
+        conv("conv1", 3, 8),
+        Op::new("pool1", OpKind::MaxPool { k: 2, stride: 2 }),
+        conv("conv2", 8, 16),
+        Op::new("pool2", OpKind::MaxPool { k: 2, stride: 2 }),
+        conv("conv3", 16, 32),
+        Op::new("pool3", OpKind::MaxPool { k: 2, stride: 2 }),
+        Op::new("flatten", OpKind::Flatten),
+        Op::new(
+            "fc1",
+            OpKind::Dense {
+                c_in: 32 * 4 * 4,
+                c_out: 64,
+                relu: true,
+            },
+        ),
+        Op::new(
+            "fc2",
+            OpKind::Dense {
+                c_in: 64,
+                c_out: 10,
+                relu: false,
+            },
+        ),
+    ];
+    Model::new("vgg_mini", Shape::new(3, 32, 32), ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg11_is_table1_row3() {
+        let m = vgg11();
+        assert_eq!(m.count_kind("conv"), 8);
+        assert_eq!(m.count_kind("fc"), 3);
+        // 8 conv + 5 pool + flatten + 3 fc = 17 ops; the paper's
+        // "17-layer CNN" counts conv+pool+fc+flatten comparably.
+        assert_eq!(*m.shapes().last().unwrap(), Shape::vector(1000));
+    }
+
+    #[test]
+    fn deeper_variants_monotone_in_flops() {
+        let f: Vec<f64> = [11, 13, 16, 19].iter().map(|d| vgg(*d).total_flops()).collect();
+        assert!(f.windows(2).all(|w| w[0] < w[1]), "{f:?}");
+    }
+
+    #[test]
+    fn feature_map_before_classifier_is_7x7x512() {
+        for d in [11, 13, 16, 19] {
+            let m = vgg(d);
+            let flat_idx = m
+                .ops
+                .iter()
+                .position(|o| o.kind_tag() == "flatten")
+                .unwrap();
+            assert_eq!(m.in_shape(flat_idx), Shape::new(512, 7, 7), "vgg{d}");
+        }
+    }
+
+    #[test]
+    fn vgg_mini_is_small() {
+        let m = vgg_mini();
+        assert!(m.total_weight_bytes() < 500_000);
+        assert_eq!(*m.shapes().last().unwrap(), Shape::vector(10));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_depth_panics() {
+        vgg(15);
+    }
+}

@@ -1,0 +1,255 @@
+//! The **CoEdge baseline** planner: feature-map H-dimension partitioning
+//! for the convolutional front of the network, with workloads proportional
+//! to device capability and a minimum-rows rule (Zeng et al., ToN 2020);
+//! fully-connected layers are *not* partitioned — per the paper's Fig. 3,
+//! the conv activations are broadcast + concatenated ("the activations are
+//! concatenated to complete the inference") and every device then runs the
+//! whole classifier redundantly.
+//!
+//! Both properties the paper measures follow directly:
+//!  * latency: conv stages cost only neighbour halo exchanges (cheap), but
+//!    the FC phase gains nothing from the cluster (replicated = serial
+//!    time) after paying one AllGather;
+//!  * memory (Fig. 5): conv weights are fully replicated on every device
+//!    (row shards compute *all* channels of their rows) and every device
+//!    holds every FC weight — the worst peak memory of the three
+//!    strategies.
+
+use super::plan::{CommStep, Layout, Plan, SliceKind, StagePlan, Strategy};
+use super::rows::halo_xfers;
+use super::split::{proportional_split_min, ranges};
+use crate::device::Cluster;
+use crate::model::{Model, OpKind};
+
+/// Minimum rows a device must receive to participate in a row-partitioned
+/// stage (CoEdge's anti-sliver rule).
+pub const MIN_ROWS: usize = 2;
+
+/// Root device for the serial FC phase and output assembly.
+pub const ROOT: usize = 0;
+
+/// Build the CoEdge plan.
+pub fn plan_coedge(model: &Model, cluster: &Cluster) -> Plan {
+    let m = cluster.m();
+    let shares = cluster.compute_shares();
+    let mut stages = Vec::new();
+
+    // Row ranges (over the *output* of the previous stage) owned per
+    // device, or None once the activation lives on the root.
+    let mut prev_rows: Option<Vec<(usize, usize)>> = None;
+    let mut prev_stage: Option<crate::model::Stage> = None;
+    let mut at_root = false;
+
+    for &stage in model.stages() {
+        let op = &model.ops[stage.op_idx];
+        match op.kind {
+            OpKind::Conv2d { .. } => {
+                // Row ranges are defined over the stage's *spatial* output
+                // (before any trailing flatten).
+                let out = model.stage_spatial_out_shape(stage);
+                let counts = proportional_split_min(out.h, &shares, MIN_ROWS.min(out.h));
+                let rs = ranges(&counts);
+                let slices: Vec<SliceKind> = rs
+                    .iter()
+                    .map(|&(start, count)| {
+                        if count == 0 {
+                            SliceKind::Idle
+                        } else {
+                            SliceKind::Rows { start, count }
+                        }
+                    })
+                    .collect();
+
+                let pre_comm = match (&prev_rows, at_root) {
+                    // First conv: input rows are pre-distributed with the
+                    // halos they need (input staging is outside the
+                    // measured inference path for every strategy).
+                    (None, false) => CommStep::None,
+                    // Interior conv: exchange halo rows with neighbours.
+                    (Some(owned), false) => {
+                        let x = halo_xfers(model, stage, &rs, owned);
+                        if x.is_empty() {
+                            CommStep::None
+                        } else {
+                            CommStep::HaloExchange { xfers: x }
+                        }
+                    }
+                    // Activation is on the root (does not happen for the
+                    // paper's chains — FCs come last — but keep it total).
+                    (_, true) => {
+                        let bytes = model.in_shape(stage.op_idx).bytes();
+                        CommStep::Broadcast { root: ROOT, bytes }
+                    }
+                };
+                at_root = false;
+                stages.push(StagePlan {
+                    stage,
+                    pre_comm,
+                    slices,
+                    out_layout: Layout::RowShard(rs.clone()),
+                });
+                // Input rows owned at the *next* stage = output rows here.
+                prev_rows = Some(rs);
+                prev_stage = Some(stage);
+            }
+            OpKind::Dense { .. } => {
+                // FC is unpartitioned: every device holds the concatenated
+                // activation and evaluates the classifier in full.
+                let slices = vec![SliceKind::Replicate; m];
+                let pre_comm = if at_root {
+                    CommStep::None // already replicated from the last FC
+                } else {
+                    // AllGather the row shards of the previous stage output.
+                    let (owned, pstage) = (
+                        prev_rows.as_ref().expect("fc after conv"),
+                        prev_stage.expect("fc after conv"),
+                    );
+                    let out = model.stage_spatial_out_shape(pstage);
+                    let row_bytes = (out.elems() / out.h * 4) as u64;
+                    CommStep::AllGather {
+                        bytes_per_dev: owned.iter().map(|&(_, c)| c as u64 * row_bytes).collect(),
+                    }
+                };
+                at_root = true; // activation now replicated; no more comm
+                stages.push(StagePlan {
+                    stage,
+                    pre_comm,
+                    slices,
+                    out_layout: Layout::Replicated,
+                });
+                prev_rows = None;
+                prev_stage = Some(stage);
+            }
+            _ => unreachable!("stage heads are weighted"),
+        }
+    }
+
+    // Output is already replicated after the FC phase.
+    let final_comm = if at_root {
+        CommStep::None
+    } else {
+        let (owned, pstage) = (prev_rows.as_ref().unwrap(), prev_stage.unwrap());
+        let out = model.stage_spatial_out_shape(pstage);
+        let row_bytes = (out.elems() / out.h * 4) as u64;
+        CommStep::Gather {
+            root: ROOT,
+            bytes_per_dev: owned.iter().map(|&(_, c)| c as u64 * row_bytes).collect(),
+        }
+    };
+
+    Plan {
+        model_name: model.name.clone(),
+        strategy: Strategy::CoEdge,
+        m,
+        stages,
+        final_comm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    #[test]
+    fn plan_is_valid_for_all_models() {
+        let cluster = profiles::paper_default();
+        for m in zoo::all_models() {
+            let p = plan_coedge(&m, &cluster);
+            p.validate(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn fc_stages_replicate_everywhere() {
+        let model = zoo::alexnet();
+        let p = plan_coedge(&model, &profiles::paper_default());
+        let fc_stages: Vec<_> = p
+            .stages
+            .iter()
+            .filter(|s| model.ops[s.stage.op_idx].kind_tag() == "fc")
+            .collect();
+        assert_eq!(fc_stages.len(), 3);
+        for s in fc_stages {
+            assert!(s.slices.iter().all(|x| *x == SliceKind::Replicate));
+        }
+    }
+
+    #[test]
+    fn single_allgather_then_no_more_comm() {
+        let model = zoo::vgg11();
+        let p = plan_coedge(&model, &profiles::paper_default());
+        let mut seen_gather = 0;
+        let mut fc_seen = false;
+        for s in &p.stages {
+            let is_fc = model.ops[s.stage.op_idx].kind_tag() == "fc";
+            if is_fc {
+                if !fc_seen {
+                    assert!(matches!(s.pre_comm, CommStep::AllGather { .. }));
+                    seen_gather += 1;
+                } else {
+                    assert!(matches!(s.pre_comm, CommStep::None));
+                }
+                fc_seen = true;
+            }
+        }
+        assert_eq!(seen_gather, 1);
+        assert!(matches!(p.final_comm, CommStep::None));
+    }
+
+    #[test]
+    fn conv_stages_only_halo() {
+        let model = zoo::vgg11();
+        let p = plan_coedge(&model, &profiles::paper_default());
+        for s in &p.stages {
+            if model.ops[s.stage.op_idx].kind_tag() == "conv" {
+                assert!(
+                    matches!(s.pre_comm, CommStep::None | CommStep::HaloExchange { .. }),
+                    "conv stage {:?} has {:?}",
+                    s.stage,
+                    s.pre_comm.tag()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn halo_is_neighbour_local_and_small() {
+        let model = zoo::vgg11();
+        let cluster = profiles::paper_default();
+        let p = plan_coedge(&model, &cluster);
+        for s in &p.stages {
+            if let CommStep::HaloExchange { xfers } = &s.pre_comm {
+                let in_bytes = model.in_shape(s.stage.op_idx).bytes();
+                for &(f, t, b) in xfers {
+                    assert!(f != t);
+                    // halo is a thin sliver of the activation
+                    assert!(b * 4 < in_bytes, "halo {b} vs act {in_bytes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_rows_drops_slow_sliver_devices() {
+        // A very skewed cluster on a small feature map: the slow device
+        // gets nothing rather than a sub-minimum sliver.
+        use crate::device::{Cluster, Device};
+        let c = Cluster::new(
+            vec![
+                Device::new(10e9, 1 << 30),
+                Device::new(10e9, 1 << 30),
+                Device::new(0.1e9, 1 << 30),
+            ],
+            12.5e6,
+            1e-3,
+        );
+        let model = zoo::lenet();
+        let p = plan_coedge(&model, &c);
+        p.validate(&model).unwrap();
+        // conv2 output is 5 rows; slowest device should be idle there.
+        let s = &p.stages[1];
+        assert_eq!(s.slices[2].count(), 0);
+    }
+}

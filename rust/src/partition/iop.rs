@@ -1,0 +1,377 @@
+//! The **IOP planner** — the paper's contribution (§3–§4).
+//!
+//! Given a segmentation `Γ = [γ_1 … γ_k]` (pairs + singles over the model's
+//! weighted stages), build the full partition plan:
+//!
+//!  * `Pair(i)`: stage `i` is split on **OC**, stage `i+1` on **IC** with
+//!    channel blocks aligned to stage `i`'s output blocks — the transition
+//!    between them is `CommStep::None` (the whole point of IOP). The pair
+//!    ends with one reduce(+broadcast) of the partial sums: `2(m-1)`
+//!    connections instead of the `2·m(m-1)` two OC layers would pay.
+//!  * `Single(i)`: falls back to CoEdge-style partitioning for that stage
+//!    (rows for conv, unpartitioned/replicated for FC), exactly as
+//!    Algorithm 1 prescribes when pairing doesn't profit.
+//!
+//! Between segments the planner inserts the cheapest layout transition
+//! (locally-satisfiable ones are free; see `Layout`).
+
+use super::coedge::{MIN_ROWS, ROOT};
+use super::oc::oc_shard_bytes_all;
+use super::plan::{CommStep, Layout, Plan, Segment, SliceKind, StagePlan, Strategy};
+use super::rows::halo_xfers;
+use super::split::{proportional_split, proportional_split_min, ranges};
+use crate::device::Cluster;
+use crate::model::{Model, OpKind, Stage};
+
+/// Can stages `a` and `b` (= `a`'s successor) form an IOP pair?
+/// Requires channel alignment between `a`'s OC blocks and `b`'s IC blocks:
+///  * conv→conv (possibly through pool): `b.c_in == a.c_out`;
+///  * conv→fc (through pool/flatten): features scale by `H·W`, blocks stay
+///    channel-contiguous;
+///  * fc→fc: direct.
+pub fn pairable(model: &Model, a: Stage, b: Stage) -> bool {
+    let op_a = &model.ops[a.op_idx];
+    let op_b = &model.ops[b.op_idx];
+    let (Some(a_out), Some(b_in)) = (op_a.c_out(), op_b.c_in()) else {
+        return false;
+    };
+    match op_b.kind {
+        OpKind::Conv2d { .. } => b_in == a_out,
+        OpKind::Dense { .. } => {
+            let feats = model.stage_out_shape(a).elems();
+            feats == b_in && feats % a_out == 0
+        }
+        _ => false,
+    }
+}
+
+/// Tracks what the activation between segments looks like, with enough
+/// context to price/shape transitions.
+enum Flow {
+    Replicated,
+    RowShard {
+        ranges: Vec<(usize, usize)>,
+        stage: Stage,
+    },
+    /// Raw (pre-tail) partial sums of `op_idx`, full shape on each device.
+    Partial {
+        stage: Stage,
+    },
+}
+
+/// Transition the flow state to "every device holds the full activation".
+fn to_replicated(model: &Model, flow: &Flow) -> CommStep {
+    match flow {
+        Flow::Replicated => CommStep::None,
+        Flow::RowShard { ranges, stage } => {
+            let out = model.stage_spatial_out_shape(*stage);
+            let row_bytes = (out.elems() / out.h * 4) as u64;
+            CommStep::AllGather {
+                bytes_per_dev: ranges.iter().map(|&(_, c)| c as u64 * row_bytes).collect(),
+            }
+        }
+        Flow::Partial { stage } => CommStep::ReduceBroadcast {
+            root: ROOT,
+            bytes: model.out_shape(stage.op_idx).bytes(),
+        },
+    }
+}
+
+/// Build the IOP plan for a given segmentation.
+pub fn plan_iop_with_segments(model: &Model, cluster: &Cluster, segments: &[Segment]) -> Plan {
+    let stages = model.stages();
+    super::plan::validate_segments(segments, stages.len()).expect("invalid segmentation");
+    let m = cluster.m();
+    let shares = cluster.compute_shares();
+    let mut out_stages: Vec<StagePlan> = Vec::with_capacity(stages.len());
+    let mut flow = Flow::Replicated; // input image replicated
+
+    // Bytes of the activation entering segment boundaries (for RootOnly
+    // broadcasts).
+    let mut prev_out_bytes: u64 = model.input.bytes();
+
+    for seg in segments {
+        match *seg {
+            Segment::Pair(i) => {
+                let (sa, sb) = (stages[i], stages[i + 1]);
+                let op_a = &model.ops[sa.op_idx];
+                let op_b = &model.ops[sb.op_idx];
+                debug_assert!(pairable(model, sa, sb), "unpairable segment at {i}");
+
+                // --- stage A: OC split ---
+                let c_out = op_a.c_out().unwrap();
+                let counts = proportional_split(c_out, &shares);
+                let rs_a = ranges(&counts);
+                let pre_a = patch_broadcast(to_replicated(model, &flow), prev_out_bytes);
+                let slices_a: Vec<SliceKind> = rs_a
+                    .iter()
+                    .map(|&(start, count)| {
+                        if count == 0 {
+                            SliceKind::Idle
+                        } else {
+                            SliceKind::Oc { start, count }
+                        }
+                    })
+                    .collect();
+                out_stages.push(StagePlan {
+                    stage: sa,
+                    pre_comm: pre_a,
+                    slices: slices_a,
+                    out_layout: Layout::OcShard(rs_a.clone()),
+                });
+
+                // --- stage B: IC split aligned to A's OC blocks ---
+                // conv→conv: same channel units; →fc through flatten:
+                // channel blocks scale by the spatial plane size.
+                let scale = match op_b.kind {
+                    OpKind::Dense { c_in, .. } => c_in / c_out,
+                    _ => 1,
+                };
+                let slices_b: Vec<SliceKind> = rs_a
+                    .iter()
+                    .map(|&(start, count)| {
+                        if count == 0 {
+                            SliceKind::Idle
+                        } else {
+                            SliceKind::Ic {
+                                start: start * scale,
+                                count: count * scale,
+                            }
+                        }
+                    })
+                    .collect();
+                out_stages.push(StagePlan {
+                    stage: sb,
+                    pre_comm: CommStep::None, // the IOP identity transition
+                    slices: slices_b,
+                    out_layout: Layout::Partial,
+                });
+                flow = Flow::Partial { stage: sb };
+                prev_out_bytes = model.stage_out_shape(sb).bytes();
+            }
+            Segment::Single(i) => {
+                let stage = stages[i];
+                let op = &model.ops[stage.op_idx];
+                match op.kind {
+                    OpKind::Conv2d { .. } => {
+                        // CoEdge-style row partitioning.
+                        let out = model.stage_spatial_out_shape(stage);
+                        let counts = proportional_split_min(out.h, &shares, MIN_ROWS.min(out.h));
+                        let rs = ranges(&counts);
+                        let pre = match &flow {
+                            Flow::Replicated => CommStep::None,
+                            Flow::RowShard { ranges: owned, .. } => {
+                                let x = halo_xfers(model, stage, &rs, owned);
+                                if x.is_empty() {
+                                    CommStep::None
+                                } else {
+                                    CommStep::HaloExchange { xfers: x }
+                                }
+                            }
+                            Flow::Partial { stage: ps } => CommStep::ReduceBroadcast {
+                                root: ROOT,
+                                bytes: model.out_shape(ps.op_idx).bytes(),
+                            },
+                        };
+                        let slices: Vec<SliceKind> = rs
+                            .iter()
+                            .map(|&(start, count)| {
+                                if count == 0 {
+                                    SliceKind::Idle
+                                } else {
+                                    SliceKind::Rows { start, count }
+                                }
+                            })
+                            .collect();
+                        out_stages.push(StagePlan {
+                            stage,
+                            pre_comm: pre,
+                            slices,
+                            out_layout: Layout::RowShard(rs.clone()),
+                        });
+                        flow = Flow::RowShard { ranges: rs, stage };
+                    }
+                    OpKind::Dense { .. } => {
+                        // CoEdge-style fallback: unpartitioned — replicate
+                        // the whole FC stage on every device.
+                        let pre = patch_broadcast(to_replicated(model, &flow), prev_out_bytes);
+                        let slices = vec![SliceKind::Replicate; m];
+                        out_stages.push(StagePlan {
+                            stage,
+                            pre_comm: pre,
+                            slices,
+                            out_layout: Layout::Replicated,
+                        });
+                        flow = Flow::Replicated;
+                    }
+                    _ => unreachable!("stage heads are weighted"),
+                }
+                prev_out_bytes = model.stage_out_shape(stage).bytes();
+            }
+        }
+    }
+
+    // Assemble the output on the root.
+    let final_comm = match &flow {
+        Flow::Replicated => CommStep::None,
+        Flow::RowShard { ranges: owned, stage } => {
+            let out = model.stage_spatial_out_shape(*stage);
+            let row_bytes = (out.elems() / out.h * 4) as u64;
+            CommStep::Gather {
+                root: ROOT,
+                bytes_per_dev: owned.iter().map(|&(_, c)| c as u64 * row_bytes).collect(),
+            }
+        }
+        Flow::Partial { stage } => CommStep::ReduceTo {
+            root: ROOT,
+            bytes: model.out_shape(stage.op_idx).bytes(),
+        },
+    };
+
+    Plan {
+        model_name: model.name.clone(),
+        strategy: Strategy::Iop,
+        m,
+        stages: out_stages,
+        final_comm,
+    }
+}
+
+fn patch_broadcast(step: CommStep, bytes: u64) -> CommStep {
+    match step {
+        CommStep::Broadcast { root, .. } => CommStep::Broadcast { root, bytes },
+        other => other,
+    }
+}
+
+/// Helper: per-device byte sizes of an OC-sharded stage output (used by
+/// tests and the executor).
+pub fn oc_out_bytes(model: &Model, stage: Stage, rs: &[(usize, usize)]) -> Vec<u64> {
+    oc_shard_bytes_all(model, stage, rs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    fn all_pairs_segmentation(n: usize) -> Vec<Segment> {
+        let mut v = Vec::new();
+        let mut i = 0;
+        while i + 1 < n {
+            v.push(Segment::Pair(i));
+            i += 2;
+        }
+        if i < n {
+            v.push(Segment::Single(i));
+        }
+        v
+    }
+
+    #[test]
+    fn lenet_pairable_chain() {
+        let m = zoo::lenet();
+        let st = m.stages();
+        // conv1->conv2 (through pool), conv2->fc1 (through pool+flatten),
+        // fc1->fc2, fc2->fc3 all pairable
+        for i in 0..st.len() - 1 {
+            assert!(pairable(&m, st[i], st[i + 1]), "stages {i},{}", i + 1);
+        }
+    }
+
+    #[test]
+    fn pair_has_no_internal_comm() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let segs = all_pairs_segmentation(model.stages().len());
+        let p = plan_iop_with_segments(&model, &cluster, &segs);
+        p.validate(&model).unwrap();
+        // stage 1 (second of first pair) must have CommStep::None
+        assert!(matches!(p.stages[1].pre_comm, CommStep::None));
+        // and its slices must be IC
+        assert!(p.stages[1]
+            .slices
+            .iter()
+            .all(|s| matches!(s, SliceKind::Ic { .. } | SliceKind::Idle)));
+    }
+
+    #[test]
+    fn ic_blocks_align_with_oc_blocks() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let segs = vec![
+            Segment::Pair(0), // conv1 OC + conv2 IC
+            Segment::Pair(2), // fc1 OC + fc2 IC
+            Segment::Single(4),
+        ];
+        let p = plan_iop_with_segments(&model, &cluster, &segs);
+        p.validate(&model).unwrap();
+        // conv1 OC over 6 channels; conv2 IC over 6 channels: aligned 1:1
+        for (a, b) in p.stages[0].slices.iter().zip(&p.stages[1].slices) {
+            if let (SliceKind::Oc { start, count }, SliceKind::Ic { start: s2, count: c2 }) = (a, b)
+            {
+                assert_eq!((start, count), (s2, c2));
+            }
+        }
+    }
+
+    #[test]
+    fn conv_to_fc_pair_scales_blocks_by_plane() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        // pair conv2 (stage 1) with fc1 (stage 2)
+        let segs = vec![Segment::Single(0), Segment::Pair(1), Segment::Single(3), Segment::Single(4)];
+        let p = plan_iop_with_segments(&model, &cluster, &segs);
+        p.validate(&model).unwrap();
+        // conv2: 16 channels -> fc1: 400 features; scale = 25
+        let a = &p.stages[1].slices;
+        let b = &p.stages[2].slices;
+        for (sa, sb) in a.iter().zip(b) {
+            if let (SliceKind::Oc { start, count }, SliceKind::Ic { start: s2, count: c2 }) =
+                (sa, sb)
+            {
+                assert_eq!(*s2, start * 25);
+                assert_eq!(*c2, count * 25);
+            }
+        }
+    }
+
+    #[test]
+    fn all_singles_matches_coedge_structure() {
+        let model = zoo::vgg11();
+        let cluster = profiles::paper_default();
+        let segs: Vec<Segment> = (0..model.stages().len()).map(Segment::Single).collect();
+        let p = plan_iop_with_segments(&model, &cluster, &segs);
+        p.validate(&model).unwrap();
+        let co = crate::partition::coedge::plan_coedge(&model, &cluster);
+        // same slices and comm tags stage by stage
+        for (a, b) in p.stages.iter().zip(&co.stages) {
+            assert_eq!(a.slices, b.slices);
+            assert_eq!(a.pre_comm.tag(), b.pre_comm.tag());
+        }
+    }
+
+    #[test]
+    fn pair_reduces_connections_vs_oc() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let segs = all_pairs_segmentation(model.stages().len());
+        let iop = plan_iop_with_segments(&model, &cluster, &segs);
+        let oc = crate::partition::oc::plan_oc(&model, &cluster);
+        assert!(
+            iop.total_connections() < oc.total_connections(),
+            "iop={} oc={}",
+            iop.total_connections(),
+            oc.total_connections()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_segmentation_panics() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        plan_iop_with_segments(&model, &cluster, &[Segment::Pair(0)]);
+    }
+}

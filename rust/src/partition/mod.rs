@@ -1,0 +1,12 @@
+//! Partition planning: the three strategies of §5 (OC, CoEdge, IOP), the
+//! plan IR they share, and the supporting integer-allocation / row-range
+//! arithmetic.
+
+pub mod coedge;
+pub mod iop;
+pub mod oc;
+pub mod plan;
+pub mod rows;
+pub mod split;
+
+pub use plan::{CommStep, Layout, Plan, Segment, SliceKind, StagePlan, Strategy};

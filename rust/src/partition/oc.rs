@@ -1,0 +1,169 @@
+//! The **OC baseline** planner: every weighted op is partitioned on its
+//! output-channel dimension, proportionally to device compute capability
+//! (the original two-GPU AlexNet scheme, generalized to m devices).
+//!
+//! Consequence encoded here: each stage consumes the *full* input (an OC
+//! shard of a conv needs every input channel), so every stage must be
+//! preceded by an AllGather of the previous stage's shards — `m(m-1)`
+//! connections per stage. This is the communication the paper's IOP
+//! removes.
+
+use super::plan::{CommStep, Layout, Plan, SliceKind, StagePlan, Strategy};
+use super::split::{proportional_split, ranges};
+use crate::device::Cluster;
+use crate::model::{Model, Stage};
+
+/// Bytes held by device `j` of a stage output sharded on channels:
+/// `count` channels of the weighted op's `c_out`, scaled through the
+/// passthrough tail (pool shrinks H/W; flatten keeps the block contiguous).
+pub fn oc_shard_bytes(model: &Model, stage: Stage, count: usize) -> u64 {
+    let out = model.stage_out_shape(stage);
+    let c_out = model.ops[stage.op_idx].c_out().expect("weighted stage");
+    let elems_per_channel = out.elems() / c_out;
+    (count * elems_per_channel * 4) as u64
+}
+
+/// Per-device shard bytes for a whole channel tiling of a stage output.
+pub fn oc_shard_bytes_all(model: &Model, stage: Stage, rs: &[(usize, usize)]) -> Vec<u64> {
+    rs.iter()
+        .map(|&(_, c)| oc_shard_bytes(model, stage, c))
+        .collect()
+}
+
+/// Build the layer-by-layer OC plan.
+pub fn plan_oc(model: &Model, cluster: &Cluster) -> Plan {
+    let m = cluster.m();
+    let shares = cluster.compute_shares();
+    let mut stages = Vec::new();
+    // (channel ranges, producing stage) of the previous stage's output
+    let mut prev: Option<(Vec<(usize, usize)>, Stage)> = None;
+
+    for &stage in model.stages() {
+        let op = &model.ops[stage.op_idx];
+        let c_out = op.c_out().expect("stage heads are weighted");
+        let counts = proportional_split(c_out, &shares);
+        let rs = ranges(&counts);
+        let slices: Vec<SliceKind> = rs
+            .iter()
+            .map(|&(start, count)| {
+                if count == 0 {
+                    SliceKind::Idle
+                } else {
+                    SliceKind::Oc { start, count }
+                }
+            })
+            .collect();
+
+        // Every stage needs the full previous activation: AllGather the
+        // previous shards (the input image itself is replicated).
+        let pre_comm = match &prev {
+            None => CommStep::None,
+            Some((prev_rs, prev_stage)) => CommStep::AllGather {
+                bytes_per_dev: oc_shard_bytes_all(model, *prev_stage, prev_rs),
+            },
+        };
+
+        stages.push(StagePlan {
+            stage,
+            pre_comm,
+            slices,
+            out_layout: Layout::OcShard(rs.clone()),
+        });
+        prev = Some((rs, stage));
+    }
+
+    // Assemble the classifier output on device 0.
+    let final_comm = match &prev {
+        Some((prev_rs, prev_stage)) => CommStep::Gather {
+            root: 0,
+            bytes_per_dev: oc_shard_bytes_all(model, *prev_stage, prev_rs),
+        },
+        None => CommStep::None,
+    };
+
+    Plan {
+        model_name: model.name.clone(),
+        strategy: Strategy::Oc,
+        m,
+        stages,
+        final_comm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    #[test]
+    fn plan_is_valid_for_all_models() {
+        let cluster = profiles::paper_default();
+        for m in zoo::all_models() {
+            let p = plan_oc(&m, &cluster);
+            p.validate(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn every_interior_stage_allgathers() {
+        let model = zoo::lenet();
+        let p = plan_oc(&model, &profiles::paper_default());
+        assert!(matches!(p.stages[0].pre_comm, CommStep::None));
+        for s in &p.stages[1..] {
+            assert!(
+                matches!(s.pre_comm, CommStep::AllGather { .. }),
+                "stage {:?} should allgather",
+                s.stage
+            );
+        }
+        assert!(matches!(p.final_comm, CommStep::Gather { .. }));
+    }
+
+    #[test]
+    fn connection_count_is_m_m1_per_interior_stage() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let p = plan_oc(&model, &cluster);
+        let m = cluster.m();
+        // 5 stages: 4 interior AllGathers (m(m-1) each) + final gather (m-1)
+        assert_eq!(p.total_connections(), 4 * m * (m - 1) + (m - 1));
+    }
+
+    #[test]
+    fn allgather_bytes_match_activation_size() {
+        let model = zoo::lenet();
+        let p = plan_oc(&model, &profiles::paper_default());
+        // stage 1's pre-AllGather moves exactly stage 0's full output,
+        // (m-1) times over.
+        let stage0_out = model.stage_out_shape(model.stages()[0]);
+        if let CommStep::AllGather { bytes_per_dev } = &p.stages[1].pre_comm {
+            let total: u64 = bytes_per_dev.iter().sum();
+            assert_eq!(total, stage0_out.bytes());
+        } else {
+            panic!("expected allgather");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_shares_skew_slices() {
+        let model = zoo::vgg11();
+        let cluster = profiles::heterogeneous();
+        let p = plan_oc(&model, &cluster);
+        p.validate(&model).unwrap();
+        // fastest device gets the largest channel count on a wide layer
+        let wide = &p.stages[4]; // 512-channel conv
+        let counts: Vec<usize> = wide.slices.iter().map(|s| s.count()).collect();
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+    }
+
+    #[test]
+    fn shard_bytes_scale_through_tail() {
+        let model = zoo::lenet();
+        let stages = model.stages();
+        // stage 1 = conv2+pool2+flatten: 16 channels -> 400 features,
+        // so 4 channels -> 4 x (5x5) x 4 bytes.
+        let b = oc_shard_bytes(&model, stages[1], 4);
+        assert_eq!(b, (4 * 25 * 4) as u64);
+    }
+}

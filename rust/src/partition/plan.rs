@@ -1,0 +1,520 @@
+//! Partition plan IR — the common language between the planners
+//! (`oc`/`coedge`/`iop`), the cost model, the discrete-event simulator, and
+//! the distributed executor.
+//!
+//! A `Plan` assigns, per *stage* (weighted op + its passthrough tail, see
+//! `model::graph`), a slice of work to every device plus the communication
+//! step required to make the stage's inputs available (`pre_comm`). The
+//! final assembly of the network output is `final_comm`.
+//!
+//! Layout is the activation's distribution state between stages; comm steps
+//! are layout *transitions*. This is how the paper's central observation is
+//! encoded: an OC-partitioned producer followed by an IC-partitioned
+//! consumer is the identity transition (`CommStep::None`).
+
+use crate::model::graph::Stage;
+use crate::model::Model;
+use crate::util::json::Json;
+
+/// Partitioning strategy (the three compared in §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Layer-by-layer output-channel partitioning (AlexNet baseline).
+    Oc,
+    /// CoEdge-style feature-map H partitioning (conv only, FC on root).
+    CoEdge,
+    /// Interleaved Operator Partitioning with greedy segmentation (ours).
+    Iop,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Oc => "OC",
+            Strategy::CoEdge => "CoEdge",
+            Strategy::Iop => "IOP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "oc" => Some(Strategy::Oc),
+            "coedge" => Some(Strategy::CoEdge),
+            "iop" => Some(Strategy::Iop),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::Oc, Strategy::CoEdge, Strategy::Iop]
+    }
+}
+
+/// Distribution state of an activation across the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layout {
+    /// Every device holds the full activation.
+    Replicated,
+    /// Device `j` holds channel block `ranges[j]` (over channels, or over
+    /// flattened features after a `Flatten`).
+    OcShard(Vec<(usize, usize)>),
+    /// Device `j` holds output-row block `ranges[j]`.
+    RowShard(Vec<(usize, usize)>),
+    /// Every device holds a full-shape *partial sum* (IC-partitioned
+    /// producer); values must be reduced before use.
+    Partial,
+    /// Only device `root` holds the activation.
+    RootOnly(usize),
+}
+
+/// Work slice of one device for one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceKind {
+    /// The entire stage (solo execution).
+    Full,
+    /// Output channels `[start, start+count)`.
+    Oc { start: usize, count: usize },
+    /// Input channels `[start, start+count)` — produces a partial sum over
+    /// all output channels.
+    Ic { start: usize, count: usize },
+    /// Output rows `[start, start+count)` (of the stage's *final* output,
+    /// i.e. after the passthrough tail).
+    Rows { start: usize, count: usize },
+    /// The entire stage, redundantly, on every device (CoEdge's
+    /// unpartitioned FC phase: activations are broadcast + concatenated and
+    /// each device evaluates the classifier in full — Fig. 3).
+    Replicate,
+    /// No work this stage.
+    Idle,
+}
+
+impl SliceKind {
+    /// Fraction of the stage's total work this slice represents.
+    pub fn work_fraction(&self, denom: usize) -> f64 {
+        match self {
+            SliceKind::Full | SliceKind::Replicate => 1.0,
+            SliceKind::Idle => 0.0,
+            SliceKind::Oc { count, .. }
+            | SliceKind::Ic { count, .. }
+            | SliceKind::Rows { count, .. } => *count as f64 / denom as f64,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        match self {
+            SliceKind::Oc { count, .. }
+            | SliceKind::Ic { count, .. }
+            | SliceKind::Rows { count, .. } => *count,
+            _ => 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        matches!(self, SliceKind::Idle) || self.count() == 0 && !matches!(self, SliceKind::Full)
+    }
+}
+
+/// A point-to-point transfer: `(from, to, bytes)`.
+pub type Xfer = (usize, usize, u64);
+
+/// Communication step — a layout transition on the shared medium. Every
+/// message (unicast transfer) pays the connection-establishment latency
+/// `t_est` plus `bytes / b` (paper eq. 8); the shared medium serializes
+/// messages (DESIGN.md §2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommStep {
+    /// No communication (the IOP intra-pair case, or locally satisfiable
+    /// re-layouts such as Replicated → any shard).
+    None,
+    /// Every device broadcasts its shard to all `m-1` peers
+    /// (shard → Replicated). `bytes_per_dev[j]` is device j's shard size.
+    AllGather { bytes_per_dev: Vec<u64> },
+    /// Partial sums are sent to `root`, reduced, and the result broadcast
+    /// back (Partial → Replicated). 2(m-1) messages of `bytes`.
+    ReduceBroadcast { root: usize, bytes: u64 },
+    /// Partial sums are sent to `root` and reduced there
+    /// (Partial → RootOnly). (m-1) messages of `bytes`.
+    ReduceTo { root: usize, bytes: u64 },
+    /// Shards are gathered on `root` (shard → RootOnly).
+    Gather { root: usize, bytes_per_dev: Vec<u64> },
+    /// `root` sends the full activation to everyone (RootOnly → Replicated).
+    Broadcast { root: usize, bytes: u64 },
+    /// Row-neighbour halo exchange (RowShard → RowShard with halos).
+    HaloExchange { xfers: Vec<Xfer> },
+}
+
+impl CommStep {
+    /// All unicast messages implied by this step, as (from, to, bytes).
+    pub fn messages(&self, m: usize) -> Vec<Xfer> {
+        match self {
+            CommStep::None => vec![],
+            CommStep::AllGather { bytes_per_dev } => {
+                let mut out = Vec::new();
+                for (j, &b) in bytes_per_dev.iter().enumerate() {
+                    if b == 0 {
+                        continue;
+                    }
+                    for k in 0..m {
+                        if k != j {
+                            out.push((j, k, b));
+                        }
+                    }
+                }
+                out
+            }
+            CommStep::ReduceBroadcast { root, bytes } => {
+                let mut out = Vec::new();
+                for j in 0..m {
+                    if j != *root {
+                        out.push((j, *root, *bytes));
+                    }
+                }
+                for j in 0..m {
+                    if j != *root {
+                        out.push((*root, j, *bytes));
+                    }
+                }
+                out
+            }
+            CommStep::ReduceTo { root, bytes } => (0..m)
+                .filter(|j| j != root)
+                .map(|j| (j, *root, *bytes))
+                .collect(),
+            CommStep::Gather {
+                root,
+                bytes_per_dev,
+            } => bytes_per_dev
+                .iter()
+                .enumerate()
+                .filter(|(j, &b)| *j != *root && b > 0)
+                .map(|(j, &b)| (j, *root, b))
+                .collect(),
+            CommStep::Broadcast { root, bytes } => (0..m)
+                .filter(|j| j != root)
+                .map(|j| (*root, j, *bytes))
+                .collect(),
+            CommStep::HaloExchange { xfers } => xfers.clone(),
+        }
+    }
+
+    /// Number of connections (t_est-bearing messages) — the quantity the
+    /// paper's IOP argument minimizes.
+    pub fn connections(&self, m: usize) -> usize {
+        self.messages(m).len()
+    }
+
+    /// Total bytes moved.
+    pub fn total_bytes(&self, m: usize) -> u64 {
+        self.messages(m).iter().map(|(_, _, b)| *b).sum()
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CommStep::None => "none",
+            CommStep::AllGather { .. } => "all_gather",
+            CommStep::ReduceBroadcast { .. } => "reduce_bcast",
+            CommStep::ReduceTo { .. } => "reduce_to",
+            CommStep::Gather { .. } => "gather",
+            CommStep::Broadcast { .. } => "broadcast",
+            CommStep::HaloExchange { .. } => "halo",
+        }
+    }
+}
+
+/// A segmentation entry (paper §4, eq. 9): either a single stage or an
+/// IOP-paired run of two adjacent stages. Indices refer to
+/// `Model::stages()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    /// Stage `i` alone (partitioned CoEdge-style).
+    Single(usize),
+    /// Stages `i` (OC) and `i+1` (IC) interleaved — no comm inside.
+    Pair(usize),
+}
+
+impl Segment {
+    pub fn first(&self) -> usize {
+        match self {
+            Segment::Single(i) | Segment::Pair(i) => *i,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Segment::Single(_) => 1,
+            Segment::Pair(_) => 2,
+        }
+    }
+}
+
+/// Check a segmentation tiles `n_stages` exactly, in order.
+pub fn validate_segments(segments: &[Segment], n_stages: usize) -> Result<(), String> {
+    let mut pos = 0;
+    for s in segments {
+        if s.first() != pos {
+            return Err(format!("segment at {} expected at {}", s.first(), pos));
+        }
+        pos += s.len();
+    }
+    if pos != n_stages {
+        return Err(format!("segments cover {pos} of {n_stages} stages"));
+    }
+    Ok(())
+}
+
+/// Per-stage plan entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    pub stage: Stage,
+    /// Communication required *before* this stage runs.
+    pub pre_comm: CommStep,
+    /// Per-device work slice.
+    pub slices: Vec<SliceKind>,
+    /// Activation layout after this stage (before the next pre_comm).
+    pub out_layout: Layout,
+}
+
+/// A complete partition plan for one model on one cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub model_name: String,
+    pub strategy: Strategy,
+    pub m: usize,
+    pub stages: Vec<StagePlan>,
+    /// Communication to assemble the network output on device 0.
+    pub final_comm: CommStep,
+}
+
+impl Plan {
+    /// Total connection count across the plan (paper's reduced-connections
+    /// claim is checked against this in the integration tests).
+    pub fn total_connections(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| s.pre_comm.connections(self.m))
+            .sum::<usize>()
+            + self.final_comm.connections(self.m)
+    }
+
+    /// Total bytes communicated.
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.pre_comm.total_bytes(self.m))
+            .sum::<u64>()
+            + self.final_comm.total_bytes(self.m)
+    }
+
+    /// Validate the paper's structural constraints (eqs. 2–5) against the
+    /// model: every stage has exactly one partition dimension, and slice
+    /// ranges tile their dimension exactly.
+    pub fn validate(&self, model: &Model) -> Result<(), String> {
+        if self.stages.len() != model.stages().len() {
+            return Err(format!(
+                "plan has {} stages, model has {}",
+                self.stages.len(),
+                model.stages().len()
+            ));
+        }
+        for (si, sp) in self.stages.iter().enumerate() {
+            if sp.slices.len() != self.m {
+                return Err(format!("stage {si}: {} slices for m={}", sp.slices.len(), self.m));
+            }
+            let op = &model.ops[sp.stage.op_idx];
+            // Rows are defined over the spatial output (before flatten).
+            let out_shape = model.stage_spatial_out_shape(sp.stage);
+            // eq. 2: one dimension per stage — all non-idle slices must be
+            // the same variant.
+            let mut kinds: Vec<&'static str> = sp
+                .slices
+                .iter()
+                .filter(|s| !matches!(s, SliceKind::Idle))
+                .map(|s| match s {
+                    SliceKind::Full => "full",
+                    SliceKind::Replicate => "replicate",
+                    SliceKind::Oc { .. } => "oc",
+                    SliceKind::Ic { .. } => "ic",
+                    SliceKind::Rows { .. } => "rows",
+                    SliceKind::Idle => unreachable!(),
+                })
+                .collect();
+            kinds.dedup();
+            if kinds.len() > 1 {
+                return Err(format!("stage {si}: mixed slice kinds {kinds:?} (violates eq. 2)"));
+            }
+            // eqs. 3–5: exact tiling of the partitioned dimension.
+            match kinds.first() {
+                Some(&"oc") => {
+                    let dim = op.c_out().ok_or(format!("stage {si}: OC slice on unweighted op"))?;
+                    check_tiling(si, "OC", dim, sp.slices.iter())?;
+                }
+                Some(&"ic") => {
+                    let dim = op.c_in().ok_or(format!("stage {si}: IC slice on unweighted op"))?;
+                    check_tiling(si, "IC", dim, sp.slices.iter())?;
+                }
+                Some(&"rows") => {
+                    check_tiling(si, "H", out_shape.h, sp.slices.iter())?;
+                }
+                Some(&"full") => {
+                    let n_full = sp
+                        .slices
+                        .iter()
+                        .filter(|s| matches!(s, SliceKind::Full))
+                        .count();
+                    if n_full != 1 {
+                        return Err(format!("stage {si}: {n_full} Full slices (must be exactly 1)"));
+                    }
+                }
+                Some(&"replicate") => {
+                    // every device must replicate (no partial redundancy)
+                    if !sp.slices.iter().all(|s| matches!(s, SliceKind::Replicate)) {
+                        return Err(format!("stage {si}: mixed Replicate/other slices"));
+                    }
+                }
+                _ => return Err(format!("stage {si}: all devices idle")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Human/machine-readable plan description.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model_name.clone())),
+            ("strategy", Json::str(self.strategy.name())),
+            ("m", Json::num(self.m as f64)),
+            ("connections", Json::num(self.total_connections() as f64)),
+            ("comm_bytes", Json::num(self.total_comm_bytes() as f64)),
+            (
+                "stages",
+                Json::arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("op", Json::num(s.stage.op_idx as f64)),
+                                ("pre_comm", Json::str(s.pre_comm.tag())),
+                                (
+                                    "slices",
+                                    Json::arr(
+                                        s.slices
+                                            .iter()
+                                            .map(|sl| {
+                                                Json::str(match sl {
+                                                    SliceKind::Full => "full".to_string(),
+                                                    SliceKind::Replicate => "replicate".to_string(),
+                                                    SliceKind::Idle => "idle".to_string(),
+                                                    SliceKind::Oc { start, count } => {
+                                                        format!("oc[{start}+{count}]")
+                                                    }
+                                                    SliceKind::Ic { start, count } => {
+                                                        format!("ic[{start}+{count}]")
+                                                    }
+                                                    SliceKind::Rows { start, count } => {
+                                                        format!("rows[{start}+{count}]")
+                                                    }
+                                                })
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn check_tiling<'a>(
+    si: usize,
+    dim_name: &str,
+    dim: usize,
+    slices: impl Iterator<Item = &'a SliceKind>,
+) -> Result<(), String> {
+    let mut ranges: Vec<(usize, usize)> = slices
+        .filter_map(|s| match s {
+            SliceKind::Oc { start, count }
+            | SliceKind::Ic { start, count }
+            | SliceKind::Rows { start, count } => Some((*start, *count)),
+            _ => None,
+        })
+        .filter(|(_, c)| *c > 0)
+        .collect();
+    ranges.sort();
+    let mut pos = 0;
+    for (s, c) in &ranges {
+        if *s != pos {
+            return Err(format!(
+                "stage {si}: {dim_name} ranges not contiguous at {pos} (got start {s})"
+            ));
+        }
+        pos += c;
+    }
+    if pos != dim {
+        return Err(format!(
+            "stage {si}: {dim_name} ranges cover {pos} of {dim} (violates eqs. 3-5)"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allgather_messages() {
+        let c = CommStep::AllGather {
+            bytes_per_dev: vec![10, 20, 0],
+        };
+        let msgs = c.messages(3);
+        // device 2 has nothing to send; devices 0 and 1 send to 2 peers each
+        assert_eq!(msgs.len(), 4);
+        assert_eq!(c.total_bytes(3), 2 * 10 + 2 * 20);
+        assert_eq!(c.connections(3), 4);
+    }
+
+    #[test]
+    fn reduce_broadcast_connection_count() {
+        // The IOP claim: 2(m-1) connections vs AllGather's m(m-1).
+        let m = 3;
+        let rb = CommStep::ReduceBroadcast { root: 0, bytes: 100 };
+        let ag = CommStep::AllGather {
+            bytes_per_dev: vec![100; m],
+        };
+        assert_eq!(rb.connections(m), 2 * (m - 1));
+        assert_eq!(ag.connections(m), m * (m - 1));
+    }
+
+    #[test]
+    fn gather_excludes_root() {
+        let g = CommStep::Gather {
+            root: 1,
+            bytes_per_dev: vec![5, 7, 9],
+        };
+        let msgs = g.messages(3);
+        assert_eq!(msgs, vec![(0, 1, 5), (2, 1, 9)]);
+    }
+
+    #[test]
+    fn broadcast_and_reduce_to() {
+        assert_eq!(
+            CommStep::Broadcast { root: 0, bytes: 3 }.messages(3),
+            vec![(0, 1, 3), (0, 2, 3)]
+        );
+        assert_eq!(
+            CommStep::ReduceTo { root: 2, bytes: 4 }.messages(3),
+            vec![(0, 2, 4), (1, 2, 4)]
+        );
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("IOP"), Some(Strategy::Iop));
+        assert_eq!(Strategy::parse("coedge"), Some(Strategy::CoEdge));
+        assert_eq!(Strategy::parse("oc"), Some(Strategy::Oc));
+        assert_eq!(Strategy::parse("xyz"), None);
+    }
+}

@@ -1,0 +1,189 @@
+//! Row-range arithmetic for feature-map (H) partitioning.
+//!
+//! CoEdge-style partitioning slices the *output* rows of each stage; the
+//! rows of the stage *input* a device must hold follow from the receptive
+//! field of the stage's ops. Walking the stage backwards (pool ← conv)
+//! yields the exact input interval, from which halo-exchange volumes are
+//! derived: the part of the interval owned by a row-neighbour device is
+//! the halo that has to move.
+
+use crate::model::graph::Stage;
+use crate::model::{Model, OpKind};
+
+/// Input rows (unclamped, may extend into padding) required to compute
+/// output rows `[a, b)` of `stage`. Returns a signed interval `[lo, hi)`.
+pub fn input_rows_needed(model: &Model, stage: Stage, a: usize, b: usize) -> (isize, isize) {
+    let mut lo = a as isize;
+    let mut hi = b as isize;
+    // walk backwards through the stage's ops
+    for idx in (stage.op_idx..stage.tail_end).rev() {
+        match model.ops[idx].kind {
+            OpKind::MaxPool { k, stride } => {
+                hi = (hi - 1) * stride as isize + k as isize;
+                lo *= stride as isize;
+            }
+            OpKind::Conv2d {
+                k_h, stride, pad, ..
+            } => {
+                hi = (hi - 1) * stride as isize + k_h as isize - pad as isize;
+                lo = lo * stride as isize - pad as isize;
+            }
+            OpKind::Relu => {}
+            // Flatten is a pure re-view: row ranges are defined over the
+            // spatial output (before flatten), so it is the identity here.
+            OpKind::Flatten => {}
+            OpKind::Dense { .. } => {
+                panic!("row partitioning through {:?}", model.ops[idx].kind)
+            }
+        }
+    }
+    (lo, hi)
+}
+
+/// Same, clamped to the valid input rows `[0, h_in)` (padding rows are
+/// materialized locally as zeros, they never travel).
+pub fn input_rows_needed_clamped(
+    model: &Model,
+    stage: Stage,
+    a: usize,
+    b: usize,
+) -> (usize, usize) {
+    let h_in = model.in_shape(stage.op_idx).h;
+    let (lo, hi) = input_rows_needed(model, stage, a, b);
+    (
+        lo.clamp(0, h_in as isize) as usize,
+        hi.clamp(0, h_in as isize) as usize,
+    )
+}
+
+/// A halo transfer with full row detail (consumed by the executor, which
+/// must know *which* input rows move, not just how many bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HaloXfer {
+    pub from: usize,
+    pub to: usize,
+    /// Input rows `[row_start, row_start + row_count)` of the stage input.
+    pub row_start: usize,
+    pub row_count: usize,
+}
+
+/// Detailed halo transfers needed before `stage` runs row-partitioned with
+/// output ranges `out_ranges`, when the stage input is row-owned according
+/// to `owned_in_ranges` (both per device, `(start, count)`).
+pub fn halo_plan(
+    model: &Model,
+    stage: Stage,
+    out_ranges: &[(usize, usize)],
+    owned_in_ranges: &[(usize, usize)],
+) -> Vec<HaloXfer> {
+    let mut xfers = Vec::new();
+    for (j, &(a, cnt)) in out_ranges.iter().enumerate() {
+        if cnt == 0 {
+            continue;
+        }
+        let (lo, hi) = input_rows_needed_clamped(model, stage, a, a + cnt);
+        for (j2, &(o_s, o_c)) in owned_in_ranges.iter().enumerate() {
+            if j2 == j || o_c == 0 {
+                continue;
+            }
+            let ov_lo = lo.max(o_s);
+            let ov_hi = hi.min(o_s + o_c);
+            if ov_hi > ov_lo {
+                xfers.push(HaloXfer {
+                    from: j2,
+                    to: j,
+                    row_start: ov_lo,
+                    row_count: ov_hi - ov_lo,
+                });
+            }
+        }
+    }
+    xfers
+}
+
+/// Byte-level view of [`halo_plan`] — what the planners/cost model price.
+pub fn halo_xfers(
+    model: &Model,
+    stage: Stage,
+    out_ranges: &[(usize, usize)],
+    owned_in_ranges: &[(usize, usize)],
+) -> Vec<(usize, usize, u64)> {
+    let in_shape = model.in_shape(stage.op_idx);
+    let row_bytes = (in_shape.c * in_shape.w * 4) as u64;
+    halo_plan(model, stage, out_ranges, owned_in_ranges)
+        .into_iter()
+        .map(|h| (h.from, h.to, h.row_count as u64 * row_bytes))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn conv_receptive_field() {
+        // LeNet stage 0: conv1 (5x5, pad 2) + pool1 (2x2 s2).
+        let m = zoo::lenet();
+        let st = m.stages()[0];
+        // pool output row 0 needs conv rows [0,2), which (5x5 conv, pad 2,
+        // stride 1) need input rows [0*1-2, 1+5-2) = [-2, 4) -> clamped.
+        let (lo, hi) = input_rows_needed(&m, st, 0, 1);
+        assert_eq!((lo, hi), (-2, 4));
+        let (lo, hi) = input_rows_needed_clamped(&m, st, 0, 1);
+        assert_eq!((lo, hi), (0, 4));
+    }
+
+    #[test]
+    fn pure_conv_stage() {
+        // VGG conv stage without pool: 3x3 pad 1 -> rows [a-1, b+1)
+        let m = zoo::vgg11();
+        let stages = m.stages();
+        // stage 2 = conv3_1 (no pool behind it)
+        let st = stages
+            .iter()
+            .find(|s| m.ops[s.op_idx].name == "conv3_1")
+            .copied()
+            .unwrap();
+        let (lo, hi) = input_rows_needed(&m, st, 10, 20);
+        assert_eq!((lo, hi), (9, 21));
+    }
+
+    #[test]
+    fn halo_volume_between_neighbours() {
+        let m = zoo::vgg11();
+        let st = m
+            .stages()
+            .iter()
+            .find(|s| m.ops[s.op_idx].name == "conv3_1")
+            .copied()
+            .unwrap();
+        let in_shape = m.in_shape(st.op_idx); // 128 x 56 x 56
+        assert_eq!((in_shape.c, in_shape.h, in_shape.w), (128, 56, 56));
+        // 3 devices, even rows: each needs 1 halo row from each neighbour.
+        let out = [(0usize, 19usize), (19, 19), (38, 18)];
+        let owned = out; // conv3_1 preserves H (pad 1), input owned = same split
+        let x = halo_xfers(&m, st, &out, &owned);
+        let row_bytes = 128 * 56 * 4;
+        // dev0 needs row 19 from dev1; dev1 needs row 18 from dev0 and row
+        // 38 from dev2; dev2 needs row 37 from dev1 -> 4 transfers.
+        assert_eq!(x.len(), 4);
+        assert!(x.iter().all(|&(_, _, b)| b == row_bytes));
+    }
+
+    #[test]
+    fn no_halo_when_pool_aligned() {
+        // LeNet stage 0 with pool: output rows tile 14; device 1's input
+        // needs extend into device 0's rows (5x5 conv), so halos exist.
+        let m = zoo::lenet();
+        let st = m.stages()[0];
+        let out = [(0usize, 5usize), (5, 5), (10, 4)];
+        let owned = [(0usize, 10usize), (10, 10), (20, 8)];
+        let x = halo_xfers(&m, st, &out, &owned);
+        assert!(!x.is_empty());
+        // all transfers are between row-neighbours
+        for &(f, t, _) in &x {
+            assert_eq!((f as isize - t as isize).abs(), 1, "{f}->{t}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Proportional integer allocation — the numeric kernel behind the
+//! partition-size constraints (paper eqs. 3–5): partition a dimension of
+//! size `n` across `m` devices proportionally to their compute shares so
+//! the parts tile the dimension exactly (`Σ parts == n`, every part ≥ 0).
+//!
+//! Uses the largest-remainder (Hamilton) method: floor the real quotas,
+//! then hand the leftover units to the largest fractional remainders
+//! (ties broken by device index, so allocation is deterministic).
+
+/// Split `n` units proportionally to `shares` (need not be normalized).
+/// Returns per-device counts summing to exactly `n`.
+pub fn proportional_split(n: usize, shares: &[f64]) -> Vec<usize> {
+    assert!(!shares.is_empty(), "need at least one share");
+    assert!(shares.iter().all(|s| *s >= 0.0), "shares must be >= 0");
+    let total: f64 = shares.iter().sum();
+    assert!(total > 0.0, "shares must not all be zero");
+
+    let quotas: Vec<f64> = shares.iter().map(|s| n as f64 * s / total).collect();
+    let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut leftover = n - assigned;
+
+    // Largest fractional remainder first; ties by lower index.
+    let mut order: Vec<usize> = (0..shares.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    for &i in order.iter().cycle() {
+        if leftover == 0 {
+            break;
+        }
+        counts[i] += 1;
+        leftover -= 1;
+    }
+    counts
+}
+
+/// Split with a per-part minimum for parts that receive anything at all:
+/// parts smaller than `min_part` are zeroed and their units redistributed
+/// (CoEdge's "minimum number of rows" rule, which avoids slivers whose halo
+/// overhead exceeds their compute value).
+pub fn proportional_split_min(n: usize, shares: &[f64], min_part: usize) -> Vec<usize> {
+    let mut active: Vec<bool> = vec![true; shares.len()];
+    loop {
+        let eff: Vec<f64> = shares
+            .iter()
+            .zip(&active)
+            .map(|(s, a)| if *a { *s } else { 0.0 })
+            .collect();
+        if eff.iter().sum::<f64>() <= 0.0 {
+            // nothing active: give everything to the largest share
+            let mut counts = vec![0; shares.len()];
+            let best = (0..shares.len())
+                .max_by(|&a, &b| shares[a].partial_cmp(&shares[b]).unwrap())
+                .unwrap();
+            counts[best] = n;
+            return counts;
+        }
+        let counts = proportional_split(n, &eff);
+        // find active parts violating the minimum
+        if let Some(worst) = (0..counts.len())
+            .filter(|&i| active[i] && counts[i] > 0 && counts[i] < min_part)
+            .min_by_key(|&i| counts[i])
+        {
+            active[worst] = false;
+            continue;
+        }
+        // also deactivate zero-count actives so ranges stay contiguous
+        for i in 0..counts.len() {
+            if counts[i] == 0 {
+                active[i] = false;
+            }
+        }
+        return counts;
+    }
+}
+
+/// Convert counts to contiguous `(start, count)` ranges.
+pub fn ranges(counts: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(counts.len());
+    let mut start = 0;
+    for &c in counts {
+        out.push((start, c));
+        start += c;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_tiling() {
+        for n in [0usize, 1, 7, 64, 100, 4096] {
+            for shares in [vec![1.0, 1.0, 1.0], vec![2.0, 1.0, 0.5], vec![1.0]] {
+                let c = proportional_split(n, &shares);
+                assert_eq!(c.iter().sum::<usize>(), n, "n={n} shares={shares:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn proportionality() {
+        let c = proportional_split(100, &[2.0, 1.0, 1.0]);
+        assert_eq!(c, vec![50, 25, 25]);
+        let c = proportional_split(10, &[1.0, 1.0, 1.0]);
+        assert_eq!(c.iter().sum::<usize>(), 10);
+        assert!(c.iter().all(|&x| (3..=4).contains(&x)));
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let a = proportional_split(10, &[1.0, 1.0, 1.0]);
+        let b = proportional_split(10, &[1.0, 1.0, 1.0]);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![4, 3, 3]); // first device wins the tie
+    }
+
+    #[test]
+    fn min_part_redistributes() {
+        // 10 rows over shares (10, 10, 1): naive gives the slow device 0–1
+        // rows; with min_part=2 it is dropped entirely.
+        let c = proportional_split_min(10, &[10.0, 10.0, 1.0], 2);
+        assert_eq!(c.iter().sum::<usize>(), 10);
+        assert_eq!(c[2], 0);
+        let c = proportional_split_min(9, &[1.0, 1.0, 1.0], 2);
+        assert_eq!(c.iter().sum::<usize>(), 9);
+        assert!(c.iter().all(|&x| x == 0 || x >= 2));
+    }
+
+    #[test]
+    fn min_part_degenerate_single_winner() {
+        let c = proportional_split_min(1, &[1.0, 2.0, 1.5], 3);
+        assert_eq!(c.iter().sum::<usize>(), 1);
+        assert_eq!(c[1], 1); // largest share takes all
+    }
+
+    #[test]
+    fn ranges_contiguous() {
+        let r = ranges(&[4, 0, 3]);
+        assert_eq!(r, vec![(0, 4), (4, 0), (4, 3)]);
+    }
+
+    #[test]
+    fn zero_n() {
+        assert_eq!(proportional_split(0, &[1.0, 2.0]), vec![0, 0]);
+    }
+}

@@ -1,0 +1,84 @@
+//! High-level façade: one call from (model, cluster, strategy) to a plan,
+//! and from a plan to its cost — what the CLI, examples, and benches use.
+
+use crate::cost::{self, PlanCost};
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::{coedge, oc, Plan, Strategy};
+use crate::segmentation;
+
+/// Build the partition plan for a strategy (IOP uses the paper's greedy
+/// Algorithm 1 internally).
+pub fn plan(model: &Model, cluster: &Cluster, strategy: Strategy) -> Plan {
+    match strategy {
+        Strategy::Oc => oc::plan_oc(model, cluster),
+        Strategy::CoEdge => coedge::plan_coedge(model, cluster),
+        Strategy::Iop => segmentation::plan_iop(model, cluster),
+    }
+}
+
+/// Price a plan under the analytic model (P1).
+pub fn evaluate(model: &Model, cluster: &Cluster, plan: &Plan) -> PlanCost {
+    cost::evaluate(model, cluster, plan)
+}
+
+/// Plan + evaluate in one step.
+pub fn plan_and_evaluate(
+    model: &Model,
+    cluster: &Cluster,
+    strategy: Strategy,
+) -> (Plan, PlanCost) {
+    let p = plan(model, cluster, strategy);
+    let c = evaluate(model, cluster, &p);
+    (p, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    #[test]
+    fn all_strategies_produce_valid_plans() {
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            for s in Strategy::all() {
+                let p = plan(&m, &cluster, s);
+                p.validate(&m).unwrap();
+                let c = evaluate(&m, &cluster, &p);
+                assert!(c.total_secs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_ordering_iop_fastest_oc_slowest() {
+        // The headline shape of Fig. 4: IOP < CoEdge < OC on all three
+        // evaluation models.
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            let oc = plan_and_evaluate(&m, &cluster, Strategy::Oc).1.total_secs;
+            let co = plan_and_evaluate(&m, &cluster, Strategy::CoEdge).1.total_secs;
+            let iop = plan_and_evaluate(&m, &cluster, Strategy::Iop).1.total_secs;
+            assert!(iop < co, "{}: iop={iop} coedge={co}", m.name);
+            assert!(co < oc, "{}: coedge={co} oc={oc}", m.name);
+        }
+    }
+
+    #[test]
+    fn fig5_ordering_coedge_worst_memory() {
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            let co = plan_and_evaluate(&m, &cluster, Strategy::CoEdge)
+                .1
+                .memory
+                .peak_footprint();
+            let iop = plan_and_evaluate(&m, &cluster, Strategy::Iop)
+                .1
+                .memory
+                .peak_footprint();
+            assert!(iop < co, "{}: iop={iop} coedge={co}", m.name);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the coordinator (which loads the
+//! executables it names).
+//!
+//! Keys are semantic: `"{model}/central"` for whole-network executables
+//! and `"{model}/{strategy}/s{stage}/d{device}"` (+ `"/tail"` for
+//! IC-pair tails) for per-device shard executables generated from the
+//! plans the rust side exported via `iop emit-plans`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// One executable artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardEntry {
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Input shapes, in call order (activation first, then weights).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: String,
+    pub entries: BTreeMap<String, ShardEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: &str, json: &Json) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        let obj = json
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+        for (key, v) in obj {
+            let file = v
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("entry {key}: missing file"))?
+                .to_string();
+            let inputs = v
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("entry {key}: missing inputs"))?
+                .iter()
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            let output = parse_shape(v.get("output"))?;
+            entries.insert(
+                key.clone(),
+                ShardEntry {
+                    file,
+                    inputs,
+                    output,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_string(),
+            entries,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&ShardEntry> {
+        self.entries
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest has no entry '{key}'"))
+    }
+
+    /// Absolute-ish path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ShardEntry) -> String {
+        format!("{}/{}", self.dir, entry.file)
+    }
+
+    /// Keys for a model/strategy pair, in stage order.
+    pub fn shard_keys(&self, model: &str, strategy: &str) -> Vec<String> {
+        let prefix = format!("{model}/{strategy}/");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .cloned()
+            .collect()
+    }
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in shape")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let j = Json::parse(
+            r#"{"entries": {"lenet/central": {"file": "lenet_central.hlo.txt",
+                "inputs": [[1,28,28],[6,1,5,5],[6]], "output": [10]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json("artifacts", &j).unwrap();
+        let e = m.get("lenet/central").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.output, vec![10]);
+        assert_eq!(m.path_of(e), "artifacts/lenet_central.hlo.txt");
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn shard_keys_filtered_sorted() {
+        let j = Json::parse(
+            r#"{"entries": {
+                "lenet/oc/s0/d0": {"file": "a", "inputs": [], "output": [1]},
+                "lenet/oc/s0/d1": {"file": "b", "inputs": [], "output": [1]},
+                "lenet/iop/s0/d0": {"file": "c", "inputs": [], "output": [1]}
+            }}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(".", &j).unwrap();
+        assert_eq!(m.shard_keys("lenet", "oc").len(), 2);
+        assert_eq!(m.shard_keys("lenet", "iop").len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let j = Json::parse(r#"{"entries": {"x": {"file": "f"}}}"#).unwrap();
+        assert!(Manifest::from_json(".", &j).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime — loads and executes the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO *text*; see DESIGN.md §1 for why text, not
+//! serialized protos).
+//!
+//! Python never runs at inference time: `make artifacts` lowers the JAX/
+//! Pallas model once, and this module replays the resulting executables
+//! from the coordinator's hot path via the PJRT CPU client.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{LoadedModule, Runtime};
+pub use manifest::{Manifest, ShardEntry};

@@ -1,0 +1,360 @@
+//! Segment costs for the segmentation solvers.
+//!
+//! The cost of a segment depends on what the *previous* segment left
+//! behind — a row-sharded activation, full-shape partial sums, or a
+//! replicated tensor. [`BoundaryTag`] captures that state and the entry
+//! costs here mirror the transitions `partition::iop` emits one-for-one,
+//! so the DP over `(stage, tag)` prices exactly what the planner builds
+//! (asserted by `segmentation::tests::dp_matches_true_plan_cost`).
+//!
+//! The paper's greedy Algorithm 1 uses the *pairwise* comparators at the
+//! bottom (`pair_iop_cost_vs` / `pair_coedge_cost_vs`): both alternatives
+//! are charged to a common "replicated at exit" convention so the local
+//! comparison is fair.
+
+use crate::cost::comm::step_secs;
+use crate::cost::compute::stage_compute_wall;
+use crate::device::Cluster;
+use crate::model::{Model, OpKind, Stage};
+use crate::partition::coedge::{MIN_ROWS, ROOT};
+use crate::partition::plan::{CommStep, SliceKind};
+use crate::partition::rows::halo_xfers;
+use crate::partition::split::{proportional_split, proportional_split_min, ranges};
+
+/// Activation state at a segment boundary (after stage `i-1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoundaryTag {
+    /// Every device has the full activation (model input, after an FC
+    /// replicate stage, or after a pair's reduce+broadcast).
+    Rep,
+    /// Row-sharded (after a CoEdge-partitioned conv single).
+    Row,
+    /// Full-shape partial sums (after an IOP pair, pre-reduction).
+    Partial,
+}
+
+// ---------- shared split helpers ----------
+
+pub(crate) fn oc_slices(model: &Model, stage: Stage, cluster: &Cluster) -> Vec<SliceKind> {
+    let c_out = model.ops[stage.op_idx].c_out().unwrap();
+    ranges(&proportional_split(c_out, &cluster.compute_shares()))
+        .into_iter()
+        .map(|(start, count)| {
+            if count == 0 {
+                SliceKind::Idle
+            } else {
+                SliceKind::Oc { start, count }
+            }
+        })
+        .collect()
+}
+
+/// IC slices for pair stage B, aligned to stage A's OC blocks exactly as
+/// `plan_iop_with_segments` aligns them (scaled through a flatten).
+pub(crate) fn ic_slices_aligned(
+    model: &Model,
+    stage_a: Stage,
+    stage_b: Stage,
+    cluster: &Cluster,
+) -> Vec<SliceKind> {
+    let c_out_a = model.ops[stage_a.op_idx].c_out().unwrap();
+    let scale = match model.ops[stage_b.op_idx].kind {
+        OpKind::Dense { c_in, .. } => c_in / c_out_a,
+        _ => 1,
+    };
+    ranges(&proportional_split(c_out_a, &cluster.compute_shares()))
+        .into_iter()
+        .map(|(start, count)| {
+            if count == 0 {
+                SliceKind::Idle
+            } else {
+                SliceKind::Ic {
+                    start: start * scale,
+                    count: count * scale,
+                }
+            }
+        })
+        .collect()
+}
+
+pub(crate) fn row_ranges(model: &Model, stage: Stage, cluster: &Cluster) -> Vec<(usize, usize)> {
+    let h = model.stage_spatial_out_shape(stage).h;
+    ranges(&proportional_split_min(
+        h,
+        &cluster.compute_shares(),
+        MIN_ROWS.min(h),
+    ))
+}
+
+fn row_slices(rs: &[(usize, usize)]) -> Vec<SliceKind> {
+    rs.iter()
+        .map(|&(start, count)| {
+            if count == 0 {
+                SliceKind::Idle
+            } else {
+                SliceKind::Rows { start, count }
+            }
+        })
+        .collect()
+}
+
+/// AllGather step for the row-sharded output of stage `i-1`.
+fn row_allgather(model: &Model, cluster: &Cluster, prev_stage: Stage) -> CommStep {
+    let out = model.stage_spatial_out_shape(prev_stage);
+    let row_bytes = (out.elems() / out.h * 4) as u64;
+    let rs = row_ranges(model, prev_stage, cluster);
+    CommStep::AllGather {
+        bytes_per_dev: rs.iter().map(|&(_, c)| c as u64 * row_bytes).collect(),
+    }
+}
+
+/// ReduceBroadcast step for the raw partial output of stage `i-1`.
+fn partial_reduce(model: &Model, prev_stage: Stage) -> CommStep {
+    CommStep::ReduceBroadcast {
+        root: ROOT,
+        bytes: model.out_shape(prev_stage.op_idx).bytes(),
+    }
+}
+
+// ---------- exact per-segment costs (used by the DP) ----------
+
+/// Cost to make stage `i`'s input replicated, given the boundary tag.
+pub fn to_rep_cost(model: &Model, cluster: &Cluster, i: usize, tag: BoundaryTag) -> f64 {
+    if i == 0 {
+        return 0.0; // model input is replicated
+    }
+    let prev = model.stages()[i - 1];
+    match tag {
+        BoundaryTag::Rep => 0.0,
+        BoundaryTag::Row => step_secs(cluster, &row_allgather(model, cluster, prev)),
+        BoundaryTag::Partial => step_secs(cluster, &partial_reduce(model, prev)),
+    }
+}
+
+/// Entry cost of a CoEdge conv single at stage `i` (halo when coming from
+/// a row-sharded neighbour, otherwise the replication cost).
+pub fn conv_entry_cost(model: &Model, cluster: &Cluster, i: usize, tag: BoundaryTag) -> f64 {
+    if i == 0 {
+        return 0.0;
+    }
+    let stages = model.stages();
+    match tag {
+        BoundaryTag::Row => {
+            let out_rs = row_ranges(model, stages[i], cluster);
+            let owned = row_ranges(model, stages[i - 1], cluster);
+            let x = halo_xfers(model, stages[i], &out_rs, &owned);
+            if x.is_empty() {
+                0.0
+            } else {
+                step_secs(cluster, &CommStep::HaloExchange { xfers: x })
+            }
+        }
+        _ => to_rep_cost(model, cluster, i, tag),
+    }
+}
+
+/// Exact cost of segment `Single(i)` given the entry tag; returns
+/// `(cost, exit_tag)`. Mirrors `plan_iop_with_segments`.
+pub fn single_cost_exact(
+    model: &Model,
+    cluster: &Cluster,
+    i: usize,
+    tag: BoundaryTag,
+) -> (f64, BoundaryTag) {
+    let stage = model.stages()[i];
+    match model.ops[stage.op_idx].kind {
+        OpKind::Conv2d { .. } => {
+            let entry = conv_entry_cost(model, cluster, i, tag);
+            let rs = row_ranges(model, stage, cluster);
+            let compute = stage_compute_wall(model, cluster, stage, &row_slices(&rs));
+            (entry + compute, BoundaryTag::Row)
+        }
+        OpKind::Dense { .. } => {
+            let entry = to_rep_cost(model, cluster, i, tag);
+            let slices = vec![SliceKind::Replicate; cluster.m()];
+            let compute = stage_compute_wall(model, cluster, stage, &slices);
+            (entry + compute, BoundaryTag::Rep)
+        }
+        _ => unreachable!("stage heads are weighted"),
+    }
+}
+
+/// Exact cost of segment `Pair(i)` given the entry tag; returns
+/// `(cost, exit_tag = Partial)`. The pair's reduce is *not* charged here —
+/// it is the next segment's (or the final assembly's) entry cost, exactly
+/// as the planner defers it.
+pub fn pair_cost_exact(
+    model: &Model,
+    cluster: &Cluster,
+    i: usize,
+    tag: BoundaryTag,
+) -> (f64, BoundaryTag) {
+    let stages = model.stages();
+    let (sa, sb) = (stages[i], stages[i + 1]);
+    let entry = to_rep_cost(model, cluster, i, tag);
+    let ca = stage_compute_wall(model, cluster, sa, &oc_slices(model, sa, cluster));
+    let cb = stage_compute_wall(
+        model,
+        cluster,
+        sb,
+        &ic_slices_aligned(model, sa, sb, cluster),
+    );
+    (entry + ca + cb, BoundaryTag::Partial)
+}
+
+/// Final output-assembly cost given the tag after the last stage.
+pub fn final_cost(model: &Model, cluster: &Cluster, tag: BoundaryTag) -> f64 {
+    let last = *model.stages().last().unwrap();
+    match tag {
+        BoundaryTag::Rep => 0.0,
+        BoundaryTag::Row => {
+            let out = model.stage_spatial_out_shape(last);
+            let row_bytes = (out.elems() / out.h * 4) as u64;
+            let rs = row_ranges(model, last, cluster);
+            step_secs(
+                cluster,
+                &CommStep::Gather {
+                    root: ROOT,
+                    bytes_per_dev: rs.iter().map(|&(_, c)| c as u64 * row_bytes).collect(),
+                },
+            )
+        }
+        BoundaryTag::Partial => step_secs(
+            cluster,
+            &CommStep::ReduceTo {
+                root: ROOT,
+                bytes: model.out_shape(last.op_idx).bytes(),
+            },
+        ),
+    }
+}
+
+// ---------- Algorithm-1 pairwise comparators (greedy) ----------
+
+/// `T_iop` for the pair `(i, i+1)` under the common exit-replicated
+/// convention: entry (given tag) + both computes + the pair's reduce.
+pub fn pair_iop_cost_vs(model: &Model, cluster: &Cluster, i: usize, tag: BoundaryTag) -> f64 {
+    let (body, _) = pair_cost_exact(model, cluster, i, tag);
+    let sb = model.stages()[i + 1];
+    body + step_secs(cluster, &partial_reduce(model, sb))
+}
+
+/// `T_co` for the same two stages as CoEdge singles, charged to the same
+/// exit-replicated convention (a trailing conv pays its AllGather; a
+/// trailing FC replicate is already replicated).
+pub fn pair_coedge_cost_vs(model: &Model, cluster: &Cluster, i: usize, tag: BoundaryTag) -> f64 {
+    let (c1, tag1) = single_cost_exact(model, cluster, i, tag);
+    let (c2, tag2) = single_cost_exact(model, cluster, i + 1, tag1);
+    let exit = match tag2 {
+        BoundaryTag::Rep => 0.0,
+        BoundaryTag::Row => {
+            let sb = model.stages()[i + 1];
+            step_secs(cluster, &row_allgather(model, cluster, sb))
+        }
+        BoundaryTag::Partial => unreachable!("singles never exit Partial"),
+    };
+    c1 + c2 + exit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+
+    #[test]
+    fn fc_pair_iop_beats_replicated_coedge() {
+        // Two FC stages: CoEdge replicates them (serial time); IOP
+        // partitions both with one reduce. IOP must win on AlexNet's
+        // classifier, from either boundary state.
+        let m = zoo::alexnet();
+        let cluster = profiles::paper_default();
+        let stages = m.stages();
+        let fc1 = stages
+            .iter()
+            .position(|s| m.ops[s.op_idx].name == "fc6")
+            .unwrap();
+        for tag in [BoundaryTag::Rep, BoundaryTag::Row] {
+            let iop = pair_iop_cost_vs(&m, &cluster, fc1, tag);
+            let co = pair_coedge_cost_vs(&m, &cluster, fc1, tag);
+            assert!(iop < co, "{tag:?}: iop={iop} co={co}");
+        }
+    }
+
+    #[test]
+    fn wide_early_conv_pair_prefers_coedge() {
+        // VGG's first conv pair has a huge activation: reducing a full
+        // 64x224x224 partial costs far more than halo exchange.
+        let m = zoo::vgg13();
+        let cluster = profiles::paper_default();
+        let iop = pair_iop_cost_vs(&m, &cluster, 0, BoundaryTag::Rep);
+        let co = pair_coedge_cost_vs(&m, &cluster, 0, BoundaryTag::Rep);
+        assert!(co < iop, "co={co} iop={iop}");
+    }
+
+    #[test]
+    fn alexnet_mid_convs_prefer_coedge_from_row_state() {
+        // The regression that motivated tag-aware costs: pairing AlexNet's
+        // conv2/conv3 from a row-sharded boundary requires an expensive
+        // AllGather + reduce; CoEdge halo must win.
+        let m = zoo::alexnet();
+        let cluster = profiles::paper_default();
+        let iop = pair_iop_cost_vs(&m, &cluster, 1, BoundaryTag::Row);
+        let co = pair_coedge_cost_vs(&m, &cluster, 1, BoundaryTag::Row);
+        assert!(co < iop, "co={co} iop={iop}");
+    }
+
+    #[test]
+    fn costs_positive_everywhere() {
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            let n = m.stages().len();
+            for i in 0..n {
+                for tag in [BoundaryTag::Rep, BoundaryTag::Row, BoundaryTag::Partial] {
+                    let (c, _) = single_cost_exact(&m, &cluster, i, tag);
+                    assert!(c > 0.0);
+                    if i + 1 < n && crate::partition::iop::pairable(&m, m.stages()[i], m.stages()[i + 1]) {
+                        assert!(pair_iop_cost_vs(&m, &cluster, i, tag) > 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn higher_t_est_widens_iop_advantage_over_oc() {
+        // Fig. 6's mechanism: per layer pair, OC pays 2 AllGathers
+        // (2·m(m-1) connections) where IOP pays one reduce+broadcast
+        // (2(m-1)); the gap grows linearly in t_est.
+        let m = 3usize;
+        let a = 120_000u64;
+        let adv = |t_est: f64| {
+            let c = profiles::paper_with_t_est(t_est);
+            let ag = CommStep::AllGather {
+                bytes_per_dev: vec![a / m as u64; m],
+            };
+            let rb = CommStep::ReduceBroadcast { root: 0, bytes: a };
+            2.0 * step_secs(&c, &ag) - step_secs(&c, &rb)
+        };
+        assert!(adv(0.008) > adv(0.004));
+        assert!(adv(0.004) > adv(0.001));
+    }
+
+    #[test]
+    fn fc_pair_advantage_positive_across_sweep() {
+        // IOP must stay ahead of CoEdge's replicated FC phase over the
+        // whole Fig. 6 t_est range for the VGG classifier.
+        let m = zoo::vgg11();
+        let stages = m.stages();
+        let fc1 = stages
+            .iter()
+            .position(|s| m.ops[s.op_idx].kind_tag() == "fc")
+            .unwrap();
+        for t in [0.001, 0.004, 0.008] {
+            let c = profiles::paper_with_t_est(t);
+            let adv = pair_coedge_cost_vs(&m, &c, fc1, BoundaryTag::Row)
+                - pair_iop_cost_vs(&m, &c, fc1, BoundaryTag::Row);
+            assert!(adv > 0.0, "t_est={t}: adv={adv}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Exact segmentation by dynamic programming over `(stage, boundary tag)`.
+//!
+//! The exact per-segment costs in `costs` depend only on the entry
+//! boundary state, and each segment's exit state is a function of the
+//! segment — so the DP state `(i, tag)` gives optimal substructure that
+//! prices *exactly* what `plan_iop_with_segments` builds (verified against
+//! `cost::evaluate` in the module tests).
+//!
+//! The paper ships the greedy Algorithm 1; this solver is our ablation —
+//! `benches/ablation_segmentation.rs` measures how much latency greedy
+//! leaves on the table.
+
+use super::costs::{final_cost, pair_cost_exact, single_cost_exact, BoundaryTag};
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::iop::pairable;
+use crate::partition::Segment;
+use std::collections::HashMap;
+
+/// Exact minimum-latency segmentation.
+pub fn dp(model: &Model, cluster: &Cluster) -> Vec<Segment> {
+    let stages = model.stages();
+    let n = stages.len();
+    // memo[(i, tag)] = (best suffix cost, segment chosen at i)
+    let mut memo: HashMap<(usize, BoundaryTag), (f64, Option<Segment>)> = HashMap::new();
+
+    fn solve(
+        i: usize,
+        tag: BoundaryTag,
+        n: usize,
+        model: &Model,
+        cluster: &Cluster,
+        memo: &mut HashMap<(usize, BoundaryTag), (f64, Option<Segment>)>,
+    ) -> f64 {
+        if i == n {
+            return final_cost(model, cluster, tag);
+        }
+        if let Some((c, _)) = memo.get(&(i, tag)) {
+            return *c;
+        }
+        let (sc, s_tag) = single_cost_exact(model, cluster, i, tag);
+        let mut best = sc + solve(i + 1, s_tag, n, model, cluster, memo);
+        let mut choice = Segment::Single(i);
+        let stages = model.stages();
+        if i + 1 < n && pairable(model, stages[i], stages[i + 1]) {
+            let (pc, p_tag) = pair_cost_exact(model, cluster, i, tag);
+            let total = pc + solve(i + 2, p_tag, n, model, cluster, memo);
+            if total < best {
+                best = total;
+                choice = Segment::Pair(i);
+            }
+        }
+        memo.insert((i, tag), (best, Some(choice)));
+        best
+    }
+
+    let _ = solve(0, BoundaryTag::Rep, n, model, cluster, &mut memo);
+
+    // Reconstruct the path.
+    let mut segments = Vec::new();
+    let mut i = 0;
+    let mut tag = BoundaryTag::Rep;
+    while i < n {
+        let (_, choice) = memo[&(i, tag)];
+        let seg = choice.expect("dp covered every state");
+        match seg {
+            Segment::Single(_) => {
+                let (_, t) = single_cost_exact(model, cluster, i, tag);
+                tag = t;
+                i += 1;
+            }
+            Segment::Pair(_) => {
+                let (_, t) = pair_cost_exact(model, cluster, i, tag);
+                tag = t;
+                i += 2;
+            }
+        }
+        segments.push(seg);
+    }
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::plan::validate_segments;
+    use crate::segmentation::segmentation_cost;
+
+    #[test]
+    fn valid_for_all_models() {
+        let cluster = profiles::paper_default();
+        for m in zoo::all_models() {
+            validate_segments(&dp(&m, &cluster), m.stages().len()).unwrap();
+        }
+    }
+
+    #[test]
+    fn never_beaten_by_trivial_patterns() {
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            let d = segmentation_cost(&m, &cluster, &dp(&m, &cluster));
+            let n = m.stages().len();
+            let all_singles: Vec<Segment> = (0..n).map(Segment::Single).collect();
+            assert!(
+                d <= segmentation_cost(&m, &cluster, &all_singles) + 1e-9,
+                "{}",
+                m.name
+            );
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Brute-force segmentation oracle.
+//!
+//! Enumerates every tiling of the stage sequence into singles and
+//! (pairable) pairs — Fibonacci-many, fine for n ≤ ~25 — and prices each
+//! candidate by building the *actual plan* and evaluating it under the
+//! analytic model. Certifies `dp` (and measures how near-optimal the
+//! paper's greedy is) in tests and the ablation bench.
+
+use crate::cost;
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::iop::{pairable, plan_iop_with_segments};
+use crate::partition::Segment;
+
+/// Exhaustively search all segmentations; returns the cheapest by true
+/// plan cost.
+pub fn exhaustive(model: &Model, cluster: &Cluster) -> Vec<Segment> {
+    let stages = model.stages();
+    let n = stages.len();
+    assert!(n <= 25, "exhaustive search is exponential; n={n} too large");
+
+    let mut best_cost = f64::INFINITY;
+    let mut best: Vec<Segment> = Vec::new();
+    let mut current: Vec<Segment> = Vec::new();
+
+    #[allow(clippy::too_many_arguments)]
+    fn recurse(
+        i: usize,
+        n: usize,
+        model: &Model,
+        cluster: &Cluster,
+        stages: &[crate::model::Stage],
+        current: &mut Vec<Segment>,
+        best_cost: &mut f64,
+        best: &mut Vec<Segment>,
+    ) {
+        if i == n {
+            let plan = plan_iop_with_segments(model, cluster, current);
+            let c = cost::evaluate(model, cluster, &plan).total_secs;
+            if c < *best_cost {
+                *best_cost = c;
+                *best = current.clone();
+            }
+            return;
+        }
+        current.push(Segment::Single(i));
+        recurse(i + 1, n, model, cluster, stages, current, best_cost, best);
+        current.pop();
+        if i + 1 < n && pairable(model, stages[i], stages[i + 1]) {
+            current.push(Segment::Pair(i));
+            recurse(i + 2, n, model, cluster, stages, current, best_cost, best);
+            current.pop();
+        }
+    }
+
+    recurse(
+        0,
+        n,
+        model,
+        cluster,
+        &stages,
+        &mut current,
+        &mut best_cost,
+        &mut best,
+    );
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::plan::validate_segments;
+
+    #[test]
+    fn valid_and_complete() {
+        let m = zoo::lenet();
+        let segs = exhaustive(&m, &profiles::paper_default());
+        validate_segments(&segs, m.stages().len()).unwrap();
+    }
+
+    #[test]
+    fn beats_or_ties_every_fixed_pattern() {
+        use crate::segmentation::segmentation_cost;
+        let m = zoo::alexnet();
+        let c = profiles::paper_default();
+        let e = segmentation_cost(&m, &c, &exhaustive(&m, &c));
+        let n = m.stages().len();
+        let all_singles: Vec<Segment> = (0..n).map(Segment::Single).collect();
+        assert!(e <= segmentation_cost(&m, &c, &all_singles) + 1e-12);
+    }
+}

@@ -1,0 +1,232 @@
+//! Algorithm 1 — the paper's greedy model segmentation and pairing.
+//!
+//! Scan the weighted stages left to right, tracking the boundary state the
+//! plan would be in. For `o_i` and its successor `o_{i+1}`, compare the
+//! pair's inference time under IOP (`T_iop`) with the CoEdge treatment of
+//! the same two stages (`T_co`), both charged to a common exit-replicated
+//! convention; pair them iff `T_iop ≤ T_co`, otherwise emit `o_i` as a
+//! single segment and advance by one.
+
+//! The memory constraint (paper eq. 1) is enforced during the scan: if
+//! emitting `o_i` as an unpartitioned single would overflow a device's
+//! memory capacity (CoEdge's replicated FC stages are the usual culprit),
+//! the pair is taken even when its latency estimate loses — exactly the
+//! feasibility-first behaviour P1 demands.
+
+use super::costs::{
+    ic_slices_aligned, oc_slices, pair_coedge_cost_vs, pair_iop_cost_vs, row_ranges,
+    single_cost_exact, BoundaryTag,
+};
+use crate::cost::memory::{slice_activation_bytes, slice_weight_bytes};
+use crate::device::Cluster;
+use crate::model::{Model, OpKind, Stage};
+use crate::partition::iop::pairable;
+use crate::partition::plan::SliceKind;
+use crate::partition::Segment;
+
+/// Per-device running eq.-(1) accumulator.
+struct MemTracker {
+    weights: Vec<u64>,
+    peak_act: Vec<u64>,
+    caps: Vec<u64>,
+}
+
+impl MemTracker {
+    fn new(cluster: &Cluster) -> Self {
+        Self {
+            weights: vec![0; cluster.m()],
+            peak_act: vec![0; cluster.m()],
+            caps: cluster.devices.iter().map(|d| d.mem_bytes).collect(),
+        }
+    }
+
+    /// Would adding these per-stage slices keep every device within its
+    /// capacity?
+    fn feasible_with(&self, model: &Model, stages_slices: &[(Stage, Vec<SliceKind>)]) -> bool {
+        for j in 0..self.caps.len() {
+            let mut w = self.weights[j];
+            let mut a = self.peak_act[j];
+            for (stage, slices) in stages_slices {
+                w += slice_weight_bytes(model, *stage, &slices[j]);
+                a = a.max(slice_activation_bytes(model, *stage, &slices[j]));
+            }
+            if w + a > self.caps[j] {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn commit(&mut self, model: &Model, stages_slices: &[(Stage, Vec<SliceKind>)]) {
+        for j in 0..self.caps.len() {
+            for (stage, slices) in stages_slices {
+                self.weights[j] += slice_weight_bytes(model, *stage, &slices[j]);
+                self.peak_act[j] =
+                    self.peak_act[j].max(slice_activation_bytes(model, *stage, &slices[j]));
+            }
+        }
+    }
+}
+
+/// Slices a `Single(i)` segment would assign.
+fn single_slices(model: &Model, cluster: &Cluster, i: usize) -> Vec<(Stage, Vec<SliceKind>)> {
+    let stage = model.stages()[i];
+    let slices = match model.ops[stage.op_idx].kind {
+        OpKind::Conv2d { .. } => row_ranges(model, stage, cluster)
+            .into_iter()
+            .map(|(start, count)| {
+                if count == 0 {
+                    SliceKind::Idle
+                } else {
+                    SliceKind::Rows { start, count }
+                }
+            })
+            .collect(),
+        _ => vec![SliceKind::Replicate; cluster.m()],
+    };
+    vec![(stage, slices)]
+}
+
+/// Slices a `Pair(i)` segment would assign.
+fn pair_slices(model: &Model, cluster: &Cluster, i: usize) -> Vec<(Stage, Vec<SliceKind>)> {
+    let stages = model.stages();
+    let (sa, sb) = (stages[i], stages[i + 1]);
+    vec![
+        (sa, oc_slices(model, sa, cluster)),
+        (sb, ic_slices_aligned(model, sa, sb, cluster)),
+    ]
+}
+
+/// Run Algorithm 1. Returns the segmentation `Γ`.
+pub fn greedy(model: &Model, cluster: &Cluster) -> Vec<Segment> {
+    let stages = model.stages();
+    let n = stages.len();
+    let mut segments = Vec::new();
+    let mut tag = BoundaryTag::Rep; // the input image is replicated
+    let mut mem = MemTracker::new(cluster);
+    let mut i = 0;
+    while i < n {
+        let can_pair = i + 1 < n && pairable(model, stages[i], stages[i + 1]);
+        let take_pair = if can_pair {
+            let t_iop = pair_iop_cost_vs(model, cluster, i, tag);
+            let t_co = pair_coedge_cost_vs(model, cluster, i, tag);
+            if t_iop <= t_co {
+                true
+            } else {
+                // eq. (1): a single that overflows memory forces the pair.
+                let s = single_slices(model, cluster, i);
+                !mem.feasible_with(model, &s) && mem.feasible_with(model, &pair_slices(model, cluster, i))
+            }
+        } else {
+            false
+        };
+        if take_pair {
+            mem.commit(model, &pair_slices(model, cluster, i));
+            segments.push(Segment::Pair(i));
+            tag = BoundaryTag::Partial;
+            i += 2;
+        } else {
+            mem.commit(model, &single_slices(model, cluster, i));
+            let (_, next_tag) = single_cost_exact(model, cluster, i, tag);
+            segments.push(Segment::Single(i));
+            tag = next_tag;
+            i += 1;
+        }
+    }
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::plan::validate_segments;
+
+    #[test]
+    fn covers_all_stages_in_order() {
+        let cluster = profiles::paper_default();
+        for m in zoo::all_models() {
+            let segs = greedy(&m, &cluster);
+            validate_segments(&segs, m.stages().len()).unwrap();
+        }
+    }
+
+    #[test]
+    fn lenet_pairs_where_it_profits() {
+        // LeNet's activations are tiny: pairing the conv stages removes
+        // the halo + allgather traffic for one cheap reduce. At least one
+        // pair must form.
+        let m = zoo::lenet();
+        let segs = greedy(&m, &profiles::paper_default());
+        let pairs = segs.iter().filter(|s| matches!(s, Segment::Pair(_))).count();
+        assert!(pairs >= 1, "{segs:?}");
+    }
+
+    #[test]
+    fn vgg_keeps_early_convs_single() {
+        // VGG's early convs have huge activations; Algorithm 1 should
+        // leave them CoEdge-partitioned.
+        let m = zoo::vgg11();
+        let segs = greedy(&m, &profiles::paper_default());
+        assert!(matches!(segs[0], Segment::Single(0)), "{segs:?}");
+    }
+
+    #[test]
+    fn alexnet_pairs_the_classifier_not_the_convs() {
+        let m = zoo::alexnet();
+        let segs = greedy(&m, &profiles::paper_default());
+        // conv2..conv5 stay single (stages 1..4); some FC pair exists.
+        for s in &segs {
+            if let Segment::Pair(i) = s {
+                assert!(*i >= 4, "unexpected conv pair at {i}: {segs:?}");
+            }
+        }
+        assert!(
+            segs.iter().any(|s| matches!(s, Segment::Pair(_))),
+            "{segs:?}"
+        );
+    }
+
+    #[test]
+    fn memory_pressure_forces_fc_pairing() {
+        // eq. (1): on memory-tight devices, CoEdge-style replicated FC
+        // singles do not fit, so Algorithm 1 must IOP-pair the classifier
+        // — this is the configuration that reproduces the paper's Fig. 5
+        // LeNet memory saving (~50% vs CoEdge).
+        use crate::cost::memory::plan_memory;
+        use crate::partition::iop::plan_iop_with_segments;
+        let m = zoo::lenet();
+        // LeNet full weights ≈ 247 KB; give each device 160 KB.
+        let tight = crate::device::profiles::tiny_memory(3, 160 * 1024);
+        let segs = greedy(&m, &tight);
+        validate_segments(&segs, m.stages().len()).unwrap();
+        let fc_start = m
+            .stages()
+            .iter()
+            .position(|s| m.ops[s.op_idx].kind_tag() == "fc")
+            .unwrap();
+        assert!(
+            segs.iter()
+                .any(|s| matches!(s, Segment::Pair(i) if *i + 1 >= fc_start)),
+            "{segs:?}"
+        );
+        // And the resulting plan's peak memory beats CoEdge's by ~half.
+        let plan = plan_iop_with_segments(&m, &tight, &segs);
+        let iop_peak = plan_memory(&m, &plan).peak_footprint();
+        let co = crate::partition::coedge::plan_coedge(&m, &tight);
+        let co_peak = plan_memory(&m, &co).peak_footprint();
+        assert!(
+            (iop_peak as f64) < 0.6 * co_peak as f64,
+            "iop={iop_peak} coedge={co_peak}"
+        );
+    }
+
+    #[test]
+    fn zero_t_est_still_valid() {
+        let m = zoo::alexnet();
+        let c = profiles::paper_with_t_est(0.0);
+        let segs = greedy(&m, &c);
+        validate_segments(&segs, m.stages().len()).unwrap();
+    }
+}

@@ -1,0 +1,146 @@
+//! Model segmentation (paper §4): choose `Γ = [γ_1 … γ_k]` — which
+//! adjacent stage pairs get IOP treatment and which stages stay single
+//! (CoEdge-partitioned) — to minimize the end-to-end inference delay.
+//!
+//! Three solvers:
+//!  * [`greedy`] — the paper's Algorithm 1: scan left to right, pair
+//!    `(o_i, o_{i+1})` iff the pair's IOP time beats its CoEdge time.
+//!  * [`dp`] — exact dynamic program over segment boundaries (the segment
+//!    costs are boundary-normalized, so optimal substructure holds).
+//!  * [`exhaustive`] — brute-force enumeration of all single/pair tilings;
+//!    exponential, used as the oracle in tests and the ablation bench.
+
+pub mod costs;
+pub mod dp;
+pub mod exhaustive;
+pub mod greedy;
+
+pub use dp::dp;
+pub use exhaustive::exhaustive;
+pub use greedy::greedy;
+
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::iop::plan_iop_with_segments;
+use crate::partition::{Plan, Segment};
+
+/// The paper's IOP strategy end-to-end: greedy segmentation (Algorithm 1)
+/// followed by IOP plan construction.
+pub fn plan_iop(model: &Model, cluster: &Cluster) -> Plan {
+    let segments = greedy(model, cluster);
+    plan_iop_with_segments(model, cluster, &segments)
+}
+
+/// IOP with the exact-DP segmentation (ablation: how much does greedy
+/// leave on the table?).
+pub fn plan_iop_dp(model: &Model, cluster: &Cluster) -> Plan {
+    let segments = dp(model, cluster);
+    plan_iop_with_segments(model, cluster, &segments)
+}
+
+/// True end-to-end cost of a segmentation: build the actual plan and
+/// evaluate it under the analytic model (P1).
+pub fn segmentation_cost(model: &Model, cluster: &Cluster, segments: &[Segment]) -> f64 {
+    let plan = plan_iop_with_segments(model, cluster, segments);
+    crate::cost::evaluate(model, cluster, &plan).total_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::plan::validate_segments;
+
+    #[test]
+    fn greedy_produces_valid_segmentation() {
+        let cluster = profiles::paper_default();
+        for m in zoo::all_models() {
+            let segs = greedy(&m, &cluster);
+            validate_segments(&segs, m.stages().len()).unwrap();
+        }
+    }
+
+    #[test]
+    fn plans_from_all_solvers_validate() {
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            plan_iop(&m, &cluster).validate(&m).unwrap();
+            plan_iop_dp(&m, &cluster).validate(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn dp_never_worse_than_greedy() {
+        let cluster = profiles::paper_default();
+        for m in zoo::all_models() {
+            let g = segmentation_cost(&m, &cluster, &greedy(&m, &cluster));
+            let d = segmentation_cost(&m, &cluster, &dp(&m, &cluster));
+            assert!(d <= g + 1e-12, "{}: dp={d} greedy={g}", m.name);
+        }
+    }
+
+    #[test]
+    fn dp_matches_exhaustive_oracle() {
+        let cluster = profiles::paper_default();
+        for m in [zoo::lenet(), zoo::alexnet(), zoo::vgg11()] {
+            let d = segmentation_cost(&m, &cluster, &dp(&m, &cluster));
+            let e = segmentation_cost(&m, &cluster, &exhaustive(&m, &cluster));
+            assert!((d - e).abs() < 1e-9, "{}: dp={d} exhaustive={e}", m.name);
+        }
+    }
+
+    #[test]
+    fn dp_cost_model_matches_true_plan_cost() {
+        // The DP's incremental accounting must agree with pricing the
+        // plan it reconstructs.
+        use crate::segmentation::costs::{
+            final_cost, pair_cost_exact, single_cost_exact, BoundaryTag,
+        };
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            let segs = dp(&m, &cluster);
+            let mut tag = BoundaryTag::Rep;
+            let mut acc = 0.0;
+            for s in &segs {
+                match *s {
+                    crate::partition::Segment::Single(i) => {
+                        let (c, t) = single_cost_exact(&m, &cluster, i, tag);
+                        acc += c;
+                        tag = t;
+                    }
+                    crate::partition::Segment::Pair(i) => {
+                        let (c, t) = pair_cost_exact(&m, &cluster, i, tag);
+                        acc += c;
+                        tag = t;
+                    }
+                }
+            }
+            acc += final_cost(&m, &cluster, tag);
+            let truth = segmentation_cost(&m, &cluster, &segs);
+            assert!(
+                (acc - truth).abs() / truth < 1e-9,
+                "{}: dp-accounting={acc} plan={truth}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn fc_stages_get_paired() {
+        // FC singles serialize on the root under CoEdge, so Algorithm 1
+        // should IOP-pair the classifier stages of every model.
+        let cluster = profiles::paper_default();
+        let m = zoo::alexnet();
+        let segs = greedy(&m, &cluster);
+        let fc_start = m
+            .stages()
+            .iter()
+            .position(|s| m.ops[s.op_idx].kind_tag() == "fc")
+            .unwrap();
+        let has_fc_pair = segs
+            .iter()
+            .any(|s| matches!(s, crate::partition::Segment::Pair(i) if *i >= fc_start.saturating_sub(1)));
+        assert!(has_fc_pair, "{segs:?}");
+    }
+}

@@ -1,0 +1,260 @@
+//! The simulation engine: resource-timeline discrete-event execution of a
+//! partition plan over (devices × shared medium).
+
+use super::trace::{Trace, TraceEvent, TraceKind};
+use crate::cost::compute::stage_device_flops;
+use crate::device::Cluster;
+use crate::model::Model;
+use crate::partition::plan::{CommStep, Plan};
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// `true`: stage barriers (reproduces the analytic model exactly).
+    /// `false`: dependency-driven overlap of compute and communication.
+    pub strict_barriers: bool,
+    /// Record a full trace (disable for throughput benchmarking).
+    pub record_trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            strict_barriers: true,
+            record_trace: true,
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// End-to-end makespan in seconds.
+    pub total_secs: f64,
+    /// Per-stage (comm_end, compute_end) absolute times.
+    pub stage_times: Vec<(f64, f64)>,
+    pub trace: Trace,
+}
+
+/// Run the simulator.
+pub fn simulate(model: &Model, cluster: &Cluster, plan: &Plan, cfg: SimConfig) -> SimResult {
+    let m = plan.m;
+    // Per-device "has finished its work up to here" clock.
+    let mut dev_ready = vec![0.0f64; m];
+    // Shared medium availability.
+    let mut medium_free = 0.0f64;
+    let mut trace = Trace::default();
+    let mut stage_times = Vec::with_capacity(plan.stages.len());
+
+    let run_comm = |step: &CommStep,
+                        stage_idx: usize,
+                        dev_ready: &mut [f64],
+                        medium_free: &mut f64,
+                        trace: &mut Trace,
+                        strict: bool| {
+        let msgs = step.messages(m);
+        if msgs.is_empty() {
+            return;
+        }
+        // Strict mode: comm starts only after every device is done.
+        let barrier = if strict {
+            dev_ready.iter().cloned().fold(0.0, f64::max)
+        } else {
+            0.0
+        };
+        // Receiver-side arrival times for this step.
+        let mut arrived = vec![0.0f64; m];
+        for &(from, to, bytes) in &msgs {
+            let sender_ready = if strict { barrier } else { dev_ready[from] };
+            let start = medium_free.max(sender_ready);
+            let end = start + cluster.t_est + cluster.xfer_secs(bytes);
+            *medium_free = end;
+            arrived[to] = arrived[to].max(end);
+            if cfg.record_trace {
+                trace.push(TraceEvent {
+                    kind: TraceKind::Message,
+                    stage: stage_idx,
+                    dev: from,
+                    peer: to,
+                    t_start: start,
+                    t_end: end,
+                    bytes,
+                });
+            }
+        }
+        // Data dependencies: a device may not proceed before its inbound
+        // messages land. (Strict mode adds a full barrier at the end.)
+        if strict {
+            let all_done = *medium_free;
+            for r in dev_ready.iter_mut() {
+                *r = r.max(all_done);
+            }
+        } else {
+            for (j, a) in arrived.iter().enumerate() {
+                dev_ready[j] = dev_ready[j].max(*a);
+            }
+        }
+    };
+
+    for (si, sp) in plan.stages.iter().enumerate() {
+        run_comm(
+            &sp.pre_comm,
+            si,
+            &mut dev_ready,
+            &mut medium_free,
+            &mut trace,
+            cfg.strict_barriers,
+        );
+        let comm_end = dev_ready.iter().cloned().fold(medium_free.min(f64::MAX), f64::max);
+
+        // Compute phase.
+        if cfg.strict_barriers {
+            let start = dev_ready.iter().cloned().fold(0.0, f64::max);
+            let mut max_end = start;
+            for (j, _slice) in sp.slices.iter().enumerate() {
+                let secs = stage_device_flops(model, cluster, sp.stage, &sp.slices, j)
+                    / cluster.devices[j].flops_per_sec;
+                if secs > 0.0 && cfg.record_trace {
+                    trace.push(TraceEvent {
+                        kind: TraceKind::Compute,
+                        stage: si,
+                        dev: j,
+                        peer: j,
+                        t_start: start,
+                        t_end: start + secs,
+                        bytes: 0,
+                    });
+                }
+                max_end = max_end.max(start + secs);
+            }
+            for r in dev_ready.iter_mut() {
+                *r = max_end;
+            }
+        } else {
+            for (j, _slice) in sp.slices.iter().enumerate() {
+                let secs = stage_device_flops(model, cluster, sp.stage, &sp.slices, j)
+                    / cluster.devices[j].flops_per_sec;
+                if secs > 0.0 {
+                    let start = dev_ready[j];
+                    if cfg.record_trace {
+                        trace.push(TraceEvent {
+                            kind: TraceKind::Compute,
+                            stage: si,
+                            dev: j,
+                            peer: j,
+                            t_start: start,
+                            t_end: start + secs,
+                            bytes: 0,
+                        });
+                    }
+                    dev_ready[j] = start + secs;
+                }
+            }
+        }
+        let compute_end = dev_ready.iter().cloned().fold(0.0, f64::max);
+        stage_times.push((comm_end, compute_end));
+    }
+
+    run_comm(
+        &plan.final_comm,
+        usize::MAX,
+        &mut dev_ready,
+        &mut medium_free,
+        &mut trace,
+        cfg.strict_barriers,
+    );
+    let total = dev_ready
+        .iter()
+        .cloned()
+        .fold(medium_free, f64::max);
+
+    SimResult {
+        total_secs: total,
+        stage_times,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost;
+    use crate::device::profiles;
+    use crate::model::zoo;
+    use crate::partition::Strategy;
+    use crate::pipeline;
+
+    #[test]
+    fn strict_sim_matches_analytic_model() {
+        // Cross-validation: strict barriers == eq. (6) evaluation.
+        let cluster = profiles::paper_default();
+        for m in zoo::fig4_models() {
+            for s in Strategy::all() {
+                let plan = pipeline::plan(&m, &cluster, s);
+                let analytic = cost::evaluate(&m, &cluster, &plan).total_secs;
+                let sim = simulate(&m, &cluster, &plan, SimConfig::default()).total_secs;
+                assert!(
+                    (sim - analytic).abs() / analytic < 1e-9,
+                    "{} {}: sim={sim} analytic={analytic}",
+                    m.name,
+                    s.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loose_never_slower_than_strict() {
+        let cluster = profiles::paper_default();
+        let cfg_loose = SimConfig {
+            strict_barriers: false,
+            record_trace: true,
+        };
+        for m in zoo::fig4_models() {
+            for s in Strategy::all() {
+                let plan = pipeline::plan(&m, &cluster, s);
+                let strict = simulate(&m, &cluster, &plan, SimConfig::default()).total_secs;
+                let loose = simulate(&m, &cluster, &plan, cfg_loose).total_secs;
+                assert!(
+                    loose <= strict + 1e-12,
+                    "{} {}: loose={loose} strict={strict}",
+                    m.name,
+                    s.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traces_are_physically_consistent() {
+        let cluster = profiles::paper_default();
+        let m = zoo::alexnet();
+        for s in Strategy::all() {
+            for strict in [true, false] {
+                let plan = pipeline::plan(&m, &cluster, s);
+                let r = simulate(
+                    &m,
+                    &cluster,
+                    &plan,
+                    SimConfig {
+                        strict_barriers: strict,
+                        record_trace: true,
+                    },
+                );
+                r.trace.check_consistency().unwrap();
+                assert!((r.trace.makespan() - r.total_secs).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn single_device_cluster_is_centralized() {
+        use crate::device::Cluster;
+        let c = Cluster::homogeneous(1, 1e9, 1 << 30, 12.5e6, 1e-3);
+        let m = zoo::lenet();
+        let plan = pipeline::plan(&m, &c, Strategy::Oc);
+        let r = simulate(&m, &c, &plan, SimConfig::default());
+        let central = cost::centralized_secs(&m, &c);
+        assert!((r.total_secs - central).abs() / central < 1e-9);
+    }
+}

@@ -1,0 +1,25 @@
+//! Discrete-event cluster simulator.
+//!
+//! Executes a partition `Plan` against the device/medium substrate and
+//! produces a timeline: per-device compute intervals and per-message
+//! medium occupancy. Two barrier semantics:
+//!
+//! * **strict** — stages are barriers: all of stage i's compute finishes,
+//!   then the pre-comm of stage i+1 occupies the medium, then compute
+//!   starts. This reproduces the analytic model (eq. 6) *exactly* — the
+//!   cross-validation test asserts equality with `cost::evaluate`.
+//! * **loose** — compute and communication overlap where data dependencies
+//!   allow: a message leaves as soon as its sender finished producing, and
+//!   a device starts computing as soon as *its* inputs arrived. This is
+//!   what a real pipelined deployment would approach; the benches report
+//!   both.
+//!
+//! The medium is a single shared resource (serialized messages, each
+//! paying `t_est + bytes/b`), matching the cost model's assumptions
+//! (DESIGN.md §2/§4).
+
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate, SimConfig, SimResult};
+pub use trace::{Trace, TraceEvent, TraceKind};

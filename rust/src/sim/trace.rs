@@ -1,0 +1,226 @@
+//! Simulation traces: who did what, when — the raw material for the
+//! timeline reports and for debugging partition plans.
+
+use crate::util::json::Json;
+
+/// What a trace interval represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Device computing its slice of a stage.
+    Compute,
+    /// A message occupying the shared medium (`from → to`).
+    Message,
+}
+
+/// One timeline interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Stage index this event belongs to (`usize::MAX` for final comm).
+    pub stage: usize,
+    /// Computing device, or sender for messages.
+    pub dev: usize,
+    /// Receiver for messages (== dev for compute).
+    pub peer: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Message payload bytes (0 for compute).
+    pub bytes: u64,
+}
+
+/// An ordered collection of trace events.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// Total busy time of a device (compute only).
+    pub fn device_busy_secs(&self, dev: usize) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == TraceKind::Compute && e.dev == dev)
+            .map(|e| e.t_end - e.t_start)
+            .sum()
+    }
+
+    /// Total medium occupancy.
+    pub fn medium_busy_secs(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == TraceKind::Message)
+            .map(|e| e.t_end - e.t_start)
+            .sum()
+    }
+
+    /// Makespan (end of the last event).
+    pub fn makespan(&self) -> f64 {
+        self.events.iter().map(|e| e.t_end).fold(0.0, f64::max)
+    }
+
+    /// Check physical consistency: no two messages overlap on the medium,
+    /// and no device computes two things at once.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        let mut msgs: Vec<(f64, f64)> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == TraceKind::Message)
+            .map(|e| (e.t_start, e.t_end))
+            .collect();
+        msgs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in msgs.windows(2) {
+            if w[1].0 < w[0].1 - 1e-12 {
+                return Err(format!("medium overlap: {:?} then {:?}", w[0], w[1]));
+            }
+        }
+        let ndev = self.events.iter().map(|e| e.dev + 1).max().unwrap_or(0);
+        for d in 0..ndev {
+            let mut ivs: Vec<(f64, f64)> = self
+                .events
+                .iter()
+                .filter(|e| e.kind == TraceKind::Compute && e.dev == d)
+                .map(|e| (e.t_start, e.t_end))
+                .collect();
+            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in ivs.windows(2) {
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return Err(format!("device {d} overlap: {:?} then {:?}", w[0], w[1]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// ASCII Gantt chart: one lane per device plus the shared medium.
+    /// Compute intervals are `#`, medium occupancy is `=`; `width` is the
+    /// number of time columns.
+    pub fn render_gantt(&self, m: usize, width: usize) -> String {
+        let span = self.makespan();
+        if span <= 0.0 || width == 0 {
+            return String::from("(empty trace)\n");
+        }
+        let col = |t: f64| ((t / span * width as f64) as usize).min(width - 1);
+        let mut lanes: Vec<Vec<char>> = vec![vec![' '; width]; m + 1];
+        for e in &self.events {
+            let (lane, ch) = match e.kind {
+                TraceKind::Compute => (e.dev, '#'),
+                TraceKind::Message => (m, '='),
+            };
+            for c in col(e.t_start)..=col(e.t_end) {
+                lanes[lane][c] = ch;
+            }
+        }
+        let mut out = String::new();
+        for (i, lane) in lanes.iter().enumerate() {
+            let label = if i < m {
+                format!("dev{i}   ")
+            } else {
+                "medium ".to_string()
+            };
+            out.push_str(&label);
+            out.push('|');
+            out.extend(lane.iter());
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "       0{}{}\n",
+            " ".repeat(width.saturating_sub(10)),
+            crate::util::units::fmt_secs(span)
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        (
+                            "kind",
+                            Json::str(match e.kind {
+                                TraceKind::Compute => "compute",
+                                TraceKind::Message => "message",
+                            }),
+                        ),
+                        ("stage", Json::num(e.stage as f64)),
+                        ("dev", Json::num(e.dev as f64)),
+                        ("peer", Json::num(e.peer as f64)),
+                        ("t_start", Json::num(e.t_start)),
+                        ("t_end", Json::num(e.t_end)),
+                        ("bytes", Json::num(e.bytes as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceKind, dev: usize, s: f64, e: f64) -> TraceEvent {
+        TraceEvent {
+            kind,
+            stage: 0,
+            dev,
+            peer: dev,
+            t_start: s,
+            t_end: e,
+            bytes: 0,
+        }
+    }
+
+    #[test]
+    fn busy_and_makespan() {
+        let mut t = Trace::default();
+        t.push(ev(TraceKind::Compute, 0, 0.0, 1.0));
+        t.push(ev(TraceKind::Compute, 0, 2.0, 3.5));
+        t.push(ev(TraceKind::Message, 1, 1.0, 2.0));
+        assert!((t.device_busy_secs(0) - 2.5).abs() < 1e-12);
+        assert!((t.medium_busy_secs() - 1.0).abs() < 1e-12);
+        assert!((t.makespan() - 3.5).abs() < 1e-12);
+        t.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn gantt_renders_all_lanes() {
+        let mut t = Trace::default();
+        t.push(ev(TraceKind::Compute, 0, 0.0, 1.0));
+        t.push(ev(TraceKind::Compute, 1, 0.5, 2.0));
+        t.push(ev(TraceKind::Message, 0, 1.0, 1.5));
+        let g = t.render_gantt(2, 40);
+        assert!(g.contains("dev0"));
+        assert!(g.contains("dev1"));
+        assert!(g.contains("medium"));
+        assert!(g.contains('#'));
+        assert!(g.contains('='));
+    }
+
+    #[test]
+    fn gantt_empty_trace() {
+        let t = Trace::default();
+        assert!(t.render_gantt(3, 40).contains("empty"));
+    }
+
+    #[test]
+    fn detects_medium_overlap() {
+        let mut t = Trace::default();
+        t.push(ev(TraceKind::Message, 0, 0.0, 1.0));
+        t.push(ev(TraceKind::Message, 1, 0.5, 1.5));
+        assert!(t.check_consistency().is_err());
+    }
+
+    #[test]
+    fn detects_device_overlap() {
+        let mut t = Trace::default();
+        t.push(ev(TraceKind::Compute, 2, 0.0, 1.0));
+        t.push(ev(TraceKind::Compute, 2, 0.9, 1.2));
+        assert!(t.check_consistency().is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Deterministic tensor initialization — the rust half of the mirrored
+//! weight generator (see `util::prng` and `python/compile/weights.py`).
+//!
+//! Naming convention: `"{model}/{op}/w"` and `"{model}/{op}/b"` for weights
+//! and biases, `"{model}/input"` for the synthetic inference input. Both
+//! languages derive the stream seed from the same FNV-1a hash, so the rust
+//! coordinator can slice weights for device shards and feed PJRT
+//! executables the *same* numbers the python oracle used.
+
+use super::Tensor;
+use crate::util::prng::{named_tensor, SplitMix64};
+
+/// Default weight scale. Small magnitudes keep deep VGG activations in a
+/// well-conditioned f32 range without normalization layers.
+pub const WEIGHT_SCALE: f32 = 0.05;
+
+/// Conv weight tensor, laid out OIHW (c_out, c_in, k_h, k_w) —
+/// the layout jax's `lax.conv_general_dilated` uses for its default
+/// dimension numbers and the layout `ops::conv2d` consumes.
+pub fn conv_weight(name: &str, c_out: usize, c_in: usize, k_h: usize, k_w: usize) -> Vec<f32> {
+    named_tensor(name, c_out * c_in * k_h * k_w, WEIGHT_SCALE)
+}
+
+/// Dense weight, laid out (c_out, c_in) row-major.
+pub fn dense_weight(name: &str, c_out: usize, c_in: usize) -> Vec<f32> {
+    named_tensor(name, c_out * c_in, WEIGHT_SCALE)
+}
+
+/// Bias vector of length `c_out`.
+pub fn bias(name: &str, c_out: usize) -> Vec<f32> {
+    named_tensor(name, c_out, WEIGHT_SCALE)
+}
+
+/// Synthetic input activation in [0, 1) (image-like).
+pub fn input_tensor(name: &str, c: usize, h: usize, w: usize) -> Tensor {
+    let mut rng = SplitMix64::from_name(name);
+    let data = (0..c * h * w).map(|_| rng.next_f32()).collect();
+    Tensor::from_vec(c, h, w, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            conv_weight("m/c1/w", 2, 3, 5, 5),
+            conv_weight("m/c1/w", 2, 3, 5, 5)
+        );
+        assert_ne!(conv_weight("m/c1/w", 2, 3, 5, 5), conv_weight("m/c2/w", 2, 3, 5, 5));
+    }
+
+    #[test]
+    fn input_range() {
+        let t = input_tensor("m/input", 3, 8, 8);
+        assert!(t.data.iter().all(|v| (0.0..1.0).contains(v)));
+        assert_eq!(t.len(), 3 * 8 * 8);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(conv_weight("x", 4, 3, 5, 5).len(), 4 * 3 * 25);
+        assert_eq!(dense_weight("x", 10, 20).len(), 200);
+        assert_eq!(bias("x", 7).len(), 7);
+    }
+}

@@ -1,0 +1,166 @@
+//! Host-side f32 tensor substrate.
+//!
+//! The coordinator needs real tensors for three jobs:
+//!  1. generating deterministic weights/inputs (mirroring python),
+//!  2. slicing them per a partition `Plan` (OC / IC / row slices, halos),
+//!  3. gluing distributed execution together (concat, partial-sum reduce)
+//!     and validating results (allclose vs the centralized model).
+//!
+//! Layout is NCHW with N fixed to 1 (single-image inference, as in the
+//! paper); a flat `CHW` view covers FC activations (`c = features, h=w=1`).
+//!
+//! `ops` additionally implements *reference* conv/pool/dense so the whole
+//! distributed pipeline can be checked end-to-end without PJRT, and so the
+//! PJRT path itself can be validated against an independent implementation.
+
+pub mod init;
+pub mod ops;
+pub mod slice;
+
+use std::fmt;
+
+/// Dense CHW f32 tensor (batch dim elided; inference is single-image).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self {
+            c,
+            h,
+            w,
+            data: vec![0.0; c * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), c * h * w, "data length must match shape");
+        Self { c, h, w, data }
+    }
+
+    /// 1-D tensor (FC activation view).
+    pub fn vector(data: Vec<f32>) -> Self {
+        let c = data.len();
+        Self { c, h: 1, w: 1, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    #[inline]
+    pub fn idx(&self, c: usize, y: usize, x: usize) -> usize {
+        (c * self.h + y) * self.w + x
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(c, y, x)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        let i = self.idx(c, y, x);
+        self.data[i] = v;
+    }
+
+    /// Flatten to a vector view (CHW order — matches NCHW flatten in jax).
+    pub fn flattened(&self) -> Tensor {
+        Tensor::vector(self.data.clone())
+    }
+
+    /// Max |a-b| over all elements; shapes must match.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(
+            (self.c, self.h, self.w),
+            (other.c, other.h, other.w),
+            "shape mismatch in max_abs_diff"
+        );
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// True when all elements are within `atol + rtol*|b|`.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if (self.c, self.h, self.w) != (other.c, other.h, other.w) {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// In-place elementwise add; shapes must match. Used for partial-sum
+    /// reduction of IC-partitioned operators.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(
+            (self.c, self.h, self.w),
+            (other.c, other.h, other.w),
+            "shape mismatch in add_assign"
+        );
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor[{}x{}x{}]", self.c, self.h, self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_chw() {
+        let mut t = Tensor::zeros(2, 3, 4);
+        t.set(1, 2, 3, 7.0);
+        assert_eq!(t.get(1, 2, 3), 7.0);
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::vector(vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 0.0, 0.0));
+        b.data[1] += 1e-4;
+        assert!(!a.allclose(&b, 0.0, 1e-5));
+        assert!(a.allclose(&b, 0.0, 1e-3));
+        assert!((a.max_abs_diff(&b) - 1e-4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_assign_reduces_partials() {
+        let mut a = Tensor::vector(vec![1.0, 2.0]);
+        let b = Tensor::vector(vec![0.5, -2.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![1.5, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(2, 2, 2, vec![0.0; 7]);
+    }
+}

@@ -1,0 +1,328 @@
+//! Reference CNN operators on host tensors.
+//!
+//! These are the *independent oracle* for the whole stack: python has its
+//! own pure-jnp reference (`ref.py`), PJRT executes the AOT-lowered HLO, and
+//! this module gives the rust side a third, dependency-free implementation.
+//! Distributed execution results are checked against these ops, and these
+//! ops are themselves unit-tested against hand-computed values (and, via
+//! the e2e example, against PJRT numerics).
+//!
+//! Padding is expressed per-axis (`pad_h`, `pad_w`) because row-sharded
+//! execution materializes vertical halo/padding into the input slice and
+//! then convolves with `pad_h = 0` while keeping horizontal padding.
+
+use super::Tensor;
+
+/// 2-D convolution, OIHW weights, CHW input, stride `s`, zero padding.
+/// `bias` is optional (IC-partitioned shards add bias only once, after the
+/// partial-sum reduction). `relu` applies max(0, x) to the output.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    input: &Tensor,
+    weight: &[f32],
+    bias: Option<&[f32]>,
+    c_out: usize,
+    k_h: usize,
+    k_w: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    relu: bool,
+) -> Tensor {
+    let c_in = input.c;
+    assert_eq!(
+        weight.len(),
+        c_out * c_in * k_h * k_w,
+        "weight size mismatch"
+    );
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias size mismatch");
+    }
+    assert!(stride >= 1);
+    let out_h = (input.h + 2 * pad_h - k_h) / stride + 1;
+    let out_w = (input.w + 2 * pad_w - k_w) / stride + 1;
+    let mut out = Tensor::zeros(c_out, out_h, out_w);
+
+    let k_plane = k_h * k_w;
+    for oc in 0..c_out {
+        let w_oc = &weight[oc * c_in * k_plane..(oc + 1) * c_in * k_plane];
+        let b = bias.map(|b| b[oc]).unwrap_or(0.0);
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                let mut acc = b;
+                let iy0 = (oy * stride) as isize - pad_h as isize;
+                let ix0 = (ox * stride) as isize - pad_w as isize;
+                for ic in 0..c_in {
+                    let w_ic = &w_oc[ic * k_plane..(ic + 1) * k_plane];
+                    for ky in 0..k_h {
+                        let iy = iy0 + ky as isize;
+                        if iy < 0 || iy >= input.h as isize {
+                            continue;
+                        }
+                        let row = input.idx(ic, iy as usize, 0);
+                        for kx in 0..k_w {
+                            let ix = ix0 + kx as isize;
+                            if ix < 0 || ix >= input.w as isize {
+                                continue;
+                            }
+                            acc += w_ic[ky * k_w + kx] * input.data[row + ix as usize];
+                        }
+                    }
+                }
+                let v = if relu { acc.max(0.0) } else { acc };
+                out.set(oc, oy, ox, v);
+            }
+        }
+    }
+    out
+}
+
+/// Max-pooling with square window `k` and stride `s` (no padding — all the
+/// paper's models pool with exact tilings).
+pub fn maxpool2d(input: &Tensor, k: usize, stride: usize) -> Tensor {
+    assert!(k >= 1 && stride >= 1);
+    let out_h = (input.h - k) / stride + 1;
+    let out_w = (input.w - k) / stride + 1;
+    let mut out = Tensor::zeros(input.c, out_h, out_w);
+    for c in 0..input.c {
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(input.get(c, oy * stride + ky, ox * stride + kx));
+                    }
+                }
+                out.set(c, oy, ox, m);
+            }
+        }
+    }
+    out
+}
+
+/// Dense layer: `y = W x + b`, weight `[c_out, c_in]` row-major, input a
+/// flat vector. `bias` optional for IC-partitioned shards.
+pub fn dense(
+    input: &Tensor,
+    weight: &[f32],
+    bias: Option<&[f32]>,
+    c_out: usize,
+    relu: bool,
+) -> Tensor {
+    let c_in = input.len();
+    assert_eq!(weight.len(), c_out * c_in, "dense weight size mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "dense bias size mismatch");
+    }
+    let mut out = vec![0.0f32; c_out];
+    for (oc, o) in out.iter_mut().enumerate() {
+        let row = &weight[oc * c_in..(oc + 1) * c_in];
+        let mut acc = bias.map(|b| b[oc]).unwrap_or(0.0);
+        for (w, x) in row.iter().zip(&input.data) {
+            acc += w * x;
+        }
+        *o = if relu { acc.max(0.0) } else { acc };
+    }
+    Tensor::vector(out)
+}
+
+/// Elementwise ReLU.
+pub fn relu(input: &Tensor) -> Tensor {
+    Tensor {
+        c: input.c,
+        h: input.h,
+        w: input.w,
+        data: input.data.iter().map(|v| v.max(0.0)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::slice::*;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..n).map(|_| r.next_symmetric(1.0)).collect()
+    }
+
+    fn rand_tensor(c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+        Tensor::from_vec(c, h, w, rand_vec(c * h * w, seed))
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input.
+        let t = rand_tensor(2, 3, 3, 1);
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // [oc=2, ic=2, 1, 1] identity
+        let y = conv2d(&t, &w, None, 2, 1, 1, 1, 0, 0, false);
+        assert_eq!(y, t);
+    }
+
+    #[test]
+    fn conv_hand_computed() {
+        // 1 channel, 3x3 input, 2x2 kernel of ones, no pad, stride 1:
+        // each output = sum of the 2x2 window.
+        let t = Tensor::from_vec(1, 3, 3, (1..=9).map(|v| v as f32).collect());
+        let w = vec![1.0; 4];
+        let y = conv2d(&t, &w, None, 1, 2, 2, 1, 0, 0, false);
+        assert_eq!(y.data, vec![12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn conv_padding_and_stride() {
+        let t = Tensor::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = vec![1.0; 9]; // 3x3 ones
+        let y = conv2d(&t, &w, None, 1, 3, 3, 2, 1, 1, false);
+        // pad=1: padded 4x4, stride 2 -> 1x1... (2+2-3)/2+1 = 1
+        assert_eq!((y.h, y.w), (1, 1));
+        assert_eq!(y.data[0], 10.0); // sum of all elements
+    }
+
+    #[test]
+    fn conv_bias_and_relu() {
+        let t = Tensor::from_vec(1, 1, 1, vec![2.0]);
+        let w = vec![-3.0];
+        let y = conv2d(&t, &w, Some(&[1.0]), 1, 1, 1, 1, 0, 0, true);
+        assert_eq!(y.data[0], 0.0); // relu(-6+1) = 0
+        let y = conv2d(&t, &w, Some(&[1.0]), 1, 1, 1, 1, 0, 0, false);
+        assert_eq!(y.data[0], -5.0);
+    }
+
+    #[test]
+    fn maxpool_hand_computed() {
+        let t = Tensor::from_vec(1, 2, 4, vec![1.0, 5.0, 2.0, 0.0, 3.0, 4.0, 8.0, 1.0]);
+        let y = maxpool2d(&t, 2, 2);
+        assert_eq!(y.data, vec![5.0, 8.0]);
+    }
+
+    #[test]
+    fn dense_hand_computed() {
+        let x = Tensor::vector(vec![1.0, 2.0]);
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3x2
+        let y = dense(&x, &w, Some(&[0.0, 0.0, 1.0]), 3, false);
+        assert_eq!(y.data, vec![1.0, 2.0, 4.0]);
+    }
+
+    // ----- partition algebra: the numerical heart of the paper -----
+
+    #[test]
+    fn oc_partition_concat_equals_full_conv() {
+        let input = rand_tensor(3, 8, 8, 10);
+        let (co, kh, kw) = (6, 3, 3);
+        let w = rand_vec(co * 3 * kh * kw, 11);
+        let b = rand_vec(co, 12);
+        let full = conv2d(&input, &w, Some(&b), co, kh, kw, 1, 1, 1, true);
+
+        // Split into OC blocks 2/3/1 (uneven on purpose).
+        let blocks = [(0usize, 2usize), (2, 3), (5, 1)];
+        let parts: Vec<Tensor> = blocks
+            .iter()
+            .map(|&(s, n)| {
+                let ws = conv_weight_oc_slice(&w, co, 3, kh, kw, s, n);
+                let bs = &b[s..s + n];
+                conv2d(&input, &ws, Some(bs), n, kh, kw, 1, 1, 1, true)
+            })
+            .collect();
+        let joined = concat_channels(&parts);
+        assert!(joined.allclose(&full, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn ic_partition_partial_sums_equal_full_conv() {
+        let input = rand_tensor(6, 7, 7, 20);
+        let (co, ci, kh, kw) = (4, 6, 3, 3);
+        let w = rand_vec(co * ci * kh * kw, 21);
+        let b = rand_vec(co, 22);
+        let full = conv2d(&input, &w, Some(&b), co, kh, kw, 1, 1, 1, false);
+
+        let blocks = [(0usize, 2usize), (2, 3), (5, 1)];
+        let partials: Vec<Tensor> = blocks
+            .iter()
+            .map(|&(s, n)| {
+                let ws = conv_weight_ic_slice(&w, co, ci, kh, kw, s, n);
+                let xs = act_channel_slice(&input, s, n);
+                conv2d(&xs, &ws, None, co, kh, kw, 1, 1, 1, false)
+            })
+            .collect();
+        let mut sum = reduce_sum(&partials);
+        // bias added once after reduction
+        for oc in 0..co {
+            for i in 0..sum.h * sum.w {
+                sum.data[oc * sum.h * sum.w + i] += b[oc];
+            }
+        }
+        assert!(sum.allclose(&full, 1e-5, 1e-5), "diff={}", sum.max_abs_diff(&full));
+    }
+
+    #[test]
+    fn row_partition_with_halo_equals_full_conv() {
+        let input = rand_tensor(3, 12, 9, 30);
+        let (co, kh, kw, pad) = (4, 3, 3, 1usize);
+        let w = rand_vec(co * 3 * kh * kw, 31);
+        let b = rand_vec(co, 32);
+        let full = conv2d(&input, &w, Some(&b), co, kh, kw, 1, pad, pad, true);
+        assert_eq!(full.h, 12);
+
+        // Output rows split 5/4/3 across 3 "devices"; each shard takes its
+        // input rows plus (kh-1)/2 halo rows each side (pad materialized as
+        // zeros by act_row_slice_halo at the borders), then convolves with
+        // pad_h = 0.
+        let halo = (kh - 1) / 2;
+        let splits = [(0usize, 5usize), (5, 4), (9, 3)];
+        let parts: Vec<Tensor> = splits
+            .iter()
+            .map(|&(s, n)| {
+                // output row oy reads input rows [oy-halo, oy+halo]
+                let xs = act_row_slice_halo(&input, s, n, halo, halo);
+                conv2d(&xs, &w, Some(&b), co, kh, kw, 1, 0, pad, true)
+            })
+            .collect();
+        let joined = concat_rows(&parts);
+        assert!(joined.allclose(&full, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn dense_ic_partition_partial_sums_equal_full() {
+        let x = Tensor::vector(rand_vec(10, 40));
+        let (co, ci) = (5, 10);
+        let w = rand_vec(co * ci, 41);
+        let b = rand_vec(co, 42);
+        let full = dense(&x, &w, Some(&b), co, false);
+
+        let blocks = [(0usize, 4usize), (4, 6)];
+        let partials: Vec<Tensor> = blocks
+            .iter()
+            .map(|&(s, n)| {
+                let ws = dense_weight_ic_slice(&w, co, ci, s, n);
+                let xs = Tensor::vector(x.data[s..s + n].to_vec());
+                dense(&xs, &ws, None, co, false)
+            })
+            .collect();
+        let mut sum = reduce_sum(&partials);
+        for (v, bb) in sum.data.iter_mut().zip(&b) {
+            *v += bb;
+        }
+        assert!(sum.allclose(&full, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn dense_oc_partition_concat_equals_full() {
+        let x = Tensor::vector(rand_vec(8, 50));
+        let (co, ci) = (6, 8);
+        let w = rand_vec(co * ci, 51);
+        let b = rand_vec(co, 52);
+        let full = dense(&x, &w, Some(&b), co, true);
+        let blocks = [(0usize, 3usize), (3, 2), (5, 1)];
+        let parts: Vec<Tensor> = blocks
+            .iter()
+            .map(|&(s, n)| {
+                let ws = dense_weight_oc_slice(&w, co, ci, s, n);
+                dense(&x, &ws, Some(&b[s..s + n]), n, true)
+            })
+            .collect();
+        let joined = concat_channels(&parts);
+        assert!(joined.allclose(&full, 1e-6, 1e-6));
+    }
+}

@@ -1,0 +1,297 @@
+//! Tensor slicing for partition plans.
+//!
+//! Each partitioning strategy needs a different cut of weights and
+//! activations:
+//!  * **OC** — a contiguous block of output channels: conv weights
+//!    `[c_out, c_in, kh, kw]` sliced on dim 0 (the slice is contiguous);
+//!    dense weights `[c_out, c_in]` sliced on rows; bias sliced.
+//!  * **IC** — a contiguous block of input channels: conv weights sliced on
+//!    dim 1 (strided copy); dense weights sliced on columns; activations
+//!    sliced on channels.
+//!  * **H / rows** — a contiguous block of activation rows, optionally with
+//!    halo rows on each side (CoEdge), plus zero-padding materialization at
+//!    image borders so a shard can convolve without special-casing.
+
+use super::Tensor;
+
+/// Slice a conv weight `[c_out, c_in, kh, kw]` to output channels
+/// `[oc_start, oc_start+oc_count)`. Contiguous, O(copy).
+pub fn conv_weight_oc_slice(
+    w: &[f32],
+    c_out: usize,
+    c_in: usize,
+    kh: usize,
+    kw: usize,
+    oc_start: usize,
+    oc_count: usize,
+) -> Vec<f32> {
+    assert!(oc_start + oc_count <= c_out, "oc slice out of bounds");
+    let per_oc = c_in * kh * kw;
+    debug_assert_eq!(w.len(), c_out * per_oc);
+    w[oc_start * per_oc..(oc_start + oc_count) * per_oc].to_vec()
+}
+
+/// Slice a conv weight to input channels `[ic_start, ic_start+ic_count)`:
+/// strided gather over dim 1.
+pub fn conv_weight_ic_slice(
+    w: &[f32],
+    c_out: usize,
+    c_in: usize,
+    kh: usize,
+    kw: usize,
+    ic_start: usize,
+    ic_count: usize,
+) -> Vec<f32> {
+    assert!(ic_start + ic_count <= c_in, "ic slice out of bounds");
+    debug_assert_eq!(w.len(), c_out * c_in * kh * kw);
+    let k = kh * kw;
+    let mut out = Vec::with_capacity(c_out * ic_count * k);
+    for oc in 0..c_out {
+        let base = (oc * c_in + ic_start) * k;
+        out.extend_from_slice(&w[base..base + ic_count * k]);
+    }
+    out
+}
+
+/// Slice a dense weight `[c_out, c_in]` (row-major) to output rows.
+pub fn dense_weight_oc_slice(
+    w: &[f32],
+    c_out: usize,
+    c_in: usize,
+    oc_start: usize,
+    oc_count: usize,
+) -> Vec<f32> {
+    assert!(oc_start + oc_count <= c_out, "oc slice out of bounds");
+    debug_assert_eq!(w.len(), c_out * c_in);
+    w[oc_start * c_in..(oc_start + oc_count) * c_in].to_vec()
+}
+
+/// Slice a dense weight `[c_out, c_in]` to input columns
+/// `[ic_start, ic_start+ic_count)`.
+pub fn dense_weight_ic_slice(
+    w: &[f32],
+    c_out: usize,
+    c_in: usize,
+    ic_start: usize,
+    ic_count: usize,
+) -> Vec<f32> {
+    assert!(ic_start + ic_count <= c_in, "ic slice out of bounds");
+    debug_assert_eq!(w.len(), c_out * c_in);
+    let mut out = Vec::with_capacity(c_out * ic_count);
+    for oc in 0..c_out {
+        let base = oc * c_in + ic_start;
+        out.extend_from_slice(&w[base..base + ic_count]);
+    }
+    out
+}
+
+/// Channel slice of an activation (for IC-partitioned consumers).
+pub fn act_channel_slice(t: &Tensor, c_start: usize, c_count: usize) -> Tensor {
+    assert!(c_start + c_count <= t.c, "channel slice out of bounds");
+    let plane = t.h * t.w;
+    Tensor::from_vec(
+        c_count,
+        t.h,
+        t.w,
+        t.data[c_start * plane..(c_start + c_count) * plane].to_vec(),
+    )
+}
+
+/// Row slice of an activation with halo: rows
+/// `[row_start - halo_lo, row_start + row_count + halo_hi)`, clamped to the
+/// image and zero-filled where the halo extends past the border (matches
+/// SAME/explicit padding semantics of the full conv).
+pub fn act_row_slice_halo(
+    t: &Tensor,
+    row_start: usize,
+    row_count: usize,
+    halo_lo: usize,
+    halo_hi: usize,
+) -> Tensor {
+    assert!(row_start + row_count <= t.h, "row slice out of bounds");
+    let lo = row_start as isize - halo_lo as isize;
+    let hi = (row_start + row_count + halo_hi) as isize;
+    let out_h = (hi - lo) as usize;
+    let mut out = Tensor::zeros(t.c, out_h, t.w);
+    for c in 0..t.c {
+        for (oy, y) in (lo..hi).enumerate() {
+            if y < 0 || y >= t.h as isize {
+                continue; // zero padding outside the image
+            }
+            let src = t.idx(c, y as usize, 0);
+            let dst = out.idx(c, oy, 0);
+            out.data[dst..dst + t.w].copy_from_slice(&t.data[src..src + t.w]);
+        }
+    }
+    out
+}
+
+/// Row window with signed bounds `[lo, hi)`: rows outside the image are
+/// zero-filled (materialized conv padding). This is what a row-sharded
+/// worker convolves with `pad_h = 0`.
+pub fn act_rows_window(t: &Tensor, lo: isize, hi: isize) -> Tensor {
+    assert!(hi > lo, "empty window");
+    let out_h = (hi - lo) as usize;
+    let mut out = Tensor::zeros(t.c, out_h, t.w);
+    for c in 0..t.c {
+        for (oy, y) in (lo..hi).enumerate() {
+            if y < 0 || y >= t.h as isize {
+                continue;
+            }
+            let src = t.idx(c, y as usize, 0);
+            let dst = out.idx(c, oy, 0);
+            out.data[dst..dst + t.w].copy_from_slice(&t.data[src..src + t.w]);
+        }
+    }
+    out
+}
+
+/// Copy rows `[src_start, src_start+count)` of `src` into rows
+/// `[dst_start, dst_start+count)` of `dst` (same c / w). Used to assemble
+/// halo windows from received fragments.
+pub fn copy_rows_into(dst: &mut Tensor, dst_start: usize, src: &Tensor, src_start: usize, count: usize) {
+    assert_eq!((dst.c, dst.w), (src.c, src.w), "c/w mismatch in copy_rows_into");
+    assert!(src_start + count <= src.h && dst_start + count <= dst.h);
+    for c in 0..dst.c {
+        for r in 0..count {
+            let s = src.idx(c, src_start + r, 0);
+            let d = dst.idx(c, dst_start + r, 0);
+            let w = dst.w;
+            dst.data[d..d + w].copy_from_slice(&src.data[s..s + w]);
+        }
+    }
+}
+
+/// Concatenate tensors along the channel dim (inverse of
+/// `act_channel_slice` over a full tiling).
+pub fn concat_channels(parts: &[Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let (h, w) = (parts[0].h, parts[0].w);
+    let c: usize = parts.iter().map(|p| p.c).sum();
+    let mut data = Vec::with_capacity(c * h * w);
+    for p in parts {
+        assert_eq!((p.h, p.w), (h, w), "hw mismatch in concat_channels");
+        data.extend_from_slice(&p.data);
+    }
+    Tensor::from_vec(c, h, w, data)
+}
+
+/// Concatenate tensors along rows (inverse of a row tiling).
+pub fn concat_rows(parts: &[Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let (c, w) = (parts[0].c, parts[0].w);
+    let h: usize = parts.iter().map(|p| p.h).sum();
+    let mut out = Tensor::zeros(c, h, w);
+    let mut row_off = 0;
+    for p in parts {
+        assert_eq!((p.c, p.w), (c, w), "cw mismatch in concat_rows");
+        for ch in 0..c {
+            for y in 0..p.h {
+                let src = p.idx(ch, y, 0);
+                let dst = out.idx(ch, row_off + y, 0);
+                out.data[dst..dst + w].copy_from_slice(&p.data[src..src + w]);
+            }
+        }
+        row_off += p.h;
+    }
+    out
+}
+
+/// Sum a set of equal-shaped partial tensors (IC partial-sum reduction).
+pub fn reduce_sum(parts: &[Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let mut acc = parts[0].clone();
+    for p in &parts[1..] {
+        acc.add_assign(p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_tensor(c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        Tensor::from_vec(c, h, w, (0..c * h * w).map(|_| r.next_f32()).collect())
+    }
+
+    #[test]
+    fn oc_slice_concat_roundtrip_conv() {
+        let (co, ci, kh, kw) = (6, 3, 5, 5);
+        let mut r = SplitMix64::new(1);
+        let w: Vec<f32> = (0..co * ci * kh * kw).map(|_| r.next_f32()).collect();
+        let a = conv_weight_oc_slice(&w, co, ci, kh, kw, 0, 2);
+        let b = conv_weight_oc_slice(&w, co, ci, kh, kw, 2, 4);
+        let mut joined = a;
+        joined.extend(b);
+        assert_eq!(joined, w);
+    }
+
+    #[test]
+    fn ic_slice_tiling_covers_conv() {
+        let (co, ci, kh, kw) = (4, 6, 3, 3);
+        let mut r = SplitMix64::new(2);
+        let w: Vec<f32> = (0..co * ci * kh * kw).map(|_| r.next_f32()).collect();
+        let a = conv_weight_ic_slice(&w, co, ci, kh, kw, 0, 2);
+        let b = conv_weight_ic_slice(&w, co, ci, kh, kw, 2, 4);
+        assert_eq!(a.len() + b.len(), w.len());
+        // element (oc=1, ic=3, ky=1, kx=2) must appear in b at ic-local 1
+        let k = kh * kw;
+        let orig = w[(1 * ci + 3) * k + 1 * kw + 2];
+        let got = b[(1 * 4 + 1) * k + 1 * kw + 2];
+        assert_eq!(orig, got);
+    }
+
+    #[test]
+    fn dense_slices() {
+        let (co, ci) = (4, 6);
+        let w: Vec<f32> = (0..co * ci).map(|i| i as f32).collect();
+        let rows = dense_weight_oc_slice(&w, co, ci, 1, 2);
+        assert_eq!(rows, (6..18).map(|i| i as f32).collect::<Vec<_>>());
+        let cols = dense_weight_ic_slice(&w, co, ci, 2, 3);
+        assert_eq!(cols.len(), co * 3);
+        assert_eq!(cols[0..3], [2.0, 3.0, 4.0]);
+        assert_eq!(cols[3..6], [8.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn channel_slice_concat_roundtrip() {
+        let t = rand_tensor(6, 4, 5, 3);
+        let a = act_channel_slice(&t, 0, 2);
+        let b = act_channel_slice(&t, 2, 3);
+        let c = act_channel_slice(&t, 5, 1);
+        assert_eq!(concat_channels(&[a, b, c]), t);
+    }
+
+    #[test]
+    fn row_slice_concat_roundtrip_no_halo() {
+        let t = rand_tensor(3, 9, 4, 4);
+        let a = act_row_slice_halo(&t, 0, 3, 0, 0);
+        let b = act_row_slice_halo(&t, 3, 4, 0, 0);
+        let c = act_row_slice_halo(&t, 7, 2, 0, 0);
+        assert_eq!(concat_rows(&[a, b, c]), t);
+    }
+
+    #[test]
+    fn halo_zero_fill_at_borders() {
+        let t = rand_tensor(1, 4, 3, 5);
+        let s = act_row_slice_halo(&t, 0, 2, 2, 1);
+        assert_eq!(s.h, 5);
+        // first two rows are zero padding
+        assert!(s.data[0..6].iter().all(|v| *v == 0.0));
+        // row 2 of the slice == row 0 of the source
+        assert_eq!(s.get(0, 2, 1), t.get(0, 0, 1));
+        // last row == source row 2 (halo_hi=1 inside image)
+        assert_eq!(s.get(0, 4, 2), t.get(0, 2, 2));
+    }
+
+    #[test]
+    fn reduce_sum_partials() {
+        let a = Tensor::vector(vec![1.0, 2.0]);
+        let b = Tensor::vector(vec![3.0, 4.0]);
+        let c = Tensor::vector(vec![-1.0, -2.0]);
+        assert_eq!(reduce_sum(&[a, b, c]).data, vec![3.0, 4.0]);
+    }
+}

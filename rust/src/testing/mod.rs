@@ -1,0 +1,7 @@
+//! In-house property-testing substrate (the offline build has no proptest).
+//!
+//! [`prop::check`] runs a property over many generated cases from a seeded
+//! PRNG; on failure it retries progressively "smaller" seeds derived from
+//! the failing case (shrinking-lite) and reports the smallest failure.
+
+pub mod prop;

@@ -1,0 +1,155 @@
+//! Seeded property testing: generators + a check loop with failure
+//! minimization over the generator's size parameter.
+//!
+//! Usage:
+//! ```ignore
+//! use iop::testing::prop::{check, Gen};
+//! check("split tiles exactly", 500, |g| {
+//!     let n = g.usize_in(0, 4096);
+//!     let shares = g.shares(g.usize_in(1, 8));
+//!     let parts = proportional_split(n, &shares);
+//!     prop_assert(parts.iter().sum::<usize>() == n, "must tile")
+//! });
+//! ```
+
+use crate::util::prng::SplitMix64;
+
+/// Generator handle passed to properties: seeded randomness plus a size
+/// parameter the shrinker lowers on failure.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Current size cap (shrinking lowers this).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: SplitMix64::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    /// Usize in `[lo, hi]`, additionally capped by the current size.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        self.rng.range(lo, hi.max(lo))
+    }
+
+    /// A positive f64 in (0, scale].
+    pub fn pos_f64(&mut self, scale: f64) -> f64 {
+        (self.rng.next_f32() as f64).max(1e-6) * scale
+    }
+
+    /// `n` positive shares (device capabilities).
+    pub fn shares(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.pos_f64(10.0)).collect()
+    }
+
+    /// Vector of f32 in [-1, 1).
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.next_symmetric(1.0)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.range(0, items.len() - 1)]
+    }
+}
+
+/// Property outcome. Use [`prop_assert`] to build these.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for properties.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics with the smallest
+/// reproduction found (seed + size) on failure.
+pub fn check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen) -> PropResult) {
+    let base_seed = crate::util::prng::fnv1a(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 1 + (case * 128 / cases.max(1)); // grow sizes over the run
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = property(&mut g) {
+            // Shrink: retry the same seed at smaller sizes, keep the
+            // smallest size that still fails.
+            let mut smallest = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g = Gen::new(seed, s);
+                match property(&mut g) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, size={}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 is u64", 200, |g| {
+            let v = g.u64();
+            prop_assert(v == v, "reflexive")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 10, |g| {
+            let n = g.usize_in(0, 100);
+            prop_assert(n > 100_000, "n too small (as designed)")
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut g = Gen::new(42, 1000);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.pos_f64(5.0);
+            assert!(f > 0.0 && f <= 5.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(7, 10);
+        let mut b = Gen::new(7, 10);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Dependency-free substrates: PRNG (mirrored in python), JSON, unit
+//! formatting, and ASCII tables. See DESIGN.md §1 for why these are in-house.
+
+pub mod json;
+pub mod prng;
+pub mod table;
+pub mod units;

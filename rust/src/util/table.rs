@@ -1,0 +1,139 @@
+//! ASCII table rendering for CLI reports and bench output.
+//!
+//! The bench harnesses print the same rows the paper's figures plot; this
+//! module gives them a uniform, aligned presentation.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            aligns: header
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override alignments (defaults: first column left, rest right).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            out.push('+');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let emit_row = |out: &mut String, cells: &[String], aligns: &[Align]| {
+            out.push('|');
+            for ((cell, w), a) in cells.iter().zip(&widths).zip(aligns) {
+                let pad = w - cell.chars().count();
+                match a {
+                    Align::Left => {
+                        out.push(' ');
+                        out.push_str(cell);
+                        out.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        out.push_str(&" ".repeat(pad + 1));
+                        out.push_str(cell);
+                        out.push(' ');
+                    }
+                }
+                out.push('|');
+            }
+            out.push('\n');
+        };
+        sep(&mut out);
+        emit_row(&mut out, &self.header, &vec![Align::Left; ncol]);
+        sep(&mut out);
+        for row in &self.rows {
+            emit_row(&mut out, row, &self.aligns);
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "latency", "mem"]);
+        t.row_strs(&["lenet", "1.2 ms", "3 KiB"]);
+        t.row_strs(&["vgg19", "250.0 ms", "120 MiB"]);
+        let s = t.render();
+        assert!(s.contains("| model "));
+        assert!(s.contains("lenet"));
+        // every line same width
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn unicode_width_by_chars() {
+        let mut t = Table::new(&["x"]);
+        t.row_strs(&["µs-wide"]);
+        let s = t.render();
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+}

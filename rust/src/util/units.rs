@@ -1,0 +1,104 @@
+//! Human-readable formatting for the quantities the cost model trades in:
+//! bytes, FLOPs, seconds, and rates.
+
+/// Format a byte count with binary prefixes ("12.3 MiB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a FLOP count with SI prefixes ("1.23 GFLOP").
+pub fn fmt_flops(flops: f64) -> String {
+    const UNITS: [&str; 5] = ["FLOP", "KFLOP", "MFLOP", "GFLOP", "TFLOP"];
+    let mut v = flops;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Format seconds adaptively ("1.23 s", "4.56 ms", "7.89 µs").
+pub fn fmt_secs(secs: f64) -> String {
+    let a = secs.abs();
+    if a >= 1.0 {
+        format!("{secs:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a rate per second ("3.21 K/s").
+pub fn fmt_rate(per_sec: f64) -> String {
+    const UNITS: [&str; 4] = ["", "K", "M", "G"];
+    let mut v = per_sec;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    format!("{v:.2} {}/s", UNITS[u])
+}
+
+/// Percentage delta of `new` relative to `base`: negative = improvement
+/// (smaller is better for latency/memory).
+pub fn pct_delta(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (new - base) / base * 100.0
+    }
+}
+
+/// Saving of `new` vs `base` in percent (positive = `new` is smaller).
+pub fn pct_saving(base: f64, new: f64) -> f64 {
+    -pct_delta(base, new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_prefixes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn flops_prefixes() {
+        assert_eq!(fmt_flops(500.0), "500.00 FLOP");
+        assert_eq!(fmt_flops(2.5e9), "2.50 GFLOP");
+    }
+
+    #[test]
+    fn secs_adaptive() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0023), "2.300 ms");
+        assert_eq!(fmt_secs(4.2e-6), "4.200 µs");
+        assert_eq!(fmt_secs(3.0e-9), "3.0 ns");
+    }
+
+    #[test]
+    fn savings() {
+        assert!((pct_saving(10.0, 8.0) - 20.0).abs() < 1e-12);
+        assert!((pct_delta(10.0, 12.0) - 20.0).abs() < 1e-12);
+        assert_eq!(pct_delta(0.0, 5.0), 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Integration: the CLI surface (library-level invocation of each
+//! subcommand, flag handling, JSON output paths).
+
+use iop::cli;
+
+fn run(args: &[&str]) -> anyhow::Result<()> {
+    cli::run(args.iter().map(|s| s.to_string()).collect())
+}
+
+#[test]
+fn help_and_models() {
+    run(&["help"]).unwrap();
+    run(&["models"]).unwrap();
+    run(&["models", "--json"]).unwrap();
+}
+
+#[test]
+fn plan_all_strategies() {
+    for s in ["oc", "coedge", "iop"] {
+        run(&["plan", "--model", "lenet", "--strategy", s]).unwrap();
+        run(&["plan", "--model", "vgg11", "--strategy", s, "--json"]).unwrap();
+    }
+}
+
+#[test]
+fn compare_and_sweep() {
+    run(&["compare", "--models", "lenet"]).unwrap();
+    run(&["compare", "--models", "lenet,alexnet", "--json"]).unwrap();
+    run(&["sweep", "--models", "vgg11", "--t-est-ms", "1,8", "--json"]).unwrap();
+}
+
+#[test]
+fn simulate_both_modes() {
+    run(&["simulate", "--model", "alexnet", "--strategy", "iop"]).unwrap();
+    run(&["simulate", "--model", "lenet", "--strategy", "oc", "--loose"]).unwrap();
+}
+
+#[test]
+fn exec_reference_backend() {
+    run(&["exec", "--model", "lenet", "--strategy", "iop"]).unwrap();
+}
+
+#[test]
+fn emit_plans_writes_json() {
+    let out = std::env::temp_dir().join("iop_test_plans.json");
+    let out_s = out.to_str().unwrap();
+    run(&["emit-plans", "--models", "lenet", "--out", out_s]).unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    let j = iop::util::json::Json::parse(&text).unwrap();
+    assert!(j.get("lenet").get("strategies").as_obj().is_some());
+    let _ = std::fs::remove_file(out);
+}
+
+#[test]
+fn error_paths() {
+    assert!(run(&["plan", "--model", "resnet50"]).is_err());
+    assert!(run(&["plan", "--model", "lenet", "--strategy", "nope"]).is_err());
+    assert!(run(&["frobnicate"]).is_err());
+    assert!(run(&["plan", "--model", "lenet", "--typo-flag", "1"]).is_err());
+}
+
+#[test]
+fn cluster_flags_respected() {
+    run(&[
+        "plan",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--devices",
+        "5",
+        "--flops",
+        "1.5",
+        "--bandwidth-mbps",
+        "10",
+        "--t-est-ms",
+        "2",
+        "--mem-mib",
+        "256",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn scaling_command() {
+    run(&["scaling", "--model", "lenet", "--counts", "1,3,5"]).unwrap();
+    run(&["scaling", "--model", "alexnet", "--counts", "2,4", "--json"]).unwrap();
+}
+
+#[test]
+fn gantt_simulation() {
+    run(&["simulate", "--model", "lenet", "--strategy", "iop", "--gantt"]).unwrap();
+}
+
+#[test]
+fn model_and_cluster_files() {
+    let dir = std::env::temp_dir();
+    let model_path = dir.join("iop_test_model.json");
+    let cluster_path = dir.join("iop_test_cluster.json");
+    std::fs::write(
+        &model_path,
+        r#"{"name": "filetest", "input": [1, 12, 12], "ops": [
+            {"type": "conv", "c_out": 4, "k": 3, "pad": 1},
+            {"type": "maxpool", "k": 2},
+            {"type": "dense", "c_out": 10, "relu": false}
+        ]}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        &cluster_path,
+        r#"{"devices": [{"gflops": 1.0}, {"gflops": 0.5}], "bandwidth_mbps": 20, "t_est_ms": 1}"#,
+    )
+    .unwrap();
+    run(&[
+        "plan",
+        "--model-file",
+        model_path.to_str().unwrap(),
+        "--cluster-file",
+        cluster_path.to_str().unwrap(),
+        "--strategy",
+        "iop",
+    ])
+    .unwrap();
+    run(&[
+        "exec",
+        "--model-file",
+        model_path.to_str().unwrap(),
+        "--strategy",
+        "oc",
+    ])
+    .unwrap();
+    let _ = std::fs::remove_file(model_path);
+    let _ = std::fs::remove_file(cluster_path);
+}
+
+#[test]
+fn shipped_config_examples_parse() {
+    // The configs in examples/configs/ must stay valid.
+    let m = iop::config::load_model("examples/configs/custom_cnn.json").unwrap();
+    assert_eq!(m.name, "custom_cnn");
+    let c = iop::config::load_cluster("examples/configs/edge_cluster.json").unwrap();
+    assert_eq!(c.m(), 4);
+    // and plan + execute end to end
+    for s in ["oc", "coedge", "iop"] {
+        run(&[
+            "exec",
+            "--model-file",
+            "examples/configs/custom_cnn.json",
+            "--cluster-file",
+            "examples/configs/edge_cluster.json",
+            "--strategy",
+            s,
+        ])
+        .unwrap();
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration: every planner × every zoo model × several cluster shapes
+//! produces structurally valid plans (paper eqs. 1–5) with the expected
+//! communication signatures.
+
+use iop::cost;
+use iop::device::{profiles, Cluster, Device};
+use iop::model::zoo;
+use iop::partition::{CommStep, SliceKind, Strategy};
+use iop::pipeline;
+
+fn clusters() -> Vec<Cluster> {
+    vec![
+        profiles::paper_default(),
+        profiles::heterogeneous(),
+        Cluster::homogeneous(2, 0.6e9, 512 << 20, 6.25e6, 4e-3),
+        Cluster::homogeneous(5, 0.3e9, 256 << 20, 6.25e6, 2e-3),
+        Cluster::homogeneous(1, 1e9, 1 << 30, 6.25e6, 1e-3),
+    ]
+}
+
+#[test]
+fn all_plans_validate_everywhere() {
+    for cluster in clusters() {
+        for model in zoo::all_models() {
+            for strategy in Strategy::all() {
+                let plan = pipeline::plan(&model, &cluster, strategy);
+                plan.validate(&model).unwrap_or_else(|e| {
+                    panic!("{} {} m={}: {e}", model.name, strategy.name(), cluster.m())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn oc_connection_count_formula() {
+    // OC: m(m-1) connections per interior stage + (m-1) final gather.
+    for cluster in clusters() {
+        let m = cluster.m();
+        let model = zoo::alexnet();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Oc);
+        let stages = model.stages().len();
+        assert_eq!(
+            plan.total_connections(),
+            (stages - 1) * m * (m - 1) + (m - 1),
+            "m={m}"
+        );
+    }
+}
+
+#[test]
+fn iop_has_fewest_connections() {
+    let cluster = profiles::paper_default();
+    for model in zoo::fig4_models() {
+        let oc = pipeline::plan(&model, &cluster, Strategy::Oc).total_connections();
+        let iop = pipeline::plan(&model, &cluster, Strategy::Iop).total_connections();
+        assert!(iop < oc, "{}: iop={iop} oc={oc}", model.name);
+    }
+}
+
+#[test]
+fn iop_pairs_have_no_internal_comm() {
+    let cluster = profiles::paper_default();
+    for model in zoo::all_models() {
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        for (i, sp) in plan.stages.iter().enumerate() {
+            let is_ic_stage = sp
+                .slices
+                .iter()
+                .any(|s| matches!(s, SliceKind::Ic { .. }));
+            if is_ic_stage {
+                assert!(
+                    matches!(sp.pre_comm, CommStep::None),
+                    "{} stage {i}: IC stage must have free entry",
+                    model.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn coedge_never_partitions_fc() {
+    let cluster = profiles::paper_default();
+    for model in zoo::all_models() {
+        let plan = pipeline::plan(&model, &cluster, Strategy::CoEdge);
+        for sp in &plan.stages {
+            if model.ops[sp.stage.op_idx].kind_tag() == "fc" {
+                assert!(sp.slices.iter().all(|s| matches!(s, SliceKind::Replicate)));
+            }
+        }
+    }
+}
+
+#[test]
+fn memory_constraint_checked_for_default_testbed() {
+    // eq. (1): all three strategies fit the 512 MiB paper testbed for the
+    // Fig. 4 models.
+    let cluster = profiles::paper_default();
+    for model in zoo::fig4_models() {
+        for strategy in Strategy::all() {
+            let plan = pipeline::plan(&model, &cluster, strategy);
+            iop::cost::memory::check_feasible(&model, &plan, &cluster).unwrap_or_else(|e| {
+                panic!("{} {}: {e}", model.name, strategy.name())
+            });
+        }
+    }
+}
+
+#[test]
+fn comm_bytes_scale_with_model_size() {
+    let cluster = profiles::paper_default();
+    let small = pipeline::plan(&zoo::lenet(), &cluster, Strategy::Oc).total_comm_bytes();
+    let big = pipeline::plan(&zoo::vgg19(), &cluster, Strategy::Oc).total_comm_bytes();
+    assert!(big > 100 * small);
+}
+
+#[test]
+fn costs_consistent_across_cluster_scaling() {
+    // Doubling every device's speed should roughly halve compute time and
+    // leave comm untouched.
+    let model = zoo::alexnet();
+    let base = profiles::paper_default();
+    let mut fast = base.clone();
+    for d in &mut fast.devices {
+        d.flops_per_sec *= 2.0;
+    }
+    for strategy in Strategy::all() {
+        let c1 = cost::evaluate(&model, &base, &pipeline::plan(&model, &base, strategy));
+        let c2 = cost::evaluate(&model, &fast, &pipeline::plan(&model, &fast, strategy));
+        assert!((c2.compute_secs - c1.compute_secs / 2.0).abs() / c1.compute_secs < 0.05);
+    }
+}
+
+#[test]
+fn two_device_cluster_matches_paper_structure() {
+    // The original AlexNet OC split was m=2; sanity-check that shape.
+    let cluster = Cluster::new(
+        vec![Device::new(0.6e9, 512 << 20); 2],
+        6.25e6,
+        4e-3,
+    );
+    let model = zoo::alexnet();
+    let plan = pipeline::plan(&model, &cluster, Strategy::Oc);
+    plan.validate(&model).unwrap();
+    for sp in &plan.stages {
+        let counts: Vec<usize> = sp.slices.iter().map(|s| s.count()).collect();
+        let c_out = model.ops[sp.stage.op_idx].c_out().unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), c_out);
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: the PJRT path — AOT artifacts load, execute, and the
+//! fully distributed PJRT execution equals both the centralized PJRT
+//! executable and the rust reference ops.
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the
+//! artifacts directory is absent so `cargo test` works mid-development.
+
+use iop::device::profiles;
+use iop::exec::compute::centralized_inference;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{run_plan, Backend, ExecOptions};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::runtime::{Manifest, Runtime};
+use iop::tensor::Tensor;
+
+const ART: &str = "artifacts";
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new(ART).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn manifest_loads_and_names_files() {
+    if !artifacts_ready() {
+        return;
+    }
+    let man = Manifest::load(ART).unwrap();
+    assert!(man.entries.contains_key("lenet/central"));
+    assert!(man.entries.contains_key("vgg_mini/central"));
+    for (key, e) in &man.entries {
+        assert!(
+            std::path::Path::new(&man.path_of(e)).exists(),
+            "{key}: missing {}",
+            e.file
+        );
+    }
+}
+
+#[test]
+fn central_executable_matches_reference_ops() {
+    if !artifacts_ready() {
+        return;
+    }
+    let man = Manifest::load(ART).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    for name in ["lenet", "vgg_mini"] {
+        let model = zoo::by_name(name).unwrap();
+        let wb = WeightBundle::generate(&model);
+        let input = model_input(&model);
+        let expect = centralized_inference(&model, &wb, &input);
+
+        let entry = man.get(&format!("{name}/central")).unwrap();
+        let module = rt.load_hlo_text(&man.path_of(entry)).unwrap();
+        // inputs: activation + (w, b) flat per weighted op, in op order
+        let mut inputs = vec![input];
+        for op in model.ops.iter().filter(|o| o.is_weighted()) {
+            inputs.push(Tensor::vector(wb.w(&op.name).to_vec()));
+            inputs.push(Tensor::vector(wb.b(&op.name).to_vec()));
+        }
+        let out = module.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(
+            out[0].allclose(&expect, 1e-4, 1e-5),
+            "{name}: diff={}",
+            out[0].max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn distributed_pjrt_equals_centralized_lenet() {
+    if !artifacts_ready() {
+        return;
+    }
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let expect = centralized_inference(&model, &wb, &model_input(&model));
+    for s in Strategy::all() {
+        let plan = pipeline::plan(&model, &cluster, s);
+        let got = run_plan(
+            &model,
+            &plan,
+            &ExecOptions {
+                backend: Backend::Pjrt {
+                    artifacts_dir: ART.to_string(),
+                },
+                input: None,
+            },
+        )
+        .unwrap();
+        assert!(
+            got.output.allclose(&expect, 1e-4, 1e-5),
+            "{}: diff={}",
+            s.name(),
+            got.output.max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn distributed_pjrt_equals_centralized_vgg_mini() {
+    if !artifacts_ready() {
+        return;
+    }
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let expect = centralized_inference(&model, &wb, &model_input(&model));
+    for s in Strategy::all() {
+        let plan = pipeline::plan(&model, &cluster, s);
+        let got = run_plan(
+            &model,
+            &plan,
+            &ExecOptions {
+                backend: Backend::Pjrt {
+                    artifacts_dir: ART.to_string(),
+                },
+                input: None,
+            },
+        )
+        .unwrap();
+        assert!(
+            got.output.allclose(&expect, 1e-4, 1e-5),
+            "{}: diff={}",
+            s.name(),
+            got.output.max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn bad_manifest_key_is_a_clean_error() {
+    if !artifacts_ready() {
+        return;
+    }
+    let man = Manifest::load(ART).unwrap();
+    assert!(man.get("nope/never").is_err());
+}

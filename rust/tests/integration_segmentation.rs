@@ -1,0 +1,133 @@
+//! Integration: segmentation solvers (Algorithm 1 greedy, exact DP,
+//! exhaustive oracle) and the paper-shape properties of the resulting
+//! IOP plans.
+
+use iop::device::profiles;
+use iop::model::zoo;
+use iop::partition::plan::validate_segments;
+use iop::partition::{Segment, Strategy};
+use iop::pipeline;
+use iop::segmentation::{dp, exhaustive, greedy, segmentation_cost};
+
+#[test]
+fn greedy_dp_exhaustive_agree_on_validity() {
+    let cluster = profiles::paper_default();
+    for m in zoo::all_models() {
+        let n = m.stages().len();
+        validate_segments(&greedy(&m, &cluster), n).unwrap();
+        validate_segments(&dp(&m, &cluster), n).unwrap();
+        if n <= 20 {
+            validate_segments(&exhaustive(&m, &cluster), n).unwrap();
+        }
+    }
+}
+
+#[test]
+fn dp_is_optimal_certified_by_exhaustive() {
+    let cluster = profiles::paper_default();
+    for m in [zoo::lenet(), zoo::alexnet(), zoo::vgg11(), zoo::vgg16()] {
+        let d = segmentation_cost(&m, &cluster, &dp(&m, &cluster));
+        let e = segmentation_cost(&m, &cluster, &exhaustive(&m, &cluster));
+        assert!((d - e).abs() < 1e-9, "{}: dp={d} vs exhaustive={e}", m.name);
+    }
+}
+
+#[test]
+fn greedy_within_ten_percent_of_optimal() {
+    // Algorithm 1 is near-optimal on the evaluation models (the ablation
+    // bench reports the exact gaps).
+    let cluster = profiles::paper_default();
+    for m in zoo::all_models() {
+        let g = segmentation_cost(&m, &cluster, &greedy(&m, &cluster));
+        let d = segmentation_cost(&m, &cluster, &dp(&m, &cluster));
+        assert!(g <= d * 1.10, "{}: greedy={g} optimal={d}", m.name);
+    }
+}
+
+#[test]
+fn greedy_sensitive_to_t_est() {
+    // As connections get more expensive, pairing (fewer connections)
+    // should not decrease.
+    let m = zoo::vgg19();
+    let pairs = |t: f64| {
+        greedy(&m, &profiles::paper_with_t_est(t))
+            .iter()
+            .filter(|s| matches!(s, Segment::Pair(_)))
+            .count()
+    };
+    assert!(pairs(0.008) >= pairs(0.001), "{} vs {}", pairs(0.008), pairs(0.001));
+}
+
+#[test]
+fn classifier_is_paired_where_fc_compute_dominates() {
+    // The FC phase is where IOP beats CoEdge; Algorithm 1 must pair it on
+    // the FC-heavy ImageNet models. (LeNet's classifier is so small that
+    // at the default t_est pairing only pays off under memory pressure —
+    // see `memory_pressure_forces_fc_pairing` and EXPERIMENTS.md.)
+    let cluster = profiles::paper_default();
+    for m in [zoo::alexnet(), zoo::vgg11()] {
+        let fc_start = m
+            .stages()
+            .iter()
+            .position(|s| m.ops[s.op_idx].kind_tag() == "fc")
+            .unwrap();
+        let segs = greedy(&m, &cluster);
+        assert!(
+            segs.iter()
+                .any(|s| matches!(s, Segment::Pair(i) if *i + 1 >= fc_start)),
+            "{}: {segs:?}",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn iop_beats_both_baselines_on_fig4_models() {
+    // The headline Fig. 4 property, end to end through the real planners.
+    let cluster = profiles::paper_default();
+    for m in zoo::fig4_models() {
+        let oc = pipeline::plan_and_evaluate(&m, &cluster, Strategy::Oc).1.total_secs;
+        let co = pipeline::plan_and_evaluate(&m, &cluster, Strategy::CoEdge).1.total_secs;
+        let iop = pipeline::plan_and_evaluate(&m, &cluster, Strategy::Iop).1.total_secs;
+        assert!(iop < co && co < oc, "{}: {iop} / {co} / {oc}", m.name);
+    }
+}
+
+#[test]
+fn iop_minimal_across_fig6_sweep() {
+    // Fig. 6: "For the same connection latency, IOP always achieves
+    // minimal inference time" — across the whole VGG family and sweep.
+    for t_ms in [1.0, 2.0, 4.0, 8.0] {
+        let cluster = profiles::paper_with_t_est(t_ms * 1e-3);
+        for m in zoo::fig6_models() {
+            let oc = pipeline::plan_and_evaluate(&m, &cluster, Strategy::Oc).1.total_secs;
+            let co = pipeline::plan_and_evaluate(&m, &cluster, Strategy::CoEdge).1.total_secs;
+            let iop = pipeline::plan_and_evaluate(&m, &cluster, Strategy::Iop).1.total_secs;
+            assert!(
+                iop <= co.min(oc),
+                "{} @ {t_ms}ms: iop={iop} co={co} oc={oc}",
+                m.name
+            );
+        }
+    }
+}
+
+#[test]
+fn iop_saving_vs_oc_grows_with_t_est() {
+    // Fig. 6's headline trend.
+    for m in zoo::fig6_models() {
+        let saving = |t: f64| {
+            let c = profiles::paper_with_t_est(t);
+            let oc = pipeline::plan_and_evaluate(&m, &c, Strategy::Oc).1.total_secs;
+            let iop = pipeline::plan_and_evaluate(&m, &c, Strategy::Iop).1.total_secs;
+            (oc - iop) / oc
+        };
+        assert!(
+            saving(0.008) > saving(0.001),
+            "{}: {} vs {}",
+            m.name,
+            saving(0.008),
+            saving(0.001)
+        );
+    }
+}

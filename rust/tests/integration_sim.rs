@@ -1,0 +1,113 @@
+//! Integration: the discrete-event simulator against the analytic model,
+//! physical-consistency invariants, and failure-injection style edge
+//! cases (degenerate clusters, zero bandwidth margins).
+
+use iop::cost;
+use iop::device::{profiles, Cluster, Device};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::sim::{simulate, SimConfig};
+
+#[test]
+fn strict_equals_analytic_for_all_models_and_strategies() {
+    let cluster = profiles::paper_default();
+    for m in zoo::all_models() {
+        for s in Strategy::all() {
+            let plan = pipeline::plan(&m, &cluster, s);
+            let analytic = cost::evaluate(&m, &cluster, &plan).total_secs;
+            let sim = simulate(&m, &cluster, &plan, SimConfig::default()).total_secs;
+            assert!(
+                (sim - analytic).abs() / analytic < 1e-9,
+                "{} {}",
+                m.name,
+                s.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn loose_overlap_helps_iop_most() {
+    // IOP's pair interiors have no comm, so compute/comm overlap in loose
+    // mode should help; it must never hurt.
+    let cluster = profiles::paper_default();
+    let loose = SimConfig {
+        strict_barriers: false,
+        record_trace: false,
+    };
+    for m in zoo::fig4_models() {
+        for s in Strategy::all() {
+            let plan = pipeline::plan(&m, &cluster, s);
+            let strict = simulate(&m, &cluster, &plan, SimConfig::default()).total_secs;
+            let l = simulate(&m, &cluster, &plan, loose).total_secs;
+            assert!(l <= strict + 1e-12, "{} {}", m.name, s.name());
+        }
+    }
+}
+
+#[test]
+fn traces_consistent_and_makespan_matches() {
+    let cluster = profiles::heterogeneous();
+    for s in Strategy::all() {
+        let m = zoo::alexnet();
+        let plan = pipeline::plan(&m, &cluster, s);
+        for strict in [true, false] {
+            let r = simulate(
+                &m,
+                &cluster,
+                &plan,
+                SimConfig {
+                    strict_barriers: strict,
+                    record_trace: true,
+                },
+            );
+            r.trace.check_consistency().unwrap();
+            assert!((r.trace.makespan() - r.total_secs).abs() < 1e-9);
+            // device busy time never exceeds makespan
+            for j in 0..cluster.m() {
+                assert!(r.trace.device_busy_secs(j) <= r.total_secs + 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn stage_times_monotone() {
+    let cluster = profiles::paper_default();
+    let m = zoo::vgg11();
+    let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+    let r = simulate(&m, &cluster, &plan, SimConfig::default());
+    let mut prev = 0.0;
+    for (comm_end, compute_end) in r.stage_times {
+        assert!(compute_end + 1e-12 >= prev);
+        assert!(compute_end + 1e-12 >= comm_end.min(compute_end));
+        prev = compute_end;
+    }
+}
+
+#[test]
+fn extreme_bandwidth_limits() {
+    // Starved link: comm dominates; generous link: compute dominates.
+    let m = zoo::lenet();
+    let slow = Cluster::homogeneous(3, 0.6e9, 512 << 20, 1e3, 0.0);
+    let fast = Cluster::homogeneous(3, 0.6e9, 512 << 20, 1e12, 0.0);
+    for s in Strategy::all() {
+        let p_slow = pipeline::plan(&m, &slow, s);
+        let p_fast = pipeline::plan(&m, &fast, s);
+        let t_slow = simulate(&m, &slow, &p_slow, SimConfig::default()).total_secs;
+        let t_fast = simulate(&m, &fast, &p_fast, SimConfig::default()).total_secs;
+        assert!(t_slow > t_fast, "{}", s.name());
+    }
+}
+
+#[test]
+fn single_device_has_no_messages() {
+    let c = Cluster::new(vec![Device::new(1e9, 1 << 30)], 6.25e6, 4e-3);
+    for s in Strategy::all() {
+        let m = zoo::lenet();
+        let plan = pipeline::plan(&m, &c, s);
+        let r = simulate(&m, &c, &plan, SimConfig::default());
+        assert_eq!(r.trace.medium_busy_secs(), 0.0, "{}", s.name());
+    }
+}

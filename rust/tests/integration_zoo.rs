@@ -1,0 +1,63 @@
+//! Integration: Table 1 — the model zoo matches the paper's inventory and
+//! the classic architectures' known shapes/parameter counts.
+
+use iop::model::{zoo, Shape};
+
+#[test]
+fn table1_inventory() {
+    let t = zoo::table1();
+    assert_eq!(t.len(), 3);
+    assert_eq!(t[0].dataset, "MNIST");
+    assert_eq!(t[1].dataset, "ImageNet");
+    for info in &t {
+        assert!(zoo::by_name(info.name).is_some());
+    }
+}
+
+#[test]
+fn conv_fc_counts_match_paper_table() {
+    for (name, conv, fc) in [("lenet", 2, 3), ("alexnet", 5, 3), ("vgg11", 8, 3)] {
+        let m = zoo::by_name(name).unwrap();
+        assert_eq!(m.count_kind("conv"), conv, "{name}");
+        assert_eq!(m.count_kind("fc"), fc, "{name}");
+    }
+}
+
+#[test]
+fn classic_flop_counts() {
+    // Anchors from the literature (single-image forward, MAC = 2 FLOPs):
+    // AlexNet ≈ 0.7 GMAC -> 1.4+ GFLOP of conv+fc; VGG16 ≈ 15.5 GMAC.
+    let alex = zoo::alexnet().total_flops();
+    assert!((1.4e9..2.6e9).contains(&alex), "alexnet {alex:e}");
+    let v16 = zoo::vgg16().total_flops();
+    assert!((30e9..32e9).contains(&v16), "vgg16 {v16:e}");
+}
+
+#[test]
+fn input_shapes() {
+    assert_eq!(zoo::lenet().input, Shape::new(1, 28, 28));
+    assert_eq!(zoo::alexnet().input, Shape::new(3, 224, 224));
+    for d in [11, 13, 16, 19] {
+        assert_eq!(zoo::vgg(d).input, Shape::new(3, 224, 224));
+    }
+}
+
+#[test]
+fn stage_structure_alternates_weighted_heads() {
+    for m in zoo::all_models() {
+        for st in m.stages() {
+            assert!(m.ops[st.op_idx].is_weighted());
+            for i in st.op_idx + 1..st.tail_end {
+                assert!(!m.ops[i].is_weighted());
+            }
+        }
+    }
+}
+
+#[test]
+fn fig6_family_ordering() {
+    let f: Vec<f64> = zoo::fig6_models().iter().map(|m| m.total_flops()).collect();
+    assert!(f.windows(2).all(|w| w[0] < w[1]));
+    let names: Vec<String> = zoo::fig6_models().iter().map(|m| m.name.clone()).collect();
+    assert_eq!(names, ["vgg11", "vgg13", "vgg16", "vgg19"]);
+}

@@ -1,0 +1,239 @@
+//! Property-based invariants over the whole planning stack, driven by the
+//! in-house `testing::prop` substrate (seeded generation + shrink-lite).
+
+use iop::cost;
+use iop::device::{Cluster, Device};
+use iop::model::{zoo, Model};
+use iop::partition::split::{proportional_split, proportional_split_min, ranges};
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::testing::prop::{check, prop_assert, Gen};
+use iop::util::json::Json;
+
+fn gen_cluster(g: &mut Gen) -> Cluster {
+    let m = g.usize_in(1, 6);
+    let devices: Vec<Device> = (0..m)
+        .map(|_| Device::new(g.pos_f64(2e9).max(1e7), 1 << 30))
+        .collect();
+    Cluster::new(devices, g.pos_f64(100e6).max(1e5), g.f32() as f64 * 0.01)
+}
+
+fn gen_model(g: &mut Gen) -> Model {
+    let models: [&str; 7] = ["lenet", "alexnet", "vgg11", "vgg13", "vgg16", "vgg19", "vgg_mini"];
+    zoo::by_name(*g.choose(&models)).unwrap()
+}
+
+#[test]
+fn prop_split_tiles_exactly() {
+    check("split tiles exactly", 400, |g| {
+        let n = g.usize_in(0, 4096);
+        let k = g.usize_in(1, 8);
+        let shares = g.shares(k);
+        let parts = proportional_split(n, &shares);
+        prop_assert(parts.iter().sum::<usize>() == n, format!("{parts:?} != {n}"))?;
+        let rs = ranges(&parts);
+        prop_assert(
+            rs.last().map(|&(s, c)| s + c).unwrap_or(0) == n,
+            "ranges must end at n",
+        )
+    });
+}
+
+#[test]
+fn prop_split_min_respects_minimum() {
+    check("split_min respects minimum", 400, |g| {
+        let n = g.usize_in(1, 512);
+        let k = g.usize_in(1, 6);
+        let min = g.usize_in(1, 8);
+        let shares = g.shares(k);
+        let parts = proportional_split_min(n, &shares, min);
+        prop_assert(parts.iter().sum::<usize>() == n, "must tile")?;
+        prop_assert(
+            parts.iter().all(|&p| p == 0 || p >= min.min(n)),
+            format!("sliver in {parts:?} (min {min})"),
+        )
+    });
+}
+
+#[test]
+fn prop_split_monotone_in_share() {
+    check("bigger share never gets fewer units", 300, |g| {
+        let n = g.usize_in(1, 2048);
+        let k = g.usize_in(2, 6);
+        let mut shares = g.shares(k);
+        shares.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let parts = proportional_split(n, &shares);
+        prop_assert(
+            parts.windows(2).all(|w| w[0] >= w[1]),
+            format!("{parts:?} not monotone for sorted shares"),
+        )
+    });
+}
+
+#[test]
+fn prop_plans_always_validate() {
+    check("plans validate on random clusters", 120, |g| {
+        let cluster = gen_cluster(g);
+        let model = gen_model(g);
+        for s in Strategy::all() {
+            let plan = pipeline::plan(&model, &cluster, s);
+            if let Err(e) = plan.validate(&model) {
+                return Err(format!("{} {} m={}: {e}", model.name, s.name(), cluster.m()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_positive_and_decomposes() {
+    check("cost totals decompose", 120, |g| {
+        let cluster = gen_cluster(g);
+        let model = gen_model(g);
+        let s = *g.choose(&Strategy::all());
+        let plan = pipeline::plan(&model, &cluster, s);
+        let c = cost::evaluate(&model, &cluster, &plan);
+        prop_assert(c.total_secs > 0.0, "total must be positive")?;
+        prop_assert(
+            (c.compute_secs + c.comm_secs - c.total_secs).abs() < 1e-9,
+            "compute + comm == total",
+        )
+    });
+}
+
+#[test]
+fn prop_more_devices_never_increase_pure_compute() {
+    check("cluster growth reduces compute wall", 60, |g| {
+        let model = gen_model(g);
+        let m = g.usize_in(1, 4);
+        let mk = |m: usize| Cluster::homogeneous(m, 0.6e9, 1 << 30, 1e12, 0.0);
+        let s = Strategy::Oc; // pure parallel compute strategy
+        let c1 = cost::evaluate(&model, &mk(m), &pipeline::plan(&model, &mk(m), s));
+        let c2 = cost::evaluate(&model, &mk(m * 2), &pipeline::plan(&model, &mk(m * 2), s));
+        prop_assert(
+            c2.compute_secs <= c1.compute_secs * 1.001,
+            format!("{} -> {}", c1.compute_secs, c2.compute_secs),
+        )
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json print∘parse == id", 300, |g| {
+        // build a random json value
+        fn gen_json(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.u64() % 1_000_000) as f64 / 64.0),
+                3 => Json::Str(format!("s{}-µé\"\\\n{}", g.u64() % 100, g.u64() % 10)),
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let j = gen_json(g, 3);
+        let compact = Json::parse(&j.to_string_compact()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&j.to_string_pretty()).map_err(|e| e.to_string())?;
+        prop_assert(compact == j && pretty == j, "roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_tensor_slice_roundtrips() {
+    use iop::tensor::slice::*;
+    use iop::tensor::Tensor;
+    check("channel/row slicing tiles tensors", 200, |g| {
+        let c = g.usize_in(1, 8);
+        let h = g.usize_in(1, 10);
+        let w = g.usize_in(1, 10);
+        let t = Tensor::from_vec(c, h, w, g.vec_f32(c * h * w));
+        // channel tiling
+        let cut = g.usize_in(0, c - 1).min(c - 1);
+        let a = act_channel_slice(&t, 0, cut);
+        let b = act_channel_slice(&t, cut, c - cut);
+        if cut > 0 {
+            prop_assert(concat_channels(&[a, b.clone()]) == t, "channel roundtrip")?;
+        }
+        // row tiling
+        let rcut = g.usize_in(1, h);
+        let ra = act_row_slice_halo(&t, 0, rcut, 0, 0);
+        if rcut < h {
+            let rb = act_row_slice_halo(&t, rcut, h - rcut, 0, 0);
+            prop_assert(concat_rows(&[ra, rb]) == t, "row roundtrip")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conv_partition_identities() {
+    // Randomized version of the paper's partition algebra on the rust
+    // reference ops.
+    use iop::tensor::ops::conv2d;
+    use iop::tensor::slice::*;
+    use iop::tensor::Tensor;
+    check("OC concat == full conv == IC reduce", 60, |g| {
+        let c_in = g.usize_in(1, 5);
+        let c_out = g.usize_in(2, 8);
+        let hw = g.usize_in(5, 10);
+        let k = *g.choose(&[1usize, 3, 5]);
+        if hw < k {
+            return Ok(());
+        }
+        let pad = k / 2;
+        let x = Tensor::from_vec(c_in, hw, hw, g.vec_f32(c_in * hw * hw));
+        let w = g.vec_f32(c_out * c_in * k * k);
+        let b = g.vec_f32(c_out);
+        let full = conv2d(&x, &w, Some(&b), c_out, k, k, 1, pad, pad, false);
+
+        // OC split at a random point
+        let cut = g.usize_in(1, c_out - 1);
+        let w1 = conv_weight_oc_slice(&w, c_out, c_in, k, k, 0, cut);
+        let w2 = conv_weight_oc_slice(&w, c_out, c_in, k, k, cut, c_out - cut);
+        let y1 = conv2d(&x, &w1, Some(&b[..cut]), cut, k, k, 1, pad, pad, false);
+        let y2 = conv2d(&x, &w2, Some(&b[cut..]), c_out - cut, k, k, 1, pad, pad, false);
+        let oc = concat_channels(&[y1, y2]);
+        prop_assert(oc.allclose(&full, 1e-4, 1e-4), "OC concat != full")?;
+
+        // IC split at a random point (only if c_in >= 2)
+        if c_in >= 2 {
+            let icut = g.usize_in(1, c_in - 1);
+            let wa = conv_weight_ic_slice(&w, c_out, c_in, k, k, 0, icut);
+            let wb2 = conv_weight_ic_slice(&w, c_out, c_in, k, k, icut, c_in - icut);
+            let xa = act_channel_slice(&x, 0, icut);
+            let xb = act_channel_slice(&x, icut, c_in - icut);
+            let pa = conv2d(&xa, &wa, None, c_out, k, k, 1, pad, pad, false);
+            let pb = conv2d(&xb, &wb2, None, c_out, k, k, 1, pad, pad, false);
+            let mut sum = reduce_sum(&[pa, pb]);
+            let plane = sum.h * sum.w;
+            for oc_i in 0..c_out {
+                for i in 0..plane {
+                    sum.data[oc_i * plane + i] += b[oc_i];
+                }
+            }
+            prop_assert(sum.allclose(&full, 1e-4, 1e-4), "IC reduce != full")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_never_faster_than_compute_bound() {
+    use iop::sim::{simulate, SimConfig};
+    check("sim >= ideal compute bound", 80, |g| {
+        let cluster = gen_cluster(g);
+        let model = gen_model(g);
+        let s = *g.choose(&Strategy::all());
+        let plan = pipeline::plan(&model, &cluster, s);
+        let r = simulate(&model, &cluster, &plan, SimConfig { strict_barriers: g.bool(), record_trace: false });
+        let ideal = model.total_flops() / cluster.total_flops_per_sec();
+        prop_assert(
+            r.total_secs * 1.000001 >= ideal * 0.999,
+            format!("sim {} < ideal {}", r.total_secs, ideal),
+        )
+    });
+}
