@@ -27,7 +27,10 @@ fn main() -> anyhow::Result<()> {
     );
     let model = zoo::alexnet();
 
-    println!("== {} on heterogeneous (1.2 / 0.6 / 0.3 GFLOP/s) vs homogeneous (3 x 0.7) ==\n", model.name);
+    println!(
+        "== {} on heterogeneous (1.2 / 0.6 / 0.3 GFLOP/s) vs homogeneous (3 x 0.7) ==\n",
+        model.name
+    );
     let mut t = Table::new(&["strategy", "hetero latency", "homo latency", "hetero peak mem"]);
     for s in Strategy::all() {
         let (_, ch) = pipeline::plan_and_evaluate(&model, &hetero, s);

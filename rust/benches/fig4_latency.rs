@@ -39,7 +39,9 @@ fn main() {
     }
 
     // Cross-check the three timing sources per strategy.
-    println!("\n-- analytic vs simulator (strict == analytic by construction; loose = pipelined) --");
+    println!(
+        "\n-- analytic vs simulator (strict == analytic by construction; loose = pipelined) --"
+    );
     let mut t = Table::new(&["model", "strategy", "analytic", "sim strict", "sim loose"]);
     for model in zoo::fig4_models() {
         for s in Strategy::all() {

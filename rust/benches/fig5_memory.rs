@@ -49,7 +49,11 @@ fn main() {
 
     // Memory-constrained variant: eq. (1) forces FC pairing on LeNet.
     println!("-- memory-constrained LeNet (160 KiB devices): eq. (1) forces FC partitioning --");
-    let tight = Cluster::new(vec![Device::new(0.6e9, 160 * 1024); 3], cluster.bandwidth_bps, cluster.t_est);
+    let tight = Cluster::new(
+        vec![Device::new(0.6e9, 160 * 1024); 3],
+        cluster.bandwidth_bps,
+        cluster.t_est,
+    );
     let model = zoo::lenet();
     let iop = pipeline::plan_and_evaluate(&model, &tight, Strategy::Iop).1;
     let co = pipeline::plan_and_evaluate(&model, &tight, Strategy::CoEdge).1;

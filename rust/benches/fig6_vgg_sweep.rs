@@ -16,7 +16,15 @@ fn main() {
     println!("== Fig. 6 — VGG family vs connection establishment latency ==\n");
     let t_ests_ms: Vec<f64> = (1..=8).map(|t| t as f64).collect();
 
-    let mut table = Table::new(&["model", "t_est(ms)", "OC", "CoEdge", "IOP", "IOP vs OC", "IOP vs CoEdge"]);
+    let mut table = Table::new(&[
+        "model",
+        "t_est(ms)",
+        "OC",
+        "CoEdge",
+        "IOP",
+        "IOP vs OC",
+        "IOP vs CoEdge",
+    ]);
     let mut ranges = Vec::new();
 
     for model in zoo::fig6_models() {

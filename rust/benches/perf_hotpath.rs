@@ -5,16 +5,23 @@
 //!  * plan cost evaluation (the inner loop of every solver),
 //!  * discrete-event simulation throughput,
 //!  * weight-bundle generation + slicing (deployment-time),
-//!  * reference tensor ops (the distributed executor's compute),
-//!  * end-to-end reference distributed inference (thread harness
-//!    overhead + compute).
+//!  * executor compute backends: reference tensor ops vs the blocked
+//!    im2col+GEMM fast kernels (serial and multi-threaded),
+//!  * end-to-end distributed inference on both host backends (thread
+//!    harness overhead + compute).
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! Emits `BENCH_hotpath.json` (median + MAD per case) at the repo root —
+//! override the path with `BENCH_HOTPATH_OUT`, and set `IOP_BENCH_QUICK=1`
+//! for the CI smoke configuration (shorter warmup/measure windows).
 
-use iop::bench::Bencher;
+use iop::bench::{BenchReport, Bencher};
 use iop::device::profiles;
+use iop::exec::backend::{available_threads, ComputeBackend};
+use iop::exec::compute::{centralized_inference, centralized_inference_with};
 use iop::exec::weights::{model_input, WeightBundle};
-use iop::exec::{run_plan, ExecOptions};
+use iop::exec::{run_plan, Backend, ExecOptions, ExecSession};
 use iop::model::zoo;
 use iop::partition::Strategy;
 use iop::pipeline;
@@ -22,12 +29,25 @@ use iop::sim::{simulate, SimConfig};
 
 fn main() {
     let cluster = profiles::paper_default();
-    let b = Bencher::default();
+    let quick = std::env::var("IOP_BENCH_QUICK").is_ok();
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let mut rep = BenchReport::new();
+    macro_rules! bench {
+        ($name:expr, $f:expr) => {{
+            let name: &str = &$name;
+            let st = b.report(name, $f);
+            rep.add(name, st);
+        }};
+    }
 
     println!("== planner throughput ==");
     for model in [zoo::lenet(), zoo::alexnet(), zoo::vgg19()] {
         for s in Strategy::all() {
-            b.report(&format!("plan {} {}", model.name, s.name()), || {
+            bench!(format!("plan {} {}", model.name, s.name()), || {
                 pipeline::plan(&model, &cluster, s)
             });
         }
@@ -36,7 +56,7 @@ fn main() {
     println!("\n== cost evaluation (solver inner loop) ==");
     for model in [zoo::lenet(), zoo::vgg19()] {
         let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
-        b.report(&format!("evaluate {}", model.name), || {
+        bench!(format!("evaluate {}", model.name), || {
             iop::cost::evaluate(&model, &cluster, &plan)
         });
     }
@@ -48,45 +68,77 @@ fn main() {
             strict_barriers: false,
             record_trace: false,
         };
-        b.report(&format!("simulate {} (no trace)", model.name), || {
+        bench!(format!("simulate {} (no trace)", model.name), || {
             simulate(&model, &cluster, &plan, cfg)
         });
         let cfg_t = SimConfig {
             strict_barriers: false,
             record_trace: true,
         };
-        b.report(&format!("simulate {} (trace)", model.name), || {
+        bench!(format!("simulate {} (trace)", model.name), || {
             simulate(&model, &cluster, &plan, cfg_t)
         });
     }
 
     println!("\n== deployment-time: weights ==");
     for model in [zoo::lenet(), zoo::vgg_mini()] {
-        b.report(&format!("WeightBundle::generate {}", model.name), || {
+        bench!(format!("WeightBundle::generate {}", model.name), || {
             WeightBundle::generate(&model)
         });
     }
 
-    println!("\n== reference compute (executor backend) ==");
+    println!("\n== compute backends (centralized vgg_mini) ==");
     let model = zoo::vgg_mini();
     let wb = WeightBundle::generate(&model);
     let x = model_input(&model);
-    b.report("centralized vgg_mini (reference ops)", || {
-        iop::exec::compute::centralized_inference(&model, &wb, &x)
+    bench!("centralized vgg_mini (reference ops)", || {
+        centralized_inference(&model, &wb, &x)
     });
+    bench!("centralized vgg_mini (fast ops)", || {
+        centralized_inference_with(ComputeBackend::fast(), &model, &wb, &x)
+    });
+    let threads = available_threads();
+    bench!(format!("centralized vgg_mini (fast ops, {threads} threads)"), || {
+        centralized_inference_with(ComputeBackend::fast_parallel(), &model, &wb, &x)
+    });
+    if let (Some(rf), Some(fast)) = (
+        rep.get("centralized vgg_mini (reference ops)"),
+        rep.get("centralized vgg_mini (fast ops)"),
+    ) {
+        println!(
+            "fast-backend speedup vs reference (vgg_mini, 1 thread): {:.1}x",
+            rf.median / fast.median
+        );
+    }
 
     println!("\n== end-to-end distributed inference (reference backend) ==");
     for s in Strategy::all() {
         let model = zoo::lenet();
         let plan = pipeline::plan(&model, &cluster, s);
-        b.report(&format!("run_plan lenet {} (cold: spawn+infer)", s.name()), || {
+        bench!(format!("run_plan lenet {} (cold: spawn+infer)", s.name()), || {
             run_plan(&model, &plan, &ExecOptions::default()).unwrap()
         });
-        let mut session =
-            iop::exec::ExecSession::new(&model, &plan, iop::exec::Backend::Reference).unwrap();
+        let mut session = ExecSession::new(&model, &plan, Backend::Reference).unwrap();
         let input = model_input(&model);
-        b.report(&format!("session.infer lenet {} (steady)", s.name()), || {
+        bench!(format!("session.infer lenet {} (steady)", s.name()), || {
             session.infer(input.clone()).unwrap()
         });
     }
+
+    println!("\n== end-to-end distributed inference (fast backend) ==");
+    for s in Strategy::all() {
+        let model = zoo::vgg_mini();
+        let plan = pipeline::plan(&model, &cluster, s);
+        let mut session =
+            ExecSession::new(&model, &plan, Backend::Fast { threads: 1 }).unwrap();
+        let input = model_input(&model);
+        bench!(format!("session.infer vgg_mini {} (fast, steady)", s.name()), || {
+            session.infer(input.clone()).unwrap()
+        });
+    }
+
+    let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let out = std::env::var("BENCH_HOTPATH_OUT").unwrap_or_else(|_| default_out.to_string());
+    rep.write(&out).expect("writing BENCH_hotpath.json");
+    println!("\nwrote {out}");
 }

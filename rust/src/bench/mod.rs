@@ -5,6 +5,7 @@
 //! use [`Bencher`] for hot-path measurements and plain table printing for
 //! the paper-figure regenerations (which are analytic, not timing-bound).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Robust summary of a sample of per-iteration times (seconds).
@@ -49,6 +50,69 @@ impl Stats {
         } else {
             f64::INFINITY
         }
+    }
+
+    /// Machine-readable summary (BENCH_*.json case body).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("samples", Json::num(self.samples as f64)),
+            ("median_secs", Json::num(self.median)),
+            ("mad_secs", Json::num(self.mad)),
+            ("mean_trimmed_secs", Json::num(self.mean_trimmed)),
+            ("min_secs", Json::num(self.min)),
+            ("max_secs", Json::num(self.max)),
+        ])
+    }
+}
+
+/// Accumulates named measurements and serializes them to a BENCH_*.json
+/// report (median + MAD per case) so CI runs leave a perf trajectory
+/// future PRs can diff against.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    cases: Vec<(String, Stats)>,
+}
+
+impl BenchReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, stats: Stats) {
+        self.cases.push((name.to_string(), stats));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Stats> {
+        self.cases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cases = self
+            .cases
+            .iter()
+            .map(|(name, stats)| {
+                let mut obj = match stats.to_json() {
+                    Json::Obj(map) => map,
+                    _ => unreachable!("Stats::to_json returns an object"),
+                };
+                obj.insert("name".to_string(), Json::str(name.clone()));
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "generated_by",
+                Json::str("cargo bench --bench perf_hotpath"),
+            ),
+            ("cases", Json::Arr(cases)),
+        ])
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
     }
 }
 
@@ -131,6 +195,20 @@ mod tests {
         let s = Stats::from_samples(xs);
         assert_eq!(s.median, 1.0);
         assert!(s.mean_trimmed < 1.5);
+    }
+
+    #[test]
+    fn report_serializes_cases() {
+        let mut rep = BenchReport::new();
+        rep.add("case a", Stats::from_samples(vec![1.0, 2.0, 3.0]));
+        assert!(rep.get("case a").is_some());
+        assert!(rep.get("case b").is_none());
+        let text = rep.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let cases = parsed.get("cases").as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").as_str(), Some("case a"));
+        assert_eq!(cases[0].get("median_secs").as_f64(), Some(2.0));
     }
 
     #[test]

@@ -290,13 +290,24 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let model = model_from_args(a)?;
     let strategy = strategy_from_args(a)?;
     let cluster = cluster_from_args(a)?;
+    // Intra-worker threads for the fast backend (workers are already one
+    // thread per device, so the default stays 1).
+    let threads_given = a.str_opt("threads").is_some();
+    let threads = a.usize_or("threads", 1)?;
+    if threads_given && threads == 0 {
+        bail!("--threads expects a positive integer");
+    }
     let backend = match a.str_or("backend", "reference").as_str() {
         "reference" => Backend::Reference,
+        "fast" => Backend::Fast { threads },
         "pjrt" => Backend::Pjrt {
             artifacts_dir: a.str_or("artifacts", "artifacts"),
         },
-        other => bail!("unknown backend '{other}' (reference|pjrt)"),
+        other => bail!("unknown backend '{other}' (reference|fast|pjrt)"),
     };
+    if threads_given && !matches!(backend, Backend::Fast { .. }) {
+        bail!("--threads only applies to --backend fast");
+    }
     a.finish()?;
 
     let plan = pipeline::plan(&model, &cluster, strategy);
@@ -304,6 +315,11 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let input = crate::exec::weights::model_input(&model);
     let expect = crate::exec::compute::centralized_inference(&model, &wb, &input);
 
+    let backend_tag = match &backend {
+        Backend::Reference => "reference".to_string(),
+        Backend::Fast { threads } => format!("fast({threads}t)"),
+        Backend::Pjrt { .. } => "pjrt".to_string(),
+    };
     let r = run_plan(
         &model,
         &plan,
@@ -314,10 +330,11 @@ pub fn exec(a: &mut Args) -> Result<()> {
     )?;
     let diff = r.output.max_abs_diff(&expect);
     println!(
-        "{} / {} on {} devices: wall {} | compute {:?} ms | {} msgs, {} moved",
+        "{} / {} on {} devices [{}]: wall {} | compute {:?} ms | {} msgs, {} moved",
         model.name,
         strategy.name(),
         cluster.m(),
+        backend_tag,
         fmt_secs(r.stats.wall_secs),
         r.stats
             .compute_secs

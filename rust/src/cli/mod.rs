@@ -49,7 +49,7 @@ COMMANDS:
                                  Fig. 6: latency vs connection latency
   scaling    --model M [--counts 1,2,3,4,6,8] [cluster opts]
                                  Device-count scaling study (extension)
-  exec       --model M --strategy S [--backend reference|pjrt]
+  exec       --model M --strategy S [--backend reference|fast|pjrt]
                                  Real distributed execution (threads),
                                  checked against the centralized model
   emit-plans [--models a,b] --out FILE
@@ -65,6 +65,14 @@ overrides):
   --mem-mib MIB        per-device memory            [512]
   --bandwidth-mbps M   shared-medium bandwidth      [50]
   --t-est-ms MS        connection establishment     [4]
+
+EXEC BACKENDS (`iop exec --backend ...`):
+  reference            scalar reference ops — the numerical oracle  [default]
+  fast                 blocked im2col+GEMM kernels with fused bias+ReLU
+                       epilogues; --threads N adds intra-worker threading
+                       over output-channel blocks                   [N=1]
+  pjrt                 AOT XLA artifacts via PJRT-CPU (--artifacts DIR;
+                       needs the `pjrt` build feature)
 
 OUTPUT:
   --json               machine-readable output where supported

@@ -51,7 +51,13 @@ impl Cluster {
     }
 
     /// Homogeneous cluster of `m` identical devices.
-    pub fn homogeneous(m: usize, flops_per_sec: f64, mem_bytes: u64, bandwidth_bps: f64, t_est: f64) -> Self {
+    pub fn homogeneous(
+        m: usize,
+        flops_per_sec: f64,
+        mem_bytes: u64,
+        bandwidth_bps: f64,
+        t_est: f64,
+    ) -> Self {
         Self::new(
             vec![Device::new(flops_per_sec, mem_bytes); m],
             bandwidth_bps,

@@ -1,0 +1,148 @@
+//! Host compute-backend selection: the scalar Reference oracle vs the
+//! blocked im2col+GEMM Fast path.
+//!
+//! Every host-side kernel call in `exec::compute` (and therefore every
+//! worker in the thread harness) dispatches through [`ComputeBackend`],
+//! so distributed execution can run on the fast kernels while
+//! correctness checks keep pinning against the naive reference ops
+//! (`tensor::ops`), which remain the independent numerical oracle.
+//!
+//! Parallelism layering: the harness already runs one worker thread per
+//! cooperative device (per-shard workers), so workers default to
+//! `Fast { threads: 1 }`; the *centralized* path has no such outer
+//! parallelism and uses `Fast { threads: available_threads() }` to
+//! spread output-channel blocks across cores via `std::thread::scope`
+//! (`tensor::gemm::gemm_parallel`).
+
+use crate::tensor::{im2col, ops, Tensor};
+
+/// Which host kernels compute conv/dense/pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ComputeBackend {
+    /// Scalar reference ops — the independent numerical oracle.
+    #[default]
+    Reference,
+    /// Blocked im2col+GEMM kernels with fused bias+ReLU epilogues;
+    /// `threads > 1` adds output-channel-block parallelism.
+    Fast { threads: usize },
+}
+
+impl ComputeBackend {
+    /// Fast kernels, single-threaded — the per-worker default (harness
+    /// workers are already one OS thread per device).
+    pub fn fast() -> Self {
+        ComputeBackend::Fast { threads: 1 }
+    }
+
+    /// Fast kernels using every available core (centralized path).
+    pub fn fast_parallel() -> Self {
+        ComputeBackend::Fast {
+            threads: available_threads(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeBackend::Reference => "reference",
+            ComputeBackend::Fast { .. } => "fast",
+        }
+    }
+
+    /// 2-D convolution (OIHW weights, CHW input, fused optional ReLU).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        &self,
+        input: &Tensor,
+        weight: &[f32],
+        bias: Option<&[f32]>,
+        c_out: usize,
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        pad_h: usize,
+        pad_w: usize,
+        relu: bool,
+    ) -> Tensor {
+        match *self {
+            ComputeBackend::Reference => ops::conv2d(
+                input, weight, bias, c_out, k_h, k_w, stride, pad_h, pad_w, relu,
+            ),
+            ComputeBackend::Fast { threads } => im2col::conv2d_gemm(
+                input, weight, bias, c_out, k_h, k_w, stride, pad_h, pad_w, relu, threads,
+            ),
+        }
+    }
+
+    /// Dense layer (fused optional ReLU).
+    pub fn dense(
+        &self,
+        input: &Tensor,
+        weight: &[f32],
+        bias: Option<&[f32]>,
+        c_out: usize,
+        relu: bool,
+    ) -> Tensor {
+        match *self {
+            ComputeBackend::Reference => ops::dense(input, weight, bias, c_out, relu),
+            ComputeBackend::Fast { threads } => {
+                im2col::dense_gemm(input, weight, bias, c_out, relu, threads)
+            }
+        }
+    }
+
+    /// Max pooling. Memory-bound either way; the reference loop serves
+    /// both backends.
+    pub fn maxpool2d(&self, input: &Tensor, k: usize, stride: usize) -> Tensor {
+        ops::maxpool2d(input, k, stride)
+    }
+
+    /// Elementwise ReLU.
+    pub fn relu(&self, input: &Tensor) -> Tensor {
+        ops::relu(input)
+    }
+}
+
+/// Detected core count (1 if detection fails).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..len).map(|_| r.next_symmetric(1.0)).collect()
+    }
+
+    #[test]
+    fn backends_agree_on_conv_and_dense() {
+        let x = Tensor::from_vec(3, 10, 10, rand_vec(300, 1));
+        let w = rand_vec(5 * 3 * 9, 2);
+        let b = rand_vec(5, 3);
+        let rf = ComputeBackend::Reference.conv2d(&x, &w, Some(&b), 5, 3, 3, 1, 1, 1, true);
+        let ff = ComputeBackend::fast().conv2d(&x, &w, Some(&b), 5, 3, 3, 1, 1, 1, true);
+        assert!(ff.allclose(&rf, 1e-5, 1e-5));
+
+        let xv = Tensor::vector(rand_vec(50, 4));
+        let wd = rand_vec(7 * 50, 5);
+        let bd = rand_vec(7, 6);
+        let rd = ComputeBackend::Reference.dense(&xv, &wd, Some(&bd), 7, false);
+        let fd = ComputeBackend::fast().dense(&xv, &wd, Some(&bd), 7, false);
+        assert!(fd.allclose(&rd, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn names_and_defaults() {
+        assert_eq!(ComputeBackend::default(), ComputeBackend::Reference);
+        assert_eq!(ComputeBackend::Reference.name(), "reference");
+        assert_eq!(ComputeBackend::fast().name(), "fast");
+        let par = ComputeBackend::fast_parallel();
+        assert_eq!(par, ComputeBackend::Fast { threads: available_threads() });
+        assert!(available_threads() >= 1);
+    }
+}

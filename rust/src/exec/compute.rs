@@ -1,6 +1,7 @@
 //! Slice-level computation semantics — the executable meaning of each
-//! `SliceKind`, shared by the reference backend (host tensor ops) and
-//! mirrored by the PJRT shard executables.
+//! `SliceKind`, shared by the host backends (reference ops or the
+//! im2col+GEMM fast kernels, via [`ComputeBackend`]) and mirrored by the
+//! PJRT shard executables.
 //!
 //! * `Full`          — whole stage (head op + tail) on the full input.
 //! * `Oc{start,n}`   — head op with OC-sliced weights (+bias, +ReLU), then
@@ -15,23 +16,33 @@
 //!                     tail pools apply row-locally; any trailing flatten
 //!                     is *deferred* to assembly (CHW flatten interleaves
 //!                     rows across devices).
+//!
+//! The `*_with` variants take an explicit [`ComputeBackend`]; the plain
+//! wrappers pin to `Reference` and are what tests and oracles call — the
+//! naive ops stay the independent numerical ground truth.
 
 use crate::model::{Model, OpKind, Stage};
 use crate::partition::plan::SliceKind;
 use crate::partition::rows::input_rows_needed;
-use crate::tensor::ops::{conv2d, dense, maxpool2d, relu};
 use crate::tensor::slice::*;
 use crate::tensor::Tensor;
 
+use super::backend::ComputeBackend;
 use super::weights::WeightBundle;
 
 /// Run the passthrough tail of a stage (everything after the head op),
 /// optionally skipping `Flatten` (row shards defer it).
-pub fn run_tail(model: &Model, stage: Stage, mut t: Tensor, skip_flatten: bool) -> Tensor {
+pub fn run_tail_with(
+    backend: ComputeBackend,
+    model: &Model,
+    stage: Stage,
+    mut t: Tensor,
+    skip_flatten: bool,
+) -> Tensor {
     for i in stage.op_idx + 1..stage.tail_end {
         t = match model.ops[i].kind {
-            OpKind::MaxPool { k, stride } => maxpool2d(&t, k, stride),
-            OpKind::Relu => relu(&t),
+            OpKind::MaxPool { k, stride } => backend.maxpool2d(&t, k, stride),
+            OpKind::Relu => backend.relu(&t),
             OpKind::Flatten => {
                 if skip_flatten {
                     t
@@ -45,10 +56,21 @@ pub fn run_tail(model: &Model, stage: Stage, mut t: Tensor, skip_flatten: bool) 
     t
 }
 
+/// [`run_tail_with`] on the reference backend.
+pub fn run_tail(model: &Model, stage: Stage, t: Tensor, skip_flatten: bool) -> Tensor {
+    run_tail_with(ComputeBackend::Reference, model, stage, t, skip_flatten)
+}
+
 /// Bias + ReLU + tail for an IC-partitioned stage, applied to the reduced
 /// raw output. This is the piece that must come *after* the partial-sum
 /// reduction (max/ReLU do not commute with summation).
-pub fn apply_tail(model: &Model, wb: &WeightBundle, stage: Stage, raw: &Tensor) -> Tensor {
+pub fn apply_tail_with(
+    backend: ComputeBackend,
+    model: &Model,
+    wb: &WeightBundle,
+    stage: Stage,
+    raw: &Tensor,
+) -> Tensor {
     let op = &model.ops[stage.op_idx];
     let b = wb.b(&op.name);
     let mut t = raw.clone();
@@ -62,7 +84,7 @@ pub fn apply_tail(model: &Model, wb: &WeightBundle, stage: Stage, raw: &Tensor) 
                 }
             }
             if has_relu {
-                t = relu(&t);
+                t = backend.relu(&t);
             }
         }
         OpKind::Dense { relu: has_relu, .. } => {
@@ -70,22 +92,29 @@ pub fn apply_tail(model: &Model, wb: &WeightBundle, stage: Stage, raw: &Tensor) 
                 *v += bb;
             }
             if has_relu {
-                t = relu(&t);
+                t = backend.relu(&t);
             }
         }
         _ => unreachable!(),
     }
-    run_tail(model, stage, t, false)
+    run_tail_with(backend, model, stage, t, false)
 }
 
-/// Compute one device's slice of a stage on the reference backend.
+/// [`apply_tail_with`] on the reference backend.
+pub fn apply_tail(model: &Model, wb: &WeightBundle, stage: Stage, raw: &Tensor) -> Tensor {
+    apply_tail_with(ComputeBackend::Reference, model, wb, stage, raw)
+}
+
+/// Compute one device's slice of a stage on a host backend.
 ///
 /// `input` semantics per slice kind:
 ///  * `Full`/`Oc` — the full stage input (replicated);
 ///  * `Ic`        — the device's input-channel block (its local shard);
 ///  * `Rows`      — the full stage input (the window is cut here), OR a
 ///    pre-assembled window when `window_rows` is given (halo path).
-pub fn compute_slice(
+#[allow(clippy::too_many_arguments)]
+pub fn compute_slice_with(
+    backend: ComputeBackend,
     model: &Model,
     wb: &WeightBundle,
     stage: Stage,
@@ -98,8 +127,11 @@ pub fn compute_slice(
         (SliceKind::Idle, _) => Tensor::vector(vec![]),
 
         // Replicate == Full computed redundantly on each device.
-        (SliceKind::Full | SliceKind::Replicate, OpKind::Conv2d { c_out, k_h, k_w, stride, pad, relu: r, .. }) => {
-            let y = conv2d(
+        (
+            SliceKind::Full | SliceKind::Replicate,
+            OpKind::Conv2d { c_out, k_h, k_w, stride, pad, relu: r, .. },
+        ) => {
+            let y = backend.conv2d(
                 input,
                 wb.w(&op.name),
                 Some(wb.b(&op.name)),
@@ -111,38 +143,47 @@ pub fn compute_slice(
                 *pad,
                 *r,
             );
-            run_tail(model, stage, y, false)
+            run_tail_with(backend, model, stage, y, false)
         }
         (SliceKind::Full | SliceKind::Replicate, OpKind::Dense { c_out, relu: r, .. }) => {
-            let y = dense(input, wb.w(&op.name), Some(wb.b(&op.name)), *c_out, *r);
-            run_tail(model, stage, y, false)
+            let y = backend.dense(input, wb.w(&op.name), Some(wb.b(&op.name)), *c_out, *r);
+            run_tail_with(backend, model, stage, y, false)
         }
 
-        (SliceKind::Oc { start, count }, OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, relu: r }) => {
+        (
+            SliceKind::Oc { start, count },
+            OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, relu: r },
+        ) => {
             let w = conv_weight_oc_slice(wb.w(&op.name), *c_out, *c_in, *k_h, *k_w, *start, *count);
             let b = &wb.b(&op.name)[*start..*start + *count];
-            let y = conv2d(input, &w, Some(b), *count, *k_h, *k_w, *stride, *pad, *pad, *r);
-            run_tail(model, stage, y, false)
+            let y = backend.conv2d(input, &w, Some(b), *count, *k_h, *k_w, *stride, *pad, *pad, *r);
+            run_tail_with(backend, model, stage, y, false)
         }
         (SliceKind::Oc { start, count }, OpKind::Dense { c_in, c_out, relu: r }) => {
             let w = dense_weight_oc_slice(wb.w(&op.name), *c_out, *c_in, *start, *count);
             let b = &wb.b(&op.name)[*start..*start + *count];
-            let y = dense(input, &w, Some(b), *count, *r);
-            run_tail(model, stage, y, false)
+            let y = backend.dense(input, &w, Some(b), *count, *r);
+            run_tail_with(backend, model, stage, y, false)
         }
 
-        (SliceKind::Ic { start, count }, OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, .. }) => {
+        (
+            SliceKind::Ic { start, count },
+            OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, .. },
+        ) => {
             let w = conv_weight_ic_slice(wb.w(&op.name), *c_out, *c_in, *k_h, *k_w, *start, *count);
             debug_assert_eq!(input.c, *count, "IC slice expects its channel block");
-            conv2d(input, &w, None, *c_out, *k_h, *k_w, *stride, *pad, *pad, false)
+            backend.conv2d(input, &w, None, *c_out, *k_h, *k_w, *stride, *pad, *pad, false)
         }
         (SliceKind::Ic { start, count }, OpKind::Dense { c_in, c_out, .. }) => {
             let w = dense_weight_ic_slice(wb.w(&op.name), *c_out, *c_in, *start, *count);
             debug_assert_eq!(input.len(), *count, "IC slice expects its feature block");
-            dense(input, &w, None, *c_out, false)
+            backend.dense(input, &w, None, *c_out, false)
         }
 
-        (SliceKind::Rows { start, count }, OpKind::Conv2d { c_out, k_h, k_w, stride, pad, relu: r, .. }) => {
+        (
+            SliceKind::Rows { start, count },
+            OpKind::Conv2d { c_out, k_h, k_w, stride, pad, relu: r, .. },
+        ) => {
             // Build / accept the input-row window, then convolve with the
             // vertical padding already materialized.
             let (lo, hi) = input_rows_needed(model, stage, *start, *start + *count);
@@ -153,7 +194,7 @@ pub fn compute_slice(
                 }
                 None => act_rows_window(input, lo, hi),
             };
-            let y = conv2d(
+            let y = backend.conv2d(
                 &window,
                 wb.w(&op.name),
                 Some(wb.b(&op.name)),
@@ -165,19 +206,51 @@ pub fn compute_slice(
                 *pad,
                 *r,
             );
-            run_tail(model, stage, y, true) // defer flatten
+            run_tail_with(backend, model, stage, y, true) // defer flatten
         }
         _ => unreachable!("slice kind {slice:?} incompatible with {}", op.name),
     }
 }
 
-/// Centralized reference inference (the correctness oracle).
-pub fn centralized_inference(model: &Model, wb: &WeightBundle, input: &Tensor) -> Tensor {
+/// [`compute_slice_with`] on the reference backend.
+pub fn compute_slice(
+    model: &Model,
+    wb: &WeightBundle,
+    stage: Stage,
+    slice: &SliceKind,
+    input: &Tensor,
+    window_rows: Option<(isize, isize)>,
+) -> Tensor {
+    compute_slice_with(
+        ComputeBackend::Reference,
+        model,
+        wb,
+        stage,
+        slice,
+        input,
+        window_rows,
+    )
+}
+
+/// Centralized inference on an explicit backend (single device, whole
+/// model). The fast backend spreads output channels across cores here —
+/// there is no outer per-device parallelism to collide with.
+pub fn centralized_inference_with(
+    backend: ComputeBackend,
+    model: &Model,
+    wb: &WeightBundle,
+    input: &Tensor,
+) -> Tensor {
     let mut t = input.clone();
     for &stage in model.stages() {
-        t = compute_slice(model, wb, stage, &SliceKind::Full, &t, None);
+        t = compute_slice_with(backend, model, wb, stage, &SliceKind::Full, &t, None);
     }
     t
+}
+
+/// Centralized reference inference (the correctness oracle).
+pub fn centralized_inference(model: &Model, wb: &WeightBundle, input: &Tensor) -> Tensor {
+    centralized_inference_with(ComputeBackend::Reference, model, wb, input)
 }
 
 #[cfg(test)]
@@ -194,6 +267,22 @@ mod tests {
         let out = centralized_inference(&m, &wb, &model_input(&m));
         assert_eq!(out.len(), 10);
         assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn centralized_fast_matches_reference_lenet() {
+        let m = zoo::lenet();
+        let wb = WeightBundle::generate(&m);
+        let x = model_input(&m);
+        let expect = centralized_inference(&m, &wb, &x);
+        for backend in [ComputeBackend::fast(), ComputeBackend::Fast { threads: 4 }] {
+            let got = centralized_inference_with(backend, &m, &wb, &x);
+            assert!(
+                got.allclose(&expect, 1e-4, 1e-4),
+                "{backend:?}: diff={}",
+                got.max_abs_diff(&expect)
+            );
+        }
     }
 
     #[test]

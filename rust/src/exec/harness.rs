@@ -19,15 +19,20 @@ use crate::tensor::slice::{
 };
 use crate::tensor::Tensor;
 
-use super::compute::{apply_tail, compute_slice};
+use super::backend::ComputeBackend;
+use super::compute::{apply_tail_with, compute_slice_with};
 use super::pjrt::PjrtRunner;
 use super::weights::{model_input, WeightBundle};
 
 /// Which compute backend workers use.
 #[derive(Debug, Clone)]
 pub enum Backend {
-    /// Host reference ops (`tensor::ops`).
+    /// Host reference ops (`tensor::ops`) — the numerical oracle.
     Reference,
+    /// Host im2col+GEMM kernels (`tensor::gemm`); `threads` is the
+    /// intra-worker thread count over output-channel blocks (workers are
+    /// already one thread per device, so 1 is the sensible default).
+    Fast { threads: usize },
     /// AOT XLA shard executables from `artifacts/` via PJRT-CPU.
     Pjrt { artifacts_dir: String },
 }
@@ -111,9 +116,9 @@ impl Mailbox {
     }
 }
 
-/// Worker-side compute dispatch (reference ops or PJRT executables).
+/// Worker-side compute dispatch (host kernels or PJRT executables).
 enum Runner {
-    Reference,
+    Host(ComputeBackend),
     Pjrt(Box<PjrtRunner>),
 }
 
@@ -131,7 +136,8 @@ impl Runner {
         window: Option<(isize, isize)>,
     ) -> Result<Tensor> {
         match self {
-            Runner::Reference => Ok(compute_slice(
+            Runner::Host(backend) => Ok(compute_slice_with(
+                *backend,
                 model,
                 wb,
                 plan.stages[si].stage,
@@ -152,7 +158,9 @@ impl Runner {
         raw: &Tensor,
     ) -> Result<Tensor> {
         match self {
-            Runner::Reference => Ok(apply_tail(model, wb, plan.stages[si].stage, raw)),
+            Runner::Host(backend) => {
+                Ok(apply_tail_with(*backend, model, wb, plan.stages[si].stage, raw))
+            }
             Runner::Pjrt(r) => r.run_tail(si, raw),
         }
     }
@@ -320,7 +328,10 @@ fn worker_loop(
         pending: Vec::new(),
     };
     let mut runner = match &backend {
-        Backend::Reference => Ok(Runner::Reference),
+        Backend::Reference => Ok(Runner::Host(ComputeBackend::Reference)),
+        Backend::Fast { threads } => Ok(Runner::Host(ComputeBackend::Fast {
+            threads: (*threads).max(1),
+        })),
         Backend::Pjrt { artifacts_dir } => PjrtRunner::new(
             Arc::clone(&model),
             Arc::clone(&plan),
@@ -400,7 +411,14 @@ fn worker_request(
                     if t.len() > 0 {
                         for k in 0..m {
                             if k != dev {
-                                send(k, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                                send(
+                                    k,
+                                    si,
+                                    PHASE_MAIN,
+                                    t.clone(),
+                                    &mut bytes_sent,
+                                    &mut messages_sent,
+                                );
                             }
                         }
                     }
@@ -460,7 +478,14 @@ fn worker_request(
                     if !is_reduce_to {
                         for k in 0..m {
                             if k != dev {
-                                send(k, si, PHASE_BCAST, raw.clone(), &mut bytes_sent, &mut messages_sent);
+                                send(
+                                    k,
+                                    si,
+                                    PHASE_BCAST,
+                                    raw.clone(),
+                                    &mut bytes_sent,
+                                    &mut messages_sent,
+                                );
                             }
                         }
                     }
@@ -473,7 +498,14 @@ fn worker_request(
                 if dev != *root {
                     if let Local::Shard(t) = &local {
                         if t.len() > 0 {
-                            send(*root, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                            send(
+                                *root,
+                                si,
+                                PHASE_MAIN,
+                                t.clone(),
+                                &mut bytes_sent,
+                                &mut messages_sent,
+                            );
                         }
                     }
                     local = Local::Nothing;
@@ -632,7 +664,16 @@ fn worker_request(
                         Local::Nothing => return Err(anyhow!("rows slice with no local data")),
                     }
                 };
-                Some(runner.run_slice(&model, &wb, &plan, si, dev, slice, &input_t, Some((lo, hi)))?)
+                Some(runner.run_slice(
+                    &model,
+                    &wb,
+                    &plan,
+                    si,
+                    dev,
+                    slice,
+                    &input_t,
+                    Some((lo, hi)),
+                )?)
             }
             SliceKind::Oc { .. } | SliceKind::Full | SliceKind::Replicate => {
                 let t = local.full()?.clone();
@@ -664,7 +705,14 @@ fn worker_request(
             if dev != *root {
                 if let Local::Shard(t) = &local {
                     if t.len() > 0 {
-                        send(*root, FINAL_STAGE, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                        send(
+                            *root,
+                            FINAL_STAGE,
+                            PHASE_MAIN,
+                            t.clone(),
+                            &mut bytes_sent,
+                            &mut messages_sent,
+                        );
                     }
                 }
                 None
@@ -805,12 +853,20 @@ mod tests {
     use crate::partition::Strategy;
     use crate::pipeline;
 
-    fn check_model_strategy(model: &crate::model::Model, strategy: Strategy) {
+    fn check_model_strategy_backend(
+        model: &crate::model::Model,
+        strategy: Strategy,
+        backend: Backend,
+    ) {
         let cluster = profiles::paper_default();
         let plan = pipeline::plan(model, &cluster, strategy);
         let wb = WeightBundle::generate(model);
         let expect = centralized_inference(model, &wb, &model_input(model));
-        let got = run_plan(model, &plan, &ExecOptions::default()).unwrap();
+        let options = ExecOptions {
+            backend,
+            input: None,
+        };
+        let got = run_plan(model, &plan, &options).unwrap();
         assert!(
             got.output.allclose(&expect, 1e-4, 1e-5),
             "{} {}: diff={}",
@@ -818,6 +874,10 @@ mod tests {
             strategy.name(),
             got.output.max_abs_diff(&expect)
         );
+    }
+
+    fn check_model_strategy(model: &crate::model::Model, strategy: Strategy) {
+        check_model_strategy_backend(model, strategy, Backend::Reference);
     }
 
     #[test]
@@ -834,6 +894,20 @@ mod tests {
         for s in Strategy::all() {
             check_model_strategy(&m, s);
         }
+    }
+
+    #[test]
+    fn fast_backend_matches_oracle_lenet() {
+        let m = zoo::lenet();
+        for s in Strategy::all() {
+            check_model_strategy_backend(&m, s, Backend::Fast { threads: 1 });
+        }
+    }
+
+    #[test]
+    fn fast_backend_with_intra_worker_threads() {
+        let m = zoo::vgg_mini();
+        check_model_strategy_backend(&m, Strategy::Iop, Backend::Fast { threads: 2 });
     }
 
     #[test]

@@ -7,15 +7,22 @@
 //! centralized reference model (and, in PJRT mode, executed by the AOT
 //! XLA artifacts produced from the JAX/Pallas layers).
 //!
-//! Two backends:
-//!  * [`Backend::Reference`] — host tensor ops (`tensor::ops`), no
-//!    external dependencies; used by tests and the pure-rust examples.
+//! Three backends:
+//!  * [`Backend::Reference`] — scalar host tensor ops (`tensor::ops`), no
+//!    external dependencies; the numerical oracle every other path is
+//!    checked against.
+//!  * [`Backend::Fast`] — blocked im2col+GEMM host kernels
+//!    (`tensor::gemm` / `tensor::im2col`) with fused bias+ReLU epilogues
+//!    and optional intra-worker threading over output-channel blocks.
 //!  * [`Backend::Pjrt`] — each worker owns a PJRT CPU client and runs the
-//!    per-shard executables named in `artifacts/manifest.json`.
+//!    per-shard executables named in `artifacts/manifest.json` (requires
+//!    the `pjrt` build feature).
 
+pub mod backend;
 pub mod compute;
 pub mod harness;
 pub mod pjrt;
 pub mod weights;
 
+pub use backend::ComputeBackend;
 pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats};

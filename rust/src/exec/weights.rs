@@ -34,7 +34,10 @@ impl WeightBundle {
                 } => {
                     let wname = format!("{}/{}/w", model.name, op.name);
                     let bname = format!("{}/{}/b", model.name, op.name);
-                    weights.insert(op.name.clone(), init::conv_weight(&wname, c_out, c_in, k_h, k_w));
+                    weights.insert(
+                        op.name.clone(),
+                        init::conv_weight(&wname, c_out, c_in, k_h, k_w),
+                    );
                     biases.insert(op.name.clone(), init::bias(&bname, c_out));
                 }
                 OpKind::Dense { c_in, c_out, .. } => {

@@ -121,6 +121,16 @@ impl Op {
                 ..
             } => {
                 assert_eq!(input.c, c_in, "op {}: input channels mismatch", self.name);
+                assert!(
+                    input.h + 2 * pad >= k_h && input.w + 2 * pad >= k_w,
+                    "op {}: conv kernel {}x{} exceeds padded input {}x{} (pad={})",
+                    self.name,
+                    k_h,
+                    k_w,
+                    input.h + 2 * pad,
+                    input.w + 2 * pad,
+                    pad
+                );
                 let h = (input.h + 2 * pad - k_h) / stride + 1;
                 let w = (input.w + 2 * pad - k_w) / stride + 1;
                 Shape::new(c_out, h, w)
@@ -134,11 +144,22 @@ impl Op {
                 );
                 Shape::vector(c_out)
             }
-            OpKind::MaxPool { k, stride } => Shape::new(
-                input.c,
-                (input.h - k) / stride + 1,
-                (input.w - k) / stride + 1,
-            ),
+            OpKind::MaxPool { k, stride } => {
+                assert!(
+                    input.h >= k && input.w >= k,
+                    "op {}: pool window {}x{} exceeds input {}x{}",
+                    self.name,
+                    k,
+                    k,
+                    input.h,
+                    input.w
+                );
+                Shape::new(
+                    input.c,
+                    (input.h - k) / stride + 1,
+                    (input.w - k) / stride + 1,
+                )
+            }
             OpKind::Flatten => Shape::vector(input.elems()),
             OpKind::Relu => input,
         }
@@ -247,6 +268,31 @@ mod tests {
             },
         );
         op.out_shape(Shape::new(4, 8, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "conv kernel")]
+    fn oversized_conv_kernel_panics_cleanly() {
+        let op = Op::new(
+            "c",
+            OpKind::Conv2d {
+                c_in: 1,
+                c_out: 1,
+                k_h: 9,
+                k_w: 9,
+                stride: 1,
+                pad: 0,
+                relu: false,
+            },
+        );
+        op.out_shape(Shape::new(1, 4, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "pool window")]
+    fn oversized_pool_window_panics_cleanly() {
+        let op = Op::new("p", OpKind::MaxPool { k: 5, stride: 1 });
+        op.out_shape(Shape::new(1, 4, 4));
     }
 
     #[test]

@@ -321,7 +321,12 @@ mod tests {
         let model = zoo::lenet();
         let cluster = profiles::paper_default();
         // pair conv2 (stage 1) with fc1 (stage 2)
-        let segs = vec![Segment::Single(0), Segment::Pair(1), Segment::Single(3), Segment::Single(4)];
+        let segs = vec![
+            Segment::Single(0),
+            Segment::Pair(1),
+            Segment::Single(3),
+            Segment::Single(4),
+        ];
         let p = plan_iop_with_segments(&model, &cluster, &segs);
         p.validate(&model).unwrap();
         // conv2: 16 channels -> fc1: 400 features; scale = 25

@@ -6,121 +6,178 @@
 //! `Tensor` and `xla::Literal` live here so the rest of the coordinator
 //! never touches PJRT types.
 //!
+//! The `xla` crate is not part of the offline build image, so the real
+//! client is gated behind the `pjrt` cargo feature; the default build
+//! compiles an API-identical stub whose constructor returns a
+//! descriptive error. Everything else (reference + fast backends, the
+//! whole planner/simulator surface) is unaffected.
+//!
 //! Note: `PjRtClient` is `Rc`-based (not `Send`); the distributed executor
 //! therefore creates one `Runtime` per worker thread.
 
-use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::tensor::Tensor;
+    use anyhow::{anyhow, Context, Result};
 
-/// A PJRT CPU runtime instance.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// A compiled, loaded HLO module ready to execute.
-pub struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    /// Path it was loaded from (diagnostics).
-    pub path: String,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
+    /// A PJRT CPU runtime instance.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A compiled, loaded HLO module ready to execute.
+    pub struct LoadedModule {
+        exe: xla::PjRtLoadedExecutable,
+        /// Path it was loaded from (diagnostics).
+        pub path: String,
     }
 
-    /// Load + compile an HLO text file.
-    pub fn load_hlo_text(&self, path: &str) -> Result<LoadedModule> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path}"))?;
-        Ok(LoadedModule {
-            exe,
-            path: path.to_string(),
-        })
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file.
+        pub fn load_hlo_text(&self, path: &str) -> Result<LoadedModule> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path}"))?;
+            Ok(LoadedModule {
+                exe,
+                path: path.to_string(),
+            })
+        }
+    }
+
+    impl LoadedModule {
+        /// Execute with host tensors in, host tensors out. The jax export path
+        /// lowers with `return_tuple=True`, so the single on-device output is a
+        /// tuple literal that we decompose.
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.path))?;
+            let out = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| anyhow!("no output buffers from {}", self.path))?
+                .to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            parts.iter().map(literal_to_tensor).collect()
+        }
+    }
+
+    /// Host tensor → rank-preserving literal. Vectors (h=w=1) go as rank-1,
+    /// everything else as CHW rank-3 — matching the shapes `aot.py` lowers.
+    pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&t.data);
+        let lit = if t.h == 1 && t.w == 1 {
+            lit
+        } else {
+            lit.reshape(&[t.c as i64, t.h as i64, t.w as i64])?
+        };
+        Ok(lit)
+    }
+
+    /// Literal → host tensor (rank 1 → vector, rank 3 → CHW, rank 0 → scalar).
+    pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims = shape.dims();
+        let data: Vec<f32> = lit.to_vec()?;
+        match dims.len() {
+            0 => Ok(Tensor::vector(data)),
+            1 => Ok(Tensor::vector(data)),
+            3 => Ok(Tensor::from_vec(
+                dims[0] as usize,
+                dims[1] as usize,
+                dims[2] as usize,
+                data,
+            )),
+            n => Err(anyhow!("unsupported output rank {n} ({dims:?})")),
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // PJRT-dependent round-trip tests live in rust/tests/
+        // integration_runtime.rs (they need artifacts). Here: conversions.
+
+        #[test]
+        fn tensor_literal_roundtrip_vector() {
+            let t = Tensor::vector(vec![1.0, -2.0, 3.5]);
+            let lit = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&lit).unwrap();
+            assert_eq!(t, back);
+        }
+
+        #[test]
+        fn tensor_literal_roundtrip_chw() {
+            let t = Tensor::from_vec(2, 2, 3, (0..12).map(|v| v as f32).collect());
+            let lit = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&lit).unwrap();
+            assert_eq!(t, back);
+        }
     }
 }
 
-impl LoadedModule {
-    /// Execute with host tensors in, host tensors out. The jax export path
-    /// lowers with `return_tuple=True`, so the single on-device output is a
-    /// tuple literal that we decompose.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.path))?;
-        let out = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("no output buffers from {}", self.path))?
-            .to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        parts.iter().map(literal_to_tensor).collect()
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::tensor::Tensor;
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str = "PJRT backend unavailable: built without the `pjrt` cargo feature \
+         (vendor the `xla` crate and rebuild with `--features pjrt`); \
+         use `--backend reference` or `--backend fast` instead";
+
+    /// Stub PJRT runtime (the build has no `xla` crate).
+    pub struct Runtime {
+        _private: (),
+    }
+
+    /// Stub loaded module; never constructed.
+    pub struct LoadedModule {
+        /// Path it was loaded from (diagnostics).
+        pub path: String,
+    }
+
+    impl Runtime {
+        /// Always fails: the binary was built without PJRT support.
+        pub fn cpu() -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo_text(&self, _path: &str) -> Result<LoadedModule> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    impl LoadedModule {
+        pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            bail!(UNAVAILABLE)
+        }
     }
 }
 
-/// Host tensor → rank-preserving literal. Vectors (h=w=1) go as rank-1,
-/// everything else as CHW rank-3 — matching the shapes `aot.py` lowers.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(&t.data);
-    let lit = if t.h == 1 && t.w == 1 {
-        lit
-    } else {
-        lit.reshape(&[t.c as i64, t.h as i64, t.w as i64])?
-    };
-    Ok(lit)
-}
+pub use imp::{LoadedModule, Runtime};
 
-/// Literal → host tensor (rank 1 → vector, rank 3 → CHW, rank 0 → scalar).
-pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape()?;
-    let dims = shape.dims();
-    let data: Vec<f32> = lit.to_vec()?;
-    match dims.len() {
-        0 => Ok(Tensor::vector(data)),
-        1 => Ok(Tensor::vector(data)),
-        3 => Ok(Tensor::from_vec(
-            dims[0] as usize,
-            dims[1] as usize,
-            dims[2] as usize,
-            data,
-        )),
-        n => Err(anyhow!("unsupported output rank {n} ({dims:?})")),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // PJRT-dependent round-trip tests live in rust/tests/
-    // integration_runtime.rs (they need artifacts). Here: conversions.
-
-    #[test]
-    fn tensor_literal_roundtrip_vector() {
-        let t = Tensor::vector(vec![1.0, -2.0, 3.5]);
-        let lit = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&lit).unwrap();
-        assert_eq!(t, back);
-    }
-
-    #[test]
-    fn tensor_literal_roundtrip_chw() {
-        let t = Tensor::from_vec(2, 2, 3, (0..12).map(|v| v as f32).collect());
-        let lit = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&lit).unwrap();
-        assert_eq!(t, back);
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use imp::{literal_to_tensor, tensor_to_literal};

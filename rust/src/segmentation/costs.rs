@@ -313,7 +313,9 @@ mod tests {
                 for tag in [BoundaryTag::Rep, BoundaryTag::Row, BoundaryTag::Partial] {
                     let (c, _) = single_cost_exact(&m, &cluster, i, tag);
                     assert!(c > 0.0);
-                    if i + 1 < n && crate::partition::iop::pairable(&m, m.stages()[i], m.stages()[i + 1]) {
+                    if i + 1 < n
+                        && crate::partition::iop::pairable(&m, m.stages()[i], m.stages()[i + 1])
+                    {
                         assert!(pair_iop_cost_vs(&m, &cluster, i, tag) > 0.0);
                     }
                 }

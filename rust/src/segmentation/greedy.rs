@@ -115,7 +115,8 @@ pub fn greedy(model: &Model, cluster: &Cluster) -> Vec<Segment> {
             } else {
                 // eq. (1): a single that overflows memory forces the pair.
                 let s = single_slices(model, cluster, i);
-                !mem.feasible_with(model, &s) && mem.feasible_with(model, &pair_slices(model, cluster, i))
+                !mem.feasible_with(model, &s)
+                    && mem.feasible_with(model, &pair_slices(model, cluster, i))
             }
         } else {
             false

@@ -140,7 +140,9 @@ mod tests {
             .unwrap();
         let has_fc_pair = segs
             .iter()
-            .any(|s| matches!(s, crate::partition::Segment::Pair(i) if *i >= fc_start.saturating_sub(1)));
+            .any(|s| {
+                matches!(s, crate::partition::Segment::Pair(i) if *i >= fc_start.saturating_sub(1))
+            });
         assert!(has_fc_pair, "{segs:?}");
     }
 }

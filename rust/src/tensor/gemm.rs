@@ -1,0 +1,480 @@
+//! Cache-blocked, register-tiled f32 GEMM with a fused bias+ReLU epilogue.
+//!
+//! `C = A·B (+ bias per row)(→ ReLU)` with `A: m×k`, `B: k×n`, `C: m×n`,
+//! all row-major. This is the compute spine of the Fast backend: conv
+//! lowers onto it through im2col (`tensor::im2col`), dense layers use the
+//! [`matvec`] special case.
+//!
+//! Design (BLIS-style, safe Rust only — no intrinsics, no dependencies):
+//!  * three-level blocking: `NC`-wide column panels of B, `KC`-deep k
+//!    blocks (the packed B panel stays cache-resident across the whole
+//!    row sweep), `MC`-tall row blocks of A;
+//!  * packing: B is repacked into `KC×NR` column micro-panels and A into
+//!    `KC×MR` row micro-panels so the microkernel streams both
+//!    contiguously, independent of the original leading dimensions;
+//!  * an `MR×NR` register-tile microkernel over fixed-size arrays
+//!    (`[[f32; NR]; MR]`, `chunks_exact` + `try_into` to arrays) so LLVM
+//!    keeps the accumulators in SIMD registers and autovectorizes the
+//!    fma loop;
+//!  * the epilogue (per-row bias, ReLU) is fused into the writeback of
+//!    the *final* k block — the finished output tile is touched exactly
+//!    once;
+//!  * [`gemm_parallel`] adds intra-device parallelism with
+//!    `std::thread::scope` over contiguous row (output-channel) blocks:
+//!    disjoint `&mut` C slices per thread, B shared read-only.
+
+/// Microkernel tile height (rows of A / C).
+pub const MR: usize = 4;
+/// Microkernel tile width (columns of B / C).
+pub const NR: usize = 16;
+/// Row-block height (multiple of `MR`).
+const MC: usize = 64;
+/// k-block depth.
+const KC: usize = 256;
+/// Column-panel width (multiple of `NR`).
+const NC: usize = 512;
+
+/// Epilogue fused into the last k-block writeback.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Epilogue<'a> {
+    /// Per-output-row (= output-channel) bias, length `m`.
+    pub bias: Option<&'a [f32]>,
+    /// Apply `max(0, ·)` to the final values.
+    pub relu: bool,
+}
+
+/// `c += a·b`, then apply `ep` to the finished values. Callers that want
+/// a plain product must pass a zero-filled `c`. Panics on size mismatch.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], ep: Epilogue) {
+    assert_eq!(a.len(), m * k, "gemm: A must be m*k");
+    assert_eq!(b.len(), k * n, "gemm: B must be k*n");
+    assert_eq!(c.len(), m * n, "gemm: C must be m*n");
+    if let Some(bias) = ep.bias {
+        assert_eq!(bias.len(), m, "gemm: bias must have one entry per row");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        epilogue_only(n, c, ep);
+        return;
+    }
+    // Packing buffers sized to the actual problem, not full block
+    // capacity — small shard calls (the distributed harness's common
+    // case) shouldn't pay a ~576 KiB alloc+memset for a few-KiB panel.
+    let kc_max = KC.min(k);
+    let mut bpack = vec![0.0f32; NC.min(n).div_ceil(NR) * NR * kc_max];
+    let mut apack = vec![0.0f32; MC.min(m).div_ceil(MR) * MR * kc_max];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let n_panels = nc.div_ceil(NR);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            let last_k = pc + kc == k;
+            pack_b(&mut bpack, b, n, jc, nc, pc, kc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(&mut apack, a, k, ic, mc, pc, kc);
+                let n_tiles = mc.div_ceil(MR);
+                for it in 0..n_tiles {
+                    let i0 = it * MR;
+                    let rows = MR.min(mc - i0);
+                    let ap = &apack[it * kc * MR..(it + 1) * kc * MR];
+                    for jt in 0..n_panels {
+                        let j0 = jt * NR;
+                        let cols = NR.min(nc - j0);
+                        let bp = &bpack[jt * kc * NR..(jt + 1) * kc * NR];
+                        let tile_ep = if last_k { Some(ep) } else { None };
+                        microkernel(ap, bp, c, n, ic + i0, jc + j0, rows, cols, tile_ep);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Row-parallel GEMM: splits `m` into contiguous blocks, one scoped
+/// thread per block (disjoint `&mut` C row slices; B shared). Falls back
+/// to the serial kernel when the problem is too small to amortize spawns.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue,
+    threads: usize,
+) {
+    // Validate up front: the parallel path slices these per row block and
+    // must fail with the same clear message as the serial kernel.
+    assert_eq!(a.len(), m * k, "gemm: A must be m*k");
+    assert_eq!(b.len(), k * n, "gemm: B must be k*n");
+    assert_eq!(c.len(), m * n, "gemm: C must be m*n");
+    if let Some(bias) = ep.bias {
+        assert_eq!(bias.len(), m, "gemm: bias must have one entry per row");
+    }
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let t = threads.clamp(1, m.max(1));
+    if t == 1 || k == 0 || n == 0 || flops < 2e6 {
+        gemm(m, k, n, a, b, c, ep);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|scope| {
+        let a_blocks = a.chunks(rows_per * k);
+        let c_blocks = c.chunks_mut(rows_per * n);
+        for (i, (a_blk, c_blk)) in a_blocks.zip(c_blocks).enumerate() {
+            let row0 = i * rows_per;
+            let mb = c_blk.len() / n;
+            let bias_blk = ep.bias.map(|bv| &bv[row0..row0 + mb]);
+            let relu = ep.relu;
+            scope.spawn(move || {
+                gemm(
+                    mb,
+                    k,
+                    n,
+                    a_blk,
+                    b,
+                    c_blk,
+                    Epilogue {
+                        bias: bias_blk,
+                        relu,
+                    },
+                );
+            });
+        }
+    });
+}
+
+/// `y = W·x (+ bias)(→ ReLU)` — the dense-layer (`n = 1`) special case,
+/// row-parallel for large layers. `w` is `m×k` row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec(
+    m: usize,
+    k: usize,
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    threads: usize,
+    y: &mut [f32],
+) {
+    assert_eq!(w.len(), m * k, "matvec: W must be m*k");
+    assert_eq!(x.len(), k, "matvec: x must be k");
+    assert_eq!(y.len(), m, "matvec: y must be m");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), m, "matvec: bias must be m");
+    }
+    if m == 0 {
+        return;
+    }
+    if k == 0 {
+        for (i, out) in y.iter_mut().enumerate() {
+            let s = bias.map_or(0.0, |b| b[i]);
+            *out = if relu { s.max(0.0) } else { s };
+        }
+        return;
+    }
+    let flops = 2.0 * m as f64 * k as f64;
+    let t = threads.clamp(1, m);
+    if t == 1 || flops < 2e6 {
+        matvec_block(w, x, bias, relu, y, k);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|scope| {
+        let w_blocks = w.chunks(rows_per * k);
+        let y_blocks = y.chunks_mut(rows_per);
+        for (i, (w_blk, y_blk)) in w_blocks.zip(y_blocks).enumerate() {
+            let row0 = i * rows_per;
+            let bias_blk = bias.map(|b| &b[row0..row0 + y_blk.len()]);
+            scope.spawn(move || matvec_block(w_blk, x, bias_blk, relu, y_blk, k));
+        }
+    });
+}
+
+/// Serial matvec over a row block.
+fn matvec_block(w: &[f32], x: &[f32], bias: Option<&[f32]>, relu: bool, y: &mut [f32], k: usize) {
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let mut s = dot(w_row, x);
+        if let Some(b) = bias {
+            s += b[row];
+        }
+        *out = if relu { s.max(0.0) } else { s };
+    }
+}
+
+/// 8-lane dot product (lane sums keep LLVM on the vector path).
+fn dot(w: &[f32], x: &[f32]) -> f32 {
+    const L: usize = 8;
+    let mut lanes = [0.0f32; L];
+    let wc = w.chunks_exact(L);
+    let xc = x.chunks_exact(L);
+    let w_rem = wc.remainder();
+    let x_rem = xc.remainder();
+    for (wv, xv) in wc.zip(xc) {
+        for ((lane, &a), &b) in lanes.iter_mut().zip(wv).zip(xv) {
+            *lane += a * b;
+        }
+    }
+    let mut s: f32 = lanes.iter().sum();
+    for (&a, &b) in w_rem.iter().zip(x_rem) {
+        s += a * b;
+    }
+    s
+}
+
+/// Pack the `kc×nc` block of B at `(pc, jc)` into `NR`-wide column
+/// micro-panels, zero-padding the ragged right edge.
+fn pack_b(bpack: &mut [f32], b: &[f32], n: usize, jc: usize, nc: usize, pc: usize, kc: usize) {
+    let n_panels = nc.div_ceil(NR);
+    for jt in 0..n_panels {
+        let j0 = jc + jt * NR;
+        let cols = NR.min(jc + nc - j0);
+        let panel = &mut bpack[jt * kc * NR..(jt + 1) * kc * NR];
+        for (p, dst) in panel.chunks_exact_mut(NR).enumerate() {
+            let src_base = (pc + p) * n + j0;
+            dst[..cols].copy_from_slice(&b[src_base..src_base + cols]);
+            for v in &mut dst[cols..] {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack the `mc×kc` block of A at `(ic, pc)` into `MR`-tall row
+/// micro-panels (k-major within a panel), zero-padding the ragged
+/// bottom edge.
+fn pack_a(apack: &mut [f32], a: &[f32], k: usize, ic: usize, mc: usize, pc: usize, kc: usize) {
+    let n_tiles = mc.div_ceil(MR);
+    for it in 0..n_tiles {
+        let i0 = ic + it * MR;
+        let rows = MR.min(ic + mc - i0);
+        let tile = &mut apack[it * kc * MR..(it + 1) * kc * MR];
+        for (p, dst) in tile.chunks_exact_mut(MR).enumerate() {
+            for (r, d) in dst.iter_mut().enumerate() {
+                *d = if r < rows { a[(i0 + r) * k + pc + p] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// `MR×NR` register-tile kernel over packed panels. `ep = Some(..)` on
+/// the final k block fuses bias+ReLU into the writeback.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn microkernel(
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let av: &[f32; MR] = av.try_into().unwrap();
+        let bv: &[f32; NR] = bv.try_into().unwrap();
+        for (accr, &a) in acc.iter_mut().zip(av.iter()) {
+            for (dst, &b) in accr.iter_mut().zip(bv.iter()) {
+                *dst += a * b;
+            }
+        }
+    }
+    match ep {
+        None => {
+            for (r, accr) in acc.iter().enumerate().take(rows) {
+                let base = (row0 + r) * n + col0;
+                for (dst, &v) in c[base..base + cols].iter_mut().zip(accr.iter()) {
+                    *dst += v;
+                }
+            }
+        }
+        Some(ep) => {
+            for (r, accr) in acc.iter().enumerate().take(rows) {
+                let row = row0 + r;
+                let base = row * n + col0;
+                let bias = ep.bias.map_or(0.0, |b| b[row]);
+                for (dst, &v) in c[base..base + cols].iter_mut().zip(accr.iter()) {
+                    let x = *dst + v + bias;
+                    *dst = if ep.relu { x.max(0.0) } else { x };
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate `k = 0` product: the epilogue applied to `c` as-is.
+fn epilogue_only(n: usize, c: &mut [f32], ep: Epilogue) {
+    for (row, crow) in c.chunks_exact_mut(n).enumerate() {
+        let bias = ep.bias.map_or(0.0, |b| b[row]);
+        for v in crow.iter_mut() {
+            let x = *v + bias;
+            *v = if ep.relu { x.max(0.0) } else { x };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..len).map(|_| r.next_symmetric(1.0)).collect()
+    }
+
+    /// Naive triple loop oracle.
+    fn gemm_naive(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: Option<&[f32]>,
+        relu: bool,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = bias.map_or(0.0, |bv| bv[i]);
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = if relu { s.max(0.0) } else { s };
+            }
+        }
+        c
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| (x - y).abs() <= tol + tol * y.abs())
+    }
+
+    #[test]
+    fn matches_naive_across_blocking_edges() {
+        // Sizes straddling MR/NR/MC/KC/NC boundaries (incl. off-by-one).
+        let cases = [
+            (1, 1, 1),
+            (3, 5, 7),
+            (MR, KC, NR),
+            (MR + 1, KC + 1, NR + 1),
+            (MC, 40, NC),
+            (MC + 3, KC + 9, NC + 17),
+            (70, 300, 33),
+            (2, 600, 1100),
+        ];
+        for (i, &(m, k, n)) in cases.iter().enumerate() {
+            let a = rand_vec(m * k, 1000 + i as u64);
+            let b = rand_vec(k * n, 2000 + i as u64);
+            let bias = rand_vec(m, 3000 + i as u64);
+            for relu in [false, true] {
+                let want = gemm_naive(m, k, n, &a, &b, Some(&bias), relu);
+                let mut got = vec![0.0f32; m * n];
+                gemm(
+                    m,
+                    k,
+                    n,
+                    &a,
+                    &b,
+                    &mut got,
+                    Epilogue {
+                        bias: Some(&bias),
+                        relu,
+                    },
+                );
+                assert!(close(&got, &want, 1e-4), "case {i} ({m}x{k}x{n}) relu={relu}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_bias_no_relu_is_plain_product() {
+        let (m, k, n) = (5, 17, 9);
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let want = gemm_naive(m, k, n, &a, &b, None, false);
+        let mut got = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut got, Epilogue::default());
+        assert!(close(&got, &want, 1e-5));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (m, k, n) = (67, 130, 150);
+        let a = rand_vec(m * k, 10);
+        let b = rand_vec(k * n, 11);
+        let bias = rand_vec(m, 12);
+        let ep = Epilogue {
+            bias: Some(&bias),
+            relu: true,
+        };
+        let mut serial = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut serial, ep);
+        // 2*67*130*150 FLOPs clears the parallel-path threshold, so these
+        // all exercise the scoped-thread row split (100 > m clamps to m).
+        for threads in [2, 3, 8, 100] {
+            let mut par = vec![0.0f32; m * n];
+            gemm_parallel(m, k, n, &a, &b, &mut par, ep, threads);
+            assert!(close(&par, &serial, 1e-5), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        for (i, &(m, k)) in [(1, 1), (7, 9), (64, 257), (130, 1030)].iter().enumerate() {
+            let w = rand_vec(m * k, 20 + i as u64);
+            let x = rand_vec(k, 30 + i as u64);
+            let bias = rand_vec(m, 40 + i as u64);
+            for relu in [false, true] {
+                let want = gemm_naive(m, k, 1, &w, &x, Some(&bias), relu);
+                for threads in [1, 4] {
+                    let mut y = vec![0.0f32; m];
+                    matvec(m, k, &w, &x, Some(&bias), relu, threads, &mut y);
+                    assert!(close(&y, &want, 1e-4), "case {i} relu={relu} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        // gemm adds into C: seed C with ones, expect naive + 1.
+        let (m, k, n) = (3, 4, 5);
+        let a = rand_vec(m * k, 50);
+        let b = rand_vec(k * n, 51);
+        let naive = gemm_naive(m, k, n, &a, &b, None, false);
+        let mut c = vec![1.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut c, Epilogue::default());
+        let want: Vec<f32> = naive.iter().map(|v| v + 1.0).collect();
+        assert!(close(&c, &want, 1e-5));
+    }
+
+    #[test]
+    fn zero_k_applies_epilogue_only() {
+        let bias = vec![1.0, -2.0];
+        let mut c = vec![0.0f32; 2 * 3];
+        gemm(
+            2,
+            0,
+            3,
+            &[],
+            &[],
+            &mut c,
+            Epilogue {
+                bias: Some(&bias),
+                relu: true,
+            },
+        );
+        assert_eq!(c, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+}

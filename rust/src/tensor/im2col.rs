@@ -1,0 +1,230 @@
+//! conv2d → im2col + GEMM lowering: the Fast backend's conv path.
+//!
+//! The column matrix has one row per weight tap `(ic, ky, kx)` and one
+//! column per output pixel `(oy, ox)`; with OIHW weights flattened to
+//! `[c_out, c_in*k_h*k_w]` the convolution is then exactly
+//! `W · im2col(x)`, and bias+ReLU ride in the GEMM epilogue
+//! (`tensor::gemm::Epilogue`).
+//!
+//! Interior/border split: for each `(tap, output row)` pair the valid
+//! output columns form one contiguous run (`stride == 1`: a single
+//! bounds-check-free `copy_from_slice` of the input row; strided: a tight
+//! gather loop), while columns whose receptive field falls outside the
+//! image keep the buffer's zero fill — materialized conv padding. The hot
+//! interior therefore performs no per-pixel bounds checks at all, unlike
+//! the reference `ops::conv2d` loop nest.
+
+use super::gemm::{gemm_parallel, matvec, Epilogue};
+use super::Tensor;
+
+/// Build the column matrix: `c_in*k_h*k_w` rows × `out_h*out_w` columns,
+/// row-major. Zero entries materialize the conv padding.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    input: &Tensor,
+    k_h: usize,
+    k_w: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    out_h: usize,
+    out_w: usize,
+) -> Vec<f32> {
+    let n = out_h * out_w;
+    let mut cols = vec![0.0f32; input.c * k_h * k_w * n];
+    let h = input.h as isize;
+    let w = input.w as isize;
+    for ic in 0..input.c {
+        for ky in 0..k_h {
+            for kx in 0..k_w {
+                let row = (ic * k_h + ky) * k_w + kx;
+                let dst_base = row * n;
+                for oy in 0..out_h {
+                    let iy = (oy * stride + ky) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h {
+                        continue; // whole output row reads padding
+                    }
+                    let src_row = input.idx(ic, iy as usize, 0);
+                    let dst_row = dst_base + oy * out_w;
+                    if stride == 1 {
+                        // ix = ox + kx - pad_w must lie in [0, w):
+                        // one contiguous run of output columns.
+                        let off = kx as isize - pad_w as isize;
+                        let lo = (-off).max(0) as usize;
+                        let hi = (w - off).min(out_w as isize);
+                        if hi > lo as isize {
+                            let hi = hi as usize;
+                            let src0 = (src_row as isize + lo as isize + off) as usize;
+                            cols[dst_row + lo..dst_row + hi]
+                                .copy_from_slice(&input.data[src0..src0 + (hi - lo)]);
+                        }
+                    } else {
+                        let dst = &mut cols[dst_row..dst_row + out_w];
+                        for (ox, d) in dst.iter_mut().enumerate() {
+                            let ix = (ox * stride + kx) as isize - pad_w as isize;
+                            if ix >= 0 && ix < w {
+                                *d = input.data[src_row + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Fast 2-D convolution — same contract as `ops::conv2d` (OIHW weights,
+/// CHW input, per-axis zero padding, optional bias, fused ReLU) computed
+/// as a blocked GEMM over the im2col matrix. `threads > 1` splits output
+/// channels across scoped threads (`gemm_parallel`).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm(
+    input: &Tensor,
+    weight: &[f32],
+    bias: Option<&[f32]>,
+    c_out: usize,
+    k_h: usize,
+    k_w: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    relu: bool,
+    threads: usize,
+) -> Tensor {
+    let c_in = input.c;
+    assert_eq!(
+        weight.len(),
+        c_out * c_in * k_h * k_w,
+        "weight size mismatch"
+    );
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "bias size mismatch");
+    }
+    assert!(stride >= 1);
+    super::ops::assert_conv_fits(input, k_h, k_w, pad_h, pad_w);
+    let out_h = (input.h + 2 * pad_h - k_h) / stride + 1;
+    let out_w = (input.w + 2 * pad_w - k_w) / stride + 1;
+    let k = c_in * k_h * k_w;
+    let n = out_h * out_w;
+    let cols = im2col(input, k_h, k_w, stride, pad_h, pad_w, out_h, out_w);
+    let mut out = Tensor::zeros(c_out, out_h, out_w);
+    gemm_parallel(
+        c_out,
+        k,
+        n,
+        weight,
+        &cols,
+        &mut out.data,
+        Epilogue { bias, relu },
+        threads,
+    );
+    out
+}
+
+/// Fast dense layer — same contract as `ops::dense`, computed as a
+/// lane-vectorized (and, for large layers, row-parallel) matvec.
+pub fn dense_gemm(
+    input: &Tensor,
+    weight: &[f32],
+    bias: Option<&[f32]>,
+    c_out: usize,
+    relu: bool,
+    threads: usize,
+) -> Tensor {
+    let c_in = input.len();
+    assert_eq!(weight.len(), c_out * c_in, "dense weight size mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), c_out, "dense bias size mismatch");
+    }
+    let mut y = vec![0.0f32; c_out];
+    matvec(c_out, c_in, weight, &input.data, bias, relu, threads, &mut y);
+    Tensor::vector(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..len).map(|_| r.next_symmetric(1.0)).collect()
+    }
+
+    fn rand_tensor(c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+        Tensor::from_vec(c, h, w, rand_vec(c * h * w, seed))
+    }
+
+    #[test]
+    fn im2col_identity_for_1x1_kernel() {
+        // 1x1 kernel, stride 1, no pad: the column matrix IS the input.
+        let t = rand_tensor(3, 4, 5, 1);
+        let cols = im2col(&t, 1, 1, 1, 0, 0, 4, 5);
+        assert_eq!(cols, t.data);
+    }
+
+    #[test]
+    fn im2col_materializes_padding_as_zeros() {
+        let t = Tensor::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        // 3x3 kernel, pad 1: out 2x2, 9 rows of 4 cols.
+        let cols = im2col(&t, 3, 3, 1, 1, 1, 2, 2);
+        assert_eq!(cols.len(), 9 * 4);
+        // Center tap (ky=1, kx=1 → row 4) sees the raw image.
+        let center = 4;
+        assert_eq!(&cols[center * 4..center * 4 + 4], &[1.0, 2.0, 3.0, 4.0]);
+        // Top-left tap (ky=0, kx=0) reads above/left of the image for all
+        // but the bottom-right output; only out (1,1) sees pixel (0,0).
+        assert_eq!(&cols[0..4], &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn conv_gemm_matches_reference_basic() {
+        let t = rand_tensor(3, 9, 8, 2);
+        let w = rand_vec(4 * 3 * 3 * 3, 3);
+        let b = rand_vec(4, 4);
+        let want = ops::conv2d(&t, &w, Some(&b), 4, 3, 3, 1, 1, 1, true);
+        let got = conv2d_gemm(&t, &w, Some(&b), 4, 3, 3, 1, 1, 1, true, 1);
+        assert!(
+            got.allclose(&want, 1e-5, 1e-5),
+            "diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn conv_gemm_matches_reference_strided_asymmetric_pad() {
+        let t = rand_tensor(2, 11, 7, 5);
+        let w = rand_vec(3 * 2 * 3 * 5, 6);
+        let want = ops::conv2d(&t, &w, None, 3, 3, 5, 2, 0, 2, false);
+        let got = conv2d_gemm(&t, &w, None, 3, 3, 5, 2, 0, 2, false, 1);
+        assert!(
+            got.allclose(&want, 1e-5, 1e-5),
+            "diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn dense_gemm_matches_reference_basic() {
+        let x = Tensor::vector(rand_vec(37, 7));
+        let w = rand_vec(11 * 37, 8);
+        let b = rand_vec(11, 9);
+        let want = ops::dense(&x, &w, Some(&b), 11, true);
+        let got = dense_gemm(&x, &w, Some(&b), 11, true, 1);
+        assert!(
+            got.allclose(&want, 1e-5, 1e-5),
+            "diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "conv2d: kernel")]
+    fn conv_gemm_oversized_kernel_panics_cleanly() {
+        let t = Tensor::zeros(1, 2, 2);
+        let w = vec![0.0; 25];
+        conv2d_gemm(&t, &w, None, 1, 5, 5, 1, 0, 0, false, 1);
+    }
+}

@@ -12,7 +12,14 @@
 //! `ops` additionally implements *reference* conv/pool/dense so the whole
 //! distributed pipeline can be checked end-to-end without PJRT, and so the
 //! PJRT path itself can be validated against an independent implementation.
+//!
+//! `gemm` + `im2col` are the *fast* host kernels (blocked/packed GEMM with
+//! fused bias+ReLU epilogues, im2col conv lowering, scoped-thread
+//! parallelism) that the executor's Fast backend dispatches to; `ops`
+//! stays the oracle they are tested against.
 
+pub mod gemm;
+pub mod im2col;
 pub mod init;
 pub mod ops;
 pub mod slice;

@@ -13,6 +13,26 @@
 
 use super::Tensor;
 
+/// Shared conv shape guard: a kernel larger than the (padded) input must
+/// be a clear assert naming the shapes, not a usize subtract-overflow
+/// panic (or a silent wrap in release builds). Used by both the
+/// reference `conv2d` and the fast `im2col::conv2d_gemm`.
+pub(crate) fn assert_conv_fits(input: &Tensor, k_h: usize, k_w: usize, pad_h: usize, pad_w: usize) {
+    assert!(
+        input.h + 2 * pad_h >= k_h && input.w + 2 * pad_w >= k_w,
+        "conv2d: kernel {}x{} exceeds padded input {}x{} (input {}x{}x{}, pad_h={}, pad_w={})",
+        k_h,
+        k_w,
+        input.h + 2 * pad_h,
+        input.w + 2 * pad_w,
+        input.c,
+        input.h,
+        input.w,
+        pad_h,
+        pad_w
+    );
+}
+
 /// 2-D convolution, OIHW weights, CHW input, stride `s`, zero padding.
 /// `bias` is optional (IC-partitioned shards add bias only once, after the
 /// partial-sum reduction). `relu` applies max(0, x) to the output.
@@ -39,6 +59,7 @@ pub fn conv2d(
         assert_eq!(b.len(), c_out, "bias size mismatch");
     }
     assert!(stride >= 1);
+    assert_conv_fits(input, k_h, k_w, pad_h, pad_w);
     let out_h = (input.h + 2 * pad_h - k_h) / stride + 1;
     let out_w = (input.w + 2 * pad_w - k_w) / stride + 1;
     let mut out = Tensor::zeros(c_out, out_h, out_w);
@@ -81,6 +102,15 @@ pub fn conv2d(
 /// paper's models pool with exact tilings).
 pub fn maxpool2d(input: &Tensor, k: usize, stride: usize) -> Tensor {
     assert!(k >= 1 && stride >= 1);
+    assert!(
+        input.h >= k && input.w >= k,
+        "maxpool2d: window {}x{} exceeds input {}x{}x{}",
+        k,
+        k,
+        input.c,
+        input.h,
+        input.w
+    );
     let out_h = (input.h - k) / stride + 1;
     let out_w = (input.w - k) / stride + 1;
     let mut out = Tensor::zeros(input.c, out_h, out_w);
@@ -188,6 +218,32 @@ mod tests {
         assert_eq!(y.data[0], 0.0); // relu(-6+1) = 0
         let y = conv2d(&t, &w, Some(&[1.0]), 1, 1, 1, 1, 0, 0, false);
         assert_eq!(y.data[0], -5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv2d: kernel")]
+    fn conv_kernel_larger_than_padded_input_panics_cleanly() {
+        // (h + 2*pad - k) would underflow usize; must be a clear assert,
+        // not a subtract-overflow (or a silent wrap in release builds).
+        let t = Tensor::zeros(1, 2, 2);
+        let w = vec![0.0; 25];
+        conv2d(&t, &w, None, 1, 5, 5, 1, 0, 0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "maxpool2d: window")]
+    fn maxpool_window_larger_than_input_panics_cleanly() {
+        let t = Tensor::zeros(1, 2, 2);
+        maxpool2d(&t, 3, 1);
+    }
+
+    #[test]
+    fn conv_kernel_exactly_padded_input_is_1x1() {
+        // Boundary: kernel == padded extent must still work.
+        let t = rand_tensor(1, 2, 2, 60);
+        let w = rand_vec(16, 61);
+        let y = conv2d(&t, &w, None, 1, 4, 4, 1, 1, 1, false);
+        assert_eq!((y.h, y.w), (1, 1));
     }
 
     #[test]

@@ -149,7 +149,13 @@ pub fn act_rows_window(t: &Tensor, lo: isize, hi: isize) -> Tensor {
 /// Copy rows `[src_start, src_start+count)` of `src` into rows
 /// `[dst_start, dst_start+count)` of `dst` (same c / w). Used to assemble
 /// halo windows from received fragments.
-pub fn copy_rows_into(dst: &mut Tensor, dst_start: usize, src: &Tensor, src_start: usize, count: usize) {
+pub fn copy_rows_into(
+    dst: &mut Tensor,
+    dst_start: usize,
+    src: &Tensor,
+    src_start: usize,
+    count: usize,
+) {
     assert_eq!((dst.c, dst.w), (src.c, src.w), "c/w mismatch in copy_rows_into");
     assert!(src_start + count <= src.h && dst_start + count <= dst.h);
     for c in 0..dst.c {

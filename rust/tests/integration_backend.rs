@@ -1,0 +1,286 @@
+//! Integration: the Fast (blocked im2col+GEMM) backend is numerically
+//! equivalent to the Reference oracle — at the op level across shape
+//! extremes, at the slice level for uneven OC/IC/row partitions, for
+//! centralized inference over every real-execution zoo model, and for
+//! full distributed execution under every `Strategy` on homogeneous and
+//! heterogeneous clusters. The oracle side always runs the naive
+//! reference ops.
+
+use iop::device::profiles;
+use iop::exec::backend::ComputeBackend;
+use iop::exec::compute::{
+    apply_tail_with, centralized_inference, centralized_inference_with, compute_slice_with,
+};
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{run_plan, Backend, ExecOptions};
+use iop::model::zoo;
+use iop::partition::plan::SliceKind;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::tensor::im2col::{conv2d_gemm, dense_gemm};
+use iop::tensor::ops::{conv2d, dense};
+use iop::tensor::slice::{act_channel_slice, concat_channels, concat_rows, reduce_sum};
+use iop::tensor::Tensor;
+use iop::util::prng::SplitMix64;
+
+const REF: ComputeBackend = ComputeBackend::Reference;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = SplitMix64::new(seed);
+    (0..n).map(|_| r.next_symmetric(1.0)).collect()
+}
+
+fn rand_tensor(c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+    Tensor::from_vec(c, h, w, rand_vec(c * h * w, seed))
+}
+
+// ---------- op level ----------
+
+#[test]
+fn conv_gemm_matches_reference_across_shapes() {
+    // (c_in, h, w, c_out, k, stride, pad) — straddles the GEMM blocking
+    // boundaries (MR/NR/MC/KC/NC), 1x1 and image-sized kernels, strides
+    // 1/2/3/4, odd spatial dims, and c_out not divisible by the tile.
+    let cases = [
+        (1, 28, 28, 6, 5, 1, 0),   // lenet conv1 shape
+        (3, 32, 32, 8, 3, 1, 1),   // vgg_mini conv1 (n = 1024 crosses NC)
+        (8, 16, 16, 16, 3, 1, 1),  // vgg_mini conv2
+        (3, 15, 11, 4, 3, 2, 1),   // odd dims, stride 2
+        (2, 9, 9, 5, 1, 1, 0),     // 1x1 kernel
+        (4, 13, 7, 3, 5, 4, 2),    // stride 4, heavy pad
+        (2, 7, 7, 3, 7, 1, 3),     // kernel spans the whole padded input
+        (5, 6, 6, 33, 3, 1, 1),    // c_out % MR != 0
+        (7, 12, 12, 4, 3, 3, 0),   // stride 3
+        (40, 10, 10, 8, 3, 1, 1),  // k = 360 crosses the KC block depth
+        (3, 8, 8, 70, 3, 1, 1),    // c_out crosses MC
+    ];
+    for (i, &(ci, h, w, co, k, s, p)) in cases.iter().enumerate() {
+        let x = rand_tensor(ci, h, w, 100 + i as u64);
+        let wts = rand_vec(co * ci * k * k, 200 + i as u64);
+        let bias = rand_vec(co, 300 + i as u64);
+        for relu in [false, true] {
+            let want = conv2d(&x, &wts, Some(&bias), co, k, k, s, p, p, relu);
+            for threads in [1usize, 4] {
+                let got = conv2d_gemm(&x, &wts, Some(&bias), co, k, k, s, p, p, relu, threads);
+                assert!(
+                    got.allclose(&want, 1e-4, 1e-4),
+                    "case {i} relu={relu} threads={threads}: diff={}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+        // bias-less (IC-partial) path
+        let want = conv2d(&x, &wts, None, co, k, k, s, p, p, false);
+        let got = conv2d_gemm(&x, &wts, None, co, k, k, s, p, p, false, 1);
+        assert!(
+            got.allclose(&want, 1e-4, 1e-4),
+            "case {i} no-bias: diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn dense_gemm_matches_reference_across_shapes() {
+    let cases = [(10, 5), (128, 64), (864, 120), (4096, 1000), (9, 1), (1, 7)];
+    for (i, &(ci, co)) in cases.iter().enumerate() {
+        let x = Tensor::vector(rand_vec(ci, 400 + i as u64));
+        let w = rand_vec(co * ci, 500 + i as u64);
+        let b = rand_vec(co, 600 + i as u64);
+        for relu in [false, true] {
+            let want = dense(&x, &w, Some(&b), co, relu);
+            for threads in [1usize, 4] {
+                let got = dense_gemm(&x, &w, Some(&b), co, relu, threads);
+                assert!(
+                    got.allclose(&want, 1e-4, 1e-4),
+                    "case {i} relu={relu} threads={threads}: diff={}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+        let want = dense(&x, &w, None, co, false);
+        let got = dense_gemm(&x, &w, None, co, false, 1);
+        assert!(got.allclose(&want, 1e-4, 1e-4), "case {i} no-bias");
+    }
+}
+
+// ---------- slice level: uneven OC / IC / row splits ----------
+
+#[test]
+fn uneven_oc_split_fast_concats_to_reference_full() {
+    let m = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&m);
+    let x = model_input(&m);
+    let stage = m.stages()[0]; // conv1: c_out = 8
+    let full_ref = compute_slice_with(REF, &m, &wb, stage, &SliceKind::Full, &x, None);
+    // Uneven on purpose: 3/4/1.
+    let parts: Vec<Tensor> = [(0usize, 3usize), (3, 4), (7, 1)]
+        .iter()
+        .map(|&(start, count)| {
+            compute_slice_with(
+                ComputeBackend::fast(),
+                &m,
+                &wb,
+                stage,
+                &SliceKind::Oc { start, count },
+                &x,
+                None,
+            )
+        })
+        .collect();
+    let joined = concat_channels(&parts);
+    assert!(
+        joined.allclose(&full_ref, 1e-4, 1e-4),
+        "diff={}",
+        joined.max_abs_diff(&full_ref)
+    );
+}
+
+#[test]
+fn uneven_ic_split_fast_reduces_to_reference_full() {
+    let m = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&m);
+    let x = model_input(&m);
+    let stages = m.stages();
+    let s0 = compute_slice_with(REF, &m, &wb, stages[0], &SliceKind::Full, &x, None);
+    let full_ref = compute_slice_with(REF, &m, &wb, stages[1], &SliceKind::Full, &s0, None);
+    // conv2 has 8 input channels; split 1/5/2 (uneven).
+    let partials: Vec<Tensor> = [(0usize, 1usize), (1, 5), (6, 2)]
+        .iter()
+        .map(|&(start, count)| {
+            let xin = act_channel_slice(&s0, start, count);
+            compute_slice_with(
+                ComputeBackend::fast(),
+                &m,
+                &wb,
+                stages[1],
+                &SliceKind::Ic { start, count },
+                &xin,
+                None,
+            )
+        })
+        .collect();
+    let raw = reduce_sum(&partials);
+    let assembled = apply_tail_with(ComputeBackend::fast(), &m, &wb, stages[1], &raw);
+    assert!(
+        assembled.allclose(&full_ref, 1e-4, 1e-4),
+        "diff={}",
+        assembled.max_abs_diff(&full_ref)
+    );
+}
+
+#[test]
+fn uneven_row_split_fast_concats_to_reference_full() {
+    let m = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&m);
+    let x = model_input(&m);
+    let stage = m.stages()[0]; // conv1 + pool1: 16 output rows
+    let full_ref = compute_slice_with(REF, &m, &wb, stage, &SliceKind::Full, &x, None);
+    // Uneven 7/2/7 split over the 16 output rows.
+    let parts: Vec<Tensor> = [(0usize, 7usize), (7, 2), (9, 7)]
+        .iter()
+        .map(|&(start, count)| {
+            compute_slice_with(
+                ComputeBackend::fast(),
+                &m,
+                &wb,
+                stage,
+                &SliceKind::Rows { start, count },
+                &x,
+                None,
+            )
+        })
+        .collect();
+    let joined = concat_rows(&parts);
+    assert!(
+        joined.allclose(&full_ref, 1e-4, 1e-4),
+        "diff={}",
+        joined.max_abs_diff(&full_ref)
+    );
+}
+
+// ---------- centralized: every real-execution zoo model ----------
+
+fn check_centralized(model: &iop::model::Model) {
+    let wb = WeightBundle::generate(model);
+    let x = model_input(model);
+    let expect = centralized_inference(model, &wb, &x);
+    for backend in [ComputeBackend::fast(), ComputeBackend::Fast { threads: 4 }] {
+        let got = centralized_inference_with(backend, model, &wb, &x);
+        assert!(
+            got.allclose(&expect, 1e-4, 1e-4),
+            "{} {:?}: diff={}",
+            model.name,
+            backend,
+            got.max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn centralized_fast_matches_reference_lenet() {
+    check_centralized(&zoo::lenet());
+}
+
+#[test]
+fn centralized_fast_matches_reference_vgg_mini() {
+    check_centralized(&zoo::vgg_mini());
+}
+
+#[test]
+fn centralized_fast_matches_reference_alexnet() {
+    // The heavyweight case: ImageNet-sized activations, 11x11 stride-4
+    // conv, 4096-wide dense layers.
+    check_centralized(&zoo::alexnet());
+}
+
+// ---------- distributed: every strategy, both cluster shapes ----------
+
+fn check_distributed(model: &iop::model::Model, cluster: &iop::device::Cluster, threads: usize) {
+    let wb = WeightBundle::generate(model);
+    let expect = centralized_inference(model, &wb, &model_input(model));
+    for s in Strategy::all() {
+        let plan = pipeline::plan(model, cluster, s);
+        let got = run_plan(
+            model,
+            &plan,
+            &ExecOptions {
+                backend: Backend::Fast { threads },
+                input: None,
+            },
+        )
+        .unwrap();
+        assert!(
+            got.output.allclose(&expect, 1e-4, 1e-4),
+            "{} {} m={} threads={}: diff={}",
+            model.name,
+            s.name(),
+            cluster.m(),
+            threads,
+            got.output.max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn distributed_fast_lenet_all_strategies() {
+    check_distributed(&zoo::lenet(), &profiles::paper_default(), 1);
+}
+
+#[test]
+fn distributed_fast_vgg_mini_all_strategies() {
+    check_distributed(&zoo::vgg_mini(), &profiles::paper_default(), 1);
+}
+
+#[test]
+fn distributed_fast_alexnet_all_strategies() {
+    check_distributed(&zoo::alexnet(), &profiles::paper_default(), 1);
+}
+
+#[test]
+fn distributed_fast_heterogeneous_uneven_allocations() {
+    // Heterogeneous capabilities force uneven OC/IC/row allocations in
+    // every planner; also exercise intra-worker threading.
+    check_distributed(&zoo::vgg_mini(), &profiles::heterogeneous(), 2);
+    check_distributed(&zoo::lenet(), &profiles::heterogeneous(), 2);
+}

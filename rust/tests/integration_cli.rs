@@ -41,6 +41,34 @@ fn exec_reference_backend() {
 }
 
 #[test]
+fn exec_fast_backend() {
+    run(&["exec", "--model", "lenet", "--strategy", "iop", "--backend", "fast"]).unwrap();
+    run(&[
+        "exec", "--model", "vgg_mini", "--strategy", "coedge", "--backend", "fast", "--threads",
+        "2",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn exec_unknown_backend_fails() {
+    assert!(run(&["exec", "--model", "lenet", "--strategy", "iop", "--backend", "gpu"]).is_err());
+}
+
+#[test]
+fn exec_threads_requires_fast_backend() {
+    assert!(run(&["exec", "--model", "lenet", "--strategy", "iop", "--threads", "4"]).is_err());
+}
+
+#[test]
+fn exec_zero_threads_rejected() {
+    assert!(run(&[
+        "exec", "--model", "lenet", "--strategy", "iop", "--backend", "fast", "--threads", "0",
+    ])
+    .is_err());
+}
+
+#[test]
 fn emit_plans_writes_json() {
     let out = std::env::temp_dir().join("iop_test_plans.json");
     let out_s = out.to_str().unwrap();

@@ -229,7 +229,11 @@ fn prop_sim_never_faster_than_compute_bound() {
         let model = gen_model(g);
         let s = *g.choose(&Strategy::all());
         let plan = pipeline::plan(&model, &cluster, s);
-        let r = simulate(&model, &cluster, &plan, SimConfig { strict_barriers: g.bool(), record_trace: false });
+        let cfg = SimConfig {
+            strict_barriers: g.bool(),
+            record_trace: false,
+        };
+        let r = simulate(&model, &cluster, &plan, cfg);
         let ideal = model.total_flops() / cluster.total_flops_per_sec();
         prop_assert(
             r.total_secs * 1.000001 >= ideal * 0.999,
