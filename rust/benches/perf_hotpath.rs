@@ -19,9 +19,11 @@
 use iop::bench::{BenchReport, Bencher};
 use iop::device::profiles;
 use iop::exec::backend::{available_threads, ComputeBackend};
-use iop::exec::compute::{centralized_inference, centralized_inference_with};
+use iop::exec::compute::{
+    centralized_inference, centralized_inference_compiled, centralized_inference_with,
+};
 use iop::exec::weights::{model_input, WeightBundle};
-use iop::exec::{run_plan, Backend, ExecOptions, ExecSession};
+use iop::exec::{run_plan, Backend, CompiledDevice, ExecOptions, ExecSession, ScratchArena};
 use iop::model::zoo;
 use iop::partition::Strategy;
 use iop::pipeline;
@@ -101,6 +103,13 @@ fn main() {
     bench!(format!("centralized vgg_mini (fast ops, {threads} threads)"), || {
         centralized_inference_with(ComputeBackend::fast_parallel(), &model, &wb, &x)
     });
+    // Compiled plan: weights prepacked once, im2col/GEMM scratch reused
+    // across iterations out of one arena (the serving-loop shape).
+    let compiled = CompiledDevice::compile_centralized(&model, &wb, 1);
+    let mut arena = ScratchArena::new();
+    bench!("centralized vgg_mini (compiled ops)", || {
+        centralized_inference_compiled(&model, &compiled, &x, &mut arena)
+    });
     if let (Some(rf), Some(fast)) = (
         rep.get("centralized vgg_mini (reference ops)"),
         rep.get("centralized vgg_mini (fast ops)"),
@@ -108,6 +117,15 @@ fn main() {
         println!(
             "fast-backend speedup vs reference (vgg_mini, 1 thread): {:.1}x",
             rf.median / fast.median
+        );
+    }
+    if let (Some(fast), Some(comp)) = (
+        rep.get("centralized vgg_mini (fast ops)"),
+        rep.get("centralized vgg_mini (compiled ops)"),
+    ) {
+        println!(
+            "compiled-plan speedup vs fast (vgg_mini, 1 thread): {:.2}x",
+            fast.median / comp.median
         );
     }
 
@@ -135,6 +153,27 @@ fn main() {
         bench!(format!("session.infer vgg_mini {} (fast, steady)", s.name()), || {
             session.infer(input.clone()).unwrap()
         });
+    }
+
+    println!("\n== end-to-end distributed inference (compiled plans) ==");
+    for s in Strategy::all() {
+        let model = zoo::vgg_mini();
+        let plan = pipeline::plan(&model, &cluster, s);
+        let mut session =
+            ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        let input = model_input(&model);
+        bench!(format!("session.infer vgg_mini {} (compiled, steady)", s.name()), || {
+            session.infer(input.clone()).unwrap()
+        });
+    }
+    if let (Some(fast), Some(comp)) = (
+        rep.get("session.infer vgg_mini IOP (fast, steady)"),
+        rep.get("session.infer vgg_mini IOP (compiled, steady)"),
+    ) {
+        println!(
+            "compiled-plan steady-state speedup vs fast (vgg_mini IOP): {:.2}x",
+            fast.median / comp.median
+        );
     }
 
     let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

@@ -300,13 +300,14 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let backend = match a.str_or("backend", "reference").as_str() {
         "reference" => Backend::Reference,
         "fast" => Backend::Fast { threads },
+        "compiled" => Backend::Compiled { threads },
         "pjrt" => Backend::Pjrt {
             artifacts_dir: a.str_or("artifacts", "artifacts"),
         },
-        other => bail!("unknown backend '{other}' (reference|fast|pjrt)"),
+        other => bail!("unknown backend '{other}' (reference|fast|compiled|pjrt)"),
     };
-    if threads_given && !matches!(backend, Backend::Fast { .. }) {
-        bail!("--threads only applies to --backend fast");
+    if threads_given && !matches!(backend, Backend::Fast { .. } | Backend::Compiled { .. }) {
+        bail!("--threads only applies to --backend fast|compiled");
     }
     a.finish()?;
 
@@ -318,6 +319,7 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let backend_tag = match &backend {
         Backend::Reference => "reference".to_string(),
         Backend::Fast { threads } => format!("fast({threads}t)"),
+        Backend::Compiled { threads } => format!("compiled({threads}t)"),
         Backend::Pjrt { .. } => "pjrt".to_string(),
     };
     let r = run_plan(

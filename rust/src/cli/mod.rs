@@ -49,9 +49,11 @@ COMMANDS:
                                  Fig. 6: latency vs connection latency
   scaling    --model M [--counts 1,2,3,4,6,8] [cluster opts]
                                  Device-count scaling study (extension)
-  exec       --model M --strategy S [--backend reference|fast|pjrt]
-                                 Real distributed execution (threads),
-                                 checked against the centralized model
+  exec       --model M --strategy S
+             [--backend reference|fast|compiled|pjrt] [--threads N]
+                                 Real distributed execution, checked
+                                 against the centralized model (compiled
+                                 = prepacked weights + scratch arenas)
   emit-plans [--models a,b] --out FILE
                                  Export canonical plans as JSON for the
                                  python AOT shard compiler

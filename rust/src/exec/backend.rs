@@ -13,6 +13,13 @@
 //! parallelism and uses `Fast { threads: available_threads() }` to
 //! spread output-channel blocks across cores via `std::thread::scope`
 //! (`tensor::gemm::gemm_parallel`).
+//!
+//! The *compiled-plan* serving layer (`exec::prepack`) sits beside this
+//! enum rather than inside it: it carries per-session state (prepacked
+//! weight shards, scratch arenas) that a stateless `Copy` backend tag
+//! cannot, so the harness dispatches it as its own `Backend::Compiled` /
+//! `Runner::Compiled` path and falls back to these kernels for the
+//! stage tails (pool/ReLU, which hold no weights to prepack).
 
 use crate::tensor::{im2col, ops, Tensor};
 

@@ -20,6 +20,9 @@
 //! The `*_with` variants take an explicit [`ComputeBackend`]; the plain
 //! wrappers pin to `Reference` and are what tests and oracles call — the
 //! naive ops stay the independent numerical ground truth.
+//! [`compute_slice_compiled`] is the steady-state serving counterpart:
+//! same dispatch table, but over a prepacked [`CompiledDevice`] shard and
+//! a reusable [`ScratchArena`] (`exec::prepack`).
 
 use crate::model::{Model, OpKind, Stage};
 use crate::partition::plan::SliceKind;
@@ -28,6 +31,7 @@ use crate::tensor::slice::*;
 use crate::tensor::Tensor;
 
 use super::backend::ComputeBackend;
+use super::prepack::{run_conv, run_dense, CompiledDevice, CompiledKernel, ScratchArena};
 use super::weights::WeightBundle;
 
 /// Run the passthrough tail of a stage (everything after the head op),
@@ -232,6 +236,91 @@ pub fn compute_slice(
     )
 }
 
+/// Compiled-plan counterpart of [`compute_slice_with`]: identical input
+/// semantics per slice kind, but conv/dense dispatch to the device's
+/// prepacked kernels and grow-only scratch arena instead of re-slicing
+/// weights and re-packing GEMM panels per call. The per-call path above
+/// stays the one-shot/oracle route. `si` indexes the compiled device's
+/// per-stage kernel table (= the plan stage index).
+#[allow(clippy::too_many_arguments)]
+pub fn compute_slice_compiled(
+    model: &Model,
+    cd: &CompiledDevice,
+    si: usize,
+    stage: Stage,
+    slice: &SliceKind,
+    input: &Tensor,
+    window_rows: Option<(isize, isize)>,
+    arena: &mut ScratchArena,
+) -> Tensor {
+    let backend = ComputeBackend::Fast {
+        threads: cd.threads,
+    };
+    match (&cd.stages[si], slice) {
+        (_, SliceKind::Idle) => Tensor::vector(vec![]),
+
+        (
+            CompiledKernel::Conv(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => {
+            let y = run_conv(k, input, cd.threads, arena);
+            run_tail_with(backend, model, stage, y, false)
+        }
+        (CompiledKernel::Conv(k), SliceKind::Ic { count, .. }) => {
+            debug_assert_eq!(input.c, *count, "IC slice expects its channel block");
+            run_conv(k, input, cd.threads, arena)
+        }
+        (CompiledKernel::Conv(k), SliceKind::Rows { start, count }) => {
+            let (lo, hi) = input_rows_needed(model, stage, *start, *start + *count);
+            let built;
+            let window: &Tensor = match window_rows {
+                Some((wlo, whi)) => {
+                    debug_assert_eq!((wlo, whi), (lo, hi), "window mismatch");
+                    input // already a window
+                }
+                None => {
+                    built = act_rows_window(input, lo, hi);
+                    &built
+                }
+            };
+            let y = run_conv(k, window, cd.threads, arena);
+            run_tail_with(backend, model, stage, y, true) // defer flatten
+        }
+
+        (
+            CompiledKernel::Dense(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => {
+            let y = run_dense(k, input, cd.threads);
+            run_tail_with(backend, model, stage, y, false)
+        }
+        (CompiledKernel::Dense(k), SliceKind::Ic { count, .. }) => {
+            debug_assert_eq!(input.len(), *count, "IC slice expects its feature block");
+            run_dense(k, input, cd.threads)
+        }
+
+        (kernel, slice) => {
+            unreachable!("compiled kernel {kernel:?} incompatible with slice {slice:?}")
+        }
+    }
+}
+
+/// Centralized inference over a compiled model
+/// ([`CompiledDevice::compile_centralized`]), reusing the caller's
+/// scratch arena across requests — the serving-loop shape.
+pub fn centralized_inference_compiled(
+    model: &Model,
+    cd: &CompiledDevice,
+    input: &Tensor,
+    arena: &mut ScratchArena,
+) -> Tensor {
+    let mut t = input.clone();
+    for (si, &stage) in model.stages().iter().enumerate() {
+        t = compute_slice_compiled(model, cd, si, stage, &SliceKind::Full, &t, None, arena);
+    }
+    t
+}
+
 /// Centralized inference on an explicit backend (single device, whole
 /// model). The fast backend spreads output channels across cores here —
 /// there is no outer per-device parallelism to collide with.
@@ -280,6 +369,24 @@ mod tests {
             assert!(
                 got.allclose(&expect, 1e-4, 1e-4),
                 "{backend:?}: diff={}",
+                got.max_abs_diff(&expect)
+            );
+        }
+    }
+
+    #[test]
+    fn centralized_compiled_matches_reference_lenet() {
+        let m = zoo::lenet();
+        let wb = WeightBundle::generate(&m);
+        let x = model_input(&m);
+        let expect = centralized_inference(&m, &wb, &x);
+        let cd = CompiledDevice::compile_centralized(&m, &wb, 2);
+        let mut arena = ScratchArena::new();
+        for _ in 0..3 {
+            let got = centralized_inference_compiled(&m, &cd, &x, &mut arena);
+            assert!(
+                got.allclose(&expect, 1e-4, 1e-4),
+                "diff={}",
                 got.max_abs_diff(&expect)
             );
         }

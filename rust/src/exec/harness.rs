@@ -20,8 +20,9 @@ use crate::tensor::slice::{
 use crate::tensor::Tensor;
 
 use super::backend::ComputeBackend;
-use super::compute::{apply_tail_with, compute_slice_with};
+use super::compute::{apply_tail_with, compute_slice_compiled, compute_slice_with};
 use super::pjrt::PjrtRunner;
+use super::prepack::{CompiledDevice, ScratchArena};
 use super::weights::{model_input, WeightBundle};
 
 /// Which compute backend workers use.
@@ -33,6 +34,11 @@ pub enum Backend {
     /// intra-worker thread count over output-channel blocks (workers are
     /// already one thread per device, so 1 is the sensible default).
     Fast { threads: usize },
+    /// The fast kernels over a compiled plan (`exec::prepack`): each
+    /// worker prepacks its weight shard at session creation and serves
+    /// requests out of a grow-only scratch arena — the steady-state
+    /// deployment path.
+    Compiled { threads: usize },
     /// AOT XLA shard executables from `artifacts/` via PJRT-CPU.
     Pjrt { artifacts_dir: String },
 }
@@ -65,6 +71,10 @@ pub struct ExecStats {
     pub messages_sent: Vec<usize>,
     /// Pure compute seconds per device.
     pub compute_secs: Vec<f64>,
+    /// Scratch-arena growths per device since session creation
+    /// (`Backend::Compiled` only; 0 elsewhere). Flat across steady-state
+    /// requests ⇔ the conv/dense hot loop performed no heap allocations.
+    pub arena_grows: Vec<u64>,
 }
 
 /// Execution result: the network output (assembled on device 0) + stats.
@@ -116,9 +126,15 @@ impl Mailbox {
     }
 }
 
-/// Worker-side compute dispatch (host kernels or PJRT executables).
+/// Worker-side compute dispatch (host kernels, a compiled shard, or PJRT
+/// executables).
 enum Runner {
     Host(ComputeBackend),
+    /// The worker's prepacked weight shard + its reusable scratch arena.
+    Compiled {
+        shard: Box<CompiledDevice>,
+        arena: ScratchArena,
+    },
     Pjrt(Box<PjrtRunner>),
 }
 
@@ -145,6 +161,16 @@ impl Runner {
                 input,
                 window,
             )),
+            Runner::Compiled { shard, arena } => Ok(compute_slice_compiled(
+                model,
+                shard,
+                si,
+                plan.stages[si].stage,
+                slice,
+                input,
+                window,
+                arena,
+            )),
             Runner::Pjrt(r) => r.run_slice(si, dev, slice, input, window),
         }
     }
@@ -161,7 +187,24 @@ impl Runner {
             Runner::Host(backend) => {
                 Ok(apply_tail_with(*backend, model, wb, plan.stages[si].stage, raw))
             }
+            Runner::Compiled { shard, .. } => Ok(apply_tail_with(
+                ComputeBackend::Fast {
+                    threads: shard.threads,
+                },
+                model,
+                wb,
+                plan.stages[si].stage,
+                raw,
+            )),
             Runner::Pjrt(r) => r.run_tail(si, raw),
+        }
+    }
+
+    /// Arena growths since session creation (compiled runners only).
+    fn arena_grows(&self) -> u64 {
+        match self {
+            Runner::Compiled { arena, .. } => arena.grow_count(),
+            _ => 0,
         }
     }
 }
@@ -169,7 +212,9 @@ impl Runner {
 /// What a worker holds between stages.
 enum Local {
     /// Full activation (replicated layouts / root holding everything).
-    Full(Tensor),
+    /// `Arc` so the request input is shared across workers without `m`
+    /// clones; locally produced tensors wrap at zero copy cost.
+    Full(Arc<Tensor>),
     /// Own shard: channel block or spatial rows (tagged by prev stage).
     Shard(Tensor),
     /// Nothing (idle / non-root after gather).
@@ -179,7 +224,7 @@ enum Local {
 impl Local {
     fn full(&self) -> Result<&Tensor> {
         match self {
-            Local::Full(t) => Ok(t),
+            Local::Full(t) => Ok(t.as_ref()),
             _ => Err(anyhow!("expected full activation locally")),
         }
     }
@@ -198,7 +243,7 @@ pub struct ExecSession {
 }
 
 enum Control {
-    Request { req: usize, input: Tensor },
+    Request { req: usize, input: Arc<Tensor> },
     Shutdown,
 }
 
@@ -247,15 +292,17 @@ impl ExecSession {
         })
     }
 
-    /// Run one inference over the live worker set.
+    /// Run one inference over the live worker set. The input is shared
+    /// with every worker via one `Arc` (no per-device tensor clones).
     pub fn infer(&mut self, input: Tensor) -> Result<ExecResult> {
         let req = self.next_req;
         self.next_req += 1;
         let t0 = Instant::now();
+        let input = Arc::new(input);
         for c in &self.ctrl_tx {
             c.send(Control::Request {
                 req,
-                input: input.clone(),
+                input: Arc::clone(&input),
             })
             .map_err(|_| anyhow!("worker hung up"))?;
         }
@@ -265,6 +312,7 @@ impl ExecSession {
             bytes_sent: vec![0; self.m],
             messages_sent: vec![0; self.m],
             compute_secs: vec![0.0; self.m],
+            arena_grows: vec![0; self.m],
         };
         for _ in 0..self.m {
             let (r, dev, w) = self
@@ -276,6 +324,7 @@ impl ExecSession {
             stats.bytes_sent[dev] = w.bytes_sent;
             stats.messages_sent[dev] = w.messages_sent;
             stats.compute_secs[dev] = w.compute_secs;
+            stats.arena_grows[dev] = w.arena_grows;
             if dev == 0 {
                 output = w.output;
             }
@@ -332,6 +381,19 @@ fn worker_loop(
         Backend::Fast { threads } => Ok(Runner::Host(ComputeBackend::Fast {
             threads: (*threads).max(1),
         })),
+        // Compile once at session creation: weights sliced + prepacked
+        // into GEMM micro-panels, one arena per worker. Each worker only
+        // compiles its own shard (this runs in parallel across workers).
+        Backend::Compiled { threads } => Ok(Runner::Compiled {
+            shard: Box::new(CompiledDevice::compile(
+                &model,
+                &plan,
+                &wb,
+                dev,
+                (*threads).max(1),
+            )),
+            arena: ScratchArena::new(),
+        }),
         Backend::Pjrt { artifacts_dir } => PjrtRunner::new(
             Arc::clone(&model),
             Arc::clone(&plan),
@@ -363,6 +425,7 @@ struct WorkerOut {
     bytes_sent: u64,
     messages_sent: usize,
     compute_secs: f64,
+    arena_grows: u64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -371,7 +434,7 @@ fn worker_request(
     model: &Model,
     plan: &Plan,
     wb: &WeightBundle,
-    input: Tensor,
+    input: Arc<Tensor>,
     tx: &[Sender<Msg>],
     mailbox: &mut Mailbox,
     runner: &mut Runner,
@@ -441,8 +504,8 @@ fn worker_request(
                     prev.slices[*from].start_key()
                 });
                 let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                let full = assemble(&model, prev, &tensors)?;
-                local = Local::Full(full);
+                let full = assemble(model, prev, &tensors)?;
+                local = Local::Full(Arc::new(full));
             }
             CommStep::ReduceBroadcast { root, .. } | CommStep::ReduceTo { root, .. } => {
                 let is_reduce_to = matches!(sp.pre_comm, CommStep::ReduceTo { .. });
@@ -459,8 +522,8 @@ fn worker_request(
                         local = Local::Nothing;
                     } else {
                         let msg = mailbox.recv_tagged(req, si, PHASE_BCAST)?;
-                        let tailed = runner.run_tail(&model, &wb, &plan, si - 1, &msg.tensor)?;
-                        local = Local::Full(tailed);
+                        let tailed = runner.run_tail(model, wb, plan, si - 1, &msg.tensor)?;
+                        local = Local::Full(Arc::new(tailed));
                     }
                 } else {
                     let mut acc = my_partial;
@@ -489,8 +552,8 @@ fn worker_request(
                             }
                         }
                     }
-                    let tailed = runner.run_tail(&model, &wb, &plan, si - 1, &raw)?;
-                    local = Local::Full(tailed);
+                    let tailed = runner.run_tail(model, wb, plan, si - 1, &raw)?;
+                    local = Local::Full(Arc::new(tailed));
                 }
             }
             CommStep::Gather { root, .. } => {
@@ -525,12 +588,12 @@ fn worker_request(
                     }
                     parts.sort_by_key(|(from, _)| prev.slices[*from].start_key());
                     let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                    local = Local::Full(assemble(&model, prev, &tensors)?);
+                    local = Local::Full(Arc::new(assemble(model, prev, &tensors)?));
                 }
             }
             CommStep::Broadcast { root, .. } => {
                 if dev == *root {
-                    let t = local.full()?.clone();
+                    let t = local.full()?;
                     for k in 0..m {
                         if k != dev {
                             send(k, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
@@ -538,7 +601,7 @@ fn worker_request(
                     }
                 } else {
                     let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
-                    local = Local::Full(msg.tensor);
+                    local = Local::Full(Arc::new(msg.tensor));
                 }
             }
             CommStep::HaloExchange { .. } => {
@@ -546,7 +609,7 @@ fn worker_request(
                 let prev = prev.ok_or_else(|| anyhow!("halo with no previous stage"))?;
                 let out_ranges = slices_to_ranges(&sp.slices);
                 let owned = slices_to_ranges(&prev.slices);
-                let halos = halo_plan(&model, sp.stage, &out_ranges, &owned);
+                let halos = halo_plan(model, sp.stage, &out_ranges, &owned);
                 let my_owned = owned[dev];
                 // send my overlap rows
                 for h in halos.iter().filter(|h| h.from == dev) {
@@ -563,7 +626,7 @@ fn worker_request(
                 let (my_start, my_count) = out_ranges[dev];
                 if my_count > 0 {
                     let (lo, hi) =
-                        input_rows_needed(&model, sp.stage, my_start, my_start + my_count);
+                        input_rows_needed(model, sp.stage, my_start, my_start + my_count);
                     let t = match &local {
                         Local::Shard(t) => t.clone(),
                         _ => return Err(anyhow!("halo into non-sharded state")),
@@ -599,7 +662,7 @@ fn worker_request(
                             hh.row_count,
                         );
                     }
-                    local = Local::Full(window); // window tensor; used below
+                    local = Local::Full(Arc::new(window)); // window tensor; used below
                 } else {
                     local = Local::Nothing;
                 }
@@ -614,8 +677,9 @@ fn worker_request(
             SliceKind::Idle => None,
             SliceKind::Ic { .. } => {
                 // input is my channel/feature block from the paired stage
-                let shard = match &local {
-                    Local::Shard(t) => t.clone(),
+                let cut;
+                let shard: &Tensor = match &local {
+                    Local::Shard(t) => t,
                     Local::Full(t) => {
                         // stage_a was executed by a single device (m=1 or
                         // degenerate split): cut my block locally
@@ -623,20 +687,25 @@ fn worker_request(
                             SliceKind::Ic { start, count } => (*start, *count),
                             _ => unreachable!(),
                         };
-                        cut_block(&model, &plan, si, t, start, count)?
+                        cut = cut_block(model, plan, si, t, start, count)?;
+                        &cut
                     }
                     Local::Nothing => return Err(anyhow!("IC slice with no local data")),
                 };
-                Some(runner.run_slice(&model, &wb, &plan, si, dev, slice, &shard, None)?)
+                Some(runner.run_slice(model, wb, plan, si, dev, slice, shard, None)?)
             }
             SliceKind::Rows { start, count } => {
-                let (lo, hi) = input_rows_needed(&model, sp.stage, *start, *start + *count);
-                let input_t = if is_halo_window {
-                    local.full()?.clone() // window pre-assembled above
+                let (lo, hi) = input_rows_needed(model, sp.stage, *start, *start + *count);
+                let built;
+                let input_t: &Tensor = if is_halo_window {
+                    local.full()? // window pre-assembled above
                 } else {
                     match &local {
                         // replicated input: cut the window locally
-                        Local::Full(t) => act_rows_window(t, lo, hi),
+                        Local::Full(t) => {
+                            built = act_rows_window(t, lo, hi);
+                            &built
+                        }
                         // row-sharded input that needed no halo (this
                         // device owns every row in its receptive field —
                         // e.g. when slow peers were allocated zero rows):
@@ -659,31 +728,31 @@ fn worker_request(
                                     (cov_hi - cov_lo) as usize,
                                 );
                             }
-                            window
+                            built = window;
+                            &built
                         }
                         Local::Nothing => return Err(anyhow!("rows slice with no local data")),
                     }
                 };
                 Some(runner.run_slice(
-                    &model,
-                    &wb,
-                    &plan,
+                    model,
+                    wb,
+                    plan,
                     si,
                     dev,
                     slice,
-                    &input_t,
+                    input_t,
                     Some((lo, hi)),
                 )?)
             }
             SliceKind::Oc { .. } | SliceKind::Full | SliceKind::Replicate => {
-                let t = local.full()?.clone();
-                Some(runner.run_slice(&model, &wb, &plan, si, dev, slice, &t, None)?)
+                Some(runner.run_slice(model, wb, plan, si, dev, slice, local.full()?, None)?)
             }
         };
         compute_secs += tc.elapsed().as_secs_f64();
 
         local = match (out, slice) {
-            (Some(t), SliceKind::Full | SliceKind::Replicate) => Local::Full(t),
+            (Some(t), SliceKind::Full | SliceKind::Replicate) => Local::Full(Arc::new(t)),
             (Some(t), _) => Local::Shard(t),
             (None, _) => match local {
                 // idle devices keep replicated data if they have it
@@ -697,7 +766,7 @@ fn worker_request(
     let last = plan.stages.last().unwrap();
     let output = match &plan.final_comm {
         CommStep::None => match &local {
-            Local::Full(t) if dev == 0 => Some(t.clone()),
+            Local::Full(t) if dev == 0 => Some(t.as_ref().clone()),
             _ if dev == 0 => return Err(anyhow!("device 0 lacks the final output")),
             _ => None,
         },
@@ -732,7 +801,7 @@ fn worker_request(
                 }
                 parts.sort_by_key(|(from, _)| last.slices[*from].start_key());
                 let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                Some(assemble(&model, last, &tensors)?)
+                Some(assemble(model, last, &tensors)?)
             }
         }
         CommStep::ReduceTo { root, .. } => {
@@ -758,7 +827,7 @@ fn worker_request(
                     }
                 }
                 let raw = acc.ok_or_else(|| anyhow!("no partials in final reduce"))?;
-                Some(runner.run_tail(&model, &wb, &plan, plan.stages.len() - 1, &raw)?)
+                Some(runner.run_tail(model, wb, plan, plan.stages.len() - 1, &raw)?)
             }
         }
         other => return Err(anyhow!("unsupported final comm {:?}", other.tag())),
@@ -769,6 +838,7 @@ fn worker_request(
         bytes_sent,
         messages_sent,
         compute_secs,
+        arena_grows: runner.arena_grows(),
     })
 }
 
@@ -908,6 +978,44 @@ mod tests {
     fn fast_backend_with_intra_worker_threads() {
         let m = zoo::vgg_mini();
         check_model_strategy_backend(&m, Strategy::Iop, Backend::Fast { threads: 2 });
+    }
+
+    #[test]
+    fn compiled_backend_matches_oracle_all_strategies() {
+        for m in [zoo::lenet(), zoo::vgg_mini()] {
+            for s in Strategy::all() {
+                check_model_strategy_backend(&m, s, Backend::Compiled { threads: 1 });
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_backend_with_intra_worker_threads() {
+        let m = zoo::vgg_mini();
+        check_model_strategy_backend(&m, Strategy::Iop, Backend::Compiled { threads: 2 });
+    }
+
+    #[test]
+    fn compiled_session_arena_flat_after_warmup() {
+        // Steady-state serving: after the first request every arena is
+        // warm — the grow counters must not move again (the hot loop is
+        // allocation-free) and every response must stay correct.
+        let m = zoo::vgg_mini();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let wb = WeightBundle::generate(&m);
+        let input = model_input(&m);
+        let expect = centralized_inference(&m, &wb, &input);
+        let mut session = ExecSession::new(&m, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        let first = session.infer(input.clone()).unwrap();
+        assert!(first.output.allclose(&expect, 1e-4, 1e-5));
+        let warm = first.stats.arena_grows.clone();
+        assert!(warm.iter().sum::<u64>() > 0, "first request must warm the arenas");
+        for i in 0..4 {
+            let r = session.infer(input.clone()).unwrap();
+            assert!(r.output.allclose(&expect, 1e-4, 1e-5), "request {i}");
+            assert_eq!(r.stats.arena_grows, warm, "request {i} grew an arena");
+        }
     }
 
     #[test]

@@ -7,13 +7,18 @@
 //! centralized reference model (and, in PJRT mode, executed by the AOT
 //! XLA artifacts produced from the JAX/Pallas layers).
 //!
-//! Three backends:
+//! Four backends:
 //!  * [`Backend::Reference`] — scalar host tensor ops (`tensor::ops`), no
 //!    external dependencies; the numerical oracle every other path is
 //!    checked against.
 //!  * [`Backend::Fast`] — blocked im2col+GEMM host kernels
 //!    (`tensor::gemm` / `tensor::im2col`) with fused bias+ReLU epilogues
 //!    and optional intra-worker threading over output-channel blocks.
+//!  * [`Backend::Compiled`] — the Fast kernels over a *compiled plan*
+//!    (`exec::prepack`): weights sliced + prepacked into GEMM micro-panels
+//!    once at session creation, im2col/pack scratch in a per-worker
+//!    grow-only arena — the steady-state serving path, allocation-free in
+//!    the conv/dense hot loop after warm-up.
 //!  * [`Backend::Pjrt`] — each worker owns a PJRT CPU client and runs the
 //!    per-shard executables named in `artifacts/manifest.json` (requires
 //!    the `pjrt` build feature).
@@ -22,7 +27,9 @@ pub mod backend;
 pub mod compute;
 pub mod harness;
 pub mod pjrt;
+pub mod prepack;
 pub mod weights;
 
 pub use backend::ComputeBackend;
 pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats};
+pub use prepack::{CompiledDevice, ScratchArena};

@@ -15,7 +15,8 @@
 //! * [`sim`] — discrete-event cluster simulator (per-device queues, shared
 //!   medium, establishment latency);
 //! * [`exec`] — real distributed execution on thread-per-device workers
-//!   (reference tensor ops or PJRT executables);
+//!   (reference tensor ops, fast im2col+GEMM kernels, compiled plans
+//!   with prepacked weights + scratch arenas, or PJRT executables);
 //! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts built
 //!   by `python/compile/aot.py`;
 //! * [`tensor`] — host tensors, slicing, deterministic init (mirrored in

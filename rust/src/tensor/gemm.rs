@@ -21,7 +21,12 @@
 //!    once;
 //!  * [`gemm_parallel`] adds intra-device parallelism with
 //!    `std::thread::scope` over contiguous row (output-channel) blocks:
-//!    disjoint `&mut` C slices per thread, B shared read-only.
+//!    disjoint `&mut` C slices per thread, B shared read-only;
+//!  * [`PackedA`] + [`gemm_prepacked`] are the compiled-plan serving
+//!    path: the A (weight) operand is packed once into the micro-panel
+//!    layout at plan-compile time, and per-call B panels live in a
+//!    caller-owned grow-only [`PackScratch`] — steady-state calls make
+//!    no heap allocations and skip the per-call weight packing entirely.
 
 /// Microkernel tile height (rows of A / C).
 pub const MR: usize = 4;
@@ -41,6 +46,254 @@ pub struct Epilogue<'a> {
     pub bias: Option<&'a [f32]>,
     /// Apply `max(0, ·)` to the final values.
     pub relu: bool,
+}
+
+/// An `m×k` matrix prepacked into the GEMM's `KC`-deep, `MR`-tall row
+/// micro-panel layout ([`pack_a`]), blocked `(k block, row block)` in the
+/// exact order the kernel walks them. Packing weights once at plan-compile
+/// time removes the per-call A packing from [`gemm_prepacked`], which is
+/// the steady-state serving hot path (`exec::prepack`).
+#[derive(Debug, Clone)]
+pub struct PackedA {
+    /// Rows of the original matrix (output channels).
+    pub m: usize,
+    /// Columns of the original matrix (reduction depth).
+    pub k: usize,
+    data: Vec<f32>,
+    /// Start of each `(k block, row block)` group in `data`, k-block-major.
+    offsets: Vec<usize>,
+    /// Row blocks per k block (`m.div_ceil(rb)`).
+    n_row_blocks: usize,
+    /// Row-block height (`MR`-multiple; `MC` by default, smaller when
+    /// packed for more threads than `MC`-tall blocks would allow).
+    rb: usize,
+}
+
+impl PackedA {
+    /// Pack `a` (`m×k` row-major) with the default `MC` row blocks.
+    /// Ragged edges are zero-padded exactly as the per-call packer does,
+    /// so results are bit-identical to [`gemm`].
+    pub fn pack(m: usize, k: usize, a: &[f32]) -> PackedA {
+        Self::pack_with_rows(m, k, a, MC)
+    }
+
+    /// Pack with a row-block height sized so at least `threads` row
+    /// blocks exist whenever `m` allows it (`MR` granularity) — without
+    /// this, a matrix shorter than `threads·MC` rows could not use its
+    /// full row-split parallelism in [`gemm_prepacked`].
+    pub fn pack_for_threads(m: usize, k: usize, a: &[f32], threads: usize) -> PackedA {
+        let rb = m.div_ceil(threads.max(1)).div_ceil(MR) * MR;
+        Self::pack_with_rows(m, k, a, rb.clamp(MR, MC))
+    }
+
+    fn pack_with_rows(m: usize, k: usize, a: &[f32], rb: usize) -> PackedA {
+        assert_eq!(a.len(), m * k, "pack: A must be m*k");
+        debug_assert!(rb >= MR && rb % MR == 0, "row block must be an MR multiple");
+        let n_row_blocks = m.div_ceil(rb);
+        let mut data = Vec::new();
+        let mut offsets = Vec::new();
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            for ic in (0..m).step_by(rb) {
+                let mc = rb.min(m - ic);
+                let start = data.len();
+                offsets.push(start);
+                data.resize(start + mc.div_ceil(MR) * MR * kc, 0.0);
+                pack_a(&mut data[start..], a, k, ic, mc, pc, kc);
+            }
+        }
+        PackedA {
+            m,
+            k,
+            data,
+            offsets,
+            n_row_blocks,
+            rb,
+        }
+    }
+
+    /// Packed size in bytes (deployment reporting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// The packed panel group of `(k block pc_idx, row block ic_idx)`.
+    fn block(&self, pc_idx: usize, ic_idx: usize) -> &[f32] {
+        let i = pc_idx * self.n_row_blocks + ic_idx;
+        let start = self.offsets[i];
+        let end = self.offsets.get(i + 1).copied().unwrap_or(self.data.len());
+        &self.data[start..end]
+    }
+}
+
+/// Grow-only scratch for [`gemm_prepacked`]'s per-call B panels (one
+/// buffer per row-split thread). Buffers are retained and reused across
+/// calls; [`PackScratch::grow_count`] increments whenever a buffer has to
+/// grow, so steady-state callers can assert the hot loop stopped
+/// allocating (the executor soak tests do exactly that).
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    bufs: Vec<Vec<f32>>,
+    grows: u64,
+}
+
+impl PackScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of buffer growths since creation. Flat across requests ⇔
+    /// the prepacked GEMM performed no heap allocation.
+    pub fn grow_count(&self) -> u64 {
+        self.grows
+    }
+
+    /// At least `t` buffers of at least `len` elements each.
+    fn ensure(&mut self, t: usize, len: usize) -> &mut [Vec<f32>] {
+        if self.bufs.len() < t {
+            self.bufs.resize_with(t, Vec::new);
+            self.grows += 1;
+        }
+        for b in &mut self.bufs[..t] {
+            if b.len() < len {
+                b.resize(len, 0.0);
+                self.grows += 1;
+            }
+        }
+        &mut self.bufs[..t]
+    }
+}
+
+/// `c += pa·b`, then apply `ep` — [`gemm`] with the A (weight) packing
+/// hoisted out ([`PackedA::pack`], done once per plan) and the B panels
+/// packed into the caller's grow-only [`PackScratch`], so steady-state
+/// calls allocate nothing. `threads > 1` row-splits at the pack-time
+/// row-block granularity over `std::thread::scope` (disjoint `&mut` C
+/// slices, one scratch buffer per thread) — pack with
+/// [`PackedA::pack_for_threads`] so short matrices still split.
+pub fn gemm_prepacked(
+    pa: &PackedA,
+    n: usize,
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue,
+    threads: usize,
+    scratch: &mut PackScratch,
+) {
+    let (m, k) = (pa.m, pa.k);
+    assert_eq!(b.len(), k * n, "gemm: B must be k*n");
+    assert_eq!(c.len(), m * n, "gemm: C must be m*n");
+    if let Some(bias) = ep.bias {
+        assert_eq!(bias.len(), m, "gemm: bias must have one entry per row");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        epilogue_only(n, c, ep);
+        return;
+    }
+    let bpack_len = NC.min(n).div_ceil(NR) * NR * KC.min(k);
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let t = if flops < 2e6 {
+        1
+    } else {
+        threads.clamp(1, pa.n_row_blocks)
+    };
+    let bufs = scratch.ensure(t, bpack_len);
+    if t == 1 {
+        gemm_prepacked_rows(pa, 0, pa.n_row_blocks, n, b, c, ep, &mut bufs[0]);
+        return;
+    }
+    // Distribute row blocks evenly (floor/ceil split) — a uniform
+    // ceil-sized chunking could leave trailing threads idle whenever
+    // n_row_blocks is not a multiple of t.
+    let base = pa.n_row_blocks / t;
+    let extra = pa.n_row_blocks % t;
+    std::thread::scope(|scope| {
+        let mut rest = c;
+        let mut blk0 = 0usize;
+        for (i, buf) in bufs.iter_mut().enumerate().take(t) {
+            let n_blks = base + usize::from(i < extra);
+            let row0 = blk0 * pa.rb;
+            let rows = (n_blks * pa.rb).min(m - row0);
+            let (c_blk, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            rest = tail;
+            let bias_blk = ep.bias.map(|bv| &bv[row0..row0 + rows]);
+            let relu = ep.relu;
+            let b0 = blk0;
+            scope.spawn(move || {
+                gemm_prepacked_rows(
+                    pa,
+                    b0,
+                    n_blks,
+                    n,
+                    b,
+                    c_blk,
+                    Epilogue {
+                        bias: bias_blk,
+                        relu,
+                    },
+                    buf,
+                );
+            });
+            blk0 += n_blks;
+        }
+    });
+}
+
+/// Serial prepacked kernel over row blocks `[row_blk0, row_blk0+n_blks)`;
+/// `c_blk` holds exactly those rows (bias in `ep` is row-block-local).
+#[allow(clippy::too_many_arguments)]
+fn gemm_prepacked_rows(
+    pa: &PackedA,
+    row_blk0: usize,
+    n_blks: usize,
+    n: usize,
+    b: &[f32],
+    c_blk: &mut [f32],
+    ep: Epilogue,
+    bpack: &mut [f32],
+) {
+    let k = pa.k;
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let n_panels = nc.div_ceil(NR);
+        for (pc_idx, pc) in (0..k).step_by(KC).enumerate() {
+            let kc = KC.min(k - pc);
+            let last_k = pc + kc == k;
+            pack_b(bpack, b, n, jc, nc, pc, kc);
+            for blk in 0..n_blks {
+                let ic_global = (row_blk0 + blk) * pa.rb;
+                let mc = pa.rb.min(pa.m - ic_global);
+                let ap_block = pa.block(pc_idx, row_blk0 + blk);
+                let local_base = blk * pa.rb;
+                let n_tiles = mc.div_ceil(MR);
+                for it in 0..n_tiles {
+                    let i0 = it * MR;
+                    let rows = MR.min(mc - i0);
+                    let ap = &ap_block[it * kc * MR..(it + 1) * kc * MR];
+                    for jt in 0..n_panels {
+                        let j0 = jt * NR;
+                        let cols = NR.min(nc - j0);
+                        let bp = &bpack[jt * kc * NR..(jt + 1) * kc * NR];
+                        let tile_ep = if last_k { Some(ep) } else { None };
+                        microkernel(
+                            ap,
+                            bp,
+                            c_blk,
+                            n,
+                            local_base + i0,
+                            jc + j0,
+                            rows,
+                            cols,
+                            tile_ep,
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// `c += a·b`, then apply `ep` to the finished values. Callers that want
@@ -457,6 +710,113 @@ mod tests {
         gemm(m, k, n, &a, &b, &mut c, Epilogue::default());
         let want: Vec<f32> = naive.iter().map(|v| v + 1.0).collect();
         assert!(close(&c, &want, 1e-5));
+    }
+
+    #[test]
+    fn prepacked_matches_gemm_across_blocking_edges() {
+        // Same boundary-straddling shape set as the packing-per-call
+        // kernel test, plus serial vs row-split-threaded prepacked runs.
+        let cases = [
+            (1, 1, 1),
+            (3, 5, 7),
+            (MR, KC, NR),
+            (MR + 1, KC + 1, NR + 1),
+            (MC, 40, NC),
+            (MC + 3, KC + 9, NC + 17),
+            (70, 300, 33),
+            (2, 600, 1100),
+            // 4 row blocks over 3 threads: uneven floor/ceil distribution.
+            (MC * 4, 40, 100),
+        ];
+        let mut scratch = PackScratch::new();
+        for (i, &(m, k, n)) in cases.iter().enumerate() {
+            let a = rand_vec(m * k, 4000 + i as u64);
+            let b = rand_vec(k * n, 5000 + i as u64);
+            let bias = rand_vec(m, 6000 + i as u64);
+            // Default MC row blocks and the thread-sized (sub-MC) layout
+            // must agree with the per-call kernel bit-for-bit.
+            let pa = PackedA::pack(m, k, &a);
+            let pa_t = PackedA::pack_for_threads(m, k, &a, 3);
+            for relu in [false, true] {
+                let ep = Epilogue {
+                    bias: Some(&bias),
+                    relu,
+                };
+                let mut want = vec![0.0f32; m * n];
+                gemm(m, k, n, &a, &b, &mut want, ep);
+                for threads in [1usize, 3] {
+                    for packed in [&pa, &pa_t] {
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_prepacked(packed, n, &b, &mut got, ep, threads, &mut scratch);
+                        assert!(
+                            close(&got, &want, 1e-5),
+                            "case {i} ({m}x{k}x{n}) relu={relu} threads={threads} rb={}",
+                            packed.rb
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_scratch_stops_growing_after_warmup() {
+        // Alternating shapes through one scratch: growth happens only on
+        // the first pass, then the buffers are warm and the count is flat.
+        let shapes = [(70, 300, 33), (9, 40, 17), (MC + 3, KC + 9, 64)];
+        let mut scratch = PackScratch::new();
+        let run_all = |scratch: &mut PackScratch| {
+            for (i, &(m, k, n)) in shapes.iter().enumerate() {
+                let a = rand_vec(m * k, 7000 + i as u64);
+                let b = rand_vec(k * n, 8000 + i as u64);
+                let pa = PackedA::pack(m, k, &a);
+                let mut c = vec![0.0f32; m * n];
+                gemm_prepacked(&pa, n, &b, &mut c, Epilogue::default(), 2, scratch);
+            }
+        };
+        run_all(&mut scratch);
+        let after_warmup = scratch.grow_count();
+        assert!(after_warmup > 0, "first pass must have grown the scratch");
+        for _ in 0..5 {
+            run_all(&mut scratch);
+        }
+        assert_eq!(
+            scratch.grow_count(),
+            after_warmup,
+            "steady-state prepacked GEMM must not grow the scratch"
+        );
+    }
+
+    #[test]
+    fn prepacked_accumulates_and_handles_zero_k() {
+        // Accumulation into a seeded C, matching gemm's contract.
+        let (m, k, n) = (5, 9, 11);
+        let a = rand_vec(m * k, 60);
+        let b = rand_vec(k * n, 61);
+        let mut want = vec![1.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut want, Epilogue::default());
+        let pa = PackedA::pack(m, k, &a);
+        let mut scratch = PackScratch::new();
+        let mut got = vec![1.0f32; m * n];
+        gemm_prepacked(&pa, n, &b, &mut got, Epilogue::default(), 1, &mut scratch);
+        assert!(close(&got, &want, 1e-5));
+        // k = 0: epilogue only, same as gemm.
+        let bias = vec![1.0, -2.0];
+        let pa0 = PackedA::pack(2, 0, &[]);
+        let mut c = vec![0.0f32; 2 * 3];
+        gemm_prepacked(
+            &pa0,
+            3,
+            &[],
+            &mut c,
+            Epilogue {
+                bias: Some(&bias),
+                relu: true,
+            },
+            1,
+            &mut scratch,
+        );
+        assert_eq!(c, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]

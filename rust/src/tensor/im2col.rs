@@ -30,8 +30,31 @@ pub fn im2col(
     out_h: usize,
     out_w: usize,
 ) -> Vec<f32> {
+    let mut cols = vec![0.0f32; input.c * k_h * k_w * out_h * out_w];
+    im2col_into(input, k_h, k_w, stride, pad_h, pad_w, out_h, out_w, &mut cols);
+    cols
+}
+
+/// [`im2col`] into a caller-provided buffer (the scratch-arena serving
+/// path): uses exactly the first `c_in*k_h*k_w*out_h*out_w` elements of
+/// `cols`, re-zeroing them first (padding relies on the zero fill).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    input: &Tensor,
+    k_h: usize,
+    k_w: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    out_h: usize,
+    out_w: usize,
+    cols: &mut [f32],
+) {
     let n = out_h * out_w;
-    let mut cols = vec![0.0f32; input.c * k_h * k_w * n];
+    let used = input.c * k_h * k_w * n;
+    assert!(cols.len() >= used, "im2col_into: scratch buffer too small");
+    let cols = &mut cols[..used];
+    cols.fill(0.0);
     let h = input.h as isize;
     let w = input.w as isize;
     for ic in 0..input.c {
@@ -71,7 +94,6 @@ pub fn im2col(
             }
         }
     }
-    cols
 }
 
 /// Fast 2-D convolution — same contract as `ops::conv2d` (OIHW weights,
@@ -177,6 +199,18 @@ mod tests {
         // Top-left tap (ky=0, kx=0) reads above/left of the image for all
         // but the bottom-right output; only out (1,1) sees pixel (0,0).
         assert_eq!(&cols[0..4], &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn im2col_into_reuses_dirty_oversized_scratch() {
+        let t = rand_tensor(2, 6, 5, 9);
+        let fresh = im2col(&t, 3, 3, 1, 1, 1, 6, 5);
+        // A dirty, oversized scratch: the used prefix must be re-zeroed
+        // and rebuilt exactly; the rest must stay untouched.
+        let mut scratch = vec![7.0f32; fresh.len() + 64];
+        im2col_into(&t, 3, 3, 1, 1, 1, 6, 5, &mut scratch);
+        assert_eq!(&scratch[..fresh.len()], &fresh[..]);
+        assert!(scratch[fresh.len()..].iter().all(|v| *v == 7.0));
     }
 
     #[test]

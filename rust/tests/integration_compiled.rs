@@ -1,0 +1,269 @@
+//! Integration: the Compiled backend (prepacked per-device weights +
+//! reusable scratch arenas, `exec::prepack`) is numerically equivalent to
+//! the Reference oracle — at the slice level for uneven OC/IC/row
+//! partitions, for centralized inference, and for full distributed
+//! execution under every `Strategy` on homogeneous and heterogeneous
+//! clusters — and its steady-state hot loop is allocation-free: a
+//! multi-request soak shows no drift across requests and flat arena grow
+//! counters after warm-up.
+
+use iop::device::profiles;
+use iop::exec::backend::ComputeBackend;
+use iop::exec::compute::{
+    centralized_inference, centralized_inference_compiled, compute_slice_compiled,
+    compute_slice_with,
+};
+use iop::exec::prepack::{compile_slice, CompiledDevice, ScratchArena};
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{run_plan, Backend, ExecOptions, ExecSession};
+use iop::model::zoo;
+use iop::partition::plan::SliceKind;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::tensor::slice::{act_channel_slice, concat_channels, concat_rows, reduce_sum};
+use iop::tensor::Tensor;
+
+const REF: ComputeBackend = ComputeBackend::Reference;
+
+/// Wrap a single compiled slice so `compute_slice_compiled` can run it
+/// (stage index 0 of a one-entry kernel table).
+fn single(
+    model: &iop::model::Model,
+    wb: &WeightBundle,
+    si: usize,
+    slice: &SliceKind,
+) -> CompiledDevice {
+    CompiledDevice {
+        stages: vec![compile_slice(model, wb, model.stages()[si], slice, 1)],
+        threads: 1,
+    }
+}
+
+// ---------- slice level: uneven OC / IC / row splits ----------
+
+#[test]
+fn uneven_oc_split_compiled_concats_to_reference_full() {
+    let m = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&m);
+    let x = model_input(&m);
+    let stage = m.stages()[0]; // conv1: c_out = 8
+    let full_ref = compute_slice_with(REF, &m, &wb, stage, &SliceKind::Full, &x, None);
+    let mut arena = ScratchArena::new();
+    let parts: Vec<Tensor> = [(0usize, 3usize), (3, 4), (7, 1)]
+        .iter()
+        .map(|&(start, count)| {
+            let slice = SliceKind::Oc { start, count };
+            let cd = single(&m, &wb, 0, &slice);
+            compute_slice_compiled(&m, &cd, 0, stage, &slice, &x, None, &mut arena)
+        })
+        .collect();
+    let joined = concat_channels(&parts);
+    assert!(
+        joined.allclose(&full_ref, 1e-4, 1e-4),
+        "diff={}",
+        joined.max_abs_diff(&full_ref)
+    );
+}
+
+#[test]
+fn uneven_ic_split_compiled_reduces_to_reference_full() {
+    let m = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&m);
+    let x = model_input(&m);
+    let stages = m.stages();
+    let s0 = compute_slice_with(REF, &m, &wb, stages[0], &SliceKind::Full, &x, None);
+    let full_ref = compute_slice_with(REF, &m, &wb, stages[1], &SliceKind::Full, &s0, None);
+    let mut arena = ScratchArena::new();
+    // conv2 has 8 input channels; split 1/5/2 (uneven).
+    let partials: Vec<Tensor> = [(0usize, 1usize), (1, 5), (6, 2)]
+        .iter()
+        .map(|&(start, count)| {
+            let slice = SliceKind::Ic { start, count };
+            let cd = single(&m, &wb, 1, &slice);
+            let xin = act_channel_slice(&s0, start, count);
+            compute_slice_compiled(&m, &cd, 0, stages[1], &slice, &xin, None, &mut arena)
+        })
+        .collect();
+    let raw = reduce_sum(&partials);
+    let assembled =
+        iop::exec::compute::apply_tail_with(ComputeBackend::fast(), &m, &wb, stages[1], &raw);
+    assert!(
+        assembled.allclose(&full_ref, 1e-4, 1e-4),
+        "diff={}",
+        assembled.max_abs_diff(&full_ref)
+    );
+}
+
+#[test]
+fn uneven_row_split_compiled_concats_to_reference_full() {
+    let m = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&m);
+    let x = model_input(&m);
+    let stage = m.stages()[0]; // conv1 + pool1: 16 output rows
+    let full_ref = compute_slice_with(REF, &m, &wb, stage, &SliceKind::Full, &x, None);
+    let mut arena = ScratchArena::new();
+    let parts: Vec<Tensor> = [(0usize, 7usize), (7, 2), (9, 7)]
+        .iter()
+        .map(|&(start, count)| {
+            let slice = SliceKind::Rows { start, count };
+            let cd = single(&m, &wb, 0, &slice);
+            compute_slice_compiled(&m, &cd, 0, stage, &slice, &x, None, &mut arena)
+        })
+        .collect();
+    let joined = concat_rows(&parts);
+    assert!(
+        joined.allclose(&full_ref, 1e-4, 1e-4),
+        "diff={}",
+        joined.max_abs_diff(&full_ref)
+    );
+}
+
+// ---------- centralized: compiled model, reused arena ----------
+
+fn check_centralized_compiled(model: &iop::model::Model) {
+    let wb = WeightBundle::generate(model);
+    let x = model_input(model);
+    let expect = centralized_inference(model, &wb, &x);
+    for threads in [1usize, 4] {
+        let cd = CompiledDevice::compile_centralized(model, &wb, threads);
+        let mut arena = ScratchArena::new();
+        for round in 0..3 {
+            let got = centralized_inference_compiled(model, &cd, &x, &mut arena);
+            assert!(
+                got.allclose(&expect, 1e-4, 1e-4),
+                "{} threads={threads} round={round}: diff={}",
+                model.name,
+                got.max_abs_diff(&expect)
+            );
+        }
+    }
+}
+
+#[test]
+fn centralized_compiled_matches_reference_lenet() {
+    check_centralized_compiled(&zoo::lenet());
+}
+
+#[test]
+fn centralized_compiled_matches_reference_vgg_mini() {
+    check_centralized_compiled(&zoo::vgg_mini());
+}
+
+#[test]
+fn centralized_compiled_matches_reference_alexnet() {
+    check_centralized_compiled(&zoo::alexnet());
+}
+
+// ---------- distributed: every strategy, both cluster shapes ----------
+
+fn check_distributed_compiled(
+    model: &iop::model::Model,
+    cluster: &iop::device::Cluster,
+    threads: usize,
+) {
+    let wb = WeightBundle::generate(model);
+    let expect = centralized_inference(model, &wb, &model_input(model));
+    for s in Strategy::all() {
+        let plan = pipeline::plan(model, cluster, s);
+        let got = run_plan(
+            model,
+            &plan,
+            &ExecOptions {
+                backend: Backend::Compiled { threads },
+                input: None,
+            },
+        )
+        .unwrap();
+        assert!(
+            got.output.allclose(&expect, 1e-4, 1e-4),
+            "{} {} m={} threads={}: diff={}",
+            model.name,
+            s.name(),
+            cluster.m(),
+            threads,
+            got.output.max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn distributed_compiled_lenet_all_strategies() {
+    check_distributed_compiled(&zoo::lenet(), &profiles::paper_default(), 1);
+}
+
+#[test]
+fn distributed_compiled_vgg_mini_all_strategies() {
+    check_distributed_compiled(&zoo::vgg_mini(), &profiles::paper_default(), 1);
+}
+
+#[test]
+fn distributed_compiled_heterogeneous_uneven_allocations() {
+    // Heterogeneous capabilities force uneven OC/IC/row allocations in
+    // every planner; also exercise intra-worker threading.
+    check_distributed_compiled(&zoo::vgg_mini(), &profiles::heterogeneous(), 2);
+    check_distributed_compiled(&zoo::lenet(), &profiles::heterogeneous(), 2);
+}
+
+// ---------- steady-state soak: no drift, no allocations ----------
+
+fn soak(model: &iop::model::Model, cluster: &iop::device::Cluster, strategy: Strategy) {
+    let wb = WeightBundle::generate(model);
+    let input = model_input(model);
+    let expect = centralized_inference(model, &wb, &input);
+    let plan = pipeline::plan(model, cluster, strategy);
+    let mut session =
+        ExecSession::new(model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+    let first = session.infer(input.clone()).unwrap();
+    assert!(
+        first.output.allclose(&expect, 1e-4, 1e-4),
+        "{} {} request 0: diff={}",
+        model.name,
+        strategy.name(),
+        first.output.max_abs_diff(&expect)
+    );
+    let warm_grows = first.stats.arena_grows.clone();
+    // 16 further requests: every response matches the oracle at 1e-4 and
+    // the first response at a much tighter tolerance (no drift — arena
+    // reuse must not leak state between requests; the only allowed
+    // wobble is partial-sum reduction order, which depends on message
+    // arrival), with flat arena grow counters after warm-up.
+    for i in 1..=16 {
+        let r = session.infer(input.clone()).unwrap();
+        assert!(
+            r.output.allclose(&expect, 1e-4, 1e-4),
+            "{} {} request {i}: diff from oracle {}",
+            model.name,
+            strategy.name(),
+            r.output.max_abs_diff(&expect)
+        );
+        assert!(
+            r.output.allclose(&first.output, 1e-5, 1e-5),
+            "{} {} request {i}: output drifted across requests by {}",
+            model.name,
+            strategy.name(),
+            r.output.max_abs_diff(&first.output)
+        );
+        assert_eq!(
+            r.stats.arena_grows,
+            warm_grows,
+            "{} {} request {i}: arena grew after warm-up",
+            model.name,
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn soak_iop_vgg_mini_16_requests_no_drift_no_allocs() {
+    soak(&zoo::vgg_mini(), &profiles::paper_default(), Strategy::Iop);
+}
+
+#[test]
+fn soak_coedge_vgg_mini_16_requests_no_drift_no_allocs() {
+    soak(&zoo::vgg_mini(), &profiles::paper_default(), Strategy::CoEdge);
+}
+
+#[test]
+fn soak_iop_heterogeneous_16_requests_no_drift_no_allocs() {
+    soak(&zoo::vgg_mini(), &profiles::heterogeneous(), Strategy::Iop);
+}
