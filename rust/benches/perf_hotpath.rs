@@ -8,7 +8,10 @@
 //!  * executor compute backends: reference tensor ops vs the blocked
 //!    im2col+GEMM fast kernels (serial and multi-threaded),
 //!  * end-to-end distributed inference on both host backends (thread
-//!    harness overhead + compute).
+//!    harness overhead + compute),
+//!  * steady-state serving throughput: closed-loop submit/collect at
+//!    inflight=1 vs inflight=m over one warmed session (the pipelining
+//!    win, measured — see EXPERIMENTS.md §Perf "Pipelined serving").
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -16,14 +19,17 @@
 //! override the path with `BENCH_HOTPATH_OUT`, and set `IOP_BENCH_QUICK=1`
 //! for the CI smoke configuration (shorter warmup/measure windows).
 
-use iop::bench::{BenchReport, Bencher};
+use iop::bench::{BenchReport, Bencher, Stats};
 use iop::device::profiles;
 use iop::exec::backend::{available_threads, ComputeBackend};
 use iop::exec::compute::{
     centralized_inference, centralized_inference_compiled, centralized_inference_with,
 };
 use iop::exec::weights::{model_input, WeightBundle};
-use iop::exec::{run_plan, Backend, CompiledDevice, ExecOptions, ExecSession, ScratchArena};
+use iop::exec::{
+    run_plan, serve_closed_loop, Backend, CompiledDevice, ExecOptions, ExecSession, ScratchArena,
+    ServeOptions,
+};
 use iop::model::zoo;
 use iop::partition::Strategy;
 use iop::pipeline;
@@ -129,6 +135,11 @@ fn main() {
         );
     }
 
+    // Case-name convention for the end-to-end sections: "(cold: ...)"
+    // cases deliberately pay session spawn (worker threads + compile)
+    // inside the measured closure via `run_plan`; every "(steady)" case
+    // reuses ONE session created outside the closure — never mix the
+    // two, or worker spawn cost leaks into steady-state numbers.
     println!("\n== end-to-end distributed inference (reference backend) ==");
     for s in Strategy::all() {
         let model = zoo::lenet();
@@ -174,6 +185,66 @@ fn main() {
             "compiled-plan steady-state speedup vs fast (vgg_mini IOP): {:.2}x",
             fast.median / comp.median
         );
+    }
+
+    // Steady-state serving *throughput*: a closed loop of N requests at
+    // a fixed in-flight depth over ONE warmed session per backend (no
+    // per-run session spawn — the inflight=1 / inflight=m pair differs
+    // only in pipelining). Samples are seconds *per request*
+    // (wall / N), so the printed /s rate is requests/sec.
+    println!("\n== steady-state serving throughput (closed loop, one session per backend) ==");
+    {
+        let model = zoo::vgg_mini();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        let m = plan.m;
+        let (serve_reqs, serve_reps) = if quick { (24, 3) } else { (96, 5) };
+        for (label, backend) in [
+            ("fast", Backend::Fast { threads: 1 }),
+            ("compiled", Backend::Compiled { threads: 1 }),
+        ] {
+            let mut session = ExecSession::new(&model, &plan, backend).unwrap();
+            let input = model_input(&model);
+            for _ in 0..m {
+                session.infer(input.clone()).unwrap(); // warm arenas
+            }
+            for depth in [1usize, m] {
+                let name = format!("serve vgg_mini IOP ({label}, steady, inflight={depth})");
+                let mut samples = Vec::with_capacity(serve_reps);
+                for _ in 0..serve_reps {
+                    let r = serve_closed_loop(
+                        &mut session,
+                        &ServeOptions {
+                            requests: serve_reqs,
+                            inflight: depth,
+                            warmup: 0,
+                        },
+                        |_| input.clone(),
+                        |_, _| {},
+                    )
+                    .unwrap();
+                    samples.push(r.wall_secs / serve_reqs as f64);
+                }
+                let st = Stats::from_samples(samples);
+                println!(
+                    "bench {name:<52} median {:>12}/req ({:>8} req/s)  n={}",
+                    iop::util::units::fmt_secs(st.median),
+                    format!("{:.1}", st.per_sec()),
+                    st.samples
+                );
+                rep.add(&name, st);
+            }
+        }
+        for label in ["fast", "compiled"] {
+            if let (Some(serial), Some(piped)) = (
+                rep.get(&format!("serve vgg_mini IOP ({label}, steady, inflight=1)")),
+                rep.get(&format!("serve vgg_mini IOP ({label}, steady, inflight={m})")),
+            ) {
+                println!(
+                    "pipelined throughput vs serial ({label}, inflight {m} vs 1): {:.2}x",
+                    serial.median / piped.median
+                );
+            }
+        }
     }
 
     let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

@@ -5,12 +5,16 @@ use anyhow::{anyhow, bail, Result};
 
 use super::args::Args;
 use crate::device::{Cluster, Device};
-use crate::exec::{run_plan, Backend, ExecOptions};
+use crate::exec::{
+    run_plan, serve_closed_loop, Backend, ExecOptions, ExecSession, ServeOptions,
+    ThroughputReport,
+};
 use crate::metrics::{latency_table, memory_table, stage_breakdown_table, ModelComparison};
 use crate::model::{zoo, Model};
 use crate::partition::Strategy;
 use crate::pipeline;
 use crate::sim::{simulate as run_sim, SimConfig};
+use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::util::units::{fmt_bytes, fmt_secs};
@@ -51,6 +55,41 @@ fn model_from_args(a: &mut Args) -> Result<Model> {
 fn strategy_from_args(a: &mut Args) -> Result<Strategy> {
     let name = a.str_or("strategy", "iop");
     Strategy::parse(&name).ok_or_else(|| anyhow!("unknown strategy '{name}' (oc|coedge|iop)"))
+}
+
+/// Parse `--backend` (+ `--threads`, `--artifacts`) into an exec
+/// [`Backend`] — shared by `exec` and `serve`, which differ only in
+/// their default backend.
+fn backend_from_args(a: &mut Args, default: &str) -> Result<Backend> {
+    // Intra-worker threads for the fast/compiled backends (workers are
+    // already one thread per device, so the default stays 1).
+    let threads_given = a.str_opt("threads").is_some();
+    let threads = a.usize_or("threads", 1)?;
+    if threads_given && threads == 0 {
+        bail!("--threads expects a positive integer");
+    }
+    let backend = match a.str_or("backend", default).as_str() {
+        "reference" => Backend::Reference,
+        "fast" => Backend::Fast { threads },
+        "compiled" => Backend::Compiled { threads },
+        "pjrt" => Backend::Pjrt {
+            artifacts_dir: a.str_or("artifacts", "artifacts"),
+        },
+        other => bail!("unknown backend '{other}' (reference|fast|compiled|pjrt)"),
+    };
+    if threads_given && !matches!(backend, Backend::Fast { .. } | Backend::Compiled { .. }) {
+        bail!("--threads only applies to --backend fast|compiled");
+    }
+    Ok(backend)
+}
+
+fn backend_tag(backend: &Backend) -> String {
+    match backend {
+        Backend::Reference => "reference".to_string(),
+        Backend::Fast { threads } => format!("fast({threads}t)"),
+        Backend::Compiled { threads } => format!("compiled({threads}t)"),
+        Backend::Pjrt { .. } => "pjrt".to_string(),
+    }
 }
 
 /// `iop models` — Table 1.
@@ -290,25 +329,7 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let model = model_from_args(a)?;
     let strategy = strategy_from_args(a)?;
     let cluster = cluster_from_args(a)?;
-    // Intra-worker threads for the fast backend (workers are already one
-    // thread per device, so the default stays 1).
-    let threads_given = a.str_opt("threads").is_some();
-    let threads = a.usize_or("threads", 1)?;
-    if threads_given && threads == 0 {
-        bail!("--threads expects a positive integer");
-    }
-    let backend = match a.str_or("backend", "reference").as_str() {
-        "reference" => Backend::Reference,
-        "fast" => Backend::Fast { threads },
-        "compiled" => Backend::Compiled { threads },
-        "pjrt" => Backend::Pjrt {
-            artifacts_dir: a.str_or("artifacts", "artifacts"),
-        },
-        other => bail!("unknown backend '{other}' (reference|fast|compiled|pjrt)"),
-    };
-    if threads_given && !matches!(backend, Backend::Fast { .. } | Backend::Compiled { .. }) {
-        bail!("--threads only applies to --backend fast|compiled");
-    }
+    let backend = backend_from_args(a, "reference")?;
     a.finish()?;
 
     let plan = pipeline::plan(&model, &cluster, strategy);
@@ -316,12 +337,7 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let input = crate::exec::weights::model_input(&model);
     let expect = crate::exec::compute::centralized_inference(&model, &wb, &input);
 
-    let backend_tag = match &backend {
-        Backend::Reference => "reference".to_string(),
-        Backend::Fast { threads } => format!("fast({threads}t)"),
-        Backend::Compiled { threads } => format!("compiled({threads}t)"),
-        Backend::Pjrt { .. } => "pjrt".to_string(),
-    };
+    let backend_tag = backend_tag(&backend);
     let r = run_plan(
         &model,
         &plan,
@@ -351,6 +367,180 @@ pub fn exec(a: &mut Args) -> Result<()> {
         bail!("distributed output diverged from the centralized model");
     }
     println!("OK — distributed inference matches the centralized model");
+    Ok(())
+}
+
+/// One measured closed-loop run at a given in-flight depth; returns the
+/// report plus the max deviation of any response from `expect` (0 when
+/// no oracle is given).
+fn serve_run(
+    session: &mut ExecSession,
+    requests: usize,
+    depth: usize,
+    warmup: usize,
+    input: &Tensor,
+    expect: Option<&Tensor>,
+) -> Result<(ThroughputReport, f32)> {
+    let mut max_diff = 0.0f32;
+    let rep = serve_closed_loop(
+        session,
+        &ServeOptions {
+            requests,
+            inflight: depth,
+            warmup,
+        },
+        |_| input.clone(),
+        |_, r| {
+            if let Some(e) = expect {
+                max_diff = max_diff.max(r.output.max_abs_diff(e));
+            }
+        },
+    )?;
+    Ok((rep, max_diff))
+}
+
+fn serve_row(t: &mut Table, label: &str, rep: &ThroughputReport) {
+    t.row(vec![
+        label.to_string(),
+        rep.inflight.to_string(),
+        format!("{:.1}", rep.requests_per_sec),
+        fmt_secs(rep.latency_p50),
+        fmt_secs(rep.latency_p95),
+        fmt_secs(rep.latency_p99),
+        rep.device_busy_frac
+            .iter()
+            .map(|f| format!("{:.0}%", f * 100.0))
+            .collect::<Vec<_>>()
+            .join("/"),
+        fmt_bytes(rep.bytes_total),
+    ]);
+}
+
+/// `iop serve` — closed-loop pipelined serving throughput over one
+/// persistent session (`--compare-serial` measures inflight=1 vs
+/// inflight=K back to back on the same warmed session;
+/// `--assert-pipelined` additionally fails the run — after one noise
+/// retry — if pipelined throughput drops below serial).
+pub fn serve(a: &mut Args) -> Result<()> {
+    let model = model_from_args(a)?;
+    let strategy = strategy_from_args(a)?;
+    let cluster = cluster_from_args(a)?;
+    let backend = backend_from_args(a, "compiled")?;
+    let requests = a.usize_or("requests", 64)?;
+    let inflight = a.usize_or("inflight", cluster.m())?;
+    let warmup = a.usize_or("warmup", 4)?;
+    let check = a.bool("check");
+    let assert_pipelined = a.bool("assert-pipelined");
+    let compare = a.bool("compare-serial") || assert_pipelined;
+    let json = a.bool("json");
+    a.finish()?;
+    if requests == 0 {
+        bail!("--requests must be > 0");
+    }
+    if inflight == 0 {
+        bail!("--inflight must be > 0");
+    }
+
+    let plan = pipeline::plan(&model, &cluster, strategy);
+    let input = crate::exec::weights::model_input(&model);
+    let expect = if check {
+        let wb = crate::exec::weights::WeightBundle::generate(&model);
+        Some(crate::exec::compute::centralized_inference(&model, &wb, &input))
+    } else {
+        None
+    };
+    let mut session = ExecSession::new(&model, &plan, backend.clone())?;
+
+    let mut runs: Vec<(&'static str, ThroughputReport)> = Vec::new();
+    let mut max_diff = 0.0f32;
+    if compare {
+        // Serial first (it also absorbs the shared warm-up), pipelined
+        // second on the same session — the pair differs only in depth.
+        let (mut serial, d1) =
+            serve_run(&mut session, requests, 1, warmup, &input, expect.as_ref())?;
+        let (mut piped, d2) =
+            serve_run(&mut session, requests, inflight, 0, &input, expect.as_ref())?;
+        max_diff = d1.max(d2);
+        if assert_pipelined && piped.requests_per_sec < serial.requests_per_sec {
+            // One full re-measure absorbs scheduler noise on small quick
+            // runs before we call it a regression.
+            let (s2, d3) = serve_run(&mut session, requests, 1, 0, &input, expect.as_ref())?;
+            let (p2, d4) =
+                serve_run(&mut session, requests, inflight, 0, &input, expect.as_ref())?;
+            max_diff = max_diff.max(d3).max(d4);
+            // Keep the best run of each depth: comparing best-case
+            // steady state against best-case steady state is fair and
+            // robust to a one-off scheduler hiccup.
+            if p2.requests_per_sec > piped.requests_per_sec {
+                piped = p2;
+            }
+            if s2.requests_per_sec > serial.requests_per_sec {
+                serial = s2;
+            }
+        }
+        runs.push(("serial", serial));
+        runs.push(("pipelined", piped));
+    } else {
+        let (rep, d) =
+            serve_run(&mut session, requests, inflight, warmup, &input, expect.as_ref())?;
+        max_diff = d;
+        runs.push(("closed-loop", rep));
+    }
+
+    if json {
+        let out = Json::obj(vec![
+            ("model", Json::str(model.name.clone())),
+            ("strategy", Json::str(strategy.name())),
+            ("backend", Json::str(backend_tag(&backend))),
+            (
+                "runs",
+                Json::Arr(runs.iter().map(|(_, r)| r.to_json()).collect()),
+            ),
+            ("max_abs_diff", Json::num(max_diff)),
+        ]);
+        println!("{}", out.to_string_pretty());
+    } else {
+        println!(
+            "{} / {} on {} devices [{}]: closed loop, {} requests/run",
+            model.name,
+            strategy.name(),
+            cluster.m(),
+            backend_tag(&backend),
+            requests,
+        );
+        let mut t = Table::new(&[
+            "run", "inflight", "req/s", "p50", "p95", "p99", "busy/dev", "moved",
+        ]);
+        for (label, rep) in &runs {
+            serve_row(&mut t, label, rep);
+        }
+        println!("{}", t.render());
+    }
+
+    if check {
+        if max_diff > 1e-3 {
+            bail!("a response diverged from the centralized model (max diff {max_diff:.3e})");
+        }
+        if !json {
+            println!("check OK — every response matches the oracle (max diff {max_diff:.3e})");
+        }
+    }
+    if compare {
+        let serial_rps = runs[0].1.requests_per_sec;
+        let piped_rps = runs[1].1.requests_per_sec;
+        if !json {
+            println!(
+                "pipelined speedup (inflight {} vs 1): {:.2}x",
+                runs[1].1.inflight,
+                piped_rps / serial_rps
+            );
+        }
+        if assert_pipelined && piped_rps < serial_rps {
+            bail!(
+                "pipelined throughput fell below serial: {piped_rps:.1} < {serial_rps:.1} req/s"
+            );
+        }
+    }
     Ok(())
 }
 

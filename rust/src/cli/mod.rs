@@ -18,6 +18,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("sweep") => commands::sweep(&mut a),
         Some("scaling") => commands::scaling(&mut a),
         Some("exec") => commands::exec(&mut a),
+        Some("serve") => commands::serve(&mut a),
         Some("emit-plans") => commands::emit_plans(&mut a),
         Some("compare") => commands::compare(&mut a),
         Some("help") | Some("--help") | None => {
@@ -54,6 +55,17 @@ COMMANDS:
                                  Real distributed execution, checked
                                  against the centralized model (compiled
                                  = prepacked weights + scratch arenas)
+  serve      --model M --strategy S [--backend ...] [--threads N]
+             [--requests N] [--inflight K] [--warmup W] [--check]
+             [--compare-serial] [--assert-pipelined]
+                                 Closed-loop pipelined serving throughput
+                                 over one persistent session: req/s,
+                                 p50/p95/p99 latency, per-device busy.
+                                 --compare-serial measures inflight=1 vs
+                                 inflight=K on the same warmed session;
+                                 --assert-pipelined fails if pipelined
+                                 throughput drops below serial; --check
+                                 verifies every response vs the oracle
   emit-plans [--models a,b] --out FILE
                                  Export canonical plans as JSON for the
                                  python AOT shard compiler
@@ -68,11 +80,17 @@ overrides):
   --bandwidth-mbps M   shared-medium bandwidth      [50]
   --t-est-ms MS        connection establishment     [4]
 
-EXEC BACKENDS (`iop exec --backend ...`):
-  reference            scalar reference ops — the numerical oracle  [default]
+EXEC BACKENDS (`iop exec|serve --backend ...`):
+  reference            scalar reference ops — the numerical oracle
+                       [exec default]
   fast                 blocked im2col+GEMM kernels with fused bias+ReLU
                        epilogues; --threads N adds intra-worker threading
                        over output-channel blocks                   [N=1]
+  compiled             the fast kernels over a compiled plan: weights
+                       prepacked at session creation (shared across
+                       devices where identical), grow-only scratch
+                       arenas — the steady-state serving path
+                       [serve default]
   pjrt                 AOT XLA artifacts via PJRT-CPU (--artifacts DIR;
                        needs the `pjrt` build feature)
 

@@ -256,7 +256,7 @@ pub fn compute_slice_compiled(
     let backend = ComputeBackend::Fast {
         threads: cd.threads,
     };
-    match (&cd.stages[si], slice) {
+    match (cd.stages[si].as_ref(), slice) {
         (_, SliceKind::Idle) => Tensor::vector(vec![]),
 
         (

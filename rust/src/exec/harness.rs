@@ -2,9 +2,16 @@
 //!
 //! Protocol: workers advance stage by stage in lockstep implied by data
 //! dependencies (blocking receives). Messages are tagged with
-//! `(stage, phase)` so fast senders can run ahead without corrupting slow
-//! receivers (tags are buffered until consumed).
+//! `(req, from, stage, phase)` so fast senders can run ahead without
+//! corrupting slow receivers (tags are buffered until consumed) — across
+//! stages *and* across requests: the session is a pipelined serving
+//! engine ([`ExecSession::submit`] / [`ExecSession::collect`]) that keeps
+//! up to `max_inflight` requests moving through the worker set at once.
+//! Each worker processes its control queue in FIFO order, so requests are
+//! strictly serial *per worker* (one arena, no locking) while different
+//! workers may be on different requests — that skew is the pipelining.
 
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -22,7 +29,7 @@ use crate::tensor::Tensor;
 use super::backend::ComputeBackend;
 use super::compute::{apply_tail_with, compute_slice_compiled, compute_slice_with};
 use super::pjrt::PjrtRunner;
-use super::prepack::{CompiledDevice, ScratchArena};
+use super::prepack::{CompiledDevice, CompiledPlan, ScratchArena};
 use super::weights::{model_input, WeightBundle};
 
 /// Which compute backend workers use.
@@ -64,6 +71,9 @@ impl Default for ExecOptions {
 /// Execution statistics.
 #[derive(Debug, Clone)]
 pub struct ExecStats {
+    /// Submit-to-completion latency of the request. Under pipelined
+    /// serving (`max_inflight > 1`) this includes the time the request
+    /// spent queued behind earlier requests on each worker.
     pub wall_secs: f64,
     /// Bytes each device sent.
     pub bytes_sent: Vec<u64>,
@@ -75,6 +85,18 @@ pub struct ExecStats {
     /// (`Backend::Compiled` only; 0 elsewhere). Flat across steady-state
     /// requests ⇔ the conv/dense hot loop performed no heap allocations.
     pub arena_grows: Vec<u64>,
+}
+
+impl ExecStats {
+    fn zeroed(m: usize) -> ExecStats {
+        ExecStats {
+            wall_secs: 0.0,
+            bytes_sent: vec![0; m],
+            messages_sent: vec![0; m],
+            compute_secs: vec![0.0; m],
+            arena_grows: vec![0; m],
+        }
+    }
 }
 
 /// Execution result: the network output (assembled on device 0) + stats.
@@ -99,26 +121,33 @@ const PHASE_BCAST: u8 = 1;
 const FINAL_STAGE: usize = usize::MAX;
 
 /// Per-worker mailbox with tag-based buffering.
+///
+/// Receives match on the full `(req, from, stage, phase)` tag: a worker
+/// always waits for a *specific* peer's message, so reduction order (and
+/// therefore floating-point summation order) is fixed by peer index, not
+/// message arrival — outputs are bit-identical run to run and between
+/// serial and pipelined execution. Non-matching messages (a fast peer
+/// running ahead within a request, or already into a later request) are
+/// buffered until their tag is asked for; the buffer is bounded because
+/// the session's `max_inflight` window bounds how far ahead any peer can
+/// run.
 struct Mailbox {
     rx: Receiver<Msg>,
     pending: Vec<Msg>,
 }
 
 impl Mailbox {
-    fn recv_tagged(&mut self, req: usize, stage: usize, phase: u8) -> Result<Msg> {
-        if let Some(pos) = self
-            .pending
-            .iter()
-            .position(|m| m.req == req && m.stage == stage && m.phase == phase)
-        {
+    fn recv_tagged(&mut self, req: usize, from: usize, stage: usize, phase: u8) -> Result<Msg> {
+        if let Some(pos) = self.pending.iter().position(|m| {
+            m.req == req && m.from == from && m.stage == stage && m.phase == phase
+        }) {
             return Ok(self.pending.remove(pos));
         }
         loop {
-            let m = self
-                .rx
-                .recv()
-                .map_err(|_| anyhow!("peer disconnected waiting for stage {stage}"))?;
-            if m.req == req && m.stage == stage && m.phase == phase {
+            let m = self.rx.recv().map_err(|_| {
+                anyhow!("peer disconnected waiting for {from} at stage {stage} (req {req})")
+            })?;
+            if m.req == req && m.from == from && m.stage == stage && m.phase == phase {
                 return Ok(m);
             }
             self.pending.push(m);
@@ -130,9 +159,13 @@ impl Mailbox {
 /// executables).
 enum Runner {
     Host(ComputeBackend),
-    /// The worker's prepacked weight shard + its reusable scratch arena.
+    /// The worker's prepacked weight shard (kernels `Arc`-shared with
+    /// peer devices where weight-identical, see [`CompiledPlan`]) + its
+    /// reusable scratch arena. The arena needs no lock: requests are
+    /// strictly serial per worker (FIFO control queue), so at most one
+    /// request ever touches it at a time.
     Compiled {
-        shard: Box<CompiledDevice>,
+        shard: CompiledDevice,
         arena: ScratchArena,
     },
     Pjrt(Box<PjrtRunner>),
@@ -230,31 +263,118 @@ impl Local {
     }
 }
 
-/// A persistent execution session: workers (and their compiled PJRT
-/// executables) stay alive across requests. This is the deployment shape —
-/// per-request cost drops from "compile everything" to "run everything"
-/// (EXPERIMENTS.md §Perf records the before/after).
+/// Request handle returned by [`ExecSession::submit`] and paired with
+/// each result by [`ExecSession::collect`]. Ids are assigned in
+/// submission order starting at 0.
+pub type ReqId = usize;
+
+/// Completion state of one in-flight request, keyed by `req` in the
+/// session's pending map: worker completions arrive interleaved across
+/// requests (a fast worker can finish request `r+1` before a straggler
+/// finishes `r`), so each done message is folded into its own request's
+/// entry instead of the old single-slot `debug_assert_eq!(r, req)` drain.
+struct PendingReq {
+    t0: Instant,
+    /// Workers that have not reported this request yet.
+    remaining: usize,
+    output: Option<Tensor>,
+    stats: ExecStats,
+    /// Latest worker-side finish timestamp seen so far — the request's
+    /// completion instant is the *last* worker's finish, stamped by the
+    /// worker itself so latency excludes time the done message spent
+    /// queued while the caller was busy between `collect` calls.
+    last_finish: Option<Instant>,
+}
+
+/// A persistent execution session: workers (and their compiled plans /
+/// PJRT executables) stay alive across requests. This is the deployment
+/// shape — per-request cost drops from "compile everything" to "run
+/// everything" (EXPERIMENTS.md §Perf records the before/after).
+///
+/// The session is a pipelined submit/collect engine:
+///
+/// * [`ExecSession::submit`] broadcasts a request to the workers and
+///   returns immediately with its [`ReqId`] — unless `max_inflight`
+///   requests are already in flight, in which case it blocks until one
+///   completes (backpressure bounds worker queue depth and mailbox
+///   buffering).
+/// * [`ExecSession::collect`] returns the oldest completed request
+///   (submission order), blocking until one is available.
+/// * [`ExecSession::infer`] is the trivial composition: submit one
+///   request and wait for exactly that request.
+///
+/// Overlap needs no new worker protocol: every message is tagged with
+/// `(req, from, stage, phase)` and mailboxes buffer by tag, so worker A
+/// can be deep into request `r+1` while worker B still finishes `r`.
 pub struct ExecSession {
     m: usize,
+    max_inflight: usize,
     ctrl_tx: Vec<Sender<Control>>,
     done_rx: Receiver<(usize, usize, Result<WorkerOut>)>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    next_req: usize,
+    next_req: ReqId,
+    /// Submitted requests not yet fully reported by all m workers.
+    pending: HashMap<ReqId, PendingReq>,
+    /// Fully reported requests not yet handed to the caller, ordered by
+    /// id so `collect` returns submission order.
+    ready: BTreeMap<ReqId, Result<ExecResult>>,
+    /// Requests finalized early on a worker error, mapped to how many
+    /// worker reports are still outstanding: late reports from the
+    /// remaining workers are expected and dropped (waiting for them
+    /// could block forever — an erroring worker abandons the wire
+    /// protocol, which can leave its peers stuck mid-request), and the
+    /// entry is pruned once the last straggler has reported.
+    aborted: HashMap<ReqId, usize>,
+    /// Set once any worker reports an error: the worker set can no
+    /// longer serve reliably (the erroring worker's peers may be wedged
+    /// mid-protocol waiting for its messages), so further submits are
+    /// refused and `Drop` detaches instead of joining possibly-stuck
+    /// workers.
+    poisoned: bool,
 }
 
 enum Control {
-    Request { req: usize, input: Arc<Tensor> },
+    Request { req: ReqId, input: Arc<Tensor> },
     Shutdown,
 }
 
 impl ExecSession {
-    /// Validate the plan and spawn one worker thread per device.
+    /// Validate the plan and spawn one worker thread per device, with the
+    /// in-flight window defaulting to `m` (one request per device —
+    /// enough depth to keep every pipeline stage busy).
     pub fn new(model: &Model, plan: &Plan, backend: Backend) -> Result<ExecSession> {
+        let m = plan.m;
+        Self::with_inflight(model, plan, backend, m)
+    }
+
+    /// [`ExecSession::new`] with an explicit in-flight window.
+    /// `max_inflight = 1` reproduces strictly serial request-at-a-time
+    /// execution.
+    pub fn with_inflight(
+        model: &Model,
+        plan: &Plan,
+        backend: Backend,
+        max_inflight: usize,
+    ) -> Result<ExecSession> {
         plan.validate(model).map_err(|e| anyhow!(e))?;
         let m = plan.m;
         let model = Arc::new(model.clone());
         let plan = Arc::new(plan.clone());
         let wb = Arc::new(WeightBundle::generate(&model));
+
+        // Compiled backend: build the whole plan's kernels up front,
+        // deduping weight-identical stages across devices (Rows/Full/
+        // Replicate all pack the full weight — one shared Arc instead of
+        // m copies), then hand each worker its shard.
+        let compiled = match &backend {
+            Backend::Compiled { threads } => Some(CompiledPlan::compile(
+                &model,
+                &plan,
+                &wb,
+                (*threads).max(1),
+            )),
+            _ => None,
+        };
 
         // Full-mesh data channels: tx[i][j] sends i -> j.
         let mut rxs: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(m);
@@ -278,26 +398,97 @@ impl ExecSession {
             let tx: Vec<Sender<Msg>> = to_dev.clone();
             let rx = rxs[dev].take().unwrap();
             let backend = backend.clone();
+            let shard = compiled.as_ref().map(|cp| cp.devices[dev].clone());
             let done = done_tx.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(dev, model, plan, wb, tx, rx, crx, done, backend)
+                worker_loop(dev, model, plan, wb, tx, rx, crx, done, backend, shard)
             }));
         }
         Ok(ExecSession {
             m,
+            max_inflight: max_inflight.max(1),
             ctrl_tx,
             done_rx,
             handles,
             next_req: 0,
+            pending: HashMap::new(),
+            ready: BTreeMap::new(),
+            aborted: HashMap::new(),
+            poisoned: false,
         })
     }
 
-    /// Run one inference over the live worker set. The input is shared
+    /// Number of cooperative devices (worker threads).
+    pub fn devices(&self) -> usize {
+        self.m
+    }
+
+    /// Requests submitted and still being processed by the workers
+    /// (not yet fully reported). This — not the count of uncollected
+    /// results — is what `max_inflight` bounds: it is what occupies
+    /// worker control queues and mailbox buffers. Completed requests
+    /// waiting in the ready queue (see [`ExecSession::ready_count`])
+    /// hold no worker resources and don't count against the window.
+    pub fn inflight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Completed requests buffered for `collect`.
+    pub fn ready_count(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// True once any worker has reported an error: in-flight requests
+    /// were failed fast, further submits are refused, and `Drop` will
+    /// detach (not join) the possibly-wedged workers. Recover by
+    /// creating a new session.
+    pub fn poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Current in-flight window.
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight
+    }
+
+    /// Change the in-flight window (clamped to ≥ 1). Takes effect on the
+    /// next `submit`; useful for measuring serial vs pipelined throughput
+    /// over one warmed session.
+    pub fn set_max_inflight(&mut self, max_inflight: usize) {
+        self.max_inflight = max_inflight.max(1);
+    }
+
+    /// Submit one inference over the live worker set and return its
+    /// request id without waiting for the result. The input is shared
     /// with every worker via one `Arc` (no per-device tensor clones).
-    pub fn infer(&mut self, input: Tensor) -> Result<ExecResult> {
+    /// Blocks only while `max_inflight` requests are still being
+    /// processed (backpressure — completed requests move to the ready
+    /// queue and free their window slot before collection).
+    pub fn submit(&mut self, input: Tensor) -> Result<ReqId> {
+        while self.pending.len() >= self.max_inflight {
+            self.pump()?;
+        }
+        // Checked *after* the backpressure drain: pump may have just
+        // surfaced a worker error (poisoning the session and emptying
+        // the window) — submitting to the wedged worker set would make
+        // the later collect hang forever.
+        if self.poisoned {
+            return Err(anyhow!(
+                "session poisoned by an earlier worker error; create a new session"
+            ));
+        }
         let req = self.next_req;
         self.next_req += 1;
-        let t0 = Instant::now();
+        self.pending.insert(
+            req,
+            PendingReq {
+                t0: Instant::now(),
+                remaining: self.m,
+                output: None,
+                stats: ExecStats::zeroed(self.m),
+                last_finish: None,
+            },
+        );
         let input = Arc::new(input);
         for c in &self.ctrl_tx {
             c.send(Control::Request {
@@ -306,32 +497,127 @@ impl ExecSession {
             })
             .map_err(|_| anyhow!("worker hung up"))?;
         }
-        let mut output = None;
-        let mut stats = ExecStats {
-            wall_secs: 0.0,
-            bytes_sent: vec![0; self.m],
-            messages_sent: vec![0; self.m],
-            compute_secs: vec![0.0; self.m],
-            arena_grows: vec![0; self.m],
+        Ok(req)
+    }
+
+    /// Wait for the oldest in-flight request (by submission order) to
+    /// complete and return it. Errors if nothing is in flight.
+    pub fn collect(&mut self) -> Result<(ReqId, ExecResult)> {
+        loop {
+            if let Some(&req) = self.ready.keys().next() {
+                let res = self.ready.remove(&req).unwrap();
+                return res.map(|r| (req, r)).with_context(|| format!("request {req}"));
+            }
+            if self.pending.is_empty() {
+                return Err(anyhow!("collect with no request in flight"));
+            }
+            self.pump()?;
+        }
+    }
+
+    /// Wait for a specific in-flight request.
+    pub fn collect_req(&mut self, req: ReqId) -> Result<ExecResult> {
+        loop {
+            if let Some(res) = self.ready.remove(&req) {
+                return res.with_context(|| format!("request {req}"));
+            }
+            if !self.pending.contains_key(&req) {
+                return Err(anyhow!("request {req} is not in flight"));
+            }
+            self.pump()?;
+        }
+    }
+
+    /// Run one inference to completion — the trivial composition of
+    /// [`ExecSession::submit`] and [`ExecSession::collect_req`].
+    pub fn infer(&mut self, input: Tensor) -> Result<ExecResult> {
+        let req = self.submit(input)?;
+        self.collect_req(req)
+    }
+
+    /// Absorb one worker completion message into the pending map, moving
+    /// the request to `ready` once all m workers have reported — or
+    /// immediately with `Err` on the *first* worker error (an erroring
+    /// worker abandons the wire protocol, so its peers may never finish
+    /// this request; waiting for all m reports would deadlock — the
+    /// request is marked aborted and stragglers' late reports are
+    /// dropped). This is the only place `done_rx` is drained, and it is
+    /// keyed by the message's own `req`: completions may interleave
+    /// across requests in any order.
+    fn pump(&mut self) -> Result<()> {
+        let (req, dev, w) = self
+            .done_rx
+            .recv()
+            .map_err(|_| anyhow!("workers died mid-request"))?;
+        let Some(p) = self.pending.get_mut(&req) else {
+            // Straggler report for an aborted request: drop it and prune
+            // the abort entry once the last outstanding worker reported.
+            if let Some(left) = self.aborted.get_mut(&req) {
+                *left -= 1;
+                if *left == 0 {
+                    self.aborted.remove(&req);
+                }
+                return Ok(());
+            }
+            return Err(anyhow!("completion for unknown request {req}"));
         };
-        for _ in 0..self.m {
-            let (r, dev, w) = self
-                .done_rx
-                .recv()
-                .map_err(|_| anyhow!("workers died mid-request"))?;
-            debug_assert_eq!(r, req);
-            let w = w.with_context(|| format!("worker {dev}"))?;
-            stats.bytes_sent[dev] = w.bytes_sent;
-            stats.messages_sent[dev] = w.messages_sent;
-            stats.compute_secs[dev] = w.compute_secs;
-            stats.arena_grows[dev] = w.arena_grows;
-            if dev == 0 {
-                output = w.output;
+        p.remaining -= 1;
+        match w {
+            Ok(w) => {
+                p.stats.bytes_sent[dev] = w.bytes_sent;
+                p.stats.messages_sent[dev] = w.messages_sent;
+                p.stats.compute_secs[dev] = w.compute_secs;
+                p.stats.arena_grows[dev] = w.arena_grows;
+                p.last_finish = Some(match p.last_finish {
+                    Some(t) => t.max(w.finished_at),
+                    None => w.finished_at,
+                });
+                if dev == 0 {
+                    p.output = w.output;
+                }
+                if p.remaining == 0 {
+                    let mut p = self.pending.remove(&req).unwrap();
+                    // Completion = the last worker's own finish stamp, so
+                    // latency excludes done-channel queueing time.
+                    p.stats.wall_secs = p
+                        .last_finish
+                        .map_or_else(|| p.t0.elapsed(), |t| t.duration_since(p.t0))
+                        .as_secs_f64();
+                    let res = match p.output.take() {
+                        Some(output) => Ok(ExecResult {
+                            output,
+                            stats: p.stats,
+                        }),
+                        None => Err(anyhow!("device 0 produced no output")),
+                    };
+                    self.ready.insert(req, res);
+                }
+            }
+            Err(e) => {
+                let p = self.pending.remove(&req).unwrap();
+                if p.remaining > 0 {
+                    self.aborted.insert(req, p.remaining);
+                }
+                self.poisoned = true;
+                self.ready
+                    .insert(req, Err(e.context(format!("worker {dev}"))));
+                // Fail fast for everything else in flight too: the
+                // erroring worker's peers may be wedged mid-protocol, so
+                // waiting for these to complete could hang `collect`.
+                // Their workers' future reports are dropped as
+                // stragglers via the aborted map.
+                for (other, op) in self.pending.drain() {
+                    if op.remaining > 0 {
+                        self.aborted.insert(other, op.remaining);
+                    }
+                    self.ready.insert(
+                        other,
+                        Err(anyhow!("aborted: worker {dev} failed an earlier request")),
+                    );
+                }
             }
         }
-        stats.wall_secs = t0.elapsed().as_secs_f64();
-        let output = output.ok_or_else(|| anyhow!("device 0 produced no output"))?;
-        Ok(ExecResult { output, stats })
+        Ok(())
     }
 }
 
@@ -339,6 +625,17 @@ impl Drop for ExecSession {
     fn drop(&mut self) {
         for c in &self.ctrl_tx {
             let _ = c.send(Control::Shutdown);
+        }
+        // After a worker error the erroring worker's peers may be wedged
+        // mid-protocol (blocked in a tagged receive for a message that
+        // will never come — the full-mesh channels only disconnect when
+        // every worker exits, so they cannot unblock); joining them
+        // would deadlock this thread. Detach instead: the threads are
+        // leaked until process exit, which is the price of a poisoned
+        // session (the submit path already refuses further work).
+        if self.poisoned {
+            self.handles.drain(..).for_each(drop);
+            return;
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -359,7 +656,10 @@ pub fn run_plan(model: &Model, plan: &Plan, options: &ExecOptions) -> Result<Exe
 }
 
 /// Worker thread: initialize the backend once, then serve requests until
-/// shutdown.
+/// shutdown. The control queue is FIFO, so requests are processed
+/// strictly in submission order *on this worker* — the per-worker arena
+/// and mailbox need no synchronization; pipelining comes from different
+/// workers being on different requests at once.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     dev: usize,
@@ -371,6 +671,7 @@ fn worker_loop(
     ctrl: Receiver<Control>,
     done: Sender<(usize, usize, Result<WorkerOut>)>,
     backend: Backend,
+    shard: Option<CompiledDevice>,
 ) {
     let mut mailbox = Mailbox {
         rx,
@@ -381,19 +682,17 @@ fn worker_loop(
         Backend::Fast { threads } => Ok(Runner::Host(ComputeBackend::Fast {
             threads: (*threads).max(1),
         })),
-        // Compile once at session creation: weights sliced + prepacked
-        // into GEMM micro-panels, one arena per worker. Each worker only
-        // compiles its own shard (this runs in parallel across workers).
-        Backend::Compiled { threads } => Ok(Runner::Compiled {
-            shard: Box::new(CompiledDevice::compile(
-                &model,
-                &plan,
-                &wb,
-                dev,
-                (*threads).max(1),
-            )),
-            arena: ScratchArena::new(),
-        }),
+        // The session compiled the whole plan before spawning workers
+        // (stage-parallel, with weight-identical kernels Arc-shared
+        // across devices — `CompiledPlan::compile`); this worker just
+        // takes ownership of its shard and pairs it with its arena.
+        Backend::Compiled { .. } => match shard {
+            Some(shard) => Ok(Runner::Compiled {
+                shard,
+                arena: ScratchArena::new(),
+            }),
+            None => Err(anyhow!("compiled backend spawned without a shard")),
+        },
         Backend::Pjrt { artifacts_dir } => PjrtRunner::new(
             Arc::clone(&model),
             Arc::clone(&plan),
@@ -426,6 +725,10 @@ struct WorkerOut {
     messages_sent: usize,
     compute_secs: f64,
     arena_grows: u64,
+    /// When this worker finished the request (stamped worker-side so the
+    /// session can compute true completion latency even if the done
+    /// message sits in the channel while the caller is busy).
+    finished_at: Instant,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -497,8 +800,8 @@ fn worker_request(
                     if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
                         continue;
                     }
-                    let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
-                    parts.push((msg.from, msg.tensor));
+                    let msg = mailbox.recv_tagged(req, peer, si, PHASE_MAIN)?;
+                    parts.push((peer, msg.tensor));
                 }
                 parts.sort_by_key(|(from, _)| {
                     prev.slices[*from].start_key()
@@ -521,17 +824,20 @@ fn worker_request(
                     if is_reduce_to {
                         local = Local::Nothing;
                     } else {
-                        let msg = mailbox.recv_tagged(req, si, PHASE_BCAST)?;
+                        let msg = mailbox.recv_tagged(req, *root, si, PHASE_BCAST)?;
                         let tailed = runner.run_tail(model, wb, plan, si - 1, &msg.tensor)?;
                         local = Local::Full(Arc::new(tailed));
                     }
                 } else {
+                    // Accumulate in peer-index order (sender-matched
+                    // receives), not arrival order — summation order is
+                    // deterministic, so outputs are bit-stable.
                     let mut acc = my_partial;
                     for (peer, slice) in prev.slices.iter().enumerate() {
                         if peer == dev || slice.count() == 0 {
                             continue;
                         }
-                        let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                        let msg = mailbox.recv_tagged(req, peer, si, PHASE_MAIN)?;
                         match &mut acc {
                             Some(a) => a.add_assign(&msg.tensor),
                             None => acc = Some(msg.tensor),
@@ -583,8 +889,8 @@ fn worker_request(
                         if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
                             continue;
                         }
-                        let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
-                        parts.push((msg.from, msg.tensor));
+                        let msg = mailbox.recv_tagged(req, peer, si, PHASE_MAIN)?;
+                        parts.push((peer, msg.tensor));
                     }
                     parts.sort_by_key(|(from, _)| prev.slices[*from].start_key());
                     let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
@@ -600,7 +906,7 @@ fn worker_request(
                         }
                     }
                 } else {
-                    let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
+                    let msg = mailbox.recv_tagged(req, *root, si, PHASE_MAIN)?;
                     local = Local::Full(Arc::new(msg.tensor));
                 }
             }
@@ -644,22 +950,16 @@ fn worker_request(
                             (own_hi - own_lo) as usize,
                         );
                     }
-                    // received fragments
-                    let inbound: Vec<_> = halos.iter().filter(|h| h.to == dev).collect();
-                    for h in &inbound {
-                        let msg = mailbox.recv_tagged(req, si, PHASE_MAIN)?;
-                        // find which inbound fragment this is (by sender)
-                        let hh = inbound
-                            .iter()
-                            .find(|x| x.from == msg.from)
-                            .ok_or_else(|| anyhow!("unexpected halo from {}", msg.from))?;
-                        let _ = h;
+                    // received fragments (sender-matched: each inbound
+                    // halo names its peer, so receive exactly that one)
+                    for h in halos.iter().filter(|h| h.to == dev) {
+                        let msg = mailbox.recv_tagged(req, h.from, si, PHASE_MAIN)?;
                         copy_rows_into(
                             &mut window,
-                            (hh.row_start as isize - lo) as usize,
+                            (h.row_start as isize - lo) as usize,
                             &msg.tensor,
                             0,
-                            hh.row_count,
+                            h.row_count,
                         );
                     }
                     local = Local::Full(Arc::new(window)); // window tensor; used below
@@ -796,8 +1096,8 @@ fn worker_request(
                     if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
                         continue;
                     }
-                    let msg = mailbox.recv_tagged(req, FINAL_STAGE, PHASE_MAIN)?;
-                    parts.push((msg.from, msg.tensor));
+                    let msg = mailbox.recv_tagged(req, peer, FINAL_STAGE, PHASE_MAIN)?;
+                    parts.push((peer, msg.tensor));
                 }
                 parts.sort_by_key(|(from, _)| last.slices[*from].start_key());
                 let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
@@ -820,7 +1120,7 @@ fn worker_request(
                     if peer == dev || slice.count() == 0 {
                         continue;
                     }
-                    let msg = mailbox.recv_tagged(req, FINAL_STAGE, PHASE_MAIN)?;
+                    let msg = mailbox.recv_tagged(req, peer, FINAL_STAGE, PHASE_MAIN)?;
                     match &mut acc {
                         Some(a) => a.add_assign(&msg.tensor),
                         None => acc = Some(msg.tensor),
@@ -839,6 +1139,7 @@ fn worker_request(
         messages_sent,
         compute_secs,
         arena_grows: runner.arena_grows(),
+        finished_at: Instant::now(),
     })
 }
 
@@ -1016,6 +1317,50 @@ mod tests {
             assert!(r.output.allclose(&expect, 1e-4, 1e-5), "request {i}");
             assert_eq!(r.stats.arena_grows, warm, "request {i} grew an arena");
         }
+    }
+
+    #[test]
+    fn submit_collect_composition_matches_infer() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let input = model_input(&m);
+        let mut a = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        let mut b = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        let via_infer = a.infer(input.clone()).unwrap();
+        let req = b.submit(input).unwrap();
+        let via_submit = b.collect_req(req).unwrap();
+        assert_eq!(via_infer.output, via_submit.output);
+    }
+
+    #[test]
+    fn serial_outputs_bit_stable_across_sessions() {
+        // Sender-matched receives pin the reduction order, so two
+        // sessions over the same plan produce *identical* bits — the
+        // property the pipelined-vs-serial acceptance tests rely on.
+        let m = zoo::vgg_mini();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let input = model_input(&m);
+        let mut s1 = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        let mut s2 = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        let a = s1.infer(input.clone()).unwrap();
+        let b = s2.infer(input).unwrap();
+        assert_eq!(a.output, b.output);
+    }
+
+    #[test]
+    fn inflight_window_is_clamped_and_adjustable() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let mut s = ExecSession::with_inflight(&m, &plan, Backend::Reference, 0).unwrap();
+        assert_eq!(s.max_inflight(), 1, "window clamps to ≥ 1");
+        s.set_max_inflight(0);
+        assert_eq!(s.max_inflight(), 1);
+        s.set_max_inflight(5);
+        assert_eq!(s.max_inflight(), 5);
+        assert_eq!(s.devices(), plan.m);
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! centralized reference model (and, in PJRT mode, executed by the AOT
 //! XLA artifacts produced from the JAX/Pallas layers).
 //!
+//! [`ExecSession`] is a pipelined serving engine: `submit`/`collect`
+//! keep up to `max_inflight` requests flowing through the worker set at
+//! once (messages and completions are request-tagged, so overlap needs
+//! no extra synchronization), and [`serve`] drives closed-loop
+//! throughput measurements over a session ([`ThroughputReport`]).
+//!
 //! Four backends:
 //!  * [`Backend::Reference`] — scalar host tensor ops (`tensor::ops`), no
 //!    external dependencies; the numerical oracle every other path is
@@ -28,8 +34,10 @@ pub mod compute;
 pub mod harness;
 pub mod pjrt;
 pub mod prepack;
+pub mod serve;
 pub mod weights;
 
 pub use backend::ComputeBackend;
-pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats};
-pub use prepack::{CompiledDevice, ScratchArena};
+pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats, ReqId};
+pub use prepack::{CompiledDevice, CompiledPlan, ScratchArena};
+pub use serve::{serve_closed_loop, ServeOptions, ThroughputReport};

@@ -18,9 +18,18 @@
 //!    After warm-up its [`ScratchArena::grow_count`] stays flat: the
 //!    conv/dense hot loop performs no heap allocations.
 //!
-//! Harness workers build their own [`CompiledDevice`] shard + arena at
-//! session creation (`Backend::Compiled`); the centralized serving path
-//! uses [`CompiledDevice::compile_centralized`].
+//! Sessions compile all m shards up front via [`CompiledPlan::compile`]
+//! (`Backend::Compiled`), which `Arc`-shares weight-identical kernels
+//! across devices (`Rows`/`Full`/`Replicate` stages pack the full weight
+//! exactly once instead of m times) and hands each worker its
+//! [`CompiledDevice`] + a private arena; the centralized serving path
+//! uses [`CompiledDevice::compile_centralized`]. Arenas are per-worker
+//! and requests are strictly serial per worker (FIFO control queue), so
+//! pipelined serving needs no arena locking — the overlap soak tests
+//! assert the grow counters stay flat under `inflight = m`.
+
+use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::model::{Model, OpKind, Stage};
 use crate::partition::plan::{Plan, SliceKind};
@@ -115,18 +124,20 @@ pub enum CompiledKernel {
 /// One device's compiled shard of a plan: per-stage kernels with weights
 /// already sliced and packed, built once at session creation.
 ///
-/// Each worker compiles and owns its own shard. For `Rows`/`Full`/
-/// `Replicate` stages that means every device packs the *full* weight —
-/// deliberate: it mirrors real cooperative deployments, where row/
-/// replicated partitioning replicates those weights on every physical
-/// device (the CoEdge memory story the paper's Fig. 5 measures). In this
-/// in-process harness the copies share nothing beyond `WeightBundle`;
-/// dedup via `Arc`-shared kernels is a possible follow-up if simulated
-/// footprint ever matters.
+/// Kernels are held behind `Arc` so weight-identical stages can be
+/// shared across devices instead of packed m times
+/// ([`CompiledPlan::compile`]): `Full`/`Replicate` slices and *every*
+/// `Rows` slice pack the same full weight with the same resolved
+/// geometry, so one kernel serves all m devices. This mirrors what a
+/// real deployment still has to replicate per physical device (the
+/// CoEdge memory story the paper's Fig. 5 measures) — use
+/// [`CompiledPlan::replicated_packed_bytes`] for that accounting and
+/// [`CompiledPlan::unique_packed_bytes`] for what this in-process
+/// harness actually allocates.
 #[derive(Debug, Clone)]
 pub struct CompiledDevice {
     /// Indexed by plan stage index.
-    pub stages: Vec<CompiledKernel>,
+    pub stages: Vec<Arc<CompiledKernel>>,
     /// Intra-device GEMM threads (harness workers default to 1 — they
     /// are already one OS thread per device; the centralized path can
     /// use every core).
@@ -134,7 +145,9 @@ pub struct CompiledDevice {
 }
 
 impl CompiledDevice {
-    /// Compile device `dev`'s shard of `plan`.
+    /// Compile device `dev`'s shard of `plan` in isolation (no cross-
+    /// device sharing — sessions use [`CompiledPlan::compile`], which
+    /// dedups; this stays for single-shard tools and tests).
     pub fn compile(
         model: &Model,
         plan: &Plan,
@@ -145,7 +158,7 @@ impl CompiledDevice {
         let stages = plan
             .stages
             .iter()
-            .map(|sp| compile_slice(model, wb, sp.stage, &sp.slices[dev], threads))
+            .map(|sp| Arc::new(compile_slice(model, wb, sp.stage, &sp.slices[dev], threads)))
             .collect();
         CompiledDevice {
             stages,
@@ -159,7 +172,7 @@ impl CompiledDevice {
         let stages = model
             .stages()
             .iter()
-            .map(|&stage| compile_slice(model, wb, stage, &SliceKind::Full, threads))
+            .map(|&stage| Arc::new(compile_slice(model, wb, stage, &SliceKind::Full, threads)))
             .collect();
         CompiledDevice {
             stages,
@@ -167,21 +180,123 @@ impl CompiledDevice {
         }
     }
 
-    /// Total bytes of compiled weight + bias state (deployment reporting:
-    /// the per-device memory the prepacked plan pins).
+    /// Total bytes of compiled weight + bias state reachable from this
+    /// device (deployment reporting: the per-device memory a real
+    /// physical device would pin; `Arc`-shared kernels count here on
+    /// every device that references them).
     pub fn packed_bytes(&self) -> usize {
-        self.stages
-            .iter()
-            .map(|k| match k {
-                CompiledKernel::Idle => 0,
-                CompiledKernel::Conv(c) => {
-                    c.packed.bytes() + c.bias.as_ref().map_or(0, |b| b.len() * 4)
-                }
-                CompiledKernel::Dense(d) => {
-                    d.weight.len() * 4 + d.bias.as_ref().map_or(0, |b| b.len() * 4)
-                }
+        self.stages.iter().map(|k| kernel_bytes(k)).sum()
+    }
+}
+
+/// Bytes of packed weight + bias state in one kernel.
+fn kernel_bytes(k: &CompiledKernel) -> usize {
+    match k {
+        CompiledKernel::Idle => 0,
+        CompiledKernel::Conv(c) => c.packed.bytes() + c.bias.as_ref().map_or(0, |b| b.len() * 4),
+        CompiledKernel::Dense(d) => {
+            d.weight.len() * 4 + d.bias.as_ref().map_or(0, |b| b.len() * 4)
+        }
+    }
+}
+
+/// All m devices' compiled shards for one plan, with weight-identical
+/// kernels compiled once and `Arc`-shared across devices.
+///
+/// `Full`, `Replicate`, and `Rows` slices of a stage all pack the *full*
+/// stage weight (row shards differ only in their input window, which is
+/// a run-time argument — the compiled kernel is range-independent with
+/// vertical padding resolved to 0), so on row-partitioned and replicated
+/// plans the old per-worker compile packed the identical panels m times.
+/// Sharing cuts compiled-session build work and peak memory from m
+/// copies to one on those stages; per-device `Oc`/`Ic` shards remain
+/// genuinely distinct and are compiled per device.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    /// Indexed by device.
+    pub devices: Vec<CompiledDevice>,
+}
+
+/// Sharing key: slices whose compiled kernels are identical map to the
+/// same key (see [`CompiledPlan`] for why every `Rows` range shares).
+fn share_key(s: &SliceKind) -> SliceKind {
+    match s {
+        SliceKind::Full | SliceKind::Replicate => SliceKind::Full,
+        SliceKind::Rows { .. } => SliceKind::Rows { start: 0, count: 0 },
+        other => *other,
+    }
+}
+
+impl CompiledPlan {
+    /// Compile every device's shard, stage-parallel (`thread::scope`,
+    /// one task per stage — stages are independent; within a stage the
+    /// dedup cache makes sharing decisions deterministically in device
+    /// order).
+    pub fn compile(model: &Model, plan: &Plan, wb: &WeightBundle, threads: usize) -> CompiledPlan {
+        let threads = threads.max(1);
+        let m = plan.m;
+        let per_stage: Vec<Vec<Arc<CompiledKernel>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = plan
+                .stages
+                .iter()
+                .map(|sp| {
+                    s.spawn(move || {
+                        let mut cache: Vec<(SliceKind, Arc<CompiledKernel>)> = Vec::new();
+                        (0..m)
+                            .map(|dev| {
+                                let key = share_key(&sp.slices[dev]);
+                                if let Some((_, k)) = cache.iter().find(|(c, _)| *c == key) {
+                                    Arc::clone(k)
+                                } else {
+                                    let k = Arc::new(compile_slice(
+                                        model,
+                                        wb,
+                                        sp.stage,
+                                        &sp.slices[dev],
+                                        threads,
+                                    ));
+                                    cache.push((key, Arc::clone(&k)));
+                                    k
+                                }
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("stage compile panicked"))
+                .collect()
+        });
+        let devices = (0..m)
+            .map(|dev| CompiledDevice {
+                stages: per_stage.iter().map(|st| Arc::clone(&st[dev])).collect(),
+                threads,
             })
-            .sum()
+            .collect();
+        CompiledPlan { devices }
+    }
+
+    /// Bytes this compiled plan actually allocates: each shared kernel
+    /// counted once.
+    pub fn unique_packed_bytes(&self) -> usize {
+        let mut seen: HashSet<*const CompiledKernel> = HashSet::new();
+        let mut total = 0;
+        for d in &self.devices {
+            for k in &d.stages {
+                if seen.insert(Arc::as_ptr(k)) {
+                    total += kernel_bytes(k);
+                }
+            }
+        }
+        total
+    }
+
+    /// Bytes m independent per-device compiles would pin (the real
+    /// cooperative-deployment footprint, where every physical device
+    /// must hold its own copy) — the Fig. 5-style accounting.
+    pub fn replicated_packed_bytes(&self) -> usize {
+        self.devices.iter().map(|d| d.packed_bytes()).sum()
     }
 }
 
@@ -480,5 +595,69 @@ mod tests {
         let cd = CompiledDevice::compile(&m, &plan, &wb, 0, 1);
         assert_eq!(cd.stages.len(), plan.stages.len());
         assert!(cd.packed_bytes() > 0);
+    }
+
+    #[test]
+    fn compiled_plan_shares_weight_identical_kernels() {
+        use crate::partition::Strategy;
+        let m = zoo::vgg_mini();
+        let cluster = crate::device::profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        // CoEdge partitions conv stages by rows and replicates the FC
+        // phase — both shapes pack the full weight on every device, so
+        // the plan-level compile must share one Arc per such stage.
+        let plan = crate::pipeline::plan(&m, &cluster, Strategy::CoEdge);
+        let cp = CompiledPlan::compile(&m, &plan, &wb, 1);
+        assert_eq!(cp.devices.len(), plan.m);
+        let mut shared_stages = 0;
+        for (si, sp) in plan.stages.iter().enumerate() {
+            let all_rows = sp
+                .slices
+                .iter()
+                .all(|s| matches!(s, SliceKind::Rows { .. }));
+            let all_repl = sp
+                .slices
+                .iter()
+                .all(|s| matches!(s, SliceKind::Full | SliceKind::Replicate));
+            if all_rows || all_repl {
+                let k0 = &cp.devices[0].stages[si];
+                for d in 1..plan.m {
+                    assert!(
+                        Arc::ptr_eq(k0, &cp.devices[d].stages[si]),
+                        "stage {si} should share one kernel across devices"
+                    );
+                }
+                shared_stages += 1;
+            }
+        }
+        assert!(shared_stages > 0, "CoEdge plan should have shareable stages");
+        assert!(
+            cp.unique_packed_bytes() < cp.replicated_packed_bytes(),
+            "dedup must cut allocated bytes: unique={} replicated={}",
+            cp.unique_packed_bytes(),
+            cp.replicated_packed_bytes()
+        );
+    }
+
+    #[test]
+    fn compiled_plan_matches_per_device_compiles() {
+        use crate::partition::Strategy;
+        let m = zoo::lenet();
+        let cluster = crate::device::profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        for strategy in Strategy::all() {
+            let plan = crate::pipeline::plan(&m, &cluster, strategy);
+            let cp = CompiledPlan::compile(&m, &plan, &wb, 1);
+            for dev in 0..plan.m {
+                let solo = CompiledDevice::compile(&m, &plan, &wb, dev, 1);
+                assert_eq!(solo.stages.len(), cp.devices[dev].stages.len());
+                assert_eq!(
+                    cp.devices[dev].packed_bytes(),
+                    solo.packed_bytes(),
+                    "{} dev {dev}: shared compile changed per-device state",
+                    strategy.name()
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,239 @@
+//! Closed-loop serving driver: push N requests through an
+//! [`ExecSession`] at a fixed in-flight depth and measure steady-state
+//! throughput.
+//!
+//! The driver is a classic closed-loop load generator: it keeps exactly
+//! `inflight` requests outstanding (submitting a new one the moment the
+//! window has room, collecting otherwise) until `requests` have been
+//! served, then summarizes the run as a [`ThroughputReport`] —
+//! requests/sec, latency percentiles (submit→completion, which under
+//! pipelining includes queueing behind earlier requests), per-device
+//! busy fractions, and wire totals.
+//!
+//! `inflight = 1` reproduces strictly serial request-at-a-time execution
+//! over the same session, so a serial/pipelined pair measured back to
+//! back on one warmed session isolates the pipelining win from compile
+//! and warm-up effects (`iop serve --compare-serial`, the
+//! `serve vgg_mini *` cases in `perf_hotpath`, and the CI serve-smoke
+//! gate all use that shape).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::harness::{ExecResult, ExecSession};
+
+/// Closed-loop run parameters.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Measured requests.
+    pub requests: usize,
+    /// In-flight window for the run (the session's `max_inflight` is set
+    /// to this for the duration).
+    pub inflight: usize,
+    /// Unmeasured serial warm-up requests run first (arena growth, page
+    /// faults, branch warm-up).
+    pub warmup: usize,
+}
+
+/// Steady-state throughput summary of one closed-loop run.
+#[derive(Debug, Clone)]
+pub struct ThroughputReport {
+    pub requests: usize,
+    pub inflight: usize,
+    /// First submit to last completion.
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    /// Submit→completion latency percentiles (seconds).
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+    /// Per-device compute seconds summed over all requests, divided by
+    /// wall time — the fraction of the run each device spent computing
+    /// (the pipelining win shows up here: serial runs idle every device
+    /// during other devices' stages and all communication).
+    pub device_busy_frac: Vec<f64>,
+    /// Total bytes sent on the wire across all requests and devices.
+    pub bytes_total: u64,
+    /// Total messages sent across all requests and devices.
+    pub messages_total: u64,
+}
+
+impl ThroughputReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("inflight", Json::num(self.inflight as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("requests_per_sec", Json::num(self.requests_per_sec)),
+            ("latency_p50_secs", Json::num(self.latency_p50)),
+            ("latency_p95_secs", Json::num(self.latency_p95)),
+            ("latency_p99_secs", Json::num(self.latency_p99)),
+            (
+                "device_busy_frac",
+                Json::Arr(self.device_busy_frac.iter().map(|&f| Json::num(f)).collect()),
+            ),
+            ("bytes_total", Json::num(self.bytes_total as f64)),
+            ("messages_total", Json::num(self.messages_total as f64)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Drive a closed loop of `opts.requests` requests through `session` at
+/// depth `opts.inflight`. `input_for` supplies each request's input by
+/// 0-based index over the measured window, and `on_result` sees every
+/// completed request in submission order under the *same* index (NOT
+/// the session-global `ReqId`, which also counts warm-up requests and
+/// any earlier runs on a reused session) — so
+/// `on_result(i, r)` can check `r` against the oracle for
+/// `input_for(i)` without the driver holding all outputs.
+pub fn serve_closed_loop(
+    session: &mut ExecSession,
+    opts: &ServeOptions,
+    mut input_for: impl FnMut(usize) -> Tensor,
+    mut on_result: impl FnMut(usize, &ExecResult),
+) -> Result<ThroughputReport> {
+    if opts.requests == 0 {
+        return Err(anyhow!("serve: requests must be > 0"));
+    }
+    let depth = opts.inflight.max(1);
+    let m = session.devices();
+    session.set_max_inflight(depth);
+
+    // Warm-up: serial, unmeasured.
+    for _ in 0..opts.warmup {
+        session.infer(input_for(0))?;
+    }
+
+    let mut latencies = Vec::with_capacity(opts.requests);
+    let mut busy_secs = vec![0.0f64; m];
+    let mut bytes_total = 0u64;
+    let mut messages_total = 0u64;
+
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut collected = 0usize;
+    while collected < opts.requests {
+        if submitted < opts.requests && session.inflight() < depth {
+            session.submit(input_for(submitted))?;
+            submitted += 1;
+        } else {
+            // `collect` returns submission order (per-worker FIFO makes
+            // completion monotonic in ReqId), so the `collected` counter
+            // IS this result's 0-based measured index.
+            let (_, r) = session.collect()?;
+            latencies.push(r.stats.wall_secs);
+            for (dev, s) in r.stats.compute_secs.iter().enumerate() {
+                busy_secs[dev] += s;
+            }
+            bytes_total += r.stats.bytes_sent.iter().sum::<u64>();
+            messages_total += r.stats.messages_sent.iter().sum::<usize>() as u64;
+            on_result(collected, &r);
+            collected += 1;
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(ThroughputReport {
+        requests: opts.requests,
+        inflight: depth,
+        wall_secs,
+        requests_per_sec: opts.requests as f64 / wall_secs,
+        latency_p50: percentile(&latencies, 0.50),
+        latency_p95: percentile(&latencies, 0.95),
+        latency_p99: percentile(&latencies, 0.99),
+        device_busy_frac: busy_secs.iter().map(|&b| b / wall_secs).collect(),
+        bytes_total,
+        messages_total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::exec::weights::model_input;
+    use crate::exec::Backend;
+    use crate::model::zoo;
+    use crate::partition::Strategy;
+    use crate::pipeline;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn closed_loop_reports_complete_run() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        let mut session =
+            ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        let input = model_input(&model);
+        let mut seen = Vec::new();
+        let rep = serve_closed_loop(
+            &mut session,
+            &ServeOptions {
+                requests: 8,
+                inflight: 3,
+                warmup: 2,
+            },
+            |_| input.clone(),
+            |i, r| {
+                assert!(r.output.data.iter().all(|v| v.is_finite()));
+                seen.push(i);
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.requests, 8);
+        // on_result indices are the measured window's 0..N in order,
+        // independent of warm-up requests consuming session ReqIds.
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        assert!(rep.wall_secs > 0.0);
+        assert!(rep.requests_per_sec > 0.0);
+        assert!(rep.latency_p50 > 0.0 && rep.latency_p50 <= rep.latency_p99);
+        assert_eq!(rep.device_busy_frac.len(), cluster.m());
+        assert!(rep.bytes_total > 0 && rep.messages_total > 0);
+        // session is drained afterwards
+        assert_eq!(session.inflight(), 0);
+    }
+
+    #[test]
+    fn zero_requests_rejected() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        let mut session = ExecSession::new(&model, &plan, Backend::Reference).unwrap();
+        let input = model_input(&model);
+        let err = serve_closed_loop(
+            &mut session,
+            &ServeOptions {
+                requests: 0,
+                inflight: 1,
+                warmup: 0,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        );
+        assert!(err.is_err());
+    }
+}

@@ -69,6 +69,51 @@ fn exec_zero_threads_rejected() {
 }
 
 #[test]
+fn serve_closed_loop_quick() {
+    run(&[
+        "serve", "--model", "lenet", "--strategy", "iop", "--requests", "6", "--warmup", "1",
+        "--check",
+    ])
+    .unwrap();
+    run(&[
+        "serve", "--model", "lenet", "--strategy", "oc", "--backend", "fast", "--requests", "6",
+        "--inflight", "2", "--warmup", "1", "--json",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn serve_compare_serial_reports_both_depths() {
+    // Throughput ordering is not asserted here (CI's serve-smoke step
+    // does that with --assert-pipelined on a quiet runner) — this only
+    // exercises the two-run-one-session path end to end.
+    run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--requests",
+        "6",
+        "--warmup",
+        "1",
+        "--compare-serial",
+        "--check",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn serve_flag_validation() {
+    assert!(run(&["serve", "--model", "lenet", "--requests", "0"]).is_err());
+    assert!(run(&["serve", "--model", "lenet", "--inflight", "0"]).is_err());
+    assert!(run(&["serve", "--model", "lenet", "--backend", "gpu"]).is_err());
+    assert!(
+        run(&["serve", "--model", "lenet", "--backend", "reference", "--threads", "2"]).is_err()
+    );
+}
+
+#[test]
 fn emit_plans_writes_json() {
     let out = std::env::temp_dir().join("iop_test_plans.json");
     let out_s = out.to_str().unwrap();

@@ -34,7 +34,13 @@ fn single(
     slice: &SliceKind,
 ) -> CompiledDevice {
     CompiledDevice {
-        stages: vec![compile_slice(model, wb, model.stages()[si], slice, 1)],
+        stages: vec![std::sync::Arc::new(compile_slice(
+            model,
+            wb,
+            model.stages()[si],
+            slice,
+            1,
+        ))],
         threads: 1,
     }
 }

@@ -1,0 +1,305 @@
+//! Integration: the pipelined submit/collect engine.
+//!
+//! The request-tagged protocol under overlap is exercised with
+//! *distinct* inputs per request: if the tag-buffered mailboxes ever
+//! cross-delivered a tensor between requests, or a worker folded one
+//! request's partial into another's reduction, the affected output
+//! would differ from its per-request oracle — so the per-request
+//! equality assertions below are the cross-delivery check.
+//!
+//! Receives are sender-matched (`(req, from, stage, phase)` tags), which
+//! pins floating-point reduction order to peer index: pipelined
+//! execution must be *bit-identical* to serial execution, and the tests
+//! assert exact equality, not closeness.
+
+use iop::device::profiles;
+use iop::exec::compute::centralized_inference;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{Backend, ExecSession};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::tensor::{init, Tensor};
+
+/// Deterministic per-request input, distinct per index.
+fn request_input(model: &iop::model::Model, i: usize) -> Tensor {
+    init::input_tensor(
+        &format!("{}/serve-req-{i}", model.name),
+        model.input.c,
+        model.input.h,
+        model.input.w,
+    )
+}
+
+/// Pipelined (inflight = m) submit/collect produces bit-identical
+/// per-request outputs to serial request-at-a-time `infer` over a
+/// second session of the same plan.
+fn check_pipelined_matches_serial(
+    model: &iop::model::Model,
+    cluster: &iop::device::Cluster,
+    strategy: Strategy,
+    backend: Backend,
+    requests: usize,
+) {
+    let plan = pipeline::plan(model, cluster, strategy);
+    let inputs: Vec<Tensor> = (0..requests).map(|i| request_input(model, i)).collect();
+
+    let mut serial = ExecSession::with_inflight(model, &plan, backend.clone(), 1).unwrap();
+    let expected: Vec<Tensor> = inputs
+        .iter()
+        .map(|x| serial.infer(x.clone()).unwrap().output)
+        .collect();
+
+    let mut piped = ExecSession::new(model, &plan, backend).unwrap();
+    assert_eq!(piped.max_inflight(), plan.m, "default window should be m");
+    let ids: Vec<_> = inputs
+        .iter()
+        .map(|x| piped.submit(x.clone()).unwrap())
+        .collect();
+    for (k, &id) in ids.iter().enumerate() {
+        let r = piped.collect_req(id).unwrap();
+        assert_eq!(
+            r.output,
+            expected[k],
+            "{} {} m={}: request {k} not bit-identical under overlap (diff={})",
+            model.name,
+            strategy.name(),
+            cluster.m(),
+            r.output.max_abs_diff(&expected[k])
+        );
+    }
+    assert_eq!(piped.inflight(), 0);
+}
+
+#[test]
+fn pipelined_bit_identical_all_strategies_paper_cluster() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    for s in Strategy::all() {
+        check_pipelined_matches_serial(
+            &model,
+            &cluster,
+            s,
+            Backend::Compiled { threads: 1 },
+            6,
+        );
+    }
+}
+
+#[test]
+fn pipelined_bit_identical_all_strategies_heterogeneous_cluster() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::heterogeneous();
+    for s in Strategy::all() {
+        check_pipelined_matches_serial(
+            &model,
+            &cluster,
+            s,
+            Backend::Compiled { threads: 1 },
+            6,
+        );
+    }
+}
+
+#[test]
+fn pipelined_bit_identical_fast_and_reference_backends() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    check_pipelined_matches_serial(&model, &cluster, Strategy::Iop, Backend::Reference, 5);
+    check_pipelined_matches_serial(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        Backend::Fast { threads: 1 },
+        5,
+    );
+}
+
+/// Soak: `inflight = m` with randomized per-request inputs — every
+/// response must match the centralized oracle for *its own* input
+/// (mailbox tag-buffering never cross-delivers between requests), and
+/// the per-worker arenas must stay flat after warm-up even though up to
+/// m requests are in flight (requests are serial per worker, so the
+/// arena needs no lock — this is the tested invariant).
+#[test]
+fn soak_overlap_randomized_inputs_match_oracle_per_request() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+    let mut session =
+        ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+    let requests = 16;
+
+    // Warm the arenas with one serial request, then keep the window full.
+    let warm = session.infer(model_input(&model)).unwrap();
+    let warm_grows = warm.stats.arena_grows.clone();
+    assert!(warm_grows.iter().sum::<u64>() > 0);
+
+    let inputs: Vec<Tensor> = (0..requests).map(|i| request_input(&model, i)).collect();
+    let mut ids = std::collections::HashMap::new();
+    for (i, x) in inputs.iter().enumerate() {
+        let id = session.submit(x.clone()).unwrap();
+        assert!(
+            session.inflight() <= session.max_inflight(),
+            "backpressure must bound the window"
+        );
+        ids.insert(id, i);
+    }
+
+    let mut prev_id = None;
+    for _ in 0..requests {
+        let (id, r) = session.collect().unwrap();
+        if let Some(p) = prev_id {
+            assert!(id > p, "collect must return submission order");
+        }
+        prev_id = Some(id);
+        let i = ids[&id];
+        let expect = centralized_inference(&model, &wb, &inputs[i]);
+        assert!(
+            r.output.allclose(&expect, 1e-4, 1e-4),
+            "request {i}: diff from its own oracle {}",
+            r.output.max_abs_diff(&expect)
+        );
+        assert_eq!(
+            r.stats.arena_grows, warm_grows,
+            "request {i}: arena grew under overlap"
+        );
+    }
+    assert_eq!(session.inflight(), 0);
+}
+
+#[test]
+fn submit_backpressure_bounds_inflight() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let plan = pipeline::plan(&model, &cluster, Strategy::Oc);
+    let mut session =
+        ExecSession::with_inflight(&model, &plan, Backend::Reference, 2).unwrap();
+    let input = model_input(&model);
+    for _ in 0..6 {
+        session.submit(input.clone()).unwrap();
+        assert!(
+            session.inflight() <= 2,
+            "worker-side window must stay ≤ max_inflight"
+        );
+    }
+    // Everything submitted is eventually collectable — requests that
+    // completed inside submit's backpressure drain sit in the ready
+    // queue, nothing is lost.
+    let mut n = 0;
+    while session.inflight() > 0 || session.ready_count() > 0 {
+        session.collect().unwrap();
+        n += 1;
+    }
+    assert_eq!(n, 6);
+    assert!(session.collect().is_err());
+}
+
+#[test]
+fn interleaved_submit_collect_and_out_of_order_collect_req() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+    let mut session =
+        ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+
+    let x0 = request_input(&model, 0);
+    let x1 = request_input(&model, 1);
+    let x2 = request_input(&model, 2);
+    let id0 = session.submit(x0.clone()).unwrap();
+    let id1 = session.submit(x1.clone()).unwrap();
+    // Collect a *later* request first while an earlier one is in flight.
+    let r1 = session.collect_req(id1).unwrap();
+    // `infer` composes submit+collect_req and must work with requests
+    // still outstanding.
+    let r2 = session.infer(x2.clone()).unwrap();
+    let r0 = session.collect_req(id0).unwrap();
+    assert_eq!(session.inflight(), 0);
+
+    for (x, r) in [(&x0, &r0), (&x1, &r1), (&x2, &r2)] {
+        let expect = centralized_inference(&model, &wb, x);
+        assert!(
+            r.output.allclose(&expect, 1e-4, 1e-4),
+            "diff={}",
+            r.output.max_abs_diff(&expect)
+        );
+    }
+}
+
+#[test]
+fn collect_errors_when_nothing_in_flight() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+    let mut session = ExecSession::new(&model, &plan, Backend::Reference).unwrap();
+    assert!(session.collect().is_err());
+    assert!(session.collect_req(7).is_err());
+    // A real request still works afterwards.
+    let r = session.infer(model_input(&model)).unwrap();
+    assert!(r.output.data.iter().all(|v| v.is_finite()));
+}
+
+/// A worker error fails the request fast instead of hanging, poisons
+/// the session (further submits refused), and dropping the poisoned
+/// session must not deadlock. The pjrt backend with a nonexistent
+/// artifacts dir errors at worker init either way (feature off: stub
+/// runtime error; feature on: manifest load error), which exercises the
+/// whole abort path with real worker threads.
+#[test]
+fn worker_error_poisons_session_and_drop_does_not_hang() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+    let mut session = ExecSession::new(
+        &model,
+        &plan,
+        Backend::Pjrt {
+            artifacts_dir: "/nonexistent-artifacts-dir".to_string(),
+        },
+    )
+    .unwrap();
+    assert!(!session.poisoned());
+    let err = session.infer(model_input(&model));
+    assert!(err.is_err(), "init-failed workers must surface an error");
+    assert!(session.poisoned());
+    assert!(
+        session.submit(model_input(&model)).is_err(),
+        "poisoned session must refuse new submits"
+    );
+    assert_eq!(session.inflight(), 0);
+    // Implicit: dropping `session` here must return (Drop detaches the
+    // workers instead of joining possibly-wedged ones) — a hang would
+    // time the test run out.
+}
+
+/// Request ids keep increasing across the session and stats stay
+/// per-request under overlap (each request reports its own wire/compute
+/// accounting, not an aggregate).
+#[test]
+fn per_request_stats_under_overlap() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let plan = pipeline::plan(&model, &cluster, Strategy::Oc);
+    let mut session =
+        ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+    let input = model_input(&model);
+    let serial = session.infer(input.clone()).unwrap();
+    let serial_msgs: usize = serial.stats.messages_sent.iter().sum();
+    let serial_bytes: u64 = serial.stats.bytes_sent.iter().sum();
+    assert!(serial_msgs > 0 && serial_bytes > 0);
+
+    let ids: Vec<_> = (0..4).map(|_| session.submit(input.clone()).unwrap()).collect();
+    assert!(ids.windows(2).all(|w| w[1] == w[0] + 1));
+    for _ in &ids {
+        let (_, r) = session.collect().unwrap();
+        assert_eq!(
+            r.stats.messages_sent.iter().sum::<usize>(),
+            serial_msgs,
+            "per-request message accounting must not leak across requests"
+        );
+        assert_eq!(r.stats.bytes_sent.iter().sum::<u64>(), serial_bytes);
+        assert!(r.stats.wall_secs > 0.0);
+    }
+}
