@@ -34,9 +34,21 @@ use iop::model::zoo;
 use iop::partition::Strategy;
 use iop::pipeline;
 use iop::sim::{simulate, SimConfig};
+use iop::tensor::kernels;
 
 fn main() {
     let cluster = profiles::paper_default();
+    // Name the dispatched code path up front: every GEMM/matvec/pool
+    // number below is attributable to this microkernel.
+    println!(
+        "GEMM microkernel: {} (supported on this CPU: {})",
+        kernels::selected().describe(),
+        kernels::supported()
+            .iter()
+            .map(|k| k.describe())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     let quick = std::env::var("IOP_BENCH_QUICK").is_ok();
     let b = if quick {
         Bencher::quick()
@@ -185,6 +197,39 @@ fn main() {
             "compiled-plan steady-state speedup vs fast (vgg_mini IOP): {:.2}x",
             fast.median / comp.median
         );
+    }
+
+    // SIMD dispatch ablation: the same compiled steady-state case with
+    // the microkernel forced to the portable scalar tile. Paired with
+    // the dispatched case above (same perf-smoke run), this tracks the
+    // per-core SIMD win in BENCH_hotpath.json; CI gates the pair at
+    // >= 2x on AVX2 runners. Forcing happens between sessions — the
+    // scalar session packs AND runs scalar, then auto-detection is
+    // restored before any later case.
+    println!("\n== SIMD microkernel dispatch (compiled steady-state, scalar-forced) ==");
+    {
+        let model = zoo::vgg_mini();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        kernels::force(Some(kernels::by_name("scalar").expect("scalar always compiled in")));
+        {
+            let mut session =
+                ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+            let input = model_input(&model);
+            bench!("session.infer vgg_mini IOP (compiled, steady, scalar kernel)", || {
+                session.infer(input.clone()).unwrap()
+            });
+        }
+        kernels::force(None);
+        if let (Some(scalar), Some(disp)) = (
+            rep.get("session.infer vgg_mini IOP (compiled, steady, scalar kernel)"),
+            rep.get("session.infer vgg_mini IOP (compiled, steady)"),
+        ) {
+            println!(
+                "SIMD dispatch speedup vs scalar ({}, vgg_mini IOP compiled steady): {:.2}x",
+                kernels::selected().describe(),
+                scalar.median / disp.median
+            );
+        }
     }
 
     // Steady-state serving *throughput*: a closed loop of N requests at

@@ -107,6 +107,13 @@ impl BenchReport {
                 "generated_by",
                 Json::str("cargo bench --bench perf_hotpath"),
             ),
+            // The auto-selected microkernel on the machine that produced
+            // these numbers (individual cases may force a variant — the
+            // case name says so, e.g. "(..., scalar kernel)").
+            (
+                "kernel_isa",
+                Json::str(crate::tensor::kernels::selected().describe()),
+            ),
             ("cases", Json::Arr(cases)),
         ])
     }

@@ -14,6 +14,7 @@ use crate::model::{zoo, Model};
 use crate::partition::Strategy;
 use crate::pipeline;
 use crate::sim::{simulate as run_sim, SimConfig};
+use crate::tensor::kernels;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -90,6 +91,25 @@ fn backend_tag(backend: &Backend) -> String {
         Backend::Compiled { threads } => format!("compiled({threads}t)"),
         Backend::Pjrt { .. } => "pjrt".to_string(),
     }
+}
+
+/// Human-readable kernel path: ISA + tile geometry where the ISA names a
+/// dispatched microkernel (e.g. `avx2 6x16`), the bare tag otherwise.
+fn kernel_desc_str(isa: &str) -> String {
+    match kernels::by_name(isa) {
+        Some(k) => k.describe(),
+        None => isa.to_string(),
+    }
+}
+
+/// Machine-readable kernel identity fields for `--json` outputs
+/// (spliced into the top-level object so CI can grep `kernel_isa`).
+fn kernel_fields(isa: &str) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![("kernel_isa", Json::str(isa.to_string()))];
+    if let Some(k) = kernels::by_name(isa) {
+        fields.push(("kernel_tile", Json::str(format!("{}x{}", k.mr, k.nr))));
+    }
+    fields
 }
 
 /// `iop models` — Table 1.
@@ -325,11 +345,15 @@ pub fn sweep(a: &mut Args) -> Result<()> {
 }
 
 /// `iop exec` — real distributed execution with correctness check.
+/// `--json` emits a machine-readable report including the dispatched
+/// GEMM microkernel (`kernel_isa`/`kernel_tile`), which CI uses to
+/// assert an x86-64 runner did not fall back to the scalar tile.
 pub fn exec(a: &mut Args) -> Result<()> {
     let model = model_from_args(a)?;
     let strategy = strategy_from_args(a)?;
     let cluster = cluster_from_args(a)?;
     let backend = backend_from_args(a, "reference")?;
+    let json = a.bool("json");
     a.finish()?;
 
     let plan = pipeline::plan(&model, &cluster, strategy);
@@ -347,26 +371,58 @@ pub fn exec(a: &mut Args) -> Result<()> {
         },
     )?;
     let diff = r.output.max_abs_diff(&expect);
-    println!(
-        "{} / {} on {} devices [{}]: wall {} | compute {:?} ms | {} msgs, {} moved",
-        model.name,
-        strategy.name(),
-        cluster.m(),
-        backend_tag,
-        fmt_secs(r.stats.wall_secs),
-        r.stats
-            .compute_secs
-            .iter()
-            .map(|s| (s * 1e3 * 100.0).round() / 100.0)
-            .collect::<Vec<_>>(),
-        r.stats.messages_sent.iter().sum::<usize>(),
-        fmt_bytes(r.stats.bytes_sent.iter().sum()),
-    );
-    println!("max |distributed - centralized| = {diff:.3e}");
-    if diff > 1e-3 {
+    let ok = diff <= 1e-3;
+    if json {
+        let mut fields = vec![
+            ("model", Json::str(model.name.clone())),
+            ("strategy", Json::str(strategy.name())),
+            ("devices", Json::num(cluster.m() as f64)),
+            ("backend", Json::str(backend_tag)),
+        ];
+        fields.extend(kernel_fields(r.stats.kernel_isa));
+        fields.extend([
+            ("wall_secs", Json::num(r.stats.wall_secs)),
+            (
+                "compute_secs",
+                Json::Arr(r.stats.compute_secs.iter().map(|&s| Json::num(s)).collect()),
+            ),
+            (
+                "messages",
+                Json::num(r.stats.messages_sent.iter().sum::<usize>() as f64),
+            ),
+            (
+                "bytes",
+                Json::num(r.stats.bytes_sent.iter().sum::<u64>() as f64),
+            ),
+            ("max_abs_diff", Json::num(diff as f64)),
+            ("ok", Json::Bool(ok)),
+        ]);
+        println!("{}", Json::obj(fields).to_string_pretty());
+    } else {
+        println!(
+            "{} / {} on {} devices [{}, kernel {}]: wall {} | compute {:?} ms | {} msgs, {} moved",
+            model.name,
+            strategy.name(),
+            cluster.m(),
+            backend_tag,
+            kernel_desc_str(r.stats.kernel_isa),
+            fmt_secs(r.stats.wall_secs),
+            r.stats
+                .compute_secs
+                .iter()
+                .map(|s| (s * 1e3 * 100.0).round() / 100.0)
+                .collect::<Vec<_>>(),
+            r.stats.messages_sent.iter().sum::<usize>(),
+            fmt_bytes(r.stats.bytes_sent.iter().sum()),
+        );
+        println!("max |distributed - centralized| = {diff:.3e}");
+    }
+    if !ok {
         bail!("distributed output diverged from the centralized model");
     }
-    println!("OK — distributed inference matches the centralized model");
+    if !json {
+        println!("OK — distributed inference matches the centralized model");
+    }
     Ok(())
 }
 
@@ -488,24 +544,28 @@ pub fn serve(a: &mut Args) -> Result<()> {
     }
 
     if json {
-        let out = Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::str(model.name.clone())),
             ("strategy", Json::str(strategy.name())),
             ("backend", Json::str(backend_tag(&backend))),
+        ];
+        fields.extend(kernel_fields(session.kernel_isa()));
+        fields.extend([
             (
                 "runs",
                 Json::Arr(runs.iter().map(|(_, r)| r.to_json()).collect()),
             ),
             ("max_abs_diff", Json::num(max_diff)),
         ]);
-        println!("{}", out.to_string_pretty());
+        println!("{}", Json::obj(fields).to_string_pretty());
     } else {
         println!(
-            "{} / {} on {} devices [{}]: closed loop, {} requests/run",
+            "{} / {} on {} devices [{}, kernel {}]: closed loop, {} requests/run",
             model.name,
             strategy.name(),
             cluster.m(),
             backend_tag(&backend),
+            kernel_desc_str(session.kernel_isa()),
             requests,
         );
         let mut t = Table::new(&[

@@ -52,9 +52,12 @@ COMMANDS:
                                  Device-count scaling study (extension)
   exec       --model M --strategy S
              [--backend reference|fast|compiled|pjrt] [--threads N]
+             [--json]
                                  Real distributed execution, checked
                                  against the centralized model (compiled
-                                 = prepacked weights + scratch arenas)
+                                 = prepacked weights + scratch arenas);
+                                 --json reports the dispatched GEMM
+                                 kernel (kernel_isa / kernel_tile)
   serve      --model M --strategy S [--backend ...] [--threads N]
              [--requests N] [--inflight K] [--warmup W] [--check]
              [--compare-serial] [--assert-pipelined]
@@ -93,6 +96,14 @@ EXEC BACKENDS (`iop exec|serve --backend ...`):
                        [serve default]
   pjrt                 AOT XLA artifacts via PJRT-CPU (--artifacts DIR;
                        needs the `pjrt` build feature)
+
+SIMD KERNEL DISPATCH (fast/compiled backends):
+  The GEMM/matvec/pool inner loops select an explicit-SIMD microkernel
+  at startup by runtime CPU detection — AVX2+FMA (6x16 tile) on x86-64,
+  NEON (8x8) on aarch64, portable scalar (4x16) otherwise. `iop exec`,
+  `iop serve` and the benches print the selected ISA + tile so numbers
+  are attributable to a code path. Override with IOP_KERNEL=scalar|
+  avx2|neon (unsupported values abort with the supported list).
 
 OUTPUT:
   --json               machine-readable output where supported

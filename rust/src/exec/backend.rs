@@ -5,7 +5,12 @@
 //! worker in the thread harness) dispatches through [`ComputeBackend`],
 //! so distributed execution can run on the fast kernels while
 //! correctness checks keep pinning against the naive reference ops
-//! (`tensor::ops`), which remain the independent numerical oracle.
+//! (`tensor::ops`), which remain the independent numerical oracle. The
+//! Fast path's innermost loops (GEMM register tile, dense matvec,
+//! maxpool/ReLU elementwise) additionally dispatch through
+//! `tensor::kernels` to a runtime-detected SIMD variant (AVX2+FMA /
+//! NEON / portable scalar) — [`ComputeBackend::kernel_desc`] names the
+//! selected path for reporting.
 //!
 //! Parallelism layering: the harness already runs one worker thread per
 //! cooperative device (per-shard workers), so workers default to
@@ -21,7 +26,7 @@
 //! `Runner::Compiled` path and falls back to these kernels for the
 //! stage tails (pool/ReLU, which hold no weights to prepack).
 
-use crate::tensor::{im2col, ops, Tensor};
+use crate::tensor::{im2col, kernels, ops, Tensor};
 
 /// Which host kernels compute conv/dense/pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -52,6 +57,17 @@ impl ComputeBackend {
         match self {
             ComputeBackend::Reference => "reference",
             ComputeBackend::Fast { .. } => "fast",
+        }
+    }
+
+    /// The microkernel path this backend's conv/dense/pool calls run on:
+    /// the runtime-dispatched SIMD kernel for Fast (`tensor::kernels`,
+    /// e.g. `avx2 6x16`), the scalar loop nests for Reference. Surfaced
+    /// so reported numbers are attributable to a code path.
+    pub fn kernel_desc(&self) -> String {
+        match self {
+            ComputeBackend::Reference => "reference scalar ops".to_string(),
+            ComputeBackend::Fast { .. } => kernels::selected().describe(),
         }
     }
 
@@ -97,15 +113,24 @@ impl ComputeBackend {
         }
     }
 
-    /// Max pooling. Memory-bound either way; the reference loop serves
-    /// both backends.
+    /// Max pooling. The Fast path runs the dispatched two-pass SIMD
+    /// reduce (`tensor::kernels::maxpool2d` — vertical stride-1 vector
+    /// max, then a horizontal window reduce); `max` is exact, so both
+    /// backends agree bitwise and the reference loop stays the oracle.
     pub fn maxpool2d(&self, input: &Tensor, k: usize, stride: usize) -> Tensor {
-        ops::maxpool2d(input, k, stride)
+        match self {
+            ComputeBackend::Reference => ops::maxpool2d(input, k, stride),
+            ComputeBackend::Fast { .. } => kernels::maxpool2d(input, k, stride),
+        }
     }
 
-    /// Elementwise ReLU.
+    /// Elementwise ReLU (exact on both backends; Fast uses the
+    /// dispatched SIMD map).
     pub fn relu(&self, input: &Tensor) -> Tensor {
-        ops::relu(input)
+        match self {
+            ComputeBackend::Reference => ops::relu(input),
+            ComputeBackend::Fast { .. } => kernels::relu(input),
+        }
     }
 }
 
@@ -141,6 +166,37 @@ mod tests {
         let rd = ComputeBackend::Reference.dense(&xv, &wd, Some(&bd), 7, false);
         let fd = ComputeBackend::fast().dense(&xv, &wd, Some(&bd), 7, false);
         assert!(fd.allclose(&rd, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn fast_pool_and_relu_match_reference_bitwise() {
+        // max/relu involve no rounding: the SIMD dispatch must agree
+        // with the reference loops exactly, not just within tolerance.
+        let x = Tensor::from_vec(3, 9, 8, rand_vec(3 * 9 * 8, 7));
+        assert_eq!(
+            ComputeBackend::fast().maxpool2d(&x, 2, 2),
+            ComputeBackend::Reference.maxpool2d(&x, 2, 2)
+        );
+        assert_eq!(
+            ComputeBackend::fast().maxpool2d(&x, 3, 2),
+            ComputeBackend::Reference.maxpool2d(&x, 3, 2)
+        );
+        assert_eq!(
+            ComputeBackend::fast().relu(&x),
+            ComputeBackend::Reference.relu(&x)
+        );
+    }
+
+    #[test]
+    fn kernel_desc_names_a_path() {
+        assert_eq!(
+            ComputeBackend::Reference.kernel_desc(),
+            "reference scalar ops"
+        );
+        let desc = ComputeBackend::fast().kernel_desc();
+        let sel = crate::tensor::kernels::selected();
+        assert_eq!(desc, sel.describe());
+        assert!(desc.starts_with(sel.name()));
     }
 
     #[test]

@@ -85,16 +85,23 @@ pub struct ExecStats {
     /// (`Backend::Compiled` only; 0 elsewhere). Flat across steady-state
     /// requests ⇔ the conv/dense hot loop performed no heap allocations.
     pub arena_grows: Vec<u64>,
+    /// GEMM microkernel ISA the session's workers dispatch to
+    /// (`tensor::kernels` — `"scalar"`, `"avx2"`, or `"neon"`, recorded
+    /// at session creation so compiled plans report the kernel they were
+    /// packed for). `"reference"`/`"pjrt"` for backends that do not
+    /// route through the SIMD dispatch.
+    pub kernel_isa: &'static str,
 }
 
 impl ExecStats {
-    fn zeroed(m: usize) -> ExecStats {
+    fn zeroed(m: usize, kernel_isa: &'static str) -> ExecStats {
         ExecStats {
             wall_secs: 0.0,
             bytes_sent: vec![0; m],
             messages_sent: vec![0; m],
             compute_secs: vec![0.0; m],
             arena_grows: vec![0; m],
+            kernel_isa,
         }
     }
 }
@@ -309,6 +316,9 @@ struct PendingReq {
 pub struct ExecSession {
     m: usize,
     max_inflight: usize,
+    /// Microkernel ISA stamped into every request's `ExecStats` (see
+    /// [`ExecStats::kernel_isa`]); resolved once at session creation.
+    kernel_isa: &'static str,
     ctrl_tx: Vec<Sender<Control>>,
     done_rx: Receiver<(usize, usize, Result<WorkerOut>)>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -358,6 +368,13 @@ impl ExecSession {
     ) -> Result<ExecSession> {
         plan.validate(model).map_err(|e| anyhow!(e))?;
         let m = plan.m;
+        let kernel_isa = match &backend {
+            Backend::Reference => "reference",
+            Backend::Fast { .. } | Backend::Compiled { .. } => {
+                crate::tensor::kernels::selected().name()
+            }
+            Backend::Pjrt { .. } => "pjrt",
+        };
         let model = Arc::new(model.clone());
         let plan = Arc::new(plan.clone());
         let wb = Arc::new(WeightBundle::generate(&model));
@@ -407,6 +424,7 @@ impl ExecSession {
         Ok(ExecSession {
             m,
             max_inflight: max_inflight.max(1),
+            kernel_isa,
             ctrl_tx,
             done_rx,
             handles,
@@ -421,6 +439,15 @@ impl ExecSession {
     /// Number of cooperative devices (worker threads).
     pub fn devices(&self) -> usize {
         self.m
+    }
+
+    /// Microkernel ISA this session's workers dispatch to, resolved at
+    /// session creation (the same stamp every request's
+    /// [`ExecStats::kernel_isa`] carries) — report labels should read
+    /// this rather than re-deriving from the global selection, which may
+    /// have been forced elsewhere since.
+    pub fn kernel_isa(&self) -> &'static str {
+        self.kernel_isa
     }
 
     /// Requests submitted and still being processed by the workers
@@ -485,7 +512,7 @@ impl ExecSession {
                 t0: Instant::now(),
                 remaining: self.m,
                 output: None,
-                stats: ExecStats::zeroed(self.m),
+                stats: ExecStats::zeroed(self.m, self.kernel_isa),
                 last_finish: None,
             },
         );
@@ -1316,6 +1343,21 @@ mod tests {
             let r = session.infer(input.clone()).unwrap();
             assert!(r.output.allclose(&expect, 1e-4, 1e-5), "request {i}");
             assert_eq!(r.stats.arena_grows, warm, "request {i} grew an arena");
+        }
+    }
+
+    #[test]
+    fn stats_report_the_dispatched_kernel_isa() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let input = model_input(&m);
+        let mut rf = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        assert_eq!(rf.infer(input.clone()).unwrap().stats.kernel_isa, "reference");
+        let sel = crate::tensor::kernels::selected().name();
+        for backend in [Backend::Fast { threads: 1 }, Backend::Compiled { threads: 1 }] {
+            let mut s = ExecSession::new(&m, &plan, backend).unwrap();
+            assert_eq!(s.infer(input.clone()).unwrap().stats.kernel_isa, sel);
         }
     }
 

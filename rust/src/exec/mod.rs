@@ -19,7 +19,10 @@
 //!    checked against.
 //!  * [`Backend::Fast`] — blocked im2col+GEMM host kernels
 //!    (`tensor::gemm` / `tensor::im2col`) with fused bias+ReLU epilogues
-//!    and optional intra-worker threading over output-channel blocks.
+//!    and optional intra-worker threading over output-channel blocks;
+//!    the inner register tiles dispatch through `tensor::kernels` to a
+//!    runtime-detected SIMD variant (AVX2+FMA / NEON / scalar), stamped
+//!    into [`ExecStats`] as `kernel_isa`.
 //!  * [`Backend::Compiled`] — the Fast kernels over a *compiled plan*
 //!    (`exec::prepack`): weights sliced + prepacked into GEMM micro-panels
 //!    once at session creation, im2col/pack scratch in a per-worker

@@ -20,7 +20,8 @@
 //! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts built
 //!   by `python/compile/aot.py`;
 //! * [`tensor`] — host tensors, slicing, deterministic init (mirrored in
-//!   python);
+//!   python), and the compute spine: blocked GEMM/im2col over
+//!   runtime-dispatched SIMD microkernels (`tensor::kernels`);
 //! * [`metrics`], [`bench`], [`testing`], [`util`] — reporting and the
 //!   in-house substrates (JSON, PRNG, tables, bench harness, property
 //!   testing) this offline build provides for itself.

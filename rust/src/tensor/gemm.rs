@@ -5,20 +5,23 @@
 //! lowers onto it through im2col (`tensor::im2col`), dense layers use the
 //! [`matvec`] special case.
 //!
-//! Design (BLIS-style, safe Rust only — no intrinsics, no dependencies):
+//! Design (BLIS-style):
 //!  * three-level blocking: `NC`-wide column panels of B, `KC`-deep k
 //!    blocks (the packed B panel stays cache-resident across the whole
 //!    row sweep), `MC`-tall row blocks of A;
-//!  * packing: B is repacked into `KC×NR` column micro-panels and A into
-//!    `KC×MR` row micro-panels so the microkernel streams both
+//!  * packing: B is repacked into `nr`-wide column micro-panels and A
+//!    into `mr`-tall row micro-panels so the microkernel streams both
 //!    contiguously, independent of the original leading dimensions;
-//!  * an `MR×NR` register-tile microkernel over fixed-size arrays
-//!    (`[[f32; NR]; MR]`, `chunks_exact` + `try_into` to arrays) so LLVM
-//!    keeps the accumulators in SIMD registers and autovectorizes the
-//!    fma loop;
+//!  * the `mr×nr` register tile itself is ISA-specific and dispatched at
+//!    runtime (`tensor::kernels`): explicit AVX2+FMA / NEON intrinsics
+//!    where detected, the portable autovectorized scalar tile otherwise.
+//!    The *kernel owns the tile geometry* — all panel layouts here are
+//!    derived from the selected [`Kernel`]'s `mr`/`nr`, and every entry
+//!    point has a `*_with` variant taking an explicit kernel so the
+//!    ISA-parity tests can sweep every compiled-in variant;
 //!  * the epilogue (per-row bias, ReLU) is fused into the writeback of
 //!    the *final* k block — the finished output tile is touched exactly
-//!    once;
+//!    once (vectorized inside the SIMD kernels);
 //!  * [`gemm_parallel`] adds intra-device parallelism with
 //!    `std::thread::scope` over contiguous row (output-channel) blocks:
 //!    disjoint `&mut` C slices per thread, B shared read-only;
@@ -27,32 +30,36 @@
 //!    layout at plan-compile time, and per-call B panels live in a
 //!    caller-owned grow-only [`PackScratch`] — steady-state calls make
 //!    no heap allocations and skip the per-call weight packing entirely.
+//!    A `PackedA` records *which* kernel it was packed for, so compiled
+//!    plans always run on a microkernel matching their panel layout even
+//!    if the global selection is overridden afterwards.
 
-/// Microkernel tile height (rows of A / C).
-pub const MR: usize = 4;
-/// Microkernel tile width (columns of B / C).
-pub const NR: usize = 16;
-/// Row-block height (multiple of `MR`).
+use super::kernels::{self, Kernel};
+
+pub use super::kernels::Epilogue;
+
+/// Row-block height cap (rounded down to the kernel's `mr` multiple).
 const MC: usize = 64;
 /// k-block depth.
 const KC: usize = 256;
-/// Column-panel width (multiple of `NR`).
+/// Column-panel width cap (the kernel's `nr` divides it for every
+/// compiled-in geometry: 512 = 32·16 = 64·8).
 const NC: usize = 512;
 
-/// Epilogue fused into the last k-block writeback.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Epilogue<'a> {
-    /// Per-output-row (= output-channel) bias, length `m`.
-    pub bias: Option<&'a [f32]>,
-    /// Apply `max(0, ·)` to the final values.
-    pub relu: bool,
+/// Default row-block height for `kern`: `MC` rounded down to a positive
+/// `mr` multiple (e.g. 64 for the 4- and 8-tall tiles, 60 for AVX2's
+/// 6-tall tile).
+fn row_block(kern: &Kernel) -> usize {
+    (MC / kern.mr).max(1) * kern.mr
 }
 
-/// An `m×k` matrix prepacked into the GEMM's `KC`-deep, `MR`-tall row
+/// An `m×k` matrix prepacked into the GEMM's `KC`-deep, `mr`-tall row
 /// micro-panel layout ([`pack_a`]), blocked `(k block, row block)` in the
-/// exact order the kernel walks them. Packing weights once at plan-compile
-/// time removes the per-call A packing from [`gemm_prepacked`], which is
-/// the steady-state serving hot path (`exec::prepack`).
+/// exact order the kernel walks them. Packing weights once at
+/// plan-compile time removes the per-call A packing from
+/// [`gemm_prepacked`], which is the steady-state serving hot path
+/// (`exec::prepack`). The packing kernel is recorded so the prepacked
+/// layout and the microkernel that consumes it always agree.
 #[derive(Debug, Clone)]
 pub struct PackedA {
     /// Rows of the original matrix (output channels).
@@ -64,31 +71,48 @@ pub struct PackedA {
     offsets: Vec<usize>,
     /// Row blocks per k block (`m.div_ceil(rb)`).
     n_row_blocks: usize,
-    /// Row-block height (`MR`-multiple; `MC` by default, smaller when
-    /// packed for more threads than `MC`-tall blocks would allow).
+    /// Row-block height (`mr`-multiple; [`row_block`] by default, smaller
+    /// when packed for more threads than that would allow).
     rb: usize,
+    /// The microkernel this matrix was packed for (tile geometry owner).
+    kernel: &'static Kernel,
 }
 
 impl PackedA {
-    /// Pack `a` (`m×k` row-major) with the default `MC` row blocks.
-    /// Ragged edges are zero-padded exactly as the per-call packer does,
-    /// so results are bit-identical to [`gemm`].
+    /// Pack `a` (`m×k` row-major) for the *selected* kernel with the
+    /// default row blocks. Ragged edges are zero-padded exactly as the
+    /// per-call packer does, so results are bit-identical to [`gemm`].
     pub fn pack(m: usize, k: usize, a: &[f32]) -> PackedA {
-        Self::pack_with_rows(m, k, a, MC)
+        let kern = kernels::selected();
+        Self::pack_with_rows(kern, m, k, a, row_block(kern))
     }
 
     /// Pack with a row-block height sized so at least `threads` row
-    /// blocks exist whenever `m` allows it (`MR` granularity) — without
+    /// blocks exist whenever `m` allows it (`mr` granularity) — without
     /// this, a matrix shorter than `threads·MC` rows could not use its
     /// full row-split parallelism in [`gemm_prepacked`].
     pub fn pack_for_threads(m: usize, k: usize, a: &[f32], threads: usize) -> PackedA {
-        let rb = m.div_ceil(threads.max(1)).div_ceil(MR) * MR;
-        Self::pack_with_rows(m, k, a, rb.clamp(MR, MC))
+        Self::pack_with(kernels::selected(), m, k, a, threads)
     }
 
-    fn pack_with_rows(m: usize, k: usize, a: &[f32], rb: usize) -> PackedA {
+    /// [`PackedA::pack_for_threads`] against an explicit kernel variant
+    /// (ISA-parity tests / side-by-side benches).
+    pub fn pack_with(
+        kern: &'static Kernel,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        threads: usize,
+    ) -> PackedA {
+        let mr = kern.mr;
+        let rb = m.div_ceil(threads.max(1)).div_ceil(mr) * mr;
+        Self::pack_with_rows(kern, m, k, a, rb.clamp(mr, row_block(kern)))
+    }
+
+    fn pack_with_rows(kern: &'static Kernel, m: usize, k: usize, a: &[f32], rb: usize) -> PackedA {
         assert_eq!(a.len(), m * k, "pack: A must be m*k");
-        debug_assert!(rb >= MR && rb % MR == 0, "row block must be an MR multiple");
+        let mr = kern.mr;
+        debug_assert!(rb >= mr && rb % mr == 0, "row block must be an mr multiple");
         let n_row_blocks = m.div_ceil(rb);
         let mut data = Vec::new();
         let mut offsets = Vec::new();
@@ -98,8 +122,8 @@ impl PackedA {
                 let mc = rb.min(m - ic);
                 let start = data.len();
                 offsets.push(start);
-                data.resize(start + mc.div_ceil(MR) * MR * kc, 0.0);
-                pack_a(&mut data[start..], a, k, ic, mc, pc, kc);
+                data.resize(start + mc.div_ceil(mr) * mr * kc, 0.0);
+                pack_a(&mut data[start..], a, k, ic, mc, pc, kc, mr);
             }
         }
         PackedA {
@@ -109,12 +133,18 @@ impl PackedA {
             offsets,
             n_row_blocks,
             rb,
+            kernel: kern,
         }
     }
 
     /// Packed size in bytes (deployment reporting).
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
+    }
+
+    /// The microkernel this matrix was packed for.
+    pub fn kernel(&self) -> &'static Kernel {
+        self.kernel
     }
 
     /// The packed panel group of `(k block pc_idx, row block ic_idx)`.
@@ -167,10 +197,11 @@ impl PackScratch {
 /// `c += pa·b`, then apply `ep` — [`gemm`] with the A (weight) packing
 /// hoisted out ([`PackedA::pack`], done once per plan) and the B panels
 /// packed into the caller's grow-only [`PackScratch`], so steady-state
-/// calls allocate nothing. `threads > 1` row-splits at the pack-time
-/// row-block granularity over `std::thread::scope` (disjoint `&mut` C
-/// slices, one scratch buffer per thread) — pack with
-/// [`PackedA::pack_for_threads`] so short matrices still split.
+/// calls allocate nothing. Runs on the microkernel `pa` was packed for.
+/// `threads > 1` row-splits at the pack-time row-block granularity over
+/// `std::thread::scope` (disjoint `&mut` C slices, one scratch buffer
+/// per thread) — pack with [`PackedA::pack_for_threads`] so short
+/// matrices still split.
 pub fn gemm_prepacked(
     pa: &PackedA,
     n: usize,
@@ -181,6 +212,7 @@ pub fn gemm_prepacked(
     scratch: &mut PackScratch,
 ) {
     let (m, k) = (pa.m, pa.k);
+    let kern = pa.kernel;
     assert_eq!(b.len(), k * n, "gemm: B must be k*n");
     assert_eq!(c.len(), m * n, "gemm: C must be m*n");
     if let Some(bias) = ep.bias {
@@ -193,7 +225,8 @@ pub fn gemm_prepacked(
         epilogue_only(n, c, ep);
         return;
     }
-    let bpack_len = NC.min(n).div_ceil(NR) * NR * KC.min(k);
+    let nr = kern.nr;
+    let bpack_len = NC.min(n).div_ceil(nr) * nr * KC.min(k);
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     let t = if flops < 2e6 {
         1
@@ -256,31 +289,34 @@ fn gemm_prepacked_rows(
     bpack: &mut [f32],
 ) {
     let k = pa.k;
+    let kern = pa.kernel;
+    let (mr, nr) = (kern.mr, kern.nr);
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
-        let n_panels = nc.div_ceil(NR);
+        let n_panels = nc.div_ceil(nr);
         for (pc_idx, pc) in (0..k).step_by(KC).enumerate() {
             let kc = KC.min(k - pc);
             let last_k = pc + kc == k;
-            pack_b(bpack, b, n, jc, nc, pc, kc);
+            pack_b(bpack, b, n, jc, nc, pc, kc, nr);
             for blk in 0..n_blks {
                 let ic_global = (row_blk0 + blk) * pa.rb;
                 let mc = pa.rb.min(pa.m - ic_global);
                 let ap_block = pa.block(pc_idx, row_blk0 + blk);
                 let local_base = blk * pa.rb;
-                let n_tiles = mc.div_ceil(MR);
+                let n_tiles = mc.div_ceil(mr);
                 for it in 0..n_tiles {
-                    let i0 = it * MR;
-                    let rows = MR.min(mc - i0);
-                    let ap = &ap_block[it * kc * MR..(it + 1) * kc * MR];
+                    let i0 = it * mr;
+                    let rows = mr.min(mc - i0);
+                    let ap = &ap_block[it * kc * mr..(it + 1) * kc * mr];
                     for jt in 0..n_panels {
-                        let j0 = jt * NR;
-                        let cols = NR.min(nc - j0);
-                        let bp = &bpack[jt * kc * NR..(jt + 1) * kc * NR];
+                        let j0 = jt * nr;
+                        let cols = nr.min(nc - j0);
+                        let bp = &bpack[jt * kc * nr..(jt + 1) * kc * nr];
                         let tile_ep = if last_k { Some(ep) } else { None };
-                        microkernel(
+                        kern.tile(
                             ap,
                             bp,
+                            kc,
                             c_blk,
                             n,
                             local_base + i0,
@@ -296,9 +332,25 @@ fn gemm_prepacked_rows(
     }
 }
 
-/// `c += a·b`, then apply `ep` to the finished values. Callers that want
-/// a plain product must pass a zero-filled `c`. Panics on size mismatch.
+/// `c += a·b`, then apply `ep` to the finished values, on the runtime-
+/// selected microkernel. Callers that want a plain product must pass a
+/// zero-filled `c`. Panics on size mismatch.
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], ep: Epilogue) {
+    gemm_with(kernels::selected(), m, k, n, a, b, c, ep)
+}
+
+/// [`gemm`] on an explicit kernel variant (ISA-parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    kern: &Kernel,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue,
+) {
     assert_eq!(a.len(), m * k, "gemm: A must be m*k");
     assert_eq!(b.len(), k * n, "gemm: B must be k*n");
     assert_eq!(c.len(), m * n, "gemm: C must be m*n");
@@ -312,33 +364,35 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], e
         epilogue_only(n, c, ep);
         return;
     }
+    let (mr, nr) = (kern.mr, kern.nr);
+    let rb = row_block(kern);
     // Packing buffers sized to the actual problem, not full block
     // capacity — small shard calls (the distributed harness's common
     // case) shouldn't pay a ~576 KiB alloc+memset for a few-KiB panel.
     let kc_max = KC.min(k);
-    let mut bpack = vec![0.0f32; NC.min(n).div_ceil(NR) * NR * kc_max];
-    let mut apack = vec![0.0f32; MC.min(m).div_ceil(MR) * MR * kc_max];
+    let mut bpack = vec![0.0f32; NC.min(n).div_ceil(nr) * nr * kc_max];
+    let mut apack = vec![0.0f32; rb.min(m).div_ceil(mr) * mr * kc_max];
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
-        let n_panels = nc.div_ceil(NR);
+        let n_panels = nc.div_ceil(nr);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
             let last_k = pc + kc == k;
-            pack_b(&mut bpack, b, n, jc, nc, pc, kc);
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
-                pack_a(&mut apack, a, k, ic, mc, pc, kc);
-                let n_tiles = mc.div_ceil(MR);
+            pack_b(&mut bpack, b, n, jc, nc, pc, kc, nr);
+            for ic in (0..m).step_by(rb) {
+                let mc = rb.min(m - ic);
+                pack_a(&mut apack, a, k, ic, mc, pc, kc, mr);
+                let n_tiles = mc.div_ceil(mr);
                 for it in 0..n_tiles {
-                    let i0 = it * MR;
-                    let rows = MR.min(mc - i0);
-                    let ap = &apack[it * kc * MR..(it + 1) * kc * MR];
+                    let i0 = it * mr;
+                    let rows = mr.min(mc - i0);
+                    let ap = &apack[it * kc * mr..(it + 1) * kc * mr];
                     for jt in 0..n_panels {
-                        let j0 = jt * NR;
-                        let cols = NR.min(nc - j0);
-                        let bp = &bpack[jt * kc * NR..(jt + 1) * kc * NR];
+                        let j0 = jt * nr;
+                        let cols = nr.min(nc - j0);
+                        let bp = &bpack[jt * kc * nr..(jt + 1) * kc * nr];
                         let tile_ep = if last_k { Some(ep) } else { None };
-                        microkernel(ap, bp, c, n, ic + i0, jc + j0, rows, cols, tile_ep);
+                        kern.tile(ap, bp, kc, c, n, ic + i0, jc + j0, rows, cols, tile_ep);
                     }
                 }
             }
@@ -348,9 +402,27 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], e
 
 /// Row-parallel GEMM: splits `m` into contiguous blocks, one scoped
 /// thread per block (disjoint `&mut` C row slices; B shared). Falls back
-/// to the serial kernel when the problem is too small to amortize spawns.
+/// to the serial kernel when the problem is too small to amortize
+/// spawns. The kernel is selected once at entry, so every row block runs
+/// the same variant.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue,
+    threads: usize,
+) {
+    gemm_parallel_with(kernels::selected(), m, k, n, a, b, c, ep, threads)
+}
+
+/// [`gemm_parallel`] on an explicit kernel variant (ISA-parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel_with(
+    kern: &'static Kernel,
     m: usize,
     k: usize,
     n: usize,
@@ -371,7 +443,7 @@ pub fn gemm_parallel(
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     let t = threads.clamp(1, m.max(1));
     if t == 1 || k == 0 || n == 0 || flops < 2e6 {
-        gemm(m, k, n, a, b, c, ep);
+        gemm_with(kern, m, k, n, a, b, c, ep);
         return;
     }
     let rows_per = m.div_ceil(t);
@@ -384,7 +456,8 @@ pub fn gemm_parallel(
             let bias_blk = ep.bias.map(|bv| &bv[row0..row0 + mb]);
             let relu = ep.relu;
             scope.spawn(move || {
-                gemm(
+                gemm_with(
+                    kern,
                     mb,
                     k,
                     n,
@@ -402,9 +475,26 @@ pub fn gemm_parallel(
 }
 
 /// `y = W·x (+ bias)(→ ReLU)` — the dense-layer (`n = 1`) special case,
-/// row-parallel for large layers. `w` is `m×k` row-major.
+/// row-parallel for large layers, on the runtime-selected kernel's
+/// vectorized dot rows. `w` is `m×k` row-major.
 #[allow(clippy::too_many_arguments)]
 pub fn matvec(
+    m: usize,
+    k: usize,
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    threads: usize,
+    y: &mut [f32],
+) {
+    matvec_with(kernels::selected(), m, k, w, x, bias, relu, threads, y)
+}
+
+/// [`matvec`] on an explicit kernel variant (ISA-parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_with(
+    kern: &'static Kernel,
     m: usize,
     k: usize,
     w: &[f32],
@@ -433,7 +523,7 @@ pub fn matvec(
     let flops = 2.0 * m as f64 * k as f64;
     let t = threads.clamp(1, m);
     if t == 1 || flops < 2e6 {
-        matvec_block(w, x, bias, relu, y, k);
+        kern.matvec_rows(w, x, bias, relu, y, k);
         return;
     }
     let rows_per = m.div_ceil(t);
@@ -443,120 +533,71 @@ pub fn matvec(
         for (i, (w_blk, y_blk)) in w_blocks.zip(y_blocks).enumerate() {
             let row0 = i * rows_per;
             let bias_blk = bias.map(|b| &b[row0..row0 + y_blk.len()]);
-            scope.spawn(move || matvec_block(w_blk, x, bias_blk, relu, y_blk, k));
+            scope.spawn(move || kern.matvec_rows(w_blk, x, bias_blk, relu, y_blk, k));
         }
     });
 }
 
-/// Serial matvec over a row block.
-fn matvec_block(w: &[f32], x: &[f32], bias: Option<&[f32]>, relu: bool, y: &mut [f32], k: usize) {
-    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
-        let mut s = dot(w_row, x);
-        if let Some(b) = bias {
-            s += b[row];
-        }
-        *out = if relu { s.max(0.0) } else { s };
-    }
-}
-
-/// 8-lane dot product (lane sums keep LLVM on the vector path).
-fn dot(w: &[f32], x: &[f32]) -> f32 {
-    const L: usize = 8;
-    let mut lanes = [0.0f32; L];
-    let wc = w.chunks_exact(L);
-    let xc = x.chunks_exact(L);
-    let w_rem = wc.remainder();
-    let x_rem = xc.remainder();
-    for (wv, xv) in wc.zip(xc) {
-        for ((lane, &a), &b) in lanes.iter_mut().zip(wv).zip(xv) {
-            *lane += a * b;
-        }
-    }
-    let mut s: f32 = lanes.iter().sum();
-    for (&a, &b) in w_rem.iter().zip(x_rem) {
-        s += a * b;
-    }
-    s
-}
-
-/// Pack the `kc×nc` block of B at `(pc, jc)` into `NR`-wide column
-/// micro-panels, zero-padding the ragged right edge.
-fn pack_b(bpack: &mut [f32], b: &[f32], n: usize, jc: usize, nc: usize, pc: usize, kc: usize) {
-    let n_panels = nc.div_ceil(NR);
+/// Pack the `kc×nc` block of B at `(pc, jc)` into `nr`-wide column
+/// micro-panels, zero-padding the ragged right edge. Full panels take a
+/// branch-free strided-copy path — each row is one contiguous `nr`-wide
+/// `copy_from_slice` (compiled to a vector move); only the last ragged
+/// panel pays the per-row zero fill.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    bpack: &mut [f32],
+    b: &[f32],
+    n: usize,
+    jc: usize,
+    nc: usize,
+    pc: usize,
+    kc: usize,
+    nr: usize,
+) {
+    let n_panels = nc.div_ceil(nr);
     for jt in 0..n_panels {
-        let j0 = jc + jt * NR;
-        let cols = NR.min(jc + nc - j0);
-        let panel = &mut bpack[jt * kc * NR..(jt + 1) * kc * NR];
-        for (p, dst) in panel.chunks_exact_mut(NR).enumerate() {
-            let src_base = (pc + p) * n + j0;
-            dst[..cols].copy_from_slice(&b[src_base..src_base + cols]);
-            for v in &mut dst[cols..] {
-                *v = 0.0;
+        let j0 = jc + jt * nr;
+        let cols = nr.min(jc + nc - j0);
+        let panel = &mut bpack[jt * kc * nr..(jt + 1) * kc * nr];
+        if cols == nr {
+            for (p, dst) in panel.chunks_exact_mut(nr).enumerate() {
+                let src_base = (pc + p) * n + j0;
+                dst.copy_from_slice(&b[src_base..src_base + nr]);
+            }
+        } else {
+            for (p, dst) in panel.chunks_exact_mut(nr).enumerate() {
+                let src_base = (pc + p) * n + j0;
+                dst[..cols].copy_from_slice(&b[src_base..src_base + cols]);
+                for v in &mut dst[cols..] {
+                    *v = 0.0;
+                }
             }
         }
     }
 }
 
-/// Pack the `mc×kc` block of A at `(ic, pc)` into `MR`-tall row
+/// Pack the `mc×kc` block of A at `(ic, pc)` into `mr`-tall row
 /// micro-panels (k-major within a panel), zero-padding the ragged
 /// bottom edge.
-fn pack_a(apack: &mut [f32], a: &[f32], k: usize, ic: usize, mc: usize, pc: usize, kc: usize) {
-    let n_tiles = mc.div_ceil(MR);
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    apack: &mut [f32],
+    a: &[f32],
+    k: usize,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    mr: usize,
+) {
+    let n_tiles = mc.div_ceil(mr);
     for it in 0..n_tiles {
-        let i0 = ic + it * MR;
-        let rows = MR.min(ic + mc - i0);
-        let tile = &mut apack[it * kc * MR..(it + 1) * kc * MR];
-        for (p, dst) in tile.chunks_exact_mut(MR).enumerate() {
+        let i0 = ic + it * mr;
+        let rows = mr.min(ic + mc - i0);
+        let tile = &mut apack[it * kc * mr..(it + 1) * kc * mr];
+        for (p, dst) in tile.chunks_exact_mut(mr).enumerate() {
             for (r, d) in dst.iter_mut().enumerate() {
                 *d = if r < rows { a[(i0 + r) * k + pc + p] } else { 0.0 };
-            }
-        }
-    }
-}
-
-/// `MR×NR` register-tile kernel over packed panels. `ep = Some(..)` on
-/// the final k block fuses bias+ReLU into the writeback.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn microkernel(
-    ap: &[f32],
-    bp: &[f32],
-    c: &mut [f32],
-    n: usize,
-    row0: usize,
-    col0: usize,
-    rows: usize,
-    cols: usize,
-    ep: Option<Epilogue>,
-) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
-        let av: &[f32; MR] = av.try_into().unwrap();
-        let bv: &[f32; NR] = bv.try_into().unwrap();
-        for (accr, &a) in acc.iter_mut().zip(av.iter()) {
-            for (dst, &b) in accr.iter_mut().zip(bv.iter()) {
-                *dst += a * b;
-            }
-        }
-    }
-    match ep {
-        None => {
-            for (r, accr) in acc.iter().enumerate().take(rows) {
-                let base = (row0 + r) * n + col0;
-                for (dst, &v) in c[base..base + cols].iter_mut().zip(accr.iter()) {
-                    *dst += v;
-                }
-            }
-        }
-        Some(ep) => {
-            for (r, accr) in acc.iter().enumerate().take(rows) {
-                let row = row0 + r;
-                let base = row * n + col0;
-                let bias = ep.bias.map_or(0.0, |b| b[row]);
-                for (dst, &v) in c[base..base + cols].iter_mut().zip(accr.iter()) {
-                    let x = *dst + v + bias;
-                    *dst = if ep.relu { x.max(0.0) } else { x };
-                }
             }
         }
     }
@@ -613,40 +654,88 @@ mod tests {
                 .all(|(x, y)| (x - y).abs() <= tol + tol * y.abs())
     }
 
-    #[test]
-    fn matches_naive_across_blocking_edges() {
-        // Sizes straddling MR/NR/MC/KC/NC boundaries (incl. off-by-one).
-        let cases = [
+    /// Shapes straddling the blocking boundaries for a given tile
+    /// geometry (incl. off-by-one on every level).
+    fn edge_shapes(mr: usize, nr: usize) -> Vec<(usize, usize, usize)> {
+        vec![
             (1, 1, 1),
             (3, 5, 7),
-            (MR, KC, NR),
-            (MR + 1, KC + 1, NR + 1),
+            (mr, KC, nr),
+            (mr + 1, KC + 1, nr + 1),
             (MC, 40, NC),
             (MC + 3, KC + 9, NC + 17),
             (70, 300, 33),
             (2, 600, 1100),
-        ];
-        for (i, &(m, k, n)) in cases.iter().enumerate() {
-            let a = rand_vec(m * k, 1000 + i as u64);
-            let b = rand_vec(k * n, 2000 + i as u64);
-            let bias = rand_vec(m, 3000 + i as u64);
-            for relu in [false, true] {
-                let want = gemm_naive(m, k, n, &a, &b, Some(&bias), relu);
-                let mut got = vec![0.0f32; m * n];
-                gemm(
-                    m,
-                    k,
-                    n,
-                    &a,
-                    &b,
-                    &mut got,
-                    Epilogue {
-                        bias: Some(&bias),
-                        relu,
-                    },
-                );
-                assert!(close(&got, &want, 1e-4), "case {i} ({m}x{k}x{n}) relu={relu}");
+        ]
+    }
+
+    #[test]
+    fn every_kernel_variant_matches_naive_across_blocking_edges() {
+        for kern in kernels::supported() {
+            for (i, &(m, k, n)) in edge_shapes(kern.mr, kern.nr).iter().enumerate() {
+                let a = rand_vec(m * k, 1000 + i as u64);
+                let b = rand_vec(k * n, 2000 + i as u64);
+                let bias = rand_vec(m, 3000 + i as u64);
+                for relu in [false, true] {
+                    let want = gemm_naive(m, k, n, &a, &b, Some(&bias), relu);
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_with(
+                        kern,
+                        m,
+                        k,
+                        n,
+                        &a,
+                        &b,
+                        &mut got,
+                        Epilogue {
+                            bias: Some(&bias),
+                            relu,
+                        },
+                    );
+                    assert!(
+                        close(&got, &want, 1e-4),
+                        "{} case {i} ({m}x{k}x{n}) relu={relu}",
+                        kern.name()
+                    );
+                }
             }
+        }
+    }
+
+    #[test]
+    fn kernel_variants_are_bit_identical_across_runs() {
+        // Per-ISA determinism: the same variant must produce the same
+        // bits on every run (fixed k reduction order) — this is what
+        // keeps the pipelined==serial exact-equality guarantee intact on
+        // every dispatch target.
+        let (m, k, n) = (70, 300, 33);
+        let a = rand_vec(m * k, 77);
+        let b = rand_vec(k * n, 78);
+        let bias = rand_vec(m, 79);
+        let ep = Epilogue {
+            bias: Some(&bias),
+            relu: true,
+        };
+        for kern in kernels::supported() {
+            let mut first = vec![0.0f32; m * n];
+            gemm_with(kern, m, k, n, &a, &b, &mut first, ep);
+            for _ in 0..3 {
+                let mut again = vec![0.0f32; m * n];
+                gemm_with(kern, m, k, n, &a, &b, &mut again, ep);
+                assert_eq!(again, first, "{} gemm not bit-stable", kern.name());
+            }
+            let pa = PackedA::pack_with(kern, m, k, &a, 1);
+            let mut scratch = PackScratch::new();
+            let mut p1 = vec![0.0f32; m * n];
+            gemm_prepacked(&pa, n, &b, &mut p1, ep, 1, &mut scratch);
+            let mut p2 = vec![0.0f32; m * n];
+            gemm_prepacked(&pa, n, &b, &mut p2, ep, 1, &mut scratch);
+            assert_eq!(p2, p1, "{} prepacked not bit-stable", kern.name());
+            let mut y1 = vec![0.0f32; m];
+            let mut y2 = vec![0.0f32; m];
+            matvec_with(kern, m, k, &a, &b[..k], Some(&bias), true, 1, &mut y1);
+            matvec_with(kern, m, k, &a, &b[..k], Some(&bias), true, 1, &mut y2);
+            assert_eq!(y1, y2, "{} matvec not bit-stable", kern.name());
         }
     }
 
@@ -683,17 +772,23 @@ mod tests {
     }
 
     #[test]
-    fn matvec_matches_naive() {
-        for (i, &(m, k)) in [(1, 1), (7, 9), (64, 257), (130, 1030)].iter().enumerate() {
-            let w = rand_vec(m * k, 20 + i as u64);
-            let x = rand_vec(k, 30 + i as u64);
-            let bias = rand_vec(m, 40 + i as u64);
-            for relu in [false, true] {
-                let want = gemm_naive(m, k, 1, &w, &x, Some(&bias), relu);
-                for threads in [1, 4] {
-                    let mut y = vec![0.0f32; m];
-                    matvec(m, k, &w, &x, Some(&bias), relu, threads, &mut y);
-                    assert!(close(&y, &want, 1e-4), "case {i} relu={relu} threads={threads}");
+    fn every_kernel_variant_matvec_matches_naive() {
+        for kern in kernels::supported() {
+            for (i, &(m, k)) in [(1, 1), (7, 9), (64, 257), (130, 1030)].iter().enumerate() {
+                let w = rand_vec(m * k, 20 + i as u64);
+                let x = rand_vec(k, 30 + i as u64);
+                let bias = rand_vec(m, 40 + i as u64);
+                for relu in [false, true] {
+                    let want = gemm_naive(m, k, 1, &w, &x, Some(&bias), relu);
+                    for threads in [1, 4] {
+                        let mut y = vec![0.0f32; m];
+                        matvec_with(kern, m, k, &w, &x, Some(&bias), relu, threads, &mut y);
+                        assert!(
+                            close(&y, &want, 1e-4),
+                            "{} case {i} relu={relu} threads={threads}",
+                            kern.name()
+                        );
+                    }
                 }
             }
         }
@@ -713,49 +808,55 @@ mod tests {
     }
 
     #[test]
-    fn prepacked_matches_gemm_across_blocking_edges() {
+    fn every_kernel_variant_prepacked_matches_gemm() {
         // Same boundary-straddling shape set as the packing-per-call
-        // kernel test, plus serial vs row-split-threaded prepacked runs.
-        let cases = [
-            (1, 1, 1),
-            (3, 5, 7),
-            (MR, KC, NR),
-            (MR + 1, KC + 1, NR + 1),
-            (MC, 40, NC),
-            (MC + 3, KC + 9, NC + 17),
-            (70, 300, 33),
-            (2, 600, 1100),
-            // 4 row blocks over 3 threads: uneven floor/ceil distribution.
-            (MC * 4, 40, 100),
-        ];
-        let mut scratch = PackScratch::new();
-        for (i, &(m, k, n)) in cases.iter().enumerate() {
-            let a = rand_vec(m * k, 4000 + i as u64);
-            let b = rand_vec(k * n, 5000 + i as u64);
-            let bias = rand_vec(m, 6000 + i as u64);
-            // Default MC row blocks and the thread-sized (sub-MC) layout
-            // must agree with the per-call kernel bit-for-bit.
-            let pa = PackedA::pack(m, k, &a);
-            let pa_t = PackedA::pack_for_threads(m, k, &a, 3);
-            for relu in [false, true] {
-                let ep = Epilogue {
-                    bias: Some(&bias),
-                    relu,
-                };
-                let mut want = vec![0.0f32; m * n];
-                gemm(m, k, n, &a, &b, &mut want, ep);
-                for threads in [1usize, 3] {
-                    for packed in [&pa, &pa_t] {
-                        let mut got = vec![0.0f32; m * n];
-                        gemm_prepacked(packed, n, &b, &mut got, ep, threads, &mut scratch);
-                        assert!(
-                            close(&got, &want, 1e-5),
-                            "case {i} ({m}x{k}x{n}) relu={relu} threads={threads} rb={}",
-                            packed.rb
-                        );
+        // kernel test, plus serial vs row-split-threaded prepacked runs,
+        // for every compiled-in microkernel variant.
+        for kern in kernels::supported() {
+            let mut shapes = edge_shapes(kern.mr, kern.nr);
+            // 4+ row blocks over 3 threads: uneven floor/ceil split.
+            shapes.push((MC * 4, 40, 100));
+            let mut scratch = PackScratch::new();
+            for (i, &(m, k, n)) in shapes.iter().enumerate() {
+                let a = rand_vec(m * k, 4000 + i as u64);
+                let b = rand_vec(k * n, 5000 + i as u64);
+                let bias = rand_vec(m, 6000 + i as u64);
+                // Default row blocks and the thread-sized layout must
+                // agree with the per-call kernel bit-for-bit.
+                let pa = PackedA::pack_with(kern, m, k, &a, 1);
+                let pa_t = PackedA::pack_with(kern, m, k, &a, 3);
+                for relu in [false, true] {
+                    let ep = Epilogue {
+                        bias: Some(&bias),
+                        relu,
+                    };
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_with(kern, m, k, n, &a, &b, &mut want, ep);
+                    for threads in [1usize, 3] {
+                        for packed in [&pa, &pa_t] {
+                            let mut got = vec![0.0f32; m * n];
+                            gemm_prepacked(packed, n, &b, &mut got, ep, threads, &mut scratch);
+                            assert!(
+                                close(&got, &want, 1e-5),
+                                "{} case {i} ({m}x{k}x{n}) relu={relu} threads={threads} rb={}",
+                                kern.name(),
+                                packed.rb
+                            );
+                        }
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn packed_a_records_its_kernel() {
+        let a = rand_vec(8 * 8, 90);
+        let auto = PackedA::pack(8, 8, &a);
+        assert!(std::ptr::eq(auto.kernel(), kernels::selected()));
+        for kern in kernels::supported() {
+            let pa = PackedA::pack_with(kern, 8, 8, &a, 2);
+            assert!(std::ptr::eq(pa.kernel(), kern));
         }
     }
 

@@ -13,6 +13,11 @@
 //! image keep the buffer's zero fill — materialized conv padding. The hot
 //! interior therefore performs no per-pixel bounds checks at all, unlike
 //! the reference `ops::conv2d` loop nest.
+//!
+//! The GEMM (and the dense matvec) this lowers onto dispatch their inner
+//! register tiles through `tensor::kernels` — AVX2+FMA / NEON where the
+//! CPU supports them, portable scalar otherwise — with no change to any
+//! call site here.
 
 use super::gemm::{gemm_parallel, matvec, Epilogue};
 use super::Tensor;

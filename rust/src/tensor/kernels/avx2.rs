@@ -1,0 +1,262 @@
+//! x86-64 AVX2+FMA microkernel (`6×16` register tile).
+//!
+//! Geometry: six accumulator rows × two 256-bit lanes (16 f32 columns)
+//! = 12 of the 16 ymm registers; per k step one broadcast per A row and
+//! two B-panel loads feed 12 `vfmadd231ps`. The epilogue (bias
+//! broadcast + `vmaxps` ReLU) and the read-modify-write of C stay
+//! vectorized on full tiles; ragged edges spill the register tile to a
+//! stack buffer and take the shared scalar edge writeback.
+//!
+//! FMA contracts each multiply-add into a single rounding step, so
+//! results differ from the scalar variant only within float tolerance
+//! (they are *more* accurate); repeated runs of this variant are
+//! bit-identical — the reduction order over k is fixed.
+//!
+//! Safety: every entry point is a safe wrapper that asserts the packed
+//! panel / output bounds the raw-pointer loop relies on, then calls the
+//! `#[target_feature(enable = "avx2,fma")]` implementation. The
+//! dispatch table only exposes this kernel after
+//! `is_x86_feature_detected!` confirmed both features at runtime
+//! (`kernels::detect` / `kernels::supported`).
+
+use std::arch::x86_64::*;
+
+use super::{write_tile_edge, Epilogue, Isa, Kernel};
+
+const MR: usize = 6;
+const NR: usize = 16;
+
+/// Both features this kernel's `#[target_feature]` impls rely on.
+/// The dispatch table guarantees this before handing the kernel out;
+/// the wrappers `debug_assert!` it as a backstop against in-crate
+/// misuse (zero release cost).
+fn features_present() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+pub(super) static KERNEL: Kernel = Kernel {
+    isa: Isa::Avx2,
+    mr: MR,
+    nr: NR,
+    tile_fn: tile,
+    matvec_fn: matvec_rows,
+    relu_fn: relu_map,
+    max_fn: max_into,
+};
+
+#[allow(clippy::too_many_arguments)]
+fn tile(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    debug_assert!(features_present());
+    assert!(
+        ap.len() >= kc * MR && bp.len() >= kc * NR,
+        "avx2 tile: packed panel shorter than kc"
+    );
+    assert!((1..=MR).contains(&rows) && (1..=NR).contains(&cols));
+    assert!(
+        (row0 + rows - 1) * n + col0 + cols <= c.len(),
+        "avx2 tile: C tile out of bounds"
+    );
+    // SAFETY: bounds asserted above; avx2+fma presence guaranteed by the
+    // dispatch table (see module docs).
+    unsafe { tile_impl(ap, bp, kc, c, n, row0, col0, rows, cols, ep) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_impl(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(b);
+        let b1 = _mm256_loadu_ps(b.add(8));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = _mm256_set1_ps(*a.add(r));
+            accr[0] = _mm256_fmadd_ps(ar, b0, accr[0]);
+            accr[1] = _mm256_fmadd_ps(ar, b1, accr[1]);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    if rows == MR && cols == NR {
+        match ep {
+            None => {
+                for (r, accr) in acc.iter().enumerate() {
+                    let p = c.as_mut_ptr().add((row0 + r) * n + col0);
+                    _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), accr[0]));
+                    let p8 = p.add(8);
+                    _mm256_storeu_ps(p8, _mm256_add_ps(_mm256_loadu_ps(p8), accr[1]));
+                }
+            }
+            Some(ep) => {
+                let zero = _mm256_setzero_ps();
+                for (r, accr) in acc.iter().enumerate() {
+                    let p = c.as_mut_ptr().add((row0 + r) * n + col0);
+                    let bias = _mm256_set1_ps(ep.bias.map_or(0.0, |bv| bv[row0 + r]));
+                    let p8 = p.add(8);
+                    let mut v0 = _mm256_add_ps(_mm256_add_ps(_mm256_loadu_ps(p), accr[0]), bias);
+                    let mut v1 = _mm256_add_ps(_mm256_add_ps(_mm256_loadu_ps(p8), accr[1]), bias);
+                    if ep.relu {
+                        v0 = _mm256_max_ps(v0, zero);
+                        v1 = _mm256_max_ps(v1, zero);
+                    }
+                    _mm256_storeu_ps(p, v0);
+                    _mm256_storeu_ps(p8, v1);
+                }
+            }
+        }
+    } else {
+        let mut flat = [0.0f32; MR * NR];
+        for (r, accr) in acc.iter().enumerate() {
+            _mm256_storeu_ps(flat.as_mut_ptr().add(r * NR), accr[0]);
+            _mm256_storeu_ps(flat.as_mut_ptr().add(r * NR + 8), accr[1]);
+        }
+        write_tile_edge(&flat, NR, c, n, row0, col0, rows, cols, ep);
+    }
+}
+
+/// Dense rows: four 8-lane FMA accumulators per row, horizontal sum at
+/// the end. `k >= 1` (caller handles `k = 0`).
+fn matvec_rows(w: &[f32], x: &[f32], bias: Option<&[f32]>, relu: bool, y: &mut [f32], k: usize) {
+    debug_assert!(features_present());
+    assert!(x.len() >= k && w.len() >= y.len() * k, "avx2 matvec: bounds");
+    // SAFETY: bounds asserted; features guaranteed by the dispatch table.
+    unsafe { matvec_impl(w, x, bias, relu, y, k) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matvec_impl(
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    y: &mut [f32],
+    k: usize,
+) {
+    let xp = x.as_ptr();
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let wp = w_row.as_ptr();
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= k {
+            a0 = _mm256_fmadd_ps(_mm256_loadu_ps(wp.add(i)), _mm256_loadu_ps(xp.add(i)), a0);
+            a1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(wp.add(i + 8)),
+                _mm256_loadu_ps(xp.add(i + 8)),
+                a1,
+            );
+            a2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(wp.add(i + 16)),
+                _mm256_loadu_ps(xp.add(i + 16)),
+                a2,
+            );
+            a3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(wp.add(i + 24)),
+                _mm256_loadu_ps(xp.add(i + 24)),
+                a3,
+            );
+            i += 32;
+        }
+        while i + 8 <= k {
+            a0 = _mm256_fmadd_ps(_mm256_loadu_ps(wp.add(i)), _mm256_loadu_ps(xp.add(i)), a0);
+            i += 8;
+        }
+        let mut s = hsum256(_mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3)));
+        while i < k {
+            s += w_row[i] * x[i];
+            i += 1;
+        }
+        if let Some(b) = bias {
+            s += b[row];
+        }
+        *out = if relu { s.max(0.0) } else { s };
+    }
+}
+
+/// Horizontal sum of the 8 lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+    _mm_cvtss_f32(s)
+}
+
+fn relu_map(src: &[f32], dst: &mut [f32]) {
+    debug_assert!(features_present());
+    debug_assert_eq!(src.len(), dst.len());
+    // SAFETY: equal lengths checked by the dispatch wrapper; features
+    // guaranteed by the dispatch table.
+    unsafe { relu_impl(src, dst) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn relu_impl(src: &[f32], dst: &mut [f32]) {
+    let n = src.len().min(dst.len());
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let zero = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        _mm256_storeu_ps(dp.add(i), _mm256_max_ps(_mm256_loadu_ps(sp.add(i)), zero));
+        i += 8;
+    }
+    while i < n {
+        dst[i] = src[i].max(0.0);
+        i += 1;
+    }
+}
+
+fn max_into(src: &[f32], dst: &mut [f32]) {
+    debug_assert!(features_present());
+    debug_assert_eq!(src.len(), dst.len());
+    // SAFETY: equal lengths checked by the dispatch wrapper; features
+    // guaranteed by the dispatch table.
+    unsafe { max_impl(src, dst) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn max_impl(src: &[f32], dst: &mut [f32]) {
+    let n = src.len().min(dst.len());
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        _mm256_storeu_ps(
+            dp.add(i),
+            _mm256_max_ps(_mm256_loadu_ps(dp.add(i)), _mm256_loadu_ps(sp.add(i))),
+        );
+        i += 8;
+    }
+    while i < n {
+        dst[i] = dst[i].max(src[i]);
+        i += 1;
+    }
+}

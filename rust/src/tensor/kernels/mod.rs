@@ -1,0 +1,504 @@
+//! SIMD GEMM microkernels with runtime ISA dispatch.
+//!
+//! The blocked GEMM in `tensor::gemm` walks cache-level blocks and packed
+//! micro-panels; the innermost register tile is ISA-specific and lives
+//! here. Three variants are compiled (per target) and one is selected at
+//! startup by runtime feature detection:
+//!
+//!  * **scalar** — the portable `4×16` fixed-array tile (LLVM
+//!    autovectorizes it to whatever the build target allows, typically
+//!    SSE2 on a stock `x86_64-unknown-linux-gnu` build);
+//!  * **avx2** — x86-64 AVX2+FMA `6×16`: six accumulator rows of two
+//!    256-bit lanes each (12 of 16 ymm registers), `std::arch`
+//!    intrinsics, selected when `is_x86_feature_detected!` confirms
+//!    `avx2` *and* `fma`;
+//!  * **neon** — aarch64 NEON `8×8`: eight rows of two 128-bit lanes
+//!    (16 of 32 v-registers).
+//!
+//! Each [`Kernel`] owns its tile geometry (`mr`/`nr`) — the packing code
+//! in `tensor::gemm` derives panel layouts from the kernel, and
+//! `PackedA` records which kernel it was packed for so prepacked compiled
+//! plans always run on a matching microkernel. Besides the GEMM tile a
+//! kernel carries the dense-layer matvec rows, the ReLU map, and the
+//! elementwise running-max used by the fast maxpool — the whole per-ISA
+//! surface sits behind one dispatch table.
+//!
+//! Selection: [`selected`] returns the auto-detected kernel, overridable
+//! two ways — the `IOP_KERNEL` env var (`scalar|avx2|neon`, read once;
+//! unknown/unsupported values panic with the supported list) for
+//! CLI/bench processes, and [`force`] for in-process benchmarks that
+//! measure variants side by side. Tests iterate [`supported`] and pass
+//! kernels explicitly (`gemm_with`, `PackedA::pack_with`, …) instead of
+//! touching the process-global override.
+//!
+//! Safety: all `unsafe` (intrinsics + raw-pointer panel walks) is
+//! confined to the per-ISA submodules behind safe wrappers that assert
+//! the packed-slice bounds first; a SIMD kernel is only ever reachable
+//! through the dispatch table after its CPU features were detected at
+//! runtime. Within one variant results are bit-identical run to run
+//! (fixed reduction order, no threading here); *across* variants results
+//! differ only by float rounding (FMA contracts mul+add into one
+//! rounding step), which is why cross-ISA checks use tolerances while
+//! per-ISA determinism checks use exact equality.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::Tensor;
+
+// The per-ISA modules are private: a SIMD `Kernel` must only be
+// reachable through [`selected`]/[`supported`]/[`by_name`], which gate
+// it behind runtime feature detection — exposing e.g. `avx2::KERNEL`
+// directly would let safe code run AVX2 intrinsics on a CPU without
+// them (the wrappers also `debug_assert!` the features as a test-build
+// backstop).
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Epilogue fused into the last k-block writeback of the GEMM (and into
+/// the matvec tail): per-row bias, then optional ReLU.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Epilogue<'a> {
+    /// Per-output-row (= output-channel) bias, length `m`.
+    pub bias: Option<&'a [f32]>,
+    /// Apply `max(0, ·)` to the final values.
+    pub relu: bool,
+}
+
+/// Instruction-set family of a microkernel variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable fixed-array tile (autovectorized by LLVM).
+    Scalar,
+    /// x86-64 AVX2 + FMA intrinsics.
+    Avx2,
+    /// aarch64 NEON intrinsics.
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Code used by the [`force`] override slot (0 = no override).
+    fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 2,
+            Isa::Neon => 3,
+        }
+    }
+}
+
+/// Register-tile microkernel: `c[row0.., col0..] += ap · bp` over packed
+/// `kc×mr` / `kc×nr` panels, with the optional epilogue fused into the
+/// writeback. `rows`/`cols` trim the ragged output edge (the panels
+/// themselves are always full-width, zero-padded by the packers).
+type TileFn = for<'a> fn(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue<'a>>,
+);
+
+/// Dense-layer rows: `y[r] = w[r]·x (+ bias[r]) (→ ReLU)` for every row
+/// of `w` (`y.len()` rows of length `k`). `k >= 1` (the caller handles
+/// the degenerate `k = 0`).
+type MatvecFn = for<'a> fn(
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&'a [f32]>,
+    relu: bool,
+    y: &mut [f32],
+    k: usize,
+);
+
+/// Elementwise map over equal-length slices.
+type MapFn = fn(src: &[f32], dst: &mut [f32]);
+
+/// One microkernel variant: its tile geometry plus every ISA-specific
+/// entry point the hot path dispatches through. Instances are `'static`
+/// (one per compiled-in variant); all state is immutable.
+#[derive(Debug)]
+pub struct Kernel {
+    pub isa: Isa,
+    /// Tile height: rows of A/C per register tile (A panels are packed
+    /// `mr`-tall).
+    pub mr: usize,
+    /// Tile width: columns of B/C per register tile (B panels are packed
+    /// `nr`-wide).
+    pub nr: usize,
+    tile_fn: TileFn,
+    matvec_fn: MatvecFn,
+    relu_fn: MapFn,
+    max_fn: MapFn,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        self.isa.name()
+    }
+
+    /// Human-readable ISA + tile geometry, e.g. `avx2 6x16` — printed by
+    /// `iop exec`/`iop serve`/`cargo bench` so reported numbers are
+    /// attributable to a code path.
+    pub fn describe(&self) -> String {
+        format!("{} {}x{}", self.name(), self.mr, self.nr)
+    }
+
+    /// Run the register tile (see [`TileFn`]).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn tile(
+        &self,
+        ap: &[f32],
+        bp: &[f32],
+        kc: usize,
+        c: &mut [f32],
+        n: usize,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+        ep: Option<Epilogue>,
+    ) {
+        (self.tile_fn)(ap, bp, kc, c, n, row0, col0, rows, cols, ep)
+    }
+
+    /// Dense rows `y = W·x (+bias)(→ReLU)`, `k >= 1` (see [`MatvecFn`]).
+    #[inline]
+    pub fn matvec_rows(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        bias: Option<&[f32]>,
+        relu: bool,
+        y: &mut [f32],
+        k: usize,
+    ) {
+        (self.matvec_fn)(w, x, bias, relu, y, k)
+    }
+
+    /// `dst = max(src, 0)` elementwise; lengths must match.
+    #[inline]
+    pub fn relu_map(&self, src: &[f32], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len(), "relu_map: length mismatch");
+        (self.relu_fn)(src, dst)
+    }
+
+    /// `dst = max(dst, src)` elementwise; lengths must match. The fast
+    /// maxpool's vertical (stride-1, contiguous) reduction.
+    #[inline]
+    pub fn max_into(&self, src: &[f32], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len(), "max_into: length mismatch");
+        (self.max_fn)(src, dst)
+    }
+}
+
+/// Process-global override slot for [`selected`]: 0 = auto-detect,
+/// otherwise an [`Isa::code`]. Written only by [`force`] (in-process
+/// benches) — the `IOP_KERNEL` env override lives in [`auto`] instead so
+/// it is read exactly once.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// The microkernel every dispatched GEMM/matvec/elementwise call routes
+/// through: the [`force`] override if set, else the `IOP_KERNEL` env
+/// override, else the widest ISA the CPU supports.
+pub fn selected() -> &'static Kernel {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => &scalar::KERNEL,
+        #[cfg(target_arch = "x86_64")]
+        2 => &avx2::KERNEL,
+        #[cfg(target_arch = "aarch64")]
+        3 => &neon::KERNEL,
+        _ => auto(),
+    }
+}
+
+/// Force a specific variant (`None` restores auto-detection). Meant for
+/// single-threaded bench/CLI setup code that measures variants side by
+/// side — sessions compile/pack against the kernel selected at creation
+/// time, so flip this only between sessions. Only kernels obtained from
+/// [`supported`]/[`by_name`] exist, so a forced kernel is always runnable
+/// on this CPU. Tests should prefer the explicit `*_with` entry points,
+/// which do not touch process-global state.
+pub fn force(kern: Option<&'static Kernel>) {
+    FORCED.store(kern.map_or(0, |k| k.isa.code()), Ordering::Relaxed);
+}
+
+/// Auto selection, memoized: `IOP_KERNEL` env override or detection.
+fn auto() -> &'static Kernel {
+    static AUTO: OnceLock<&'static Kernel> = OnceLock::new();
+    AUTO.get_or_init(|| {
+        if let Ok(name) = std::env::var("IOP_KERNEL") {
+            return by_name(&name).unwrap_or_else(|| {
+                panic!(
+                    "IOP_KERNEL={name}: unknown or unsupported on this CPU \
+                     (supported: {})",
+                    supported_names().join(", ")
+                )
+            });
+        }
+        detect()
+    })
+}
+
+/// Widest compiled-in variant this CPU can run.
+fn detect() -> &'static Kernel {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        return &avx2::KERNEL;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return &neon::KERNEL;
+    }
+    &scalar::KERNEL
+}
+
+/// Every variant this binary can run on this CPU (scalar always; the
+/// SIMD variant when detected). The ISA-parity tests sweep this list so
+/// each compiled-in kernel is checked against the Reference oracle, not
+/// just the auto-selected one.
+pub fn supported() -> Vec<&'static Kernel> {
+    let mut ks: Vec<&'static Kernel> = vec![&scalar::KERNEL];
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        ks.push(&avx2::KERNEL);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        ks.push(&neon::KERNEL);
+    }
+    ks
+}
+
+fn supported_names() -> Vec<&'static str> {
+    supported().iter().map(|k| k.name()).collect()
+}
+
+/// Look up a *supported* variant by ISA name (`scalar|avx2|neon`).
+pub fn by_name(name: &str) -> Option<&'static Kernel> {
+    supported().into_iter().find(|k| k.name() == name)
+}
+
+/// Shared ragged-edge writeback: `tile` is a row-major `rows×nr` (at
+/// least) register-tile spill; add it into `c` at `(row0, col0)`,
+/// trimmed to `rows×cols`, applying the epilogue if given. SIMD kernels
+/// call this for partial tiles (full tiles stay vectorized end to end);
+/// the scalar kernel uses it for every tile — it *is* the scalar
+/// writeback.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn write_tile_edge(
+    tile: &[f32],
+    nr: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    match ep {
+        None => {
+            for r in 0..rows {
+                let base = (row0 + r) * n + col0;
+                let acc = &tile[r * nr..r * nr + cols];
+                for (dst, &v) in c[base..base + cols].iter_mut().zip(acc) {
+                    *dst += v;
+                }
+            }
+        }
+        Some(ep) => {
+            for r in 0..rows {
+                let row = row0 + r;
+                let base = row * n + col0;
+                let bias = ep.bias.map_or(0.0, |b| b[row]);
+                let acc = &tile[r * nr..r * nr + cols];
+                for (dst, &v) in c[base..base + cols].iter_mut().zip(acc) {
+                    let x = *dst + v + bias;
+                    *dst = if ep.relu { x.max(0.0) } else { x };
+                }
+            }
+        }
+    }
+}
+
+/// Elementwise ReLU on the dispatched kernel (the Fast/Compiled
+/// backends' path; the Reference oracle keeps `ops::relu`). Exact — no
+/// rounding is involved — so both backends agree bitwise.
+pub fn relu(input: &Tensor) -> Tensor {
+    relu_with(selected(), input)
+}
+
+/// [`relu`] on an explicit kernel variant (parity tests).
+pub fn relu_with(kern: &Kernel, input: &Tensor) -> Tensor {
+    let mut data = vec![0.0f32; input.len()];
+    kern.relu_map(&input.data, &mut data);
+    Tensor {
+        c: input.c,
+        h: input.h,
+        w: input.w,
+        data,
+    }
+}
+
+/// Max pooling on the dispatched kernel — same contract as
+/// `ops::maxpool2d` (square window `k`, stride `s`, no padding).
+///
+/// Decomposed into a vertical pass and a horizontal pass: the vertical
+/// window max runs over *contiguous* input rows (`Kernel::max_into`, a
+/// stride-1 SIMD max), then the horizontal reduce reads `k` adjacent
+/// entries of the row buffer per output. `max` is exact and
+/// order-independent, so the result is bit-identical to the reference
+/// loop nest.
+pub fn maxpool2d(input: &Tensor, k: usize, stride: usize) -> Tensor {
+    maxpool2d_with(selected(), input, k, stride)
+}
+
+/// [`maxpool2d`] on an explicit kernel variant (parity tests).
+pub fn maxpool2d_with(kern: &Kernel, input: &Tensor, k: usize, stride: usize) -> Tensor {
+    assert!(k >= 1 && stride >= 1);
+    assert!(
+        input.h >= k && input.w >= k,
+        "maxpool2d: window {}x{} exceeds input {}x{}x{}",
+        k,
+        k,
+        input.c,
+        input.h,
+        input.w
+    );
+    let out_h = (input.h - k) / stride + 1;
+    let out_w = (input.w - k) / stride + 1;
+    let mut out = Tensor::zeros(input.c, out_h, out_w);
+    let mut rowmax = vec![0.0f32; input.w];
+    for c in 0..input.c {
+        for oy in 0..out_h {
+            let iy0 = oy * stride;
+            let row0 = input.idx(c, iy0, 0);
+            rowmax.copy_from_slice(&input.data[row0..row0 + input.w]);
+            for ky in 1..k {
+                let row = input.idx(c, iy0 + ky, 0);
+                kern.max_into(&input.data[row..row + input.w], &mut rowmax);
+            }
+            let out_base = out.idx(c, oy, 0);
+            for ox in 0..out_w {
+                let x0 = ox * stride;
+                let mut m = rowmax[x0];
+                for &v in &rowmax[x0 + 1..x0 + k] {
+                    m = m.max(v);
+                }
+                out.data[out_base + ox] = m;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_tensor(c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        let data = (0..c * h * w).map(|_| r.next_symmetric(1.0)).collect();
+        Tensor::from_vec(c, h, w, data)
+    }
+
+    #[test]
+    fn selection_is_supported_and_stable() {
+        let sel = selected();
+        assert!(
+            supported().iter().any(|k| std::ptr::eq(*k, sel)),
+            "selected kernel must be in the supported set"
+        );
+        // Memoized: repeated calls return the same kernel.
+        assert!(std::ptr::eq(selected(), sel));
+        // Scalar is always compiled in and resolvable by name.
+        let sc = by_name("scalar").expect("scalar always supported");
+        assert_eq!(sc.isa, Isa::Scalar);
+        assert_eq!(sc.describe(), format!("scalar {}x{}", sc.mr, sc.nr));
+        assert!(by_name("no-such-isa").is_none());
+    }
+
+    #[test]
+    fn tile_geometry_is_sane() {
+        for kern in supported() {
+            assert!(kern.mr >= 1 && kern.nr >= 1, "{}", kern.name());
+            // The packers and `gemm`'s row-block rounding rely on tiles
+            // no taller/wider than the cache blocks they subdivide.
+            assert!(kern.mr <= 16 && kern.nr <= 64, "{}", kern.name());
+        }
+    }
+
+    #[test]
+    fn every_variant_relu_matches_reference_bitwise() {
+        let t = rand_tensor(3, 7, 11, 42);
+        let want = ops::relu(&t);
+        for kern in supported() {
+            let got = relu_with(kern, &t);
+            assert_eq!(got, want, "{} relu diverged", kern.name());
+        }
+    }
+
+    #[test]
+    fn every_variant_maxpool_matches_reference_bitwise() {
+        // Window/stride combos covering tiling edges and stride<k overlap.
+        let cases = [
+            (2usize, 2usize, 8usize, 8usize),
+            (3, 2, 9, 11),
+            (2, 1, 5, 6),
+            (1, 1, 4, 4),
+        ];
+        for (i, &(k, s, h, w)) in cases.iter().enumerate() {
+            let t = rand_tensor(2, h, w, 100 + i as u64);
+            let want = ops::maxpool2d(&t, k, s);
+            for kern in supported() {
+                let got = maxpool2d_with(kern, &t, k, s);
+                assert_eq!(got, want, "{} maxpool k={k} s={s} diverged", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn write_tile_edge_trims_and_applies_epilogue() {
+        // 2x3 tile (nr = 4 stride) into a 3x5 C at (1, 2), bias + relu.
+        let tile = vec![
+            1.0, -2.0, 3.0, 99.0, // row 0 (col 3 ignored: cols = 3)
+            -4.0, 5.0, -6.0, 99.0, // row 1
+        ];
+        let mut c = vec![0.5f32; 3 * 5];
+        let bias = vec![0.0, -1.0, 1.0];
+        let ep = Epilogue {
+            bias: Some(&bias),
+            relu: true,
+        };
+        write_tile_edge(&tile, 4, &mut c, 5, 1, 2, 2, 3, Some(ep));
+        // Row 1 (bias -1): max(0, 0.5 + v - 1).
+        assert_eq!(&c[7..10], &[0.5, 0.0, 2.5]);
+        // Row 2 (bias +1): max(0, 0.5 + v + 1).
+        assert_eq!(&c[12..15], &[0.0, 6.5, 0.0]);
+        // Untouched cells keep the seed value.
+        assert_eq!(c[0], 0.5);
+        assert_eq!(c[6], 0.5);
+    }
+}

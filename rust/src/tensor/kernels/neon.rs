@@ -1,0 +1,222 @@
+//! aarch64 NEON microkernel (`8×8` register tile).
+//!
+//! Geometry: eight accumulator rows × two 128-bit lanes (8 f32 columns)
+//! = 16 of the 32 v-registers; per k step one `vdupq` broadcast per A
+//! row and two B-panel loads feed 16 `fmla` ops. Full tiles keep the
+//! epilogue (bias broadcast + `fmax` ReLU) and the C read-modify-write
+//! vectorized; ragged edges spill to a stack buffer and take the shared
+//! scalar edge writeback.
+//!
+//! NEON `fmla` is a fused multiply-add, so results differ from the
+//! scalar variant only within float tolerance (same story as AVX2+FMA);
+//! repeated runs are bit-identical — the k reduction order is fixed.
+//!
+//! Safety: safe wrappers assert the packed panel / output bounds, then
+//! call the `#[target_feature(enable = "neon")]` implementations. NEON
+//! is architecturally mandatory on aarch64, but the kernel is still
+//! only installed via runtime detection (`kernels::detect`), keeping
+//! every variant behind the same contract.
+
+use std::arch::aarch64::*;
+
+use super::{write_tile_edge, Epilogue, Isa, Kernel};
+
+const MR: usize = 8;
+const NR: usize = 8;
+
+pub(super) static KERNEL: Kernel = Kernel {
+    isa: Isa::Neon,
+    mr: MR,
+    nr: NR,
+    tile_fn: tile,
+    matvec_fn: matvec_rows,
+    relu_fn: relu_map,
+    max_fn: max_into,
+};
+
+#[allow(clippy::too_many_arguments)]
+fn tile(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    assert!(
+        ap.len() >= kc * MR && bp.len() >= kc * NR,
+        "neon tile: packed panel shorter than kc"
+    );
+    assert!((1..=MR).contains(&rows) && (1..=NR).contains(&cols));
+    assert!(
+        (row0 + rows - 1) * n + col0 + cols <= c.len(),
+        "neon tile: C tile out of bounds"
+    );
+    // SAFETY: bounds asserted above; neon presence guaranteed by the
+    // dispatch table (see module docs).
+    unsafe { tile_impl(ap, bp, kc, c, n, row0, col0, rows, cols, ep) }
+}
+
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_impl(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = vld1q_f32(b);
+        let b1 = vld1q_f32(b.add(4));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = vdupq_n_f32(*a.add(r));
+            accr[0] = vfmaq_f32(accr[0], b0, ar);
+            accr[1] = vfmaq_f32(accr[1], b1, ar);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    if rows == MR && cols == NR {
+        match ep {
+            None => {
+                for (r, accr) in acc.iter().enumerate() {
+                    let p = c.as_mut_ptr().add((row0 + r) * n + col0);
+                    vst1q_f32(p, vaddq_f32(vld1q_f32(p), accr[0]));
+                    let p4 = p.add(4);
+                    vst1q_f32(p4, vaddq_f32(vld1q_f32(p4), accr[1]));
+                }
+            }
+            Some(ep) => {
+                let zero = vdupq_n_f32(0.0);
+                for (r, accr) in acc.iter().enumerate() {
+                    let p = c.as_mut_ptr().add((row0 + r) * n + col0);
+                    let bias = vdupq_n_f32(ep.bias.map_or(0.0, |bv| bv[row0 + r]));
+                    let p4 = p.add(4);
+                    let mut v0 = vaddq_f32(vaddq_f32(vld1q_f32(p), accr[0]), bias);
+                    let mut v1 = vaddq_f32(vaddq_f32(vld1q_f32(p4), accr[1]), bias);
+                    if ep.relu {
+                        v0 = vmaxq_f32(v0, zero);
+                        v1 = vmaxq_f32(v1, zero);
+                    }
+                    vst1q_f32(p, v0);
+                    vst1q_f32(p4, v1);
+                }
+            }
+        }
+    } else {
+        let mut flat = [0.0f32; MR * NR];
+        for (r, accr) in acc.iter().enumerate() {
+            vst1q_f32(flat.as_mut_ptr().add(r * NR), accr[0]);
+            vst1q_f32(flat.as_mut_ptr().add(r * NR + 4), accr[1]);
+        }
+        write_tile_edge(&flat, NR, c, n, row0, col0, rows, cols, ep);
+    }
+}
+
+/// Dense rows: four 4-lane FMA accumulators per row, `vaddvq` horizontal
+/// sum at the end. `k >= 1` (caller handles `k = 0`).
+fn matvec_rows(w: &[f32], x: &[f32], bias: Option<&[f32]>, relu: bool, y: &mut [f32], k: usize) {
+    assert!(x.len() >= k && w.len() >= y.len() * k, "neon matvec: bounds");
+    // SAFETY: bounds asserted; features guaranteed by the dispatch table.
+    unsafe { matvec_impl(w, x, bias, relu, y, k) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn matvec_impl(
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    y: &mut [f32],
+    k: usize,
+) {
+    let xp = x.as_ptr();
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let wp = w_row.as_ptr();
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 16 <= k {
+            a0 = vfmaq_f32(a0, vld1q_f32(wp.add(i)), vld1q_f32(xp.add(i)));
+            a1 = vfmaq_f32(a1, vld1q_f32(wp.add(i + 4)), vld1q_f32(xp.add(i + 4)));
+            a2 = vfmaq_f32(a2, vld1q_f32(wp.add(i + 8)), vld1q_f32(xp.add(i + 8)));
+            a3 = vfmaq_f32(a3, vld1q_f32(wp.add(i + 12)), vld1q_f32(xp.add(i + 12)));
+            i += 16;
+        }
+        while i + 4 <= k {
+            a0 = vfmaq_f32(a0, vld1q_f32(wp.add(i)), vld1q_f32(xp.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(a0, a1), vaddq_f32(a2, a3)));
+        while i < k {
+            s += w_row[i] * x[i];
+            i += 1;
+        }
+        if let Some(b) = bias {
+            s += b[row];
+        }
+        *out = if relu { s.max(0.0) } else { s };
+    }
+}
+
+fn relu_map(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    // SAFETY: equal lengths checked by the dispatch wrapper; features
+    // guaranteed by the dispatch table.
+    unsafe { relu_impl(src, dst) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn relu_impl(src: &[f32], dst: &mut [f32]) {
+    let n = src.len().min(dst.len());
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let zero = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vst1q_f32(dp.add(i), vmaxq_f32(vld1q_f32(sp.add(i)), zero));
+        i += 4;
+    }
+    while i < n {
+        dst[i] = src[i].max(0.0);
+        i += 1;
+    }
+}
+
+fn max_into(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    // SAFETY: equal lengths checked by the dispatch wrapper; features
+    // guaranteed by the dispatch table.
+    unsafe { max_impl(src, dst) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn max_impl(src: &[f32], dst: &mut [f32]) {
+    let n = src.len().min(dst.len());
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vst1q_f32(dp.add(i), vmaxq_f32(vld1q_f32(dp.add(i)), vld1q_f32(sp.add(i))));
+        i += 4;
+    }
+    while i < n {
+        dst[i] = dst[i].max(src[i]);
+        i += 1;
+    }
+}

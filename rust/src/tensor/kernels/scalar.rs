@@ -1,0 +1,101 @@
+//! Portable scalar microkernel — the fallback every target compiles.
+//!
+//! This is PR 1's proven `4×16` register tile, unchanged in spirit:
+//! fixed-size accumulator arrays (`[[f32; NR]; MR]`, `chunks_exact` +
+//! `try_into`) keep LLVM on the autovectorized path for whatever the
+//! build target enables (SSE2 on stock x86-64 builds), with no `unsafe`
+//! anywhere. It doubles as the numerical baseline the SIMD variants are
+//! parity-tested against (beyond the `ops` reference oracle).
+
+use super::{write_tile_edge, Epilogue, Isa, Kernel};
+
+const MR: usize = 4;
+const NR: usize = 16;
+
+pub(super) static KERNEL: Kernel = Kernel {
+    isa: Isa::Scalar,
+    mr: MR,
+    nr: NR,
+    tile_fn: tile,
+    matvec_fn: matvec_rows,
+    relu_fn: relu_map,
+    max_fn: max_into,
+};
+
+/// `MR×NR` register tile over packed panels; epilogue fused into the
+/// final-k writeback via the shared edge path (which for the scalar
+/// variant *is* the writeback).
+#[allow(clippy::too_many_arguments)]
+fn tile(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<Epilogue>,
+) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc) {
+        let av: &[f32; MR] = av.try_into().unwrap();
+        let bv: &[f32; NR] = bv.try_into().unwrap();
+        for (accr, &a) in acc.iter_mut().zip(av.iter()) {
+            for (dst, &b) in accr.iter_mut().zip(bv.iter()) {
+                *dst += a * b;
+            }
+        }
+    }
+    let mut flat = [0.0f32; MR * NR];
+    for (r, accr) in acc.iter().enumerate() {
+        flat[r * NR..(r + 1) * NR].copy_from_slice(accr);
+    }
+    write_tile_edge(&flat, NR, c, n, row0, col0, rows, cols, ep);
+}
+
+/// Dense rows via an 8-lane dot product (lane sums keep LLVM on the
+/// vector path). `k >= 1`.
+fn matvec_rows(w: &[f32], x: &[f32], bias: Option<&[f32]>, relu: bool, y: &mut [f32], k: usize) {
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let mut s = dot(w_row, x);
+        if let Some(b) = bias {
+            s += b[row];
+        }
+        *out = if relu { s.max(0.0) } else { s };
+    }
+}
+
+/// 8-lane dot product.
+fn dot(w: &[f32], x: &[f32]) -> f32 {
+    const L: usize = 8;
+    let mut lanes = [0.0f32; L];
+    let wc = w.chunks_exact(L);
+    let xc = x.chunks_exact(L);
+    let w_rem = wc.remainder();
+    let x_rem = xc.remainder();
+    for (wv, xv) in wc.zip(xc) {
+        for ((lane, &a), &b) in lanes.iter_mut().zip(wv).zip(xv) {
+            *lane += a * b;
+        }
+    }
+    let mut s: f32 = lanes.iter().sum();
+    for (&a, &b) in w_rem.iter().zip(x_rem) {
+        s += a * b;
+    }
+    s
+}
+
+fn relu_map(src: &[f32], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.max(0.0);
+    }
+}
+
+fn max_into(src: &[f32], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = d.max(s);
+    }
+}

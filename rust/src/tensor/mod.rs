@@ -15,12 +15,16 @@
 //!
 //! `gemm` + `im2col` are the *fast* host kernels (blocked/packed GEMM with
 //! fused bias+ReLU epilogues, im2col conv lowering, scoped-thread
-//! parallelism) that the executor's Fast backend dispatches to; `ops`
-//! stays the oracle they are tested against.
+//! parallelism) that the executor's Fast backend dispatches to; their
+//! innermost register tiles (and the dense matvec / elementwise loops)
+//! live in `kernels`, which selects an explicit-SIMD variant (AVX2+FMA /
+//! NEON) by runtime feature detection with the portable scalar tile as
+//! fallback. `ops` stays the oracle they are all tested against.
 
 pub mod gemm;
 pub mod im2col;
 pub mod init;
+pub mod kernels;
 pub mod ops;
 pub mod slice;
 

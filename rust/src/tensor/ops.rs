@@ -10,6 +10,13 @@
 //! Padding is expressed per-axis (`pad_h`, `pad_w`) because row-sharded
 //! execution materializes vertical halo/padding into the input slice and
 //! then convolves with `pad_h = 0` while keeping horizontal padding.
+//!
+//! These loops stay deliberately scalar — they are the oracle. The fast
+//! counterparts live elsewhere: conv/dense lower onto the dispatched
+//! SIMD GEMM (`tensor::gemm` over `tensor::kernels`), and the
+//! maxpool/ReLU elementwise loops have vectorized twins in
+//! `tensor::kernels` (`maxpool2d`/`relu`) that the Fast backend uses —
+//! exact operations, so they are asserted *bitwise* equal to these.
 
 use super::Tensor;
 

@@ -51,6 +51,19 @@ fn exec_fast_backend() {
 }
 
 #[test]
+fn exec_json_reports_kernel() {
+    // --json must run clean on every host backend; the kernel_isa field
+    // is what CI greps to assert an x86-64 runner didn't fall back to
+    // the scalar microkernel.
+    for backend in ["reference", "fast", "compiled"] {
+        run(&[
+            "exec", "--model", "lenet", "--strategy", "iop", "--backend", backend, "--json",
+        ])
+        .unwrap();
+    }
+}
+
+#[test]
 fn exec_unknown_backend_fails() {
     assert!(run(&["exec", "--model", "lenet", "--strategy", "iop", "--backend", "gpu"]).is_err());
 }

@@ -1,0 +1,132 @@
+//! ISA-parity suite for the runtime-dispatched SIMD microkernels.
+//!
+//! Every *compiled-in* kernel variant this CPU supports — not just the
+//! auto-detected one — is forced via the in-process hook
+//! (`tensor::kernels::force`) and driven through the full stack:
+//! centralized fast inference, distributed compiled sessions, and the
+//! serving path. Each variant must (a) match the Reference oracle within
+//! 1e-4, and (b) be *bit-identical* across repeated runs — per-ISA
+//! determinism is what carries PR 3's pipelined==serial exact-equality
+//! guarantee onto every dispatch target. (Cross-ISA results differ only
+//! by FMA rounding, hence tolerance there, exactness here.)
+//!
+//! `force` flips process-global dispatch state, so the tests in this
+//! file serialize on one mutex and restore auto-detection on exit; the
+//! kernel-level parity sweeps that need no global state live in
+//! `tensor::gemm`/`tensor::kernels` unit tests and use the explicit
+//! `*_with` entry points instead.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use iop::device::profiles;
+use iop::exec::compute::centralized_inference;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{Backend, ExecSession};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::tensor::kernels;
+
+/// Serializes every test that touches the process-global kernel force.
+fn dispatch_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores auto-detection even if the test body panics.
+struct ForceReset;
+impl Drop for ForceReset {
+    fn drop(&mut self) {
+        kernels::force(None);
+    }
+}
+
+#[test]
+fn every_variant_centralized_fast_matches_reference() {
+    let _guard = dispatch_lock();
+    let _reset = ForceReset;
+    let model = zoo::vgg_mini();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let expect = centralized_inference(&model, &wb, &input);
+    for kern in kernels::supported() {
+        kernels::force(Some(kern));
+        let got = iop::exec::compute::centralized_inference_with(
+            iop::exec::backend::ComputeBackend::fast(),
+            &model,
+            &wb,
+            &input,
+        );
+        assert!(
+            got.allclose(&expect, 1e-4, 1e-4),
+            "{}: centralized fast diverged from reference (diff={})",
+            kern.name(),
+            got.max_abs_diff(&expect)
+        );
+        // Repeated runs on one variant are bit-identical.
+        let again = iop::exec::compute::centralized_inference_with(
+            iop::exec::backend::ComputeBackend::fast(),
+            &model,
+            &wb,
+            &input,
+        );
+        assert_eq!(again, got, "{}: centralized fast not bit-stable", kern.name());
+    }
+}
+
+#[test]
+fn every_variant_compiled_session_matches_reference_and_is_deterministic() {
+    let _guard = dispatch_lock();
+    let _reset = ForceReset;
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let expect = centralized_inference(&model, &wb, &input);
+    for strategy in [Strategy::Iop, Strategy::CoEdge] {
+        let plan = pipeline::plan(&model, &cluster, strategy);
+        for kern in kernels::supported() {
+            kernels::force(Some(kern));
+            // The session packs its compiled plan against the forced
+            // kernel at creation and must keep using it.
+            let mut session =
+                ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+            let first = session.infer(input.clone()).unwrap();
+            assert_eq!(
+                first.stats.kernel_isa,
+                kern.name(),
+                "stats must attribute results to the forced kernel"
+            );
+            assert!(
+                first.output.allclose(&expect, 1e-4, 1e-4),
+                "{} {}: compiled session diverged (diff={})",
+                kern.name(),
+                strategy.name(),
+                first.output.max_abs_diff(&expect)
+            );
+            for i in 0..2 {
+                let r = session.infer(input.clone()).unwrap();
+                assert_eq!(
+                    r.output, first.output,
+                    "{} {} request {i}: repeated runs must be bit-identical",
+                    kern.name(),
+                    strategy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forcing_scalar_changes_selection_and_auto_restores() {
+    let _guard = dispatch_lock();
+    let _reset = ForceReset;
+    let auto = kernels::selected();
+    let scalar = kernels::by_name("scalar").unwrap();
+    kernels::force(Some(scalar));
+    assert!(std::ptr::eq(kernels::selected(), scalar));
+    kernels::force(None);
+    assert!(std::ptr::eq(kernels::selected(), auto));
+}
