@@ -232,6 +232,55 @@ fn main() {
         }
     }
 
+    // Conv-lowering ablation: the same compiled steady-state case with
+    // im2col forced back to the materialized column matrix (the PR 2–4
+    // behavior). The default "(compiled, steady)" case above runs the
+    // fused implicit-GEMM path, so the pair isolates both the latency
+    // and the peak-transient-scratch effect of killing the cols buffer.
+    // Forcing happens between sessions, exactly like the scalar twin.
+    println!("\n== conv lowering (compiled steady-state, materialized-im2col-forced) ==");
+    {
+        use iop::exec::{force_lowering, ConvLowering};
+        let model = zoo::vgg_mini();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        let input = model_input(&model);
+        let fused_peak = {
+            let mut session =
+                ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+            let r = session.infer(input.clone()).unwrap();
+            *r.stats.peak_scratch_bytes.iter().max().unwrap()
+        };
+        force_lowering(Some(ConvLowering::Materialized));
+        let mat_peak;
+        {
+            let mut session =
+                ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+            mat_peak = {
+                let r = session.infer(input.clone()).unwrap();
+                *r.stats.peak_scratch_bytes.iter().max().unwrap()
+            };
+            bench!("session.infer vgg_mini IOP (compiled, steady, materialized im2col)", || {
+                session.infer(input.clone()).unwrap()
+            });
+        }
+        force_lowering(None);
+        println!(
+            "peak transient scratch (max over devices): fused {} vs materialized {} (-{:.1}%)",
+            iop::util::units::fmt_bytes(fused_peak),
+            iop::util::units::fmt_bytes(mat_peak),
+            (1.0 - fused_peak as f64 / mat_peak as f64) * 100.0
+        );
+        if let (Some(mat), Some(fused)) = (
+            rep.get("session.infer vgg_mini IOP (compiled, steady, materialized im2col)"),
+            rep.get("session.infer vgg_mini IOP (compiled, steady)"),
+        ) {
+            println!(
+                "fused im2col speedup vs materialized (vgg_mini IOP compiled steady): {:.2}x",
+                mat.median / fused.median
+            );
+        }
+    }
+
     // Steady-state serving *throughput*: a closed loop of N requests at
     // a fixed in-flight depth over ONE warmed session per backend (no
     // per-run session spawn — the inflight=1 / inflight=m pair differs

@@ -381,6 +381,21 @@ pub fn exec(a: &mut Args) -> Result<()> {
         ];
         fields.extend(kernel_fields(r.stats.kernel_isa));
         fields.extend([
+            ("conv_lowering", Json::str(r.stats.conv_lowering.to_string())),
+            (
+                "peak_scratch_bytes",
+                Json::Arr(
+                    r.stats
+                        .peak_scratch_bytes
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "peak_scratch_bytes_max",
+                Json::num(r.stats.peak_scratch_bytes.iter().copied().max().unwrap_or(0) as f64),
+            ),
             ("wall_secs", Json::num(r.stats.wall_secs)),
             (
                 "compute_secs",
@@ -415,6 +430,14 @@ pub fn exec(a: &mut Args) -> Result<()> {
             r.stats.messages_sent.iter().sum::<usize>(),
             fmt_bytes(r.stats.bytes_sent.iter().sum()),
         );
+        let peak = r.stats.peak_scratch_bytes.iter().copied().max().unwrap_or(0);
+        if peak > 0 {
+            println!(
+                "conv lowering {}: peak transient scratch {} (max over devices)",
+                r.stats.conv_lowering,
+                fmt_bytes(peak)
+            );
+        }
         println!("max |distributed - centralized| = {diff:.3e}");
     }
     if !ok {
@@ -551,6 +574,7 @@ pub fn serve(a: &mut Args) -> Result<()> {
         ];
         fields.extend(kernel_fields(session.kernel_isa()));
         fields.extend([
+            ("conv_lowering", Json::str(session.conv_lowering().to_string())),
             (
                 "runs",
                 Json::Arr(runs.iter().map(|(_, r)| r.to_json()).collect()),
@@ -560,12 +584,13 @@ pub fn serve(a: &mut Args) -> Result<()> {
         println!("{}", Json::obj(fields).to_string_pretty());
     } else {
         println!(
-            "{} / {} on {} devices [{}, kernel {}]: closed loop, {} requests/run",
+            "{} / {} on {} devices [{}, kernel {}, conv {}]: closed loop, {} requests/run",
             model.name,
             strategy.name(),
             cluster.m(),
             backend_tag(&backend),
             kernel_desc_str(session.kernel_isa()),
+            session.conv_lowering(),
             requests,
         );
         let mut t = Table::new(&[

@@ -10,9 +10,12 @@
 //!  * row shards (CoEdge) replicate the *entire* conv weight tensor;
 //!  * a `Full` FC stage parks every FC weight on the root.
 
+use crate::exec::prepack::ConvLowering;
 use crate::model::{Model, OpKind, Stage};
 use crate::partition::plan::{Plan, SliceKind};
-use crate::partition::rows::input_rows_needed_clamped;
+use crate::partition::rows::{input_rows_needed, input_rows_needed_clamped};
+use crate::tensor::gemm::pack_scratch_bytes;
+use crate::tensor::kernels;
 
 /// Resident weight bytes a slice of `stage` requires.
 pub fn slice_weight_bytes(model: &Model, stage: Stage, slice: &SliceKind) -> u64 {
@@ -82,6 +85,129 @@ pub fn slice_activation_bytes(model: &Model, stage: Stage, slice: &SliceKind) ->
             let out_row_bytes = (spatial_out.c * spatial_out.w * 4) as u64;
             in_rows * in_row_bytes + *count as u64 * out_row_bytes
         }
+    }
+}
+
+/// The local GEMM problem `(k, n)` a conv slice lowers onto — the
+/// geometry `exec::prepack::compile_slice` resolves: OC shards keep the
+/// full reduction depth and output plane (only output rows of the
+/// weight matrix shrink), IC shards cut the depth, row shards cut the
+/// output plane (window conv, vertical padding pre-materialized).
+fn conv_gemm_dims(model: &Model, stage: Stage, slice: &SliceKind) -> Option<(usize, usize)> {
+    let op = &model.ops[stage.op_idx];
+    let OpKind::Conv2d {
+        c_in,
+        k_h,
+        k_w,
+        stride,
+        pad,
+        ..
+    } = op.kind
+    else {
+        return None;
+    };
+    let ish = model.in_shape(stage.op_idx);
+    let out_h = (ish.h + 2 * pad - k_h) / stride + 1;
+    let out_w = (ish.w + 2 * pad - k_w) / stride + 1;
+    match slice {
+        SliceKind::Idle => None,
+        SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. } => {
+            Some((c_in * k_h * k_w, out_h * out_w))
+        }
+        SliceKind::Ic { count, .. } => Some((count * k_h * k_w, out_h * out_w)),
+        SliceKind::Rows { start, count } => {
+            if *count == 0 {
+                return None;
+            }
+            // `count` is *stage-output* rows (post-tail-pool); the conv
+            // itself runs over the materialized input-row window with
+            // vertical padding pre-applied, so its GEMM columns are the
+            // window's conv-output rows (e.g. 2·count under a 2×2 pool
+            // tail) — mirror the runtime window exactly.
+            let (lo, hi) = input_rows_needed(model, stage, *start, *start + *count);
+            let win_h = (hi - lo) as usize;
+            let rows_out = (win_h - k_h) / stride + 1;
+            Some((c_in * k_h * k_w, rows_out * out_w))
+        }
+    }
+}
+
+/// Analytical transient im2col scratch a conv slice needs under a given
+/// lowering (`exec::prepack::run_conv`): fused implicit GEMM touches
+/// only the per-thread B-panel pack buffers
+/// (`gemm::pack_scratch_bytes`, sized for the runtime-selected
+/// microkernel's tile width); the materialized twin additionally holds
+/// the full `k×n` column matrix. Exact for `threads = 1` (the harness
+/// worker default); an upper bound otherwise (the GEMM may clamp its
+/// row split below `threads` on small problems). 0 for non-conv slices.
+pub fn slice_conv_scratch_bytes(
+    model: &Model,
+    stage: Stage,
+    slice: &SliceKind,
+    lowering: ConvLowering,
+    threads: usize,
+) -> u64 {
+    let Some((k, n)) = conv_gemm_dims(model, stage, slice) else {
+        return 0;
+    };
+    let pack =
+        pack_scratch_bytes(kernels::selected(), k, n) as u64 * threads.max(1) as u64;
+    match lowering {
+        ConvLowering::Fused => pack,
+        ConvLowering::Materialized => (k * n * 4) as u64 + pack,
+    }
+}
+
+/// Per-device peak transient conv scratch of a plan under both
+/// lowerings — the analytical counterpart of the measured
+/// `ExecStats::peak_scratch_bytes` (the compiled workers' grow-only
+/// arenas reach exactly these high-water marks at `threads = 1`).
+#[derive(Debug, Clone)]
+pub struct ScratchReport {
+    /// Fused implicit GEMM: max pack-buffer bytes over stages.
+    pub fused: Vec<u64>,
+    /// Materialized im2col: the arena's `cols` buffer grows to the
+    /// largest column matrix and the pack buffers to their own maximum
+    /// independently, so the peak is the *sum of the two maxima* (they
+    /// coexist in one grow-only arena), not the max of per-stage sums.
+    pub materialized: Vec<u64>,
+}
+
+impl ScratchReport {
+    /// Largest per-device fused footprint (the Fig. 5-style headline).
+    pub fn peak_fused(&self) -> u64 {
+        self.fused.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn peak_materialized(&self) -> u64 {
+        self.materialized.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Evaluate [`ScratchReport`] for every device of a plan.
+pub fn plan_conv_scratch(model: &Model, plan: &Plan, threads: usize) -> ScratchReport {
+    let m = plan.m;
+    let mut pack_max = vec![0u64; m];
+    let mut cols_max = vec![0u64; m];
+    for sp in &plan.stages {
+        for (j, slice) in sp.slices.iter().enumerate() {
+            let Some((k, n)) = conv_gemm_dims(model, sp.stage, slice) else {
+                continue;
+            };
+            let pack = pack_scratch_bytes(kernels::selected(), k, n) as u64
+                * threads.max(1) as u64;
+            pack_max[j] = pack_max[j].max(pack);
+            cols_max[j] = cols_max[j].max((k * n * 4) as u64);
+        }
+    }
+    let materialized = cols_max
+        .iter()
+        .zip(&pack_max)
+        .map(|(c, p)| c + p)
+        .collect();
+    ScratchReport {
+        fused: pack_max,
+        materialized,
     }
 }
 
@@ -203,6 +329,94 @@ mod tests {
             "oc={} coedge={}",
             oc.peak_footprint(),
             co.peak_footprint()
+        );
+    }
+
+    #[test]
+    fn fused_scratch_model_beats_materialized_on_every_device() {
+        use crate::partition::Strategy;
+        let model = zoo::vgg_mini();
+        let cluster = profiles::paper_default();
+        for strategy in Strategy::all() {
+            let plan = crate::pipeline::plan(&model, &cluster, strategy);
+            let rep = plan_conv_scratch(&model, &plan, 1);
+            for j in 0..plan.m {
+                if rep.materialized[j] == 0 {
+                    assert_eq!(rep.fused[j], 0, "{} dev {j}", strategy.name());
+                    continue;
+                }
+                // Every conv-carrying device saves at least the column
+                // matrix (the pack buffers are common to both paths).
+                assert!(
+                    rep.fused[j] < rep.materialized[j],
+                    "{} dev {j}: fused {} vs materialized {}",
+                    strategy.name(),
+                    rep.fused[j],
+                    rep.materialized[j]
+                );
+            }
+            assert!(rep.peak_fused() > 0, "{}", strategy.name());
+            // The acceptance direction on the bottleneck device: fused
+            // transient scratch ≥ 25% below the materialized arena's.
+            assert!(
+                rep.peak_fused() * 4 <= rep.peak_materialized() * 3,
+                "{}: peak fused {} vs materialized {}",
+                strategy.name(),
+                rep.peak_fused(),
+                rep.peak_materialized()
+            );
+        }
+    }
+
+    #[test]
+    fn slice_scratch_covers_every_slice_kind() {
+        let model = zoo::vgg_mini();
+        let st = model.stages()[0]; // conv1: 3->8 ch, 32x32, pad 1
+        let full_mat = slice_conv_scratch_bytes(
+            &model,
+            st,
+            &SliceKind::Full,
+            ConvLowering::Materialized,
+            1,
+        );
+        let full_fused =
+            slice_conv_scratch_bytes(&model, st, &SliceKind::Full, ConvLowering::Fused, 1);
+        // materialized = cols + pack; cols for conv1 is 27*1024*4 bytes.
+        assert_eq!(full_mat, full_fused + 27 * 1024 * 4);
+        // Row shards shrink n proportionally to their row count.
+        let rows = slice_conv_scratch_bytes(
+            &model,
+            st,
+            &SliceKind::Rows { start: 0, count: 8 },
+            ConvLowering::Materialized,
+            1,
+        );
+        assert!(rows < full_mat);
+        // IC shards shrink k.
+        let ic = slice_conv_scratch_bytes(
+            &model,
+            model.stages()[1],
+            &SliceKind::Ic { start: 0, count: 2 },
+            ConvLowering::Materialized,
+            1,
+        );
+        let ic_full = slice_conv_scratch_bytes(
+            &model,
+            model.stages()[1],
+            &SliceKind::Full,
+            ConvLowering::Materialized,
+            1,
+        );
+        assert!(ic < ic_full);
+        // Idle and dense slices need no conv scratch.
+        assert_eq!(
+            slice_conv_scratch_bytes(&model, st, &SliceKind::Idle, ConvLowering::Fused, 1),
+            0
+        );
+        let fc = *model.stages().last().unwrap();
+        assert_eq!(
+            slice_conv_scratch_bytes(&model, fc, &SliceKind::Full, ConvLowering::Materialized, 1),
+            0
         );
     }
 

@@ -22,7 +22,10 @@
 //! naive ops stay the independent numerical ground truth.
 //! [`compute_slice_compiled`] is the steady-state serving counterpart:
 //! same dispatch table, but over a prepacked [`CompiledDevice`] shard and
-//! a reusable [`ScratchArena`] (`exec::prepack`).
+//! a reusable [`ScratchArena`] (`exec::prepack`); its conv slices run as
+//! implicit GEMM by default (patches gathered straight into the B-panel
+//! pack buffers — `exec::prepack::ConvLowering`), while the Reference
+//! path stays the untouched materializing oracle.
 
 use crate::model::{Model, OpKind, Stage};
 use crate::partition::plan::SliceKind;

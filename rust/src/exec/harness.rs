@@ -85,6 +85,16 @@ pub struct ExecStats {
     /// (`Backend::Compiled` only; 0 elsewhere). Flat across steady-state
     /// requests ⇔ the conv/dense hot loop performed no heap allocations.
     pub arena_grows: Vec<u64>,
+    /// High-water transient scratch bytes per device since session
+    /// creation (`Backend::Compiled` only; 0 elsewhere): the arena's
+    /// im2col `cols` buffer (zero under the fused lowering) plus the
+    /// GEMM B-panel pack buffers. The fused-vs-materialized drop on
+    /// this number is the implicit-GEMM memory win the CI gate checks.
+    pub peak_scratch_bytes: Vec<u64>,
+    /// Conv im2col lowering the session's compiled kernels were built
+    /// with (`"fused"` or `"materialized"`, resolved at session
+    /// creation); `"n/a"` for backends that do not compile conv plans.
+    pub conv_lowering: &'static str,
     /// GEMM microkernel ISA the session's workers dispatch to
     /// (`tensor::kernels` — `"scalar"`, `"avx2"`, or `"neon"`, recorded
     /// at session creation so compiled plans report the kernel they were
@@ -94,13 +104,15 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
-    fn zeroed(m: usize, kernel_isa: &'static str) -> ExecStats {
+    fn zeroed(m: usize, kernel_isa: &'static str, conv_lowering: &'static str) -> ExecStats {
         ExecStats {
             wall_secs: 0.0,
             bytes_sent: vec![0; m],
             messages_sent: vec![0; m],
             compute_secs: vec![0.0; m],
             arena_grows: vec![0; m],
+            peak_scratch_bytes: vec![0; m],
+            conv_lowering,
             kernel_isa,
         }
     }
@@ -247,6 +259,14 @@ impl Runner {
             _ => 0,
         }
     }
+
+    /// Arena high-water scratch bytes (compiled runners only).
+    fn arena_peak_bytes(&self) -> u64 {
+        match self {
+            Runner::Compiled { arena, .. } => arena.peak_bytes(),
+            _ => 0,
+        }
+    }
 }
 
 /// What a worker holds between stages.
@@ -319,6 +339,10 @@ pub struct ExecSession {
     /// Microkernel ISA stamped into every request's `ExecStats` (see
     /// [`ExecStats::kernel_isa`]); resolved once at session creation.
     kernel_isa: &'static str,
+    /// Conv lowering stamped into every request's `ExecStats`
+    /// ([`ExecStats::conv_lowering`]); resolved once at session
+    /// creation, matching what the compiled kernels recorded.
+    conv_lowering: &'static str,
     ctrl_tx: Vec<Sender<Control>>,
     done_rx: Receiver<(usize, usize, Result<WorkerOut>)>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -375,6 +399,12 @@ impl ExecSession {
             }
             Backend::Pjrt { .. } => "pjrt",
         };
+        // Only the compiled backend resolves an im2col lowering (the
+        // other backends either materialize per call or never lower).
+        let conv_lowering = match &backend {
+            Backend::Compiled { .. } => super::prepack::lowering_selected().name(),
+            _ => "n/a",
+        };
         let model = Arc::new(model.clone());
         let plan = Arc::new(plan.clone());
         let wb = Arc::new(WeightBundle::generate(&model));
@@ -425,6 +455,7 @@ impl ExecSession {
             m,
             max_inflight: max_inflight.max(1),
             kernel_isa,
+            conv_lowering,
             ctrl_tx,
             done_rx,
             handles,
@@ -448,6 +479,13 @@ impl ExecSession {
     /// have been forced elsewhere since.
     pub fn kernel_isa(&self) -> &'static str {
         self.kernel_isa
+    }
+
+    /// Conv im2col lowering this session's compiled kernels use
+    /// (`"fused"` / `"materialized"`; `"n/a"` on non-compiled
+    /// backends), resolved at session creation.
+    pub fn conv_lowering(&self) -> &'static str {
+        self.conv_lowering
     }
 
     /// Requests submitted and still being processed by the workers
@@ -512,7 +550,7 @@ impl ExecSession {
                 t0: Instant::now(),
                 remaining: self.m,
                 output: None,
-                stats: ExecStats::zeroed(self.m, self.kernel_isa),
+                stats: ExecStats::zeroed(self.m, self.kernel_isa, self.conv_lowering),
                 last_finish: None,
             },
         );
@@ -595,6 +633,7 @@ impl ExecSession {
                 p.stats.messages_sent[dev] = w.messages_sent;
                 p.stats.compute_secs[dev] = w.compute_secs;
                 p.stats.arena_grows[dev] = w.arena_grows;
+                p.stats.peak_scratch_bytes[dev] = w.peak_scratch_bytes;
                 p.last_finish = Some(match p.last_finish {
                     Some(t) => t.max(w.finished_at),
                     None => w.finished_at,
@@ -752,6 +791,7 @@ struct WorkerOut {
     messages_sent: usize,
     compute_secs: f64,
     arena_grows: u64,
+    peak_scratch_bytes: u64,
     /// When this worker finished the request (stamped worker-side so the
     /// session can compute true completion latency even if the done
     /// message sits in the channel while the caller is busy).
@@ -1166,6 +1206,7 @@ fn worker_request(
         messages_sent,
         compute_secs,
         arena_grows: runner.arena_grows(),
+        peak_scratch_bytes: runner.arena_peak_bytes(),
         finished_at: Instant::now(),
     })
 }
@@ -1359,6 +1400,29 @@ mod tests {
             let mut s = ExecSession::new(&m, &plan, backend).unwrap();
             assert_eq!(s.infer(input.clone()).unwrap().stats.kernel_isa, sel);
         }
+    }
+
+    #[test]
+    fn compiled_session_reports_peak_scratch_and_lowering() {
+        let m = zoo::vgg_mini();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let input = model_input(&m);
+        let mut s = ExecSession::new(&m, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        let r = s.infer(input.clone()).unwrap();
+        assert_eq!(r.stats.conv_lowering, s.conv_lowering());
+        assert!(
+            r.stats.peak_scratch_bytes.iter().sum::<u64>() > 0,
+            "compiled workers must report their arena high-water"
+        );
+        // Steady state: peak bytes are flat once the arenas are warm.
+        let again = s.infer(input.clone()).unwrap();
+        assert_eq!(again.stats.peak_scratch_bytes, r.stats.peak_scratch_bytes);
+        // Reference sessions have no arenas (or lowering) to report.
+        let mut rf = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        let rr = rf.infer(input).unwrap();
+        assert_eq!(rr.stats.conv_lowering, "n/a");
+        assert!(rr.stats.peak_scratch_bytes.iter().all(|&b| b == 0));
     }
 
     #[test]

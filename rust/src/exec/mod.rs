@@ -25,9 +25,13 @@
 //!    into [`ExecStats`] as `kernel_isa`.
 //!  * [`Backend::Compiled`] — the Fast kernels over a *compiled plan*
 //!    (`exec::prepack`): weights sliced + prepacked into GEMM micro-panels
-//!    once at session creation, im2col/pack scratch in a per-worker
-//!    grow-only arena — the steady-state serving path, allocation-free in
-//!    the conv/dense hot loop after warm-up.
+//!    once at session creation, pack scratch in a per-worker grow-only
+//!    arena — the steady-state serving path, allocation-free in the
+//!    conv/dense hot loop after warm-up. Conv stages run as implicit
+//!    GEMM ([`ConvLowering::Fused`], the default): patches are gathered
+//!    straight into the GEMM's B-panel pack buffers and the full im2col
+//!    column matrix is never materialized, cutting each worker's
+//!    transient high-water footprint (`ExecStats::peak_scratch_bytes`).
 //!  * [`Backend::Pjrt`] — each worker owns a PJRT CPU client and runs the
 //!    per-shard executables named in `artifacts/manifest.json` (requires
 //!    the `pjrt` build feature).
@@ -42,5 +46,7 @@ pub mod weights;
 
 pub use backend::ComputeBackend;
 pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats, ReqId};
-pub use prepack::{CompiledDevice, CompiledPlan, ScratchArena};
+pub use prepack::{
+    force_lowering, lowering_selected, CompiledDevice, CompiledPlan, ConvLowering, ScratchArena,
+};
 pub use serve::{serve_closed_loop, ServeOptions, ThroughputReport};

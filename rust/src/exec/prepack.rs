@@ -13,10 +13,24 @@
 //!    (`tensor::gemm::PackedA`), the bias slice, and the resolved conv
 //!    geometry (IC slices drop bias/ReLU, row shards zero their vertical
 //!    padding — exactly mirroring `compute_slice_with`);
-//!  * [`ScratchArena`] — a grow-only buffer set (im2col columns + GEMM
-//!    B-panel scratch) owned by one worker and reused across requests.
-//!    After warm-up its [`ScratchArena::grow_count`] stays flat: the
-//!    conv/dense hot loop performs no heap allocations.
+//!  * [`ScratchArena`] — a grow-only buffer set owned by one worker and
+//!    reused across requests. After warm-up its
+//!    [`ScratchArena::grow_count`] stays flat: the conv/dense hot loop
+//!    performs no heap allocations.
+//!
+//! Conv stages run as *implicit GEMM* by default ([`ConvLowering`]):
+//! `run_conv` hands the prepacked GEMM an `im2col::Im2colView` that
+//! gathers patches straight into the per-thread `KC×NC` B-panel pack
+//! buffer, so the full `c_in*k_h*k_w × oh*ow` column matrix — formerly
+//! the largest transient allocation of every compiled plan, often
+//! bigger than the prepacked weights it fed — is never materialized.
+//! The materialized path survives behind
+//! [`ConvLowering::Materialized`] (`IOP_CONV_LOWERING` /
+//! [`force_lowering`]) as the bench twin and CI memory-gate baseline;
+//! both lowerings pack identical panels and are bit-identical in
+//! output. [`ScratchArena::peak_bytes`] reports the high-water
+//! transient footprint either way (surfaced as
+//! `ExecStats::peak_scratch_bytes`).
 //!
 //! Sessions compile all m shards up front via [`CompiledPlan::compile`]
 //! (`Backend::Compiled`), which `Arc`-shares weight-identical kernels
@@ -29,12 +43,15 @@
 //! assert the grow counters stay flat under `inflight = m`.
 
 use std::collections::HashSet;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::model::{Model, OpKind, Stage};
 use crate::partition::plan::{Plan, SliceKind};
-use crate::tensor::gemm::{matvec, Epilogue, PackScratch, PackedA};
-use crate::tensor::im2col::im2col_into;
+use crate::tensor::gemm::{
+    gemm_prepacked, gemm_prepacked_from, matvec, Epilogue, PackScratch, PackedA,
+};
+use crate::tensor::im2col::{im2col_into, Im2colView};
 use crate::tensor::slice::{
     conv_weight_ic_slice, conv_weight_oc_slice, dense_weight_ic_slice, dense_weight_oc_slice,
 };
@@ -42,14 +59,95 @@ use crate::tensor::Tensor;
 
 use super::weights::WeightBundle;
 
+/// How a compiled conv stage lowers onto the prepacked GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvLowering {
+    /// Implicit GEMM (the default): conv patches are gathered straight
+    /// into the per-thread `KC×NC` B-panel pack buffer
+    /// (`im2col::Im2colView` through `gemm_prepacked_from`) — the full
+    /// im2col column matrix is never materialized, so the transient
+    /// footprint of a conv call is `gemm::pack_scratch_bytes` per
+    /// thread instead of `k*n*4` + that.
+    Fused,
+    /// PR 2–4 behavior, kept as the measurable twin for the
+    /// fused-vs-materialized bench pair and the CI peak-memory gate:
+    /// `im2col_into` builds the full column matrix in the arena's grow-
+    /// only `cols` buffer, then the dense prepacked GEMM consumes it.
+    Materialized,
+}
+
+impl ConvLowering {
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvLowering::Fused => "fused",
+            ConvLowering::Materialized => "materialized",
+        }
+    }
+
+    /// Code used by the [`force_lowering`] override slot (0 = none).
+    fn code(self) -> u8 {
+        match self {
+            ConvLowering::Fused => 1,
+            ConvLowering::Materialized => 2,
+        }
+    }
+}
+
+/// Process-global override slot for [`lowering_selected`]: 0 = default
+/// resolution, otherwise a [`ConvLowering::code`]. Written only by
+/// [`force_lowering`] (in-process benches / tests) — the
+/// `IOP_CONV_LOWERING` env override lives in [`lowering_auto`] so it is
+/// read exactly once, mirroring `kernels::selected`.
+static FORCED_LOWERING: AtomicU8 = AtomicU8::new(0);
+
+/// The conv lowering compiled plans resolve at kernel-compile time: the
+/// [`force_lowering`] override if set, else the `IOP_CONV_LOWERING` env
+/// override (`fused|materialized`), else [`ConvLowering::Fused`]. Like
+/// the microkernel choice, the lowering is *recorded into* each
+/// [`ConvKernel`] when its slice is compiled, so a live session keeps
+/// its lowering even if the selection is flipped afterwards.
+pub fn lowering_selected() -> ConvLowering {
+    match FORCED_LOWERING.load(Ordering::Relaxed) {
+        1 => ConvLowering::Fused,
+        2 => ConvLowering::Materialized,
+        _ => lowering_auto(),
+    }
+}
+
+/// Force a lowering (`None` restores env/default resolution). For
+/// bench/CLI setup code measuring fused vs materialized side by side —
+/// flip only between sessions, exactly like `kernels::force`.
+pub fn force_lowering(lowering: Option<ConvLowering>) {
+    FORCED_LOWERING.store(lowering.map_or(0, |l| l.code()), Ordering::Relaxed);
+}
+
+/// Env-resolved default, memoized: `IOP_CONV_LOWERING` or Fused.
+fn lowering_auto() -> ConvLowering {
+    static AUTO: OnceLock<ConvLowering> = OnceLock::new();
+    *AUTO.get_or_init(|| match std::env::var("IOP_CONV_LOWERING") {
+        Ok(v) if v == "fused" => ConvLowering::Fused,
+        Ok(v) if v == "materialized" => ConvLowering::Materialized,
+        Ok(v) => panic!("IOP_CONV_LOWERING={v}: expected fused|materialized"),
+        Err(_) => ConvLowering::Fused,
+    })
+}
+
 /// Grow-only scratch owned by one worker (or one centralized session),
 /// reused across requests so the steady-state conv/dense hot loop makes
 /// no heap allocations.
+///
+/// Under the default fused lowering only the GEMM B-panel buffers are
+/// ever touched — `cols` stays empty (zero bytes) and the arena's
+/// high-water footprint is `gemm::pack_scratch_bytes` of the largest
+/// conv stage. The materialized twin additionally grows `cols` to the
+/// largest full column matrix, which used to be the single biggest
+/// transient allocation of every compiled plan.
 #[derive(Debug, Default)]
 pub struct ScratchArena {
-    /// im2col column-matrix buffer (the GEMM B operand).
+    /// im2col column-matrix buffer (the GEMM B operand) — used only by
+    /// [`ConvLowering::Materialized`] kernels.
     cols: Vec<f32>,
-    /// Per-thread B-panel packing buffers for `gemm_prepacked`.
+    /// Per-thread B-panel packing buffers for the prepacked GEMM.
     pack: PackScratch,
     cols_grows: u64,
 }
@@ -67,8 +165,17 @@ impl ScratchArena {
         self.cols_grows + self.pack.grow_count()
     }
 
+    /// High-water transient bytes this arena ever held (buffers are
+    /// grow-only, so current size == peak). Surfaced per device as
+    /// `ExecStats::peak_scratch_bytes`; the fused-vs-materialized drop
+    /// on this number is the implicit-GEMM memory win.
+    pub fn peak_bytes(&self) -> u64 {
+        self.cols.len() as u64 * 4 + self.pack.bytes()
+    }
+
     /// Split borrow: the first `cols_len` im2col elements and the GEMM
-    /// pack scratch, both needed simultaneously by the conv path.
+    /// pack scratch, both needed simultaneously by the materialized
+    /// conv path.
     fn cols_and_pack(&mut self, cols_len: usize) -> (&mut [f32], &mut PackScratch) {
         if self.cols.len() < cols_len {
             self.cols.resize(cols_len, 0.0);
@@ -98,6 +205,11 @@ pub struct ConvKernel {
     pub pad_w: usize,
     /// Fused ReLU; false on IC partial slices.
     pub relu: bool,
+    /// im2col strategy, resolved once at compile time
+    /// ([`lowering_selected`]) so a live session keeps its lowering even
+    /// if the global selection is forced afterwards — the same contract
+    /// `PackedA` gives the microkernel choice.
+    pub lowering: ConvLowering,
 }
 
 /// A dense slice with its weight block pre-sliced. The matvec streams
@@ -312,6 +424,7 @@ pub fn compile_slice(
     threads: usize,
 ) -> CompiledKernel {
     let op = &model.ops[stage.op_idx];
+    let lowering = lowering_selected();
     match (slice, &op.kind) {
         (SliceKind::Idle, _) => CompiledKernel::Idle,
 
@@ -329,6 +442,7 @@ pub fn compile_slice(
             pad_h: *pad,
             pad_w: *pad,
             relu: *relu,
+            lowering,
         }),
         (SliceKind::Full | SliceKind::Replicate, OpKind::Dense { c_in, c_out, relu }) => {
             CompiledKernel::Dense(DenseKernel {
@@ -356,6 +470,7 @@ pub fn compile_slice(
                 pad_h: *pad,
                 pad_w: *pad,
                 relu: *relu,
+                lowering,
             })
         }
         (SliceKind::Oc { start, count }, OpKind::Dense { c_in, c_out, relu }) => {
@@ -386,6 +501,7 @@ pub fn compile_slice(
                 pad_h: *pad,
                 pad_w: *pad,
                 relu: false,
+                lowering,
             })
         }
         (SliceKind::Ic { start, count }, OpKind::Dense { c_in, c_out, .. }) => {
@@ -417,15 +533,21 @@ pub fn compile_slice(
                 pad_h: 0,
                 pad_w: *pad,
                 relu: *relu,
+                lowering,
             })
         }
         _ => unreachable!("slice kind {slice:?} incompatible with {}", op.name),
     }
 }
 
-/// Run a compiled conv slice: im2col into the arena's column buffer, then
-/// the prepacked GEMM with the fused bias+ReLU epilogue. No allocation
-/// beyond the output tensor once the arena is warm.
+/// Run a compiled conv slice through the lowering recorded at compile
+/// time: fused (implicit GEMM — patches gathered straight into the
+/// per-thread B-panel buffers, no column matrix) or materialized
+/// (im2col into the arena's `cols` buffer, then the dense prepacked
+/// GEMM). Both consume identical packed panels, so their outputs are
+/// bit-identical; either way the bias+ReLU epilogue rides in the GEMM
+/// writeback and nothing allocates beyond the output tensor once the
+/// arena is warm.
 pub fn run_conv(
     k: &ConvKernel,
     input: &Tensor,
@@ -437,21 +559,24 @@ pub fn run_conv(
     let out_h = (input.h + 2 * k.pad_h - k.k_h) / k.stride + 1;
     let out_w = (input.w + 2 * k.pad_w - k.k_w) / k.stride + 1;
     let n = out_h * out_w;
-    let (cols, pack) = arena.cols_and_pack(k.c_in * k.k_h * k.k_w * n);
-    im2col_into(input, k.k_h, k.k_w, k.stride, k.pad_h, k.pad_w, out_h, out_w, cols);
     let mut out = Tensor::zeros(k.c_out, out_h, out_w);
-    crate::tensor::gemm::gemm_prepacked(
-        &k.packed,
-        n,
-        cols,
-        &mut out.data,
-        Epilogue {
-            bias: k.bias.as_deref(),
-            relu: k.relu,
-        },
-        threads,
-        pack,
-    );
+    let ep = Epilogue {
+        bias: k.bias.as_deref(),
+        relu: k.relu,
+    };
+    match k.lowering {
+        ConvLowering::Fused => {
+            let view = Im2colView::new(
+                input, k.k_h, k.k_w, k.stride, k.pad_h, k.pad_w, out_h, out_w,
+            );
+            gemm_prepacked_from(&k.packed, &view, &mut out.data, ep, threads, &mut arena.pack);
+        }
+        ConvLowering::Materialized => {
+            let (cols, pack) = arena.cols_and_pack(k.c_in * k.k_h * k.k_w * n);
+            im2col_into(input, k.k_h, k.k_w, k.stride, k.pad_h, k.pad_w, out_h, out_w, cols);
+            gemm_prepacked(&k.packed, n, cols, &mut out.data, ep, threads, pack);
+        }
+    }
     out
 }
 
@@ -477,12 +602,194 @@ pub fn run_dense(k: &DenseKernel, input: &Tensor, threads: usize) -> Tensor {
 mod tests {
     use super::*;
     use crate::exec::backend::ComputeBackend;
-    use crate::exec::compute::compute_slice_with;
+    use crate::exec::compute::{centralized_inference_compiled, compute_slice_with};
     use crate::exec::weights::model_input;
     use crate::model::zoo;
+    use crate::tensor::gemm::pack_scratch_bytes;
+    use crate::tensor::kernels;
     use crate::tensor::slice::act_channel_slice;
 
     const REF: ComputeBackend = ComputeBackend::Reference;
+
+    /// Clone a compiled device with every conv kernel pinned to an
+    /// explicit lowering — keeps the lowering-specific assertions below
+    /// independent of the process-global selection (which a concurrent
+    /// test could in principle force).
+    fn with_lowering(cd: &CompiledDevice, lowering: ConvLowering) -> CompiledDevice {
+        CompiledDevice {
+            stages: cd
+                .stages
+                .iter()
+                .map(|k| {
+                    Arc::new(match k.as_ref() {
+                        CompiledKernel::Conv(c) => CompiledKernel::Conv(ConvKernel {
+                            lowering,
+                            ..c.clone()
+                        }),
+                        other => other.clone(),
+                    })
+                })
+                .collect(),
+            threads: cd.threads,
+        }
+    }
+
+    /// Max over conv stages of the analytical fused scratch
+    /// (`pack_scratch_bytes`) and of the full column-matrix bytes, for a
+    /// centralized (Full-slice) walk of `m`.
+    fn centralized_conv_scratch_extrema(m: &Model) -> (u64, u64) {
+        let kern = kernels::selected();
+        let (mut pack_max, mut cols_max) = (0u64, 0u64);
+        for &stage in m.stages() {
+            if let OpKind::Conv2d {
+                c_in,
+                k_h,
+                k_w,
+                stride,
+                pad,
+                ..
+            } = m.ops[stage.op_idx].kind
+            {
+                let ish = m.in_shape(stage.op_idx);
+                let oh = (ish.h + 2 * pad - k_h) / stride + 1;
+                let ow = (ish.w + 2 * pad - k_w) / stride + 1;
+                let (k, n) = (c_in * k_h * k_w, oh * ow);
+                pack_max = pack_max.max(pack_scratch_bytes(kern, k, n) as u64);
+                cols_max = cols_max.max((k * n * 4) as u64);
+            }
+        }
+        (pack_max, cols_max)
+    }
+
+    #[test]
+    fn force_lowering_overrides_and_restores() {
+        // No other test in this binary forces the lowering, so the
+        // default must be visible here; compile_slice must record it.
+        assert_eq!(lowering_selected(), ConvLowering::Fused);
+        force_lowering(Some(ConvLowering::Materialized));
+        assert_eq!(lowering_selected(), ConvLowering::Materialized);
+        force_lowering(None);
+        assert_eq!(lowering_selected(), ConvLowering::Fused);
+        assert_eq!(ConvLowering::Fused.name(), "fused");
+        assert_eq!(ConvLowering::Materialized.name(), "materialized");
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        match compile_slice(&m, &wb, m.stages()[0], &SliceKind::Full, 1) {
+            CompiledKernel::Conv(k) => {
+                assert_eq!(k.lowering, ConvLowering::Fused, "fused is the default")
+            }
+            other => panic!("expected conv kernel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fused_conv_bit_identical_to_materialized_twin() {
+        // Both lowerings feed the microkernel identical packed panels,
+        // so the outputs must match *bitwise*, not just within
+        // tolerance — on full slices and on channel-sharded input.
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let x = model_input(&m);
+        let stages = m.stages();
+        let s0 = compute_slice_with(REF, &m, &wb, stages[0], &SliceKind::Full, &x, None);
+        let cases: Vec<(ConvKernel, Tensor)> = vec![
+            (
+                match compile_slice(&m, &wb, stages[0], &SliceKind::Full, 2) {
+                    CompiledKernel::Conv(k) => k,
+                    other => panic!("expected conv kernel, got {other:?}"),
+                },
+                x,
+            ),
+            (
+                {
+                    let slice = SliceKind::Ic { start: 2, count: 5 };
+                    match compile_slice(&m, &wb, stages[1], &slice, 2) {
+                        CompiledKernel::Conv(k) => k,
+                        other => panic!("expected conv kernel, got {other:?}"),
+                    }
+                },
+                act_channel_slice(&s0, 2, 5),
+            ),
+        ];
+        for (i, (kernel, input)) in cases.into_iter().enumerate() {
+            let fused = ConvKernel {
+                lowering: ConvLowering::Fused,
+                ..kernel.clone()
+            };
+            let mat = ConvKernel {
+                lowering: ConvLowering::Materialized,
+                ..kernel
+            };
+            let mut fa = ScratchArena::new();
+            let mut ma = ScratchArena::new();
+            for threads in [1usize, 2] {
+                let got = run_conv(&fused, &input, threads, &mut fa);
+                let want = run_conv(&mat, &input, threads, &mut ma);
+                assert_eq!(got, want, "case {i} threads={threads}");
+            }
+            // The fused arena never touched the cols buffer.
+            assert!(fa.peak_bytes() < ma.peak_bytes(), "case {i}");
+        }
+    }
+
+    #[test]
+    fn fused_centralized_arena_peak_matches_pack_model() {
+        // The measured high-water arena bytes of a fused centralized
+        // walk must equal the analytical model exactly: max over conv
+        // stages of the per-thread pack-buffer bytes (threads = 1).
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let x = model_input(&m);
+        let cd = with_lowering(
+            &CompiledDevice::compile_centralized(&m, &wb, 1),
+            ConvLowering::Fused,
+        );
+        let mut arena = ScratchArena::new();
+        centralized_inference_compiled(&m, &cd, &x, &mut arena);
+        let (pack_max, _) = centralized_conv_scratch_extrema(&m);
+        assert_eq!(arena.peak_bytes(), pack_max);
+    }
+
+    #[test]
+    fn fused_arena_peak_drops_at_least_25pct_vs_materialized() {
+        // The PR acceptance bar, asserted at the centralized level: the
+        // fused arena must be ≥ 25% smaller than the materialized twin's
+        // and must never hold a full-column-matrix-sized allocation.
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let x = model_input(&m);
+        let base = CompiledDevice::compile_centralized(&m, &wb, 1);
+        let mut fused_arena = ScratchArena::new();
+        let mut mat_arena = ScratchArena::new();
+        let fused = centralized_inference_compiled(
+            &m,
+            &with_lowering(&base, ConvLowering::Fused),
+            &x,
+            &mut fused_arena,
+        );
+        let mat = centralized_inference_compiled(
+            &m,
+            &with_lowering(&base, ConvLowering::Materialized),
+            &x,
+            &mut mat_arena,
+        );
+        assert_eq!(fused, mat, "lowerings must agree bitwise end to end");
+        let (fp, mp) = (fused_arena.peak_bytes(), mat_arena.peak_bytes());
+        assert!(fp > 0 && mp > 0);
+        assert!(
+            fp * 4 <= mp * 3,
+            "fused peak {fp} not >= 25% below materialized {mp}"
+        );
+        let (_, cols_max) = centralized_conv_scratch_extrema(&m);
+        assert!(
+            fp < cols_max,
+            "fused arena ({fp} B) still holds a full-cols-sized buffer ({cols_max} B)"
+        );
+        assert!(
+            mp >= cols_max,
+            "materialized twin must pay the full column matrix"
+        );
+    }
 
     #[test]
     fn compiled_conv_matches_reference_full_slice() {

@@ -60,6 +60,12 @@ pub struct ThroughputReport {
     pub bytes_total: u64,
     /// Total messages sent across all requests and devices.
     pub messages_total: u64,
+    /// Per-device high-water transient scratch bytes over the run
+    /// (element-wise max of `ExecStats::peak_scratch_bytes`; all zero on
+    /// non-compiled backends). Under the fused im2col lowering this is
+    /// the pack-buffer footprint — the number the implicit-GEMM memory
+    /// gate watches under sustained load.
+    pub peak_scratch_bytes: Vec<u64>,
 }
 
 impl ThroughputReport {
@@ -78,6 +84,15 @@ impl ThroughputReport {
             ),
             ("bytes_total", Json::num(self.bytes_total as f64)),
             ("messages_total", Json::num(self.messages_total as f64)),
+            (
+                "peak_scratch_bytes",
+                Json::Arr(
+                    self.peak_scratch_bytes
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -121,6 +136,7 @@ pub fn serve_closed_loop(
     let mut busy_secs = vec![0.0f64; m];
     let mut bytes_total = 0u64;
     let mut messages_total = 0u64;
+    let mut peak_scratch = vec![0u64; m];
 
     let t0 = Instant::now();
     let mut submitted = 0usize;
@@ -140,6 +156,9 @@ pub fn serve_closed_loop(
             }
             bytes_total += r.stats.bytes_sent.iter().sum::<u64>();
             messages_total += r.stats.messages_sent.iter().sum::<usize>() as u64;
+            for (p, &b) in peak_scratch.iter_mut().zip(&r.stats.peak_scratch_bytes) {
+                *p = (*p).max(b);
+            }
             on_result(collected, &r);
             collected += 1;
         }
@@ -158,6 +177,7 @@ pub fn serve_closed_loop(
         device_busy_frac: busy_secs.iter().map(|&b| b / wall_secs).collect(),
         bytes_total,
         messages_total,
+        peak_scratch_bytes: peak_scratch,
     })
 }
 
@@ -213,6 +233,9 @@ mod tests {
         assert!(rep.latency_p50 > 0.0 && rep.latency_p50 <= rep.latency_p99);
         assert_eq!(rep.device_busy_frac.len(), cluster.m());
         assert!(rep.bytes_total > 0 && rep.messages_total > 0);
+        // compiled backend: every device reports its arena high-water
+        assert_eq!(rep.peak_scratch_bytes.len(), cluster.m());
+        assert!(rep.peak_scratch_bytes.iter().sum::<u64>() > 0);
         // session is drained afterwards
         assert_eq!(session.inflight(), 0);
     }

@@ -32,7 +32,16 @@
 //!    no heap allocations and skip the per-call weight packing entirely.
 //!    A `PackedA` records *which* kernel it was packed for, so compiled
 //!    plans always run on a microkernel matching their panel layout even
-//!    if the global selection is overridden afterwards.
+//!    if the global selection is overridden afterwards;
+//!  * [`BPanelProvider`] abstracts *where B panels come from*: the
+//!    prepacked GEMM only ever touches B through `KC`-deep, `nr`-wide
+//!    packed panels, so the provider can be a plain materialized matrix
+//!    ([`DenseB`], packed by the strided-copy `pack_b`) or a virtual
+//!    view that synthesizes values on the fly —
+//!    `tensor::im2col::Im2colView` gathers conv patches directly into
+//!    the per-thread pack buffer, which is what lets the compiled conv
+//!    path skip materializing the full im2col column matrix entirely
+//!    (implicit GEMM; `exec::prepack::run_conv`).
 
 use super::kernels::{self, Kernel};
 
@@ -41,10 +50,10 @@ pub use super::kernels::Epilogue;
 /// Row-block height cap (rounded down to the kernel's `mr` multiple).
 const MC: usize = 64;
 /// k-block depth.
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 /// Column-panel width cap (the kernel's `nr` divides it for every
 /// compiled-in geometry: 512 = 32·16 = 64·8).
-const NC: usize = 512;
+pub(crate) const NC: usize = 512;
 
 /// Default row-block height for `kern`: `MC` rounded down to a positive
 /// `mr` multiple (e.g. 64 for the 4- and 8-tall tiles, 60 for AVX2's
@@ -178,6 +187,13 @@ impl PackScratch {
         self.grows
     }
 
+    /// Scratch bytes currently held. Buffers never shrink, so this is
+    /// also the high-water mark — `exec::prepack::ScratchArena` reports
+    /// it as the transient footprint of the fused-im2col conv path.
+    pub fn bytes(&self) -> u64 {
+        self.bufs.iter().map(|b| b.len() as u64 * 4).sum()
+    }
+
     /// At least `t` buffers of at least `len` elements each.
     fn ensure(&mut self, t: usize, len: usize) -> &mut [Vec<f32>] {
         if self.bufs.len() < t {
@@ -192,6 +208,80 @@ impl PackScratch {
         }
         &mut self.bufs[..t]
     }
+}
+
+/// Source of the prepacked GEMM's B operand, consumed one packed
+/// `kc×nc` block at a time. [`gemm_prepacked_from`] never reads B
+/// except through [`BPanelProvider::pack_panel`], so a provider may be
+/// a materialized `k×n` matrix ([`DenseB`]) or a *virtual* matrix whose
+/// entries are synthesized during packing (`im2col::Im2colView`, which
+/// gathers conv patches straight into the pack buffer — no full column
+/// matrix is ever materialized). `Sync` because the row-split threads
+/// share one provider reference, each packing into its own buffer.
+pub trait BPanelProvider: Sync {
+    /// Rows of B (the reduction depth `k`).
+    fn k(&self) -> usize;
+    /// Columns of B (the output width `n`).
+    fn n(&self) -> usize;
+    /// Pack the `kc×nc` block at `(pc, jc)` into `nr`-wide column
+    /// micro-panels in `bpack` (layout identical to [`pack_b`]: panel
+    /// `jt` occupies `bpack[jt*kc*nr..(jt+1)*kc*nr]`, row-major by
+    /// depth, ragged right edge zero-padded). `nr` is the consuming
+    /// microkernel's tile width — the caller derives it from the
+    /// `PackedA` being multiplied, so the packed layout always matches
+    /// the kernel that walks it.
+    fn pack_panel(&self, bpack: &mut [f32], jc: usize, nc: usize, pc: usize, kc: usize, nr: usize);
+}
+
+/// The trivial provider: a materialized row-major `k×n` matrix, packed
+/// by the branch-hoisted strided-copy [`pack_b`]. This is the dense
+/// path [`gemm_prepacked`] has always run.
+pub struct DenseB<'a> {
+    k: usize,
+    n: usize,
+    b: &'a [f32],
+}
+
+impl<'a> DenseB<'a> {
+    pub fn new(k: usize, n: usize, b: &'a [f32]) -> DenseB<'a> {
+        assert_eq!(b.len(), k * n, "gemm: B must be k*n");
+        DenseB { k, n, b }
+    }
+}
+
+impl BPanelProvider for DenseB<'_> {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn pack_panel(
+        &self,
+        bpack: &mut [f32],
+        jc: usize,
+        nc: usize,
+        pc: usize,
+        kc: usize,
+        nr: usize,
+    ) {
+        pack_b(bpack, self.b, self.n, jc, nc, pc, kc, nr);
+    }
+}
+
+/// Bytes of per-thread B-panel scratch [`gemm_prepacked_from`] needs for
+/// a `k×n` problem on kernel `kern` — one `KC`-deep, `NC`-wide (clamped
+/// to the problem, rounded up to `nr` panels) buffer per row-split
+/// thread. This *is* the whole transient footprint of a fused-im2col
+/// conv call, which is why `cost::memory`'s analytical scratch model
+/// calls it.
+pub fn pack_scratch_bytes(kern: &Kernel, k: usize, n: usize) -> usize {
+    if k == 0 || n == 0 {
+        return 0;
+    }
+    NC.min(n).div_ceil(kern.nr) * kern.nr * KC.min(k) * 4
 }
 
 /// `c += pa·b`, then apply `ep` — [`gemm`] with the A (weight) packing
@@ -211,9 +301,27 @@ pub fn gemm_prepacked(
     threads: usize,
     scratch: &mut PackScratch,
 ) {
+    gemm_prepacked_from(pa, &DenseB::new(pa.k, n, b), c, ep, threads, scratch)
+}
+
+/// [`gemm_prepacked`] over an arbitrary [`BPanelProvider`] — the B
+/// operand is only ever touched through `pack_panel`, so a virtual
+/// provider (`im2col::Im2colView`) runs the identical blocked kernel
+/// without a materialized B. Bit-identical to the dense path whenever
+/// the provider packs the same values (the packed panels, not the B
+/// storage, are what the microkernel consumes).
+pub fn gemm_prepacked_from<S: BPanelProvider>(
+    pa: &PackedA,
+    src: &S,
+    c: &mut [f32],
+    ep: Epilogue,
+    threads: usize,
+    scratch: &mut PackScratch,
+) {
     let (m, k) = (pa.m, pa.k);
+    let n = src.n();
     let kern = pa.kernel;
-    assert_eq!(b.len(), k * n, "gemm: B must be k*n");
+    assert_eq!(src.k(), k, "gemm: provider depth must match packed A");
     assert_eq!(c.len(), m * n, "gemm: C must be m*n");
     if let Some(bias) = ep.bias {
         assert_eq!(bias.len(), m, "gemm: bias must have one entry per row");
@@ -235,7 +343,7 @@ pub fn gemm_prepacked(
     };
     let bufs = scratch.ensure(t, bpack_len);
     if t == 1 {
-        gemm_prepacked_rows(pa, 0, pa.n_row_blocks, n, b, c, ep, &mut bufs[0]);
+        gemm_prepacked_rows(pa, 0, pa.n_row_blocks, src, c, ep, &mut bufs[0]);
         return;
     }
     // Distribute row blocks evenly (floor/ceil split) — a uniform
@@ -260,8 +368,7 @@ pub fn gemm_prepacked(
                     pa,
                     b0,
                     n_blks,
-                    n,
-                    b,
+                    src,
                     c_blk,
                     Epilogue {
                         bias: bias_blk,
@@ -277,18 +384,20 @@ pub fn gemm_prepacked(
 
 /// Serial prepacked kernel over row blocks `[row_blk0, row_blk0+n_blks)`;
 /// `c_blk` holds exactly those rows (bias in `ep` is row-block-local).
+/// B is consumed exclusively through `src.pack_panel` — one packed
+/// `kc×nc` block at a time, into this thread's `bpack` buffer.
 #[allow(clippy::too_many_arguments)]
-fn gemm_prepacked_rows(
+fn gemm_prepacked_rows<S: BPanelProvider>(
     pa: &PackedA,
     row_blk0: usize,
     n_blks: usize,
-    n: usize,
-    b: &[f32],
+    src: &S,
     c_blk: &mut [f32],
     ep: Epilogue,
     bpack: &mut [f32],
 ) {
     let k = pa.k;
+    let n = src.n();
     let kern = pa.kernel;
     let (mr, nr) = (kern.mr, kern.nr);
     for jc in (0..n).step_by(NC) {
@@ -297,7 +406,7 @@ fn gemm_prepacked_rows(
         for (pc_idx, pc) in (0..k).step_by(KC).enumerate() {
             let kc = KC.min(k - pc);
             let last_k = pc + kc == k;
-            pack_b(bpack, b, n, jc, nc, pc, kc, nr);
+            src.pack_panel(bpack, jc, nc, pc, kc, nr);
             for blk in 0..n_blks {
                 let ic_global = (row_blk0 + blk) * pa.rb;
                 let mc = pa.rb.min(pa.m - ic_global);
@@ -918,6 +1027,61 @@ mod tests {
             &mut scratch,
         );
         assert_eq!(c, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_scratch_bytes_model_matches_measured_buffer() {
+        // The analytical scratch model (used by cost::memory for the
+        // fused-conv footprint) must agree exactly with what a serial
+        // prepacked call actually grows its PackScratch to.
+        for kern in kernels::supported() {
+            for &(m, k, n) in &[
+                (4usize, 1usize, 1usize),
+                (8, 27, 1024),
+                (16, KC + 9, NC + 17),
+                (5, 300, 33),
+            ] {
+                let a = rand_vec(m * k, 9000);
+                let b = rand_vec(k * n, 9001);
+                let pa = PackedA::pack_with(kern, m, k, &a, 1);
+                let mut scratch = PackScratch::new();
+                let mut c = vec![0.0f32; m * n];
+                gemm_prepacked(&pa, n, &b, &mut c, Epilogue::default(), 1, &mut scratch);
+                assert_eq!(
+                    scratch.bytes(),
+                    pack_scratch_bytes(kern, k, n) as u64,
+                    "{} {m}x{k}x{n}",
+                    kern.name()
+                );
+            }
+            assert_eq!(pack_scratch_bytes(kern, 0, 7), 0);
+            assert_eq!(pack_scratch_bytes(kern, 7, 0), 0);
+        }
+    }
+
+    #[test]
+    fn dense_provider_routes_identically_to_gemm_prepacked() {
+        // gemm_prepacked is now a thin wrapper over the provider path;
+        // calling the generic entry point with DenseB directly must be
+        // bit-identical (same packed panels, same kernel walk).
+        let (m, k, n) = (70, 300, 33);
+        let a = rand_vec(m * k, 9100);
+        let b = rand_vec(k * n, 9101);
+        let bias = rand_vec(m, 9102);
+        let ep = Epilogue {
+            bias: Some(&bias),
+            relu: true,
+        };
+        for kern in kernels::supported() {
+            let pa = PackedA::pack_with(kern, m, k, &a, 2);
+            let mut scratch = PackScratch::new();
+            let mut via_wrapper = vec![0.0f32; m * n];
+            gemm_prepacked(&pa, n, &b, &mut via_wrapper, ep, 2, &mut scratch);
+            let mut via_provider = vec![0.0f32; m * n];
+            let src = DenseB::new(k, n, &b);
+            gemm_prepacked_from(&pa, &src, &mut via_provider, ep, 2, &mut scratch);
+            assert_eq!(via_provider, via_wrapper, "{}", kern.name());
+        }
     }
 
     #[test]

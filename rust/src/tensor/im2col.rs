@@ -18,8 +18,19 @@
 //! register tiles through `tensor::kernels` — AVX2+FMA / NEON where the
 //! CPU supports them, portable scalar otherwise — with no change to any
 //! call site here.
+//!
+//! [`Im2colView`] is the *implicit* counterpart: it implements
+//! `gemm::BPanelProvider`, gathering conv patches directly into the
+//! prepacked GEMM's per-thread `KC×NC` B-panel buffer instead of first
+//! materializing the full `c_in*k_h*k_w × out_h*out_w` column matrix.
+//! The gather reuses the same interior/border split per (tap, output
+//! row) segment, so the packed panels are bit-identical to running
+//! `pack_b` over a materialized [`im2col`] — only the monolithic `cols`
+//! buffer (the largest transient allocation of every compiled conv
+//! stage) disappears. `exec::prepack::run_conv` routes the compiled
+//! serving path through it.
 
-use super::gemm::{gemm_parallel, matvec, Epilogue};
+use super::gemm::{gemm_parallel, matvec, BPanelProvider, Epilogue};
 use super::Tensor;
 
 /// Build the column matrix: `c_in*k_h*k_w` rows × `out_h*out_w` columns,
@@ -95,6 +106,161 @@ pub fn im2col_into(
                             }
                         }
                     }
+                }
+            }
+        }
+    }
+}
+
+/// A virtual im2col matrix: behaves as the `c_in*k_h*k_w × out_h*out_w`
+/// column matrix of a conv input without materializing it. Implements
+/// [`BPanelProvider`], so `gemm::gemm_prepacked_from` can consume conv
+/// patches panel-by-panel — the whole transient footprint of a conv
+/// call shrinks from the full column matrix to one `KC×NC` pack buffer
+/// per thread (`gemm::pack_scratch_bytes`).
+///
+/// Row `(ic*k_h + ky)*k_w + kx` / column `oy*out_w + ox` holds input
+/// pixel `(ic, oy*stride + ky - pad_h, ox*stride + kx - pad_w)`, or 0
+/// where the receptive field falls outside the image — exactly
+/// [`im2col`]'s layout, so packed panels are bit-identical to `pack_b`
+/// over the materialized matrix.
+pub struct Im2colView<'a> {
+    input: &'a Tensor,
+    k_h: usize,
+    k_w: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    out_h: usize,
+    out_w: usize,
+}
+
+impl<'a> Im2colView<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        input: &'a Tensor,
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        pad_h: usize,
+        pad_w: usize,
+        out_h: usize,
+        out_w: usize,
+    ) -> Im2colView<'a> {
+        assert!(stride >= 1, "im2col view: stride must be >= 1");
+        super::ops::assert_conv_fits(input, k_h, k_w, pad_h, pad_w);
+        assert_eq!(
+            out_h,
+            (input.h + 2 * pad_h - k_h) / stride + 1,
+            "im2col view: out_h inconsistent with conv geometry"
+        );
+        assert_eq!(
+            out_w,
+            (input.w + 2 * pad_w - k_w) / stride + 1,
+            "im2col view: out_w inconsistent with conv geometry"
+        );
+        Im2colView {
+            input,
+            k_h,
+            k_w,
+            stride,
+            pad_h,
+            pad_w,
+            out_h,
+            out_w,
+        }
+    }
+
+    /// Gather one tap row's values for `dst.len()` consecutive output
+    /// pixels starting at flat output index `j0` (the im2col entries
+    /// `[row, j0 .. j0 + dst.len())` for tap `(ic, ky, kx)`). Segments
+    /// are split per output row; within a row the stride-1 interior is
+    /// one `copy_from_slice` with zero-filled borders, mirroring
+    /// [`im2col_into`]'s interior/border split.
+    fn gather_tap_cols(&self, ic: usize, ky: usize, kx: usize, j0: usize, dst: &mut [f32]) {
+        let input = self.input;
+        let h = input.h as isize;
+        let w = input.w as isize;
+        let mut j = j0;
+        let mut done = 0usize;
+        while done < dst.len() {
+            let oy = j / self.out_w;
+            let ox0 = j % self.out_w;
+            let seg = (self.out_w - ox0).min(dst.len() - done);
+            let d = &mut dst[done..done + seg];
+            let iy = (oy * self.stride + ky) as isize - self.pad_h as isize;
+            if iy < 0 || iy >= h {
+                d.fill(0.0); // whole segment reads vertical padding
+            } else {
+                let src_row = input.idx(ic, iy as usize, 0);
+                if self.stride == 1 {
+                    // ix = ox + kx - pad_w must lie in [0, w): the valid
+                    // output columns form one contiguous run.
+                    let off = kx as isize - self.pad_w as isize;
+                    let seg_end = (ox0 + seg) as isize;
+                    let lo = (-off).clamp(ox0 as isize, seg_end) as usize;
+                    let hi = (w - off).clamp(ox0 as isize, seg_end) as usize;
+                    d[..lo - ox0].fill(0.0);
+                    if hi > lo {
+                        let src0 = (src_row as isize + lo as isize + off) as usize;
+                        d[lo - ox0..hi - ox0]
+                            .copy_from_slice(&input.data[src0..src0 + (hi - lo)]);
+                    }
+                    d[hi - ox0..].fill(0.0);
+                } else {
+                    for (t, dv) in d.iter_mut().enumerate() {
+                        let ix =
+                            ((ox0 + t) * self.stride + kx) as isize - self.pad_w as isize;
+                        *dv = if ix >= 0 && ix < w {
+                            input.data[src_row + ix as usize]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+            }
+            done += seg;
+            j += seg;
+        }
+    }
+}
+
+impl BPanelProvider for Im2colView<'_> {
+    fn k(&self) -> usize {
+        self.input.c * self.k_h * self.k_w
+    }
+
+    fn n(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    fn pack_panel(
+        &self,
+        bpack: &mut [f32],
+        jc: usize,
+        nc: usize,
+        pc: usize,
+        kc: usize,
+        nr: usize,
+    ) {
+        let n_panels = nc.div_ceil(nr);
+        assert!(
+            bpack.len() >= n_panels * kc * nr,
+            "im2col pack_panel: scratch buffer too small"
+        );
+        for jt in 0..n_panels {
+            let j0 = jc + jt * nr;
+            let cols = nr.min(jc + nc - j0);
+            let panel = &mut bpack[jt * kc * nr..(jt + 1) * kc * nr];
+            for (p, dst) in panel.chunks_exact_mut(nr).enumerate() {
+                // Decompose the virtual B row into its weight tap.
+                let row = pc + p;
+                let kx = row % self.k_w;
+                let ky = (row / self.k_w) % self.k_h;
+                let ic = row / (self.k_w * self.k_h);
+                self.gather_tap_cols(ic, ky, kx, j0, &mut dst[..cols]);
+                for v in &mut dst[cols..] {
+                    *v = 0.0;
                 }
             }
         }
@@ -265,5 +431,97 @@ mod tests {
         let t = Tensor::zeros(1, 2, 2);
         let w = vec![0.0; 25];
         conv2d_gemm(&t, &w, None, 1, 5, 5, 1, 0, 0, false, 1);
+    }
+
+    /// Conv geometries straddling the GEMM blocking boundaries:
+    /// `n > NC` (column-panel split), `k > KC` (depth split), strided
+    /// and asymmetric padding, pointwise, and stride > kernel.
+    fn view_cases() -> Vec<(usize, usize, usize, usize, usize, usize, usize, usize)> {
+        vec![
+            // (c, h, w, k_h, k_w, stride, pad_h, pad_w)
+            (3, 32, 32, 3, 3, 1, 1, 1), // n = 1024 crosses NC = 512
+            (30, 10, 9, 3, 3, 1, 1, 1), // k = 270 crosses KC = 256
+            (2, 11, 7, 3, 5, 2, 0, 2),  // strided, asymmetric pad
+            (1, 5, 5, 1, 1, 1, 0, 0),   // pointwise: view == input
+            (4, 9, 9, 5, 5, 3, 2, 2),   // big window, stride 3
+            (2, 6, 5, 3, 3, 2, 1, 0),
+        ]
+    }
+
+    #[test]
+    fn im2col_view_packs_identically_to_materialized_pack() {
+        use crate::tensor::gemm::{DenseB, KC, NC};
+        for (ci, &(c, h, w, kh, kw, s, ph, pw)) in view_cases().iter().enumerate() {
+            let t = rand_tensor(c, h, w, 500 + ci as u64);
+            let (oh, ow) = ((h + 2 * ph - kh) / s + 1, (w + 2 * pw - kw) / s + 1);
+            let (k, n) = (c * kh * kw, oh * ow);
+            let cols = im2col(&t, kh, kw, s, ph, pw, oh, ow);
+            let view = Im2colView::new(&t, kh, kw, s, ph, pw, oh, ow);
+            assert_eq!((view.k(), view.n()), (k, n));
+            let dense = DenseB::new(k, n, &cols);
+            // Every (k block, column block) the prepacked GEMM would
+            // request, at every compiled-in tile width, must pack
+            // bit-identically — distinct dirty sentinels prove the whole
+            // prefix (including zero padding) is overwritten.
+            for nr in [4usize, 8, 16] {
+                for jc in (0..n).step_by(NC) {
+                    let nc = NC.min(n - jc);
+                    for pc in (0..k).step_by(KC) {
+                        let kc = KC.min(k - pc);
+                        let len = nc.div_ceil(nr) * nr * kc;
+                        let mut want = vec![55.0f32; len];
+                        let mut got = vec![77.0f32; len];
+                        dense.pack_panel(&mut want, jc, nc, pc, kc, nr);
+                        view.pack_panel(&mut got, jc, nc, pc, kc, nr);
+                        assert_eq!(got, want, "case {ci} nr={nr} jc={jc} pc={pc}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_view_gemm_bit_identical_to_materialized_every_kernel() {
+        // The implicit-GEMM path packs the same values into the same
+        // panel layout, so the result must equal the dense path *bitwise*
+        // (not just within tolerance) on every compiled-in microkernel,
+        // serial and row-split-threaded.
+        use crate::tensor::gemm::{gemm_prepacked, gemm_prepacked_from, PackScratch, PackedA};
+        use crate::tensor::kernels;
+        for kern in kernels::supported() {
+            let mut scratch = PackScratch::new();
+            for (ci, &(c, h, w, kh, kw, s, ph, pw)) in view_cases().iter().enumerate() {
+                let t = rand_tensor(c, h, w, 600 + ci as u64);
+                let (oh, ow) = ((h + 2 * ph - kh) / s + 1, (w + 2 * pw - kw) / s + 1);
+                let (k, n) = (c * kh * kw, oh * ow);
+                // 70 output rows push the big cases past the GEMM's
+                // parallel-path FLOP threshold, so the scoped-thread
+                // row split runs against the *virtual* provider too.
+                let c_out = 70;
+                let weight = rand_vec(c_out * k, 700 + ci as u64);
+                let bias = rand_vec(c_out, 800 + ci as u64);
+                let pa = PackedA::pack_with(kern, c_out, k, &weight, 2);
+                let cols = im2col(&t, kh, kw, s, ph, pw, oh, ow);
+                for relu in [false, true] {
+                    let ep = Epilogue {
+                        bias: Some(&bias),
+                        relu,
+                    };
+                    for threads in [1usize, 3] {
+                        let mut want = vec![0.0f32; c_out * n];
+                        gemm_prepacked(&pa, n, &cols, &mut want, ep, threads, &mut scratch);
+                        let view = Im2colView::new(&t, kh, kw, s, ph, pw, oh, ow);
+                        let mut got = vec![0.0f32; c_out * n];
+                        gemm_prepacked_from(&pa, &view, &mut got, ep, threads, &mut scratch);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} case {ci} relu={relu} threads={threads}",
+                            kern.name()
+                        );
+                    }
+                }
+            }
+        }
     }
 }

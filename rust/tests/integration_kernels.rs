@@ -35,11 +35,13 @@ fn dispatch_lock() -> MutexGuard<'static, ()> {
         .unwrap_or_else(|e| e.into_inner())
 }
 
-/// Restores auto-detection even if the test body panics.
+/// Restores auto-detection (microkernel *and* conv lowering) even if
+/// the test body panics.
 struct ForceReset;
 impl Drop for ForceReset {
     fn drop(&mut self) {
         kernels::force(None);
+        iop::exec::force_lowering(None);
     }
 }
 
@@ -115,6 +117,82 @@ fn every_variant_compiled_session_matches_reference_and_is_deterministic() {
                     strategy.name()
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn every_variant_fused_equals_materialized_lowering_bitwise() {
+    // The implicit-GEMM conv path packs the same panels the materialized
+    // path does, so per ISA the two lowerings must agree *bitwise* end
+    // to end — and the fused session must report a strictly smaller
+    // transient high-water footprint.
+    let _guard = dispatch_lock();
+    let _reset = ForceReset;
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+    let input = model_input(&model);
+    for kern in kernels::supported() {
+        kernels::force(Some(kern));
+        let mut fused =
+            ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        iop::exec::force_lowering(Some(iop::exec::ConvLowering::Materialized));
+        let mut mat =
+            ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        iop::exec::force_lowering(None);
+        assert_eq!(fused.conv_lowering(), "fused");
+        assert_eq!(mat.conv_lowering(), "materialized");
+        let rf = fused.infer(input.clone()).unwrap();
+        let rm = mat.infer(input.clone()).unwrap();
+        assert_eq!(
+            rf.output,
+            rm.output,
+            "{}: fused and materialized lowerings diverged",
+            kern.name()
+        );
+        let (fp, mp) = (
+            rf.stats.peak_scratch_bytes.iter().max().copied().unwrap(),
+            rm.stats.peak_scratch_bytes.iter().max().copied().unwrap(),
+        );
+        assert!(
+            fp > 0 && fp < mp,
+            "{}: fused peak {fp} must be below materialized {mp}",
+            kern.name()
+        );
+        // Repeated fused runs stay bit-identical per ISA (the PR 3
+        // pipelined==serial determinism carrier).
+        let again = fused.infer(input.clone()).unwrap();
+        assert_eq!(again.output, rf.output, "{}", kern.name());
+    }
+}
+
+#[test]
+fn every_variant_fused_handles_uneven_heterogeneous_shards() {
+    // Heterogeneous capabilities force uneven OC/IC/row allocations in
+    // every planner; the fused conv path must match the Reference oracle
+    // on each microkernel variant across all of them.
+    let _guard = dispatch_lock();
+    let _reset = ForceReset;
+    let model = zoo::vgg_mini();
+    let cluster = profiles::heterogeneous();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let expect = centralized_inference(&model, &wb, &input);
+    for kern in kernels::supported() {
+        kernels::force(Some(kern));
+        for strategy in Strategy::all() {
+            let plan = pipeline::plan(&model, &cluster, strategy);
+            let mut session =
+                ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+            let r = session.infer(input.clone()).unwrap();
+            assert!(
+                r.output.allclose(&expect, 1e-4, 1e-4),
+                "{} {}: fused compiled session diverged (diff={})",
+                kern.name(),
+                strategy.name(),
+                r.output.max_abs_diff(&expect)
+            );
         }
     }
 }
