@@ -5,9 +5,9 @@ use anyhow::{anyhow, bail, Result};
 
 use super::args::Args;
 use crate::device::{Cluster, Device};
+use crate::config::FaultPlan;
 use crate::exec::{
-    run_plan, serve_closed_loop, Backend, ExecOptions, ExecSession, ServeOptions,
-    ThroughputReport,
+    serve_closed_loop, Backend, ExecSession, ServeOptions, SessionOptions, ThroughputReport,
 };
 use crate::metrics::{latency_table, memory_table, stage_breakdown_table, ModelComparison};
 use crate::model::{zoo, Model};
@@ -82,6 +82,18 @@ fn backend_from_args(a: &mut Args, default: &str) -> Result<Backend> {
         bail!("--threads only applies to --backend fast|compiled");
     }
     Ok(backend)
+}
+
+/// Parse the shared fault-injection flags: `--fault-plan PATH` (JSON
+/// schema on [`FaultPlan`]) and `--recover` — used by `exec` and
+/// `serve`.
+fn fault_opts_from_args(a: &mut Args) -> Result<(Option<FaultPlan>, bool)> {
+    let fault = match a.str_opt("fault-plan") {
+        Some(path) => Some(crate::config::load_fault_plan(&path)?),
+        None => None,
+    };
+    let recover = a.bool("recover");
+    Ok((fault, recover))
 }
 
 fn backend_tag(backend: &Backend) -> String {
@@ -353,23 +365,27 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let strategy = strategy_from_args(a)?;
     let cluster = cluster_from_args(a)?;
     let backend = backend_from_args(a, "reference")?;
+    let (fault, recover) = fault_opts_from_args(a)?;
     let json = a.bool("json");
     a.finish()?;
 
-    let plan = pipeline::plan(&model, &cluster, strategy);
     let wb = crate::exec::weights::WeightBundle::generate(&model);
     let input = crate::exec::weights::model_input(&model);
     let expect = crate::exec::compute::centralized_inference(&model, &wb, &input);
 
     let backend_tag = backend_tag(&backend);
-    let r = run_plan(
+    let mut session = ExecSession::open(
         &model,
-        &plan,
-        &ExecOptions {
+        &cluster,
+        strategy,
+        SessionOptions {
             backend,
-            input: Some(input),
+            recover,
+            fault,
+            ..SessionOptions::default()
         },
     )?;
+    let r = session.infer(input)?;
     let diff = r.output.max_abs_diff(&expect);
     let ok = diff <= 1e-3;
     if json {
@@ -409,6 +425,8 @@ pub fn exec(a: &mut Args) -> Result<()> {
                 "bytes",
                 Json::num(r.stats.bytes_sent.iter().sum::<u64>() as f64),
             ),
+            ("replays", Json::num(r.stats.replays as f64)),
+            ("workers_lost", Json::num(session.recovery_stats().workers_lost as f64)),
             ("max_abs_diff", Json::num(diff as f64)),
             ("ok", Json::Bool(ok)),
         ]);
@@ -436,6 +454,16 @@ pub fn exec(a: &mut Args) -> Result<()> {
                 "conv lowering {}: peak transient scratch {} (max over devices)",
                 r.stats.conv_lowering,
                 fmt_bytes(peak)
+            );
+        }
+        let rec = session.recovery_stats();
+        if rec.workers_lost > 0 {
+            println!(
+                "recovery: {} worker(s) lost, {} replan(s), {} request(s) replayed in {}",
+                rec.workers_lost,
+                rec.replans,
+                rec.requests_replayed,
+                fmt_secs(rec.recovery_secs)
             );
         }
         println!("max |distributed - centralized| = {diff:.3e}");
@@ -505,6 +533,7 @@ pub fn serve(a: &mut Args) -> Result<()> {
     let strategy = strategy_from_args(a)?;
     let cluster = cluster_from_args(a)?;
     let backend = backend_from_args(a, "compiled")?;
+    let (fault, recover) = fault_opts_from_args(a)?;
     let requests = a.usize_or("requests", 64)?;
     let inflight = a.usize_or("inflight", cluster.m())?;
     let warmup = a.usize_or("warmup", 4)?;
@@ -520,7 +549,6 @@ pub fn serve(a: &mut Args) -> Result<()> {
         bail!("--inflight must be > 0");
     }
 
-    let plan = pipeline::plan(&model, &cluster, strategy);
     let input = crate::exec::weights::model_input(&model);
     let expect = if check {
         let wb = crate::exec::weights::WeightBundle::generate(&model);
@@ -528,7 +556,18 @@ pub fn serve(a: &mut Args) -> Result<()> {
     } else {
         None
     };
-    let mut session = ExecSession::new(&model, &plan, backend.clone())?;
+    let had_kills = fault.as_ref().is_some_and(|f| !f.kills.is_empty());
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        strategy,
+        SessionOptions {
+            backend: backend.clone(),
+            recover,
+            fault,
+            ..SessionOptions::default()
+        },
+    )?;
 
     let mut runs: Vec<(&'static str, ThroughputReport)> = Vec::new();
     let mut max_diff = 0.0f32;
@@ -600,6 +639,32 @@ pub fn serve(a: &mut Args) -> Result<()> {
             serve_row(&mut t, label, rep);
         }
         println!("{}", t.render());
+    }
+
+    let workers_lost: u64 = runs.iter().map(|(_, r)| r.workers_lost).sum();
+    let replans: u64 = runs.iter().map(|(_, r)| r.replans).sum();
+    if workers_lost > 0 && !json {
+        let replayed: u64 = runs.iter().map(|(_, r)| r.requests_replayed).sum();
+        let rec_secs: f64 = runs.iter().map(|(_, r)| r.recovery_secs).sum();
+        println!(
+            "recovery: {} worker(s) lost, {} replan(s), {} request(s) replayed in {}; \
+             {} of {} devices still serving",
+            workers_lost,
+            replans,
+            replayed,
+            fmt_secs(rec_secs),
+            session.alive_devices(),
+            session.devices(),
+        );
+    }
+    // Chaos-gate: a fault plan that schedules kills under --recover must
+    // actually exercise the recovery path — a kill that never fired
+    // (e.g. at_req beyond the run) would silently test nothing.
+    if had_kills && recover && replans == 0 {
+        bail!(
+            "fault plan scheduled kills but no recovery occurred \
+             (raise --requests or lower the kill's at_req)"
+        );
     }
 
     if check {

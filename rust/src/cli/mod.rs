@@ -52,7 +52,7 @@ COMMANDS:
                                  Device-count scaling study (extension)
   exec       --model M --strategy S
              [--backend reference|fast|compiled|pjrt] [--threads N]
-             [--json]
+             [--fault-plan F.json] [--recover] [--json]
                                  Real distributed execution, checked
                                  against the centralized model (compiled
                                  = prepacked weights + scratch arenas);
@@ -61,6 +61,7 @@ COMMANDS:
   serve      --model M --strategy S [--backend ...] [--threads N]
              [--requests N] [--inflight K] [--warmup W] [--check]
              [--compare-serial] [--assert-pipelined]
+             [--fault-plan F.json] [--recover]
                                  Closed-loop pipelined serving throughput
                                  over one persistent session: req/s,
                                  p50/p95/p99 latency, per-device busy.
@@ -104,6 +105,18 @@ SIMD KERNEL DISPATCH (fast/compiled backends):
   `iop serve` and the benches print the selected ISA + tile so numbers
   are attributable to a code path. Override with IOP_KERNEL=scalar|
   avx2|neon (unsupported values abort with the supported list).
+
+FAULT INJECTION & RECOVERY (`iop exec|serve`):
+  --fault-plan F.json  reproducible chaos schedule: per-link delay/drop
+                       (seeded RNG), per-device kill-at-request/stage,
+                       and a per-receive deadline (recv_timeout_ms) —
+                       see EXPERIMENTS.md §Robustness for the schema
+  --recover            on a device loss, re-plan the partition onto the
+                       survivors and replay in-flight requests instead
+                       of failing; recovery counters (workers_lost,
+                       replans, requests_replayed, recovery_secs) are
+                       reported. Without --recover a loss fails fast
+                       with a non-zero exit and a clear error.
 
 OUTPUT:
   --json               machine-readable output where supported

@@ -1,4 +1,5 @@
-//! JSON → `Cluster` (testbed definitions).
+//! JSON → `Cluster` (testbed definitions) and → [`FaultPlan`]
+//! (fault-injection schedules for the serving harness).
 
 use crate::device::{Cluster, Device};
 use crate::util::json::Json;
@@ -43,6 +44,159 @@ pub fn cluster_from_json(j: &Json) -> Result<Cluster> {
         bandwidth_mbps * 1e6 / 8.0,
         t_est_ms * 1e-3,
     ))
+}
+
+/// A reproducible fault-injection schedule for the real execution
+/// harness (`exec::transport::FaultTransport`): per-link delay/drop and
+/// per-device kill triggers, all derived from one seed so a chaos run
+/// replays bit-for-bit.
+///
+/// JSON schema (`iop serve --fault-plan plan.json`):
+///
+/// ```json
+/// {
+///   "seed": 7,
+///   "recv_timeout_ms": 2000,
+///   "links": [{"from": 0, "to": 1, "delay_ms": 2, "drop_prob": 0.5}],
+///   "kills": [{"dev": 1, "at_req": 10, "at_stage": 3}]
+/// }
+/// ```
+///
+/// Device ids always refer to the *original* cluster indices — after a
+/// recovery re-plan the surviving workers keep their original ids for
+/// fault lookups, so a schedule means the same thing across epochs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed for the per-device drop RNG streams.
+    pub seed: u64,
+    /// Per-receive deadline for every tagged receive in the session
+    /// (`None` = the harness default). Blocking past this deadline is a
+    /// protocol error — the waiting worker reports a `RecvDeadline`
+    /// instead of hanging.
+    pub recv_timeout_ms: Option<u64>,
+    /// Directed per-link faults; absent links are perfect.
+    pub links: Vec<LinkFault>,
+    /// Device kill triggers.
+    pub kills: Vec<KillSpec>,
+}
+
+/// Faults on one directed link `from -> to`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkFault {
+    pub from: usize,
+    pub to: usize,
+    /// Added latency per message, milliseconds (applied sender-side).
+    pub delay_ms: f64,
+    /// Probability each message is silently lost on the wire, in [0, 1].
+    pub drop_prob: f64,
+}
+
+/// Kill device `dev` when it reaches request `at_req` (session-global
+/// [`crate::exec::ReqId`]) at stage `at_stage` (default: the first
+/// stage). The trigger fires once: the worker reports a `WorkerKilled`
+/// error and exits, abandoning the wire protocol mid-request — exactly
+/// what a crashed device looks like to its peers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KillSpec {
+    pub dev: usize,
+    pub at_req: usize,
+    pub at_stage: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Fault on the directed link `from -> to`, if any.
+    pub fn link(&self, from: usize, to: usize) -> Option<&LinkFault> {
+        self.links.iter().find(|l| l.from == from && l.to == to)
+    }
+
+    /// Kill triggers for one device.
+    pub fn kills_for(&self, dev: usize) -> Vec<&KillSpec> {
+        self.kills.iter().filter(|k| k.dev == dev).collect()
+    }
+
+    /// Check every device reference against a cluster of `m` devices.
+    pub fn validate(&self, m: usize) -> Result<()> {
+        for l in &self.links {
+            if l.from >= m || l.to >= m {
+                return Err(anyhow!(
+                    "fault plan link {}->{} references a device outside the cluster (m={m})",
+                    l.from,
+                    l.to
+                ));
+            }
+            if l.from == l.to {
+                return Err(anyhow!("fault plan link {}->{} is a self-loop", l.from, l.to));
+            }
+        }
+        for k in &self.kills {
+            if k.dev >= m {
+                return Err(anyhow!(
+                    "fault plan kills device {} outside the cluster (m={m})",
+                    k.dev
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a [`FaultPlan`] from its JSON spec (see the struct docs for the
+/// schema). Unknown fields are ignored; malformed entries error.
+pub fn fault_plan_from_json(j: &Json) -> Result<FaultPlan> {
+    let seed = j.get("seed").as_f64().unwrap_or(0.0) as u64;
+    let recv_timeout_ms = j.get("recv_timeout_ms").as_f64().map(|v| v as u64);
+    let mut links = Vec::new();
+    if let Json::Arr(list) = j.get("links") {
+        for (i, l) in list.iter().enumerate() {
+            let from = l
+                .get("from")
+                .as_usize()
+                .ok_or_else(|| anyhow!("fault plan link {i}: missing 'from'"))?;
+            let to = l
+                .get("to")
+                .as_usize()
+                .ok_or_else(|| anyhow!("fault plan link {i}: missing 'to'"))?;
+            let delay_ms = l.get("delay_ms").as_f64().unwrap_or(0.0);
+            let drop_prob = l.get("drop_prob").as_f64().unwrap_or(0.0);
+            if delay_ms < 0.0 {
+                return Err(anyhow!("fault plan link {i}: delay_ms must be >= 0"));
+            }
+            if !(0.0..=1.0).contains(&drop_prob) {
+                return Err(anyhow!("fault plan link {i}: drop_prob must be in [0, 1]"));
+            }
+            links.push(LinkFault {
+                from,
+                to,
+                delay_ms,
+                drop_prob,
+            });
+        }
+    }
+    let mut kills = Vec::new();
+    if let Json::Arr(list) = j.get("kills") {
+        for (i, k) in list.iter().enumerate() {
+            let dev = k
+                .get("dev")
+                .as_usize()
+                .ok_or_else(|| anyhow!("fault plan kill {i}: missing 'dev'"))?;
+            let at_req = k
+                .get("at_req")
+                .as_usize()
+                .ok_or_else(|| anyhow!("fault plan kill {i}: missing 'at_req'"))?;
+            let at_stage = k.get("at_stage").as_usize();
+            kills.push(KillSpec {
+                dev,
+                at_req,
+                at_stage,
+            });
+        }
+    }
+    Ok(FaultPlan {
+        seed,
+        recv_timeout_ms,
+        links,
+        kills,
+    })
 }
 
 #[cfg(test)]
@@ -90,5 +244,65 @@ mod tests {
             &Json::parse(r#"{"devices": [{"mem_mib": 5}]}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn fault_plan_full_schema() {
+        let j = Json::parse(
+            r#"{"seed": 7, "recv_timeout_ms": 2000,
+                "links": [{"from": 0, "to": 1, "delay_ms": 2.5, "drop_prob": 0.5}],
+                "kills": [{"dev": 1, "at_req": 10, "at_stage": 3},
+                           {"dev": 2, "at_req": 4}]}"#,
+        )
+        .unwrap();
+        let p = fault_plan_from_json(&j).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.recv_timeout_ms, Some(2000));
+        assert_eq!(p.links.len(), 1);
+        assert_eq!(p.link(0, 1).unwrap().drop_prob, 0.5);
+        assert!(p.link(1, 0).is_none());
+        assert_eq!(p.kills.len(), 2);
+        assert_eq!(p.kills_for(1)[0].at_stage, Some(3));
+        assert_eq!(p.kills_for(2)[0].at_stage, None);
+        p.validate(3).unwrap();
+    }
+
+    #[test]
+    fn fault_plan_defaults_and_empty() {
+        let p = fault_plan_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(p, FaultPlan::default());
+        assert_eq!(p.recv_timeout_ms, None);
+        p.validate(1).unwrap();
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed() {
+        for bad in [
+            r#"{"links": [{"from": 0}]}"#,
+            r#"{"links": [{"from": 0, "to": 1, "drop_prob": 1.5}]}"#,
+            r#"{"links": [{"from": 0, "to": 1, "delay_ms": -1}]}"#,
+            r#"{"kills": [{"at_req": 3}]}"#,
+            r#"{"kills": [{"dev": 1}]}"#,
+        ] {
+            assert!(
+                fault_plan_from_json(&Json::parse(bad).unwrap()).is_err(),
+                "should reject: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_plan_validate_checks_device_range() {
+        let p = fault_plan_from_json(
+            &Json::parse(r#"{"kills": [{"dev": 3, "at_req": 0}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(p.validate(3).is_err());
+        p.validate(4).unwrap();
+        let l = fault_plan_from_json(
+            &Json::parse(r#"{"links": [{"from": 0, "to": 0}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(l.validate(2).is_err(), "self-loop links are rejected");
     }
 }

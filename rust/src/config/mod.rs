@@ -29,7 +29,7 @@
 pub mod cluster_cfg;
 pub mod model_cfg;
 
-pub use cluster_cfg::cluster_from_json;
+pub use cluster_cfg::{cluster_from_json, fault_plan_from_json, FaultPlan, KillSpec, LinkFault};
 pub use model_cfg::model_from_json;
 
 use crate::device::Cluster;
@@ -48,4 +48,12 @@ pub fn load_cluster(path: &str) -> Result<Cluster> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
     cluster_from_json(&json)
+}
+
+/// Load a fault-injection plan from a JSON file (see [`FaultPlan`] for
+/// the schema; `iop serve --fault-plan` is the consumer).
+pub fn load_fault_plan(path: &str) -> Result<FaultPlan> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    fault_plan_from_json(&json)
 }

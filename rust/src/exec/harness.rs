@@ -10,17 +10,29 @@
 //! Each worker processes its control queue in FIFO order, so requests are
 //! strictly serial *per worker* (one arena, no locking) while different
 //! workers may be on different requests — that skew is the pipelining.
+//!
+//! The wire layer lives behind [`super::transport::Transport`]: the
+//! default is the in-process channel mesh, and a fault-injecting wrapper
+//! driven by a [`FaultPlan`] can kill devices and delay/drop links for
+//! chaos runs. Every tagged receive carries a deadline (no indefinite
+//! blocking), and a session opened with [`SessionOptions::recover`]
+//! responds to a device loss by re-planning onto the survivors and
+//! replaying in-flight requests instead of poisoning — see the
+//! "Supervised recovery" section on [`ExecSession`].
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::config::FaultPlan;
+use crate::device::Cluster;
 use crate::model::{Model, OpKind};
 use crate::partition::plan::{CommStep, Plan, SliceKind};
 use crate::partition::rows::{halo_plan, input_rows_needed};
+use crate::partition::Strategy;
 use crate::tensor::slice::{
     act_channel_slice, act_rows_window, concat_channels, concat_rows, copy_rows_into,
 };
@@ -30,6 +42,7 @@ use super::backend::ComputeBackend;
 use super::compute::{apply_tail_with, compute_slice_compiled, compute_slice_with};
 use super::pjrt::PjrtRunner;
 use super::prepack::{CompiledDevice, CompiledPlan, ScratchArena};
+use super::transport::{make_endpoints, Msg, RecvDeadline, Transport, WorkerKilled};
 use super::weights::{model_input, WeightBundle};
 
 /// Which compute backend workers use.
@@ -50,6 +63,12 @@ pub enum Backend {
     Pjrt { artifacts_dir: String },
 }
 
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Reference
+    }
+}
+
 /// Execution options.
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
@@ -68,14 +87,43 @@ impl Default for ExecOptions {
     }
 }
 
+/// How to open an [`ExecSession`] (see [`ExecSession::open`]).
+#[derive(Debug, Clone, Default)]
+pub struct SessionOptions {
+    /// Compute backend for the workers.
+    pub backend: Backend,
+    /// In-flight request window; `None` = one request per device.
+    pub max_inflight: Option<usize>,
+    /// Respond to a device loss by re-planning onto the survivors and
+    /// replaying in-flight requests, instead of poisoning the session.
+    pub recover: bool,
+    /// Fault-injection schedule for chaos runs
+    /// (`exec::transport::FaultTransport` wraps every endpoint).
+    pub fault: Option<FaultPlan>,
+    /// Per-receive deadline override. Resolution order: this, then the
+    /// fault plan's `recv_timeout_ms`, then the 30 s harness default.
+    pub recv_timeout: Option<Duration>,
+}
+
+/// Default deadline for a single tagged receive. Generous, so healthy
+/// runs never trip it; fault plans usually tighten it so chaos tests
+/// detect losses quickly (`FaultPlan::recv_timeout_ms`).
+const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Supervision tick: how often the session's pump wakes from the done
+/// channel to reap worker threads that exited without reporting.
+const SUPERVISE_TICK: Duration = Duration::from_millis(100);
+
 /// Execution statistics.
 #[derive(Debug, Clone)]
 pub struct ExecStats {
     /// Submit-to-completion latency of the request. Under pipelined
     /// serving (`max_inflight > 1`) this includes the time the request
-    /// spent queued behind earlier requests on each worker.
+    /// spent queued behind earlier requests on each worker — and, after
+    /// a device loss, the time spent in recovery.
     pub wall_secs: f64,
-    /// Bytes each device sent.
+    /// Bytes each device sent (indexed by *original* device id; a dead
+    /// device's entries stay 0 after recovery).
     pub bytes_sent: Vec<u64>,
     /// Messages each device sent.
     pub messages_sent: Vec<usize>,
@@ -91,6 +139,10 @@ pub struct ExecStats {
     /// GEMM B-panel pack buffers. The fused-vs-materialized drop on
     /// this number is the implicit-GEMM memory win the CI gate checks.
     pub peak_scratch_bytes: Vec<u64>,
+    /// Times this request was replayed onto a re-planned survivor worker
+    /// set after a device loss (0 on the fault-free path; see
+    /// [`ExecSession::recovery_stats`] for session totals).
+    pub replays: u64,
     /// Conv im2col lowering the session's compiled kernels were built
     /// with (`"fused"` or `"materialized"`, resolved at session
     /// creation); `"n/a"` for backends that do not compile conv plans.
@@ -112,10 +164,28 @@ impl ExecStats {
             compute_secs: vec![0.0; m],
             arena_grows: vec![0; m],
             peak_scratch_bytes: vec![0; m],
+            replays: 0,
             conv_lowering,
             kernel_isa,
         }
     }
+}
+
+/// Counters for the session's supervised-recovery machinery
+/// ([`ExecSession::recovery_stats`]); all zero on a fault-free run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Devices declared dead (fault-plan kill, silent thread exit, or a
+    /// peer's receive deadline naming them) over the session lifetime.
+    pub workers_lost: u64,
+    /// Times the partition was re-planned onto a survivor cluster.
+    pub replans: u64,
+    /// In-flight requests replayed onto a new plan (a request replayed
+    /// by two successive recoveries counts twice).
+    pub requests_replayed: u64,
+    /// Seconds spent recovering (detect → re-plan → respawn → replay),
+    /// summed over all replans.
+    pub recovery_secs: f64,
 }
 
 /// Execution result: the network output (assembled on device 0) + stats.
@@ -125,21 +195,11 @@ pub struct ExecResult {
     pub stats: ExecStats,
 }
 
-/// A tagged inter-device message.
-struct Msg {
-    from: usize,
-    /// Request id (sessions stream many inferences over one worker set).
-    req: usize,
-    stage: usize,
-    phase: u8,
-    tensor: Tensor,
-}
-
 const PHASE_MAIN: u8 = 0;
 const PHASE_BCAST: u8 = 1;
 const FINAL_STAGE: usize = usize::MAX;
 
-/// Per-worker mailbox with tag-based buffering.
+/// Per-worker mailbox with tag-based buffering over a [`Transport`].
 ///
 /// Receives match on the full `(req, from, stage, phase)` tag: a worker
 /// always waits for a *specific* peer's message, so reduction order (and
@@ -150,27 +210,92 @@ const FINAL_STAGE: usize = usize::MAX;
 /// buffered until their tag is asked for; the buffer is bounded because
 /// the session's `max_inflight` window bounds how far ahead any peer can
 /// run.
+///
+/// Every tagged receive carries a deadline: blocking past `timeout`
+/// raises a typed [`RecvDeadline`] naming the awaited peer, which is how
+/// the session tells a dead device from a slow one.
 struct Mailbox {
-    rx: Receiver<Msg>,
+    dev: usize,
+    transport: Box<dyn Transport>,
+    /// Deadline for any single tagged receive.
+    timeout: Duration,
     pending: Vec<Msg>,
+    /// Per-request wire counters (reset by `begin_request`).
+    bytes_sent: u64,
+    messages_sent: usize,
 }
 
 impl Mailbox {
+    fn new(dev: usize, transport: Box<dyn Transport>, timeout: Duration) -> Mailbox {
+        Mailbox {
+            dev,
+            transport,
+            timeout,
+            pending: Vec::new(),
+            bytes_sent: 0,
+            messages_sent: 0,
+        }
+    }
+
+    /// Reset the per-request wire counters.
+    fn begin_request(&mut self) {
+        self.bytes_sent = 0;
+        self.messages_sent = 0;
+    }
+
+    /// Send one tagged message, counting it against this request's wire
+    /// totals (counted even if the transport then drops it — the cost
+    /// was paid on this side of the wire).
+    fn send(&mut self, to: usize, req: usize, stage: usize, phase: u8, tensor: Tensor) -> Result<()> {
+        self.bytes_sent += tensor.bytes() as u64;
+        self.messages_sent += 1;
+        self.transport.send(
+            to,
+            Msg {
+                from: self.dev,
+                req,
+                stage,
+                phase,
+                tensor,
+            },
+        )
+    }
+
+    /// Stage-boundary fault hook (see [`Transport::fault_check`]).
+    fn fault_check(&mut self, req: usize, stage: usize) -> Result<()> {
+        self.transport.fault_check(req, stage)
+    }
+
     fn recv_tagged(&mut self, req: usize, from: usize, stage: usize, phase: u8) -> Result<Msg> {
         if let Some(pos) = self.pending.iter().position(|m| {
             m.req == req && m.from == from && m.stage == stage && m.phase == phase
         }) {
             return Ok(self.pending.remove(pos));
         }
+        let deadline = Instant::now() + self.timeout;
         loop {
-            let m = self.rx.recv().map_err(|_| {
-                anyhow!("peer disconnected waiting for {from} at stage {stage} (req {req})")
-            })?;
-            if m.req == req && m.from == from && m.stage == stage && m.phase == phase {
-                return Ok(m);
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
             }
-            self.pending.push(m);
+            match self.transport.recv(left) {
+                Ok(m) => {
+                    if m.req == req && m.from == from && m.stage == stage && m.phase == phase {
+                        return Ok(m);
+                    }
+                    self.pending.push(m);
+                }
+                // Timeout and full disconnection mean the same thing
+                // here: the awaited message is not coming.
+                Err(_) => break,
+            }
         }
+        Err(anyhow::Error::new(RecvDeadline {
+            from,
+            stage,
+            req,
+            timeout_ms: self.timeout.as_millis() as u64,
+        }))
     }
 }
 
@@ -295,6 +420,9 @@ impl Local {
 /// submission order starting at 0.
 pub type ReqId = usize;
 
+/// One worker completion report: `(req, plan-local dev, result)`.
+type Done = (ReqId, usize, Result<WorkerOut>);
+
 /// Completion state of one in-flight request, keyed by `req` in the
 /// session's pending map: worker completions arrive interleaved across
 /// requests (a fast worker can finish request `r+1` before a straggler
@@ -302,10 +430,15 @@ pub type ReqId = usize;
 /// entry instead of the old single-slot `debug_assert_eq!(r, req)` drain.
 struct PendingReq {
     t0: Instant,
+    /// The request input, retained so a recovery can replay it onto the
+    /// re-planned worker set.
+    input: Arc<Tensor>,
     /// Workers that have not reported this request yet.
     remaining: usize,
     output: Option<Tensor>,
     stats: ExecStats,
+    /// Times this request has been replayed by recoveries.
+    replays: u64,
     /// Latest worker-side finish timestamp seen so far — the request's
     /// completion instant is the *last* worker's finish, stamped by the
     /// worker itself so latency excludes time the done message spent
@@ -333,8 +466,38 @@ struct PendingReq {
 /// Overlap needs no new worker protocol: every message is tagged with
 /// `(req, from, stage, phase)` and mailboxes buffer by tag, so worker A
 /// can be deep into request `r+1` while worker B still finishes `r`.
+///
+/// # Supervised recovery
+///
+/// A session opened with [`ExecSession::open`] and
+/// [`SessionOptions::recover`] survives device loss. The pump detects a
+/// dead worker three ways — a fault-plan kill report ([`WorkerKilled`]),
+/// a peer's receive deadline naming it ([`RecvDeadline`]), or its thread
+/// exiting without a report (panic, reaped on the supervision tick) —
+/// and then:
+///
+/// 1. marks the device dead and shuts the old worker epoch down,
+/// 2. **re-plans** the partition onto the surviving devices (re-running
+///    the strategy's planner on the reduced cluster, recompiling
+///    prepacked kernels where the backend needs them),
+/// 3. **replays** every in-flight request on the new plan, keeping the
+///    original `ReqId`s and submit timestamps.
+///
+/// `collect` therefore still returns a result for every submitted id;
+/// callers only see the loss through [`ExecSession::recovery_stats`],
+/// `ExecStats::replays`, and the extra latency. Sessions degrade all the
+/// way down to a single survivor; losing the last device poisons.
+/// Without `recover`, any loss fails fast: every in-flight request
+/// errors and the session poisons (no hang — deadlines bound every
+/// receive). Backend/logic errors (e.g. a missing PJRT artifact set)
+/// are not device losses and always poison.
 pub struct ExecSession {
+    /// Plan-local worker count of the *current* epoch (shrinks on
+    /// recovery).
     m: usize,
+    /// Device count the session was opened with; stats vectors keep this
+    /// size across recoveries.
+    orig_m: usize,
     max_inflight: usize,
     /// Microkernel ISA stamped into every request's `ExecStats` (see
     /// [`ExecStats::kernel_isa`]); resolved once at session creation.
@@ -343,28 +506,43 @@ pub struct ExecSession {
     /// ([`ExecStats::conv_lowering`]); resolved once at session
     /// creation, matching what the compiled kernels recorded.
     conv_lowering: &'static str,
+    model: Arc<Model>,
+    wb: Arc<WeightBundle>,
+    backend: Backend,
+    /// Recovery context: re-planning needs the cluster and strategy, not
+    /// just the finished plan (only [`ExecSession::open`] provides them).
+    cluster: Option<Cluster>,
+    strategy: Option<Strategy>,
+    recover: bool,
+    fault: Option<Arc<FaultPlan>>,
+    recv_timeout: Duration,
+    /// `alive[d]` for original device id `d`.
+    alive: Vec<bool>,
+    /// Plan-local worker index → original device id, current epoch.
+    devmap: Vec<usize>,
     ctrl_tx: Vec<Sender<Control>>,
-    done_rx: Receiver<(usize, usize, Result<WorkerOut>)>,
+    done_rx: Receiver<Done>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Handles of retired worker epochs, joined (bounded) on drop.
+    draining: Vec<std::thread::JoinHandle<()>>,
     next_req: ReqId,
-    /// Submitted requests not yet fully reported by all m workers.
+    /// Submitted requests not yet fully reported by all current workers.
     pending: HashMap<ReqId, PendingReq>,
     /// Fully reported requests not yet handed to the caller, ordered by
     /// id so `collect` returns submission order.
     ready: BTreeMap<ReqId, Result<ExecResult>>,
     /// Requests finalized early on a worker error, mapped to how many
     /// worker reports are still outstanding: late reports from the
-    /// remaining workers are expected and dropped (waiting for them
-    /// could block forever — an erroring worker abandons the wire
-    /// protocol, which can leave its peers stuck mid-request), and the
-    /// entry is pruned once the last straggler has reported.
+    /// remaining workers are expected and dropped (their deadlines bound
+    /// how long that takes), and the entry is pruned once the last
+    /// straggler has reported. Only the fail-fast path populates this;
+    /// recovery replays instead of aborting, so its size stays bounded
+    /// by one in-flight window.
     aborted: HashMap<ReqId, usize>,
-    /// Set once any worker reports an error: the worker set can no
-    /// longer serve reliably (the erroring worker's peers may be wedged
-    /// mid-protocol waiting for its messages), so further submits are
-    /// refused and `Drop` detaches instead of joining possibly-stuck
-    /// workers.
+    /// Set on an unrecoverable failure: further submits are refused and
+    /// every in-flight request has been failed fast.
     poisoned: bool,
+    recovery: RecoveryStats,
 }
 
 enum Control {
@@ -390,9 +568,64 @@ impl ExecSession {
         backend: Backend,
         max_inflight: usize,
     ) -> Result<ExecSession> {
+        Self::build(
+            model,
+            plan,
+            None,
+            None,
+            SessionOptions {
+                backend,
+                max_inflight: Some(max_inflight),
+                ..SessionOptions::default()
+            },
+        )
+    }
+
+    /// Plan `model` over `cluster` with `strategy` and open a session
+    /// with the full option set. This is the only constructor that can
+    /// arm supervised recovery: re-planning after a loss needs the
+    /// cluster and strategy, which a pre-built [`Plan`] no longer
+    /// carries.
+    pub fn open(
+        model: &Model,
+        cluster: &Cluster,
+        strategy: Strategy,
+        opts: SessionOptions,
+    ) -> Result<ExecSession> {
+        let plan = crate::pipeline::plan(model, cluster, strategy);
+        Self::build(model, &plan, Some(cluster.clone()), Some(strategy), opts)
+    }
+
+    fn build(
+        model: &Model,
+        plan: &Plan,
+        cluster: Option<Cluster>,
+        strategy: Option<Strategy>,
+        opts: SessionOptions,
+    ) -> Result<ExecSession> {
         plan.validate(model).map_err(|e| anyhow!(e))?;
         let m = plan.m;
-        let kernel_isa = match &backend {
+        if opts.recover && cluster.is_none() {
+            return Err(anyhow!(
+                "recovery needs the cluster and strategy to re-plan: use ExecSession::open"
+            ));
+        }
+        let fault = match opts.fault {
+            Some(f) => {
+                f.validate(m)?;
+                Some(Arc::new(f))
+            }
+            None => None,
+        };
+        let recv_timeout = opts
+            .recv_timeout
+            .or_else(|| {
+                fault
+                    .as_ref()
+                    .and_then(|f| f.recv_timeout_ms.map(Duration::from_millis))
+            })
+            .unwrap_or(DEFAULT_RECV_TIMEOUT);
+        let kernel_isa = match &opts.backend {
             Backend::Reference => "reference",
             Backend::Fast { .. } | Backend::Compiled { .. } => {
                 crate::tensor::kernels::selected().name()
@@ -401,75 +634,74 @@ impl ExecSession {
         };
         // Only the compiled backend resolves an im2col lowering (the
         // other backends either materialize per call or never lower).
-        let conv_lowering = match &backend {
+        let conv_lowering = match &opts.backend {
             Backend::Compiled { .. } => super::prepack::lowering_selected().name(),
             _ => "n/a",
         };
         let model = Arc::new(model.clone());
         let plan = Arc::new(plan.clone());
         let wb = Arc::new(WeightBundle::generate(&model));
-
-        // Compiled backend: build the whole plan's kernels up front,
-        // deduping weight-identical stages across devices (Rows/Full/
-        // Replicate all pack the full weight — one shared Arc instead of
-        // m copies), then hand each worker its shard.
-        let compiled = match &backend {
-            Backend::Compiled { threads } => Some(CompiledPlan::compile(
-                &model,
-                &plan,
-                &wb,
-                (*threads).max(1),
-            )),
-            _ => None,
-        };
-
-        // Full-mesh data channels: tx[i][j] sends i -> j.
-        let mut rxs: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(m);
-        let mut to_dev: Vec<Sender<Msg>> = Vec::with_capacity(m);
-        for _ in 0..m {
-            let (tx, rx) = channel::<Msg>();
-            to_dev.push(tx);
-            rxs.push(Some(rx));
-        }
-        // Control + completion channels.
-        let mut ctrl_tx = Vec::with_capacity(m);
-        let (done_tx, done_rx) = channel::<(usize, usize, Result<WorkerOut>)>();
-
-        let mut handles = Vec::with_capacity(m);
-        for dev in 0..m {
-            let (ctx, crx) = channel::<Control>();
-            ctrl_tx.push(ctx);
-            let model = Arc::clone(&model);
-            let plan = Arc::clone(&plan);
-            let wb = Arc::clone(&wb);
-            let tx: Vec<Sender<Msg>> = to_dev.clone();
-            let rx = rxs[dev].take().unwrap();
-            let backend = backend.clone();
-            let shard = compiled.as_ref().map(|cp| cp.devices[dev].clone());
-            let done = done_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(dev, model, plan, wb, tx, rx, crx, done, backend, shard)
-            }));
-        }
+        let devmap: Vec<usize> = (0..m).collect();
+        let (ctrl_tx, done_rx, handles) = spawn_workers(
+            &model,
+            &plan,
+            &wb,
+            &opts.backend,
+            fault.as_ref(),
+            &devmap,
+            recv_timeout,
+        );
         Ok(ExecSession {
             m,
-            max_inflight: max_inflight.max(1),
+            orig_m: m,
+            max_inflight: opts.max_inflight.unwrap_or(m).max(1),
             kernel_isa,
             conv_lowering,
+            model,
+            wb,
+            backend: opts.backend,
+            cluster,
+            strategy,
+            recover: opts.recover,
+            fault,
+            recv_timeout,
+            alive: vec![true; m],
+            devmap,
             ctrl_tx,
             done_rx,
             handles,
+            draining: Vec::new(),
             next_req: 0,
             pending: HashMap::new(),
             ready: BTreeMap::new(),
             aborted: HashMap::new(),
             poisoned: false,
+            recovery: RecoveryStats::default(),
         })
     }
 
-    /// Number of cooperative devices (worker threads).
+    /// Number of cooperative devices the session was opened with. Stats
+    /// vectors are indexed by this and keep their size across
+    /// recoveries (a dead device's entries read 0).
     pub fn devices(&self) -> usize {
+        self.orig_m
+    }
+
+    /// Devices still serving (== [`ExecSession::devices`] until a loss).
+    pub fn alive_devices(&self) -> usize {
         self.m
+    }
+
+    /// Snapshot of the recovery counters (all zero while healthy).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery.clone()
+    }
+
+    /// Entries in the aborted-straggler map. Bounded by one in-flight
+    /// window on the fail-fast path and empty under recovery (test hook
+    /// for the repeated-kill boundedness check).
+    pub fn aborted_count(&self) -> usize {
+        self.aborted.len()
     }
 
     /// Microkernel ISA this session's workers dispatch to, resolved at
@@ -503,10 +735,10 @@ impl ExecSession {
         self.ready.len()
     }
 
-    /// True once any worker has reported an error: in-flight requests
-    /// were failed fast, further submits are refused, and `Drop` will
-    /// detach (not join) the possibly-wedged workers. Recover by
-    /// creating a new session.
+    /// True once the session hit an unrecoverable failure (any worker
+    /// error in fail-fast mode; a non-loss error or the last device
+    /// dying under recovery): in-flight requests were failed fast and
+    /// further submits are refused. Recover by creating a new session.
     pub fn poisoned(&self) -> bool {
         self.poisoned
     }
@@ -530,13 +762,13 @@ impl ExecSession {
     /// processed (backpressure — completed requests move to the ready
     /// queue and free their window slot before collection).
     pub fn submit(&mut self, input: Tensor) -> Result<ReqId> {
-        while self.pending.len() >= self.max_inflight {
+        while self.pending.len() >= self.max_inflight && !self.poisoned {
             self.pump()?;
         }
         // Checked *after* the backpressure drain: pump may have just
-        // surfaced a worker error (poisoning the session and emptying
-        // the window) — submitting to the wedged worker set would make
-        // the later collect hang forever.
+        // surfaced an unrecoverable failure (poisoning the session and
+        // emptying the window) — submitting to the wedged worker set
+        // would make the later collect hang forever.
         if self.poisoned {
             return Err(anyhow!(
                 "session poisoned by an earlier worker error; create a new session"
@@ -544,17 +776,19 @@ impl ExecSession {
         }
         let req = self.next_req;
         self.next_req += 1;
+        let input = Arc::new(input);
         self.pending.insert(
             req,
             PendingReq {
                 t0: Instant::now(),
+                input: Arc::clone(&input),
                 remaining: self.m,
                 output: None,
-                stats: ExecStats::zeroed(self.m, self.kernel_isa, self.conv_lowering),
+                stats: ExecStats::zeroed(self.orig_m, self.kernel_isa, self.conv_lowering),
+                replays: 0,
                 last_finish: None,
             },
         );
-        let input = Arc::new(input);
         for c in &self.ctrl_tx {
             c.send(Control::Request {
                 req,
@@ -600,20 +834,40 @@ impl ExecSession {
         self.collect_req(req)
     }
 
-    /// Absorb one worker completion message into the pending map, moving
-    /// the request to `ready` once all m workers have reported — or
-    /// immediately with `Err` on the *first* worker error (an erroring
-    /// worker abandons the wire protocol, so its peers may never finish
-    /// this request; waiting for all m reports would deadlock — the
-    /// request is marked aborted and stragglers' late reports are
-    /// dropped). This is the only place `done_rx` is drained, and it is
-    /// keyed by the message's own `req`: completions may interleave
-    /// across requests in any order.
+    /// Block until one worker completion message is absorbed (the only
+    /// place `done_rx` is drained), waking every [`SUPERVISE_TICK`] to
+    /// reap worker threads that exited *without* reporting — a panic
+    /// looks like silence, not an error message. The reap is safe
+    /// because a live worker always queues its report before exiting:
+    /// an empty done queue plus a finished handle means the thread died
+    /// abnormally.
     fn pump(&mut self) -> Result<()> {
-        let (req, dev, w) = self
-            .done_rx
-            .recv()
-            .map_err(|_| anyhow!("workers died mid-request"))?;
+        loop {
+            match self.done_rx.recv_timeout(SUPERVISE_TICK) {
+                Ok((req, dev, w)) => return self.absorb(req, dev, w),
+                Err(RecvTimeoutError::Timeout) => {
+                    let dead = self
+                        .handles
+                        .iter()
+                        .position(|h| h.is_finished())
+                        .map(|i| self.devmap[i]);
+                    if let Some(d) = dead {
+                        let e = anyhow!("worker thread for device {d} exited without reporting");
+                        return self.on_worker_death(d, e);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("workers died mid-request"));
+                }
+            }
+        }
+    }
+
+    /// Fold one worker completion into its request's pending entry,
+    /// moving the request to `ready` once all current workers have
+    /// reported. Keyed by the message's own `req`: completions may
+    /// interleave across requests in any order. `dev` is plan-local.
+    fn absorb(&mut self, req: ReqId, dev: usize, w: Result<WorkerOut>) -> Result<()> {
         let Some(p) = self.pending.get_mut(&req) else {
             // Straggler report for an aborted request: drop it and prune
             // the abort entry once the last outstanding worker reported.
@@ -629,20 +883,25 @@ impl ExecSession {
         p.remaining -= 1;
         match w {
             Ok(w) => {
-                p.stats.bytes_sent[dev] = w.bytes_sent;
-                p.stats.messages_sent[dev] = w.messages_sent;
-                p.stats.compute_secs[dev] = w.compute_secs;
-                p.stats.arena_grows[dev] = w.arena_grows;
-                p.stats.peak_scratch_bytes[dev] = w.peak_scratch_bytes;
+                // Stats index by original device id, stable across
+                // recovery epochs (serving reports stay comparable).
+                let orig = self.devmap[dev];
+                p.stats.bytes_sent[orig] = w.bytes_sent;
+                p.stats.messages_sent[orig] = w.messages_sent;
+                p.stats.compute_secs[orig] = w.compute_secs;
+                p.stats.arena_grows[orig] = w.arena_grows;
+                p.stats.peak_scratch_bytes[orig] = w.peak_scratch_bytes;
                 p.last_finish = Some(match p.last_finish {
                     Some(t) => t.max(w.finished_at),
                     None => w.finished_at,
                 });
                 if dev == 0 {
+                    // Plan-local device 0 assembles the output.
                     p.output = w.output;
                 }
                 if p.remaining == 0 {
                     let mut p = self.pending.remove(&req).unwrap();
+                    p.stats.replays = p.replays;
                     // Completion = the last worker's own finish stamp, so
                     // latency excludes done-channel queueing time.
                     p.stats.wall_secs = p
@@ -658,31 +917,138 @@ impl ExecSession {
                     };
                     self.ready.insert(req, res);
                 }
+                Ok(())
             }
-            Err(e) => {
-                let p = self.pending.remove(&req).unwrap();
+            Err(e) => self.on_worker_error(req, dev, e),
+        }
+    }
+
+    /// Classify a worker-reported error. Kill and deadline errors name a
+    /// dead device — the reporter itself, or the peer it gave up waiting
+    /// on; anything else is a backend/logic error recovery cannot fix,
+    /// so it always poisons.
+    fn on_worker_error(&mut self, req: ReqId, dev: usize, e: anyhow::Error) -> Result<()> {
+        let dead = e.chain().find_map(|c| {
+            if let Some(k) = c.downcast_ref::<WorkerKilled>() {
+                Some(k.dev) // transports stamp the original device id
+            } else {
+                c.downcast_ref::<RecvDeadline>().map(|r| self.devmap[r.from])
+            }
+        });
+        match dead {
+            Some(d) => self.on_worker_death(d, e),
+            None => self.poison(Some(req), self.devmap[dev], e),
+        }
+    }
+
+    /// One device is gone: recover if armed, else fail fast with a hint.
+    fn on_worker_death(&mut self, dead: usize, e: anyhow::Error) -> Result<()> {
+        if self.recover {
+            self.recover_from(dead, e)
+        } else {
+            let e = e.context(format!(
+                "device {dead} lost; rerun with --recover (SessionOptions::recover) \
+                 to re-plan onto the survivors"
+            ));
+            self.poison(None, dead, e)
+        }
+    }
+
+    /// Fail-fast path: fail every in-flight request and refuse further
+    /// submits. `req` (if known) is the request whose worker report
+    /// carried the root error; every failed request's error includes the
+    /// cause so callers see an actionable message no matter which id
+    /// they collect first.
+    fn poison(&mut self, req: Option<ReqId>, dev: usize, e: anyhow::Error) -> Result<()> {
+        self.poisoned = true;
+        let cause = format!("aborted: worker {dev} failed: {e:#}");
+        if let Some(r) = req {
+            if let Some(p) = self.pending.remove(&r) {
                 if p.remaining > 0 {
-                    self.aborted.insert(req, p.remaining);
+                    self.aborted.insert(r, p.remaining);
                 }
-                self.poisoned = true;
-                self.ready
-                    .insert(req, Err(e.context(format!("worker {dev}"))));
-                // Fail fast for everything else in flight too: the
-                // erroring worker's peers may be wedged mid-protocol, so
-                // waiting for these to complete could hang `collect`.
-                // Their workers' future reports are dropped as
-                // stragglers via the aborted map.
-                for (other, op) in self.pending.drain() {
-                    if op.remaining > 0 {
-                        self.aborted.insert(other, op.remaining);
-                    }
-                    self.ready.insert(
-                        other,
-                        Err(anyhow!("aborted: worker {dev} failed an earlier request")),
-                    );
-                }
+                self.ready.insert(r, Err(e.context(format!("worker {dev}"))));
             }
         }
+        for (other, op) in self.pending.drain() {
+            if op.remaining > 0 {
+                self.aborted.insert(other, op.remaining);
+            }
+            self.ready.insert(other, Err(anyhow!("{cause}")));
+        }
+        Ok(())
+    }
+
+    /// Supervised recovery: declare `dead` lost, re-plan the partition
+    /// onto the survivors, respawn the worker set, and replay every
+    /// in-flight request on the new plan — original `ReqId`s and submit
+    /// timestamps, so callers see the loss only through the recovery
+    /// counters and latency. Degrades down to a single survivor; with
+    /// nobody left the session poisons.
+    fn recover_from(&mut self, dead: usize, cause: anyhow::Error) -> Result<()> {
+        let t0 = Instant::now();
+        if self.alive[dead] {
+            self.alive[dead] = false;
+            self.recovery.workers_lost += 1;
+        }
+        // Retire the old epoch: signal shutdown and swap in a fresh done
+        // channel, so stragglers' reports go nowhere (an old worker
+        // exits as soon as its report fails to send, or at its next
+        // receive deadline). Handles drain with a bounded join on drop.
+        for c in &self.ctrl_tx {
+            let _ = c.send(Control::Shutdown);
+        }
+        self.draining.append(&mut self.handles);
+        let survivors: Vec<usize> = (0..self.orig_m).filter(|&d| self.alive[d]).collect();
+        if survivors.is_empty() {
+            return self.poison(None, dead, cause.context("no devices left to recover onto"));
+        }
+        let (base, strategy) = match (self.cluster.clone(), self.strategy) {
+            (Some(c), Some(s)) => (c, s),
+            // `build` guarantees recovery sessions carry their cluster;
+            // defensive fail-fast if that invariant ever breaks.
+            _ => return self.poison(None, dead, cause.context("recovery context missing")),
+        };
+        let devices = survivors.iter().map(|&d| base.devices[d]).collect();
+        let survivor = Cluster::new(devices, base.bandwidth_bps, base.t_est);
+        let plan = Arc::new(crate::pipeline::plan(&self.model, &survivor, strategy));
+        self.devmap = survivors;
+        self.m = plan.m;
+        let (ctrl_tx, done_rx, handles) = spawn_workers(
+            &self.model,
+            &plan,
+            &self.wb,
+            &self.backend,
+            self.fault.as_ref(),
+            &self.devmap,
+            self.recv_timeout,
+        );
+        self.ctrl_tx = ctrl_tx;
+        self.done_rx = done_rx;
+        self.handles = handles;
+        self.recovery.replans += 1;
+        // Replay every in-flight request in id order, so the new epoch's
+        // per-worker FIFO still processes them in submission order.
+        let mut ids: Vec<ReqId> = self.pending.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let p = self.pending.get_mut(&id).unwrap();
+            p.remaining = self.m;
+            p.output = None;
+            p.last_finish = None;
+            p.stats = ExecStats::zeroed(self.orig_m, self.kernel_isa, self.conv_lowering);
+            p.replays += 1;
+            self.recovery.requests_replayed += 1;
+            let input = Arc::clone(&p.input);
+            for c in &self.ctrl_tx {
+                c.send(Control::Request {
+                    req: id,
+                    input: Arc::clone(&input),
+                })
+                .map_err(|_| anyhow!("worker hung up during replay"))?;
+            }
+        }
+        self.recovery.recovery_secs += t0.elapsed().as_secs_f64();
         Ok(())
     }
 }
@@ -692,21 +1058,95 @@ impl Drop for ExecSession {
         for c in &self.ctrl_tx {
             let _ = c.send(Control::Shutdown);
         }
-        // After a worker error the erroring worker's peers may be wedged
-        // mid-protocol (blocked in a tagged receive for a message that
-        // will never come — the full-mesh channels only disconnect when
-        // every worker exits, so they cannot unblock); joining them
-        // would deadlock this thread. Detach instead: the threads are
-        // leaked until process exit, which is the price of a poisoned
-        // session (the submit path already refuses further work).
-        if self.poisoned {
-            self.handles.drain(..).for_each(drop);
-            return;
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        // Receive deadlines mean even workers wedged mid-protocol wake
+        // up eventually, so join with a bounded deadline instead of the
+        // old poisoned-path detach-forever. Workers still running at the
+        // deadline (e.g. sleeping out a long recv_timeout) are detached
+        // and leak only until process exit.
+        let mut hs = std::mem::take(&mut self.handles);
+        hs.append(&mut self.draining);
+        let deadline = self.recv_timeout.min(Duration::from_secs(5)) + Duration::from_secs(1);
+        join_bounded(hs, deadline);
     }
+}
+
+/// Join every handle that finishes within `deadline` (polled, since the
+/// std join has no timeout); drop — detach — the rest.
+fn join_bounded(mut handles: Vec<std::thread::JoinHandle<()>>, deadline: Duration) {
+    let t0 = Instant::now();
+    loop {
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let _ = handles.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        if handles.is_empty() || t0.elapsed() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Spawn one worker thread per plan device over a fresh transport mesh
+/// and a fresh done channel. Used at session open and again on every
+/// recovery re-plan; the compiled backend recompiles the survivor plan
+/// here (Arc-dedup'd kernels keep that cheap).
+fn spawn_workers(
+    model: &Arc<Model>,
+    plan: &Arc<Plan>,
+    wb: &Arc<WeightBundle>,
+    backend: &Backend,
+    fault: Option<&Arc<FaultPlan>>,
+    devmap: &[usize],
+    recv_timeout: Duration,
+) -> (
+    Vec<Sender<Control>>,
+    Receiver<Done>,
+    Vec<std::thread::JoinHandle<()>>,
+) {
+    let m = plan.m;
+    // Compiled backend: build the whole plan's kernels up front, deduping
+    // weight-identical stages across devices (Rows/Full/Replicate all
+    // pack the full weight — one shared Arc instead of m copies), then
+    // hand each worker its shard.
+    let compiled = match backend {
+        Backend::Compiled { threads } => {
+            Some(CompiledPlan::compile(model, plan, wb, (*threads).max(1)))
+        }
+        _ => None,
+    };
+    let endpoints = make_endpoints(m, devmap, fault);
+    let (done_tx, done_rx) = channel::<Done>();
+    let mut ctrl_tx = Vec::with_capacity(m);
+    let mut handles = Vec::with_capacity(m);
+    for (dev, transport) in endpoints.into_iter().enumerate() {
+        let (ctx, crx) = channel::<Control>();
+        ctrl_tx.push(ctx);
+        let model = Arc::clone(model);
+        let plan = Arc::clone(plan);
+        let wb = Arc::clone(wb);
+        let backend = backend.clone();
+        let shard = compiled.as_ref().map(|cp| cp.devices[dev].clone());
+        let done = done_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            worker_loop(
+                dev,
+                model,
+                plan,
+                wb,
+                transport,
+                recv_timeout,
+                crx,
+                done,
+                backend,
+                shard,
+            )
+        }));
+    }
+    (ctrl_tx, done_rx, handles)
 }
 
 /// Execute a plan once (spawns a fresh session). Returns the output
@@ -732,17 +1172,14 @@ fn worker_loop(
     model: Arc<Model>,
     plan: Arc<Plan>,
     wb: Arc<WeightBundle>,
-    tx: Vec<Sender<Msg>>,
-    rx: Receiver<Msg>,
+    transport: Box<dyn Transport>,
+    recv_timeout: Duration,
     ctrl: Receiver<Control>,
-    done: Sender<(usize, usize, Result<WorkerOut>)>,
+    done: Sender<Done>,
     backend: Backend,
     shard: Option<CompiledDevice>,
 ) {
-    let mut mailbox = Mailbox {
-        rx,
-        pending: Vec::new(),
-    };
+    let mut mailbox = Mailbox::new(dev, transport, recv_timeout);
     let mut runner = match &backend {
         Backend::Reference => Ok(Runner::Host(ComputeBackend::Reference)),
         Backend::Fast { threads } => Ok(Runner::Host(ComputeBackend::Fast {
@@ -773,12 +1210,17 @@ fn worker_loop(
             Control::Request { req, input } => {
                 let result = match &mut runner {
                     Err(e) => Err(anyhow!("backend init failed: {e:#}")),
-                    Ok(r) => worker_request(
-                        dev, &model, &plan, &wb, input, &tx, &mut mailbox, r, req,
-                    ),
+                    Ok(r) => worker_request(dev, &model, &plan, &wb, input, &mut mailbox, r, req),
                 };
-                if done.send((req, dev, result)).is_err() {
-                    break; // session dropped
+                // A fault-plan kill is this device dying: report it once,
+                // then abandon the control queue like a crashed process
+                // (peers' deadlines and the session's supervisor own the
+                // fallout).
+                let killed = result.as_ref().err().is_some_and(|e| {
+                    e.chain().any(|c| c.downcast_ref::<WorkerKilled>().is_some())
+                });
+                if done.send((req, dev, result)).is_err() || killed {
+                    break; // session gone, or this device is dead
                 }
             }
         }
@@ -805,32 +1247,22 @@ fn worker_request(
     plan: &Plan,
     wb: &WeightBundle,
     input: Arc<Tensor>,
-    tx: &[Sender<Msg>],
     mailbox: &mut Mailbox,
     runner: &mut Runner,
     req: usize,
 ) -> Result<WorkerOut> {
     let m = plan.m;
-    let mut bytes_sent = 0u64;
-    let mut messages_sent = 0usize;
     let mut compute_secs = 0.0f64;
-
-    let send = |to: usize, stage: usize, phase: u8, tensor: Tensor,
-                    bytes_sent: &mut u64, messages_sent: &mut usize| {
-        *bytes_sent += tensor.bytes() as u64;
-        *messages_sent += 1;
-        let _ = tx[to].send(Msg {
-            from: dev,
-            req,
-            stage,
-            phase,
-            tensor,
-        });
-    };
+    mailbox.begin_request();
 
     let mut local = Local::Full(input);
 
     for (si, sp) in plan.stages.iter().enumerate() {
+        // Fault hook at every stage boundary: a kill trigger fires here,
+        // mid-request, abandoning the wire protocol exactly where a
+        // crashed device would.
+        mailbox.fault_check(req, si)?;
+
         // Previous stage context (for shard assembly semantics).
         let prev = si.checked_sub(1).map(|p| &plan.stages[p]);
 
@@ -844,14 +1276,7 @@ fn worker_request(
                     if t.len() > 0 {
                         for k in 0..m {
                             if k != dev {
-                                send(
-                                    k,
-                                    si,
-                                    PHASE_MAIN,
-                                    t.clone(),
-                                    &mut bytes_sent,
-                                    &mut messages_sent,
-                                );
+                                mailbox.send(k, req, si, PHASE_MAIN, t.clone())?;
                             }
                         }
                     }
@@ -886,7 +1311,7 @@ fn worker_request(
                 };
                 if dev != *root {
                     if let Some(t) = my_partial {
-                        send(*root, si, PHASE_MAIN, t, &mut bytes_sent, &mut messages_sent);
+                        mailbox.send(*root, req, si, PHASE_MAIN, t)?;
                     }
                     if is_reduce_to {
                         local = Local::Nothing;
@@ -914,14 +1339,7 @@ fn worker_request(
                     if !is_reduce_to {
                         for k in 0..m {
                             if k != dev {
-                                send(
-                                    k,
-                                    si,
-                                    PHASE_BCAST,
-                                    raw.clone(),
-                                    &mut bytes_sent,
-                                    &mut messages_sent,
-                                );
+                                mailbox.send(k, req, si, PHASE_BCAST, raw.clone())?;
                             }
                         }
                     }
@@ -934,14 +1352,7 @@ fn worker_request(
                 if dev != *root {
                     if let Local::Shard(t) = &local {
                         if t.len() > 0 {
-                            send(
-                                *root,
-                                si,
-                                PHASE_MAIN,
-                                t.clone(),
-                                &mut bytes_sent,
-                                &mut messages_sent,
-                            );
+                            mailbox.send(*root, req, si, PHASE_MAIN, t.clone())?;
                         }
                     }
                     local = Local::Nothing;
@@ -969,7 +1380,7 @@ fn worker_request(
                     let t = local.full()?;
                     for k in 0..m {
                         if k != dev {
-                            send(k, si, PHASE_MAIN, t.clone(), &mut bytes_sent, &mut messages_sent);
+                            mailbox.send(k, req, si, PHASE_MAIN, t.clone())?;
                         }
                     }
                 } else {
@@ -993,7 +1404,7 @@ fn worker_request(
                     let local_start = h.row_start - my_owned.0;
                     let mut frag = Tensor::zeros(t.c, h.row_count, t.w);
                     copy_rows_into(&mut frag, 0, t, local_start, h.row_count);
-                    send(h.to, si, PHASE_MAIN, frag, &mut bytes_sent, &mut messages_sent);
+                    mailbox.send(h.to, req, si, PHASE_MAIN, frag)?;
                 }
                 // build my input window
                 let (my_start, my_count) = out_ranges[dev];
@@ -1141,14 +1552,7 @@ fn worker_request(
             if dev != *root {
                 if let Local::Shard(t) = &local {
                     if t.len() > 0 {
-                        send(
-                            *root,
-                            FINAL_STAGE,
-                            PHASE_MAIN,
-                            t.clone(),
-                            &mut bytes_sent,
-                            &mut messages_sent,
-                        );
+                        mailbox.send(*root, req, FINAL_STAGE, PHASE_MAIN, t.clone())?;
                     }
                 }
                 None
@@ -1178,7 +1582,7 @@ fn worker_request(
             };
             if dev != *root {
                 if let Some(t) = my_partial {
-                    send(*root, FINAL_STAGE, PHASE_MAIN, t, &mut bytes_sent, &mut messages_sent);
+                    mailbox.send(*root, req, FINAL_STAGE, PHASE_MAIN, t)?;
                 }
                 None
             } else {
@@ -1202,8 +1606,8 @@ fn worker_request(
 
     Ok(WorkerOut {
         output,
-        bytes_sent,
-        messages_sent,
+        bytes_sent: mailbox.bytes_sent,
+        messages_sent: mailbox.messages_sent,
         compute_secs,
         arena_grows: runner.arena_grows(),
         peak_scratch_bytes: runner.arena_peak_bytes(),
@@ -1286,6 +1690,7 @@ impl SliceKind {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::KillSpec;
     use crate::device::profiles;
     use crate::exec::compute::centralized_inference;
     use crate::model::zoo;
@@ -1478,6 +1883,7 @@ mod tests {
         assert!(r.stats.wall_secs > 0.0);
         assert!(r.stats.messages_sent.iter().sum::<usize>() > 0);
         assert!(r.stats.bytes_sent.iter().sum::<u64>() > 0);
+        assert_eq!(r.stats.replays, 0, "fault-free requests never replay");
     }
 
     #[test]
@@ -1496,5 +1902,98 @@ mod tests {
                 got.output.max_abs_diff(&expect)
             );
         }
+    }
+
+    #[test]
+    fn open_with_defaults_matches_new() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let plan = pipeline::plan(&m, &cluster, Strategy::Iop);
+        let input = model_input(&m);
+        let mut via_new = ExecSession::new(&m, &plan, Backend::Reference).unwrap();
+        let mut via_open =
+            ExecSession::open(&m, &cluster, Strategy::Iop, SessionOptions::default()).unwrap();
+        assert_eq!(via_open.devices(), cluster.m());
+        assert_eq!(via_open.alive_devices(), cluster.m());
+        assert_eq!(via_open.recovery_stats(), RecoveryStats::default());
+        let a = via_new.infer(input.clone()).unwrap();
+        let b = via_open.infer(input).unwrap();
+        assert_eq!(a.output, b.output);
+    }
+
+    fn kill_plan(dev: usize, at_req: usize) -> FaultPlan {
+        FaultPlan {
+            recv_timeout_ms: Some(1000),
+            kills: vec![KillSpec {
+                dev,
+                at_req,
+                at_stage: None,
+            }],
+            ..FaultPlan::default()
+        }
+    }
+
+    #[test]
+    fn recovery_survives_a_kill_and_counts_it() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        let input = model_input(&m);
+        let expect = centralized_inference(&m, &wb, &input);
+        let mut s = ExecSession::open(
+            &m,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                recover: true,
+                fault: Some(kill_plan(1, 0)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        for i in 0..3 {
+            let r = s.infer(input.clone()).unwrap();
+            assert!(
+                r.output.allclose(&expect, 1e-4, 1e-5),
+                "request {i} after recovery must still match the oracle"
+            );
+            if i == 0 {
+                assert_eq!(r.stats.replays, 1, "request 0 rode the replay");
+            }
+        }
+        let rs = s.recovery_stats();
+        assert_eq!(rs.workers_lost, 1);
+        assert_eq!(rs.replans, 1);
+        assert!(rs.requests_replayed >= 1);
+        assert!(rs.recovery_secs > 0.0);
+        assert_eq!(s.alive_devices(), cluster.m() - 1);
+        assert_eq!(s.devices(), cluster.m(), "stats keep the original width");
+        assert!(!s.poisoned());
+        assert_eq!(s.aborted_count(), 0, "recovery replays instead of aborting");
+    }
+
+    #[test]
+    fn fail_fast_without_recover_errors_instead_of_hanging() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let input = model_input(&m);
+        let mut s = ExecSession::open(
+            &m,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                recover: false,
+                fault: Some(kill_plan(1, 0)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let err = s.infer(input.clone()).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10), "must not hang");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("recover"), "error must point at --recover: {msg}");
+        assert!(s.poisoned());
+        assert!(s.submit(input).is_err(), "poisoned sessions refuse submits");
     }
 }

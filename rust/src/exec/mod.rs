@@ -13,6 +13,15 @@
 //! no extra synchronization), and [`serve`] drives closed-loop
 //! throughput measurements over a session ([`ThroughputReport`]).
 //!
+//! The wire layer is pluggable ([`transport`]): workers speak to each
+//! other through a [`Transport`] object — in-process channels by default,
+//! or a fault-injecting wrapper driven by a `FaultPlan` (per-link
+//! delay/drop, per-device kill triggers) for chaos testing. Every tagged
+//! receive carries a deadline, and sessions opened with
+//! [`SessionOptions::recover`] respond to a device loss by re-planning
+//! the partition onto the survivors and replaying in-flight requests
+//! ([`RecoveryStats`] counts the damage) instead of poisoning.
+//!
 //! Four backends:
 //!  * [`Backend::Reference`] — scalar host tensor ops (`tensor::ops`), no
 //!    external dependencies; the numerical oracle every other path is
@@ -42,11 +51,18 @@ pub mod harness;
 pub mod pjrt;
 pub mod prepack;
 pub mod serve;
+pub mod transport;
 pub mod weights;
 
 pub use backend::ComputeBackend;
-pub use harness::{run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats, ReqId};
+pub use harness::{
+    run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats, RecoveryStats, ReqId,
+    SessionOptions,
+};
 pub use prepack::{
     force_lowering, lowering_selected, CompiledDevice, CompiledPlan, ConvLowering, ScratchArena,
 };
 pub use serve::{serve_closed_loop, ServeOptions, ThroughputReport};
+pub use transport::{
+    ChannelTransport, FaultTransport, Msg, RecvDeadline, RecvError, Transport, WorkerKilled,
+};

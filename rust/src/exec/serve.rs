@@ -66,6 +66,18 @@ pub struct ThroughputReport {
     /// the pack-buffer footprint — the number the implicit-GEMM memory
     /// gate watches under sustained load.
     pub peak_scratch_bytes: Vec<u64>,
+    /// Devices lost during this run (delta of the session's
+    /// [`crate::exec::RecoveryStats`] over the call, warm-up included);
+    /// 0 on a healthy run.
+    pub workers_lost: u64,
+    /// Partition re-plans performed during this run.
+    pub replans: u64,
+    /// In-flight requests replayed onto a re-planned worker set.
+    pub requests_replayed: u64,
+    /// Seconds spent in recovery (detect → re-plan → replay) during this
+    /// run; this time is inside `wall_secs`, so it also shows up as a
+    /// latency-percentile bump.
+    pub recovery_secs: f64,
 }
 
 impl ThroughputReport {
@@ -93,6 +105,13 @@ impl ThroughputReport {
                         .collect(),
                 ),
             ),
+            ("workers_lost", Json::num(self.workers_lost as f64)),
+            ("replans", Json::num(self.replans as f64)),
+            (
+                "requests_replayed",
+                Json::num(self.requests_replayed as f64),
+            ),
+            ("recovery_secs", Json::num(self.recovery_secs)),
         ])
     }
 }
@@ -126,6 +145,7 @@ pub fn serve_closed_loop(
     let depth = opts.inflight.max(1);
     let m = session.devices();
     session.set_max_inflight(depth);
+    let recovery_before = session.recovery_stats();
 
     // Warm-up: serial, unmeasured.
     for _ in 0..opts.warmup {
@@ -166,6 +186,7 @@ pub fn serve_closed_loop(
     let wall_secs = t0.elapsed().as_secs_f64();
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rec = session.recovery_stats();
     Ok(ThroughputReport {
         requests: opts.requests,
         inflight: depth,
@@ -178,6 +199,10 @@ pub fn serve_closed_loop(
         bytes_total,
         messages_total,
         peak_scratch_bytes: peak_scratch,
+        workers_lost: rec.workers_lost - recovery_before.workers_lost,
+        replans: rec.replans - recovery_before.replans,
+        requests_replayed: rec.requests_replayed - recovery_before.requests_replayed,
+        recovery_secs: rec.recovery_secs - recovery_before.recovery_secs,
     })
 }
 
@@ -236,8 +261,70 @@ mod tests {
         // compiled backend: every device reports its arena high-water
         assert_eq!(rep.peak_scratch_bytes.len(), cluster.m());
         assert!(rep.peak_scratch_bytes.iter().sum::<u64>() > 0);
+        // healthy run: recovery counters all zero
+        assert_eq!(rep.workers_lost, 0);
+        assert_eq!(rep.replans, 0);
+        assert_eq!(rep.requests_replayed, 0);
+        assert_eq!(rep.recovery_secs, 0.0);
         // session is drained afterwards
         assert_eq!(session.inflight(), 0);
+    }
+
+    #[test]
+    fn chaos_run_reports_recovery_counters() {
+        use crate::config::{FaultPlan, KillSpec};
+        use crate::exec::compute::centralized_inference;
+        use crate::exec::harness::SessionOptions;
+        use crate::exec::weights::WeightBundle;
+
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let wb = WeightBundle::generate(&model);
+        let input = model_input(&model);
+        let expect = centralized_inference(&model, &wb, &input);
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                recover: true,
+                fault: Some(FaultPlan {
+                    recv_timeout_ms: Some(1000),
+                    kills: vec![KillSpec {
+                        dev: 1,
+                        at_req: 2,
+                        at_stage: None,
+                    }],
+                    ..FaultPlan::default()
+                }),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let mut completed = 0usize;
+        let rep = serve_closed_loop(
+            &mut session,
+            &ServeOptions {
+                requests: 6,
+                inflight: 3,
+                warmup: 0,
+            },
+            |_| input.clone(),
+            |i, r| {
+                assert!(
+                    r.output.allclose(&expect, 1e-4, 1e-5),
+                    "request {i} must survive the mid-run kill"
+                );
+                completed += 1;
+            },
+        )
+        .unwrap();
+        assert_eq!(completed, 6, "every request completes despite the kill");
+        assert_eq!(rep.workers_lost, 1);
+        assert!(rep.replans >= 1);
+        assert!(rep.requests_replayed >= 1);
+        assert!(rep.recovery_secs > 0.0);
+        assert!(!session.poisoned());
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Integration: fault injection and supervised recovery.
+//!
+//! Chaos soak (kill each device index in turn at inflight=m), recovery
+//! determinism (post-recovery outputs bit-identical to a fresh session
+//! planned on the survivor cluster, all strategies x both cluster
+//! shapes), cascading kills down to a single survivor, and the fail-fast
+//! path without `recover` (prompt typed error, bounded aborted map, no
+//! hang).
+
+use std::time::{Duration, Instant};
+
+use iop::config::{FaultPlan, KillSpec, LinkFault};
+use iop::device::{profiles, Cluster};
+use iop::exec::compute::centralized_inference;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{Backend, ExecSession, SessionOptions};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+
+/// A fault plan that kills `dev` once request `at_req` reaches its first
+/// stage, with a short receive deadline so peer stalls surface quickly.
+fn kill_plan(dev: usize, at_req: usize) -> FaultPlan {
+    FaultPlan {
+        seed: 7,
+        recv_timeout_ms: Some(1500),
+        links: vec![],
+        kills: vec![KillSpec {
+            dev,
+            at_req,
+            at_stage: None,
+        }],
+    }
+}
+
+/// Kill every device index in turn mid-run at inflight=m: each run must
+/// still answer every submitted request with the oracle output and
+/// report exactly one lost worker.
+#[test]
+fn chaos_soak_any_single_worker_dies_mid_run() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let expect = centralized_inference(&model, &wb, &input);
+    let m = cluster.m();
+    for victim in 0..m {
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                backend: Backend::Compiled { threads: 1 },
+                max_inflight: Some(m),
+                recover: true,
+                fault: Some(kill_plan(victim, 5)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let ids: Vec<_> = (0..12)
+            .map(|_| session.submit(input.clone()).unwrap())
+            .collect();
+        for id in ids {
+            let r = session.collect_req(id).unwrap();
+            assert!(
+                r.output.allclose(&expect, 1e-4, 1e-5),
+                "victim {victim} request {id}: diff={}",
+                r.output.max_abs_diff(&expect)
+            );
+        }
+        let rec = session.recovery_stats();
+        assert_eq!(rec.workers_lost, 1, "victim {victim}");
+        assert!(rec.replans >= 1, "victim {victim}");
+        assert!(rec.requests_replayed >= 1, "victim {victim}");
+        assert!(rec.recovery_secs > 0.0, "victim {victim}");
+        assert_eq!(session.alive_devices(), m - 1, "victim {victim}");
+        assert_eq!(session.devices(), m, "stats stay original-width");
+        assert_eq!(session.aborted_count(), 0, "recovery aborts nothing");
+        assert!(!session.poisoned(), "victim {victim}");
+    }
+}
+
+/// Determinism: a session that loses device 1 before any request
+/// completes must produce outputs bit-identical (`==`, not allclose) to
+/// a fresh session planned directly on the survivor cluster — for every
+/// strategy and both cluster shapes. Sender-matched receives pin the
+/// floating-point reduction order, so equality is exact.
+#[test]
+fn recovery_outputs_bit_identical_to_fresh_survivor_session() {
+    let model = zoo::lenet();
+    let input = model_input(&model);
+    for cluster in [profiles::paper_default(), profiles::heterogeneous()] {
+        for strategy in Strategy::all() {
+            let mut chaos = ExecSession::open(
+                &model,
+                &cluster,
+                strategy,
+                SessionOptions {
+                    recover: true,
+                    fault: Some(kill_plan(1, 0)),
+                    ..SessionOptions::default()
+                },
+            )
+            .unwrap();
+            let survivors = Cluster::new(
+                vec![cluster.devices[0], cluster.devices[2]],
+                cluster.bandwidth_bps,
+                cluster.t_est,
+            );
+            let plan = pipeline::plan(&model, &survivors, strategy);
+            let mut fresh = ExecSession::new(&model, &plan, Backend::Reference).unwrap();
+            for k in 0..3 {
+                let a = chaos.infer(input.clone()).unwrap();
+                let b = fresh.infer(input.clone()).unwrap();
+                assert_eq!(
+                    a.output.data, b.output.data,
+                    "{} request {k}: recovered output differs from fresh survivor session",
+                    strategy.name()
+                );
+            }
+            assert_eq!(chaos.recovery_stats().workers_lost, 1);
+            assert_eq!(chaos.alive_devices(), 2);
+        }
+    }
+}
+
+/// Two kills in one run degrade the session to a single survivor; every
+/// request still completes correctly and the aborted map stays empty.
+#[test]
+fn cascading_kills_degrade_to_single_survivor() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let expect = centralized_inference(&model, &wb, &input);
+    let fault = FaultPlan {
+        seed: 1,
+        recv_timeout_ms: Some(1500),
+        links: vec![],
+        kills: vec![
+            KillSpec {
+                dev: 2,
+                at_req: 1,
+                at_stage: None,
+            },
+            KillSpec {
+                dev: 0,
+                at_req: 3,
+                at_stage: None,
+            },
+        ],
+    };
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Oc,
+        SessionOptions {
+            max_inflight: Some(3),
+            recover: true,
+            fault: Some(fault),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    for k in 0..6 {
+        let r = session.infer(input.clone()).unwrap();
+        assert!(
+            r.output.allclose(&expect, 1e-4, 1e-5),
+            "request {k} after cascade: diff={}",
+            r.output.max_abs_diff(&expect)
+        );
+    }
+    let rec = session.recovery_stats();
+    assert_eq!(rec.workers_lost, 2);
+    assert!(rec.replans >= 2);
+    assert_eq!(session.alive_devices(), 1, "degraded to a single survivor");
+    assert_eq!(session.devices(), 3);
+    assert_eq!(
+        session.aborted_count(),
+        0,
+        "repeated kills must not grow the aborted map"
+    );
+    assert!(!session.poisoned());
+}
+
+/// Without `recover`, a kill poisons the session promptly: at least one
+/// request errors with an actionable message, the whole exchange stays
+/// far under any timeout pile-up, and the aborted map is bounded by the
+/// in-flight window.
+#[test]
+fn fail_fast_is_prompt_and_bounds_the_aborted_map() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            max_inflight: Some(3),
+            recover: false,
+            fault: Some(kill_plan(1, 1)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let ids: Vec<_> = (0..3)
+        .map(|_| session.submit(input.clone()).unwrap())
+        .collect();
+    let mut errs = 0;
+    for id in ids {
+        match session.collect_req(id) {
+            Ok(r) => assert!(!r.output.data.is_empty()),
+            Err(e) => {
+                errs += 1;
+                let msg = format!("{e:#}");
+                assert!(msg.contains("recover"), "error must point at --recover: {msg}");
+            }
+        }
+    }
+    assert!(errs >= 1, "the killed request must surface an error");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "fail-fast took {:?}",
+        t0.elapsed()
+    );
+    assert!(session.poisoned());
+    assert_eq!(session.inflight(), 0, "every ReqId got an answer");
+    assert!(
+        session.aborted_count() <= 3,
+        "aborted map exceeds the in-flight window: {}",
+        session.aborted_count()
+    );
+    assert!(
+        session.submit(input).is_err(),
+        "poisoned session must refuse new submits"
+    );
+}
+
+/// A fully dropped link never hangs a receive: the sender-matched
+/// receive hits its deadline, the session fails fast (recover off) and
+/// the error names the lost peer.
+#[test]
+fn dropped_link_times_out_with_deadline_error() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let fault = FaultPlan {
+        seed: 3,
+        recv_timeout_ms: Some(500),
+        links: vec![LinkFault {
+            from: 1,
+            to: 0,
+            delay_ms: 0.0,
+            drop_prob: 1.0,
+        }],
+        kills: vec![],
+    };
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: false,
+            fault: Some(fault),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let err = session.infer(input).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "deadline did not fire promptly: {:?}",
+        t0.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("device 1"),
+        "error must name the silent peer: {msg}"
+    );
+    assert!(session.poisoned());
+}
+
+/// A dropped link heals under `recover`: the deadline classifies the
+/// silent peer as dead, the session re-plans around it, and requests
+/// keep completing correctly.
+#[test]
+fn dropped_link_recovers_by_replanning_around_the_peer() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let expect = centralized_inference(&model, &wb, &input);
+    let fault = FaultPlan {
+        seed: 3,
+        recv_timeout_ms: Some(500),
+        links: vec![LinkFault {
+            from: 1,
+            to: 0,
+            delay_ms: 0.0,
+            drop_prob: 1.0,
+        }],
+        kills: vec![],
+    };
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            fault: Some(fault),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    for k in 0..3 {
+        let r = session.infer(input.clone()).unwrap();
+        assert!(
+            r.output.allclose(&expect, 1e-4, 1e-5),
+            "request {k}: diff={}",
+            r.output.max_abs_diff(&expect)
+        );
+    }
+    let rec = session.recovery_stats();
+    assert_eq!(rec.workers_lost, 1, "the muted peer counts as lost");
+    assert!(!session.poisoned());
+}

@@ -219,6 +219,178 @@ fn model_and_cluster_files() {
     let _ = std::fs::remove_file(cluster_path);
 }
 
+fn write_fault_plan(name: &str, contents: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::write(&p, contents).unwrap();
+    p
+}
+
+#[test]
+fn exec_fault_kill_without_recover_errors_actionably() {
+    let p = write_fault_plan(
+        "iop_cli_kill_norecover.json",
+        r#"{"recv_timeout_ms": 1000, "kills": [{"dev": 1, "at_req": 0}]}"#,
+    );
+    let err = run(&[
+        "exec",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--fault-plan",
+        p.to_str().unwrap(),
+    ])
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("recover"), "error must point at --recover: {msg}");
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn exec_fault_kill_with_recover_completes() {
+    let p = write_fault_plan(
+        "iop_cli_kill_recover.json",
+        r#"{"recv_timeout_ms": 1000, "kills": [{"dev": 1, "at_req": 0}]}"#,
+    );
+    run(&[
+        "exec",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--fault-plan",
+        p.to_str().unwrap(),
+        "--recover",
+    ])
+    .unwrap();
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn serve_fault_kill_without_recover_fails_fast() {
+    let p = write_fault_plan(
+        "iop_cli_serve_norecover.json",
+        r#"{"recv_timeout_ms": 1000, "kills": [{"dev": 2, "at_req": 2}]}"#,
+    );
+    let t0 = std::time::Instant::now();
+    let err = run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--requests",
+        "6",
+        "--warmup",
+        "0",
+        "--fault-plan",
+        p.to_str().unwrap(),
+    ])
+    .unwrap_err();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(15),
+        "serve must fail fast, not hang: {:?}",
+        t0.elapsed()
+    );
+    assert!(format!("{err:#}").contains("recover"));
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn serve_chaos_recovers_and_checks_every_response() {
+    let p = write_fault_plan(
+        "iop_cli_serve_recover.json",
+        r#"{"seed": 7, "recv_timeout_ms": 1500, "kills": [{"dev": 1, "at_req": 3, "at_stage": 1}]}"#,
+    );
+    let args = [
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--backend",
+        "compiled",
+        "--requests",
+        "10",
+        "--warmup",
+        "1",
+        "--fault-plan",
+        p.to_str().unwrap(),
+        "--recover",
+        "--check",
+    ];
+    run(&args).unwrap();
+    // JSON path too (fresh session, the kill fires again)
+    let mut json_args = args.to_vec();
+    json_args.push("--json");
+    run(&json_args).unwrap();
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn serve_chaos_gate_rejects_unfired_kill_schedule() {
+    // A kill at request 1000 of a 5-request run never fires: under
+    // --recover the gate must fail the run as having tested nothing.
+    let p = write_fault_plan(
+        "iop_cli_unfired_kill.json",
+        r#"{"kills": [{"dev": 1, "at_req": 1000}]}"#,
+    );
+    let err = run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--requests",
+        "5",
+        "--warmup",
+        "0",
+        "--fault-plan",
+        p.to_str().unwrap(),
+        "--recover",
+    ])
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("no recovery occurred"));
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn fault_plan_file_and_schema_errors_are_actionable() {
+    // missing file
+    assert!(run(&[
+        "exec",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--fault-plan",
+        "/nonexistent/nope.json",
+    ])
+    .is_err());
+    // device out of range for the 3-device default cluster
+    let p = write_fault_plan(
+        "iop_cli_bad_fault_plan.json",
+        r#"{"kills": [{"dev": 9, "at_req": 0}]}"#,
+    );
+    let err = run(&[
+        "exec",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--fault-plan",
+        p.to_str().unwrap(),
+        "--recover",
+    ])
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("outside the cluster"),
+        "schema error must name the out-of-range device: {msg}"
+    );
+    let _ = std::fs::remove_file(p);
+}
+
 #[test]
 fn shipped_config_examples_parse() {
     // The configs in examples/configs/ must stay valid.
