@@ -5,7 +5,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::args::Args;
 use crate::device::{Cluster, Device};
-use crate::config::FaultPlan;
+use crate::config::{FaultPlan, LinkShape};
 use crate::exec::{
     serve_closed_loop, Backend, ExecSession, ServeOptions, SessionOptions, ThroughputReport,
 };
@@ -94,6 +94,53 @@ fn fault_opts_from_args(a: &mut Args) -> Result<(Option<FaultPlan>, bool)> {
     };
     let recover = a.bool("recover");
     Ok((fault, recover))
+}
+
+/// Optional f64 flag — `None` when absent (so "explicitly given" is
+/// distinguishable from "defaulted", which `f64_or` cannot express).
+fn f64_opt(a: &mut Args, key: &str) -> Result<Option<f64>> {
+    match a.str_opt(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+    }
+}
+
+/// Parse the real-transport deployment flags shared by `exec` and
+/// `serve`: `--deploy FILE` supplies worker addresses and/or modelled
+/// link parameters ([`crate::config::DeploySpec`] schema), and
+/// `--workers a,b,...` overrides the address list. Addresses are
+/// validated syntactically here so a typo fails before any socket is
+/// dialed. Returns `(addresses, link, addresses_came_from_--workers)`.
+fn deploy_from_args(a: &mut Args) -> Result<(Option<Vec<String>>, Option<LinkShape>, bool)> {
+    let mut workers: Option<Vec<String>> = None;
+    let mut link: Option<LinkShape> = None;
+    if let Some(path) = a.str_opt("deploy") {
+        let spec = crate::config::load_deploy(&path)?;
+        if !spec.workers.is_empty() {
+            workers = Some(spec.workers);
+        }
+        link = spec.link;
+    }
+    let mut explicit = false;
+    if let Some(list) = a.str_opt("workers") {
+        let addrs: Vec<String> = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if addrs.is_empty() {
+            bail!("--workers expects a comma-separated list of tcp:HOST:PORT / unix:PATH");
+        }
+        for s in &addrs {
+            crate::exec::wire::Addr::parse(s).map_err(|e| anyhow!("--workers: {e}"))?;
+        }
+        workers = Some(addrs);
+        explicit = true;
+    }
+    Ok((workers, link, explicit))
 }
 
 fn backend_tag(backend: &Backend) -> String {
@@ -366,8 +413,13 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let cluster = cluster_from_args(a)?;
     let backend = backend_from_args(a, "reference")?;
     let (fault, recover) = fault_opts_from_args(a)?;
+    let (workers, deploy_link, _) = deploy_from_args(a)?;
     let json = a.bool("json");
     a.finish()?;
+    // A deploy file may carry both an address list and link parameters;
+    // with real workers present the kernel-level link is the real one,
+    // so the modelled shape only applies to an in-process run.
+    let shape = if workers.is_some() { None } else { deploy_link };
 
     let wb = crate::exec::weights::WeightBundle::generate(&model);
     let input = crate::exec::weights::model_input(&model);
@@ -382,6 +434,8 @@ pub fn exec(a: &mut Args) -> Result<()> {
             backend,
             recover,
             fault,
+            workers,
+            shape,
             ..SessionOptions::default()
         },
     )?;
@@ -531,9 +585,26 @@ fn serve_row(t: &mut Table, label: &str, rep: &ThroughputReport) {
 pub fn serve(a: &mut Args) -> Result<()> {
     let model = model_from_args(a)?;
     let strategy = strategy_from_args(a)?;
-    let cluster = cluster_from_args(a)?;
+    let mut cluster = cluster_from_args(a)?;
     let backend = backend_from_args(a, "compiled")?;
     let (fault, recover) = fault_opts_from_args(a)?;
+    let (workers, deploy_link, workers_explicit) = deploy_from_args(a)?;
+    let transport = a.str_or("transport", "channel");
+    let link_ms = f64_opt(a, "link-ms")?;
+    let link_mbps = f64_opt(a, "link-mbps")?;
+    let recv_timeout = match a.str_opt("recv-timeout-ms") {
+        None => None,
+        Some(v) => {
+            let ms: u64 = v
+                .parse()
+                .map_err(|_| anyhow!("--recv-timeout-ms expects milliseconds, got '{v}'"))?;
+            if ms == 0 {
+                bail!("--recv-timeout-ms must be > 0");
+            }
+            Some(std::time::Duration::from_millis(ms))
+        }
+    };
+    let expect_recovery = a.bool("expect-recovery");
     let requests = a.usize_or("requests", 64)?;
     let inflight = a.usize_or("inflight", cluster.m())?;
     let warmup = a.usize_or("warmup", 4)?;
@@ -548,6 +619,39 @@ pub fn serve(a: &mut Args) -> Result<()> {
     if inflight == 0 {
         bail!("--inflight must be > 0");
     }
+    if expect_recovery && !recover {
+        bail!("--expect-recovery requires --recover");
+    }
+    let (workers, shape) = match transport.as_str() {
+        "channel" => {
+            if link_ms.is_some() || link_mbps.is_some() {
+                bail!("--link-ms/--link-mbps require --transport shaped");
+            }
+            (workers, None)
+        }
+        "shaped" => {
+            // Shaping models the link in-process; a deploy file's
+            // address list describes the same cluster and is simply not
+            // dialed, but an explicit --workers flag is a contradiction.
+            if workers_explicit {
+                bail!("--transport shaped models the link in-process; drop --workers");
+            }
+            let mut link = deploy_link.unwrap_or_else(|| LinkShape::new(4.0, 50.0));
+            if let Some(ms) = link_ms {
+                link.latency_ms = ms;
+            }
+            if let Some(mbps) = link_mbps {
+                link.mbps = mbps;
+            }
+            // Align the analytic medium (eq. 8 prices against the
+            // cluster's bandwidth/t_est) with the modelled one, so the
+            // measured-vs-predicted table compares like with like.
+            cluster.bandwidth_bps = link.mbps * 1e6 / 8.0;
+            cluster.t_est = link.latency_ms * 1e-3;
+            (None, Some(link))
+        }
+        other => bail!("unknown transport '{other}' (channel|shaped)"),
+    };
 
     let input = crate::exec::weights::model_input(&model);
     let expect = if check {
@@ -565,6 +669,9 @@ pub fn serve(a: &mut Args) -> Result<()> {
             backend: backend.clone(),
             recover,
             fault,
+            recv_timeout,
+            workers,
+            shape: shape.clone(),
             ..SessionOptions::default()
         },
     )?;
@@ -605,6 +712,27 @@ pub fn serve(a: &mut Args) -> Result<()> {
         runs.push(("closed-loop", rep));
     }
 
+    // Shaped transport: validate the comm cost model end to end. Eq. (8)
+    // prices each step against the (aligned) cluster medium; the shaped
+    // medium metered actual busy seconds over the measured window, so
+    // predicted = per-request step price x requests in that window. The
+    // last run's window is used (under --compare-serial that is the
+    // pipelined run).
+    let wire_table = shape.as_ref().map(|link| {
+        let plan = pipeline::plan(&model, &cluster, strategy);
+        let n = runs.last().map(|(_, r)| r.requests).unwrap_or(0) as f64;
+        let stages: Vec<(String, f64)> = plan
+            .stages
+            .iter()
+            .map(|sp| {
+                let op = model.ops[sp.stage.op_idx].name.clone();
+                (op, crate::cost::comm::step_secs(&cluster, &sp.pre_comm) * n)
+            })
+            .collect();
+        let fin = crate::cost::comm::step_secs(&cluster, &plan.final_comm) * n;
+        (stages, fin, !link.links.is_empty())
+    });
+
     if json {
         let mut fields = vec![
             ("model", Json::str(model.name.clone())),
@@ -620,6 +748,13 @@ pub fn serve(a: &mut Args) -> Result<()> {
             ),
             ("max_abs_diff", Json::num(max_diff)),
         ]);
+        if let Some((stages, fin, _)) = &wire_table {
+            fields.push((
+                "wire_predicted_by_stage_secs",
+                Json::Arr(stages.iter().map(|(_, p)| Json::num(*p)).collect()),
+            ));
+            fields.push(("wire_predicted_final_secs", Json::num(*fin)));
+        }
         println!("{}", Json::obj(fields).to_string_pretty());
     } else {
         println!(
@@ -639,6 +774,46 @@ pub fn serve(a: &mut Args) -> Result<()> {
             serve_row(&mut t, label, rep);
         }
         println!("{}", t.render());
+        if let Some((stages, fin, has_overrides)) = &wire_table {
+            let rep = &runs.last().unwrap().1;
+            let ratio = |meas: f64, pred: f64| {
+                if pred > 0.0 {
+                    format!("{:.2}", meas / pred)
+                } else {
+                    "-".to_string()
+                }
+            };
+            let mut wt = Table::new(&["stage", "op", "predicted", "measured", "meas/pred"]);
+            for (i, (op, pred)) in stages.iter().enumerate() {
+                let meas = rep.wire_busy_by_stage.get(i).copied().unwrap_or(0.0);
+                wt.row(vec![
+                    i.to_string(),
+                    op.clone(),
+                    fmt_secs(*pred),
+                    fmt_secs(meas),
+                    ratio(meas, *pred),
+                ]);
+            }
+            wt.row(vec![
+                "final".to_string(),
+                "assemble".to_string(),
+                fmt_secs(*fin),
+                fmt_secs(rep.wire_busy_final),
+                ratio(rep.wire_busy_final, *fin),
+            ]);
+            println!(
+                "wire time over the last run's {} measured requests — \
+                 cost model (eq. 8) vs shaped medium\n{}",
+                rep.requests,
+                wt.render()
+            );
+            if *has_overrides {
+                println!(
+                    "note: per-link shape overrides are active; the prediction \
+                     prices every message at the default link"
+                );
+            }
+        }
     }
 
     let workers_lost: u64 = runs.iter().map(|(_, r)| r.workers_lost).sum();
@@ -657,13 +832,16 @@ pub fn serve(a: &mut Args) -> Result<()> {
             session.devices(),
         );
     }
-    // Chaos-gate: a fault plan that schedules kills under --recover must
-    // actually exercise the recovery path — a kill that never fired
-    // (e.g. at_req beyond the run) would silently test nothing.
-    if had_kills && recover && replans == 0 {
+    // Chaos-gate: a run that promises faults under --recover must
+    // actually exercise the recovery path — a scheduled kill that never
+    // fired (at_req beyond the run), or an externally injected fault
+    // (--expect-recovery, e.g. CI kill -9'ing a worker process) that
+    // missed the serving window, would silently test nothing.
+    if (had_kills || expect_recovery) && recover && replans == 0 {
         bail!(
-            "fault plan scheduled kills but no recovery occurred \
-             (raise --requests or lower the kill's at_req)"
+            "recovery was expected but never occurred \
+             (no kill fired in the serving window — raise --requests, \
+             lower the kill's at_req, or inject the fault earlier)"
         );
     }
 
@@ -692,6 +870,20 @@ pub fn serve(a: &mut Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `iop worker` — a cooperative worker process serving plan shards over
+/// a real socket. Stateless across sessions: the coordinator ships
+/// model + cluster + plan configuration at handshake, so one worker
+/// fleet serves any model/strategy and survives coordinator restarts
+/// and re-plans (each new epoch simply reconfigures it). Blocks until
+/// killed.
+pub fn worker(a: &mut Args) -> Result<()> {
+    let listen = a
+        .str_opt("listen")
+        .ok_or_else(|| anyhow!("--listen ADDR is required (tcp:HOST:PORT or unix:PATH)"))?;
+    a.finish()?;
+    crate::exec::run_worker(&listen)
 }
 
 /// `iop emit-plans` — canonical plans as JSON for the python AOT compiler.

@@ -21,6 +21,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("serve") => commands::serve(&mut a),
         Some("emit-plans") => commands::emit_plans(&mut a),
         Some("compare") => commands::compare(&mut a),
+        Some("worker") => commands::worker(&mut a),
         Some("help") | Some("--help") | None => {
             print_help();
             Ok(())
@@ -73,6 +74,13 @@ COMMANDS:
   emit-plans [--models a,b] --out FILE
                                  Export canonical plans as JSON for the
                                  python AOT shard compiler
+  worker     --listen ADDR       Run a cooperative worker process that
+                                 serves plan shards over a real socket
+                                 (ADDR = tcp:HOST:PORT or unix:PATH).
+                                 Workers are stateless across sessions:
+                                 the coordinator ships model + cluster +
+                                 plan config at handshake, so one worker
+                                 fleet serves any model/strategy/epoch
 
 MODEL INPUT: --model NAME (zoo) or --model-file SPEC.json (custom CNN)
 
@@ -117,6 +125,34 @@ FAULT INJECTION & RECOVERY (`iop exec|serve`):
                        replans, requests_replayed, recovery_secs) are
                        reported. Without --recover a loss fails fast
                        with a non-zero exit and a clear error.
+  --recv-timeout-ms T  per-receive deadline override (serve); a silent
+                       peer trips a RecvDeadline naming it instead of
+                       hanging forever
+  --expect-recovery    (serve) exit non-zero unless at least one
+                       re-plan actually happened — the CI gate for
+                       externally injected faults (e.g. kill -9 of a
+                       worker process)
+
+REAL NETWORK TRANSPORT (`iop exec|serve` + `iop worker`):
+  --workers a,b,...    one listen address per device, in device order;
+                       the session runs across those worker *processes*
+                       over TCP/UDS instead of in-process threads.
+                       Framed wire protocol (magic+version+checksum),
+                       session/epoch handshake, capped-backoff redial;
+                       a dead process maps to the same signal as a
+                       killed thread, so --recover re-plans onto the
+                       surviving processes
+  --deploy D.json      same, from a config file ({{"workers": [...],
+                       "link": {{...}}}}); explicit flags override it
+
+SHAPED LINK (`iop serve --transport shaped`):
+  --transport channel|shaped   in-process transport flavor  [channel]
+  --link-mbps B        modelled shared-medium bandwidth     [50]
+  --link-ms L          modelled per-message latency         [4]
+                       Shaped serving meters real per-stage wire time
+                       on the modelled medium and prints it next to
+                       the cost-model prediction (eq. 8) per stage —
+                       the end-to-end validation of cost/comm.rs.
 
 OUTPUT:
   --json               machine-readable output where supported

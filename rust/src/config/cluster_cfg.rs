@@ -199,6 +199,154 @@ pub fn fault_plan_from_json(j: &Json) -> Result<FaultPlan> {
     })
 }
 
+/// The modeled shape of the shared medium for
+/// `exec::transport::ShapedTransport`: default per-message latency and
+/// bandwidth, with optional per-directed-link overrides. Device ids are
+/// original cluster indices, like [`FaultPlan`].
+///
+/// JSON schema (standalone, or the `"link"` key of a deployment spec):
+///
+/// ```json
+/// {
+///   "latency_ms": 4,
+///   "mbps": 50,
+///   "links": [{"from": 0, "to": 1, "latency_ms": 8, "mbps": 20}]
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkShape {
+    /// Default per-message latency, milliseconds.
+    pub latency_ms: f64,
+    /// Default link bandwidth, megabits per second.
+    pub mbps: f64,
+    /// Directed overrides; absent links use the defaults.
+    pub links: Vec<ShapeOverride>,
+}
+
+/// Shape override for one directed link `from -> to`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeOverride {
+    pub from: usize,
+    pub to: usize,
+    pub latency_ms: f64,
+    pub mbps: f64,
+}
+
+impl LinkShape {
+    pub fn new(latency_ms: f64, mbps: f64) -> LinkShape {
+        LinkShape { latency_ms, mbps, links: Vec::new() }
+    }
+
+    /// `(latency_secs, bytes_per_sec)` for the directed link `from -> to`
+    /// (original device ids).
+    pub fn params(&self, from: usize, to: usize) -> (f64, f64) {
+        let (ms, mbps) = self
+            .links
+            .iter()
+            .find(|l| l.from == from && l.to == to)
+            .map(|l| (l.latency_ms, l.mbps))
+            .unwrap_or((self.latency_ms, self.mbps));
+        (ms * 1e-3, mbps * 1e6 / 8.0)
+    }
+
+    pub fn validate(&self, m: usize) -> Result<()> {
+        if self.mbps <= 0.0 || self.latency_ms < 0.0 {
+            return Err(anyhow!(
+                "link shape needs mbps > 0 and latency_ms >= 0 (got {} / {})",
+                self.mbps,
+                self.latency_ms
+            ));
+        }
+        for l in &self.links {
+            if l.from >= m || l.to >= m {
+                return Err(anyhow!(
+                    "link shape override {}->{} references a device outside the cluster (m={m})",
+                    l.from,
+                    l.to
+                ));
+            }
+            if l.mbps <= 0.0 || l.latency_ms < 0.0 {
+                return Err(anyhow!(
+                    "link shape override {}->{} needs mbps > 0 and latency_ms >= 0",
+                    l.from,
+                    l.to
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a [`LinkShape`] from its JSON spec (see the struct docs).
+pub fn link_shape_from_json(j: &Json) -> Result<LinkShape> {
+    let latency_ms = j.get("latency_ms").as_f64().unwrap_or(4.0);
+    let mbps = j.get("mbps").as_f64().unwrap_or(50.0);
+    let mut links = Vec::new();
+    if let Json::Arr(list) = j.get("links") {
+        for (i, l) in list.iter().enumerate() {
+            let from = l
+                .get("from")
+                .as_usize()
+                .ok_or_else(|| anyhow!("link shape override {i}: missing 'from'"))?;
+            let to = l
+                .get("to")
+                .as_usize()
+                .ok_or_else(|| anyhow!("link shape override {i}: missing 'to'"))?;
+            links.push(ShapeOverride {
+                from,
+                to,
+                latency_ms: l.get("latency_ms").as_f64().unwrap_or(latency_ms),
+                mbps: l.get("mbps").as_f64().unwrap_or(mbps),
+            });
+        }
+    }
+    let s = LinkShape { latency_ms, mbps, links };
+    if s.mbps <= 0.0 || s.latency_ms < 0.0 {
+        return Err(anyhow!("link shape needs mbps > 0 and latency_ms >= 0"));
+    }
+    Ok(s)
+}
+
+/// A deployment spec: where the worker processes listen, and optionally
+/// the modeled shape of the links between them — the file form of
+/// `iop serve --workers ... ` / `--transport shaped` flags.
+///
+/// ```json
+/// {
+///   "workers": ["unix:/tmp/iop-w0.sock", "192.168.1.20:7070"],
+///   "link": {"latency_ms": 4, "mbps": 50}
+/// }
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeploySpec {
+    /// One listen address per cluster device, in device order.
+    pub workers: Vec<String>,
+    pub link: Option<LinkShape>,
+}
+
+/// Build a [`DeploySpec`] from its JSON spec. Addresses are validated
+/// syntactically here so a typo fails at config load, not mid-dial.
+pub fn deploy_from_json(j: &Json) -> Result<DeploySpec> {
+    let mut workers = Vec::new();
+    if let Json::Arr(list) = j.get("workers") {
+        for (i, w) in list.iter().enumerate() {
+            let s = w
+                .as_str()
+                .ok_or_else(|| anyhow!("deploy spec worker {i}: must be an address string"))?;
+            crate::exec::wire::Addr::parse(s).map_err(|e| anyhow!("deploy spec worker {i}: {e}"))?;
+            workers.push(s.to_string());
+        }
+    }
+    let link = match j.get("link") {
+        Json::Null => None,
+        l => Some(link_shape_from_json(l)?),
+    };
+    if workers.is_empty() && link.is_none() {
+        return Err(anyhow!("deploy spec needs 'workers' and/or 'link'"));
+    }
+    Ok(DeploySpec { workers, link })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +437,45 @@ mod tests {
                 "should reject: {bad}"
             );
         }
+    }
+
+    #[test]
+    fn link_shape_schema_and_lookup() {
+        let j = Json::parse(
+            r#"{"latency_ms": 4, "mbps": 50,
+                "links": [{"from": 0, "to": 1, "latency_ms": 8, "mbps": 20}]}"#,
+        )
+        .unwrap();
+        let s = link_shape_from_json(&j).unwrap();
+        let (lat, bps) = s.params(0, 1);
+        assert_eq!((lat, bps), (8e-3, 20e6 / 8.0));
+        let (lat, bps) = s.params(1, 0);
+        assert_eq!((lat, bps), (4e-3, 50e6 / 8.0), "reverse direction uses defaults");
+        s.validate(2).unwrap();
+        assert!(s.validate(1).is_err(), "override names device outside the cluster");
+        assert!(link_shape_from_json(&Json::parse(r#"{"mbps": 0}"#).unwrap()).is_err());
+        assert!(link_shape_from_json(&Json::parse(r#"{"latency_ms": -1}"#).unwrap()).is_err());
+        // defaults-only spec is fine
+        let d = link_shape_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!((d.latency_ms, d.mbps), (4.0, 50.0));
+    }
+
+    #[test]
+    fn deploy_spec_schema() {
+        let j = Json::parse(
+            r#"{"workers": ["unix:/tmp/w0.sock", "127.0.0.1:7070"],
+                "link": {"latency_ms": 2, "mbps": 100}}"#,
+        )
+        .unwrap();
+        let d = deploy_from_json(&j).unwrap();
+        assert_eq!(d.workers.len(), 2);
+        assert_eq!(d.link.as_ref().unwrap().mbps, 100.0);
+        // a bad address fails at load time
+        assert!(deploy_from_json(
+            &Json::parse(r#"{"workers": ["not-an-address"]}"#).unwrap()
+        )
+        .is_err());
+        assert!(deploy_from_json(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

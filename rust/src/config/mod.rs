@@ -2,7 +2,7 @@
 //! framework is usable beyond the built-in zoo (the "composable model
 //! definition" a downstream user needs).
 //!
-//! Model spec (`examples/configs/tiny.json` ships one):
+//! Model spec (`examples/configs/custom_cnn.json` ships one):
 //!
 //! ```json
 //! {
@@ -29,7 +29,10 @@
 pub mod cluster_cfg;
 pub mod model_cfg;
 
-pub use cluster_cfg::{cluster_from_json, fault_plan_from_json, FaultPlan, KillSpec, LinkFault};
+pub use cluster_cfg::{
+    cluster_from_json, deploy_from_json, fault_plan_from_json, link_shape_from_json, DeploySpec,
+    FaultPlan, KillSpec, LinkFault, LinkShape, ShapeOverride,
+};
 pub use model_cfg::model_from_json;
 
 use crate::device::Cluster;
@@ -56,4 +59,12 @@ pub fn load_fault_plan(path: &str) -> Result<FaultPlan> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
     fault_plan_from_json(&json)
+}
+
+/// Load a deployment spec — worker addresses and/or link shape — from a
+/// JSON file (`iop exec|serve --deploy` is the consumer).
+pub fn load_deploy(path: &str) -> Result<DeploySpec> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    deploy_from_json(&json)
 }

@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::FaultPlan;
+use crate::config::{FaultPlan, LinkShape};
 use crate::device::Cluster;
 use crate::model::{Model, OpKind};
 use crate::partition::plan::{CommStep, Plan, SliceKind};
@@ -42,7 +42,10 @@ use super::backend::ComputeBackend;
 use super::compute::{apply_tail_with, compute_slice_compiled, compute_slice_with};
 use super::pjrt::PjrtRunner;
 use super::prepack::{CompiledDevice, CompiledPlan, ScratchArena};
-use super::transport::{make_endpoints, Msg, RecvDeadline, Transport, WorkerKilled};
+use super::remote::{spawn_remote_workers, RemoteCtx};
+use super::transport::{
+    make_endpoints_shaped, Msg, RecvDeadline, Shaping, Transport, WorkerKilled,
+};
 use super::weights::{model_input, WeightBundle};
 
 /// Which compute backend workers use.
@@ -103,6 +106,17 @@ pub struct SessionOptions {
     /// Per-receive deadline override. Resolution order: this, then the
     /// fault plan's `recv_timeout_ms`, then the 30 s harness default.
     pub recv_timeout: Option<Duration>,
+    /// Listen addresses of remote `iop worker` processes, one per
+    /// cluster device in original id order: the session then runs
+    /// across OS processes over TCP/UDS instead of in-process threads.
+    /// Requires [`ExecSession::open`] (workers re-plan from the cluster
+    /// and strategy) and excludes the PJRT backend.
+    pub workers: Option<Vec<String>>,
+    /// Shape the in-process links with a shared-medium latency +
+    /// bandwidth model (`exec::transport::ShapedTransport`); mutually
+    /// exclusive with `workers` — shape a real network with `tc`, not a
+    /// model.
+    pub shape: Option<LinkShape>,
 }
 
 /// Default deadline for a single tagged receive. Generous, so healthy
@@ -421,7 +435,7 @@ impl Local {
 pub type ReqId = usize;
 
 /// One worker completion report: `(req, plan-local dev, result)`.
-type Done = (ReqId, usize, Result<WorkerOut>);
+pub(crate) type Done = (ReqId, usize, Result<WorkerOut>);
 
 /// Completion state of one in-flight request, keyed by `req` in the
 /// session's pending map: worker completions arrive interleaved across
@@ -523,6 +537,13 @@ pub struct ExecSession {
     ctrl_tx: Vec<Sender<Control>>,
     done_rx: Receiver<Done>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Remote-session context when workers are OS processes: listen
+    /// addresses by original device id, session id, current epoch, and
+    /// the verified model spec resent with every epoch's CONFIG.
+    remote: Option<RemoteCtx>,
+    /// Shared medium of the shaped in-process link (serialization lock
+    /// + busy-time meter), when opened with [`SessionOptions::shape`].
+    shaping: Option<Arc<Shaping>>,
     /// Handles of retired worker epochs, joined (bounded) on drop.
     draining: Vec<std::thread::JoinHandle<()>>,
     next_req: ReqId,
@@ -545,7 +566,7 @@ pub struct ExecSession {
     recovery: RecoveryStats,
 }
 
-enum Control {
+pub(crate) enum Control {
     Request { req: ReqId, input: Arc<Tensor> },
     Shutdown,
 }
@@ -610,6 +631,31 @@ impl ExecSession {
                 "recovery needs the cluster and strategy to re-plan: use ExecSession::open"
             ));
         }
+        if let Some(addrs) = &opts.workers {
+            if opts.shape.is_some() {
+                return Err(anyhow!(
+                    "remote workers and a shaped in-process link are mutually exclusive: \
+                     shape a real network with tc, not a model"
+                ));
+            }
+            if cluster.is_none() || strategy.is_none() {
+                return Err(anyhow!(
+                    "remote workers re-plan from the cluster and strategy: use ExecSession::open"
+                ));
+            }
+            if addrs.len() != m {
+                return Err(anyhow!(
+                    "{} worker address(es) for a {m}-device plan: one listen address \
+                     per cluster device is required",
+                    addrs.len()
+                ));
+            }
+            if matches!(opts.backend, Backend::Pjrt { .. }) {
+                return Err(anyhow!(
+                    "the PJRT backend cannot run on remote workers (artifact paths are local)"
+                ));
+            }
+        }
         let fault = match opts.fault {
             Some(f) => {
                 f.validate(m)?;
@@ -642,15 +688,44 @@ impl ExecSession {
         let plan = Arc::new(plan.clone());
         let wb = Arc::new(WeightBundle::generate(&model));
         let devmap: Vec<usize> = (0..m).collect();
-        let (ctrl_tx, done_rx, handles) = spawn_workers(
-            &model,
-            &plan,
-            &wb,
-            &opts.backend,
-            fault.as_ref(),
-            &devmap,
-            recv_timeout,
-        );
+        let shaping = match opts.shape {
+            Some(shape) => {
+                shape.validate(m)?;
+                Some(Shaping::new(shape))
+            }
+            None => None,
+        };
+        let mut draining = Vec::new();
+        let (remote, ctrl_tx, done_rx, handles) = match &opts.workers {
+            Some(addrs) => {
+                let ctx = RemoteCtx::create(addrs.clone(), &model)?;
+                let (ctrl_tx, done_rx, handles, mut forwarders) = spawn_remote_workers(
+                    &ctx,
+                    cluster.as_ref().unwrap(),
+                    strategy.unwrap(),
+                    &opts.backend,
+                    fault.as_ref(),
+                    &devmap,
+                    m,
+                    recv_timeout,
+                )?;
+                draining.append(&mut forwarders);
+                (Some(ctx), ctrl_tx, done_rx, handles)
+            }
+            None => {
+                let (ctrl_tx, done_rx, handles) = spawn_workers(
+                    &model,
+                    &plan,
+                    &wb,
+                    &opts.backend,
+                    fault.as_ref(),
+                    &devmap,
+                    recv_timeout,
+                    shaping.as_ref(),
+                );
+                (None, ctrl_tx, done_rx, handles)
+            }
+        };
         Ok(ExecSession {
             m,
             orig_m: m,
@@ -670,7 +745,9 @@ impl ExecSession {
             ctrl_tx,
             done_rx,
             handles,
-            draining: Vec::new(),
+            remote,
+            shaping,
+            draining,
             next_req: 0,
             pending: HashMap::new(),
             ready: BTreeMap::new(),
@@ -702,6 +779,15 @@ impl ExecSession {
     /// for the repeated-kill boundedness check).
     pub fn aborted_count(&self) -> usize {
         self.aborted.len()
+    }
+
+    /// Measured busy time of the shaped in-process medium since the
+    /// session opened, when opened with [`SessionOptions::shape`]:
+    /// (per-stage seconds, final-assembly seconds). This is the
+    /// measured side of the `cost::comm` validation table; `None` on
+    /// unshaped sessions.
+    pub fn shaped_meter(&self) -> Option<(Vec<f64>, f64)> {
+        self.shaping.as_ref().map(|s| s.meter().snapshot())
     }
 
     /// Microkernel ISA this session's workers dispatch to, resolved at
@@ -1014,15 +1100,49 @@ impl ExecSession {
         let plan = Arc::new(crate::pipeline::plan(&self.model, &survivor, strategy));
         self.devmap = survivors;
         self.m = plan.m;
-        let (ctrl_tx, done_rx, handles) = spawn_workers(
-            &self.model,
-            &plan,
-            &self.wb,
-            &self.backend,
-            self.fault.as_ref(),
-            &self.devmap,
-            self.recv_timeout,
-        );
+        // Remote sessions re-establish the mesh on the surviving
+        // processes under a bumped epoch (stale peers refuse by epoch);
+        // the coordinator never joins the tensor mesh, so only control
+        // and done links are redialed.
+        let remote_ctx = self.remote.as_mut().map(|ctx| {
+            ctx.epoch += 1;
+            ctx.clone()
+        });
+        let (ctrl_tx, done_rx, handles) = match remote_ctx {
+            Some(ctx) => match spawn_remote_workers(
+                &ctx,
+                &survivor,
+                strategy,
+                &self.backend,
+                self.fault.as_ref(),
+                &self.devmap,
+                plan.m,
+                self.recv_timeout,
+            ) {
+                Ok((ctrl_tx, done_rx, handles, mut forwarders)) => {
+                    self.remote = Some(ctx);
+                    self.draining.append(&mut forwarders);
+                    (ctrl_tx, done_rx, handles)
+                }
+                Err(e) => {
+                    return self.poison(
+                        None,
+                        dead,
+                        e.context("re-establishing the surviving remote workers failed"),
+                    );
+                }
+            },
+            None => spawn_workers(
+                &self.model,
+                &plan,
+                &self.wb,
+                &self.backend,
+                self.fault.as_ref(),
+                &self.devmap,
+                self.recv_timeout,
+                self.shaping.as_ref(),
+            ),
+        };
         self.ctrl_tx = ctrl_tx;
         self.done_rx = done_rx;
         self.handles = handles;
@@ -1072,7 +1192,7 @@ impl Drop for ExecSession {
 
 /// Join every handle that finishes within `deadline` (polled, since the
 /// std join has no timeout); drop — detach — the rest.
-fn join_bounded(mut handles: Vec<std::thread::JoinHandle<()>>, deadline: Duration) {
+pub(crate) fn join_bounded(mut handles: Vec<std::thread::JoinHandle<()>>, deadline: Duration) {
     let t0 = Instant::now();
     loop {
         let mut i = 0;
@@ -1094,6 +1214,7 @@ fn join_bounded(mut handles: Vec<std::thread::JoinHandle<()>>, deadline: Duratio
 /// and a fresh done channel. Used at session open and again on every
 /// recovery re-plan; the compiled backend recompiles the survivor plan
 /// here (Arc-dedup'd kernels keep that cheap).
+#[allow(clippy::too_many_arguments)]
 fn spawn_workers(
     model: &Arc<Model>,
     plan: &Arc<Plan>,
@@ -1102,6 +1223,7 @@ fn spawn_workers(
     fault: Option<&Arc<FaultPlan>>,
     devmap: &[usize],
     recv_timeout: Duration,
+    shaping: Option<&Arc<Shaping>>,
 ) -> (
     Vec<Sender<Control>>,
     Receiver<Done>,
@@ -1118,7 +1240,7 @@ fn spawn_workers(
         }
         _ => None,
     };
-    let endpoints = make_endpoints(m, devmap, fault);
+    let endpoints = make_endpoints_shaped(m, devmap, fault, shaping);
     let (done_tx, done_rx) = channel::<Done>();
     let mut ctrl_tx = Vec::with_capacity(m);
     let mut handles = Vec::with_capacity(m);
@@ -1167,7 +1289,7 @@ pub fn run_plan(model: &Model, plan: &Plan, options: &ExecOptions) -> Result<Exe
 /// and mailbox need no synchronization; pipelining comes from different
 /// workers being on different requests at once.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(
+pub(crate) fn worker_loop(
     dev: usize,
     model: Arc<Model>,
     plan: Arc<Plan>,
@@ -1227,17 +1349,19 @@ fn worker_loop(
     }
 }
 
-struct WorkerOut {
-    output: Option<Tensor>,
-    bytes_sent: u64,
-    messages_sent: usize,
-    compute_secs: f64,
-    arena_grows: u64,
-    peak_scratch_bytes: u64,
+pub(crate) struct WorkerOut {
+    pub(crate) output: Option<Tensor>,
+    pub(crate) bytes_sent: u64,
+    pub(crate) messages_sent: usize,
+    pub(crate) compute_secs: f64,
+    pub(crate) arena_grows: u64,
+    pub(crate) peak_scratch_bytes: u64,
     /// When this worker finished the request (stamped worker-side so the
     /// session can compute true completion latency even if the done
-    /// message sits in the channel while the caller is busy).
-    finished_at: Instant,
+    /// message sits in the channel while the caller is busy; remote
+    /// sessions re-stamp at coordinator receipt since an `Instant`
+    /// cannot cross processes).
+    pub(crate) finished_at: Instant,
 }
 
 #[allow(clippy::too_many_arguments)]

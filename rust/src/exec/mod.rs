@@ -15,12 +15,18 @@
 //!
 //! The wire layer is pluggable ([`transport`]): workers speak to each
 //! other through a [`Transport`] object — in-process channels by default,
-//! or a fault-injecting wrapper driven by a `FaultPlan` (per-link
-//! delay/drop, per-device kill triggers) for chaos testing. Every tagged
-//! receive carries a deadline, and sessions opened with
+//! a fault-injecting wrapper driven by a `FaultPlan` (per-link
+//! delay/drop, per-device kill triggers) for chaos testing, a shaped
+//! wrapper modelling a shared medium (per-link latency + bandwidth,
+//! metered against the `cost::comm` predictions), or real TCP/UDS
+//! sockets between `iop worker` *processes* ([`wire`] framing +
+//! handshake, [`remote`] session management). Every tagged receive
+//! carries a deadline, and sessions opened with
 //! [`SessionOptions::recover`] respond to a device loss by re-planning
 //! the partition onto the survivors and replaying in-flight requests
-//! ([`RecoveryStats`] counts the damage) instead of poisoning.
+//! ([`RecoveryStats`] counts the damage) instead of poisoning — for
+//! remote sessions that includes a worker *process* dying mid-request
+//! (broken sockets map to the same dead-worker signal).
 //!
 //! Four backends:
 //!  * [`Backend::Reference`] — scalar host tensor ops (`tensor::ops`), no
@@ -50,9 +56,11 @@ pub mod compute;
 pub mod harness;
 pub mod pjrt;
 pub mod prepack;
+pub mod remote;
 pub mod serve;
 pub mod transport;
 pub mod weights;
+pub mod wire;
 
 pub use backend::ComputeBackend;
 pub use harness::{
@@ -62,7 +70,10 @@ pub use harness::{
 pub use prepack::{
     force_lowering, lowering_selected, CompiledDevice, CompiledPlan, ConvLowering, ScratchArena,
 };
+pub use remote::run_worker;
 pub use serve::{serve_closed_loop, ServeOptions, ThroughputReport};
 pub use transport::{
-    ChannelTransport, FaultTransport, Msg, RecvDeadline, RecvError, Transport, WorkerKilled,
+    ChannelTransport, FaultTransport, MediumMeter, Msg, RecvDeadline, RecvError, ShapedTransport,
+    Shaping, SocketTransport, Transport, WorkerKilled,
 };
+pub use wire::WireError;

@@ -1,0 +1,1273 @@
+//! Multi-process serving: real `iop worker` processes joined into the
+//! tensor mesh over TCP/UDS, driven by the same supervisor as the
+//! in-process harness.
+//!
+//! Topology: the coordinator never joins the tensor mesh. It holds one
+//! *control* connection per worker (HELLO → CONFIG → CONFIG_OK, then
+//! REQUEST frames one way and DONE frames the other) while the workers
+//! dial each other directly into a full simplex mesh (each worker owns
+//! one outbound connection per peer; inbound frames are pumped into the
+//! worker's inbox by its accept loop). Plans are never serialized:
+//! every worker re-runs the deterministic planner on the exact-f64
+//! cluster JSON from its CONFIG and cross-checks the resulting width,
+//! so coordinator and workers provably hold the same plan.
+//!
+//! Epochs: recovery bumps the session epoch and redials the survivors.
+//! A worker admits a control hello for a new session or a strictly
+//! newer epoch of its current session and refuses stale ones
+//! ([`wire::REJ_STALE`]); peer hellos for an epoch whose CONFIG has not
+//! arrived yet are refused retryably ([`wire::REJ_NOT_READY`]) and the
+//! dialer backs off and retries, which absorbs config-arrival skew
+//! during mesh bring-up.
+//!
+//! Failure mapping: a dead worker process surfaces as EOF/reset on its
+//! links. The coordinator's per-worker done-reader thread exits, which
+//! the supervisor's reap path treats exactly like an in-process worker
+//! death — `--recover` then re-plans onto the surviving *processes* and
+//! replays in-flight requests. Typed worker errors cross the wire as
+//! [`wire::RemoteErr`] and are rebuilt with the same error roots
+//! ([`WorkerKilled`], [`RecvDeadline`]) the supervisor classifies.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{fault_plan_from_json, model_from_json, FaultPlan};
+use crate::device::Cluster;
+use crate::model::{Model, OpKind};
+use crate::partition::Strategy;
+use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
+
+use super::harness::{worker_loop, Backend, Control, Done, WorkerOut};
+use super::prepack::CompiledPlan;
+use super::transport::{
+    FaultTransport, Msg, RecvDeadline, SocketTransport, Transport, WorkerKilled,
+};
+use super::wire::{self, Hello, HelloReject, RemoteErr, RemoteOut, Stream};
+use super::weights::WeightBundle;
+
+/// How long a freshly accepted connection gets to complete its opening
+/// exchange (HELLO, and CONFIG on control links) before the handler
+/// gives up — a silent dialer must not pin a handler thread forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long the coordinator waits for a worker's CONFIG_OK. Longer than
+/// [`wire::CONNECT_DEADLINE`] because the worker builds its whole mesh
+/// (dialing every peer, with backoff) before acknowledging.
+const CONFIG_DEADLINE: Duration = Duration::from_secs(20);
+
+// ---------- coordinator-side context ----------
+
+/// What the coordinator keeps per remote session: where the worker
+/// processes listen (indexed by *original* device id, stable across
+/// recoveries), the session identity, and the verified model spec that
+/// every epoch's CONFIG resends.
+#[derive(Debug, Clone)]
+pub(crate) struct RemoteCtx {
+    /// Listen address per original cluster device id.
+    pub addrs: Vec<String>,
+    pub session: u64,
+    /// Recovery generation, bumped on every re-plan so stale peers are
+    /// refused by the handshake.
+    pub epoch: u64,
+    /// Model spec JSON, round-trip-verified at session open.
+    pub model_spec: String,
+}
+
+impl RemoteCtx {
+    pub fn create(addrs: Vec<String>, model: &Model) -> Result<RemoteCtx> {
+        for (i, a) in addrs.iter().enumerate() {
+            wire::Addr::parse(a).map_err(|e| anyhow!("worker address {i}: {e}"))?;
+        }
+        Ok(RemoteCtx {
+            addrs,
+            session: new_session_id(),
+            epoch: 0,
+            model_spec: model_to_spec_json(model)?,
+        })
+    }
+}
+
+/// Fresh session id. Masked to 48 bits so it survives the f64-backed
+/// JSON config exactly; collisions only risk refusing a stale peer one
+/// handshake late, so time-xor-pid entropy is plenty.
+fn new_session_id() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    (nanos ^ ((std::process::id() as u64) << 32)) & 0xFFFF_FFFF_FFFF
+}
+
+// ---------- model spec serialization ----------
+
+/// Serialize a model back to the `config::model_from_json` spec grammar.
+/// Every op is emitted explicitly with its name (including `flatten`,
+/// so the grammar's implicit-flatten insertion can never fire on
+/// re-parse), and the result is round-tripped through the parser and
+/// compared op-for-op before use — a spec that rebuilds a different op
+/// chain would silently fork coordinator and worker plans.
+pub(crate) fn model_to_spec_json(model: &Model) -> Result<String> {
+    let mut ops = Vec::with_capacity(model.ops.len());
+    for op in &model.ops {
+        let j = match &op.kind {
+            OpKind::Conv2d {
+                c_out,
+                k_h,
+                k_w,
+                stride,
+                pad,
+                relu,
+                ..
+            } => {
+                if k_h != k_w {
+                    return Err(anyhow!(
+                        "op '{}': non-square conv kernels have no spec form",
+                        op.name
+                    ));
+                }
+                Json::obj(vec![
+                    ("type", Json::str("conv")),
+                    ("name", Json::str(op.name.clone())),
+                    ("c_out", Json::num(*c_out as f64)),
+                    ("k", Json::num(*k_h as f64)),
+                    ("stride", Json::num(*stride as f64)),
+                    ("pad", Json::num(*pad as f64)),
+                    ("relu", Json::Bool(*relu)),
+                ])
+            }
+            OpKind::Dense { c_out, relu, .. } => Json::obj(vec![
+                ("type", Json::str("dense")),
+                ("name", Json::str(op.name.clone())),
+                ("c_out", Json::num(*c_out as f64)),
+                ("relu", Json::Bool(*relu)),
+            ]),
+            OpKind::MaxPool { k, stride } => Json::obj(vec![
+                ("type", Json::str("maxpool")),
+                ("name", Json::str(op.name.clone())),
+                ("k", Json::num(*k as f64)),
+                ("stride", Json::num(*stride as f64)),
+            ]),
+            OpKind::Flatten => Json::obj(vec![
+                ("type", Json::str("flatten")),
+                ("name", Json::str(op.name.clone())),
+            ]),
+            OpKind::Relu => Json::obj(vec![
+                ("type", Json::str("relu")),
+                ("name", Json::str(op.name.clone())),
+            ]),
+        };
+        ops.push(j);
+    }
+    let spec = Json::obj(vec![
+        ("name", Json::str(model.name.clone())),
+        ("input", model.input.to_json()),
+        ("ops", Json::arr(ops)),
+    ]);
+    let text = spec.to_string_compact();
+    let back =
+        model_from_json(&Json::parse(&text).map_err(|e| anyhow!("serialized spec: {e}"))?)?;
+    if back.ops != model.ops || back.input != model.input || back.name != model.name {
+        return Err(anyhow!(
+            "model '{}' does not round-trip through its JSON spec",
+            model.name
+        ));
+    }
+    Ok(text)
+}
+
+/// Serialize a fault plan to the `config::fault_plan_from_json` schema
+/// (workers re-wrap their transports from this, so a chaos schedule
+/// means the same thing in-process and across processes).
+fn fault_plan_to_json(p: &FaultPlan) -> Json {
+    let mut pairs = vec![("seed", Json::num(p.seed as f64))];
+    if let Some(t) = p.recv_timeout_ms {
+        pairs.push(("recv_timeout_ms", Json::num(t as f64)));
+    }
+    pairs.push((
+        "links",
+        Json::arr(
+            p.links
+                .iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("from", Json::num(l.from as f64)),
+                        ("to", Json::num(l.to as f64)),
+                        ("delay_ms", Json::num(l.delay_ms)),
+                        ("drop_prob", Json::num(l.drop_prob)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    pairs.push((
+        "kills",
+        Json::arr(
+            p.kills
+                .iter()
+                .map(|k| {
+                    let mut kp = vec![
+                        ("dev", Json::num(k.dev as f64)),
+                        ("at_req", Json::num(k.at_req as f64)),
+                    ];
+                    if let Some(s) = k.at_stage {
+                        kp.push(("at_stage", Json::num(s as f64)));
+                    }
+                    Json::obj(kp)
+                })
+                .collect(),
+        ),
+    ));
+    Json::obj(pairs)
+}
+
+// ---------- session config (the CONFIG frame body) ----------
+
+/// Everything a worker needs to serve one epoch, shipped as the CONFIG
+/// frame right after the control handshake. The cluster crosses as its
+/// exact-f64 JSON form so the worker's local re-plan is bit-identical
+/// to the coordinator's.
+pub(crate) struct SessionConfig {
+    pub session: u64,
+    pub epoch: u64,
+    /// Plan-local device id of the receiving worker.
+    pub dev: usize,
+    /// Plan width the coordinator expects; the worker cross-checks its
+    /// local re-plan against this before acknowledging.
+    pub m: usize,
+    /// Plan-local index -> original cluster id (fault plans and stats
+    /// key on original ids).
+    pub devmap: Vec<usize>,
+    /// Peer listen addresses in plan-local order.
+    pub peers: Vec<String>,
+    pub model: Json,
+    pub cluster: Cluster,
+    pub strategy: Strategy,
+    pub backend: Backend,
+    pub recv_timeout_ms: u64,
+    pub fault: Option<FaultPlan>,
+}
+
+impl SessionConfig {
+    pub fn to_json(&self) -> Result<Json> {
+        let (backend, threads) = match &self.backend {
+            Backend::Reference => ("reference", 0),
+            Backend::Fast { threads } => ("fast", *threads),
+            Backend::Compiled { threads } => ("compiled", *threads),
+            Backend::Pjrt { .. } => {
+                return Err(anyhow!("the PJRT backend cannot run on remote workers"))
+            }
+        };
+        let mut pairs = vec![
+            ("session", Json::num(self.session as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("dev", Json::num(self.dev as f64)),
+            ("m", Json::num(self.m as f64)),
+            (
+                "devmap",
+                Json::arr(self.devmap.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            (
+                "peers",
+                Json::arr(self.peers.iter().map(|p| Json::str(p.as_str())).collect()),
+            ),
+            ("model", self.model.clone()),
+            ("cluster", self.cluster.to_json()),
+            ("strategy", Json::str(self.strategy.name())),
+            ("backend", Json::str(backend)),
+            ("threads", Json::num(threads as f64)),
+            ("recv_timeout_ms", Json::num(self.recv_timeout_ms as f64)),
+        ];
+        if let Some(f) = &self.fault {
+            pairs.push(("fault", fault_plan_to_json(f)));
+        }
+        Ok(Json::obj(pairs))
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionConfig> {
+        let need = |key: &str| -> Result<f64> {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow!("session config: missing '{key}'"))
+        };
+        let m = need("m")? as usize;
+        let dev = need("dev")? as usize;
+        let devmap: Vec<usize> = j
+            .get("devmap")
+            .as_arr()
+            .ok_or_else(|| anyhow!("session config: missing 'devmap'"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow!("session config: bad devmap entry"))
+            })
+            .collect::<Result<_>>()?;
+        let peers: Vec<String> = j
+            .get("peers")
+            .as_arr()
+            .ok_or_else(|| anyhow!("session config: missing 'peers'"))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow!("session config: bad peer address"))
+            })
+            .collect::<Result<_>>()?;
+        if m == 0 || dev >= m || devmap.len() != m || peers.len() != m {
+            return Err(anyhow!(
+                "session config: inconsistent geometry (m={m}, dev={dev}, \
+                 {} devmap entries, {} peers)",
+                devmap.len(),
+                peers.len()
+            ));
+        }
+        let cluster = Cluster::from_json(j.get("cluster"))
+            .ok_or_else(|| anyhow!("session config: bad 'cluster'"))?;
+        let strategy = j
+            .get("strategy")
+            .as_str()
+            .and_then(Strategy::parse)
+            .ok_or_else(|| anyhow!("session config: bad 'strategy'"))?;
+        let threads = j.get("threads").as_usize().unwrap_or(0);
+        let backend = match j.get("backend").as_str() {
+            Some("reference") => Backend::Reference,
+            Some("fast") => Backend::Fast { threads },
+            Some("compiled") => Backend::Compiled { threads },
+            other => return Err(anyhow!("session config: bad 'backend' {other:?}")),
+        };
+        let fault = match j.get("fault") {
+            Json::Null => None,
+            f => Some(fault_plan_from_json(f)?),
+        };
+        Ok(SessionConfig {
+            session: need("session")? as u64,
+            epoch: need("epoch")? as u64,
+            dev,
+            m,
+            devmap,
+            peers,
+            model: j.get("model").clone(),
+            cluster,
+            strategy,
+            backend,
+            recv_timeout_ms: need("recv_timeout_ms")? as u64,
+            fault,
+        })
+    }
+}
+
+// ---------- error conversion across the wire ----------
+
+/// Worker-side: flatten a `WorkerOut` result into its wire image,
+/// preserving the typed roots the supervisor classifies.
+fn to_remote(r: Result<WorkerOut>) -> Result<RemoteOut, RemoteErr> {
+    match r {
+        Ok(w) => Ok(RemoteOut {
+            output: w.output,
+            bytes_sent: w.bytes_sent,
+            messages_sent: w.messages_sent as u64,
+            compute_secs: w.compute_secs,
+            arena_grows: w.arena_grows,
+            peak_scratch_bytes: w.peak_scratch_bytes,
+        }),
+        Err(e) => {
+            for c in e.chain() {
+                if let Some(k) = c.downcast_ref::<WorkerKilled>() {
+                    return Err(RemoteErr::Killed { dev: k.dev });
+                }
+                if let Some(d) = c.downcast_ref::<RecvDeadline>() {
+                    return Err(RemoteErr::Deadline {
+                        from: d.from,
+                        stage: d.stage,
+                        req: d.req,
+                        timeout_ms: d.timeout_ms,
+                    });
+                }
+            }
+            Err(RemoteErr::Other(format!("{e:#}")))
+        }
+    }
+}
+
+/// Coordinator-side: rebuild the typed error roots so the supervisor's
+/// classification (kill vs deadline vs poison) works unchanged, and
+/// stamp `finished_at` at frame receipt (`Instant`s cannot cross
+/// processes).
+fn from_remote(r: Result<RemoteOut, RemoteErr>) -> Result<WorkerOut> {
+    match r {
+        Ok(o) => Ok(WorkerOut {
+            output: o.output,
+            bytes_sent: o.bytes_sent,
+            messages_sent: o.messages_sent as usize,
+            compute_secs: o.compute_secs,
+            arena_grows: o.arena_grows,
+            peak_scratch_bytes: o.peak_scratch_bytes,
+            finished_at: Instant::now(),
+        }),
+        Err(RemoteErr::Killed { dev }) => Err(anyhow::Error::new(WorkerKilled { dev })),
+        Err(RemoteErr::Deadline {
+            from,
+            stage,
+            req,
+            timeout_ms,
+        }) => Err(anyhow::Error::new(RecvDeadline {
+            from,
+            stage,
+            req,
+            timeout_ms,
+        })),
+        Err(RemoteErr::Other(msg)) => Err(anyhow!("remote worker error: {msg}")),
+    }
+}
+
+// ---------- coordinator-side spawner ----------
+
+/// Remote analogue of the harness's `spawn_workers`: handshake and
+/// configure every worker process for this epoch, then stand up two
+/// threads per worker — a *forwarder* (control queue → REQUEST/SHUTDOWN
+/// frames) and a *done reader* (DONE frames → the session's done
+/// channel). The reader handles are returned as the session's worker
+/// handles, devmap-aligned: a reader exits exactly when its worker's
+/// socket dies, so the supervisor's reap path detects a SIGKILL'd
+/// process the same way it detects a panicked thread. Forwarder handles
+/// are drained (bounded join) on drop after Shutdown.
+///
+/// Two-phase bring-up: CONFIGs are shipped to *all* workers before any
+/// CONFIG_OK is awaited — workers dial each other while configuring, so
+/// awaiting worker 0's mesh before telling worker 1 its epoch exists
+/// would deadlock.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+pub(crate) fn spawn_remote_workers(
+    ctx: &RemoteCtx,
+    cluster: &Cluster,
+    strategy: Strategy,
+    backend: &Backend,
+    fault: Option<&Arc<FaultPlan>>,
+    devmap: &[usize],
+    m: usize,
+    recv_timeout: Duration,
+) -> Result<(
+    Vec<Sender<Control>>,
+    Receiver<Done>,
+    Vec<JoinHandle<()>>,
+    Vec<JoinHandle<()>>,
+)> {
+    let model = Json::parse(&ctx.model_spec)
+        .map_err(|e| anyhow!("session model spec is not JSON: {e}"))?;
+    let peers: Vec<String> = devmap.iter().map(|&d| ctx.addrs[d].clone()).collect();
+    let mut rng = SplitMix64::new(ctx.session ^ ctx.epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // Phase 1: dial, handshake, and ship every CONFIG.
+    let mut conns: Vec<Stream> = Vec::with_capacity(m);
+    for i in 0..m {
+        let addr = wire::Addr::parse(&peers[i]).map_err(|e| anyhow!(e))?;
+        let mut s = wire::connect_with_backoff(&addr, wire::CONNECT_DEADLINE, &mut rng)
+            .map_err(|e| anyhow!("worker {i}: {e}"))?;
+        s.set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .with_context(|| format!("worker {i}"))?;
+        let hello = Hello {
+            role: wire::ROLE_CTRL,
+            session: ctx.session,
+            epoch: ctx.epoch,
+            from: wire::CTRL_FROM,
+            to: i as u32,
+        };
+        wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&hello))
+            .with_context(|| format!("worker {i} at {addr}: sending hello"))?;
+        match wire::read_frame(&mut s) {
+            Ok((wire::K_HELLO_OK, _)) => {}
+            Ok((wire::K_HELLO_REJECT, body)) => {
+                let r = wire::decode_hello_reject(&body).map_err(|e| anyhow!("{e}"))?;
+                return Err(anyhow!("worker {i} at {addr} refused the session: {r}"));
+            }
+            Ok((k, _)) => {
+                return Err(anyhow!(
+                    "worker {i} at {addr} answered hello with frame kind {k:#04x}"
+                ))
+            }
+            Err(e) => return Err(anyhow!("worker {i} at {addr}: handshake failed: {e}")),
+        }
+        let cfg = SessionConfig {
+            session: ctx.session,
+            epoch: ctx.epoch,
+            dev: i,
+            m,
+            devmap: devmap.to_vec(),
+            peers: peers.clone(),
+            model: model.clone(),
+            cluster: cluster.clone(),
+            strategy,
+            backend: backend.clone(),
+            recv_timeout_ms: recv_timeout.as_millis() as u64,
+            fault: fault.map(|f| f.as_ref().clone()),
+        };
+        wire::write_frame(&mut s, wire::K_CONFIG, &wire::encode_config(&cfg.to_json()?))
+            .with_context(|| format!("worker {i} at {addr}: sending config"))?;
+        conns.push(s);
+    }
+    // Phase 2: every worker acknowledges once its mesh is up and its
+    // local re-plan matched.
+    for (i, s) in conns.iter_mut().enumerate() {
+        s.set_read_timeout(Some(CONFIG_DEADLINE))
+            .with_context(|| format!("worker {i}"))?;
+        match wire::read_frame(s) {
+            Ok((wire::K_CONFIG_OK, _)) => {}
+            Ok((wire::K_HELLO_REJECT, body)) => {
+                let r = wire::decode_hello_reject(&body).map_err(|e| anyhow!("{e}"))?;
+                return Err(anyhow!("worker {i} refused the config: {r}"));
+            }
+            Ok((k, _)) => {
+                return Err(anyhow!(
+                    "worker {i} answered config with frame kind {k:#04x}"
+                ))
+            }
+            Err(e) => return Err(anyhow!("worker {i} failed to build the session: {e}")),
+        }
+        s.set_read_timeout(None)
+            .with_context(|| format!("worker {i}"))?;
+    }
+    // Per worker: forwarder + done reader over the two socket halves.
+    let (done_tx, done_rx) = channel::<Done>();
+    let mut ctrl_tx = Vec::with_capacity(m);
+    let mut readers = Vec::with_capacity(m);
+    let mut forwarders = Vec::with_capacity(m);
+    for (i, s) in conns.into_iter().enumerate() {
+        let mut rconn = s.try_clone().map_err(|e| anyhow!("worker {i}: {e}"))?;
+        let mut wconn = s;
+        let (ctl_tx, ctl_rx) = channel::<Control>();
+        ctrl_tx.push(ctl_tx);
+        forwarders.push(std::thread::spawn(move || {
+            while let Ok(ctl) = ctl_rx.recv() {
+                match ctl {
+                    Control::Request { req, input } => {
+                        let body = wire::encode_request(req, &input);
+                        if wire::write_frame(&mut wconn, wire::K_REQUEST, &body).is_err() {
+                            // Worker gone mid-send; its reader thread
+                            // reports the death to the supervisor.
+                            break;
+                        }
+                    }
+                    Control::Shutdown => {
+                        let _ = wire::write_frame(&mut wconn, wire::K_SHUTDOWN, &[]);
+                        break;
+                    }
+                }
+            }
+            // Half-close so the worker's control reader sees EOF even
+            // if the SHUTDOWN frame was lost to a broken pipe.
+            wconn.shutdown_write();
+        }));
+        let done = done_tx.clone();
+        readers.push(std::thread::spawn(move || {
+            loop {
+                match wire::read_frame(&mut rconn) {
+                    Ok((wire::K_DONE, body)) => match wire::decode_done(&body) {
+                        Ok(f) if f.dev == i => {
+                            if done.send((f.req, f.dev, from_remote(f.result))).is_err() {
+                                break; // session gone
+                            }
+                        }
+                        // Wrong device id or malformed DONE: treat the
+                        // link as poisoned — exiting lets the
+                        // supervisor's reap path classify the loss.
+                        _ => break,
+                    },
+                    // EOF, reset, or junk: the worker process is gone
+                    // (or unusable). Exit; the supervisor reaps us.
+                    _ => break,
+                }
+            }
+            rconn.shutdown_both();
+        }));
+    }
+    Ok((ctrl_tx, done_rx, readers, forwarders))
+}
+
+// ---------- worker process ----------
+
+/// The route one worker process currently serves: at most one
+/// `(session, epoch)` at a time, replaced wholesale when a newer epoch's
+/// control hello is admitted. Peer accept threads clone the inbox out
+/// of here; when an epoch is torn down its inbox receiver drops and
+/// stale pumps unwind on their next send.
+struct Route {
+    session: u64,
+    epoch: u64,
+    /// This worker's plan-local device id in the routed epoch.
+    dev: usize,
+    /// Plan width (bounds peer ids on inbound mesh hellos).
+    m: usize,
+    inbox: Sender<Msg>,
+}
+
+#[derive(Default)]
+struct WorkerState {
+    route: Mutex<Option<Route>>,
+}
+
+/// `iop worker --listen ADDR`: bind and serve sessions until killed.
+/// One process == one cooperative device; the coordinator assigns the
+/// plan-local identity per epoch via CONFIG.
+pub fn run_worker(listen: &str) -> Result<()> {
+    let addr = wire::Addr::parse(listen).map_err(|e| anyhow!(e))?;
+    let listener = wire::Listener::bind(&addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("iop worker: listening on {addr}");
+    serve_accept_loop(listener)
+}
+
+/// Accept loop: every connection gets its own handler thread (control
+/// links run a whole epoch; mesh links pump tensor frames).
+fn serve_accept_loop(listener: wire::Listener) -> Result<()> {
+    let state = Arc::new(WorkerState::default());
+    loop {
+        match listener.accept() {
+            Ok(conn) => {
+                let st = Arc::clone(&state);
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(conn, st) {
+                        eprintln!("iop worker: connection handler: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                eprintln!("iop worker: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn reject(conn: &mut Stream, code: u8, reason: String) {
+    let r = HelloReject { code, reason };
+    let _ = wire::write_frame(conn, wire::K_HELLO_REJECT, &wire::encode_hello_reject(&r));
+    conn.shutdown_both();
+}
+
+fn handle_conn(mut conn: Stream, state: Arc<WorkerState>) -> Result<()> {
+    conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let (kind, body) = match wire::read_frame(&mut conn) {
+        Ok(kb) => kb,
+        // Dead or silent dialer: nothing to answer.
+        Err(wire::WireError::Eof) => return Ok(()),
+        Err(e) => {
+            reject(&mut conn, wire::REJ_BAD, format!("bad opener: {e}"));
+            return Ok(());
+        }
+    };
+    if kind != wire::K_HELLO {
+        reject(
+            &mut conn,
+            wire::REJ_BAD,
+            format!("expected HELLO, got frame kind {kind:#04x}"),
+        );
+        return Ok(());
+    }
+    let hello = match wire::decode_hello(&body) {
+        Ok(h) => h,
+        // Version mismatches land here as a typed refusal the dialer
+        // can print, instead of a silent close.
+        Err(e) => {
+            reject(&mut conn, wire::REJ_BAD, format!("{e}"));
+            return Ok(());
+        }
+    };
+    match hello.role {
+        wire::ROLE_CTRL => serve_session(conn, state, hello),
+        _ => attach_peer(conn, state, hello),
+    }
+}
+
+/// Mesh link handler: admit a peer's hello against the current route
+/// and pump its tensor frames into the epoch's inbox until EOF.
+fn attach_peer(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Result<()> {
+    let inbox = {
+        let route = state.route.lock().unwrap();
+        match route.as_ref() {
+            None => {
+                reject(&mut conn, wire::REJ_NOT_READY, "no live session yet".into());
+                return Ok(());
+            }
+            Some(r) => {
+                if r.session != hello.session || hello.epoch > r.epoch {
+                    // This epoch's CONFIG has not reached us yet; the
+                    // dialer backs off and retries.
+                    reject(
+                        &mut conn,
+                        wire::REJ_NOT_READY,
+                        format!(
+                            "session {:#x} epoch {} is not current here yet",
+                            hello.session, hello.epoch
+                        ),
+                    );
+                    return Ok(());
+                }
+                if hello.epoch < r.epoch {
+                    reject(
+                        &mut conn,
+                        wire::REJ_STALE,
+                        format!("epoch {} superseded by {}", hello.epoch, r.epoch),
+                    );
+                    return Ok(());
+                }
+                if hello.to as usize != r.dev || hello.from as usize >= r.m {
+                    reject(
+                        &mut conn,
+                        wire::REJ_BAD,
+                        format!(
+                            "mesh link {} -> {} does not belong on device {}",
+                            hello.from, hello.to, r.dev
+                        ),
+                    );
+                    return Ok(());
+                }
+                r.inbox.clone()
+            }
+        }
+    };
+    wire::write_frame(&mut conn, wire::K_HELLO_OK, &[])?;
+    conn.set_read_timeout(None)?;
+    loop {
+        match wire::read_frame(&mut conn) {
+            Ok((wire::K_MSG, body)) => match wire::decode_msg(&body) {
+                Ok(msg) => {
+                    if inbox.send(msg).is_err() {
+                        break; // epoch torn down under us
+                    }
+                }
+                Err(e) => {
+                    // A corrupt tensor frame is dropped, not fatal: the
+                    // receiver's deadline names the sender if the loss
+                    // mattered, which is the same contract as a lossy
+                    // fault link.
+                    eprintln!(
+                        "iop worker: dropping malformed frame from peer {}: {e}",
+                        hello.from
+                    );
+                }
+            },
+            Ok((k, _)) => {
+                eprintln!("iop worker: unexpected frame kind {k:#04x} on a mesh link");
+                break;
+            }
+            Err(wire::WireError::Eof) => break,
+            Err(e) => {
+                eprintln!("iop worker: mesh link from peer {} broke: {e}", hello.from);
+                break;
+            }
+        }
+    }
+    conn.shutdown_both();
+    Ok(())
+}
+
+/// Control link handler — one whole epoch: admit, configure, build the
+/// mesh, then bridge REQUEST/DONE frames to the in-process
+/// `worker_loop` until shutdown or EOF.
+fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Result<()> {
+    if hello.from != wire::CTRL_FROM {
+        reject(
+            &mut conn,
+            wire::REJ_BAD,
+            "control hello must come from the coordinator".into(),
+        );
+        return Ok(());
+    }
+    {
+        let route = state.route.lock().unwrap();
+        if let Some(r) = route.as_ref() {
+            if r.session == hello.session && r.epoch >= hello.epoch {
+                reject(
+                    &mut conn,
+                    wire::REJ_STALE,
+                    format!(
+                        "stale control hello: epoch {} <= current {}",
+                        hello.epoch, r.epoch
+                    ),
+                );
+                return Ok(());
+            }
+        }
+    }
+    wire::write_frame(&mut conn, wire::K_HELLO_OK, &[])?;
+    let (kind, body) = wire::read_frame(&mut conn).context("reading CONFIG")?;
+    if kind != wire::K_CONFIG {
+        return Err(anyhow!("expected CONFIG after HELLO, got kind {kind:#04x}"));
+    }
+    let cfg = SessionConfig::from_json(&wire::decode_config(&body).map_err(|e| anyhow!("{e}"))?)?;
+    if cfg.session != hello.session || cfg.epoch != hello.epoch || cfg.dev as u32 != hello.to {
+        return Err(anyhow!("CONFIG does not match the HELLO that opened it"));
+    }
+    // Deterministic local re-plan from the exact-f64 cluster: both sides
+    // run the same planner on the same inputs, so equality of the plan
+    // width is a strong witness that the plans agree.
+    let model = Arc::new(model_from_json(&cfg.model)?);
+    let plan = Arc::new(crate::pipeline::plan(&model, &cfg.cluster, cfg.strategy));
+    plan.validate(&model).map_err(|e| anyhow!(e))?;
+    if plan.m != cfg.m {
+        return Err(anyhow!(
+            "coordinator expects m={} but the local re-plan has m={}: plans diverged",
+            cfg.m,
+            plan.m
+        ));
+    }
+    let wb = Arc::new(WeightBundle::generate(&model));
+    let shard = match &cfg.backend {
+        Backend::Compiled { threads } => {
+            let cp = CompiledPlan::compile(&model, &plan, &wb, (*threads).max(1));
+            Some(cp.devices[cfg.dev].clone())
+        }
+        _ => None,
+    };
+    // Install the route before dialing out: peers admit our mesh links
+    // only once their own CONFIG landed, and vice versa.
+    let (inbox_tx, inbox_rx) = channel::<Msg>();
+    {
+        let mut route = state.route.lock().unwrap();
+        if let Some(r) = route.as_ref() {
+            // Another control link may have raced a newer epoch in
+            // between our admission check and now.
+            if r.session == hello.session && r.epoch >= hello.epoch {
+                return Err(anyhow!("lost the control race to a newer epoch"));
+            }
+        }
+        *route = Some(Route {
+            session: cfg.session,
+            epoch: cfg.epoch,
+            dev: cfg.dev,
+            m: plan.m,
+            inbox: inbox_tx.clone(),
+        });
+    }
+    eprintln!(
+        "iop worker: serving session {:#x} epoch {} as device {} (m={})",
+        cfg.session, cfg.epoch, cfg.dev, plan.m
+    );
+    // Dial the outbound half of the simplex mesh.
+    let mut rng = SplitMix64::new(
+        cfg.session ^ ((cfg.dev as u64 + 1) << 8) ^ cfg.epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut out: Vec<Option<Stream>> = Vec::with_capacity(plan.m);
+    for (j, peer) in cfg.peers.iter().enumerate() {
+        if j == cfg.dev {
+            out.push(None);
+            continue;
+        }
+        out.push(Some(dial_peer(peer, &cfg, j, &mut rng)?));
+    }
+    let sock = SocketTransport::new(cfg.dev, out, inbox_tx, inbox_rx);
+    let transport: Box<dyn Transport> = match &cfg.fault {
+        Some(fp) => Box::new(FaultTransport::new(
+            Box::new(sock),
+            Arc::new(fp.clone()),
+            cfg.devmap[cfg.dev],
+            cfg.devmap.clone(),
+        )),
+        None => Box::new(sock),
+    };
+    wire::write_frame(&mut conn, wire::K_CONFIG_OK, &[])?;
+    conn.set_read_timeout(None)?;
+    // Bridge: this thread reads REQUEST/SHUTDOWN frames into the control
+    // channel; a writer thread turns completion reports into DONE frames
+    // on the other half of the socket; worker_loop runs unmodified in
+    // between.
+    let (ctl_tx, ctl_rx) = channel::<Control>();
+    let (done_tx, done_rx) = channel::<Done>();
+    let recv_timeout = Duration::from_millis(cfg.recv_timeout_ms.max(1));
+    let worker = {
+        let model = Arc::clone(&model);
+        let plan = Arc::clone(&plan);
+        let backend = cfg.backend.clone();
+        let dev = cfg.dev;
+        std::thread::spawn(move || {
+            worker_loop(
+                dev, model, plan, wb, transport, recv_timeout, ctl_rx, done_tx, backend, shard,
+            )
+        })
+    };
+    let mut wconn = conn.try_clone().context("cloning the control stream")?;
+    let writer = std::thread::spawn(move || {
+        while let Ok((req, dev, result)) = done_rx.recv() {
+            let frame = wire::DoneFrame {
+                req,
+                dev,
+                result: to_remote(result),
+            };
+            if wire::write_frame(&mut wconn, wire::K_DONE, &wire::encode_done(&frame)).is_err() {
+                break; // coordinator gone; the reader side tears down
+            }
+        }
+        wconn.shutdown_write();
+    });
+    loop {
+        match wire::read_frame(&mut conn) {
+            Ok((wire::K_REQUEST, body)) => match wire::decode_request(&body) {
+                Ok(rf) => {
+                    if ctl_tx
+                        .send(Control::Request {
+                            req: rf.req,
+                            input: Arc::new(rf.input),
+                        })
+                        .is_err()
+                    {
+                        break; // worker_loop exited (kill/poison)
+                    }
+                }
+                Err(e) => {
+                    eprintln!("iop worker: malformed REQUEST, closing the epoch: {e}");
+                    break;
+                }
+            },
+            Ok((wire::K_SHUTDOWN, _)) | Err(wire::WireError::Eof) => {
+                let _ = ctl_tx.send(Control::Shutdown);
+                break;
+            }
+            Ok((k, _)) => {
+                eprintln!("iop worker: unexpected frame kind {k:#04x} on the control link");
+                break;
+            }
+            Err(e) => {
+                eprintln!("iop worker: control link broke: {e}");
+                break;
+            }
+        }
+    }
+    // Teardown: dropping our control sender unblocks worker_loop (its
+    // next ctrl.recv errors); its exit drops done_tx, which unwinds the
+    // writer. Receive deadlines bound how long a mid-request worker can
+    // take to notice.
+    drop(ctl_tx);
+    let _ = worker.join();
+    let _ = writer.join();
+    {
+        let mut route = state.route.lock().unwrap();
+        if let Some(r) = route.as_ref() {
+            if r.session == cfg.session && r.epoch == cfg.epoch {
+                *route = None;
+            }
+        }
+    }
+    conn.shutdown_both();
+    eprintln!(
+        "iop worker: session {:#x} epoch {} closed",
+        cfg.session, cfg.epoch
+    );
+    Ok(())
+}
+
+/// Dial one outbound mesh link, retrying `REJ_NOT_READY` refusals with
+/// capped exponential backoff + jitter until [`wire::CONNECT_DEADLINE`]:
+/// the peer simply hasn't seen this epoch's CONFIG yet. Any other
+/// refusal (stale epoch, bad link) is fatal for the epoch.
+fn dial_peer(
+    addr_s: &str,
+    cfg: &SessionConfig,
+    to: usize,
+    rng: &mut SplitMix64,
+) -> Result<Stream> {
+    let addr = wire::Addr::parse(addr_s).map_err(|e| anyhow!(e))?;
+    let t0 = Instant::now();
+    let mut delay_ms = wire::BACKOFF_BASE_MS;
+    loop {
+        let left = wire::CONNECT_DEADLINE.saturating_sub(t0.elapsed());
+        if left.is_zero() {
+            return Err(anyhow!(
+                "peer {to} at {addr} not ready within {:?}",
+                wire::CONNECT_DEADLINE
+            ));
+        }
+        let mut s = wire::connect_with_backoff(&addr, left, rng).map_err(|e| anyhow!("{e}"))?;
+        s.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let h = Hello {
+            role: wire::ROLE_PEER,
+            session: cfg.session,
+            epoch: cfg.epoch,
+            from: cfg.dev as u32,
+            to: to as u32,
+        };
+        wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&h))?;
+        match wire::read_frame(&mut s) {
+            Ok((wire::K_HELLO_OK, _)) => {
+                s.set_read_timeout(None)?;
+                return Ok(s);
+            }
+            Ok((wire::K_HELLO_REJECT, body)) => {
+                let r = wire::decode_hello_reject(&body).map_err(|e| anyhow!("{e}"))?;
+                if r.code != wire::REJ_NOT_READY {
+                    return Err(anyhow!("peer {to} at {addr} refused the mesh link: {r}"));
+                }
+                let jitter = rng.next_u64() % (delay_ms / 2 + 1);
+                std::thread::sleep(Duration::from_millis(delay_ms + jitter));
+                delay_ms = (delay_ms * 2).min(wire::BACKOFF_CAP_MS);
+            }
+            Ok((k, _)) => {
+                return Err(anyhow!("peer {to} answered hello with frame kind {k:#04x}"))
+            }
+            Err(e) => return Err(anyhow!("peer {to} at {addr}: handshake failed: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn session_ids_fit_exact_f64_json() {
+        for _ in 0..64 {
+            let id = new_session_id();
+            assert!(id < (1 << 48));
+            let j = Json::parse(&Json::num(id as f64).to_string_compact()).unwrap();
+            assert_eq!(j.as_f64().unwrap() as u64, id);
+        }
+    }
+
+    #[test]
+    fn every_zoo_model_round_trips_through_its_spec() {
+        for model in [zoo::lenet(), zoo::vgg_mini(), zoo::alexnet(), zoo::vgg11()] {
+            let text = model_to_spec_json(&model).unwrap();
+            let back = model_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.ops, model.ops, "{}", model.name);
+            assert_eq!(back.input, model.input, "{}", model.name);
+            assert_eq!(back.name, model.name);
+        }
+    }
+
+    #[test]
+    fn fault_plan_round_trips_through_json() {
+        let plan = FaultPlan {
+            seed: 7,
+            recv_timeout_ms: Some(250),
+            links: vec![crate::config::LinkFault {
+                from: 0,
+                to: 1,
+                delay_ms: 2.5,
+                drop_prob: 0.125,
+            }],
+            kills: vec![
+                crate::config::KillSpec {
+                    dev: 1,
+                    at_req: 3,
+                    at_stage: Some(2),
+                },
+                crate::config::KillSpec {
+                    dev: 0,
+                    at_req: 9,
+                    at_stage: None,
+                },
+            ],
+        };
+        let back = fault_plan_from_json(&fault_plan_to_json(&plan)).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn session_config_round_trips_through_json() {
+        let model = zoo::lenet();
+        let spec = model_to_spec_json(&model).unwrap();
+        let cluster = Cluster::homogeneous(3, 0.6e9, 512 << 20, 50e6, 4e-3);
+        let cfg = SessionConfig {
+            session: new_session_id(),
+            epoch: 2,
+            dev: 1,
+            m: 3,
+            devmap: vec![0, 2, 3],
+            peers: vec![
+                "unix:/tmp/a.sock".into(),
+                "127.0.0.1:7070".into(),
+                "tcp:127.0.0.1:7071".into(),
+            ],
+            model: Json::parse(&spec).unwrap(),
+            cluster: cluster.clone(),
+            strategy: Strategy::Iop,
+            backend: Backend::Compiled { threads: 2 },
+            recv_timeout_ms: 1500,
+            fault: Some(FaultPlan {
+                seed: 11,
+                recv_timeout_ms: None,
+                links: Vec::new(),
+                kills: vec![crate::config::KillSpec {
+                    dev: 2,
+                    at_req: 1,
+                    at_stage: None,
+                }],
+            }),
+        };
+        let back = SessionConfig::from_json(&cfg.to_json().unwrap()).unwrap();
+        assert_eq!(back.session, cfg.session);
+        assert_eq!(back.epoch, cfg.epoch);
+        assert_eq!(back.dev, cfg.dev);
+        assert_eq!(back.m, cfg.m);
+        assert_eq!(back.devmap, cfg.devmap);
+        assert_eq!(back.peers, cfg.peers);
+        assert_eq!(back.strategy, cfg.strategy);
+        assert_eq!(back.recv_timeout_ms, cfg.recv_timeout_ms);
+        assert_eq!(back.fault, cfg.fault);
+        assert!(matches!(back.backend, Backend::Compiled { threads: 2 }));
+        // The cluster must survive *exactly* — the worker re-plans from
+        // these floats.
+        assert_eq!(back.cluster.bandwidth_bps, cluster.bandwidth_bps);
+        assert_eq!(back.cluster.t_est, cluster.t_est);
+        assert_eq!(back.cluster.m(), cluster.m());
+        // And the model spec must rebuild the same ops.
+        let back_model = model_from_json(&back.model).unwrap();
+        assert_eq!(back_model.ops, model.ops);
+    }
+
+    #[test]
+    fn pjrt_backend_is_refused_in_config() {
+        let model = zoo::lenet();
+        let cfg = SessionConfig {
+            session: 1,
+            epoch: 0,
+            dev: 0,
+            m: 1,
+            devmap: vec![0],
+            peers: vec!["127.0.0.1:1".into()],
+            model: Json::parse(&model_to_spec_json(&model).unwrap()).unwrap(),
+            cluster: Cluster::homogeneous(1, 0.6e9, 512 << 20, 50e6, 4e-3),
+            strategy: Strategy::Oc,
+            backend: Backend::Pjrt {
+                artifacts_dir: "/nonexistent".into(),
+            },
+            recv_timeout_ms: 100,
+            fault: None,
+        };
+        assert!(cfg.to_json().is_err());
+    }
+
+    #[test]
+    fn typed_errors_survive_the_wire_conversion() {
+        // WorkerKilled and RecvDeadline must come back as the same
+        // downcastable roots the supervisor classifies.
+        let killed: Result<WorkerOut> =
+            Err(anyhow::Error::new(WorkerKilled { dev: 3 }).context("worker 1 failed"));
+        match to_remote(killed) {
+            Err(RemoteErr::Killed { dev }) => assert_eq!(dev, 3),
+            other => panic!("expected Killed, got {other:?}"),
+        }
+        let rebuilt = from_remote(Err(RemoteErr::Deadline {
+            from: 2,
+            stage: 4,
+            req: 7,
+            timeout_ms: 250,
+        }))
+        .unwrap_err();
+        let d = rebuilt
+            .chain()
+            .find_map(|c| c.downcast_ref::<RecvDeadline>())
+            .expect("RecvDeadline root");
+        assert_eq!((d.from, d.stage, d.req, d.timeout_ms), (2, 4, 7, 250));
+        let other = from_remote(Err(RemoteErr::Other("boom".into()))).unwrap_err();
+        assert!(format!("{other:#}").contains("boom"));
+    }
+
+    /// Epoch admission against a *live* worker: configure one epoch over
+    /// the wire, then probe it with stale and premature hellos. Control
+    /// replays and older epochs draw `REJ_STALE`; a newer epoch the
+    /// worker has not been configured for is the retryable
+    /// `REJ_NOT_READY`.
+    #[cfg(unix)]
+    #[test]
+    fn live_worker_refuses_stale_epochs() {
+        use std::os::unix::net::UnixStream;
+
+        let path = std::env::temp_dir().join(format!(
+            "iop-admission-{}.sock",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let addr = format!("unix:{}", path.display());
+        {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                let _ = run_worker(&a);
+            });
+        }
+        let connect = || {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                match UnixStream::connect(&path) {
+                    Ok(s) => {
+                        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                        return s;
+                    }
+                    Err(e) => {
+                        assert!(Instant::now() < deadline, "worker never came up: {e}");
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+        };
+        let hello = |role: u8, epoch: u64, from: u32| Hello {
+            role,
+            session: 0x77,
+            epoch,
+            from,
+            to: 0,
+        };
+        let shake = |h: &Hello| {
+            let mut s = connect();
+            wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(h)).unwrap();
+            let (kind, body) = wire::read_frame(&mut s).unwrap();
+            (s, kind, body)
+        };
+
+        // Bring one single-device epoch live (m=1: no mesh to dial, so
+        // the handshake is the whole bring-up).
+        let model = zoo::lenet();
+        let cfg = SessionConfig {
+            session: 0x77,
+            epoch: 5,
+            dev: 0,
+            m: 1,
+            devmap: vec![0],
+            peers: vec![addr.clone()],
+            model: Json::parse(&model_to_spec_json(&model).unwrap()).unwrap(),
+            cluster: Cluster::homogeneous(1, 0.6e9, 512 << 20, 6.25e6, 4e-3),
+            strategy: Strategy::Iop,
+            backend: Backend::Reference,
+            recv_timeout_ms: 2000,
+            fault: None,
+        };
+        let (mut ctrl, kind, _) = shake(&hello(wire::ROLE_CTRL, 5, wire::CTRL_FROM));
+        assert_eq!(kind, wire::K_HELLO_OK);
+        wire::write_frame(
+            &mut ctrl,
+            wire::K_CONFIG,
+            &wire::encode_config(&cfg.to_json().unwrap()),
+        )
+        .unwrap();
+        let (kind, _) = wire::read_frame(&mut ctrl).unwrap();
+        assert_eq!(kind, wire::K_CONFIG_OK);
+
+        // Older epoch and exact replay of the current one: both stale.
+        for epoch in [4u64, 5] {
+            let (_s, kind, body) = shake(&hello(wire::ROLE_CTRL, epoch, wire::CTRL_FROM));
+            assert_eq!(kind, wire::K_HELLO_REJECT, "epoch {epoch}");
+            let rej = wire::decode_hello_reject(&body).unwrap();
+            assert_eq!(rej.code, wire::REJ_STALE, "epoch {epoch}: {}", rej.reason);
+            assert!(rej.reason.contains("epoch"), "{}", rej.reason);
+        }
+        // Stale mesh hello: also refused for good.
+        let (_s, kind, body) = shake(&hello(wire::ROLE_PEER, 4, 0));
+        assert_eq!(kind, wire::K_HELLO_REJECT);
+        assert_eq!(
+            wire::decode_hello_reject(&body).unwrap().code,
+            wire::REJ_STALE
+        );
+        // A newer epoch this worker has not seen yet: retryable, the
+        // dialer backs off until the coordinator's CONFIG lands.
+        let (_s, kind, body) = shake(&hello(wire::ROLE_PEER, 6, 0));
+        assert_eq!(kind, wire::K_HELLO_REJECT);
+        assert_eq!(
+            wire::decode_hello_reject(&body).unwrap().code,
+            wire::REJ_NOT_READY
+        );
+        // Dropping the control link shuts the epoch down gracefully.
+        drop(ctrl);
+    }
+}

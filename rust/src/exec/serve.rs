@@ -78,6 +78,14 @@ pub struct ThroughputReport {
     /// run; this time is inside `wall_secs`, so it also shows up as a
     /// latency-percentile bump.
     pub recovery_secs: f64,
+    /// Measured shaped-medium busy seconds per pipeline stage over the
+    /// measured window (warm-up excluded), when the session runs over a
+    /// shaped link — the measured side of the `cost::comm` per-stage
+    /// validation table. Empty on unshaped sessions.
+    pub wire_busy_by_stage: Vec<f64>,
+    /// Measured shaped-medium busy seconds for final-assembly traffic
+    /// (gather to device 0); 0 on unshaped sessions.
+    pub wire_busy_final: f64,
 }
 
 impl ThroughputReport {
@@ -112,6 +120,16 @@ impl ThroughputReport {
                 Json::num(self.requests_replayed as f64),
             ),
             ("recovery_secs", Json::num(self.recovery_secs)),
+            (
+                "wire_busy_by_stage_secs",
+                Json::Arr(
+                    self.wire_busy_by_stage
+                        .iter()
+                        .map(|&s| Json::num(s))
+                        .collect(),
+                ),
+            ),
+            ("wire_busy_final_secs", Json::num(self.wire_busy_final)),
         ])
     }
 }
@@ -151,6 +169,9 @@ pub fn serve_closed_loop(
     for _ in 0..opts.warmup {
         session.infer(input_for(0))?;
     }
+    // Snapshot the shaped-medium meter after warm-up so the reported
+    // wire time covers exactly the measured window.
+    let wire_before = session.shaped_meter();
 
     let mut latencies = Vec::with_capacity(opts.requests);
     let mut busy_secs = vec![0.0f64; m];
@@ -187,6 +208,17 @@ pub fn serve_closed_loop(
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rec = session.recovery_stats();
+    let (wire_busy_by_stage, wire_busy_final) = match (wire_before, session.shaped_meter()) {
+        (Some((before, before_final)), Some((after, after_final))) => {
+            let per_stage = after
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| a - before.get(i).copied().unwrap_or(0.0))
+                .collect();
+            (per_stage, after_final - before_final)
+        }
+        _ => (Vec::new(), 0.0),
+    };
     Ok(ThroughputReport {
         requests: opts.requests,
         inflight: depth,
@@ -203,6 +235,8 @@ pub fn serve_closed_loop(
         replans: rec.replans - recovery_before.replans,
         requests_replayed: rec.requests_replayed - recovery_before.requests_replayed,
         recovery_secs: rec.recovery_secs - recovery_before.recovery_secs,
+        wire_busy_by_stage,
+        wire_busy_final,
     })
 }
 
@@ -325,6 +359,45 @@ mod tests {
         assert!(rep.requests_replayed >= 1);
         assert!(rep.recovery_secs > 0.0);
         assert!(!session.poisoned());
+    }
+
+    #[test]
+    fn shaped_run_reports_wire_busy_for_the_measured_window() {
+        use crate::config::LinkShape;
+        use crate::exec::harness::SessionOptions;
+
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        // Fast modeled link so the test stays quick; the meter must
+        // still record nonzero medium busy time.
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                shape: Some(LinkShape::new(0.05, 10_000.0)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let input = model_input(&model);
+        let rep = serve_closed_loop(
+            &mut session,
+            &ServeOptions {
+                requests: 2,
+                inflight: 1,
+                warmup: 1,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        )
+        .unwrap();
+        assert!(!rep.wire_busy_by_stage.is_empty());
+        let total: f64 = rep.wire_busy_by_stage.iter().sum::<f64>() + rep.wire_busy_final;
+        assert!(total > 0.0, "shaped medium must record busy time");
+        let j = rep.to_json();
+        assert!(j.get("wire_busy_by_stage_secs").as_arr().is_some());
+        assert!(j.get("wire_busy_final_secs").as_f64().is_some());
     }
 
     #[test]

@@ -3,19 +3,30 @@
 //! Workers never touch channels directly: every send and every receive
 //! goes through the per-device endpoint the session handed them, so the
 //! `(req, from, stage, phase)` tag protocol is independent of what
-//! actually carries the bytes. Two implementations ship today:
+//! actually carries the bytes. Four implementations ship today:
 //!
 //! * [`ChannelTransport`] — the in-process full-mesh `mpsc` links the
 //!   harness has always used; the default and the fastest.
-//! * [`FaultTransport`] — the channel transport wrapped in a
-//!   [`FaultPlan`]: per-link delay and seeded message drop, plus
-//!   per-device kill triggers that make a worker abandon the wire
-//!   protocol mid-request exactly like a crashed device would. This is
-//!   what the chaos tests and `iop serve --fault-plan` run on.
-//!
-//! A TCP/UDS transport slots in behind the same trait (the tag protocol
-//! serializes cleanly — see ROADMAP "real transport"); nothing in the
-//! worker loop would change.
+//! * [`SocketTransport`] — real TCP / Unix-domain-socket links between
+//!   OS processes, speaking the framed protocol in [`super::wire`]. The
+//!   mesh is simplex: each worker dials every peer once and uses that
+//!   connection only for its own outbound messages; inbound frames are
+//!   pumped into the endpoint's inbox by the worker process's accept
+//!   loop (`exec::remote`). A broken pipe on send is *not* an error —
+//!   the link is marked dead and the receiver-side deadline names the
+//!   silent peer, exactly like a lossy network.
+//! * [`ShapedTransport`] — wraps any transport in a shared-medium link
+//!   model ([`crate::config::LinkShape`]: per-link latency + bandwidth).
+//!   Sends serialize on one medium lock and sleep the modeled
+//!   transmission time, mirroring the serialized-medium assumption in
+//!   `cost/comm.rs`; actual busy time is recorded per stage in a
+//!   [`MediumMeter`] so `iop serve --transport shaped` can print
+//!   measured wire time next to the analytical prediction.
+//! * [`FaultTransport`] — any of the above wrapped in a [`FaultPlan`]:
+//!   per-link delay and seeded message drop, plus per-device kill
+//!   triggers that make a worker abandon the wire protocol mid-request
+//!   exactly like a crashed device would. This is what the chaos tests
+//!   and `iop serve --fault-plan` run on.
 //!
 //! Receives carry a deadline: [`Transport::recv`] takes a timeout and
 //! the mailbox layer above surfaces a typed [`RecvDeadline`] error
@@ -24,12 +35,13 @@
 
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::FaultPlan;
+use super::wire::{self, Stream};
+use crate::config::{FaultPlan, LinkShape};
 use crate::tensor::Tensor;
 use crate::util::prng::SplitMix64;
 
@@ -144,14 +156,14 @@ impl Transport for ChannelTransport {
     }
 }
 
-/// [`ChannelTransport`] with a [`FaultPlan`] applied: sender-side link
-/// delay and seeded drops, plus this device's kill triggers. Fault
-/// lookups key on *original* cluster device ids (via `devmap`), so one
-/// schedule means the same thing before and after a recovery re-plan;
-/// the drop RNG restarts per epoch from the same per-device seed, so a
-/// given schedule is reproducible run to run.
+/// Any transport with a [`FaultPlan`] applied: sender-side link delay
+/// and seeded drops, plus this device's kill triggers. Fault lookups
+/// key on *original* cluster device ids (via `devmap`), so one schedule
+/// means the same thing before and after a recovery re-plan; the drop
+/// RNG restarts per epoch from the same per-device seed, so a given
+/// schedule is reproducible run to run.
 pub struct FaultTransport {
-    inner: ChannelTransport,
+    inner: Box<dyn Transport>,
     plan: Arc<FaultPlan>,
     /// Original device id of this endpoint.
     dev_global: usize,
@@ -162,8 +174,8 @@ pub struct FaultTransport {
 }
 
 impl FaultTransport {
-    fn new(
-        inner: ChannelTransport,
+    pub(crate) fn new(
+        inner: Box<dyn Transport>,
         plan: Arc<FaultPlan>,
         dev_global: usize,
         devmap: Vec<usize>,
@@ -223,6 +235,166 @@ impl Transport for FaultTransport {
     }
 }
 
+/// Real socket links between worker *processes*. `out[j]` is this
+/// device's private simplex connection to plan-local peer `j` (None for
+/// self and for links that broke); inbound messages are decoded by the
+/// owning process's accept loop and funneled into `rx`, so `recv` keeps
+/// the exact timeout semantics of [`ChannelTransport`].
+pub struct SocketTransport {
+    dev: usize,
+    out: Vec<Option<Stream>>,
+    /// Loopback for the (never used by current comm steps, but legal)
+    /// send-to-self case.
+    self_tx: Sender<Msg>,
+    rx: Receiver<Msg>,
+}
+
+impl SocketTransport {
+    /// `out` must have one slot per plan-local device; `rx` is the inbox
+    /// the accept loop feeds. The matching `Sender` clone for loopback
+    /// is passed separately so the accept loop can keep its own.
+    pub fn new(dev: usize, out: Vec<Option<Stream>>, self_tx: Sender<Msg>, rx: Receiver<Msg>) -> Self {
+        SocketTransport { dev, out, self_tx, rx }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, to: usize, msg: Msg) -> Result<()> {
+        if to == self.dev {
+            let _ = self.self_tx.send(msg);
+            return Ok(());
+        }
+        if let Some(s) = self.out.get_mut(to).and_then(|o| o.as_mut()) {
+            let body = wire::encode_msg(&msg);
+            if wire::write_frame(s, wire::K_MSG, &body).is_err() {
+                // Broken pipe / connection reset == the peer is gone.
+                // Same contract as every other transport: drop the
+                // message, let the receiver's deadline name the peer.
+                if let Some(dead) = self.out.get_mut(to) {
+                    if let Some(s) = dead.take() {
+                        s.shutdown_both();
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Msg, RecvError> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvError::Timeout,
+            RecvTimeoutError::Disconnected => RecvError::Disconnected,
+        })
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        // Half-close our outbound links so peer accept loops see EOF
+        // promptly instead of waiting on their own deadlines.
+        for s in self.out.iter().flatten() {
+            s.shutdown_write();
+        }
+    }
+}
+
+/// Per-stage wire-busy accounting for the shaped link: the total time
+/// the shared medium spent transmitting, bucketed by the pipeline stage
+/// of the message (final-assembly traffic in its own bucket). This is
+/// the measured side of the `cost/comm.rs` validation table.
+#[derive(Default)]
+pub struct MediumMeter {
+    busy: Mutex<(Vec<f64>, f64)>,
+}
+
+impl MediumMeter {
+    fn add(&self, stage: usize, secs: f64) {
+        let mut b = self.busy.lock().unwrap();
+        if stage == usize::MAX {
+            b.1 += secs;
+        } else {
+            if b.0.len() <= stage {
+                b.0.resize(stage + 1, 0.0);
+            }
+            b.0[stage] += secs;
+        }
+    }
+
+    /// (per-stage busy seconds, final-assembly busy seconds).
+    pub fn snapshot(&self) -> (Vec<f64>, f64) {
+        let b = self.busy.lock().unwrap();
+        (b.0.clone(), b.1)
+    }
+}
+
+/// The shared pieces of one shaped link: the shape parameters, the
+/// medium lock every send serializes on (the cost model assumes one
+/// shared medium — see `cost::comm::step_secs`), and the meter.
+pub struct Shaping {
+    pub shape: LinkShape,
+    medium: Mutex<()>,
+    meter: MediumMeter,
+}
+
+impl Shaping {
+    pub fn new(shape: LinkShape) -> Arc<Shaping> {
+        Arc::new(Shaping { shape, medium: Mutex::new(()), meter: MediumMeter::default() })
+    }
+
+    pub fn meter(&self) -> &MediumMeter {
+        &self.meter
+    }
+}
+
+/// Any transport behind a modeled link: every send holds the shared
+/// medium for `latency + bytes/bandwidth` seconds before the bytes move.
+/// Composable under [`FaultTransport`] (fault drops/kills apply to a
+/// shaped link exactly as to a raw one).
+pub struct ShapedTransport {
+    inner: Box<dyn Transport>,
+    shaping: Arc<Shaping>,
+    dev_global: usize,
+    devmap: Vec<usize>,
+}
+
+impl ShapedTransport {
+    pub fn new(
+        inner: Box<dyn Transport>,
+        shaping: Arc<Shaping>,
+        dev_global: usize,
+        devmap: Vec<usize>,
+    ) -> Self {
+        ShapedTransport { inner, shaping, dev_global, devmap }
+    }
+}
+
+impl Transport for ShapedTransport {
+    fn send(&mut self, to: usize, msg: Msg) -> Result<()> {
+        let (latency, bps) = self.shaping.shape.params(self.dev_global, self.devmap[to]);
+        let cost = latency + msg.tensor.bytes() as f64 / bps;
+        {
+            let _medium = self.shaping.medium.lock().unwrap();
+            // Busy time is measured while *holding* the medium, so the
+            // per-stage sums line up with the serialized-medium cost
+            // model instead of double-counting queueing waits.
+            let t0 = Instant::now();
+            if cost > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(cost));
+            }
+            self.shaping.meter.add(msg.stage, t0.elapsed().as_secs_f64());
+        }
+        self.inner.send(to, msg)
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Msg, RecvError> {
+        self.inner.recv(timeout)
+    }
+
+    fn fault_check(&mut self, req: usize, stage: usize) -> Result<()> {
+        self.inner.fault_check(req, stage)
+    }
+}
+
 /// Build the linked endpoint set for one worker epoch: `m` endpoints,
 /// endpoint `i` owned by plan-local device `i`, with `devmap[i]` its
 /// original cluster id. With a fault plan, every endpoint is wrapped in
@@ -231,6 +403,18 @@ pub fn make_endpoints(
     m: usize,
     devmap: &[usize],
     fault: Option<&Arc<FaultPlan>>,
+) -> Vec<Box<dyn Transport>> {
+    make_endpoints_shaped(m, devmap, fault, None)
+}
+
+/// [`make_endpoints`] with an optional link shape: endpoints compose as
+/// `Fault(Shaped(Channel))`, so kill triggers stay outermost and the
+/// shaped medium still carries fault-delayed traffic.
+pub fn make_endpoints_shaped(
+    m: usize,
+    devmap: &[usize],
+    fault: Option<&Arc<FaultPlan>>,
+    shaping: Option<&Arc<Shaping>>,
 ) -> Vec<Box<dyn Transport>> {
     assert_eq!(devmap.len(), m, "devmap must cover every endpoint");
     let mut txs = Vec::with_capacity(m);
@@ -243,19 +427,17 @@ pub fn make_endpoints(
     rxs.into_iter()
         .enumerate()
         .map(|(i, rx)| {
-            let chan = ChannelTransport {
+            let mut ep: Box<dyn Transport> = Box::new(ChannelTransport {
                 tx: txs.clone(),
                 rx,
-            };
-            match fault {
-                None => Box::new(chan) as Box<dyn Transport>,
-                Some(fp) => Box::new(FaultTransport::new(
-                    chan,
-                    Arc::clone(fp),
-                    devmap[i],
-                    devmap.to_vec(),
-                )) as Box<dyn Transport>,
+            });
+            if let Some(sh) = shaping {
+                ep = Box::new(ShapedTransport::new(ep, Arc::clone(sh), devmap[i], devmap.to_vec()));
             }
+            if let Some(fp) = fault {
+                ep = Box::new(FaultTransport::new(ep, Arc::clone(fp), devmap[i], devmap.to_vec()));
+            }
+            ep
         })
         .collect()
 }
@@ -408,6 +590,76 @@ mod tests {
         // gone — emulate by dropping ep0's peers: with ep1 gone and no
         // message pending, a short recv times out rather than erroring.
         assert_eq!(ep0.recv(Duration::from_millis(10)), Err(RecvError::Timeout));
+    }
+
+    #[test]
+    fn shaped_transport_delays_delivers_and_meters() {
+        // 8 Mbps = 1e6 B/s; a 2-f32 message is 8 B -> 8 us + 5 ms latency.
+        let shaping = Shaping::new(LinkShape::new(5.0, 8.0));
+        let mut eps = make_endpoints_shaped(2, &[0, 1], None, Some(&shaping));
+        let t0 = std::time::Instant::now();
+        eps[0].send(1, msg(0, 0, 2)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5), "send holds the medium");
+        assert_eq!(eps[1].recv(TICK).unwrap().from, 0);
+        let (per_stage, fin) = shaping.meter().snapshot();
+        assert_eq!(per_stage.len(), 3, "meter grows to the touched stage");
+        assert!(per_stage[2] >= 5e-3, "stage bucket holds the busy time");
+        assert_eq!(fin, 0.0);
+        // final-assembly traffic lands in its own bucket
+        let m = Msg {
+            from: 1,
+            req: 0,
+            stage: usize::MAX,
+            phase: 0,
+            tensor: Tensor::vector(vec![1.0]),
+        };
+        eps[1].send(0, m).unwrap();
+        assert_eq!(eps[0].recv(TICK).unwrap().stage, usize::MAX);
+        let (_, fin) = shaping.meter().snapshot();
+        assert!(fin >= 5e-3);
+    }
+
+    #[test]
+    fn shaped_composes_with_fault_kills() {
+        // Fault wraps Shaped: kill triggers must still fire, and the
+        // shaped fault_check must delegate rather than swallow them.
+        let plan = Arc::new(FaultPlan {
+            kills: vec![KillSpec {
+                dev: 1,
+                at_req: 0,
+                at_stage: None,
+            }],
+            ..FaultPlan::default()
+        });
+        let shaping = Shaping::new(LinkShape::new(0.0, 1000.0));
+        let mut eps = make_endpoints_shaped(2, &[0, 1], Some(&plan), Some(&shaping));
+        eps[0].fault_check(0, 0).unwrap();
+        let err = eps[1].fault_check(0, 0).unwrap_err();
+        let killed = err.chain().find_map(|c| c.downcast_ref::<WorkerKilled>()).unwrap();
+        assert_eq!(killed.dev, 1);
+        // unkilled device still sends through the shaped medium
+        eps[0].send(1, msg(0, 0, 0)).unwrap();
+    }
+
+    #[test]
+    fn shaped_per_link_override_applies_by_original_id() {
+        // Plan-local 1 is original device 2; the override targets 0->2.
+        let shape = LinkShape {
+            latency_ms: 0.0,
+            mbps: 1000.0,
+            links: vec![crate::config::ShapeOverride {
+                from: 0,
+                to: 2,
+                latency_ms: 20.0,
+                mbps: 1000.0,
+            }],
+        };
+        let shaping = Shaping::new(shape);
+        let mut eps = make_endpoints_shaped(2, &[0, 2], None, Some(&shaping));
+        let t0 = std::time::Instant::now();
+        eps[0].send(1, msg(0, 0, 0)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(20), "override latency applies");
+        assert_eq!(eps[1].recv(TICK).unwrap().from, 0);
     }
 
     #[test]

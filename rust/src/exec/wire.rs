@@ -1,0 +1,1014 @@
+//! Binary wire format + socket plumbing for multi-process workers.
+//!
+//! Every frame on a socket link (coordinator<->worker control links and
+//! worker<->worker tensor links alike) has the same envelope:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  0x31504F49 ("IOP1", little-endian)
+//! 4       1     kind   (K_MSG, K_HELLO, ... below)
+//! 5       4     body length in bytes (u32 LE, <= MAX_BODY)
+//! 9       len   body
+//! 9+len   4     FNV-1a-32 checksum of the body (u32 LE)
+//! ```
+//!
+//! All integers are little-endian; tensors travel as raw f32 LE words, so
+//! a round trip is bit-exact and distributed outputs can be compared to
+//! the in-process session with `==`. Decoding is total: malformed,
+//! truncated, or oversized input yields a typed [`WireError`], never a
+//! panic and never an unbounded read (body length is capped before any
+//! allocation).
+//!
+//! The handshake ([`Hello`]) carries the protocol version, a session id,
+//! the recovery epoch, and plan-local device ids, so a peer from a stale
+//! epoch (pre-recovery) or a different session is refused with a typed
+//! [`HelloReject`] instead of corrupting the tag protocol.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
+
+/// Frame magic: the bytes `IOP1` read as a little-endian u32.
+pub const MAGIC: u32 = 0x3150_4F49;
+/// Protocol version carried in every [`Hello`]; bumped on breaking changes.
+pub const VERSION: u16 = 1;
+/// Hard cap on a frame body. Largest legitimate payload is one activation
+/// tensor; 64 MiB is ~16M f32s, far above anything the model zoo ships,
+/// and small enough that a hostile length field can't balloon memory.
+pub const MAX_BODY: u32 = 64 * 1024 * 1024;
+
+// Frame kinds.
+/// Worker->worker tagged tensor message ([`crate::exec::Msg`]).
+pub const K_MSG: u8 = 0x01;
+/// Connection opener, both directions of both link types.
+pub const K_HELLO: u8 = 0x02;
+/// Handshake accepted.
+pub const K_HELLO_OK: u8 = 0x03;
+/// Handshake refused ([`HelloReject`]).
+pub const K_HELLO_REJECT: u8 = 0x04;
+/// Coordinator->worker session config (JSON body).
+pub const K_CONFIG: u8 = 0x05;
+/// Worker->coordinator: config applied, plan built, mesh ready.
+pub const K_CONFIG_OK: u8 = 0x06;
+/// Coordinator->worker: run one inference ([`RequestFrame`]).
+pub const K_REQUEST: u8 = 0x07;
+/// Worker->coordinator per-request completion report ([`DoneFrame`]).
+pub const K_DONE: u8 = 0x08;
+/// Coordinator->worker: drain and end the session (empty body).
+pub const K_SHUTDOWN: u8 = 0x09;
+
+/// `Hello.from` sentinel for the coordinator (not a plan-local device).
+pub const CTRL_FROM: u32 = u32::MAX;
+
+/// Handshake role: the connection will carry control frames
+/// (REQUEST/DONE/...). Exactly one such link per worker per epoch.
+pub const ROLE_CTRL: u8 = 0;
+/// Handshake role: the connection is a one-way worker->worker tensor link.
+pub const ROLE_PEER: u8 = 1;
+
+// HelloReject codes.
+/// Receiver has no live session yet (or an older epoch): retry shortly.
+pub const REJ_NOT_READY: u8 = 1;
+/// Caller's epoch/session is older than the receiver's: give up.
+pub const REJ_STALE: u8 = 2;
+/// Version/field mismatch: never retry.
+pub const REJ_BAD: u8 = 3;
+
+/// Typed decode/transport failure. Every malformed input maps here —
+/// the wire layer never panics on bytes from the network.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean end of stream at a frame boundary (peer closed).
+    Eof,
+    /// Stream ended mid-frame.
+    Truncated,
+    /// First four bytes were not [`MAGIC`].
+    BadMagic(u32),
+    /// Peer speaks a different protocol version.
+    BadVersion(u16),
+    /// Declared body length exceeds [`MAX_BODY`].
+    Oversized { len: u32, max: u32 },
+    /// Body bytes do not hash to the trailing checksum.
+    Checksum { expect: u32, got: u32 },
+    /// Structurally invalid body for its frame kind.
+    BadFrame(String),
+    /// Underlying socket error.
+    Io(io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "connection closed"),
+            WireError::Truncated => write!(f, "stream ended mid-frame"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x} (expected {MAGIC:#010x})")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "peer speaks protocol version {v} (this build: {VERSION})")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte cap")
+            }
+            WireError::Checksum { expect, got } => {
+                write!(f, "frame checksum mismatch (expect {expect:#010x}, got {got:#010x})")
+            }
+            WireError::BadFrame(why) => write!(f, "malformed frame body: {why}"),
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        match e.kind() {
+            io::ErrorKind::UnexpectedEof => WireError::Truncated,
+            _ => WireError::Io(e),
+        }
+    }
+}
+
+/// FNV-1a 32-bit over the frame body. Not cryptographic — it exists to
+/// catch framing bugs and link corruption, not adversaries.
+pub fn checksum(body: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in body {
+        h ^= b as u32;
+        h = h.wrapping_mul(16_777_619);
+    }
+    h
+}
+
+/// Serialize one frame into a single buffer (one `write_all`, so frames
+/// from different threads on different sockets never interleave) and
+/// send it.
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> io::Result<()> {
+    debug_assert!(body.len() <= MAX_BODY as usize, "outbound frame over cap");
+    let mut buf = Vec::with_capacity(13 + body.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(kind);
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(body);
+    buf.extend_from_slice(&checksum(body).to_le_bytes());
+    w.write_all(&buf)
+}
+
+/// Read one frame. Returns `Eof` only on a clean close at a frame
+/// boundary; anything mid-frame is `Truncated`. Validates magic, length
+/// cap, and checksum before handing the body to a decoder.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), WireError> {
+    let mut head = [0u8; 9];
+    // First byte by hand so a clean close is distinguishable from a
+    // mid-frame truncation.
+    let n = r.read(&mut head[..1]).map_err(WireError::from)?;
+    if n == 0 {
+        return Err(WireError::Eof);
+    }
+    r.read_exact(&mut head[1..])?;
+    let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let kind = head[4];
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]);
+    if len > MAX_BODY {
+        return Err(WireError::Oversized { len, max: MAX_BODY });
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc)?;
+    let got = u32::from_le_bytes(crc);
+    let expect = checksum(&body);
+    if got != expect {
+        return Err(WireError::Checksum { expect, got });
+    }
+    Ok((kind, body))
+}
+
+// ---------- body reader ----------
+
+/// Bounds-checked cursor over a frame body; every under-read is a typed
+/// `Truncated`, every decoder ends with `done()` so trailing garbage is
+/// rejected too.
+struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, p: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.b.len() - self.p < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| WireError::BadFrame("string field is not UTF-8".into()))
+    }
+
+    fn done(self) -> Result<(), WireError> {
+        if self.p != self.b.len() {
+            return Err(WireError::BadFrame(format!(
+                "{} trailing bytes after body",
+                self.b.len() - self.p
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------- stage id mapping ----------
+
+/// The in-memory sentinel `FINAL_STAGE == usize::MAX` must survive the
+/// wire on any architecture, so stages are mapped through u64::MAX
+/// explicitly rather than cast.
+pub fn stage_to_wire(stage: usize) -> u64 {
+    if stage == usize::MAX {
+        u64::MAX
+    } else {
+        stage as u64
+    }
+}
+
+/// Inverse of [`stage_to_wire`]; rejects values that fit neither the
+/// sentinel nor the platform's usize.
+pub fn stage_from_wire(v: u64) -> Result<usize, WireError> {
+    if v == u64::MAX {
+        return Ok(usize::MAX);
+    }
+    usize::try_from(v).map_err(|_| WireError::BadFrame(format!("stage id {v} out of range")))
+}
+
+// ---------- tensor ----------
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.extend_from_slice(&(t.c as u32).to_le_bytes());
+    out.extend_from_slice(&(t.h as u32).to_le_bytes());
+    out.extend_from_slice(&(t.w as u32).to_le_bytes());
+    for v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn take_tensor(rd: &mut Rd) -> Result<Tensor, WireError> {
+    let (c, h, w) = (rd.u32()? as usize, rd.u32()? as usize, rd.u32()? as usize);
+    let elems = (c as u64) * (h as u64) * (w as u64);
+    if elems > (MAX_BODY as u64) / 4 {
+        return Err(WireError::BadFrame(format!("tensor of {elems} f32s exceeds the frame cap")));
+    }
+    let bytes = rd.take(elems as usize * 4)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|q| f32::from_le_bytes(q.try_into().unwrap()))
+        .collect();
+    Ok(Tensor::from_vec(c, h, w, data))
+}
+
+// ---------- MSG ----------
+
+use super::transport::Msg;
+
+pub fn encode_msg(m: &Msg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(29 + m.tensor.bytes());
+    out.extend_from_slice(&(m.from as u32).to_le_bytes());
+    out.extend_from_slice(&(m.req as u64).to_le_bytes());
+    out.extend_from_slice(&stage_to_wire(m.stage).to_le_bytes());
+    out.push(m.phase);
+    put_tensor(&mut out, &m.tensor);
+    out
+}
+
+pub fn decode_msg(body: &[u8]) -> Result<Msg, WireError> {
+    let mut rd = Rd::new(body);
+    let from = rd.u32()? as usize;
+    let req = rd.u64()? as usize;
+    let stage = stage_from_wire(rd.u64()?)?;
+    let phase = rd.u8()?;
+    let tensor = take_tensor(&mut rd)?;
+    rd.done()?;
+    Ok(Msg { from, req, stage, phase, tensor })
+}
+
+// ---------- HELLO ----------
+
+/// Connection opener. `session`/`epoch` pin the sender to one recovery
+/// generation; `from`/`to` are plan-local device ids (`from` is
+/// [`CTRL_FROM`] on coordinator control links).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hello {
+    pub role: u8,
+    pub session: u64,
+    pub epoch: u64,
+    pub from: u32,
+    pub to: u32,
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut out = Vec::with_capacity(27);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(h.role);
+    out.extend_from_slice(&h.session.to_le_bytes());
+    out.extend_from_slice(&h.epoch.to_le_bytes());
+    out.extend_from_slice(&h.from.to_le_bytes());
+    out.extend_from_slice(&h.to.to_le_bytes());
+    out
+}
+
+pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
+    let mut rd = Rd::new(body);
+    let version = rd.u16()?;
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let role = rd.u8()?;
+    if role != ROLE_CTRL && role != ROLE_PEER {
+        return Err(WireError::BadFrame(format!("unknown hello role {role}")));
+    }
+    let h = Hello {
+        role,
+        session: rd.u64()?,
+        epoch: rd.u64()?,
+        from: rd.u32()?,
+        to: rd.u32()?,
+    };
+    rd.done()?;
+    Ok(h)
+}
+
+/// Typed handshake refusal (code + human-readable reason).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloReject {
+    pub code: u8,
+    pub reason: String,
+}
+
+impl fmt::Display for HelloReject {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "handshake refused: {}", self.reason)
+    }
+}
+
+impl std::error::Error for HelloReject {}
+
+pub fn encode_hello_reject(r: &HelloReject) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + r.reason.len());
+    out.push(r.code);
+    put_str(&mut out, &r.reason);
+    out
+}
+
+pub fn decode_hello_reject(body: &[u8]) -> Result<HelloReject, WireError> {
+    let mut rd = Rd::new(body);
+    let code = rd.u8()?;
+    let reason = rd.str()?;
+    rd.done()?;
+    Ok(HelloReject { code, reason })
+}
+
+// ---------- CONFIG ----------
+
+pub fn encode_config(cfg: &Json) -> Vec<u8> {
+    cfg.to_string_compact().into_bytes()
+}
+
+pub fn decode_config(body: &[u8]) -> Result<Json, WireError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| WireError::BadFrame("config body is not UTF-8".into()))?;
+    Json::parse(text).map_err(|e| WireError::BadFrame(format!("config body is not JSON: {e}")))
+}
+
+// ---------- REQUEST ----------
+
+#[derive(Debug)]
+pub struct RequestFrame {
+    pub req: usize,
+    pub input: Tensor,
+}
+
+pub fn encode_request(req: usize, input: &Tensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(20 + input.bytes());
+    out.extend_from_slice(&(req as u64).to_le_bytes());
+    put_tensor(&mut out, input);
+    out
+}
+
+pub fn decode_request(body: &[u8]) -> Result<RequestFrame, WireError> {
+    let mut rd = Rd::new(body);
+    let req = rd.u64()? as usize;
+    let input = take_tensor(&mut rd)?;
+    rd.done()?;
+    Ok(RequestFrame { req, input })
+}
+
+// ---------- DONE ----------
+
+/// Per-request worker report, the wire image of the harness's
+/// `WorkerOut` (minus the coordinator-side `Instant`, which is stamped
+/// at frame receipt).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteOut {
+    pub output: Option<Tensor>,
+    pub bytes_sent: u64,
+    pub messages_sent: u64,
+    pub compute_secs: f64,
+    pub arena_grows: u64,
+    pub peak_scratch_bytes: u64,
+}
+
+/// Wire image of the typed worker errors the supervisor classifies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RemoteErr {
+    /// `WorkerKilled { dev }` (original cluster id).
+    Killed { dev: usize },
+    /// `RecvDeadline` naming the silent plan-local peer.
+    Deadline { from: usize, stage: usize, req: usize, timeout_ms: u64 },
+    /// Anything else, flattened to its display chain.
+    Other(String),
+}
+
+#[derive(Debug)]
+pub struct DoneFrame {
+    pub req: usize,
+    pub dev: usize,
+    pub result: Result<RemoteOut, RemoteErr>,
+}
+
+pub fn encode_done(d: &DoneFrame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&(d.req as u64).to_le_bytes());
+    out.extend_from_slice(&(d.dev as u32).to_le_bytes());
+    match &d.result {
+        Ok(o) => {
+            out.push(0);
+            match &o.output {
+                Some(t) => {
+                    out.push(1);
+                    put_tensor(&mut out, t);
+                }
+                None => out.push(0),
+            }
+            out.extend_from_slice(&o.bytes_sent.to_le_bytes());
+            out.extend_from_slice(&o.messages_sent.to_le_bytes());
+            out.extend_from_slice(&o.compute_secs.to_le_bytes());
+            out.extend_from_slice(&o.arena_grows.to_le_bytes());
+            out.extend_from_slice(&o.peak_scratch_bytes.to_le_bytes());
+        }
+        Err(RemoteErr::Killed { dev }) => {
+            out.push(1);
+            out.push(0);
+            out.extend_from_slice(&(*dev as u32).to_le_bytes());
+        }
+        Err(RemoteErr::Deadline { from, stage, req, timeout_ms }) => {
+            out.push(1);
+            out.push(1);
+            out.extend_from_slice(&(*from as u32).to_le_bytes());
+            out.extend_from_slice(&stage_to_wire(*stage).to_le_bytes());
+            out.extend_from_slice(&(*req as u64).to_le_bytes());
+            out.extend_from_slice(&timeout_ms.to_le_bytes());
+        }
+        Err(RemoteErr::Other(msg)) => {
+            out.push(1);
+            out.push(2);
+            put_str(&mut out, msg);
+        }
+    }
+    out
+}
+
+pub fn decode_done(body: &[u8]) -> Result<DoneFrame, WireError> {
+    let mut rd = Rd::new(body);
+    let req = rd.u64()? as usize;
+    let dev = rd.u32()? as usize;
+    let status = rd.u8()?;
+    let result = match status {
+        0 => {
+            let output = match rd.u8()? {
+                0 => None,
+                1 => Some(take_tensor(&mut rd)?),
+                x => return Err(WireError::BadFrame(format!("bad output flag {x}"))),
+            };
+            Ok(RemoteOut {
+                output,
+                bytes_sent: rd.u64()?,
+                messages_sent: rd.u64()?,
+                compute_secs: rd.f64()?,
+                arena_grows: rd.u64()?,
+                peak_scratch_bytes: rd.u64()?,
+            })
+        }
+        1 => Err(match rd.u8()? {
+            0 => RemoteErr::Killed { dev: rd.u32()? as usize },
+            1 => RemoteErr::Deadline {
+                from: rd.u32()? as usize,
+                stage: stage_from_wire(rd.u64()?)?,
+                req: rd.u64()? as usize,
+                timeout_ms: rd.u64()?,
+            },
+            2 => RemoteErr::Other(rd.str()?),
+            x => return Err(WireError::BadFrame(format!("unknown error kind {x}"))),
+        }),
+        x => return Err(WireError::BadFrame(format!("unknown done status {x}"))),
+    };
+    rd.done()?;
+    Ok(DoneFrame { req, dev, result })
+}
+
+// ---------- addresses / sockets ----------
+
+/// A worker address: `host:port` (optional `tcp:` prefix) or
+/// `unix:/path/to.sock` (alias `uds:`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Addr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl Addr {
+    pub fn parse(s: &str) -> Result<Addr, String> {
+        let s = s.trim();
+        if let Some(p) = s.strip_prefix("unix:").or_else(|| s.strip_prefix("uds:")) {
+            if p.is_empty() {
+                return Err(format!("empty unix socket path in address {s:?}"));
+            }
+            return Ok(Addr::Unix(PathBuf::from(p)));
+        }
+        let hp = s.strip_prefix("tcp:").unwrap_or(s);
+        match hp.rsplit_once(':') {
+            Some((host, port)) if !host.is_empty() && port.parse::<u16>().is_ok() => {
+                Ok(Addr::Tcp(hp.to_string()))
+            }
+            _ => Err(format!(
+                "bad worker address {s:?}: expected host:port, tcp:host:port, or unix:/path"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated `--workers` list.
+    pub fn parse_list(s: &str) -> Result<Vec<Addr>, String> {
+        s.split(',').map(Addr::parse).collect()
+    }
+}
+
+impl fmt::Display for Addr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Addr::Tcp(hp) => write!(f, "tcp:{hp}"),
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A connected stream of either family, deliberately minimal: just what
+/// the framed protocol needs.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    /// Half-close the write side so the peer's reader sees EOF while our
+    /// reader keeps draining (graceful shutdown).
+    pub fn shutdown_write(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Write);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Write);
+            }
+        }
+    }
+
+    pub fn shutdown_both(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind the address. A stale unix socket file (previous worker not
+    /// shut down cleanly) is removed first, so restarts just work.
+    pub fn bind(addr: &Addr) -> io::Result<Listener> {
+        match addr {
+            Addr::Tcp(hp) => TcpListener::bind(hp.as_str()).map(Listener::Tcp),
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                let _ = std::fs::remove_file(p);
+                UnixListener::bind(p).map(Listener::Unix)
+            }
+            #[cfg(not(unix))]
+            Addr::Unix(_) => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "unix sockets are not available on this platform",
+            )),
+        }
+    }
+
+    pub fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+}
+
+fn connect_once(addr: &Addr) -> io::Result<Stream> {
+    match addr {
+        Addr::Tcp(hp) => {
+            let s = TcpStream::connect(hp.as_str())?;
+            let _ = s.set_nodelay(true);
+            Ok(Stream::Tcp(s))
+        }
+        #[cfg(unix)]
+        Addr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+        #[cfg(not(unix))]
+        Addr::Unix(_) => Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "unix sockets are not available on this platform",
+        )),
+    }
+}
+
+/// Backoff policy for every connect in the system: exponential from
+/// [`BACKOFF_BASE_MS`] doubling to a [`BACKOFF_CAP_MS`] ceiling, plus up
+/// to 50% seeded jitter so a fleet of workers dialing one peer doesn't
+/// thunder in lockstep.
+pub const BACKOFF_BASE_MS: u64 = 10;
+pub const BACKOFF_CAP_MS: u64 = 400;
+/// Default overall dial deadline.
+pub const CONNECT_DEADLINE: Duration = Duration::from_secs(15);
+
+/// Dial with capped exponential backoff + jitter until `deadline` from
+/// now. Returns the last error (with the address named) on exhaustion.
+pub fn connect_with_backoff(
+    addr: &Addr,
+    deadline: Duration,
+    rng: &mut SplitMix64,
+) -> io::Result<Stream> {
+    let t0 = Instant::now();
+    let mut delay_ms = BACKOFF_BASE_MS;
+    loop {
+        match connect_once(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if t0.elapsed() >= deadline {
+                    return Err(io::Error::new(
+                        e.kind(),
+                        format!("connect to {addr} failed after {deadline:?}: {e}"),
+                    ));
+                }
+                let jitter = rng.next_u64() % (delay_ms / 2 + 1);
+                std::thread::sleep(Duration::from_millis(delay_ms + jitter));
+                delay_ms = (delay_ms * 2).min(BACKOFF_CAP_MS);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(kind: u8, body: &[u8]) -> (u8, Vec<u8>) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, body).unwrap();
+        let mut cur = &buf[..];
+        read_frame(&mut cur).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let (k, b) = roundtrip(K_MSG, b"hello");
+        assert_eq!((k, b.as_slice()), (K_MSG, &b"hello"[..]));
+        // empty body is legal
+        let (k, b) = roundtrip(K_SHUTDOWN, b"");
+        assert_eq!((k, b.len()), (K_SHUTDOWN, 0));
+        // clean EOF at a frame boundary
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty), Err(WireError::Eof)));
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, K_MSG, b"payload").unwrap();
+        // every strict prefix (except the empty one, which is clean EOF)
+        // must yield Truncated — never a panic, never a hang
+        for cut in 1..buf.len() {
+            let mut cur = &buf[..cut];
+            match read_frame(&mut cur) {
+                Err(WireError::Truncated) => {}
+                other => panic!("prefix of {cut} bytes: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_oversize_and_checksum_are_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, K_MSG, b"payload").unwrap();
+        // magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(read_frame(&mut &bad[..]), Err(WireError::BadMagic(_))));
+        // oversized length field
+        let mut bad = buf.clone();
+        bad[5..9].copy_from_slice(&(MAX_BODY + 1).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &bad[..]),
+            Err(WireError::Oversized { .. })
+        ));
+        // flip one body byte -> checksum mismatch
+        let mut bad = buf.clone();
+        bad[10] ^= 0x01;
+        assert!(matches!(
+            read_frame(&mut &bad[..]),
+            Err(WireError::Checksum { .. })
+        ));
+    }
+
+    #[test]
+    fn msg_roundtrip_all_shapes() {
+        for t in [
+            Tensor::zeros(1, 1, 1),
+            Tensor::vector(vec![]),
+            Tensor::vector(vec![1.5, -2.25, f32::MIN_POSITIVE]),
+            Tensor::from_vec(2, 3, 4, (0..24).map(|i| i as f32 * 0.5).collect()),
+        ] {
+            let m = Msg { from: 2, req: 71, stage: 5, phase: 1, tensor: t };
+            let d = decode_msg(&encode_msg(&m)).unwrap();
+            assert_eq!(
+                (d.from, d.req, d.stage, d.phase),
+                (m.from, m.req, m.stage, m.phase)
+            );
+            assert_eq!(d.tensor.data, m.tensor.data, "payload must be bit-exact");
+            assert_eq!(
+                (d.tensor.c, d.tensor.h, d.tensor.w),
+                (m.tensor.c, m.tensor.h, m.tensor.w)
+            );
+        }
+    }
+
+    #[test]
+    fn final_stage_sentinel_survives_the_wire() {
+        let m = Msg {
+            from: 0,
+            req: 3,
+            stage: usize::MAX,
+            phase: 0,
+            tensor: Tensor::vector(vec![1.0]),
+        };
+        let d = decode_msg(&encode_msg(&m)).unwrap();
+        assert_eq!(d.stage, usize::MAX);
+        assert_eq!(stage_to_wire(usize::MAX), u64::MAX);
+        assert_eq!(stage_from_wire(u64::MAX).unwrap(), usize::MAX);
+    }
+
+    #[test]
+    fn msg_with_lying_shape_is_rejected() {
+        let m = Msg {
+            from: 0,
+            req: 0,
+            stage: 0,
+            phase: 0,
+            tensor: Tensor::vector(vec![1.0, 2.0]),
+        };
+        let mut body = encode_msg(&m);
+        // inflate the claimed channel count: payload no longer matches
+        body[21..25].copy_from_slice(&10u32.to_le_bytes());
+        assert!(matches!(decode_msg(&body), Err(WireError::Truncated)));
+        // absurd shape product is rejected before any allocation
+        body[21..25].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_msg(&body), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let m = Msg {
+            from: 0,
+            req: 0,
+            stage: 0,
+            phase: 0,
+            tensor: Tensor::vector(vec![1.0]),
+        };
+        let mut body = encode_msg(&m);
+        body.push(0xAB);
+        assert!(matches!(decode_msg(&body), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
+    fn hello_roundtrip_and_version_gate() {
+        let h = Hello { role: ROLE_PEER, session: 42, epoch: 3, from: 1, to: 2 };
+        assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
+        let mut body = encode_hello(&h);
+        body[0..2].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert!(matches!(decode_hello(&body), Err(WireError::BadVersion(v)) if v == VERSION + 1));
+    }
+
+    #[test]
+    fn hello_reject_roundtrip() {
+        let r = HelloReject { code: REJ_STALE, reason: "epoch 2 < current 3".into() };
+        assert_eq!(decode_hello_reject(&encode_hello_reject(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn request_and_config_roundtrip() {
+        let t = Tensor::from_vec(1, 2, 2, vec![0.0, -1.0, 2.5, 1e-20]);
+        let rf = decode_request(&encode_request(9, &t)).unwrap();
+        assert_eq!(rf.req, 9);
+        assert_eq!(rf.input.data, t.data);
+        let cfg = Json::obj(vec![("epoch", Json::num(2.0)), ("dev", Json::num(1.0))]);
+        let back = decode_config(&encode_config(&cfg)).unwrap();
+        assert_eq!(back.get("epoch").as_usize(), Some(2));
+        assert!(matches!(decode_config(b"{nope"), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
+    fn done_roundtrip_ok_and_all_error_kinds() {
+        let ok = DoneFrame {
+            req: 5,
+            dev: 1,
+            result: Ok(RemoteOut {
+                output: Some(Tensor::vector(vec![3.25])),
+                bytes_sent: 1234,
+                messages_sent: 7,
+                compute_secs: 0.125,
+                arena_grows: 2,
+                peak_scratch_bytes: 4096,
+            }),
+        };
+        let d = decode_done(&encode_done(&ok)).unwrap();
+        assert_eq!((d.req, d.dev), (5, 1));
+        assert_eq!(d.result.unwrap(), ok.result.unwrap());
+
+        for err in [
+            RemoteErr::Killed { dev: 2 },
+            RemoteErr::Deadline { from: 1, stage: 3, req: 8, timeout_ms: 250 },
+            RemoteErr::Other("backend exploded".into()),
+        ] {
+            let f = DoneFrame { req: 1, dev: 0, result: Err(err.clone()) };
+            let d = decode_done(&encode_done(&f)).unwrap();
+            assert_eq!(d.result.unwrap_err(), err);
+        }
+        // no-output report (every non-root device)
+        let f = DoneFrame {
+            req: 2,
+            dev: 2,
+            result: Ok(RemoteOut {
+                output: None,
+                bytes_sent: 0,
+                messages_sent: 0,
+                compute_secs: 0.0,
+                arena_grows: 0,
+                peak_scratch_bytes: 0,
+            }),
+        };
+        assert_eq!(decode_done(&encode_done(&f)).unwrap().result.unwrap().output, None);
+    }
+
+    #[test]
+    fn addr_parsing() {
+        assert_eq!(
+            Addr::parse("127.0.0.1:7070").unwrap(),
+            Addr::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            Addr::parse("tcp:localhost:9000").unwrap(),
+            Addr::Tcp("localhost:9000".into())
+        );
+        assert_eq!(
+            Addr::parse("unix:/tmp/w0.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/w0.sock"))
+        );
+        assert_eq!(
+            Addr::parse("uds:/tmp/w1.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/w1.sock"))
+        );
+        assert!(Addr::parse("").is_err());
+        assert!(Addr::parse("unix:").is_err());
+        assert!(Addr::parse("no-port").is_err());
+        assert!(Addr::parse("host:notaport").is_err());
+        let l = Addr::parse_list("127.0.0.1:1,unix:/a").unwrap();
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn checksum_is_fnv1a32() {
+        // reference value for the empty string and a known vector
+        assert_eq!(checksum(b""), 0x811C_9DC5);
+        assert_eq!(checksum(b"a"), 0xE40C_292C);
+    }
+}

@@ -328,3 +328,114 @@ fn dropped_link_recovers_by_replanning_around_the_peer() {
     assert_eq!(rec.workers_lost, 1, "the muted peer counts as lost");
     assert!(!session.poisoned());
 }
+
+/// Chaos parity over real sockets: the same deterministic kill schedule
+/// shipped to `run_worker` processes-in-threads must make `--recover`
+/// replay bit-identically to the in-process channel transport — the
+/// fault plan crosses the wire in the CONFIG frame, both sides re-plan
+/// onto the same survivors, and sender-matched receives pin the
+/// reduction order.
+#[cfg(unix)]
+#[test]
+fn socket_kill_replays_bit_identically_to_channels() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let addrs: Vec<String> = (0..cluster.m())
+        .map(|i| {
+            let path = format!(
+                "{}/iop-chaos-{}-{}.sock",
+                std::env::temp_dir().display(),
+                std::process::id(),
+                i
+            );
+            let _ = std::fs::remove_file(&path);
+            let addr = format!("unix:{path}");
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                let _ = iop::exec::run_worker(&a);
+            });
+            addr
+        })
+        .collect();
+    for addr in &addrs {
+        let path = addr.strip_prefix("unix:").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while std::os::unix::net::UnixStream::connect(path).is_err() {
+            assert!(Instant::now() < deadline, "worker {addr} never came up");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    let mut remote = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            fault: Some(kill_plan(1, 1)),
+            workers: Some(addrs),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let mut local = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            fault: Some(kill_plan(1, 1)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    for k in 0..4 {
+        let a = remote.infer(input.clone()).unwrap();
+        let b = local.infer(input.clone()).unwrap();
+        assert_eq!(
+            a.output.data, b.output.data,
+            "request {k}: socket recovery diverged from the channel transport"
+        );
+    }
+    assert_eq!(remote.recovery_stats().workers_lost, 1);
+    assert!(remote.recovery_stats().replans >= 1);
+    assert_eq!(remote.alive_devices(), 2);
+    assert!(!remote.poisoned());
+}
+
+/// A shaped link slower than the receive deadline must trip the typed
+/// deadline naming the silent peer — never a hang: the medium models
+/// 30 s of latency per message, the receive gives up after 500 ms.
+#[test]
+fn shaped_link_deadline_names_the_slow_peer() {
+    use iop::config::LinkShape;
+
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: false,
+            recv_timeout: Some(Duration::from_millis(500)),
+            shape: Some(LinkShape::new(30_000.0, 50.0)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let err = session.infer(input).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "deadline did not fire promptly on the shaped link: {:?}",
+        t0.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("device"),
+        "error must name the silent peer: {msg}"
+    );
+    assert!(session.poisoned());
+}

@@ -391,24 +391,115 @@ fn fault_plan_file_and_schema_errors_are_actionable() {
     let _ = std::fs::remove_file(p);
 }
 
+/// Absolute path to a shipped example config (tests run with cwd =
+/// rust/, the configs live at the repo root next to the examples).
+fn cfg(name: &str) -> String {
+    format!("{}/../examples/configs/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
 #[test]
 fn shipped_config_examples_parse() {
     // The configs in examples/configs/ must stay valid.
-    let m = iop::config::load_model("examples/configs/custom_cnn.json").unwrap();
+    let m = iop::config::load_model(&cfg("custom_cnn.json")).unwrap();
     assert_eq!(m.name, "custom_cnn");
-    let c = iop::config::load_cluster("examples/configs/edge_cluster.json").unwrap();
+    let c = iop::config::load_cluster(&cfg("edge_cluster.json")).unwrap();
     assert_eq!(c.m(), 4);
+    let f = iop::config::load_fault_plan(&cfg("chaos_kill.json")).unwrap();
+    assert!(!f.kills.is_empty() && f.recv_timeout_ms.is_some());
+    let d = iop::config::load_deploy(&cfg("shaped_workers.json")).unwrap();
+    assert_eq!(d.workers.len(), 3);
+    let link = d.link.expect("shaped_workers.json ships link parameters");
+    assert!(link.mbps > 0.0 && !link.links.is_empty());
     // and plan + execute end to end
     for s in ["oc", "coedge", "iop"] {
         run(&[
             "exec",
             "--model-file",
-            "examples/configs/custom_cnn.json",
+            &cfg("custom_cnn.json"),
             "--cluster-file",
-            "examples/configs/edge_cluster.json",
+            &cfg("edge_cluster.json"),
             "--strategy",
             s,
         ])
         .unwrap();
     }
+}
+
+#[test]
+fn serve_shaped_reports_wire_table() {
+    // Shaped transport: the measured-vs-predicted wire table must render
+    // (text + --json) and the run must stay bit-correct under --check.
+    run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--transport",
+        "shaped",
+        "--link-mbps",
+        "10000",
+        "--link-ms",
+        "0.05",
+        "--requests",
+        "6",
+        "--warmup",
+        "1",
+        "--check",
+    ])
+    .unwrap();
+    run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--transport",
+        "shaped",
+        "--link-mbps",
+        "10000",
+        "--link-ms",
+        "0.05",
+        "--requests",
+        "4",
+        "--warmup",
+        "1",
+        "--json",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn serve_flag_contradictions_are_rejected() {
+    // --link-* without the shaped transport is a typo, not a request.
+    assert!(run(&[
+        "serve", "--model", "lenet", "--strategy", "iop", "--link-mbps", "10", "--requests", "2",
+    ])
+    .is_err());
+    // shaping models the link in-process; real workers contradict it.
+    assert!(run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--transport",
+        "shaped",
+        "--workers",
+        "unix:/tmp/a.sock,unix:/tmp/b.sock,unix:/tmp/c.sock",
+        "--requests",
+        "2",
+    ])
+    .is_err());
+    // --expect-recovery is a gate on the recovery path; without
+    // --recover there is no such path to gate.
+    assert!(run(&[
+        "serve", "--model", "lenet", "--strategy", "iop", "--expect-recovery", "--requests", "2",
+    ])
+    .is_err());
+    // malformed worker addresses fail before any socket is dialed.
+    assert!(run(&[
+        "exec", "--model", "lenet", "--strategy", "iop", "--workers", "nonsense",
+    ])
+    .is_err());
 }

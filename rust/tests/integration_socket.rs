@@ -1,0 +1,282 @@
+//! Integration: the real socket transport. UDS loopback fleets of
+//! `run_worker` listeners (the same loop the `iop worker` subcommand
+//! runs) driven through the public session API, wire-level handshake
+//! refusals against a live worker, and a multi-process SIGKILL chaos
+//! run against the shipped binary.
+#![cfg(unix)]
+
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use iop::device::profiles;
+use iop::exec::weights::model_input;
+use iop::exec::wire;
+use iop::exec::{ExecSession, SessionOptions};
+use iop::model::zoo;
+use iop::partition::Strategy;
+
+static FLEET: AtomicUsize = AtomicUsize::new(0);
+
+/// Unique socket path for one worker of one test fleet.
+fn sock_path(tag: &str, i: usize) -> String {
+    format!(
+        "{}/iop-it-{}-{}-{}-{}.sock",
+        std::env::temp_dir().display(),
+        std::process::id(),
+        tag,
+        FLEET.fetch_add(1, Ordering::Relaxed),
+        i
+    )
+}
+
+fn wait_listening(addr: &str) {
+    let path = addr.strip_prefix("unix:").unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if UnixStream::connect(path).is_ok() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "worker {addr} never came up");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Spawn `n` in-process worker listeners on fresh UDS paths and wait
+/// until every one of them accepts connections.
+fn spawn_fleet(tag: &str, n: usize) -> Vec<String> {
+    let addrs: Vec<String> = (0..n)
+        .map(|i| {
+            let path = sock_path(tag, i);
+            let _ = std::fs::remove_file(&path);
+            let addr = format!("unix:{path}");
+            let a = addr.clone();
+            thread::spawn(move || {
+                let _ = iop::exec::run_worker(&a);
+            });
+            addr
+        })
+        .collect();
+    for addr in &addrs {
+        wait_listening(addr);
+    }
+    addrs
+}
+
+/// Distributed inference across worker sockets must be bit-identical to
+/// the in-process channel transport — same model, same deterministic
+/// weights, same plan, every strategy. One fleet serves all three
+/// sessions back to back (workers are stateless across sessions).
+#[test]
+fn uds_session_is_bit_identical_to_in_process_channels() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let addrs = spawn_fleet("bitid", cluster.m());
+    for strategy in Strategy::all() {
+        let mut remote = ExecSession::open(
+            &model,
+            &cluster,
+            strategy,
+            SessionOptions {
+                workers: Some(addrs.clone()),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let mut local =
+            ExecSession::open(&model, &cluster, strategy, SessionOptions::default()).unwrap();
+        for req in 0..3 {
+            let r = remote.infer(input.clone()).unwrap();
+            let l = local.infer(input.clone()).unwrap();
+            assert_eq!(
+                r.output.max_abs_diff(&l.output),
+                0.0,
+                "{} request {req} diverged over the socket",
+                strategy.name()
+            );
+        }
+    }
+}
+
+/// Handshake and framing abuse against a live worker: every malformed
+/// opener draws a prompt typed refusal (or clean close), never a hang
+/// or a worker crash — proven by running a real session over the same
+/// fleet afterwards.
+#[test]
+fn handshake_refuses_bad_version_and_unready_mesh_links() {
+    let addrs = spawn_fleet("refuse", 3);
+    let path = addrs[0].strip_prefix("unix:").unwrap().to_string();
+    let connect = || {
+        let s = UnixStream::connect(&path).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s
+    };
+
+    // Wrong protocol version: REJ_BAD naming the offered version.
+    let mut s = connect();
+    let mut body = Vec::new();
+    body.extend_from_slice(&999u16.to_le_bytes());
+    body.push(wire::ROLE_CTRL);
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.extend_from_slice(&0u64.to_le_bytes());
+    body.extend_from_slice(&wire::CTRL_FROM.to_le_bytes());
+    body.extend_from_slice(&0u32.to_le_bytes());
+    wire::write_frame(&mut s, wire::K_HELLO, &body).unwrap();
+    let (kind, rb) = wire::read_frame(&mut s).unwrap();
+    assert_eq!(kind, wire::K_HELLO_REJECT);
+    let rej = wire::decode_hello_reject(&rb).unwrap();
+    assert_eq!(rej.code, wire::REJ_BAD);
+    assert!(rej.reason.contains("version 999"), "{}", rej.reason);
+
+    // Mesh hello before any session exists: the retryable refusal the
+    // dialer's backoff loop understands.
+    let mut s = connect();
+    let h = wire::Hello {
+        role: wire::ROLE_PEER,
+        session: 1,
+        epoch: 0,
+        from: 1,
+        to: 0,
+    };
+    wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&h)).unwrap();
+    let (kind, rb) = wire::read_frame(&mut s).unwrap();
+    assert_eq!(kind, wire::K_HELLO_REJECT);
+    assert_eq!(
+        wire::decode_hello_reject(&rb).unwrap().code,
+        wire::REJ_NOT_READY
+    );
+
+    // Garbage bytes: a prompt REJ_BAD, not a hang.
+    let mut s = connect();
+    s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    let t0 = Instant::now();
+    let (kind, rb) = wire::read_frame(&mut s).unwrap();
+    assert_eq!(kind, wire::K_HELLO_REJECT);
+    assert_eq!(wire::decode_hello_reject(&rb).unwrap().code, wire::REJ_BAD);
+    assert!(t0.elapsed() < Duration::from_secs(5), "refusal was not prompt");
+
+    // Mid-frame disconnect: a header promising 100 body bytes, then 10
+    // bytes and a close. The worker must shrug it off.
+    let mut s = connect();
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&wire::MAGIC.to_le_bytes());
+    buf.push(wire::K_HELLO);
+    buf.extend_from_slice(&100u32.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 10]);
+    s.write_all(&buf).unwrap();
+    drop(s);
+
+    // The fleet is still healthy: a real session over it still matches
+    // the in-process run bit for bit.
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let mut remote = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            workers: Some(addrs.clone()),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let mut local =
+        ExecSession::open(&model, &cluster, Strategy::Iop, SessionOptions::default()).unwrap();
+    let r = remote.infer(input.clone()).unwrap();
+    let l = local.infer(input).unwrap();
+    assert_eq!(r.output.max_abs_diff(&l.output), 0.0);
+}
+
+/// Kill -9 a worker *process* mid-run: the coordinator must detect the
+/// broken socket, re-plan onto the surviving processes, replay, and
+/// answer every request correctly. Runs the shipped binary end to end;
+/// `--expect-recovery` makes "the kill missed the window" a failure
+/// instead of a silent pass, and `--check` verifies every response.
+#[test]
+fn sigkilled_worker_process_triggers_recovery_over_sockets() {
+    let bin = env!("CARGO_BIN_EXE_iop");
+    let paths: Vec<String> = (0..3).map(|i| sock_path("proc", i)).collect();
+    let mut workers: Vec<Child> = paths
+        .iter()
+        .map(|p| {
+            let _ = std::fs::remove_file(p);
+            Command::new(bin)
+                .args(["worker", "--listen", &format!("unix:{p}")])
+                .stdout(Stdio::null())
+                .stderr(Stdio::piped())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for p in &paths {
+        wait_listening(&format!("unix:{p}"));
+    }
+
+    // Watch the victim's stderr for its "serving session" line so the
+    // SIGKILL lands inside the serving window, not during bring-up
+    // (killing a worker mid-handshake would fail session open instead
+    // of exercising recovery).
+    let victim_stderr = workers[1].stderr.take().unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    thread::spawn(move || {
+        use std::io::{BufRead, BufReader};
+        let mut sent = false;
+        for line in BufReader::new(victim_stderr).lines() {
+            let Ok(line) = line else { break };
+            if !sent && line.contains("serving session") {
+                let _ = tx.send(());
+                sent = true;
+            }
+            // keep draining so the worker never blocks on a full pipe
+        }
+    });
+
+    let workers_flag = paths
+        .iter()
+        .map(|p| format!("unix:{p}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut serve = Command::new(bin)
+        .args([
+            "serve",
+            "--model",
+            "vgg_mini",
+            "--strategy",
+            "iop",
+            "--backend",
+            "compiled",
+            "--workers",
+            &workers_flag,
+            "--requests",
+            "64",
+            "--warmup",
+            "0",
+            "--recover",
+            "--check",
+            "--expect-recovery",
+            "--recv-timeout-ms",
+            "2000",
+        ])
+        .spawn()
+        .unwrap();
+
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("worker 1 never reported serving");
+    thread::sleep(Duration::from_millis(100));
+    workers[1].kill().unwrap(); // SIGKILL on unix
+
+    let status = serve.wait().unwrap();
+    for w in &mut workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+    assert!(
+        status.success(),
+        "serve --recover --expect-recovery exited {status}"
+    );
+}
