@@ -341,6 +341,70 @@ fn main() {
         }
     }
 
+    // Cross-request batching: the same closed loop at inflight=8 with
+    // the batcher coalescing up to 8 requests into one batched GEMM
+    // dispatch per stage, vs batch=1, over ONE warmed session
+    // (set_batch_policy swaps the policy between runs, so the pair
+    // differs only in coalescing). Samples are seconds per request.
+    println!("\n== cross-request batching throughput (closed loop, one warmed session) ==");
+    {
+        let model = zoo::vgg_mini();
+        let plan = pipeline::plan(&model, &cluster, Strategy::Iop);
+        let (serve_reqs, serve_reps) = if quick { (24, 3) } else { (96, 5) };
+        let mut session =
+            ExecSession::new(&model, &plan, Backend::Compiled { threads: 1 }).unwrap();
+        let input = model_input(&model);
+        for batch in [1usize, 8] {
+            session.set_batch_policy(batch, None);
+            // Unsampled warm run per policy: the batched path grows its
+            // own pack/output arenas on first contact.
+            serve_closed_loop(
+                &mut session,
+                &ServeOptions {
+                    requests: 8,
+                    inflight: 8,
+                    warmup: 0,
+                },
+                |_| input.clone(),
+                |_, _| {},
+            )
+            .unwrap();
+            let name = format!("serve vgg_mini IOP (compiled, steady, batch={batch})");
+            let mut samples = Vec::with_capacity(serve_reps);
+            for _ in 0..serve_reps {
+                let r = serve_closed_loop(
+                    &mut session,
+                    &ServeOptions {
+                        requests: serve_reqs,
+                        inflight: 8,
+                        warmup: 0,
+                    },
+                    |_| input.clone(),
+                    |_, _| {},
+                )
+                .unwrap();
+                samples.push(r.wall_secs / serve_reqs as f64);
+            }
+            let st = Stats::from_samples(samples);
+            println!(
+                "bench {name:<52} median {:>12}/req ({:>8} req/s)  n={}",
+                iop::util::units::fmt_secs(st.median),
+                format!("{:.1}", st.per_sec()),
+                st.samples
+            );
+            rep.add(&name, st);
+        }
+        if let (Some(one), Some(batched)) = (
+            rep.get("serve vgg_mini IOP (compiled, steady, batch=1)"),
+            rep.get("serve vgg_mini IOP (compiled, steady, batch=8)"),
+        ) {
+            println!(
+                "batched throughput vs batch=1 (compiled, inflight 8): {:.2}x",
+                one.median / batched.median
+            );
+        }
+    }
+
     let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     let out = std::env::var("BENCH_HOTPATH_OUT").unwrap_or_else(|_| default_out.to_string());
     rep.write(&out).expect("writing BENCH_hotpath.json");

@@ -7,7 +7,8 @@ use super::args::Args;
 use crate::device::{Cluster, Device};
 use crate::config::{FaultPlan, LinkShape};
 use crate::exec::{
-    serve_closed_loop, Backend, ExecSession, ServeOptions, SessionOptions, ThroughputReport,
+    serve_closed_loop, serve_open_loop, Backend, ExecSession, OpenLoopOptions, ServeOptions,
+    SessionOptions, ThroughputReport,
 };
 use crate::metrics::{latency_table, memory_table, stage_breakdown_table, ModelComparison};
 use crate::model::{zoo, Model};
@@ -560,10 +561,44 @@ fn serve_run(
     Ok((rep, max_diff))
 }
 
+/// One measured open-loop run (Poisson arrivals at `rate` req/s);
+/// returns the report plus the max deviation from `expect`.
+#[allow(clippy::too_many_arguments)]
+fn serve_open_run(
+    session: &mut ExecSession,
+    requests: usize,
+    depth: usize,
+    warmup: usize,
+    rate: f64,
+    seed: u64,
+    input: &Tensor,
+    expect: Option<&Tensor>,
+) -> Result<(ThroughputReport, f32)> {
+    let mut max_diff = 0.0f32;
+    let rep = serve_open_loop(
+        session,
+        &OpenLoopOptions {
+            requests,
+            inflight: depth,
+            warmup,
+            rate,
+            seed,
+        },
+        |_| input.clone(),
+        |_, r| {
+            if let Some(e) = expect {
+                max_diff = max_diff.max(r.output.max_abs_diff(e));
+            }
+        },
+    )?;
+    Ok((rep, max_diff))
+}
+
 fn serve_row(t: &mut Table, label: &str, rep: &ThroughputReport) {
     t.row(vec![
         label.to_string(),
         rep.inflight.to_string(),
+        format!("{:.1}/{}", rep.batch_occupancy_mean, rep.batch_occupancy_max),
         format!("{:.1}", rep.requests_per_sec),
         fmt_secs(rep.latency_p50),
         fmt_secs(rep.latency_p95),
@@ -577,11 +612,16 @@ fn serve_row(t: &mut Table, label: &str, rep: &ThroughputReport) {
     ]);
 }
 
-/// `iop serve` — closed-loop pipelined serving throughput over one
-/// persistent session (`--compare-serial` measures inflight=1 vs
+/// `iop serve` — serving throughput over one persistent session.
+/// Closed loop by default (`--compare-serial` measures inflight=1 vs
 /// inflight=K back to back on the same warmed session;
 /// `--assert-pipelined` additionally fails the run — after one noise
-/// retry — if pipelined throughput drops below serial).
+/// retry — if pipelined throughput drops below serial). `--batch B`
+/// coalesces in-flight requests into batched GEMM dispatches
+/// (`--batch-wait-ms` bounds the queue wait; `--assert-batched` gates
+/// batched ≥ batch-1 req/s on the same warmed session).
+/// `--arrival-rate R` switches to an open-loop Poisson load generator
+/// offering R req/s (`--arrival-seed` fixes the schedule).
 pub fn serve(a: &mut Args) -> Result<()> {
     let model = model_from_args(a)?;
     let strategy = strategy_from_args(a)?;
@@ -611,6 +651,11 @@ pub fn serve(a: &mut Args) -> Result<()> {
     let check = a.bool("check");
     let assert_pipelined = a.bool("assert-pipelined");
     let compare = a.bool("compare-serial") || assert_pipelined;
+    let batch = a.usize_or("batch", 1)?;
+    let batch_wait_ms = f64_opt(a, "batch-wait-ms")?;
+    let arrival_rate = f64_opt(a, "arrival-rate")?;
+    let arrival_seed = a.usize_or("arrival-seed", 17)? as u64;
+    let assert_batched = a.bool("assert-batched");
     let json = a.bool("json");
     a.finish()?;
     if requests == 0 {
@@ -622,6 +667,33 @@ pub fn serve(a: &mut Args) -> Result<()> {
     if expect_recovery && !recover {
         bail!("--expect-recovery requires --recover");
     }
+    if batch == 0 {
+        bail!("--batch must be > 0 (1 disables batching)");
+    }
+    if batch_wait_ms.is_some_and(|ms| !ms.is_finite() || ms < 0.0) {
+        bail!("--batch-wait-ms must be >= 0 milliseconds");
+    }
+    if arrival_rate.is_some_and(|r| !r.is_finite() || r <= 0.0) {
+        bail!("--arrival-rate must be a positive requests/second");
+    }
+    if arrival_rate.is_some() && compare {
+        bail!("--compare-serial/--assert-pipelined are closed-loop comparisons; drop --arrival-rate");
+    }
+    if assert_batched {
+        if batch < 2 {
+            bail!("--assert-batched needs --batch >= 2 (there is nothing to compare at batch 1)");
+        }
+        if compare {
+            bail!("--assert-batched and --compare-serial/--assert-pipelined are separate comparisons; pick one");
+        }
+        if arrival_rate.is_some() {
+            bail!(
+                "--assert-batched is a closed-loop gate (open-loop throughput is \
+                 arrival-bound, so batch policy cannot change it); drop --arrival-rate"
+            );
+        }
+    }
+    let batch_wait = batch_wait_ms.map(|ms| std::time::Duration::from_secs_f64(ms * 1e-3));
     let (workers, shape) = match transport.as_str() {
         "channel" => {
             if link_ms.is_some() || link_mbps.is_some() {
@@ -672,6 +744,8 @@ pub fn serve(a: &mut Args) -> Result<()> {
             recv_timeout,
             workers,
             shape: shape.clone(),
+            batch,
+            batch_wait,
             ..SessionOptions::default()
         },
     )?;
@@ -705,6 +779,48 @@ pub fn serve(a: &mut Args) -> Result<()> {
         }
         runs.push(("serial", serial));
         runs.push(("pipelined", piped));
+    } else if let Some(rate) = arrival_rate {
+        let (rep, d) = serve_open_run(
+            &mut session,
+            requests,
+            inflight,
+            warmup,
+            rate,
+            arrival_seed,
+            &input,
+            expect.as_ref(),
+        )?;
+        max_diff = d;
+        runs.push(("open-loop", rep));
+    } else if assert_batched {
+        // Batch-1 first (it also absorbs the shared warm-up), batched
+        // second on the same warmed session — the pair differs only in
+        // batch policy, so the ratio isolates the coalescing win.
+        session.set_batch_policy(1, None);
+        let (mut one, d1) =
+            serve_run(&mut session, requests, inflight, warmup, &input, expect.as_ref())?;
+        session.set_batch_policy(batch, batch_wait);
+        let (mut batched, d2) =
+            serve_run(&mut session, requests, inflight, 0, &input, expect.as_ref())?;
+        max_diff = d1.max(d2);
+        if batched.requests_per_sec < one.requests_per_sec {
+            // One full re-measure absorbs scheduler noise before we
+            // call it a regression (mirrors --assert-pipelined).
+            session.set_batch_policy(1, None);
+            let (s2, d3) = serve_run(&mut session, requests, inflight, 0, &input, expect.as_ref())?;
+            session.set_batch_policy(batch, batch_wait);
+            let (b2, d4) =
+                serve_run(&mut session, requests, inflight, 0, &input, expect.as_ref())?;
+            max_diff = max_diff.max(d3).max(d4);
+            if b2.requests_per_sec > batched.requests_per_sec {
+                batched = b2;
+            }
+            if s2.requests_per_sec > one.requests_per_sec {
+                one = s2;
+            }
+        }
+        runs.push(("batch-1", one));
+        runs.push(("batched", batched));
     } else {
         let (rep, d) =
             serve_run(&mut session, requests, inflight, warmup, &input, expect.as_ref())?;
@@ -738,6 +854,7 @@ pub fn serve(a: &mut Args) -> Result<()> {
             ("model", Json::str(model.name.clone())),
             ("strategy", Json::str(strategy.name())),
             ("backend", Json::str(backend_tag(&backend))),
+            ("batch", Json::num(batch as f64)),
         ];
         fields.extend(kernel_fields(session.kernel_isa()));
         fields.extend([
@@ -757,23 +874,53 @@ pub fn serve(a: &mut Args) -> Result<()> {
         }
         println!("{}", Json::obj(fields).to_string_pretty());
     } else {
+        let mode = if arrival_rate.is_some() {
+            "open loop"
+        } else {
+            "closed loop"
+        };
         println!(
-            "{} / {} on {} devices [{}, kernel {}, conv {}]: closed loop, {} requests/run",
+            "{} / {} on {} devices [{}, kernel {}, conv {}]: {}, {} requests/run",
             model.name,
             strategy.name(),
             cluster.m(),
             backend_tag(&backend),
             kernel_desc_str(session.kernel_isa()),
             session.conv_lowering(),
+            mode,
             requests,
         );
         let mut t = Table::new(&[
-            "run", "inflight", "req/s", "p50", "p95", "p99", "busy/dev", "moved",
+            "run", "inflight", "batch", "req/s", "p50", "p95", "p99", "busy/dev", "moved",
         ]);
         for (label, rep) in &runs {
             serve_row(&mut t, label, rep);
         }
         println!("{}", t.render());
+        if batch > 1 {
+            for (label, rep) in &runs {
+                println!(
+                    "batching [{}]: {} batches, occupancy mean {:.1} / max {}, \
+                     flushes {} full / {} timer / {} drain",
+                    label,
+                    rep.batches,
+                    rep.batch_occupancy_mean,
+                    rep.batch_occupancy_max,
+                    rep.flushes_full,
+                    rep.flushes_timer,
+                    rep.flushes_drain,
+                );
+            }
+        }
+        if let Some(rate) = arrival_rate {
+            let rep = &runs.last().unwrap().1;
+            println!(
+                "open loop: offered {:.1} req/s, achieved {:.1} req/s ({:.0}% of offered)",
+                rate,
+                rep.requests_per_sec,
+                100.0 * rep.requests_per_sec / rate,
+            );
+        }
         if let Some((stages, fin, has_overrides)) = &wire_table {
             let rep = &runs.last().unwrap().1;
             let ratio = |meas: f64, pred: f64| {
@@ -866,6 +1013,23 @@ pub fn serve(a: &mut Args) -> Result<()> {
         if assert_pipelined && piped_rps < serial_rps {
             bail!(
                 "pipelined throughput fell below serial: {piped_rps:.1} < {serial_rps:.1} req/s"
+            );
+        }
+    }
+    if assert_batched {
+        let one_rps = runs[0].1.requests_per_sec;
+        let batched_rps = runs[1].1.requests_per_sec;
+        if !json {
+            println!(
+                "batched speedup (batch {} vs 1 at inflight {}): {:.2}x",
+                batch,
+                inflight,
+                batched_rps / one_rps
+            );
+        }
+        if batched_rps < one_rps {
+            bail!(
+                "batched throughput fell below batch=1: {batched_rps:.1} < {one_rps:.1} req/s"
             );
         }
     }

@@ -62,15 +62,31 @@ COMMANDS:
   serve      --model M --strategy S [--backend ...] [--threads N]
              [--requests N] [--inflight K] [--warmup W] [--check]
              [--compare-serial] [--assert-pipelined]
+             [--batch B] [--batch-wait-ms W] [--assert-batched]
+             [--arrival-rate R] [--arrival-seed S]
              [--fault-plan F.json] [--recover]
-                                 Closed-loop pipelined serving throughput
-                                 over one persistent session: req/s,
-                                 p50/p95/p99 latency, per-device busy.
+                                 Pipelined serving throughput over one
+                                 persistent session: req/s, p50/p95/p99
+                                 latency, per-device busy, batch
+                                 occupancy + flush split.
                                  --compare-serial measures inflight=1 vs
                                  inflight=K on the same warmed session;
                                  --assert-pipelined fails if pipelined
                                  throughput drops below serial; --check
-                                 verifies every response vs the oracle
+                                 verifies every response vs the oracle.
+                                 --batch B coalesces up to B in-flight
+                                 requests into one batched GEMM dispatch
+                                 per stage (bit-identical outputs;
+                                 in-process transports only);
+                                 --batch-wait-ms bounds the queue wait
+                                 of a partial batch [5]; --assert-batched
+                                 fails if batch=B throughput drops below
+                                 batch=1 on the same warmed session.
+                                 --arrival-rate R switches the driver to
+                                 an open-loop Poisson load generator
+                                 offering R req/s (reports offered vs
+                                 achieved; --arrival-seed fixes the
+                                 arrival schedule) [closed loop]
   emit-plans [--models a,b] --out FILE
                                  Export canonical plans as JSON for the
                                  python AOT shard compiler

@@ -104,6 +104,42 @@ pub fn stage_compute_wall(
         .fold(0.0, f64::max)
 }
 
+/// Per-device compute seconds for one stage serving a cross-request
+/// batch of `batch` members. The batch axis multiplies the workload
+/// linearly: every member runs the identical slice, and the batched
+/// GEMM concatenates member columns without changing per-element FLOPs
+/// — so the model is `batch × stage_compute_secs`. (The *throughput*
+/// win from batching is not modeled here: it comes from tile occupancy
+/// and amortized weight-pack reuse, which the FLOP count is blind to.
+/// The serve harness measures it instead.)
+pub fn stage_compute_secs_batched(
+    model: &Model,
+    cluster: &Cluster,
+    stage: Stage,
+    slices: &[SliceKind],
+    batch: usize,
+) -> Vec<f64> {
+    let b = batch.max(1) as f64;
+    stage_compute_secs(model, cluster, stage, slices)
+        .into_iter()
+        .map(|s| s * b)
+        .collect()
+}
+
+/// Wall-clock compute phase for a batched stage: `max_j` of
+/// [`stage_compute_secs_batched`].
+pub fn stage_compute_wall_batched(
+    model: &Model,
+    cluster: &Cluster,
+    stage: Stage,
+    slices: &[SliceKind],
+    batch: usize,
+) -> f64 {
+    stage_compute_secs_batched(model, cluster, stage, slices, batch)
+        .into_iter()
+        .fold(0.0, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +184,30 @@ mod tests {
         // equal work, slowest device defines the wall
         assert!((stage_compute_wall(&m, &c, st, &slices) - per[2]).abs() < 1e-15);
         assert!(per[2] > per[0]);
+    }
+
+    #[test]
+    fn batched_cost_scales_linearly_and_normalizes_zero() {
+        let m = zoo::lenet();
+        let c = profiles::heterogeneous();
+        let st = m.stages()[0];
+        let slices = vec![
+            SliceKind::Oc { start: 0, count: 2 },
+            SliceKind::Oc { start: 2, count: 2 },
+            SliceKind::Oc { start: 4, count: 2 },
+        ];
+        let one = stage_compute_secs(&m, &c, st, &slices);
+        let four = stage_compute_secs_batched(&m, &c, st, &slices, 4);
+        for (a, b) in one.iter().zip(&four) {
+            assert!((b - 4.0 * a).abs() < 1e-15);
+        }
+        let wall = stage_compute_wall(&m, &c, st, &slices);
+        assert!((stage_compute_wall_batched(&m, &c, st, &slices, 4) - 4.0 * wall).abs() < 1e-15);
+        // batch 0 is normalized to 1 (a dispatched batch has ≥ 1 member)
+        assert_eq!(
+            stage_compute_secs_batched(&m, &c, st, &slices, 0),
+            stage_compute_secs_batched(&m, &c, st, &slices, 1)
+        );
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Cross-request batching policy for the serve engine.
+//!
+//! `ExecSession::submit` enqueues requests here instead of dispatching
+//! them one by one; a batch is flushed to the workers when it reaches
+//! `max_batch` members (`FlushReason::Full`), when the oldest member
+//! has waited `max_wait` (`FlushReason::Timer`, checked from the
+//! session's pump loop), or on demand when forward progress requires
+//! it (`FlushReason::Drain`: backpressure with nothing in flight, or a
+//! `collect` of a still-queued request). The policy bounds tail
+//! latency: no admitted request waits in the queue longer than
+//! `max_wait` before its batch is on the wire.
+//!
+//! The batcher holds no worker state — it is a pure queue + policy +
+//! occupancy/flush accounting, unit-testable without a session.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+use super::harness::ReqId;
+
+/// Default time a lone request may wait for batch-mates before the
+/// timer flush sends it anyway.
+pub const DEFAULT_BATCH_WAIT: Duration = Duration::from_millis(5);
+
+/// Why a batch left the queue. Reported per flush in `BatchStats` so
+/// the max-wait/max-batch policy is tunable from the serve report: a
+/// run dominated by timer flushes wants a longer wait or more traffic;
+/// one dominated by full flushes is saturating `max_batch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The queue reached `max_batch` members.
+    Full,
+    /// The oldest member's `max_wait` deadline passed.
+    Timer,
+    /// Forced flush: backpressure or collect needed the queue emptied.
+    Drain,
+}
+
+/// Flush policy: batches are at most `max_batch` members and no member
+/// queues longer than `max_wait`.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self {
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self::new(1, DEFAULT_BATCH_WAIT)
+    }
+}
+
+/// Cumulative batching counters for a session, snapshot by the serve
+/// harness before/after a run and reported as deltas.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    /// Batches dispatched to the workers.
+    pub batches: u64,
+    /// Total member requests across all dispatched batches.
+    pub members: u64,
+    /// Largest single batch dispatched.
+    pub occupancy_max: usize,
+    /// Flushes triggered by reaching `max_batch`.
+    pub flushes_full: u64,
+    /// Flushes triggered by the `max_wait` deadline.
+    pub flushes_timer: u64,
+    /// Forced flushes (backpressure / collect drain).
+    pub flushes_drain: u64,
+}
+
+impl BatchStats {
+    /// Mean members per dispatched batch (0 when nothing dispatched).
+    pub fn occupancy_mean(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.members as f64 / self.batches as f64
+        }
+    }
+
+    /// Counter-wise difference vs an earlier snapshot of the same
+    /// session (occupancy_max is not monotone across a snapshot, so it
+    /// is carried from `self` — callers reset-by-delta over whole runs
+    /// where the run's max dominates).
+    pub fn delta_since(&self, before: &BatchStats) -> BatchStats {
+        BatchStats {
+            batches: self.batches - before.batches,
+            members: self.members - before.members,
+            occupancy_max: self.occupancy_max,
+            flushes_full: self.flushes_full - before.flushes_full,
+            flushes_timer: self.flushes_timer - before.flushes_timer,
+            flushes_drain: self.flushes_drain - before.flushes_drain,
+        }
+    }
+}
+
+/// One admitted-but-not-yet-dispatched request.
+pub(crate) struct QueuedReq {
+    pub req: ReqId,
+    pub input: Arc<Tensor>,
+    pub enqueued_at: Instant,
+}
+
+/// FIFO of admitted requests plus the flush policy and accounting.
+pub(crate) struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<QueuedReq>,
+    stats: BatchStats,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            queue: VecDeque::new(),
+            stats: BatchStats::default(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Replace the policy. Only legal with an empty queue (the session
+    /// calls this between runs, e.g. for an in-run batched-vs-batch-1
+    /// comparison on the same warmed workers).
+    pub fn set_policy(&mut self, policy: BatchPolicy) {
+        assert!(
+            self.queue.is_empty(),
+            "batch policy change with {} queued requests",
+            self.queue.len()
+        );
+        self.policy = policy;
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn contains(&self, req: ReqId) -> bool {
+        self.queue.iter().any(|q| q.req == req)
+    }
+
+    /// Admit a request; returns true when the queue just reached
+    /// `max_batch` and the caller should flush with `FlushReason::Full`.
+    pub fn push(&mut self, req: ReqId, input: Arc<Tensor>, now: Instant) -> bool {
+        self.queue.push_back(QueuedReq {
+            req,
+            input,
+            enqueued_at: now,
+        });
+        self.queue.len() >= self.policy.max_batch
+    }
+
+    /// The instant at which the oldest queued member must be flushed
+    /// (`None` when the queue is empty). The session's pump loop
+    /// shortens its supervise tick to this deadline.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue
+            .front()
+            .map(|q| q.enqueued_at + self.policy.max_wait)
+    }
+
+    /// True when the oldest member has waited out `max_wait`.
+    pub fn timer_due(&self, now: Instant) -> bool {
+        self.deadline().is_some_and(|d| d <= now)
+    }
+
+    /// Remove and return up to `max_batch` members, recording the
+    /// flush in the stats. Empty queue → empty vec, nothing recorded.
+    pub fn take(&mut self, reason: FlushReason) -> Vec<QueuedReq> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        if n == 0 {
+            return Vec::new();
+        }
+        let members: Vec<QueuedReq> = self.queue.drain(..n).collect();
+        self.stats.batches += 1;
+        self.stats.members += n as u64;
+        self.stats.occupancy_max = self.stats.occupancy_max.max(n);
+        match reason {
+            FlushReason::Full => self.stats.flushes_full += 1,
+            FlushReason::Timer => self.stats.flushes_timer += 1,
+            FlushReason::Drain => self.stats.flushes_drain += 1,
+        }
+        members
+    }
+
+    /// Drop every queued member without recording a flush. Used by
+    /// recovery: queued requests are already in the session's pending
+    /// map and are re-dispatched by the replay loop under their
+    /// original ReqIds.
+    pub fn clear(&mut self) {
+        self.queue.clear();
+    }
+
+    pub fn stats(&self) -> BatchStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input() -> Arc<Tensor> {
+        Arc::new(Tensor::vector(vec![1.0, 2.0]))
+    }
+
+    #[test]
+    fn full_flush_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(4, Duration::from_secs(60)));
+        let now = Instant::now();
+        for req in 0..3 {
+            assert!(!b.push(req, input(), now), "not full at {} members", req + 1);
+        }
+        assert!(b.push(3, input(), now), "4th member must trip the full flush");
+        let members = b.take(FlushReason::Full);
+        assert_eq!(members.len(), 4);
+        assert_eq!(
+            members.iter().map(|q| q.req).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "FIFO order preserved"
+        );
+        assert!(b.is_empty());
+        let st = b.stats();
+        assert_eq!((st.batches, st.members, st.occupancy_max), (1, 4, 4));
+        assert_eq!((st.flushes_full, st.flushes_timer, st.flushes_drain), (1, 0, 0));
+    }
+
+    #[test]
+    fn batch_of_one_is_immediately_full() {
+        // max_batch=1 (the default / legacy mode) dispatches on every
+        // push — no request ever waits on the timer.
+        let mut b = Batcher::new(BatchPolicy::new(1, Duration::from_secs(60)));
+        assert!(b.push(0, input(), Instant::now()));
+        assert_eq!(b.take(FlushReason::Full).len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn timer_flush_after_max_wait() {
+        let wait = Duration::from_millis(10);
+        let mut b = Batcher::new(BatchPolicy::new(8, wait));
+        let t0 = Instant::now();
+        b.push(0, input(), t0);
+        b.push(1, input(), t0 + Duration::from_millis(3));
+        // Deadline tracks the OLDEST member: a trickle of later
+        // arrivals must not extend request 0's wait.
+        assert_eq!(b.deadline(), Some(t0 + wait));
+        assert!(!b.timer_due(t0 + Duration::from_millis(9)));
+        assert!(b.timer_due(t0 + wait));
+        let members = b.take(FlushReason::Timer);
+        assert_eq!(members.len(), 2, "timer flush takes every queued member");
+        assert_eq!(b.stats().flushes_timer, 1);
+    }
+
+    #[test]
+    fn trickle_queue_wait_is_bounded_by_max_wait() {
+        // Open-loop trickle: arrivals spaced wider than max_wait, so
+        // every batch is a timer flush of a single member. Under the
+        // pump discipline (flush as soon as timer_due), no member's
+        // queue wait exceeds max_wait — this is the p99 bound.
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(BatchPolicy::new(8, wait));
+        let t0 = Instant::now();
+        let mut worst = Duration::ZERO;
+        for i in 0..16 {
+            let arrive = t0 + Duration::from_millis(20 * i);
+            b.push(i as ReqId, input(), arrive);
+            // The pump flushes at exactly the deadline.
+            let flush_at = b.deadline().unwrap();
+            assert!(b.timer_due(flush_at));
+            for q in b.take(FlushReason::Timer) {
+                worst = worst.max(flush_at - q.enqueued_at);
+            }
+        }
+        assert!(worst <= wait, "queue wait {worst:?} exceeded max_wait {wait:?}");
+        let st = b.stats();
+        assert_eq!(st.flushes_timer, 16);
+        assert_eq!(st.occupancy_max, 1);
+        assert!((st.occupancy_mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_flush_takes_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(8, Duration::from_secs(60)));
+        let now = Instant::now();
+        b.push(7, input(), now);
+        b.push(8, input(), now);
+        assert!(b.contains(7) && b.contains(8) && !b.contains(9));
+        let members = b.take(FlushReason::Drain);
+        assert_eq!(members.len(), 2);
+        assert_eq!(b.stats().flushes_drain, 1);
+        assert_eq!(b.take(FlushReason::Drain).len(), 0, "empty take records nothing");
+        assert_eq!(b.stats().batches, 1);
+    }
+
+    #[test]
+    fn oversized_queue_flushes_in_max_batch_chunks() {
+        let mut b = Batcher::new(BatchPolicy::new(3, Duration::from_secs(60)));
+        let now = Instant::now();
+        for req in 0..5 {
+            b.push(req, input(), now);
+        }
+        assert_eq!(b.take(FlushReason::Full).len(), 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.take(FlushReason::Drain).len(), 2);
+    }
+
+    #[test]
+    fn occupancy_stats_mean_and_max() {
+        let mut b = Batcher::new(BatchPolicy::new(4, Duration::from_secs(60)));
+        let now = Instant::now();
+        for req in 0..4 {
+            b.push(req, input(), now);
+        }
+        b.take(FlushReason::Full);
+        for req in 4..6 {
+            b.push(req, input(), now);
+        }
+        b.take(FlushReason::Timer);
+        let st = b.stats();
+        assert_eq!(st.occupancy_max, 4);
+        assert!((st.occupancy_mean() - 3.0).abs() < 1e-12);
+        let delta = st.delta_since(&BatchStats::default());
+        assert_eq!(delta.members, 6);
+    }
+
+    #[test]
+    fn clear_drops_queue_without_recording_a_flush() {
+        let mut b = Batcher::new(BatchPolicy::new(4, Duration::from_secs(60)));
+        b.push(0, input(), Instant::now());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.stats().batches, 0);
+    }
+}

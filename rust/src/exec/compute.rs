@@ -34,7 +34,10 @@ use crate::tensor::slice::*;
 use crate::tensor::Tensor;
 
 use super::backend::ComputeBackend;
-use super::prepack::{run_conv, run_dense, CompiledDevice, CompiledKernel, ScratchArena};
+use super::prepack::{
+    run_conv, run_conv_batched, run_dense, run_dense_batched, CompiledDevice, CompiledKernel,
+    ScratchArena,
+};
 use super::weights::WeightBundle;
 
 /// Run the passthrough tail of a stage (everything after the head op),
@@ -308,6 +311,84 @@ pub fn compute_slice_compiled(
     }
 }
 
+/// Batched counterpart of [`compute_slice_compiled`]: one member input
+/// per coalesced request, all sharing this device's slice geometry.
+/// Conv slices run the whole batch as ONE prepacked GEMM
+/// ([`run_conv_batched`] — the output-pixel axis grows `batch×`);
+/// dense slices and stage tails stay per-member, preserving the
+/// bit-identical-to-batch-1 contract. Returns one output per member,
+/// in member order.
+#[allow(clippy::too_many_arguments)]
+pub fn compute_slice_compiled_batch(
+    model: &Model,
+    cd: &CompiledDevice,
+    si: usize,
+    stage: Stage,
+    slice: &SliceKind,
+    inputs: &[&Tensor],
+    window_rows: Option<(isize, isize)>,
+    arena: &mut ScratchArena,
+) -> Vec<Tensor> {
+    let backend = ComputeBackend::Fast {
+        threads: cd.threads,
+    };
+    match (cd.stages[si].as_ref(), slice) {
+        (_, SliceKind::Idle) => inputs.iter().map(|_| Tensor::vector(vec![])).collect(),
+
+        (
+            CompiledKernel::Conv(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => run_conv_batched(k, inputs, cd.threads, arena)
+            .into_iter()
+            .map(|y| run_tail_with(backend, model, stage, y, false))
+            .collect(),
+        (CompiledKernel::Conv(k), SliceKind::Ic { count, .. }) => {
+            debug_assert!(
+                inputs.iter().all(|t| t.c == *count),
+                "IC slice expects its channel block"
+            );
+            run_conv_batched(k, inputs, cd.threads, arena)
+        }
+        (CompiledKernel::Conv(k), SliceKind::Rows { start, count }) => {
+            let (lo, hi) = input_rows_needed(model, stage, *start, *start + *count);
+            let built: Vec<Tensor>;
+            let windows: Vec<&Tensor> = match window_rows {
+                Some((wlo, whi)) => {
+                    debug_assert_eq!((wlo, whi), (lo, hi), "window mismatch");
+                    inputs.to_vec() // already windows
+                }
+                None => {
+                    built = inputs.iter().map(|t| act_rows_window(t, lo, hi)).collect();
+                    built.iter().collect()
+                }
+            };
+            run_conv_batched(k, &windows, cd.threads, arena)
+                .into_iter()
+                .map(|y| run_tail_with(backend, model, stage, y, true)) // defer flatten
+                .collect()
+        }
+
+        (
+            CompiledKernel::Dense(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => run_dense_batched(k, inputs, cd.threads)
+            .into_iter()
+            .map(|y| run_tail_with(backend, model, stage, y, false))
+            .collect(),
+        (CompiledKernel::Dense(k), SliceKind::Ic { count, .. }) => {
+            debug_assert!(
+                inputs.iter().all(|t| t.len() == *count),
+                "IC slice expects its feature block"
+            );
+            run_dense_batched(k, inputs, cd.threads)
+        }
+
+        (kernel, slice) => {
+            unreachable!("compiled kernel {kernel:?} incompatible with slice {slice:?}")
+        }
+    }
+}
+
 /// Centralized inference over a compiled model
 /// ([`CompiledDevice::compile_centralized`]), reusing the caller's
 /// scratch arena across requests — the serving-loop shape.
@@ -392,6 +473,82 @@ mod tests {
                 "diff={}",
                 got.max_abs_diff(&expect)
             );
+        }
+    }
+
+    #[test]
+    fn batched_compiled_slice_bit_identical_to_per_member() {
+        use crate::device::profiles;
+        use crate::exec::prepack::CompiledPlan;
+        use crate::partition::Strategy;
+        // Every (strategy, stage, device) slice a plan can produce must
+        // give bitwise-equal member outputs batched vs one at a time —
+        // this is the per-stage form of the session-level equivalence.
+        let m = zoo::vgg_mini();
+        let cluster = profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        let x0 = model_input(&m);
+        let members: Vec<Tensor> = (0..3)
+            .map(|i| {
+                let mut t = x0.clone();
+                for v in &mut t.data {
+                    *v *= 1.0 + 0.05 * i as f32;
+                }
+                t
+            })
+            .collect();
+        for strategy in Strategy::all() {
+            let plan = crate::pipeline::plan(&m, &cluster, strategy);
+            let cp = CompiledPlan::compile(&m, &plan, &wb, 1);
+            // Stage 0 slices consume the model input directly; deeper
+            // stages need the comm protocol to build their inputs, which
+            // the session-level tests cover.
+            let sp = &plan.stages[0];
+            for dev in 0..plan.m {
+                let slice = &sp.slices[dev];
+                if matches!(slice, SliceKind::Ic { .. }) {
+                    // Ic expects the member's channel shard, which the
+                    // comm protocol produces; the prepack-level batched
+                    // test covers Ic kernels directly.
+                    continue;
+                }
+                let inputs: Vec<&Tensor> = members.iter().collect();
+                let per_member: Vec<Tensor> = {
+                    let mut arena = ScratchArena::new();
+                    members
+                        .iter()
+                        .map(|t| {
+                            compute_slice_compiled(
+                                &m,
+                                &cp.devices[dev],
+                                0,
+                                sp.stage,
+                                slice,
+                                t,
+                                None,
+                                &mut arena,
+                            )
+                        })
+                        .collect()
+                };
+                let mut arena = ScratchArena::new();
+                let batched = compute_slice_compiled_batch(
+                    &m,
+                    &cp.devices[dev],
+                    0,
+                    sp.stage,
+                    slice,
+                    &inputs,
+                    None,
+                    &mut arena,
+                );
+                assert_eq!(
+                    batched,
+                    per_member,
+                    "{} dev {dev} slice {slice:?}",
+                    strategy.name()
+                );
+            }
         }
     }
 

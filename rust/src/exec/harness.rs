@@ -39,7 +39,10 @@ use crate::tensor::slice::{
 use crate::tensor::Tensor;
 
 use super::backend::ComputeBackend;
-use super::compute::{apply_tail_with, compute_slice_compiled, compute_slice_with};
+use super::batcher::{BatchPolicy, BatchStats, Batcher, FlushReason, DEFAULT_BATCH_WAIT};
+use super::compute::{
+    apply_tail_with, compute_slice_compiled, compute_slice_compiled_batch, compute_slice_with,
+};
 use super::pjrt::PjrtRunner;
 use super::prepack::{CompiledDevice, CompiledPlan, ScratchArena};
 use super::remote::{spawn_remote_workers, RemoteCtx};
@@ -117,6 +120,19 @@ pub struct SessionOptions {
     /// exclusive with `workers` — shape a real network with `tc`, not a
     /// model.
     pub shape: Option<LinkShape>,
+    /// Cross-request batching: coalesce up to this many in-flight
+    /// requests into one batched dispatch per worker (0 or 1 — the
+    /// default — disables). Batched conv stages run one GEMM whose
+    /// output-pixel axis grows `batch×`, at the microkernels' efficient
+    /// tile occupancy instead of per-request matvec-shaped work; outputs
+    /// stay bit-identical to batch=1. In-process sessions only
+    /// (excludes [`SessionOptions::workers`], whose wire protocol
+    /// frames one request per message).
+    pub batch: usize,
+    /// How long a non-full batch may wait for more members before the
+    /// timer flush dispatches it anyway (default [`DEFAULT_BATCH_WAIT`]).
+    /// This bounds the queueing latency any request pays to batching.
+    pub batch_wait: Option<Duration>,
 }
 
 /// Default deadline for a single tagged receive. Generous, so healthy
@@ -366,6 +382,46 @@ impl Runner {
         }
     }
 
+    /// Batched [`Runner::run_slice`]: one input per batch member, all
+    /// sharing this device's (stage, slice) geometry; one output per
+    /// member, in member order. The compiled backend lowers the whole
+    /// batch into one GEMM over a column-concatenated B operand
+    /// ([`compute_slice_compiled_batch`]) — outputs stay bit-identical
+    /// to batch=1 because each output element's K-accumulation order is
+    /// invariant to its column position in the batch. Every other
+    /// backend (and singleton batches) runs the exact per-member path.
+    #[allow(clippy::too_many_arguments)]
+    fn run_slice_batch(
+        &mut self,
+        model: &Model,
+        wb: &WeightBundle,
+        plan: &Plan,
+        si: usize,
+        dev: usize,
+        slice: &SliceKind,
+        inputs: &[&Tensor],
+        window: Option<(isize, isize)>,
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() > 1 {
+            if let Runner::Compiled { shard, arena } = self {
+                return Ok(compute_slice_compiled_batch(
+                    model,
+                    shard,
+                    si,
+                    plan.stages[si].stage,
+                    slice,
+                    inputs,
+                    window,
+                    arena,
+                ));
+            }
+        }
+        inputs
+            .iter()
+            .map(|t| self.run_slice(model, wb, plan, si, dev, slice, t, window))
+            .collect()
+    }
+
     fn run_tail(
         &mut self,
         model: &Model,
@@ -481,6 +537,22 @@ struct PendingReq {
 /// `(req, from, stage, phase)` and mailboxes buffer by tag, so worker A
 /// can be deep into request `r+1` while worker B still finishes `r`.
 ///
+/// # Cross-request batching
+///
+/// A session opened with [`SessionOptions::batch`] > 1 coalesces
+/// submitted requests into batches (max size `batch`, max queue wait
+/// `batch_wait`) and dispatches each batch as one [`Control::Request`]:
+/// members cross the wire together (one message per peer per phase —
+/// one latency charge instead of `batch`) and share each conv stage's
+/// GEMM, whose output-pixel axis grows `batch×` — per-request
+/// matvec-shaped work becomes full-tile-occupancy GEMM work. Outputs
+/// are **bit-identical** to batch=1 (accumulation order per output
+/// element never depends on batch position). A batch is flushed when
+/// full, when the oldest member has queued [`SessionOptions::batch_wait`]
+/// (checked from the pump, which shortens its tick to the deadline), or
+/// on demand when forward progress requires it — so request latency
+/// includes queue wait, and that wait is bounded by `batch_wait`.
+///
 /// # Supervised recovery
 ///
 /// A session opened with [`ExecSession::open`] and
@@ -564,10 +636,23 @@ pub struct ExecSession {
     /// every in-flight request has been failed fast.
     poisoned: bool,
     recovery: RecoveryStats,
+    /// Cross-request batching queue + policy ([`SessionOptions::batch`]).
+    /// Submitted requests sit here (already in `pending`, clock running)
+    /// until a full/timer/drain flush dispatches the batch to every
+    /// worker as one [`Control::Request`]. `max_batch = 1` flushes on
+    /// every submit — the unbatched fast path.
+    batcher: Batcher,
 }
 
 pub(crate) enum Control {
-    Request { req: ReqId, input: Arc<Tensor> },
+    /// One coalesced batch of requests, member-ordered (singletons are
+    /// one-element vectors — the unbatched sessions' messages). Workers
+    /// process every member in one pass over the plan, so the whole
+    /// batch shares each stage's wire messages and conv GEMM.
+    Request {
+        reqs: Vec<ReqId>,
+        inputs: Vec<Arc<Tensor>>,
+    },
     Shutdown,
 }
 
@@ -655,7 +740,17 @@ impl ExecSession {
                     "the PJRT backend cannot run on remote workers (artifact paths are local)"
                 ));
             }
+            if opts.batch > 1 {
+                return Err(anyhow!(
+                    "cross-request batching is in-process only: the remote wire \
+                     protocol frames one REQUEST per request (drop --batch)"
+                ));
+            }
         }
+        let batch_policy = BatchPolicy::new(
+            opts.batch,
+            opts.batch_wait.unwrap_or(DEFAULT_BATCH_WAIT),
+        );
         let fault = match opts.fault {
             Some(f) => {
                 f.validate(m)?;
@@ -754,6 +849,7 @@ impl ExecSession {
             aborted: HashMap::new(),
             poisoned: false,
             recovery: RecoveryStats::default(),
+            batcher: Batcher::new(batch_policy),
         })
     }
 
@@ -841,6 +937,53 @@ impl ExecSession {
         self.max_inflight = max_inflight.max(1);
     }
 
+    /// Current cross-request batching policy
+    /// ([`SessionOptions::batch`] / [`SessionOptions::batch_wait`],
+    /// normalized at session creation).
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.batcher.policy()
+    }
+
+    /// Replace the batching policy. `max_batch` is clamped to ≥ 1 and a
+    /// `None` wait means [`DEFAULT_BATCH_WAIT`]. Only legal while no
+    /// request is queued in the batcher (panics otherwise) — collect
+    /// everything first; useful for measuring batched vs batch=1
+    /// throughput over one warmed session.
+    pub fn set_batch_policy(&mut self, max_batch: usize, max_wait: Option<Duration>) {
+        self.batcher.set_policy(BatchPolicy::new(
+            max_batch,
+            max_wait.unwrap_or(DEFAULT_BATCH_WAIT),
+        ));
+    }
+
+    /// Cumulative batching counters since session creation: batches
+    /// dispatched, member occupancy, and the full/timer/drain flush
+    /// split. All zeros until the first dispatch; serve reports diff
+    /// before/after snapshots ([`BatchStats::delta_since`]).
+    pub fn batch_stats(&self) -> BatchStats {
+        self.batcher.stats()
+    }
+
+    /// Instant at which the oldest batch-queued request must be flushed
+    /// (`None` when nothing is queued). Open-loop drivers cap their
+    /// between-arrival sleeps at this deadline so a queued batch never
+    /// outwaits its `max_wait` just because the driver is idle.
+    pub fn batch_deadline(&self) -> Option<Instant> {
+        self.batcher.deadline()
+    }
+
+    /// Non-blocking progress tick: flush the batch queue if its
+    /// max-wait timer has expired. The blocking paths (`submit` under
+    /// backpressure, `collect*`) already run this inside [`pump`]; an
+    /// open-loop driver sleeping between arrivals holds neither, so it
+    /// calls `poll` on wake to keep the max-wait bound honest.
+    pub fn poll(&mut self) -> Result<()> {
+        if self.batcher.timer_due(Instant::now()) {
+            self.dispatch(FlushReason::Timer)?;
+        }
+        Ok(())
+    }
+
     /// Submit one inference over the live worker set and return its
     /// request id without waiting for the result. The input is shared
     /// with every worker via one `Arc` (no per-device tensor clones).
@@ -849,6 +992,13 @@ impl ExecSession {
     /// queue and free their window slot before collection).
     pub fn submit(&mut self, input: Tensor) -> Result<ReqId> {
         while self.pending.len() >= self.max_inflight && !self.poisoned {
+            // Deadlock guard: if every pending request is still queued in
+            // the batcher, no worker holds any work and no completion can
+            // ever free the window — flush the partial batch first. This
+            // is what makes `max_inflight < max_batch` safe.
+            if !self.batcher.is_empty() && self.pending.len() == self.batcher.len() {
+                self.dispatch(FlushReason::Drain)?;
+            }
             self.pump()?;
         }
         // Checked *after* the backpressure drain: pump may have just
@@ -863,6 +1013,9 @@ impl ExecSession {
         let req = self.next_req;
         self.next_req += 1;
         let input = Arc::new(input);
+        // The pending entry (and its latency clock) starts at enqueue,
+        // not dispatch: time spent waiting for batch-mates is real
+        // latency the request pays and the report must show.
         self.pending.insert(
             req,
             PendingReq {
@@ -875,14 +1028,30 @@ impl ExecSession {
                 last_finish: None,
             },
         );
+        if self.batcher.push(req, input, Instant::now()) {
+            self.dispatch(FlushReason::Full)?;
+        }
+        Ok(req)
+    }
+
+    /// Flush the batcher once: pop up to `max_batch` queued requests and
+    /// send them to every worker as one [`Control::Request`]. No-op on
+    /// an empty queue (nothing is recorded either).
+    fn dispatch(&mut self, reason: FlushReason) -> Result<()> {
+        let members = self.batcher.take(reason);
+        if members.is_empty() {
+            return Ok(());
+        }
+        let reqs: Vec<ReqId> = members.iter().map(|q| q.req).collect();
+        let inputs: Vec<Arc<Tensor>> = members.iter().map(|q| Arc::clone(&q.input)).collect();
         for c in &self.ctrl_tx {
             c.send(Control::Request {
-                req,
-                input: Arc::clone(&input),
+                reqs: reqs.clone(),
+                inputs: inputs.clone(),
             })
             .map_err(|_| anyhow!("worker hung up"))?;
         }
-        Ok(req)
+        Ok(())
     }
 
     /// Wait for the oldest in-flight request (by submission order) to
@@ -896,6 +1065,12 @@ impl ExecSession {
             if self.pending.is_empty() {
                 return Err(anyhow!("collect with no request in flight"));
             }
+            // Everything pending is still queued in the batcher: waiting
+            // out the batch timer would add nothing but latency — the
+            // caller wants a result now, so flush the partial batch.
+            if !self.batcher.is_empty() && self.pending.len() == self.batcher.len() {
+                self.dispatch(FlushReason::Drain)?;
+            }
             self.pump()?;
         }
     }
@@ -908,6 +1083,12 @@ impl ExecSession {
             }
             if !self.pending.contains_key(&req) {
                 return Err(anyhow!("request {req} is not in flight"));
+            }
+            // The awaited request is still queued in the batcher: flush
+            // rather than sleep out its max_wait (this keeps serial
+            // submit+collect_req — `infer` — batch-policy-agnostic).
+            if self.batcher.contains(req) {
+                self.dispatch(FlushReason::Drain)?;
             }
             self.pump()?;
         }
@@ -929,7 +1110,21 @@ impl ExecSession {
     /// abnormally.
     fn pump(&mut self) -> Result<()> {
         loop {
-            match self.done_rx.recv_timeout(SUPERVISE_TICK) {
+            // Batch timer: the oldest queued member's max_wait expired —
+            // dispatch the partial batch before blocking again. The tick
+            // below is shortened to that deadline, so a queued request
+            // waits at most max_wait even while the pump is parked on
+            // the done channel.
+            if self.batcher.timer_due(Instant::now()) {
+                self.dispatch(FlushReason::Timer)?;
+            }
+            let tick = match self.batcher.deadline() {
+                Some(d) => d
+                    .saturating_duration_since(Instant::now())
+                    .min(SUPERVISE_TICK),
+                None => SUPERVISE_TICK,
+            };
+            match self.done_rx.recv_timeout(tick) {
                 Ok((req, dev, w)) => return self.absorb(req, dev, w),
                 Err(RecvTimeoutError::Timeout) => {
                     let dead = self
@@ -1149,9 +1344,14 @@ impl ExecSession {
         self.recovery.replans += 1;
         // Replay every in-flight request in id order, so the new epoch's
         // per-worker FIFO still processes them in submission order.
+        // Members still queued in the batcher are in `pending` too —
+        // drop the queue (no flush recorded) and let the replay loop
+        // re-dispatch everything, re-chunked to the batch policy, under
+        // the original ReqIds.
+        self.batcher.clear();
         let mut ids: Vec<ReqId> = self.pending.keys().copied().collect();
         ids.sort_unstable();
-        for id in ids {
+        for &id in &ids {
             let p = self.pending.get_mut(&id).unwrap();
             p.remaining = self.m;
             p.output = None;
@@ -1159,11 +1359,17 @@ impl ExecSession {
             p.stats = ExecStats::zeroed(self.orig_m, self.kernel_isa, self.conv_lowering);
             p.replays += 1;
             self.recovery.requests_replayed += 1;
-            let input = Arc::clone(&p.input);
+        }
+        for chunk in ids.chunks(self.batcher.policy().max_batch) {
+            let reqs: Vec<ReqId> = chunk.to_vec();
+            let inputs: Vec<Arc<Tensor>> = chunk
+                .iter()
+                .map(|id| Arc::clone(&self.pending[id].input))
+                .collect();
             for c in &self.ctrl_tx {
                 c.send(Control::Request {
-                    req: id,
-                    input: Arc::clone(&input),
+                    reqs: reqs.clone(),
+                    inputs: inputs.clone(),
                 })
                 .map_err(|_| anyhow!("worker hung up during replay"))?;
             }
@@ -1329,20 +1535,42 @@ pub(crate) fn worker_loop(
     while let Ok(ctl) = ctrl.recv() {
         match ctl {
             Control::Shutdown => break,
-            Control::Request { req, input } => {
+            Control::Request { reqs, inputs } => {
                 let result = match &mut runner {
                     Err(e) => Err(anyhow!("backend init failed: {e:#}")),
-                    Ok(r) => worker_request(dev, &model, &plan, &wb, input, &mut mailbox, r, req),
+                    Ok(r) => {
+                        worker_request(dev, &model, &plan, &wb, &reqs, inputs, &mut mailbox, r)
+                    }
                 };
-                // A fault-plan kill is this device dying: report it once,
-                // then abandon the control queue like a crashed process
-                // (peers' deadlines and the session's supervisor own the
-                // fallout).
-                let killed = result.as_ref().err().is_some_and(|e| {
-                    e.chain().any(|c| c.downcast_ref::<WorkerKilled>().is_some())
-                });
-                if done.send((req, dev, result)).is_err() || killed {
-                    break; // session gone, or this device is dead
+                match result {
+                    Ok(outs) => {
+                        let mut session_gone = false;
+                        for (r, out) in reqs.iter().zip(outs) {
+                            if done.send((*r, dev, Ok(out))).is_err() {
+                                session_gone = true;
+                                break;
+                            }
+                        }
+                        if session_gone {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        // A fault-plan kill is this device dying: report
+                        // it once, then abandon the control queue like a
+                        // crashed process (peers' deadlines and the
+                        // session's supervisor own the fallout). The
+                        // error rides the lead member's id — the
+                        // remaining members stay pending on the session
+                        // side, which recovery replays (whole batch,
+                        // original ids) or poison fails fast.
+                        let killed = e
+                            .chain()
+                            .any(|c| c.downcast_ref::<WorkerKilled>().is_some());
+                        if done.send((reqs[0], dev, Err(e))).is_err() || killed {
+                            break; // session gone, or this device is dead
+                        }
+                    }
                 }
             }
         }
@@ -1364,28 +1592,46 @@ pub(crate) struct WorkerOut {
     pub(crate) finished_at: Instant,
 }
 
+/// Process one coalesced batch of requests end to end: every member
+/// walks the plan together, sharing each stage's wire messages (one
+/// channel-concatenated tensor per peer per phase, tagged with the lead
+/// member's id) and each conv stage's GEMM
+/// ([`Runner::run_slice_batch`]). Member outputs are de-interleaved
+/// back to one [`WorkerOut`] each, bit-identical to running the members
+/// one at a time. A one-member batch follows the exact pre-batching
+/// data path (wire helpers pass singletons through untouched).
 #[allow(clippy::too_many_arguments)]
 fn worker_request(
     dev: usize,
     model: &Model,
     plan: &Plan,
     wb: &WeightBundle,
-    input: Arc<Tensor>,
+    reqs: &[ReqId],
+    inputs: Vec<Arc<Tensor>>,
     mailbox: &mut Mailbox,
     runner: &mut Runner,
-    req: usize,
-) -> Result<WorkerOut> {
+) -> Result<Vec<WorkerOut>> {
     let m = plan.m;
+    let b = reqs.len();
+    debug_assert_eq!(b, inputs.len(), "one input per batch member");
+    let lead = reqs[0];
     let mut compute_secs = 0.0f64;
     mailbox.begin_request();
 
-    let mut local = Local::Full(input);
+    // One local state per member; the batch moves through the plan in
+    // lockstep, so members always agree on the state *kind* (full /
+    // shard / nothing) and only the tensor contents differ.
+    let mut locals: Vec<Local> = inputs.into_iter().map(Local::Full).collect();
 
     for (si, sp) in plan.stages.iter().enumerate() {
-        // Fault hook at every stage boundary: a kill trigger fires here,
-        // mid-request, abandoning the wire protocol exactly where a
-        // crashed device would.
-        mailbox.fault_check(req, si)?;
+        // Fault hook at every stage boundary, fired for EVERY member id:
+        // a kill scheduled at a specific request (`KillSpec::at_req`)
+        // must fire when a batch carries that member, exactly as if the
+        // member were a singleton — mid-batch, abandoning the wire
+        // protocol where a crashed device would.
+        for &r in reqs {
+            mailbox.fault_check(r, si)?;
+        }
 
         // Previous stage context (for shard assembly semantics).
         let prev = si.checked_sub(1).map(|p| &plan.stages[p]);
@@ -1395,65 +1641,71 @@ fn worker_request(
             CommStep::None => {}
             CommStep::AllGather { .. } => {
                 let prev = prev.ok_or_else(|| anyhow!("allgather with no previous stage"))?;
-                // send own shard to everyone
-                if let Local::Shard(t) = &local {
-                    if t.len() > 0 {
-                        for k in 0..m {
-                            if k != dev {
-                                mailbox.send(k, req, si, PHASE_MAIN, t.clone())?;
-                            }
+                // send own member shards to everyone, one batched message
+                let shards = member_shards(&locals);
+                if let Some(parts) = &shards {
+                    let wire = batch_wire(parts.clone());
+                    for k in 0..m {
+                        if k != dev {
+                            mailbox.send(k, lead, si, PHASE_MAIN, wire.clone())?;
                         }
                     }
                 }
-                // receive shards from every non-idle peer, assemble full
-                let mut parts: Vec<(usize, Tensor)> = Vec::new();
-                if let Local::Shard(t) = &local {
-                    if t.len() > 0 {
-                        parts.push((dev, t.clone()));
+                // receive batched shards from every non-idle peer,
+                // unbatch, assemble each member's full activation
+                let mut parts_by_member: Vec<Vec<(usize, Tensor)>> = vec![Vec::new(); b];
+                if let Some(parts) = shards {
+                    for (mi, t) in parts.into_iter().enumerate() {
+                        parts_by_member[mi].push((dev, t));
                     }
                 }
                 for (peer, slice) in prev.slices.iter().enumerate() {
                     if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
                         continue;
                     }
-                    let msg = mailbox.recv_tagged(req, peer, si, PHASE_MAIN)?;
-                    parts.push((peer, msg.tensor));
+                    let msg = mailbox.recv_tagged(lead, peer, si, PHASE_MAIN)?;
+                    for (mi, t) in unbatch_wire(msg.tensor, b).into_iter().enumerate() {
+                        parts_by_member[mi].push((peer, t));
+                    }
                 }
-                parts.sort_by_key(|(from, _)| {
-                    prev.slices[*from].start_key()
-                });
-                let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                let full = assemble(model, prev, &tensors)?;
-                local = Local::Full(Arc::new(full));
+                for (mi, mut parts) in parts_by_member.into_iter().enumerate() {
+                    parts.sort_by_key(|(from, _)| prev.slices[*from].start_key());
+                    let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                    locals[mi] = Local::Full(Arc::new(assemble(model, prev, &tensors)?));
+                }
             }
             CommStep::ReduceBroadcast { root, .. } | CommStep::ReduceTo { root, .. } => {
                 let is_reduce_to = matches!(sp.pre_comm, CommStep::ReduceTo { .. });
                 let prev = prev.ok_or_else(|| anyhow!("reduce with no previous stage"))?;
-                let my_partial = match &local {
-                    Local::Shard(t) if t.len() > 0 => Some(t.clone()),
-                    _ => None,
-                };
+                let my_partial = member_shards(&locals).map(batch_wire);
                 if dev != *root {
                     if let Some(t) = my_partial {
-                        mailbox.send(*root, req, si, PHASE_MAIN, t)?;
+                        mailbox.send(*root, lead, si, PHASE_MAIN, t)?;
                     }
                     if is_reduce_to {
-                        local = Local::Nothing;
+                        for l in locals.iter_mut() {
+                            *l = Local::Nothing;
+                        }
                     } else {
-                        let msg = mailbox.recv_tagged(req, *root, si, PHASE_BCAST)?;
-                        let tailed = runner.run_tail(model, wb, plan, si - 1, &msg.tensor)?;
-                        local = Local::Full(Arc::new(tailed));
+                        let msg = mailbox.recv_tagged(lead, *root, si, PHASE_BCAST)?;
+                        for (mi, t) in unbatch_wire(msg.tensor, b).into_iter().enumerate() {
+                            let tailed = runner.run_tail(model, wb, plan, si - 1, &t)?;
+                            locals[mi] = Local::Full(Arc::new(tailed));
+                        }
                     }
                 } else {
                     // Accumulate in peer-index order (sender-matched
                     // receives), not arrival order — summation order is
-                    // deterministic, so outputs are bit-stable.
+                    // deterministic, so outputs are bit-stable. Adding
+                    // channel-concatenated batches is member-wise
+                    // addition in the same per-element order as
+                    // batch=1, so batching keeps that bit-stability.
                     let mut acc = my_partial;
                     for (peer, slice) in prev.slices.iter().enumerate() {
                         if peer == dev || slice.count() == 0 {
                             continue;
                         }
-                        let msg = mailbox.recv_tagged(req, peer, si, PHASE_MAIN)?;
+                        let msg = mailbox.recv_tagged(lead, peer, si, PHASE_MAIN)?;
                         match &mut acc {
                             Some(a) => a.add_assign(&msg.tensor),
                             None => acc = Some(msg.tensor),
@@ -1463,53 +1715,65 @@ fn worker_request(
                     if !is_reduce_to {
                         for k in 0..m {
                             if k != dev {
-                                mailbox.send(k, req, si, PHASE_BCAST, raw.clone())?;
+                                mailbox.send(k, lead, si, PHASE_BCAST, raw.clone())?;
                             }
                         }
                     }
-                    let tailed = runner.run_tail(model, wb, plan, si - 1, &raw)?;
-                    local = Local::Full(Arc::new(tailed));
+                    for (mi, t) in unbatch_wire(raw, b).into_iter().enumerate() {
+                        let tailed = runner.run_tail(model, wb, plan, si - 1, &t)?;
+                        locals[mi] = Local::Full(Arc::new(tailed));
+                    }
                 }
             }
             CommStep::Gather { root, .. } => {
                 let prev = prev.ok_or_else(|| anyhow!("gather with no previous stage"))?;
                 if dev != *root {
-                    if let Local::Shard(t) = &local {
-                        if t.len() > 0 {
-                            mailbox.send(*root, req, si, PHASE_MAIN, t.clone())?;
-                        }
+                    if let Some(parts) = member_shards(&locals) {
+                        mailbox.send(*root, lead, si, PHASE_MAIN, batch_wire(parts))?;
                     }
-                    local = Local::Nothing;
+                    for l in locals.iter_mut() {
+                        *l = Local::Nothing;
+                    }
                 } else {
-                    let mut parts: Vec<(usize, Tensor)> = Vec::new();
-                    if let Local::Shard(t) = &local {
-                        if t.len() > 0 {
-                            parts.push((dev, t.clone()));
+                    let mut parts_by_member: Vec<Vec<(usize, Tensor)>> = vec![Vec::new(); b];
+                    if let Some(parts) = member_shards(&locals) {
+                        for (mi, t) in parts.into_iter().enumerate() {
+                            parts_by_member[mi].push((dev, t));
                         }
                     }
                     for (peer, slice) in prev.slices.iter().enumerate() {
                         if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
                             continue;
                         }
-                        let msg = mailbox.recv_tagged(req, peer, si, PHASE_MAIN)?;
-                        parts.push((peer, msg.tensor));
+                        let msg = mailbox.recv_tagged(lead, peer, si, PHASE_MAIN)?;
+                        for (mi, t) in unbatch_wire(msg.tensor, b).into_iter().enumerate() {
+                            parts_by_member[mi].push((peer, t));
+                        }
                     }
-                    parts.sort_by_key(|(from, _)| prev.slices[*from].start_key());
-                    let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                    local = Local::Full(Arc::new(assemble(model, prev, &tensors)?));
+                    for (mi, mut parts) in parts_by_member.into_iter().enumerate() {
+                        parts.sort_by_key(|(from, _)| prev.slices[*from].start_key());
+                        let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                        locals[mi] = Local::Full(Arc::new(assemble(model, prev, &tensors)?));
+                    }
                 }
             }
             CommStep::Broadcast { root, .. } => {
                 if dev == *root {
-                    let t = local.full()?;
+                    let parts: Vec<Tensor> = locals
+                        .iter()
+                        .map(|l| l.full().map(Tensor::clone))
+                        .collect::<Result<_>>()?;
+                    let wire = batch_wire(parts);
                     for k in 0..m {
                         if k != dev {
-                            mailbox.send(k, req, si, PHASE_MAIN, t.clone())?;
+                            mailbox.send(k, lead, si, PHASE_MAIN, wire.clone())?;
                         }
                     }
                 } else {
-                    let msg = mailbox.recv_tagged(req, *root, si, PHASE_MAIN)?;
-                    local = Local::Full(Arc::new(msg.tensor));
+                    let msg = mailbox.recv_tagged(lead, *root, si, PHASE_MAIN)?;
+                    for (mi, t) in unbatch_wire(msg.tensor, b).into_iter().enumerate() {
+                        locals[mi] = Local::Full(Arc::new(t));
+                    }
                 }
             }
             CommStep::HaloExchange { .. } => {
@@ -1519,54 +1783,70 @@ fn worker_request(
                 let owned = slices_to_ranges(&prev.slices);
                 let halos = halo_plan(model, sp.stage, &out_ranges, &owned);
                 let my_owned = owned[dev];
-                // send my overlap rows
+                // send my overlap rows: per halo edge, one batched
+                // message carrying every member's fragment
                 for h in halos.iter().filter(|h| h.from == dev) {
-                    let t = match &local {
-                        Local::Shard(t) => t,
-                        _ => return Err(anyhow!("halo from non-sharded state")),
-                    };
-                    let local_start = h.row_start - my_owned.0;
-                    let mut frag = Tensor::zeros(t.c, h.row_count, t.w);
-                    copy_rows_into(&mut frag, 0, t, local_start, h.row_count);
-                    mailbox.send(h.to, req, si, PHASE_MAIN, frag)?;
+                    let mut frags = Vec::with_capacity(b);
+                    for l in &locals {
+                        let t = match l {
+                            Local::Shard(t) => t,
+                            _ => return Err(anyhow!("halo from non-sharded state")),
+                        };
+                        let local_start = h.row_start - my_owned.0;
+                        let mut frag = Tensor::zeros(t.c, h.row_count, t.w);
+                        copy_rows_into(&mut frag, 0, t, local_start, h.row_count);
+                        frags.push(frag);
+                    }
+                    mailbox.send(h.to, lead, si, PHASE_MAIN, batch_wire(frags))?;
                 }
-                // build my input window
+                // build each member's input window
                 let (my_start, my_count) = out_ranges[dev];
                 if my_count > 0 {
                     let (lo, hi) =
                         input_rows_needed(model, sp.stage, my_start, my_start + my_count);
-                    let t = match &local {
-                        Local::Shard(t) => t.clone(),
-                        _ => return Err(anyhow!("halo into non-sharded state")),
-                    };
-                    let mut window = Tensor::zeros(t.c, (hi - lo) as usize, t.w);
-                    // own rows
-                    let own_lo = (my_owned.0 as isize).max(lo);
-                    let own_hi = ((my_owned.0 + my_owned.1) as isize).min(hi);
-                    if own_hi > own_lo {
-                        copy_rows_into(
-                            &mut window,
-                            (own_lo - lo) as usize,
-                            &t,
-                            (own_lo as usize) - my_owned.0,
-                            (own_hi - own_lo) as usize,
-                        );
+                    let mut windows: Vec<Tensor> = Vec::with_capacity(b);
+                    for l in &locals {
+                        let t = match l {
+                            Local::Shard(t) => t,
+                            _ => return Err(anyhow!("halo into non-sharded state")),
+                        };
+                        let mut window = Tensor::zeros(t.c, (hi - lo) as usize, t.w);
+                        // own rows
+                        let own_lo = (my_owned.0 as isize).max(lo);
+                        let own_hi = ((my_owned.0 + my_owned.1) as isize).min(hi);
+                        if own_hi > own_lo {
+                            copy_rows_into(
+                                &mut window,
+                                (own_lo - lo) as usize,
+                                t,
+                                (own_lo as usize) - my_owned.0,
+                                (own_hi - own_lo) as usize,
+                            );
+                        }
+                        windows.push(window);
                     }
                     // received fragments (sender-matched: each inbound
-                    // halo names its peer, so receive exactly that one)
+                    // halo names its peer, so receive exactly that one),
+                    // unbatched into every member's window
                     for h in halos.iter().filter(|h| h.to == dev) {
-                        let msg = mailbox.recv_tagged(req, h.from, si, PHASE_MAIN)?;
-                        copy_rows_into(
-                            &mut window,
-                            (h.row_start as isize - lo) as usize,
-                            &msg.tensor,
-                            0,
-                            h.row_count,
-                        );
+                        let msg = mailbox.recv_tagged(lead, h.from, si, PHASE_MAIN)?;
+                        for (mi, frag) in unbatch_wire(msg.tensor, b).into_iter().enumerate() {
+                            copy_rows_into(
+                                &mut windows[mi],
+                                (h.row_start as isize - lo) as usize,
+                                &frag,
+                                0,
+                                h.row_count,
+                            );
+                        }
                     }
-                    local = Local::Full(Arc::new(window)); // window tensor; used below
+                    for (mi, w) in windows.into_iter().enumerate() {
+                        locals[mi] = Local::Full(Arc::new(w)); // window tensor; used below
+                    }
                 } else {
-                    local = Local::Nothing;
+                    for l in locals.iter_mut() {
+                        *l = Local::Nothing;
+                    }
                 }
             }
         }
@@ -1575,168 +1855,293 @@ fn worker_request(
         let slice = &sp.slices[dev];
         let is_halo_window = matches!(sp.pre_comm, CommStep::HaloExchange { .. });
         let tc = Instant::now();
-        let out = match slice {
+        let outs: Option<Vec<Tensor>> = match slice {
             SliceKind::Idle => None,
             SliceKind::Ic { .. } => {
-                // input is my channel/feature block from the paired stage
-                let cut;
-                let shard: &Tensor = match &local {
-                    Local::Shard(t) => t,
-                    Local::Full(t) => {
+                // input is each member's channel/feature block from the
+                // paired stage
+                match locals.first() {
+                    Some(Local::Shard(_)) => {
+                        let shards: Vec<&Tensor> = locals
+                            .iter()
+                            .map(|l| match l {
+                                Local::Shard(t) => t,
+                                _ => unreachable!("batch members diverged in local state"),
+                            })
+                            .collect();
+                        Some(runner.run_slice_batch(
+                            model, wb, plan, si, dev, slice, &shards, None,
+                        )?)
+                    }
+                    Some(Local::Full(_)) => {
                         // stage_a was executed by a single device (m=1 or
-                        // degenerate split): cut my block locally
+                        // degenerate split): cut each member's block
                         let (start, count) = match slice {
                             SliceKind::Ic { start, count } => (*start, *count),
                             _ => unreachable!(),
                         };
-                        cut = cut_block(model, plan, si, t, start, count)?;
-                        &cut
+                        let cuts: Vec<Tensor> = locals
+                            .iter()
+                            .map(|l| match l {
+                                Local::Full(t) => cut_block(model, plan, si, t, start, count),
+                                _ => unreachable!("batch members diverged in local state"),
+                            })
+                            .collect::<Result<_>>()?;
+                        let refs: Vec<&Tensor> = cuts.iter().collect();
+                        Some(runner.run_slice_batch(model, wb, plan, si, dev, slice, &refs, None)?)
                     }
-                    Local::Nothing => return Err(anyhow!("IC slice with no local data")),
-                };
-                Some(runner.run_slice(model, wb, plan, si, dev, slice, shard, None)?)
+                    _ => return Err(anyhow!("IC slice with no local data")),
+                }
             }
             SliceKind::Rows { start, count } => {
                 let (lo, hi) = input_rows_needed(model, sp.stage, *start, *start + *count);
-                let built;
-                let input_t: &Tensor = if is_halo_window {
-                    local.full()? // window pre-assembled above
+                let built: Vec<Tensor>;
+                let refs: Vec<&Tensor> = if is_halo_window {
+                    // windows pre-assembled above
+                    locals
+                        .iter()
+                        .map(|l| l.full())
+                        .collect::<Result<_>>()?
                 } else {
-                    match &local {
-                        // replicated input: cut the window locally
-                        Local::Full(t) => {
-                            built = act_rows_window(t, lo, hi);
-                            &built
+                    match locals.first() {
+                        // replicated input: cut each member's window
+                        Some(Local::Full(_)) => {
+                            built = locals
+                                .iter()
+                                .map(|l| match l {
+                                    Local::Full(t) => act_rows_window(t, lo, hi),
+                                    _ => unreachable!("batch members diverged in local state"),
+                                })
+                                .collect();
+                            built.iter().collect()
                         }
                         // row-sharded input that needed no halo (this
                         // device owns every row in its receptive field —
                         // e.g. when slow peers were allocated zero rows):
                         // map global window rows to shard-local rows.
-                        Local::Shard(t) => {
-                            let prev = prev.ok_or_else(|| anyhow!("rows with no previous stage"))?;
+                        Some(Local::Shard(_)) => {
+                            let prev =
+                                prev.ok_or_else(|| anyhow!("rows with no previous stage"))?;
                             let (own_start, own_count) = match prev.slices[dev] {
                                 SliceKind::Rows { start, count } => (start, count),
                                 _ => return Err(anyhow!("rows input from non-row shard")),
                             };
-                            let mut window = Tensor::zeros(t.c, (hi - lo) as usize, t.w);
-                            let cov_lo = (own_start as isize).max(lo).max(0);
-                            let cov_hi = ((own_start + own_count) as isize).min(hi);
-                            if cov_hi > cov_lo {
-                                copy_rows_into(
-                                    &mut window,
-                                    (cov_lo - lo) as usize,
-                                    t,
-                                    (cov_lo as usize) - own_start,
-                                    (cov_hi - cov_lo) as usize,
-                                );
-                            }
-                            built = window;
-                            &built
+                            built = locals
+                                .iter()
+                                .map(|l| {
+                                    let t = match l {
+                                        Local::Shard(t) => t,
+                                        _ => unreachable!(
+                                            "batch members diverged in local state"
+                                        ),
+                                    };
+                                    let mut window =
+                                        Tensor::zeros(t.c, (hi - lo) as usize, t.w);
+                                    let cov_lo = (own_start as isize).max(lo).max(0);
+                                    let cov_hi = ((own_start + own_count) as isize).min(hi);
+                                    if cov_hi > cov_lo {
+                                        copy_rows_into(
+                                            &mut window,
+                                            (cov_lo - lo) as usize,
+                                            t,
+                                            (cov_lo as usize) - own_start,
+                                            (cov_hi - cov_lo) as usize,
+                                        );
+                                    }
+                                    window
+                                })
+                                .collect();
+                            built.iter().collect()
                         }
-                        Local::Nothing => return Err(anyhow!("rows slice with no local data")),
+                        _ => return Err(anyhow!("rows slice with no local data")),
                     }
                 };
-                Some(runner.run_slice(
+                Some(runner.run_slice_batch(
                     model,
                     wb,
                     plan,
                     si,
                     dev,
                     slice,
-                    input_t,
+                    &refs,
                     Some((lo, hi)),
                 )?)
             }
             SliceKind::Oc { .. } | SliceKind::Full | SliceKind::Replicate => {
-                Some(runner.run_slice(model, wb, plan, si, dev, slice, local.full()?, None)?)
+                let fulls: Vec<&Tensor> = locals
+                    .iter()
+                    .map(|l| l.full())
+                    .collect::<Result<_>>()?;
+                Some(runner.run_slice_batch(model, wb, plan, si, dev, slice, &fulls, None)?)
             }
         };
         compute_secs += tc.elapsed().as_secs_f64();
 
-        local = match (out, slice) {
-            (Some(t), SliceKind::Full | SliceKind::Replicate) => Local::Full(Arc::new(t)),
-            (Some(t), _) => Local::Shard(t),
-            (None, _) => match local {
-                // idle devices keep replicated data if they have it
-                Local::Full(t) => Local::Full(t),
-                _ => Local::Nothing,
-            },
-        };
+        match outs {
+            Some(outs) => {
+                for (mi, t) in outs.into_iter().enumerate() {
+                    locals[mi] = match slice {
+                        SliceKind::Full | SliceKind::Replicate => Local::Full(Arc::new(t)),
+                        _ => Local::Shard(t),
+                    };
+                }
+            }
+            None => {
+                for l in locals.iter_mut() {
+                    // idle devices keep replicated data if they have it
+                    if !matches!(l, Local::Full(_)) {
+                        *l = Local::Nothing;
+                    }
+                }
+            }
+        }
     }
 
     // ---------- final assembly on device 0 ----------
     let last = plan.stages.last().unwrap();
-    let output = match &plan.final_comm {
-        CommStep::None => match &local {
-            Local::Full(t) if dev == 0 => Some(t.as_ref().clone()),
-            _ if dev == 0 => return Err(anyhow!("device 0 lacks the final output")),
-            _ => None,
-        },
+    let outputs: Vec<Option<Tensor>> = match &plan.final_comm {
+        CommStep::None => locals
+            .iter()
+            .map(|l| match l {
+                Local::Full(t) if dev == 0 => Ok(Some(t.as_ref().clone())),
+                _ if dev == 0 => Err(anyhow!("device 0 lacks the final output")),
+                _ => Ok(None),
+            })
+            .collect::<Result<_>>()?,
         CommStep::Gather { root, .. } => {
             if dev != *root {
-                if let Local::Shard(t) = &local {
-                    if t.len() > 0 {
-                        mailbox.send(*root, req, FINAL_STAGE, PHASE_MAIN, t.clone())?;
-                    }
+                if let Some(parts) = member_shards(&locals) {
+                    mailbox.send(*root, lead, FINAL_STAGE, PHASE_MAIN, batch_wire(parts))?;
                 }
-                None
+                vec![None; b]
             } else {
-                let mut parts: Vec<(usize, Tensor)> = Vec::new();
-                if let Local::Shard(t) = &local {
-                    if t.len() > 0 {
-                        parts.push((dev, t.clone()));
+                let mut parts_by_member: Vec<Vec<(usize, Tensor)>> = vec![Vec::new(); b];
+                if let Some(parts) = member_shards(&locals) {
+                    for (mi, t) in parts.into_iter().enumerate() {
+                        parts_by_member[mi].push((dev, t));
                     }
                 }
                 for (peer, slice) in last.slices.iter().enumerate() {
                     if peer == dev || slice.count() == 0 && !matches!(slice, SliceKind::Full) {
                         continue;
                     }
-                    let msg = mailbox.recv_tagged(req, peer, FINAL_STAGE, PHASE_MAIN)?;
-                    parts.push((peer, msg.tensor));
+                    let msg = mailbox.recv_tagged(lead, peer, FINAL_STAGE, PHASE_MAIN)?;
+                    for (mi, t) in unbatch_wire(msg.tensor, b).into_iter().enumerate() {
+                        parts_by_member[mi].push((peer, t));
+                    }
                 }
-                parts.sort_by_key(|(from, _)| last.slices[*from].start_key());
-                let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                Some(assemble(model, last, &tensors)?)
+                let mut outs = Vec::with_capacity(b);
+                for mut parts in parts_by_member {
+                    parts.sort_by_key(|(from, _)| last.slices[*from].start_key());
+                    let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                    outs.push(Some(assemble(model, last, &tensors)?));
+                }
+                outs
             }
         }
         CommStep::ReduceTo { root, .. } => {
-            let my_partial = match &local {
-                Local::Shard(t) if t.len() > 0 => Some(t.clone()),
-                _ => None,
-            };
+            let my_partial = member_shards(&locals).map(batch_wire);
             if dev != *root {
                 if let Some(t) = my_partial {
-                    mailbox.send(*root, req, FINAL_STAGE, PHASE_MAIN, t)?;
+                    mailbox.send(*root, lead, FINAL_STAGE, PHASE_MAIN, t)?;
                 }
-                None
+                vec![None; b]
             } else {
                 let mut acc = my_partial;
                 for (peer, slice) in last.slices.iter().enumerate() {
                     if peer == dev || slice.count() == 0 {
                         continue;
                     }
-                    let msg = mailbox.recv_tagged(req, peer, FINAL_STAGE, PHASE_MAIN)?;
+                    let msg = mailbox.recv_tagged(lead, peer, FINAL_STAGE, PHASE_MAIN)?;
                     match &mut acc {
                         Some(a) => a.add_assign(&msg.tensor),
                         None => acc = Some(msg.tensor),
                     }
                 }
                 let raw = acc.ok_or_else(|| anyhow!("no partials in final reduce"))?;
-                Some(runner.run_tail(model, wb, plan, plan.stages.len() - 1, &raw)?)
+                let mut outs = Vec::with_capacity(b);
+                for t in unbatch_wire(raw, b) {
+                    outs.push(Some(runner.run_tail(
+                        model,
+                        wb,
+                        plan,
+                        plan.stages.len() - 1,
+                        &t,
+                    )?));
+                }
+                outs
             }
         }
         other => return Err(anyhow!("unsupported final comm {:?}", other.tag())),
     };
 
-    Ok(WorkerOut {
-        output,
-        bytes_sent: mailbox.bytes_sent,
-        messages_sent: mailbox.messages_sent,
-        compute_secs,
-        arena_grows: runner.arena_grows(),
-        peak_scratch_bytes: runner.arena_peak_bytes(),
-        finished_at: Instant::now(),
-    })
+    // All members share the batch's finish instant (they completed
+    // together). Per-request wire/compute counters ride on the lead
+    // member only, so session totals — which sum over requests — count
+    // each batch's traffic once; the arena gauges (cumulative since
+    // session creation, assigned not summed) are reported on every
+    // member.
+    let finished_at = Instant::now();
+    Ok(outputs
+        .into_iter()
+        .enumerate()
+        .map(|(i, output)| WorkerOut {
+            output,
+            bytes_sent: if i == 0 { mailbox.bytes_sent } else { 0 },
+            messages_sent: if i == 0 { mailbox.messages_sent } else { 0 },
+            compute_secs: if i == 0 { compute_secs } else { 0.0 },
+            arena_grows: runner.arena_grows(),
+            peak_scratch_bytes: runner.arena_peak_bytes(),
+            finished_at,
+        })
+        .collect())
+}
+
+/// Concatenate equal-shaped member tensors along the channel axis into
+/// one wire tensor `(b·c, h, w)` — with C-major layout this is a pure
+/// data append, and it works uniformly for feature vectors (`(len, 1,
+/// 1)`). A one-member batch passes its tensor through untouched, so
+/// singleton batches put exactly the pre-batching bytes on the wire.
+fn batch_wire(mut parts: Vec<Tensor>) -> Tensor {
+    if parts.len() == 1 {
+        parts.pop().unwrap()
+    } else {
+        concat_channels(&parts)
+    }
+}
+
+/// Inverse of [`batch_wire`]: split a batched wire tensor back into `b`
+/// per-member tensors. `b == 1` moves the tensor through untouched.
+fn unbatch_wire(t: Tensor, b: usize) -> Vec<Tensor> {
+    if b == 1 {
+        return vec![t];
+    }
+    debug_assert_eq!(t.c % b, 0, "batched wire tensor channel count");
+    let c = t.c / b;
+    let chunk = c * t.h * t.w;
+    (0..b)
+        .map(|i| Tensor::from_vec(c, t.h, t.w, t.data[i * chunk..(i + 1) * chunk].to_vec()))
+        .collect()
+}
+
+/// Every member's shard tensor, cloned, when this device holds
+/// non-empty shards (`None` otherwise — idle or empty allocations,
+/// mirroring the unbatched `if let Local::Shard(t) … t.len() > 0`
+/// guards). Members move through the plan in lockstep, so they always
+/// agree on the state kind.
+fn member_shards(locals: &[Local]) -> Option<Vec<Tensor>> {
+    match locals.first() {
+        Some(Local::Shard(t)) if t.len() > 0 => Some(
+            locals
+                .iter()
+                .map(|l| match l {
+                    Local::Shard(t) => t.clone(),
+                    _ => unreachable!("batch members diverged in local state"),
+                })
+                .collect(),
+        ),
+        _ => None,
+    }
 }
 
 /// Assemble a full activation from ordered shards of `prev` stage.
@@ -2043,6 +2448,174 @@ mod tests {
         let a = via_new.infer(input.clone()).unwrap();
         let b = via_open.infer(input).unwrap();
         assert_eq!(a.output, b.output);
+    }
+
+    /// A per-request input that differs member to member, so batching
+    /// tests catch de-interleaving mistakes (member i's output swapped
+    /// with member j's would still "look right" on identical inputs).
+    fn scaled_input(m: &crate::model::Model, i: usize) -> Tensor {
+        let mut t = model_input(m);
+        let s = 1.0 + i as f32 * 0.125;
+        for v in t.data.iter_mut() {
+            *v *= s;
+        }
+        t
+    }
+
+    #[test]
+    fn batched_outputs_bit_identical_to_batch_1() {
+        // The batching contract: coalescing requests into batched wire
+        // messages and batched GEMMs must not change a single bit of
+        // any member's output, under every strategy (all comm patterns)
+        // on the compiled backend.
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        for s in Strategy::all() {
+            let mut serial = ExecSession::open(
+                &m,
+                &cluster,
+                s,
+                SessionOptions {
+                    backend: Backend::Compiled { threads: 1 },
+                    ..SessionOptions::default()
+                },
+            )
+            .unwrap();
+            let mut batched = ExecSession::open(
+                &m,
+                &cluster,
+                s,
+                SessionOptions {
+                    backend: Backend::Compiled { threads: 1 },
+                    max_inflight: Some(8),
+                    batch: 4,
+                    ..SessionOptions::default()
+                },
+            )
+            .unwrap();
+            let expected: Vec<Tensor> = (0..8)
+                .map(|i| serial.infer(scaled_input(&m, i)).unwrap().output)
+                .collect();
+            let ids: Vec<ReqId> = (0..8)
+                .map(|i| batched.submit(scaled_input(&m, i)).unwrap())
+                .collect();
+            for (i, id) in ids.iter().enumerate() {
+                let r = batched.collect_req(*id).unwrap();
+                assert_eq!(
+                    r.output, expected[i],
+                    "{}: batched member {i} diverged from batch=1",
+                    s.name()
+                );
+            }
+            // 8 submits at max_batch=4 → exactly two full flushes.
+            let st = batched.batch_stats();
+            assert_eq!((st.batches, st.members), (2, 8), "{}", s.name());
+            assert_eq!(st.occupancy_max, 4, "{}", s.name());
+            assert_eq!(st.flushes_full, 2, "{}", s.name());
+            assert!((st.occupancy_mean() - 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batch_window_smaller_than_batch_does_not_deadlock() {
+        // max_inflight < max_batch: the batch can never fill, so the
+        // submit/collect drain rules must flush partial batches instead
+        // of parking forever on a completion that cannot come.
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        let mut s = ExecSession::open(
+            &m,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                max_inflight: Some(2),
+                batch: 8,
+                batch_wait: Some(Duration::from_secs(60)), // timer can't save us
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            ids.push(s.submit(scaled_input(&m, i)).unwrap());
+        }
+        for (i, id) in ids.into_iter().enumerate() {
+            let expect = centralized_inference(&m, &wb, &scaled_input(&m, i));
+            let got = s.collect_req(id).unwrap();
+            assert!(got.output.allclose(&expect, 1e-4, 1e-5), "request {i}");
+        }
+        assert!(
+            s.batch_stats().flushes_drain >= 1,
+            "undersized window must force drain flushes"
+        );
+    }
+
+    #[test]
+    fn batch_policy_is_normalized_and_swappable() {
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let mut s = ExecSession::open(
+            &m,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                batch: 0, // 0 disables — normalizes to 1
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(s.batch_policy().max_batch, 1);
+        assert_eq!(s.batch_policy().max_wait, DEFAULT_BATCH_WAIT);
+        s.set_batch_policy(8, Some(Duration::from_millis(2)));
+        assert_eq!(s.batch_policy().max_batch, 8);
+        assert_eq!(s.batch_policy().max_wait, Duration::from_millis(2));
+        // And the swapped policy actually batches on the warmed session:
+        // with max_batch 8 > max_inflight, the drain rule dispatches one
+        // whole window at a time.
+        let ids: Vec<ReqId> = (0..8).map(|i| s.submit(scaled_input(&m, i)).unwrap()).collect();
+        for id in ids {
+            s.collect_req(id).unwrap();
+        }
+        assert_eq!(s.batch_stats().occupancy_max, s.max_inflight());
+    }
+
+    #[test]
+    fn mid_batch_kill_recovers_every_member() {
+        // A device dying with a whole batch in flight: recovery must
+        // replay every member under its original id — the batch is not
+        // a unit of loss, the requests are.
+        let m = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        let mut s = ExecSession::open(
+            &m,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                recover: true,
+                fault: Some(kill_plan(1, 2)), // fires on member 2, mid-batch
+                max_inflight: Some(4),
+                batch: 4,
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let ids: Vec<ReqId> = (0..4).map(|i| s.submit(scaled_input(&m, i)).unwrap()).collect();
+        for (i, id) in ids.into_iter().enumerate() {
+            let expect = centralized_inference(&m, &wb, &scaled_input(&m, i));
+            let r = s.collect_req(id).unwrap();
+            assert!(
+                r.output.allclose(&expect, 1e-4, 1e-5),
+                "member {i} must be answered correctly after the mid-batch kill"
+            );
+            assert_eq!(r.stats.replays, 1, "member {i} rode the replay");
+        }
+        let rs = s.recovery_stats();
+        assert_eq!(rs.workers_lost, 1);
+        assert_eq!(rs.replans, 1);
+        assert_eq!(rs.requests_replayed, 4, "every batch member replays");
+        assert!(!s.poisoned());
     }
 
     fn kill_plan(dev: usize, at_req: usize) -> FaultPlan {

@@ -10,8 +10,12 @@
 //! [`ExecSession`] is a pipelined serving engine: `submit`/`collect`
 //! keep up to `max_inflight` requests flowing through the worker set at
 //! once (messages and completions are request-tagged, so overlap needs
-//! no extra synchronization), and [`serve`] drives closed-loop
-//! throughput measurements over a session ([`ThroughputReport`]).
+//! no extra synchronization), and [`serve`] drives closed-loop and
+//! open-loop (Poisson-arrival) throughput measurements over a session
+//! ([`ThroughputReport`]). Sessions opened with a batch policy
+//! ([`batcher`]) additionally coalesce in-flight requests into batched
+//! activations, so every conv/dense GEMM runs at batch×N tile
+//! occupancy instead of N=1, with outputs bit-identical to batch=1.
 //!
 //! The wire layer is pluggable ([`transport`]): workers speak to each
 //! other through a [`Transport`] object — in-process channels by default,
@@ -52,6 +56,7 @@
 //!    the `pjrt` build feature).
 
 pub mod backend;
+pub mod batcher;
 pub mod compute;
 pub mod harness;
 pub mod pjrt;
@@ -63,6 +68,7 @@ pub mod weights;
 pub mod wire;
 
 pub use backend::ComputeBackend;
+pub use batcher::{BatchPolicy, BatchStats, FlushReason, DEFAULT_BATCH_WAIT};
 pub use harness::{
     run_plan, Backend, ExecOptions, ExecResult, ExecSession, ExecStats, RecoveryStats, ReqId,
     SessionOptions,
@@ -71,7 +77,7 @@ pub use prepack::{
     force_lowering, lowering_selected, CompiledDevice, CompiledPlan, ConvLowering, ScratchArena,
 };
 pub use remote::run_worker;
-pub use serve::{serve_closed_loop, ServeOptions, ThroughputReport};
+pub use serve::{serve_closed_loop, serve_open_loop, OpenLoopOptions, ServeOptions, ThroughputReport};
 pub use transport::{
     ChannelTransport, FaultTransport, MediumMeter, Msg, RecvDeadline, RecvError, ShapedTransport,
     Shaping, SocketTransport, Transport, WorkerKilled,

@@ -51,7 +51,7 @@ use crate::partition::plan::{Plan, SliceKind};
 use crate::tensor::gemm::{
     gemm_prepacked, gemm_prepacked_from, matvec, Epilogue, PackScratch, PackedA,
 };
-use crate::tensor::im2col::{im2col_into, Im2colView};
+use crate::tensor::im2col::{im2col_into, BatchIm2colView, Im2colView};
 use crate::tensor::slice::{
     conv_weight_ic_slice, conv_weight_oc_slice, dense_weight_ic_slice, dense_weight_oc_slice,
 };
@@ -149,7 +149,12 @@ pub struct ScratchArena {
     cols: Vec<f32>,
     /// Per-thread B-panel packing buffers for the prepacked GEMM.
     pack: PackScratch,
+    /// Batched-GEMM output staging (`c_out × batch*n`) for
+    /// [`run_conv_batched`] — grows to the batch high-water mark once,
+    /// then the de-interleave into per-member tensors reuses it.
+    batch_out: Vec<f32>,
     cols_grows: u64,
+    batch_out_grows: u64,
 }
 
 impl ScratchArena {
@@ -162,7 +167,7 @@ impl ScratchArena {
     /// the executor exposes this per device in `ExecStats::arena_grows`
     /// and the soak tests assert it.
     pub fn grow_count(&self) -> u64 {
-        self.cols_grows + self.pack.grow_count()
+        self.cols_grows + self.batch_out_grows + self.pack.grow_count()
     }
 
     /// High-water transient bytes this arena ever held (buffers are
@@ -170,7 +175,7 @@ impl ScratchArena {
     /// `ExecStats::peak_scratch_bytes`; the fused-vs-materialized drop
     /// on this number is the implicit-GEMM memory win.
     pub fn peak_bytes(&self) -> u64 {
-        self.cols.len() as u64 * 4 + self.pack.bytes()
+        (self.cols.len() + self.batch_out.len()) as u64 * 4 + self.pack.bytes()
     }
 
     /// Split borrow: the first `cols_len` im2col elements and the GEMM
@@ -182,6 +187,20 @@ impl ScratchArena {
             self.cols_grows += 1;
         }
         (&mut self.cols[..cols_len], &mut self.pack)
+    }
+
+    /// Split borrow for the batched conv: the first `len` elements of
+    /// the batched-GEMM output staging buffer (re-zeroed — the GEMM
+    /// accumulates over k blocks starting from C's contents) and the
+    /// pack scratch.
+    fn batch_out_and_pack(&mut self, len: usize) -> (&mut [f32], &mut PackScratch) {
+        if self.batch_out.len() < len {
+            self.batch_out.resize(len, 0.0);
+            self.batch_out_grows += 1;
+        }
+        let c = &mut self.batch_out[..len];
+        c.fill(0.0);
+        (c, &mut self.pack)
     }
 }
 
@@ -580,6 +599,82 @@ pub fn run_conv(
     out
 }
 
+/// Run a compiled conv slice over a whole batch of member inputs as ONE
+/// GEMM: the members' im2col views are concatenated along the
+/// output-pixel axis ([`BatchIm2colView`]), so the GEMM's N grows
+/// `batch×` and the microkernel tiles run at full occupancy against the
+/// same prepacked weights. The batched C (`c_out × batch*n`) stages in
+/// the arena's grow-only `batch_out` buffer and is de-interleaved into
+/// per-member output tensors.
+///
+/// Outputs are bit-identical to calling [`run_conv`] per member: the
+/// batched view packs each member's columns with the member's own
+/// gather, and every output element accumulates over the identical
+/// `KC`-blocked k sequence regardless of which column block it lands
+/// in. The materialized lowering has no batched GEMM form (its column
+/// matrix is per-member) and falls back to the per-member loop — the
+/// batching win is a property of the default fused path.
+pub fn run_conv_batched(
+    k: &ConvKernel,
+    inputs: &[&Tensor],
+    threads: usize,
+    arena: &mut ScratchArena,
+) -> Vec<Tensor> {
+    assert!(!inputs.is_empty(), "batched conv: empty batch");
+    let b = inputs.len();
+    if b == 1 || k.lowering == ConvLowering::Materialized {
+        return inputs
+            .iter()
+            .map(|t| run_conv(k, t, threads, arena))
+            .collect();
+    }
+    let first = inputs[0];
+    assert_eq!(first.c, k.c_in, "compiled conv: input channel mismatch");
+    crate::tensor::ops::assert_conv_fits(first, k.k_h, k.k_w, k.pad_h, k.pad_w);
+    let out_h = (first.h + 2 * k.pad_h - k.k_h) / k.stride + 1;
+    let out_w = (first.w + 2 * k.pad_w - k.k_w) / k.stride + 1;
+    let n1 = out_h * out_w;
+    let n = b * n1;
+    let views: Vec<Im2colView> = inputs
+        .iter()
+        .map(|t| {
+            assert_eq!(
+                (t.c, t.h, t.w),
+                (first.c, first.h, first.w),
+                "batched conv: member shape mismatch"
+            );
+            Im2colView::new(t, k.k_h, k.k_w, k.stride, k.pad_h, k.pad_w, out_h, out_w)
+        })
+        .collect();
+    let view = BatchIm2colView::new(views);
+    let ep = Epilogue {
+        bias: k.bias.as_deref(),
+        relu: k.relu,
+    };
+    let (c, pack) = arena.batch_out_and_pack(k.c_out * n);
+    gemm_prepacked_from(&k.packed, &view, c, ep, threads, pack);
+    (0..b)
+        .map(|m| {
+            let mut out = Tensor::zeros(k.c_out, out_h, out_w);
+            for i in 0..k.c_out {
+                out.data[i * n1..(i + 1) * n1]
+                    .copy_from_slice(&c[i * n + m * n1..i * n + (m + 1) * n1]);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Run a compiled dense slice over a batch of member inputs. Dense
+/// stays a per-member matvec on purpose: the batch=1 path's multi-lane
+/// matvec has a different reduction tree than a GEMM's k loop, so
+/// lowering the batch onto a GEMM would break the bit-identical-to-
+/// batch-1 contract. (Dense stages are a tiny fraction of CNN FLOPs;
+/// the batching win lives in the conv GEMMs.)
+pub fn run_dense_batched(k: &DenseKernel, inputs: &[&Tensor], threads: usize) -> Vec<Tensor> {
+    inputs.iter().map(|t| run_dense(k, t, threads)).collect()
+}
+
 /// Run a compiled dense slice (lane-vectorized matvec over the pre-sliced
 /// weight block).
 pub fn run_dense(k: &DenseKernel, input: &Tensor, threads: usize) -> Tensor {
@@ -871,6 +966,105 @@ mod tests {
         };
         let y = run_dense(&kernel, &x, 1);
         assert!(y.allclose(&want, 1e-4, 1e-4), "diff={}", y.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn batched_conv_bit_identical_to_per_member_run_conv() {
+        // run_conv_batched is the GEMM the cross-request batcher rides
+        // on: its member outputs must equal per-member run_conv results
+        // *bitwise*, on full slices and on IC partial slices, serial and
+        // threaded — and the materialized fallback must agree too.
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let stages = m.stages();
+        let kernel = match compile_slice(&m, &wb, stages[0], &SliceKind::Full, 2) {
+            CompiledKernel::Conv(k) => k,
+            other => panic!("expected conv kernel, got {other:?}"),
+        };
+        let members: Vec<Tensor> = (0..4)
+            .map(|i| {
+                let mut t = model_input(&m);
+                // Distinct member inputs (shift deterministically).
+                for v in &mut t.data {
+                    *v += 0.01 * (i as f32 + 1.0);
+                }
+                t
+            })
+            .collect();
+        let refs: Vec<&Tensor> = members.iter().collect();
+        for lowering in [ConvLowering::Fused, ConvLowering::Materialized] {
+            let k = ConvKernel {
+                lowering,
+                ..kernel.clone()
+            };
+            for threads in [1usize, 2] {
+                let mut solo_arena = ScratchArena::new();
+                let want: Vec<Tensor> = members
+                    .iter()
+                    .map(|t| run_conv(&k, t, threads, &mut solo_arena))
+                    .collect();
+                let mut arena = ScratchArena::new();
+                let got = run_conv_batched(&k, &refs, threads, &mut arena);
+                assert_eq!(got, want, "{} threads={threads}", lowering.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_conv_arena_flat_after_warmup_and_counted_in_peak() {
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let kernel = match compile_slice(&m, &wb, m.stages()[0], &SliceKind::Full, 1) {
+            CompiledKernel::Conv(k) => k,
+            other => panic!("expected conv kernel, got {other:?}"),
+        };
+        let members: Vec<Tensor> = (0..3).map(|_| model_input(&m)).collect();
+        let refs: Vec<&Tensor> = members.iter().collect();
+        let mut arena = ScratchArena::new();
+        let solo_peak = {
+            let mut a = ScratchArena::new();
+            run_conv(&kernel, &members[0], 1, &mut a);
+            a.peak_bytes()
+        };
+        let first = run_conv_batched(&kernel, &refs, 1, &mut arena);
+        let warm = arena.grow_count();
+        assert!(warm > 0);
+        assert!(
+            arena.peak_bytes() > solo_peak,
+            "batched C staging must be visible in peak_bytes"
+        );
+        for _ in 0..4 {
+            let again = run_conv_batched(&kernel, &refs, 1, &mut arena);
+            assert_eq!(again, first, "batched conv must be deterministic");
+        }
+        assert_eq!(arena.grow_count(), warm, "batched hot loop must not reallocate");
+        // A smaller batch reuses the high-water buffer without growing.
+        run_conv_batched(&kernel, &refs[..2], 1, &mut arena);
+        assert_eq!(arena.grow_count(), warm);
+    }
+
+    #[test]
+    fn batched_dense_matches_per_member_matvec() {
+        let m = zoo::lenet();
+        let wb = WeightBundle::generate(&m);
+        let stage = m.stages()[2];
+        let kernel = match compile_slice(&m, &wb, stage, &SliceKind::Full, 1) {
+            CompiledKernel::Dense(k) => k,
+            other => panic!("expected dense kernel, got {other:?}"),
+        };
+        let members: Vec<Tensor> = (0..3)
+            .map(|i| {
+                Tensor::vector(
+                    (0..kernel.c_in)
+                        .map(|j| ((i * 31 + j) % 17) as f32 * 0.1 - 0.5)
+                        .collect(),
+                )
+            })
+            .collect();
+        let refs: Vec<&Tensor> = members.iter().collect();
+        let got = run_dense_batched(&kernel, &refs, 1);
+        let want: Vec<Tensor> = members.iter().map(|t| run_dense(&kernel, t, 1)).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -542,11 +542,22 @@ pub(crate) fn spawn_remote_workers(
         forwarders.push(std::thread::spawn(move || {
             while let Ok(ctl) = ctl_rx.recv() {
                 match ctl {
-                    Control::Request { req, input } => {
-                        let body = wire::encode_request(req, &input);
-                        if wire::write_frame(&mut wconn, wire::K_REQUEST, &body).is_err() {
-                            // Worker gone mid-send; its reader thread
-                            // reports the death to the supervisor.
+                    Control::Request { reqs, inputs } => {
+                        // The wire protocol frames one REQUEST per
+                        // request; remote sessions only ever carry
+                        // singleton batches (batch > 1 is rejected at
+                        // session build), so this loop writes one frame.
+                        let mut broken = false;
+                        for (req, input) in reqs.iter().zip(&inputs) {
+                            let body = wire::encode_request(*req, input);
+                            if wire::write_frame(&mut wconn, wire::K_REQUEST, &body).is_err() {
+                                // Worker gone mid-send; its reader thread
+                                // reports the death to the supervisor.
+                                broken = true;
+                                break;
+                            }
+                        }
+                        if broken {
                             break;
                         }
                     }
@@ -907,8 +918,8 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
                 Ok(rf) => {
                     if ctl_tx
                         .send(Control::Request {
-                            req: rf.req,
-                            input: Arc::new(rf.input),
+                            reqs: vec![rf.req],
+                            inputs: vec![Arc::new(rf.input)],
                         })
                         .is_err()
                     {

@@ -1,30 +1,45 @@
-//! Closed-loop serving driver: push N requests through an
-//! [`ExecSession`] at a fixed in-flight depth and measure steady-state
-//! throughput.
+//! Serving drivers: push requests through an [`ExecSession`] and
+//! measure steady-state throughput as a [`ThroughputReport`].
 //!
-//! The driver is a classic closed-loop load generator: it keeps exactly
-//! `inflight` requests outstanding (submitting a new one the moment the
-//! window has room, collecting otherwise) until `requests` have been
-//! served, then summarizes the run as a [`ThroughputReport`] —
-//! requests/sec, latency percentiles (submit→completion, which under
-//! pipelining includes queueing behind earlier requests), per-device
-//! busy fractions, and wire totals.
+//! Two load generators share the report format:
 //!
-//! `inflight = 1` reproduces strictly serial request-at-a-time execution
-//! over the same session, so a serial/pipelined pair measured back to
-//! back on one warmed session isolates the pipelining win from compile
-//! and warm-up effects (`iop serve --compare-serial`, the
-//! `serve vgg_mini *` cases in `perf_hotpath`, and the CI serve-smoke
-//! gate all use that shape).
+//! - [`serve_closed_loop`] is a classic closed loop: it keeps exactly
+//!   `inflight` requests outstanding (submitting a new one the moment
+//!   the window has room, collecting otherwise) until `requests` have
+//!   been served. `inflight = 1` reproduces strictly serial
+//!   request-at-a-time execution over the same session, so a
+//!   serial/pipelined pair measured back to back on one warmed session
+//!   isolates the pipelining win from compile and warm-up effects
+//!   (`iop serve --compare-serial`, the `serve vgg_mini *` cases in
+//!   `perf_hotpath`, and the CI serve-smoke gate all use that shape).
+//!
+//! - [`serve_open_loop`] offers a Poisson arrival process at a fixed
+//!   mean `rate` regardless of completions (arrivals are drawn up
+//!   front from a seeded exponential stream, so runs are repeatable).
+//!   This is the harness for the cross-request batcher: batch
+//!   occupancy under an open-loop trickle is what the max-wait timer
+//!   exists for, and offered-vs-achieved rate shows when the system
+//!   saturates. The only backpressure is the `inflight` admission cap;
+//!   a late admit shows up as achieved < offered, not as a slowed
+//!   arrival clock.
+//!
+//! The report covers requests/sec, latency percentiles
+//! (submit→completion, which includes batch queue wait and — under
+//! pipelining — queueing behind earlier requests), per-device busy
+//! fractions, wire totals, recovery counters, and the batch
+//! occupancy / flush-reason split.
 
-use std::time::Instant;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
 
-use super::harness::{ExecResult, ExecSession};
+use super::batcher::BatchStats;
+use super::harness::{ExecResult, ExecSession, RecoveryStats};
 
 /// Closed-loop run parameters.
 #[derive(Debug, Clone)]
@@ -39,7 +54,25 @@ pub struct ServeOptions {
     pub warmup: usize,
 }
 
-/// Steady-state throughput summary of one closed-loop run.
+/// Open-loop run parameters ([`serve_open_loop`]).
+#[derive(Debug, Clone)]
+pub struct OpenLoopOptions {
+    /// Measured requests.
+    pub requests: usize,
+    /// Admission cap: the session's `max_inflight` for the run. An
+    /// arrival that finds the window full blocks admission until a
+    /// completion frees a slot (achieved < offered under saturation).
+    pub inflight: usize,
+    /// Unmeasured serial warm-up requests run first.
+    pub warmup: usize,
+    /// Mean offered arrival rate in requests/second (Poisson process:
+    /// i.i.d. exponential inter-arrival gaps with mean `1/rate`).
+    pub rate: f64,
+    /// Seed for the arrival-schedule PRNG; same seed, same schedule.
+    pub seed: u64,
+}
+
+/// Steady-state throughput summary of one serving run.
 #[derive(Debug, Clone)]
 pub struct ThroughputReport {
     pub requests: usize,
@@ -47,6 +80,11 @@ pub struct ThroughputReport {
     /// First submit to last completion.
     pub wall_secs: f64,
     pub requests_per_sec: f64,
+    /// Offered arrival rate for open-loop runs (requests/second);
+    /// 0 for closed-loop runs, where arrivals are completion-driven.
+    /// Compare against `requests_per_sec` (the achieved rate): a gap
+    /// means the admission window saturated.
+    pub offered_rps: f64,
     /// Submit→completion latency percentiles (seconds).
     pub latency_p50: f64,
     pub latency_p95: f64,
@@ -66,6 +104,23 @@ pub struct ThroughputReport {
     /// the pack-buffer footprint — the number the implicit-GEMM memory
     /// gate watches under sustained load.
     pub peak_scratch_bytes: Vec<u64>,
+    /// Batches dispatched to the workers over the measured window
+    /// (equals `requests` when batching is off: every request is its
+    /// own batch of one).
+    pub batches: u64,
+    /// Mean members per dispatched batch over the measured window.
+    pub batch_occupancy_mean: f64,
+    /// Largest batch dispatched (session-cumulative high-water, clamped
+    /// to the current policy's `max_batch` so a batch-1 re-measurement
+    /// on a reused session does not inherit the batched run's max).
+    pub batch_occupancy_max: usize,
+    /// Flushes that dispatched because the queue reached `max_batch`.
+    pub flushes_full: u64,
+    /// Flushes forced by the `max_wait` deadline on the oldest member.
+    pub flushes_timer: u64,
+    /// Forced flushes (backpressure with everything queued, or a
+    /// collect of a still-queued request).
+    pub flushes_drain: u64,
     /// Devices lost during this run (delta of the session's
     /// [`crate::exec::RecoveryStats`] over the call, warm-up included);
     /// 0 on a healthy run.
@@ -95,6 +150,7 @@ impl ThroughputReport {
             ("inflight", Json::num(self.inflight as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("requests_per_sec", Json::num(self.requests_per_sec)),
+            ("offered_rps", Json::num(self.offered_rps)),
             ("latency_p50_secs", Json::num(self.latency_p50)),
             ("latency_p95_secs", Json::num(self.latency_p95)),
             ("latency_p99_secs", Json::num(self.latency_p99)),
@@ -113,6 +169,18 @@ impl ThroughputReport {
                         .collect(),
                 ),
             ),
+            ("batches", Json::num(self.batches as f64)),
+            (
+                "batch_occupancy_mean",
+                Json::num(self.batch_occupancy_mean),
+            ),
+            (
+                "batch_occupancy_max",
+                Json::num(self.batch_occupancy_max as f64),
+            ),
+            ("flushes_full", Json::num(self.flushes_full as f64)),
+            ("flushes_timer", Json::num(self.flushes_timer as f64)),
+            ("flushes_drain", Json::num(self.flushes_drain as f64)),
             ("workers_lost", Json::num(self.workers_lost as f64)),
             ("replans", Json::num(self.replans as f64)),
             (
@@ -143,6 +211,96 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// Per-request stat accumulation shared by both drivers.
+struct Accum {
+    latencies: Vec<f64>,
+    busy_secs: Vec<f64>,
+    bytes_total: u64,
+    messages_total: u64,
+    peak_scratch: Vec<u64>,
+}
+
+impl Accum {
+    fn new(devices: usize, requests: usize) -> Self {
+        Self {
+            latencies: Vec::with_capacity(requests),
+            busy_secs: vec![0.0; devices],
+            bytes_total: 0,
+            messages_total: 0,
+            peak_scratch: vec![0; devices],
+        }
+    }
+
+    fn absorb(&mut self, r: &ExecResult) {
+        self.latencies.push(r.stats.wall_secs);
+        for (dev, s) in r.stats.compute_secs.iter().enumerate() {
+            self.busy_secs[dev] += s;
+        }
+        self.bytes_total += r.stats.bytes_sent.iter().sum::<u64>();
+        self.messages_total += r.stats.messages_sent.iter().sum::<usize>() as u64;
+        for (p, &b) in self.peak_scratch.iter_mut().zip(&r.stats.peak_scratch_bytes) {
+            *p = (*p).max(b);
+        }
+    }
+}
+
+/// Assemble the report: percentiles from the accumulated latencies plus
+/// deltas of the session's recovery / shaped-wire / batch counters over
+/// the measured window.
+#[allow(clippy::too_many_arguments)]
+fn finish_report(
+    session: &ExecSession,
+    mut acc: Accum,
+    requests: usize,
+    inflight: usize,
+    wall_secs: f64,
+    offered_rps: f64,
+    recovery_before: &RecoveryStats,
+    wire_before: Option<(Vec<f64>, f64)>,
+    batch_before: &BatchStats,
+) -> ThroughputReport {
+    acc.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rec = session.recovery_stats();
+    let bs = session.batch_stats().delta_since(batch_before);
+    let (wire_busy_by_stage, wire_busy_final) = match (wire_before, session.shaped_meter()) {
+        (Some((before, before_final)), Some((after, after_final))) => {
+            let per_stage = after
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| a - before.get(i).copied().unwrap_or(0.0))
+                .collect();
+            (per_stage, after_final - before_final)
+        }
+        _ => (Vec::new(), 0.0),
+    };
+    ThroughputReport {
+        requests,
+        inflight,
+        wall_secs,
+        requests_per_sec: requests as f64 / wall_secs,
+        offered_rps,
+        latency_p50: percentile(&acc.latencies, 0.50),
+        latency_p95: percentile(&acc.latencies, 0.95),
+        latency_p99: percentile(&acc.latencies, 0.99),
+        device_busy_frac: acc.busy_secs.iter().map(|&b| b / wall_secs).collect(),
+        bytes_total: acc.bytes_total,
+        messages_total: acc.messages_total,
+        peak_scratch_bytes: acc.peak_scratch,
+        batches: bs.batches,
+        batch_occupancy_mean: bs.occupancy_mean(),
+        batch_occupancy_max: bs.occupancy_max.min(session.batch_policy().max_batch),
+        flushes_full: bs.flushes_full,
+        flushes_timer: bs.flushes_timer,
+        flushes_drain: bs.flushes_drain,
+        workers_lost: rec.workers_lost - recovery_before.workers_lost,
+        replans: rec.replans - recovery_before.replans,
+        requests_replayed: rec.requests_replayed - recovery_before.requests_replayed,
+        recovery_secs: rec.recovery_secs - recovery_before.recovery_secs,
+        wire_busy_by_stage,
+        wire_busy_final,
+    }
+}
+
 /// Drive a closed loop of `opts.requests` requests through `session` at
 /// depth `opts.inflight`. `input_for` supplies each request's input by
 /// 0-based index over the measured window, and `on_result` sees every
@@ -169,16 +327,13 @@ pub fn serve_closed_loop(
     for _ in 0..opts.warmup {
         session.infer(input_for(0))?;
     }
-    // Snapshot the shaped-medium meter after warm-up so the reported
-    // wire time covers exactly the measured window.
+    // Snapshot the shaped-medium meter and batch counters after warm-up
+    // so the reported wire time and occupancy cover exactly the
+    // measured window.
     let wire_before = session.shaped_meter();
+    let batch_before = session.batch_stats();
 
-    let mut latencies = Vec::with_capacity(opts.requests);
-    let mut busy_secs = vec![0.0f64; m];
-    let mut bytes_total = 0u64;
-    let mut messages_total = 0u64;
-    let mut peak_scratch = vec![0u64; m];
-
+    let mut acc = Accum::new(m, opts.requests);
     let t0 = Instant::now();
     let mut submitted = 0usize;
     let mut collected = 0usize;
@@ -191,53 +346,122 @@ pub fn serve_closed_loop(
             // completion monotonic in ReqId), so the `collected` counter
             // IS this result's 0-based measured index.
             let (_, r) = session.collect()?;
-            latencies.push(r.stats.wall_secs);
-            for (dev, s) in r.stats.compute_secs.iter().enumerate() {
-                busy_secs[dev] += s;
-            }
-            bytes_total += r.stats.bytes_sent.iter().sum::<u64>();
-            messages_total += r.stats.messages_sent.iter().sum::<usize>() as u64;
-            for (p, &b) in peak_scratch.iter_mut().zip(&r.stats.peak_scratch_bytes) {
-                *p = (*p).max(b);
-            }
+            acc.absorb(&r);
             on_result(collected, &r);
             collected += 1;
         }
     }
     let wall_secs = t0.elapsed().as_secs_f64();
-
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rec = session.recovery_stats();
-    let (wire_busy_by_stage, wire_busy_final) = match (wire_before, session.shaped_meter()) {
-        (Some((before, before_final)), Some((after, after_final))) => {
-            let per_stage = after
-                .iter()
-                .enumerate()
-                .map(|(i, &a)| a - before.get(i).copied().unwrap_or(0.0))
-                .collect();
-            (per_stage, after_final - before_final)
-        }
-        _ => (Vec::new(), 0.0),
-    };
-    Ok(ThroughputReport {
-        requests: opts.requests,
-        inflight: depth,
+    Ok(finish_report(
+        session,
+        acc,
+        opts.requests,
+        depth,
         wall_secs,
-        requests_per_sec: opts.requests as f64 / wall_secs,
-        latency_p50: percentile(&latencies, 0.50),
-        latency_p95: percentile(&latencies, 0.95),
-        latency_p99: percentile(&latencies, 0.99),
-        device_busy_frac: busy_secs.iter().map(|&b| b / wall_secs).collect(),
-        bytes_total,
-        messages_total,
-        peak_scratch_bytes: peak_scratch,
-        workers_lost: rec.workers_lost - recovery_before.workers_lost,
-        replans: rec.replans - recovery_before.replans,
-        requests_replayed: rec.requests_replayed - recovery_before.requests_replayed,
-        recovery_secs: rec.recovery_secs - recovery_before.recovery_secs,
-        wire_busy_by_stage,
-        wire_busy_final,
-    })
+        0.0,
+        &recovery_before,
+        wire_before,
+        &batch_before,
+    ))
+}
+
+/// Offer a Poisson arrival stream to `session`: `opts.requests`
+/// arrivals at mean rate `opts.rate`/sec, drawn up front from a seeded
+/// exponential stream so the schedule is repeatable. The driver sleeps
+/// between arrivals (waking at the batch max-wait deadline so a queued
+/// partial batch still flushes on time) and submits each request at
+/// its scheduled instant; when the admission window is full the submit
+/// blocks, delaying that arrival and every later one — the classic
+/// open-loop saturation signature, visible as
+/// `requests_per_sec < offered_rps` in the report.
+///
+/// Index semantics of `input_for` / `on_result` match
+/// [`serve_closed_loop`].
+pub fn serve_open_loop(
+    session: &mut ExecSession,
+    opts: &OpenLoopOptions,
+    mut input_for: impl FnMut(usize) -> Tensor,
+    mut on_result: impl FnMut(usize, &ExecResult),
+) -> Result<ThroughputReport> {
+    if opts.requests == 0 {
+        return Err(anyhow!("serve: requests must be > 0"));
+    }
+    if !opts.rate.is_finite() || opts.rate <= 0.0 {
+        return Err(anyhow!(
+            "serve: open-loop arrival rate must be a positive finite req/s (got {})",
+            opts.rate
+        ));
+    }
+    let depth = opts.inflight.max(1);
+    let m = session.devices();
+    session.set_max_inflight(depth);
+    let recovery_before = session.recovery_stats();
+
+    for _ in 0..opts.warmup {
+        session.infer(input_for(0))?;
+    }
+    let wire_before = session.shaped_meter();
+    let batch_before = session.batch_stats();
+
+    // Arrival schedule: cumulative sums of Exp(rate) gaps. next_f32 is
+    // in [0, 1), so 1-u is in (0, 1] and the log stays finite.
+    let mut rng = SplitMix64::new(opts.seed);
+    let mut offset = 0.0f64;
+    let arrivals: Vec<Duration> = (0..opts.requests)
+        .map(|_| {
+            let u = rng.next_f32() as f64;
+            offset += -(1.0 - u).ln() / opts.rate;
+            Duration::from_secs_f64(offset)
+        })
+        .collect();
+
+    let mut acc = Accum::new(m, opts.requests);
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut collected = 0usize;
+    while collected < opts.requests {
+        if submitted < opts.requests {
+            let now = t0.elapsed();
+            let due = arrivals[submitted];
+            if now >= due {
+                session.submit(input_for(submitted))?;
+                submitted += 1;
+            } else {
+                // Sleep toward the next arrival, but wake at the batch
+                // deadline: a queued partial batch must flush within
+                // max_wait even while the driver idles between arrivals.
+                let mut nap = due - now;
+                if let Some(d) = session.batch_deadline() {
+                    nap = nap.min(d.saturating_duration_since(Instant::now()));
+                }
+                if !nap.is_zero() {
+                    thread::sleep(nap);
+                }
+                session.poll()?;
+            }
+            continue;
+        }
+        // All arrivals admitted: drain completions in submission order
+        // (same monotonic-ReqId argument as the closed loop — results
+        // that completed while we were still submitting queued in the
+        // ready map and come back here in order).
+        let (_, r) = session.collect()?;
+        acc.absorb(&r);
+        on_result(collected, &r);
+        collected += 1;
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    Ok(finish_report(
+        session,
+        acc,
+        opts.requests,
+        depth,
+        wall_secs,
+        opts.rate,
+        &recovery_before,
+        wire_before,
+        &batch_before,
+    ))
 }
 
 #[cfg(test)]
@@ -289,12 +513,23 @@ mod tests {
         assert_eq!(seen, (0..8).collect::<Vec<_>>());
         assert!(rep.wall_secs > 0.0);
         assert!(rep.requests_per_sec > 0.0);
+        assert_eq!(rep.offered_rps, 0.0, "closed loop offers no arrival rate");
         assert!(rep.latency_p50 > 0.0 && rep.latency_p50 <= rep.latency_p99);
         assert_eq!(rep.device_busy_frac.len(), cluster.m());
         assert!(rep.bytes_total > 0 && rep.messages_total > 0);
         // compiled backend: every device reports its arena high-water
         assert_eq!(rep.peak_scratch_bytes.len(), cluster.m());
         assert!(rep.peak_scratch_bytes.iter().sum::<u64>() > 0);
+        // batching off: each measured request is its own batch of one,
+        // dispatched by the queue-full rule (warm-up excluded by the
+        // delta snapshot).
+        assert_eq!(rep.batches, 8);
+        assert_eq!(rep.batch_occupancy_max, 1);
+        assert_eq!(rep.batch_occupancy_mean, 1.0);
+        assert_eq!(
+            (rep.flushes_full, rep.flushes_timer, rep.flushes_drain),
+            (8, 0, 0)
+        );
         // healthy run: recovery counters all zero
         assert_eq!(rep.workers_lost, 0);
         assert_eq!(rep.replans, 0);
@@ -302,6 +537,161 @@ mod tests {
         assert_eq!(rep.recovery_secs, 0.0);
         // session is drained afterwards
         assert_eq!(session.inflight(), 0);
+        let j = rep.to_json();
+        assert_eq!(j.get("batches").as_f64(), Some(8.0));
+        assert_eq!(j.get("batch_occupancy_mean").as_f64(), Some(1.0));
+        assert_eq!(j.get("flushes_full").as_f64(), Some(8.0));
+        assert_eq!(j.get("offered_rps").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn closed_loop_batched_reports_occupancy_and_flush_split() {
+        use crate::exec::harness::SessionOptions;
+
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                batch: 4,
+                batch_wait: Some(Duration::from_secs(60)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let input = model_input(&model);
+        let rep = serve_closed_loop(
+            &mut session,
+            &ServeOptions {
+                requests: 8,
+                inflight: 8,
+                warmup: 1,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        )
+        .unwrap();
+        // Window 8 admits everything immediately: two full batches of 4
+        // (the 60s wait guarantees the timer never fires first).
+        assert_eq!(rep.batches, 2);
+        assert_eq!(rep.batch_occupancy_max, 4);
+        assert_eq!(rep.batch_occupancy_mean, 4.0);
+        assert_eq!(
+            (rep.flushes_full, rep.flushes_timer, rep.flushes_drain),
+            (2, 0, 0)
+        );
+        // Re-measure batch=1 on the same warmed session: the report's
+        // occupancy max must describe THIS run, not inherit the
+        // batched run's high-water.
+        session.set_batch_policy(1, None);
+        let rep1 = serve_closed_loop(
+            &mut session,
+            &ServeOptions {
+                requests: 4,
+                inflight: 4,
+                warmup: 0,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(rep1.batches, 4);
+        assert_eq!(rep1.batch_occupancy_max, 1);
+        assert_eq!(rep1.batch_occupancy_mean, 1.0);
+    }
+
+    #[test]
+    fn open_loop_offers_poisson_arrivals_and_reports_rates() {
+        use crate::exec::harness::SessionOptions;
+
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                batch: 4,
+                batch_wait: Some(Duration::from_millis(2)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let input = model_input(&model);
+        let mut seen = Vec::new();
+        let rep = serve_open_loop(
+            &mut session,
+            &OpenLoopOptions {
+                requests: 12,
+                inflight: 4,
+                warmup: 1,
+                rate: 2000.0,
+                seed: 11,
+            },
+            |_| input.clone(),
+            |i, r| {
+                assert!(r.output.data.iter().all(|v| v.is_finite()));
+                seen.push(i);
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+        assert_eq!(rep.offered_rps, 2000.0);
+        assert!(rep.requests_per_sec > 0.0);
+        // Every measured request is dispatched exactly once; occupancy
+        // is bounded by the policy.
+        let members = rep.batches as f64 * rep.batch_occupancy_mean;
+        assert!((members - 12.0).abs() < 1e-9, "members {members} != 12");
+        assert!(rep.batch_occupancy_max >= 1 && rep.batch_occupancy_max <= 4);
+        assert_eq!(
+            rep.flushes_full + rep.flushes_timer + rep.flushes_drain,
+            rep.batches
+        );
+        assert_eq!(session.inflight(), 0);
+    }
+
+    #[test]
+    fn open_loop_trickle_flushes_on_the_batch_timer() {
+        use crate::exec::harness::SessionOptions;
+
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        // Arrivals ~25ms apart (rate 40/s) against a 1ms max_wait and a
+        // batch window of 8: no batch ever fills, so the max-wait timer
+        // is the only thing keeping queue waits bounded.
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                batch: 8,
+                batch_wait: Some(Duration::from_millis(1)),
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        let input = model_input(&model);
+        let rep = serve_open_loop(
+            &mut session,
+            &OpenLoopOptions {
+                requests: 6,
+                inflight: 8,
+                warmup: 1,
+                rate: 40.0,
+                seed: 3,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        )
+        .unwrap();
+        assert!(
+            rep.flushes_timer >= 1,
+            "trickle arrivals must hit the max-wait timer (got {:?})",
+            (rep.flushes_full, rep.flushes_timer, rep.flushes_drain)
+        );
+        assert!(rep.batch_occupancy_max <= 8);
     }
 
     #[test]
@@ -418,5 +808,31 @@ mod tests {
             |_, _| {},
         );
         assert!(err.is_err());
+        let err = serve_open_loop(
+            &mut session,
+            &OpenLoopOptions {
+                requests: 0,
+                inflight: 1,
+                warmup: 0,
+                rate: 100.0,
+                seed: 0,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        );
+        assert!(err.is_err());
+        let err = serve_open_loop(
+            &mut session,
+            &OpenLoopOptions {
+                requests: 2,
+                inflight: 1,
+                warmup: 0,
+                rate: 0.0,
+                seed: 0,
+            },
+            |_| input.clone(),
+            |_, _| {},
+        );
+        assert!(err.is_err(), "nonpositive arrival rate rejected");
     }
 }

@@ -267,6 +267,97 @@ impl BPanelProvider for Im2colView<'_> {
     }
 }
 
+/// A batch of [`Im2colView`]s presented as ONE virtual B matrix: the
+/// member column matrices concatenated along the output-pixel axis, so
+/// an `n`-column conv GEMM becomes a `batch*n`-column GEMM against the
+/// same prepacked weights. Column `j` belongs to member `j / n1` at
+/// local output pixel `j % n1` (`n1 = out_h*out_w`, identical across
+/// members — batched requests share the model geometry).
+///
+/// Bit-identity with batch=1: the microkernel accumulates every output
+/// element over the same `KC`-blocked k sequence regardless of which
+/// pack-panel column the element lands in, so batching only relocates
+/// columns — each `C[i, j]` sees exactly the FMA order it sees in a
+/// single-member GEMM.
+pub struct BatchIm2colView<'a> {
+    views: Vec<Im2colView<'a>>,
+    /// Columns per member (`out_h * out_w`).
+    n1: usize,
+}
+
+impl<'a> BatchIm2colView<'a> {
+    pub fn new(views: Vec<Im2colView<'a>>) -> BatchIm2colView<'a> {
+        assert!(!views.is_empty(), "batched im2col view: no members");
+        let (k, n1) = (views[0].k(), views[0].n());
+        for v in &views[1..] {
+            assert_eq!(
+                (v.k(), v.n()),
+                (k, n1),
+                "batched im2col view: member geometry mismatch"
+            );
+        }
+        BatchIm2colView { views, n1 }
+    }
+}
+
+impl BPanelProvider for BatchIm2colView<'_> {
+    fn k(&self) -> usize {
+        self.views[0].k()
+    }
+
+    fn n(&self) -> usize {
+        self.views.len() * self.n1
+    }
+
+    fn pack_panel(
+        &self,
+        bpack: &mut [f32],
+        jc: usize,
+        nc: usize,
+        pc: usize,
+        kc: usize,
+        nr: usize,
+    ) {
+        let n_panels = nc.div_ceil(nr);
+        assert!(
+            bpack.len() >= n_panels * kc * nr,
+            "batched im2col pack_panel: scratch buffer too small"
+        );
+        let geo = &self.views[0];
+        for jt in 0..n_panels {
+            let j0 = jc + jt * nr;
+            let cols = nr.min(jc + nc - j0);
+            let panel = &mut bpack[jt * kc * nr..(jt + 1) * kc * nr];
+            for (p, dst) in panel.chunks_exact_mut(nr).enumerate() {
+                let row = pc + p;
+                let kx = row % geo.k_w;
+                let ky = (row / geo.k_w) % geo.k_h;
+                let ic = row / (geo.k_w * geo.k_h);
+                // A tile of nr columns may straddle member boundaries:
+                // gather each member's contiguous span separately.
+                let mut filled = 0usize;
+                while filled < cols {
+                    let j = j0 + filled;
+                    let member = j / self.n1;
+                    let lj = j % self.n1;
+                    let take = (self.n1 - lj).min(cols - filled);
+                    self.views[member].gather_tap_cols(
+                        ic,
+                        ky,
+                        kx,
+                        lj,
+                        &mut dst[filled..filled + take],
+                    );
+                    filled += take;
+                }
+                for v in &mut dst[cols..] {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
 /// Fast 2-D convolution — same contract as `ops::conv2d` (OIHW weights,
 /// CHW input, per-axis zero padding, optional bias, fused ReLU) computed
 /// as a blocked GEMM over the im2col matrix. `threads > 1` splits output
@@ -474,6 +565,114 @@ mod tests {
                         dense.pack_panel(&mut want, jc, nc, pc, kc, nr);
                         view.pack_panel(&mut got, jc, nc, pc, kc, nr);
                         assert_eq!(got, want, "case {ci} nr={nr} jc={jc} pc={pc}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_view_packs_identically_to_concatenated_materialized_pack() {
+        use crate::tensor::gemm::{DenseB, KC, NC};
+        for (ci, &(c, h, w, kh, kw, s, ph, pw)) in view_cases().iter().enumerate() {
+            let (oh, ow) = ((h + 2 * ph - kh) / s + 1, (w + 2 * pw - kw) / s + 1);
+            let (k, n1) = (c * kh * kw, oh * ow);
+            for b in [1usize, 3, 4] {
+                let members: Vec<Tensor> = (0..b)
+                    .map(|m| rand_tensor(c, h, w, 900 + 16 * ci as u64 + m as u64))
+                    .collect();
+                // Reference: the member column matrices concatenated
+                // along the output-pixel axis, row by row.
+                let per: Vec<Vec<f32>> = members
+                    .iter()
+                    .map(|t| im2col(t, kh, kw, s, ph, pw, oh, ow))
+                    .collect();
+                let n = b * n1;
+                let mut cols = vec![0.0f32; k * n];
+                for r in 0..k {
+                    for (m, p) in per.iter().enumerate() {
+                        cols[r * n + m * n1..r * n + (m + 1) * n1]
+                            .copy_from_slice(&p[r * n1..(r + 1) * n1]);
+                    }
+                }
+                let dense = DenseB::new(k, n, &cols);
+                let view = BatchIm2colView::new(
+                    members
+                        .iter()
+                        .map(|t| Im2colView::new(t, kh, kw, s, ph, pw, oh, ow))
+                        .collect(),
+                );
+                assert_eq!((view.k(), view.n()), (k, n));
+                // nr values that do NOT divide n1 force pack tiles to
+                // straddle member boundaries — the case the batched
+                // gather splits by hand.
+                for nr in [4usize, 8, 16] {
+                    for jc in (0..n).step_by(NC) {
+                        let nc = NC.min(n - jc);
+                        for pc in (0..k).step_by(KC) {
+                            let kc = KC.min(k - pc);
+                            let len = nc.div_ceil(nr) * nr * kc;
+                            let mut want = vec![55.0f32; len];
+                            let mut got = vec![77.0f32; len];
+                            dense.pack_panel(&mut want, jc, nc, pc, kc, nr);
+                            view.pack_panel(&mut got, jc, nc, pc, kc, nr);
+                            assert_eq!(got, want, "case {ci} b={b} nr={nr} jc={jc} pc={pc}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_view_gemm_bit_identical_to_per_member_gemms() {
+        // The batching claim itself: one GEMM over the batched view
+        // must reproduce each member's single-request GEMM *bitwise*
+        // (column block m of the batched C == member m's C), on every
+        // compiled-in microkernel, serial and threaded.
+        use crate::tensor::gemm::{gemm_prepacked_from, PackScratch, PackedA};
+        use crate::tensor::kernels;
+        for kern in kernels::supported() {
+            let mut scratch = PackScratch::new();
+            for (ci, &(c, h, w, kh, kw, s, ph, pw)) in view_cases().iter().enumerate() {
+                let (oh, ow) = ((h + 2 * ph - kh) / s + 1, (w + 2 * pw - kw) / s + 1);
+                let (k, n1) = (c * kh * kw, oh * ow);
+                let c_out = 70;
+                let weight = rand_vec(c_out * k, 1000 + ci as u64);
+                let bias = rand_vec(c_out, 1100 + ci as u64);
+                let pa = PackedA::pack_with(kern, c_out, k, &weight, 2);
+                let b = 3usize;
+                let members: Vec<Tensor> = (0..b)
+                    .map(|m| rand_tensor(c, h, w, 1200 + 16 * ci as u64 + m as u64))
+                    .collect();
+                let ep = Epilogue {
+                    bias: Some(&bias),
+                    relu: true,
+                };
+                for threads in [1usize, 3] {
+                    let mut want = vec![vec![0.0f32; c_out * n1]; b];
+                    for (t, out) in members.iter().zip(want.iter_mut()) {
+                        let view = Im2colView::new(t, kh, kw, s, ph, pw, oh, ow);
+                        gemm_prepacked_from(&pa, &view, out, ep, threads, &mut scratch);
+                    }
+                    let bview = BatchIm2colView::new(
+                        members
+                            .iter()
+                            .map(|t| Im2colView::new(t, kh, kw, s, ph, pw, oh, ow))
+                            .collect(),
+                    );
+                    let n = b * n1;
+                    let mut got = vec![0.0f32; c_out * n];
+                    gemm_prepacked_from(&pa, &bview, &mut got, ep, threads, &mut scratch);
+                    for (m, w1) in want.iter().enumerate() {
+                        for i in 0..c_out {
+                            assert_eq!(
+                                &got[i * n + m * n1..i * n + (m + 1) * n1],
+                                &w1[i * n1..(i + 1) * n1],
+                                "{} case {ci} member {m} row {i} threads={threads}",
+                                kern.name()
+                            );
+                        }
                     }
                 }
             }

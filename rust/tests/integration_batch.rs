@@ -1,0 +1,181 @@
+//! Integration: cross-request batching.
+//!
+//! The batcher coalesces in-flight requests into one batched dispatch
+//! per stage: member activations are concatenated along the channel
+//! axis on the wire, conv slices run one implicit-GEMM over the
+//! widened output-pixel axis, and dense slices stay per-member
+//! matvecs. None of that may change a single bit of any member's
+//! output: per-output-element accumulation order is invariant to
+//! column position in the GEMM, reduces add member-wise in peer order,
+//! and the tests below assert exact equality against a batch-free
+//! serial session — per request, across every strategy, both cluster
+//! shapes, and the compiled/fast/reference backends.
+
+use std::time::Duration;
+
+use iop::device::profiles;
+use iop::exec::{Backend, ExecSession, SessionOptions};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::pipeline;
+use iop::tensor::{init, Tensor};
+
+/// Deterministic per-request input, distinct per index (same stream as
+/// integration_serve so oracles are comparable across suites).
+fn request_input(model: &iop::model::Model, i: usize) -> Tensor {
+    init::input_tensor(
+        &format!("{}/serve-req-{i}", model.name),
+        model.input.c,
+        model.input.h,
+        model.input.w,
+    )
+}
+
+/// Batched submit/collect must produce bit-identical per-request
+/// outputs to serial request-at-a-time `infer` over a second session
+/// of the same plan with batching disabled.
+fn check_batched_matches_batch1(
+    model: &iop::model::Model,
+    cluster: &iop::device::Cluster,
+    strategy: Strategy,
+    backend: Backend,
+    requests: usize,
+    batch: usize,
+) {
+    let plan = pipeline::plan(model, cluster, strategy);
+    let inputs: Vec<Tensor> = (0..requests).map(|i| request_input(model, i)).collect();
+
+    let mut serial = ExecSession::with_inflight(model, &plan, backend.clone(), 1).unwrap();
+    let expected: Vec<Tensor> = inputs
+        .iter()
+        .map(|x| serial.infer(x.clone()).unwrap().output)
+        .collect();
+
+    let mut batched = ExecSession::open(
+        model,
+        cluster,
+        strategy,
+        SessionOptions {
+            backend,
+            batch,
+            // A long wait keeps the test deterministic: every dispatch
+            // is a full (or final drain) flush, never a timer race.
+            batch_wait: Some(Duration::from_secs(60)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    batched.set_max_inflight(requests);
+    let ids: Vec<_> = inputs
+        .iter()
+        .map(|x| batched.submit(x.clone()).unwrap())
+        .collect();
+    for (k, &id) in ids.iter().enumerate() {
+        let r = batched.collect_req(id).unwrap();
+        assert_eq!(
+            r.output,
+            expected[k],
+            "{} {} m={} batch={}: request {k} not bit-identical under batching (diff={})",
+            model.name,
+            strategy.name(),
+            cluster.m(),
+            batch,
+            r.output.max_abs_diff(&expected[k])
+        );
+    }
+    assert_eq!(batched.inflight(), 0);
+    let st = batched.batch_stats();
+    assert_eq!(
+        st.members as usize, requests,
+        "every request dispatched exactly once"
+    );
+    assert!(
+        st.occupancy_max >= 2,
+        "batched session never coalesced anything (occupancy_max {})",
+        st.occupancy_max
+    );
+}
+
+#[test]
+fn batched_bit_identical_all_strategies_paper_cluster() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    for s in Strategy::all() {
+        check_batched_matches_batch1(
+            &model,
+            &cluster,
+            s,
+            Backend::Compiled { threads: 1 },
+            6,
+            3,
+        );
+    }
+}
+
+#[test]
+fn batched_bit_identical_all_strategies_heterogeneous_cluster() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::heterogeneous();
+    for s in Strategy::all() {
+        check_batched_matches_batch1(
+            &model,
+            &cluster,
+            s,
+            Backend::Compiled { threads: 1 },
+            6,
+            3,
+        );
+    }
+}
+
+#[test]
+fn batched_bit_identical_fast_and_reference_backends() {
+    // Non-compiled runners execute batch members one by one (no batched
+    // GEMM path), but the comm plane still ships channel-concatenated
+    // batch messages — this pins the batch_wire/unbatch_wire round trip
+    // and the batched reduce to bit-identity too.
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    check_batched_matches_batch1(&model, &cluster, Strategy::Iop, Backend::Reference, 4, 2);
+    check_batched_matches_batch1(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        Backend::Fast { threads: 1 },
+        4,
+        2,
+    );
+}
+
+/// An undersized final batch (requests not divisible by max_batch) is
+/// drain-flushed and stays correct; occupancy accounting matches.
+#[test]
+fn ragged_final_batch_is_flushed_and_correct() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    check_batched_matches_batch1(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        Backend::Compiled { threads: 1 },
+        7,
+        4,
+    );
+}
+
+/// Batching composes with multi-threaded workers: the batched GEMM is
+/// parallelized over output-channel blocks exactly like the singleton
+/// one, which must not perturb any member's bits.
+#[test]
+fn batched_bit_identical_with_worker_threads() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    check_batched_matches_batch1(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        Backend::Compiled { threads: 2 },
+        6,
+        3,
+    );
+}

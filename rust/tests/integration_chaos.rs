@@ -403,6 +403,69 @@ fn socket_kill_replays_bit_identically_to_channels() {
     assert!(!remote.poisoned());
 }
 
+/// A worker dying mid-batch under cross-request batching: the kill is
+/// scheduled on a request in the *middle* of the first batch of 4, so
+/// the whole batch is in flight when the device disappears. Recovery
+/// must replay every member of the dead batch (and the queued rest)
+/// under its original ReqId — every submitted request gets an answer
+/// matching its own oracle, with distinct inputs proving nothing was
+/// cross-delivered or double-answered during the replay.
+#[test]
+fn mid_batch_kill_replays_every_batch_member() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let inputs: Vec<_> = (0..8)
+        .map(|i| {
+            iop::tensor::init::input_tensor(
+                &format!("{}/chaos-batch-{i}", model.name),
+                model.input.c,
+                model.input.h,
+                model.input.w,
+            )
+        })
+        .collect();
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            backend: Backend::Compiled { threads: 1 },
+            max_inflight: Some(8),
+            batch: 4,
+            batch_wait: Some(Duration::from_secs(60)),
+            recover: true,
+            fault: Some(kill_plan(1, 2)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let ids: Vec<_> = inputs
+        .iter()
+        .map(|x| session.submit(x.clone()).unwrap())
+        .collect();
+    for (i, &id) in ids.iter().enumerate() {
+        let r = session.collect_req(id).unwrap();
+        let expect = centralized_inference(&model, &wb, &inputs[i]);
+        assert!(
+            r.output.allclose(&expect, 1e-4, 1e-5),
+            "request {i} must survive the mid-batch kill: diff={}",
+            r.output.max_abs_diff(&expect)
+        );
+    }
+    let rec = session.recovery_stats();
+    assert_eq!(rec.workers_lost, 1);
+    assert!(rec.replans >= 1);
+    assert!(
+        rec.requests_replayed >= 4,
+        "the dead batch's members must all be replayed (got {})",
+        rec.requests_replayed
+    );
+    assert_eq!(session.alive_devices(), cluster.m() - 1);
+    assert_eq!(session.aborted_count(), 0);
+    assert!(!session.poisoned());
+}
+
 /// A shaped link slower than the receive deadline must trip the typed
 /// deadline naming the silent peer — never a hang: the medium models
 /// 30 s of latency per message, the receive gives up after 500 ms.
