@@ -144,6 +144,47 @@ fn deploy_from_args(a: &mut Args) -> Result<(Option<Vec<String>>, Option<LinkSha
     Ok((workers, link, explicit))
 }
 
+/// Parse the worker-liveness and auth flags shared by `exec` and
+/// `serve`: `--heartbeat-ms MS` (0 disables the keepalive),
+/// `--miss-limit N`, and `--auth-token TOKEN` (falling back to the
+/// `IOP_AUTH_TOKEN` environment variable). Returns `(policy, token)`
+/// where `policy = None` means "use the library default".
+fn liveness_from_args(
+    a: &mut Args,
+) -> Result<(Option<crate::exec::LivenessPolicy>, Option<String>)> {
+    let hb = match a.str_opt("heartbeat-ms") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("--heartbeat-ms expects milliseconds, got '{v}'"))?,
+        ),
+    };
+    let miss = match a.str_opt("miss-limit") {
+        None => None,
+        Some(v) => {
+            let n: u32 = v
+                .parse()
+                .map_err(|_| anyhow!("--miss-limit expects a positive integer, got '{v}'"))?;
+            if n == 0 {
+                bail!("--miss-limit must be >= 1");
+            }
+            Some(n)
+        }
+    };
+    let default = crate::exec::LivenessPolicy::default();
+    let policy = match (hb, miss) {
+        (None, None) => None,
+        (hb, miss) => Some(crate::exec::LivenessPolicy {
+            interval_ms: hb.unwrap_or(default.interval_ms),
+            miss_limit: miss.unwrap_or(default.miss_limit),
+        }),
+    };
+    let token = a
+        .str_opt("auth-token")
+        .or_else(|| std::env::var("IOP_AUTH_TOKEN").ok());
+    Ok((policy, token))
+}
+
 fn backend_tag(backend: &Backend) -> String {
     match backend {
         Backend::Reference => "reference".to_string(),
@@ -415,6 +456,7 @@ pub fn exec(a: &mut Args) -> Result<()> {
     let backend = backend_from_args(a, "reference")?;
     let (fault, recover) = fault_opts_from_args(a)?;
     let (workers, deploy_link, _) = deploy_from_args(a)?;
+    let (liveness, auth_token) = liveness_from_args(a)?;
     let json = a.bool("json");
     a.finish()?;
     // A deploy file may carry both an address list and link parameters;
@@ -437,6 +479,8 @@ pub fn exec(a: &mut Args) -> Result<()> {
             fault,
             workers,
             shape,
+            liveness,
+            auth_token,
             ..SessionOptions::default()
         },
     )?;
@@ -629,6 +673,7 @@ pub fn serve(a: &mut Args) -> Result<()> {
     let backend = backend_from_args(a, "compiled")?;
     let (fault, recover) = fault_opts_from_args(a)?;
     let (workers, deploy_link, workers_explicit) = deploy_from_args(a)?;
+    let (liveness, auth_token) = liveness_from_args(a)?;
     let transport = a.str_or("transport", "channel");
     let link_ms = f64_opt(a, "link-ms")?;
     let link_mbps = f64_opt(a, "link-mbps")?;
@@ -733,6 +778,9 @@ pub fn serve(a: &mut Args) -> Result<()> {
         None
     };
     let had_kills = fault.as_ref().is_some_and(|f| !f.kills.is_empty());
+    // Keep the address list: the post-run report probes each worker's
+    // STATUS endpoint.
+    let worker_addrs = workers.clone();
     let mut session = ExecSession::open(
         &model,
         &cluster,
@@ -746,6 +794,8 @@ pub fn serve(a: &mut Args) -> Result<()> {
             shape: shape.clone(),
             batch,
             batch_wait,
+            liveness,
+            auth_token: auth_token.clone(),
             ..SessionOptions::default()
         },
     )?;
@@ -979,6 +1029,59 @@ pub fn serve(a: &mut Args) -> Result<()> {
             session.devices(),
         );
     }
+    if !json {
+        // Keepalive summary over all runs (remote sessions only — the
+        // counters are zero everywhere else).
+        let mut live = crate::exec::LivenessStats::default();
+        for (_, r) in &runs {
+            live.add(&r.liveness);
+        }
+        if live.pings_sent > 0 || live.hung_workers > 0 {
+            println!(
+                "liveness: {} ping(s) / {} pong(s), {} suspect episode(s), \
+                 {} grace resume(s), {} hung worker(s)",
+                live.pings_sent,
+                live.pongs_received,
+                live.suspects,
+                live.grace_resumes,
+                live.hung_workers,
+            );
+        }
+        // Per-worker daemon status: probe each listener's STATUS
+        // endpoint (best effort — a worker that died mid-run reports as
+        // unreachable, which is itself informative).
+        if let Some(addrs) = &worker_addrs {
+            for (i, addr) in addrs.iter().enumerate() {
+                match crate::exec::probe_status(addr, auth_token.as_deref()) {
+                    Ok(s) => {
+                        let ages: Vec<String> = s
+                            .active
+                            .iter()
+                            .map(|a| {
+                                format!(
+                                    "session {:#x} epoch {} dev {} (ctrl {} ms ago)",
+                                    a.session, a.epoch, a.dev, a.last_ctrl_ms
+                                )
+                            })
+                            .collect();
+                        println!(
+                            "worker {i} @ {addr}: up {}, {} session(s) served, \
+                             {} request(s) executed{}",
+                            fmt_secs(s.uptime_secs),
+                            s.sessions_served,
+                            s.requests_executed,
+                            if ages.is_empty() {
+                                String::new()
+                            } else {
+                                format!("; active: {}", ages.join(", "))
+                            },
+                        );
+                    }
+                    Err(e) => println!("worker {i} @ {addr}: unreachable ({e:#})"),
+                }
+            }
+        }
+    }
     // Chaos-gate: a run that promises faults under --recover must
     // actually exercise the recovery path — a scheduled kill that never
     // fired (at_req beyond the run), or an externally injected fault
@@ -1036,18 +1139,84 @@ pub fn serve(a: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `iop worker` — a cooperative worker process serving plan shards over
+/// `iop worker` — a cooperative worker daemon serving plan shards over
 /// a real socket. Stateless across sessions: the coordinator ships
 /// model + cluster + plan configuration at handshake, so one worker
-/// fleet serves any model/strategy and survives coordinator restarts
-/// and re-plans (each new epoch simply reconfigures it). Blocks until
-/// killed.
+/// fleet serves any model/strategy (concurrently, one thread per
+/// connection) and survives coordinator restarts and re-plans (each
+/// new epoch simply reconfigures it). Blocks until killed.
+///
+/// `--status ADDR` instead probes a running daemon's STATUS endpoint
+/// and prints its uptime, lifetime counters, and active sessions with
+/// last-control-frame ages. `--auth-token` (or `IOP_AUTH_TOKEN`) sets
+/// the listener's shared secret / authenticates the probe; listening
+/// on a non-loopback TCP address without a token is refused.
 pub fn worker(a: &mut Args) -> Result<()> {
-    let listen = a
-        .str_opt("listen")
-        .ok_or_else(|| anyhow!("--listen ADDR is required (tcp:HOST:PORT or unix:PATH)"))?;
+    let listen = a.str_opt("listen");
+    let status = a.str_opt("status");
+    let json = a.bool("json");
+    let token = a
+        .str_opt("auth-token")
+        .or_else(|| std::env::var("IOP_AUTH_TOKEN").ok());
     a.finish()?;
-    crate::exec::run_worker(&listen)
+    if let Some(addr) = status {
+        if listen.is_some() {
+            bail!("--status probes an existing daemon; drop --listen");
+        }
+        let s = crate::exec::probe_status(&addr, token.as_deref())?;
+        if json {
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("addr", Json::str(addr)),
+                    ("uptime_secs", Json::num(s.uptime_secs)),
+                    ("sessions_served", Json::num(s.sessions_served as f64)),
+                    (
+                        "requests_executed",
+                        Json::num(s.requests_executed as f64)
+                    ),
+                    (
+                        "active",
+                        Json::Arr(
+                            s.active
+                                .iter()
+                                .map(|a| {
+                                    Json::obj(vec![
+                                        ("session", Json::num(a.session as f64)),
+                                        ("epoch", Json::num(a.epoch as f64)),
+                                        ("dev", Json::num(a.dev as f64)),
+                                        ("last_ctrl_ms", Json::num(a.last_ctrl_ms as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+                .to_string_pretty()
+            );
+        } else {
+            println!(
+                "worker @ {addr}: up {}, {} session(s) served, {} request(s) executed",
+                fmt_secs(s.uptime_secs),
+                s.sessions_served,
+                s.requests_executed,
+            );
+            for a in &s.active {
+                println!(
+                    "  session {:#x} epoch {} as device {}: last control frame {} ms ago",
+                    a.session, a.epoch, a.dev, a.last_ctrl_ms
+                );
+            }
+        }
+        return Ok(());
+    }
+    let listen = listen.ok_or_else(|| {
+        anyhow!("--listen ADDR is required (tcp:HOST:PORT or unix:PATH), or --status ADDR to probe")
+    })?;
+    if json {
+        bail!("--json only applies to --status probes");
+    }
+    crate::exec::run_worker(&listen, token)
 }
 
 /// `iop emit-plans` — canonical plans as JSON for the python AOT compiler.

@@ -90,13 +90,23 @@ COMMANDS:
   emit-plans [--models a,b] --out FILE
                                  Export canonical plans as JSON for the
                                  python AOT shard compiler
-  worker     --listen ADDR       Run a cooperative worker process that
+  worker     --listen ADDR       Run a cooperative worker daemon that
                                  serves plan shards over a real socket
                                  (ADDR = tcp:HOST:PORT or unix:PATH).
                                  Workers are stateless across sessions:
                                  the coordinator ships model + cluster +
                                  plan config at handshake, so one worker
-                                 fleet serves any model/strategy/epoch
+                                 fleet serves any model/strategy/epoch —
+                                 concurrently (one thread per connection,
+                                 distinct sessions in parallel).
+                                 --auth-token T (or IOP_AUTH_TOKEN)
+                                 requires T in every handshake; non-
+                                 loopback TCP listeners refuse to start
+                                 without one.
+             --status ADDR       Probe a running daemon instead: print
+                                 uptime, sessions served, requests
+                                 executed, and per-session last-control-
+                                 frame ages ([--json])
 
 MODEL INPUT: --model NAME (zoo) or --model-file SPEC.json (custom CNN)
 
@@ -160,6 +170,21 @@ REAL NETWORK TRANSPORT (`iop exec|serve` + `iop worker`):
                        surviving processes
   --deploy D.json      same, from a config file ({{"workers": [...],
                        "link": {{...}}}}); explicit flags override it
+  --heartbeat-ms MS    control-link keepalive interval: PING/PONG
+                       frames on idle links detect a *hung* or
+                       partitioned worker (no broken pipe) within
+                       MS x miss-limit, then hold a grace window of
+                       the same length in which a transient stall
+                       resumes the live epoch with no replan. 0
+                       disables the keepalive          [500]
+  --miss-limit N       consecutive missed heartbeats before the grace
+                       window opens                    [3]
+  --auth-token T       shared secret presented in every wire handshake
+                       (or IOP_AUTH_TOKEN); must match the workers'
+                       token. serve reports keepalive counters
+                       (pings/pongs, suspects, grace resumes, hung
+                       workers) and probes each worker's STATUS
+                       endpoint after the run
 
 SHAPED LINK (`iop serve --transport shaped`):
   --transport channel|shaped   in-process transport flavor  [channel]

@@ -58,7 +58,8 @@ pub fn cluster_from_json(j: &Json) -> Result<Cluster> {
 ///   "seed": 7,
 ///   "recv_timeout_ms": 2000,
 ///   "links": [{"from": 0, "to": 1, "delay_ms": 2, "drop_prob": 0.5}],
-///   "kills": [{"dev": 1, "at_req": 10, "at_stage": 3}]
+///   "kills": [{"dev": 1, "at_req": 10, "at_stage": 3}],
+///   "stalls": [{"dev": 1, "after_ms": 500, "duration_ms": 800}]
 /// }
 /// ```
 ///
@@ -78,6 +79,9 @@ pub struct FaultPlan {
     pub links: Vec<LinkFault>,
     /// Device kill triggers.
     pub kills: Vec<KillSpec>,
+    /// Control-link stall windows (hang/partition injection for the
+    /// liveness layer); only meaningful on socket sessions.
+    pub stalls: Vec<StallSpec>,
 }
 
 /// Faults on one directed link `from -> to`.
@@ -101,6 +105,19 @@ pub struct KillSpec {
     pub dev: usize,
     pub at_req: usize,
     pub at_stage: Option<usize>,
+}
+
+/// Simulate a hung or partitioned worker: starting `after_ms` after the
+/// epoch comes up, the coordinator-side keepalive treats device `dev`'s
+/// control link as silent (heartbeats neither sent nor heard) for
+/// `duration_ms` (`None` = forever — a wedged process). A stall shorter
+/// than the liveness grace window resumes the live epoch; a longer one
+/// escalates to the dead-worker signal exactly like a SIGSTOP'd process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StallSpec {
+    pub dev: usize,
+    pub after_ms: u64,
+    pub duration_ms: Option<u64>,
 }
 
 impl FaultPlan {
@@ -133,6 +150,20 @@ impl FaultPlan {
                 return Err(anyhow!(
                     "fault plan kills device {} outside the cluster (m={m})",
                     k.dev
+                ));
+            }
+        }
+        for s in &self.stalls {
+            if s.dev >= m {
+                return Err(anyhow!(
+                    "fault plan stalls device {} outside the cluster (m={m})",
+                    s.dev
+                ));
+            }
+            if s.duration_ms == Some(0) {
+                return Err(anyhow!(
+                    "fault plan stall on device {}: duration_ms must be > 0 (omit it for a permanent stall)",
+                    s.dev
                 ));
             }
         }
@@ -191,11 +222,28 @@ pub fn fault_plan_from_json(j: &Json) -> Result<FaultPlan> {
             });
         }
     }
+    let mut stalls = Vec::new();
+    if let Json::Arr(list) = j.get("stalls") {
+        for (i, s) in list.iter().enumerate() {
+            let dev = s
+                .get("dev")
+                .as_usize()
+                .ok_or_else(|| anyhow!("fault plan stall {i}: missing 'dev'"))?;
+            let after_ms = s
+                .get("after_ms")
+                .as_f64()
+                .ok_or_else(|| anyhow!("fault plan stall {i}: missing 'after_ms'"))?
+                as u64;
+            let duration_ms = s.get("duration_ms").as_f64().map(|v| v as u64);
+            stalls.push(StallSpec { dev, after_ms, duration_ms });
+        }
+    }
     Ok(FaultPlan {
         seed,
         recv_timeout_ms,
         links,
         kills,
+        stalls,
     })
 }
 
@@ -400,7 +448,9 @@ mod tests {
             r#"{"seed": 7, "recv_timeout_ms": 2000,
                 "links": [{"from": 0, "to": 1, "delay_ms": 2.5, "drop_prob": 0.5}],
                 "kills": [{"dev": 1, "at_req": 10, "at_stage": 3},
-                           {"dev": 2, "at_req": 4}]}"#,
+                           {"dev": 2, "at_req": 4}],
+                "stalls": [{"dev": 0, "after_ms": 500, "duration_ms": 800},
+                            {"dev": 2, "after_ms": 100}]}"#,
         )
         .unwrap();
         let p = fault_plan_from_json(&j).unwrap();
@@ -412,6 +462,9 @@ mod tests {
         assert_eq!(p.kills.len(), 2);
         assert_eq!(p.kills_for(1)[0].at_stage, Some(3));
         assert_eq!(p.kills_for(2)[0].at_stage, None);
+        assert_eq!(p.stalls.len(), 2);
+        assert_eq!(p.stalls[0].duration_ms, Some(800));
+        assert_eq!(p.stalls[1].duration_ms, None, "omitted duration = permanent stall");
         p.validate(3).unwrap();
     }
 
@@ -431,6 +484,8 @@ mod tests {
             r#"{"links": [{"from": 0, "to": 1, "delay_ms": -1}]}"#,
             r#"{"kills": [{"at_req": 3}]}"#,
             r#"{"kills": [{"dev": 1}]}"#,
+            r#"{"stalls": [{"after_ms": 100}]}"#,
+            r#"{"stalls": [{"dev": 1}]}"#,
         ] {
             assert!(
                 fault_plan_from_json(&Json::parse(bad).unwrap()).is_err(),
@@ -491,5 +546,16 @@ mod tests {
         )
         .unwrap();
         assert!(l.validate(2).is_err(), "self-loop links are rejected");
+        let s = fault_plan_from_json(
+            &Json::parse(r#"{"stalls": [{"dev": 2, "after_ms": 0}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(s.validate(2).is_err(), "stall device outside the cluster");
+        s.validate(3).unwrap();
+        let z = fault_plan_from_json(
+            &Json::parse(r#"{"stalls": [{"dev": 0, "after_ms": 0, "duration_ms": 0}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(z.validate(1).is_err(), "zero-duration stall is a typo, not a request");
     }
 }

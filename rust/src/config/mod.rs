@@ -31,7 +31,7 @@ pub mod model_cfg;
 
 pub use cluster_cfg::{
     cluster_from_json, deploy_from_json, fault_plan_from_json, link_shape_from_json, DeploySpec,
-    FaultPlan, KillSpec, LinkFault, LinkShape, ShapeOverride,
+    FaultPlan, KillSpec, LinkFault, LinkShape, ShapeOverride, StallSpec,
 };
 pub use model_cfg::model_from_json;
 

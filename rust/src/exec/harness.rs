@@ -47,7 +47,8 @@ use super::pjrt::PjrtRunner;
 use super::prepack::{CompiledDevice, CompiledPlan, ScratchArena};
 use super::remote::{spawn_remote_workers, RemoteCtx};
 use super::transport::{
-    make_endpoints_shaped, Msg, RecvDeadline, Shaping, Transport, WorkerKilled,
+    make_endpoints_shaped, LinkHealth, LivenessPolicy, LivenessStats, Msg, RecvDeadline, Shaping,
+    Transport, WorkerKilled,
 };
 use super::weights::{model_input, WeightBundle};
 
@@ -133,6 +134,18 @@ pub struct SessionOptions {
     /// timer flush dispatches it anyway (default [`DEFAULT_BATCH_WAIT`]).
     /// This bounds the queueing latency any request pays to batching.
     pub batch_wait: Option<Duration>,
+    /// Heartbeat policy for remote-worker control links (`workers`
+    /// sessions only; in-process channels cannot hang independently of
+    /// the process). `None` — the default — runs
+    /// [`LivenessPolicy::default`]; a policy with `interval_ms == 0`
+    /// disables the keepalive entirely (detection then relies on broken
+    /// pipes and receive deadlines alone, the pre-liveness behavior).
+    pub liveness: Option<LivenessPolicy>,
+    /// Shared secret presented in every wire HELLO (`workers` sessions
+    /// only). Must match the token the workers were started with;
+    /// workers listening on non-loopback TCP refuse to start without
+    /// one.
+    pub auth_token: Option<String>,
 }
 
 /// Default deadline for a single tagged receive. Generous, so healthy
@@ -618,6 +631,14 @@ pub struct ExecSession {
     shaping: Option<Arc<Shaping>>,
     /// Handles of retired worker epochs, joined (bounded) on drop.
     draining: Vec<std::thread::JoinHandle<()>>,
+    /// Per-worker liveness cells for the *current* epoch, plan-local
+    /// index (remote sessions with the keepalive on; empty otherwise).
+    /// The reap path reads these to tell a heartbeat-declared hang from
+    /// a plain crash.
+    health: Vec<Arc<LinkHealth>>,
+    /// Liveness counters folded in from retired epochs' cells
+    /// ([`ExecSession::liveness_stats`] adds the live epoch on top).
+    liveness_totals: LivenessStats,
     next_req: ReqId,
     /// Submitted requests not yet fully reported by all current workers.
     pending: HashMap<ReqId, PendingReq>,
@@ -742,8 +763,10 @@ impl ExecSession {
             }
             if opts.batch > 1 {
                 return Err(anyhow!(
-                    "cross-request batching is in-process only: the remote wire \
-                     protocol frames one REQUEST per request (drop --batch)"
+                    "cross-request batching is not supported over socket workers: \
+                     the wire protocol frames one REQUEST per request, so there is \
+                     no batched dispatch to coalesce into. Drop --batch to serve \
+                     over sockets, or drop --workers to batch on the in-process path"
                 ));
             }
         }
@@ -791,10 +814,18 @@ impl ExecSession {
             None => None,
         };
         let mut draining = Vec::new();
-        let (remote, ctrl_tx, done_rx, handles) = match &opts.workers {
+        let (remote, ctrl_tx, done_rx, handles, health) = match &opts.workers {
             Some(addrs) => {
-                let ctx = RemoteCtx::create(addrs.clone(), &model)?;
-                let (ctrl_tx, done_rx, handles, mut forwarders) = spawn_remote_workers(
+                let mut ctx = RemoteCtx::create(addrs.clone(), &model)?;
+                if let Some(t) = &opts.auth_token {
+                    ctx.auth_token = t.clone();
+                }
+                if let Some(p) = opts.liveness {
+                    // interval 0 is the documented off switch; the ctx
+                    // models "off" as the absence of a policy.
+                    ctx.liveness = if p.interval_ms == 0 { None } else { Some(p) };
+                }
+                let (ctrl_tx, done_rx, handles, mut forwarders, health) = spawn_remote_workers(
                     &ctx,
                     cluster.as_ref().unwrap(),
                     strategy.unwrap(),
@@ -805,7 +836,7 @@ impl ExecSession {
                     recv_timeout,
                 )?;
                 draining.append(&mut forwarders);
-                (Some(ctx), ctrl_tx, done_rx, handles)
+                (Some(ctx), ctrl_tx, done_rx, handles, health)
             }
             None => {
                 let (ctrl_tx, done_rx, handles) = spawn_workers(
@@ -818,7 +849,7 @@ impl ExecSession {
                     recv_timeout,
                     shaping.as_ref(),
                 );
-                (None, ctrl_tx, done_rx, handles)
+                (None, ctrl_tx, done_rx, handles, Vec::new())
             }
         };
         Ok(ExecSession {
@@ -843,6 +874,8 @@ impl ExecSession {
             remote,
             shaping,
             draining,
+            health,
+            liveness_totals: LivenessStats::default(),
             next_req: 0,
             pending: HashMap::new(),
             ready: BTreeMap::new(),
@@ -868,6 +901,17 @@ impl ExecSession {
     /// Snapshot of the recovery counters (all zero while healthy).
     pub fn recovery_stats(&self) -> RecoveryStats {
         self.recovery.clone()
+    }
+
+    /// Snapshot of the keepalive counters, summed over every worker link
+    /// and every epoch so far (all zero for in-process sessions and when
+    /// the heartbeat is disabled).
+    pub fn liveness_stats(&self) -> LivenessStats {
+        let mut total = self.liveness_totals;
+        for h in &self.health {
+            total.add(&h.stats());
+        }
+        total
     }
 
     /// Entries in the aborted-straggler map. Bounded by one in-flight
@@ -1127,13 +1171,21 @@ impl ExecSession {
             match self.done_rx.recv_timeout(tick) {
                 Ok((req, dev, w)) => return self.absorb(req, dev, w),
                 Err(RecvTimeoutError::Timeout) => {
-                    let dead = self
-                        .handles
-                        .iter()
-                        .position(|h| h.is_finished())
-                        .map(|i| self.devmap[i]);
-                    if let Some(d) = dead {
-                        let e = anyhow!("worker thread for device {d} exited without reporting");
+                    let dead = self.handles.iter().position(|h| h.is_finished());
+                    if let Some(i) = dead {
+                        let d = self.devmap[i];
+                        // A heartbeat-declared hang leaves its verdict in
+                        // the link's health cell (the keepalive shut the
+                        // socket, which is what ended the reader thread):
+                        // surface the typed cause instead of the generic
+                        // exited-without-reporting story.
+                        let e = match self.health.get(i).and_then(|h| h.verdict()) {
+                            Some(v) => anyhow::Error::new(v)
+                                .context(format!("device {d} declared hung by the keepalive")),
+                            None => {
+                                anyhow!("worker thread for device {d} exited without reporting")
+                            }
+                        };
                         return self.on_worker_death(d, e);
                     }
                 }
@@ -1303,7 +1355,7 @@ impl ExecSession {
             ctx.epoch += 1;
             ctx.clone()
         });
-        let (ctrl_tx, done_rx, handles) = match remote_ctx {
+        let (ctrl_tx, done_rx, handles, health) = match remote_ctx {
             Some(ctx) => match spawn_remote_workers(
                 &ctx,
                 &survivor,
@@ -1314,10 +1366,10 @@ impl ExecSession {
                 plan.m,
                 self.recv_timeout,
             ) {
-                Ok((ctrl_tx, done_rx, handles, mut forwarders)) => {
+                Ok((ctrl_tx, done_rx, handles, mut forwarders, health)) => {
                     self.remote = Some(ctx);
                     self.draining.append(&mut forwarders);
-                    (ctrl_tx, done_rx, handles)
+                    (ctrl_tx, done_rx, handles, health)
                 }
                 Err(e) => {
                     return self.poison(
@@ -1327,20 +1379,29 @@ impl ExecSession {
                     );
                 }
             },
-            None => spawn_workers(
-                &self.model,
-                &plan,
-                &self.wb,
-                &self.backend,
-                self.fault.as_ref(),
-                &self.devmap,
-                self.recv_timeout,
-                self.shaping.as_ref(),
-            ),
+            None => {
+                let (ctrl_tx, done_rx, handles) = spawn_workers(
+                    &self.model,
+                    &plan,
+                    &self.wb,
+                    &self.backend,
+                    self.fault.as_ref(),
+                    &self.devmap,
+                    self.recv_timeout,
+                    self.shaping.as_ref(),
+                );
+                (ctrl_tx, done_rx, handles, Vec::new())
+            }
         };
         self.ctrl_tx = ctrl_tx;
         self.done_rx = done_rx;
         self.handles = handles;
+        // Retire the dead epoch's liveness counters into the running
+        // totals before its cells are dropped.
+        for h in &self.health {
+            self.liveness_totals.add(&h.stats());
+        }
+        self.health = health;
         self.recovery.replans += 1;
         // Replay every in-flight request in id order, so the new epoch's
         // per-worker FIFO still processes them in submission order.

@@ -30,7 +30,17 @@
 //! the partition onto the survivors and replaying in-flight requests
 //! ([`RecoveryStats`] counts the damage) instead of poisoning — for
 //! remote sessions that includes a worker *process* dying mid-request
-//! (broken sockets map to the same dead-worker signal).
+//! (broken sockets map to the same dead-worker signal). Remote control
+//! links additionally run a keepalive ([`LivenessPolicy`]): PING/PONG
+//! frames detect a hung or partitioned worker — one that never breaks
+//! the pipe — within `interval × miss_limit`, hold a grace window in
+//! which a transient stall resumes the live epoch with no replan, and
+//! otherwise fold the hang into the same dead-worker signal as a crash
+//! ([`WorkerUnresponsive`]). Workers themselves are concurrent daemons
+//! ([`run_worker`]): one thread per connection, a registry of
+//! concurrent sessions, an optional shared-secret auth gate on every
+//! handshake, and a STATUS endpoint ([`probe_status`]) reporting
+//! uptime, lifetime counters, and per-session heartbeat ages.
 //!
 //! Four backends:
 //!  * [`Backend::Reference`] — scalar host tensor ops (`tensor::ops`), no
@@ -76,10 +86,11 @@ pub use harness::{
 pub use prepack::{
     force_lowering, lowering_selected, CompiledDevice, CompiledPlan, ConvLowering, ScratchArena,
 };
-pub use remote::run_worker;
+pub use remote::{probe_status, run_worker};
 pub use serve::{serve_closed_loop, serve_open_loop, OpenLoopOptions, ServeOptions, ThroughputReport};
 pub use transport::{
-    ChannelTransport, FaultTransport, MediumMeter, Msg, RecvDeadline, RecvError, ShapedTransport,
-    Shaping, SocketTransport, Transport, WorkerKilled,
+    ChannelTransport, FaultTransport, LinkHealth, LinkState, LivenessPolicy, LivenessStats,
+    MediumMeter, Msg, RecvDeadline, RecvError, ShapedTransport, Shaping, SocketTransport,
+    Transport, WorkerKilled, WorkerUnresponsive,
 };
 pub use wire::WireError;

@@ -28,6 +28,8 @@
 //! [`wire::RemoteErr`] and are rebuilt with the same error roots
 //! ([`WorkerKilled`], [`RecvDeadline`]) the supervisor classifies.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -35,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{fault_plan_from_json, model_from_json, FaultPlan};
+use crate::config::{fault_plan_from_json, model_from_json, FaultPlan, StallSpec};
 use crate::device::Cluster;
 use crate::model::{Model, OpKind};
 use crate::partition::Strategy;
@@ -45,7 +47,8 @@ use crate::util::prng::SplitMix64;
 use super::harness::{worker_loop, Backend, Control, Done, WorkerOut};
 use super::prepack::CompiledPlan;
 use super::transport::{
-    FaultTransport, Msg, RecvDeadline, SocketTransport, Transport, WorkerKilled,
+    FaultTransport, LinkHealth, LivenessPolicy, Msg, RecvDeadline, SocketTransport, Transport,
+    WorkerKilled,
 };
 use super::wire::{self, Hello, HelloReject, RemoteErr, RemoteOut, Stream};
 use super::weights::WeightBundle;
@@ -76,6 +79,13 @@ pub(crate) struct RemoteCtx {
     pub epoch: u64,
     /// Model spec JSON, round-trip-verified at session open.
     pub model_spec: String,
+    /// Shared secret carried in every HELLO (empty = unauthenticated
+    /// listeners; required by workers bound to non-loopback TCP).
+    pub auth_token: String,
+    /// Heartbeat policy for the control links; `None` disables the
+    /// keepalive entirely (detection falls back to broken pipes and
+    /// receive deadlines, the pre-liveness behavior).
+    pub liveness: Option<LivenessPolicy>,
 }
 
 impl RemoteCtx {
@@ -88,6 +98,8 @@ impl RemoteCtx {
             session: new_session_id(),
             epoch: 0,
             model_spec: model_to_spec_json(model)?,
+            auth_token: String::new(),
+            liveness: Some(LivenessPolicy::default()),
         })
     }
 }
@@ -222,6 +234,24 @@ fn fault_plan_to_json(p: &FaultPlan) -> Json {
                 .collect(),
         ),
     ));
+    pairs.push((
+        "stalls",
+        Json::arr(
+            p.stalls
+                .iter()
+                .map(|s| {
+                    let mut sp = vec![
+                        ("dev", Json::num(s.dev as f64)),
+                        ("after_ms", Json::num(s.after_ms as f64)),
+                    ];
+                    if let Some(d) = s.duration_ms {
+                        sp.push(("duration_ms", Json::num(d as f64)));
+                    }
+                    Json::obj(sp)
+                })
+                .collect(),
+        ),
+    ));
     Json::obj(pairs)
 }
 
@@ -250,9 +280,25 @@ pub(crate) struct SessionConfig {
     pub backend: Backend,
     pub recv_timeout_ms: u64,
     pub fault: Option<FaultPlan>,
+    /// Shared listener secret; workers reuse it when dialing mesh peers.
+    pub auth_token: String,
+    /// Control-link heartbeat interval (0 = keepalive disabled).
+    pub heartbeat_ms: u64,
+    /// Consecutive missed intervals before the grace window opens.
+    pub miss_limit: u32,
 }
 
 impl SessionConfig {
+    /// The liveness policy this config carries, if the keepalive is on.
+    pub fn liveness(&self) -> Option<LivenessPolicy> {
+        if self.heartbeat_ms == 0 {
+            return None;
+        }
+        Some(LivenessPolicy {
+            interval_ms: self.heartbeat_ms,
+            miss_limit: self.miss_limit.max(1),
+        })
+    }
     pub fn to_json(&self) -> Result<Json> {
         let (backend, threads) = match &self.backend {
             Backend::Reference => ("reference", 0),
@@ -281,6 +327,9 @@ impl SessionConfig {
             ("backend", Json::str(backend)),
             ("threads", Json::num(threads as f64)),
             ("recv_timeout_ms", Json::num(self.recv_timeout_ms as f64)),
+            ("auth_token", Json::str(self.auth_token.as_str())),
+            ("heartbeat_ms", Json::num(self.heartbeat_ms as f64)),
+            ("miss_limit", Json::num(self.miss_limit as f64)),
         ];
         if let Some(f) = &self.fault {
             pairs.push(("fault", fault_plan_to_json(f)));
@@ -356,6 +405,13 @@ impl SessionConfig {
             backend,
             recv_timeout_ms: need("recv_timeout_ms")? as u64,
             fault,
+            auth_token: j
+                .get("auth_token")
+                .as_str()
+                .map(String::from)
+                .unwrap_or_default(),
+            heartbeat_ms: j.get("heartbeat_ms").as_f64().unwrap_or(0.0) as u64,
+            miss_limit: j.get("miss_limit").as_f64().unwrap_or(1.0) as u32,
         })
     }
 }
@@ -455,6 +511,7 @@ pub(crate) fn spawn_remote_workers(
     Receiver<Done>,
     Vec<JoinHandle<()>>,
     Vec<JoinHandle<()>>,
+    Vec<Arc<LinkHealth>>,
 )> {
     let model = Json::parse(&ctx.model_spec)
         .map_err(|e| anyhow!("session model spec is not JSON: {e}"))?;
@@ -474,6 +531,7 @@ pub(crate) fn spawn_remote_workers(
             epoch: ctx.epoch,
             from: wire::CTRL_FROM,
             to: i as u32,
+            token: ctx.auth_token.clone(),
         };
         wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&hello))
             .with_context(|| format!("worker {i} at {addr}: sending hello"))?;
@@ -503,6 +561,9 @@ pub(crate) fn spawn_remote_workers(
             backend: backend.clone(),
             recv_timeout_ms: recv_timeout.as_millis() as u64,
             fault: fault.map(|f| f.as_ref().clone()),
+            auth_token: ctx.auth_token.clone(),
+            heartbeat_ms: ctx.liveness.map_or(0, |p| p.interval_ms),
+            miss_limit: ctx.liveness.map_or(1, |p| p.miss_limit),
         };
         wire::write_frame(&mut s, wire::K_CONFIG, &wire::encode_config(&cfg.to_json()?))
             .with_context(|| format!("worker {i} at {addr}: sending config"))?;
@@ -529,63 +590,108 @@ pub(crate) fn spawn_remote_workers(
         s.set_read_timeout(None)
             .with_context(|| format!("worker {i}"))?;
     }
-    // Per worker: forwarder + done reader over the two socket halves.
+    // Per worker: forwarder + done reader over the two socket halves,
+    // plus (policy permitting) a keepalive thread sharing the write
+    // half with the forwarder — frames are single `write_all`s, and the
+    // mutex keeps a PING from interleaving into a REQUEST.
     let (done_tx, done_rx) = channel::<Done>();
     let mut ctrl_tx = Vec::with_capacity(m);
     let mut readers = Vec::with_capacity(m);
     let mut forwarders = Vec::with_capacity(m);
+    let mut health = Vec::with_capacity(m);
     for (i, s) in conns.into_iter().enumerate() {
         let mut rconn = s.try_clone().map_err(|e| anyhow!("worker {i}: {e}"))?;
-        let mut wconn = s;
+        let wconn = Arc::new(Mutex::new(s));
+        let hcell = LinkHealth::new();
+        health.push(Arc::clone(&hcell));
+        let stop = Arc::new(AtomicBool::new(false));
         let (ctl_tx, ctl_rx) = channel::<Control>();
         ctrl_tx.push(ctl_tx);
-        forwarders.push(std::thread::spawn(move || {
-            while let Ok(ctl) = ctl_rx.recv() {
-                match ctl {
-                    Control::Request { reqs, inputs } => {
-                        // The wire protocol frames one REQUEST per
-                        // request; remote sessions only ever carry
-                        // singleton batches (batch > 1 is rejected at
-                        // session build), so this loop writes one frame.
-                        let mut broken = false;
-                        for (req, input) in reqs.iter().zip(&inputs) {
-                            let body = wire::encode_request(*req, input);
-                            if wire::write_frame(&mut wconn, wire::K_REQUEST, &body).is_err() {
-                                // Worker gone mid-send; its reader thread
-                                // reports the death to the supervisor.
-                                broken = true;
+        if let Some(policy) = ctx.liveness {
+            let stalls: Vec<StallSpec> = fault
+                .map(|f| {
+                    f.stalls
+                        .iter()
+                        .filter(|st| st.dev == devmap[i])
+                        .cloned()
+                        .collect()
+                })
+                .unwrap_or_default();
+            let w = Arc::clone(&wconn);
+            let h = Arc::clone(&hcell);
+            let st = Arc::clone(&stop);
+            let dev_global = devmap[i];
+            forwarders.push(std::thread::spawn(move || {
+                keepalive_loop(w, h, policy, dev_global, stalls, st);
+            }));
+        }
+        {
+            let wconn = Arc::clone(&wconn);
+            let stop = Arc::clone(&stop);
+            forwarders.push(std::thread::spawn(move || {
+                while let Ok(ctl) = ctl_rx.recv() {
+                    match ctl {
+                        Control::Request { reqs, inputs } => {
+                            // The wire protocol frames one REQUEST per
+                            // request; remote sessions only ever carry
+                            // singleton batches (batch > 1 is rejected at
+                            // session build), so this loop writes one frame.
+                            let mut broken = false;
+                            for (req, input) in reqs.iter().zip(&inputs) {
+                                let body = wire::encode_request(*req, input);
+                                let r = wire::write_frame(
+                                    &mut *wconn.lock().unwrap(),
+                                    wire::K_REQUEST,
+                                    &body,
+                                );
+                                if r.is_err() {
+                                    // Worker gone mid-send; its reader thread
+                                    // reports the death to the supervisor.
+                                    broken = true;
+                                    break;
+                                }
+                            }
+                            if broken {
                                 break;
                             }
                         }
-                        if broken {
+                        Control::Shutdown => {
+                            let _ = wire::write_frame(
+                                &mut *wconn.lock().unwrap(),
+                                wire::K_SHUTDOWN,
+                                &[],
+                            );
                             break;
                         }
                     }
-                    Control::Shutdown => {
-                        let _ = wire::write_frame(&mut wconn, wire::K_SHUTDOWN, &[]);
-                        break;
-                    }
                 }
-            }
-            // Half-close so the worker's control reader sees EOF even
-            // if the SHUTDOWN frame was lost to a broken pipe.
-            wconn.shutdown_write();
-        }));
+                // Stop the keepalive, then half-close so the worker's
+                // control reader sees EOF even if the SHUTDOWN frame was
+                // lost to a broken pipe.
+                stop.store(true, Ordering::Relaxed);
+                wconn.lock().unwrap().shutdown_write();
+            }));
+        }
         let done = done_tx.clone();
         readers.push(std::thread::spawn(move || {
             loop {
                 match wire::read_frame(&mut rconn) {
-                    Ok((wire::K_DONE, body)) => match wire::decode_done(&body) {
-                        Ok(f) if f.dev == i => {
-                            if done.send((f.req, f.dev, from_remote(f.result))).is_err() {
-                                break; // session gone
+                    Ok((wire::K_DONE, body)) => {
+                        // Any DONE is proof of life for the keepalive.
+                        hcell.heard();
+                        match wire::decode_done(&body) {
+                            Ok(f) if f.dev == i => {
+                                if done.send((f.req, f.dev, from_remote(f.result))).is_err() {
+                                    break; // session gone
+                                }
                             }
+                            // Wrong device id or malformed DONE: treat the
+                            // link as poisoned — exiting lets the
+                            // supervisor's reap path classify the loss.
+                            _ => break,
                         }
-                        // Wrong device id or malformed DONE: treat the
-                        // link as poisoned — exiting lets the
-                        // supervisor's reap path classify the loss.
-                        _ => break,
-                    },
+                    }
+                    Ok((wire::K_PONG, _)) => hcell.pong(),
                     // EOF, reset, or junk: the worker process is gone
                     // (or unusable). Exit; the supervisor reaps us.
                     _ => break,
@@ -594,15 +700,119 @@ pub(crate) fn spawn_remote_workers(
             rconn.shutdown_both();
         }));
     }
-    Ok((ctrl_tx, done_rx, readers, forwarders))
+    Ok((ctrl_tx, done_rx, readers, forwarders, health))
+}
+
+/// Per-worker coordinator keepalive: every `interval_ms` of control-link
+/// silence, write a PING and count the miss. The state machine is
+/// alive → suspect (a probe went unanswered for a full interval) → grace
+/// (`miss_limit` consecutive misses; probing continues with the replan
+/// held back for one more detection window) → dead. Death shuts the
+/// control socket, which makes the done-reader exit — the *same*
+/// dead-worker signal a broken pipe produces, so the supervisor's
+/// recovery path runs unchanged for hangs and partitions.
+///
+/// `stalls` is this worker's slice of the fault plan's stall schedule:
+/// inside a scheduled window the health cell is muffled (inbound
+/// proof-of-life ignored), which simulates a partition of this one link
+/// without touching the real socket.
+fn keepalive_loop(
+    wconn: Arc<Mutex<Stream>>,
+    health: Arc<LinkHealth>,
+    policy: LivenessPolicy,
+    dev_global: usize,
+    stalls: Vec<StallSpec>,
+    stop: Arc<AtomicBool>,
+) {
+    let t0 = Instant::now();
+    let interval = Duration::from_millis(policy.interval_ms.max(1));
+    // Fine-grained tick so shutdown and stall-window edges are honored
+    // promptly even under second-scale heartbeat intervals.
+    let tick = Duration::from_millis(policy.interval_ms.clamp(1, 20));
+    let mut nonce: u64 = (dev_global as u64) << 32;
+    let mut missed: u32 = 0;
+    let mut grace_until: Option<Instant> = None;
+    let mut last_marker: u64 = health.heard_marker();
+    let mut next_check = Instant::now() + interval;
+    loop {
+        std::thread::sleep(tick);
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let el = t0.elapsed().as_millis() as u64;
+        let in_stall = stalls
+            .iter()
+            .any(|s| el >= s.after_ms && s.duration_ms.map_or(true, |d| el < s.after_ms + d));
+        health.set_muffled(in_stall);
+        if Instant::now() < next_check {
+            continue;
+        }
+        next_check = Instant::now() + interval;
+        // "Heard anything since the previous check?" is asked through
+        // the monotone heard-marker, not a strict silence window: an
+        // idle healthy link's PONG lands just after each check-time
+        // PING, so raw silence at the next check is one interval plus
+        // scheduling drift and would miscount a responsive worker.
+        let marker = health.heard_marker();
+        let answered = marker != last_marker || health.silent_ms() < policy.interval_ms;
+        last_marker = marker;
+        if answered {
+            missed = 0;
+            grace_until = None;
+        }
+        if health.silent_ms() < policy.interval_ms {
+            // Traffic flowed this interval — no probe needed.
+            continue;
+        }
+        // The link is idle (answered probes, routine) or stalled
+        // (unanswered, score the miss): probe either way, so an idle
+        // healthy link sees one PING/PONG round trip per interval and
+        // the worker's control lease stays fresh.
+        if !answered {
+            missed = missed.saturating_add(1);
+        }
+        nonce = nonce.wrapping_add(1);
+        let wrote = wire::write_frame(
+            &mut *wconn.lock().unwrap(),
+            wire::K_PING,
+            &wire::encode_ping(nonce),
+        )
+        .is_ok();
+        health.ping_sent();
+        if !wrote {
+            // Broken pipe: the reader sees the same thing and the
+            // supervisor already owns that failure mode.
+            return;
+        }
+        if missed >= 2 {
+            health.mark_suspect();
+        }
+        if missed >= policy.miss_limit {
+            health.mark_suspect();
+            match grace_until {
+                None => {
+                    health.mark_grace();
+                    grace_until =
+                        Some(Instant::now() + Duration::from_millis(policy.grace_ms()));
+                }
+                Some(t) if Instant::now() >= t => {
+                    health.mark_dead(dev_global, missed);
+                    wconn.lock().unwrap().shutdown_both();
+                    return;
+                }
+                Some(_) => {}
+            }
+        }
+    }
 }
 
 // ---------- worker process ----------
 
-/// The route one worker process currently serves: at most one
-/// `(session, epoch)` at a time, replaced wholesale when a newer epoch's
-/// control hello is admitted. Peer accept threads clone the inbox out
-/// of here; when an epoch is torn down its inbox receiver drops and
+/// One live route in the worker daemon's registry: the current epoch of
+/// one session. Concurrent *sessions* each get their own entry (keyed
+/// by session id); within a session, a newer epoch's control hello
+/// replaces the entry wholesale. Peer accept threads clone the inbox
+/// out of here; when an epoch is torn down its inbox receiver drops and
 /// stale pumps unwind on their next send.
 struct Route {
     session: u64,
@@ -612,27 +822,93 @@ struct Route {
     /// Plan width (bounds peer ids on inbound mesh hellos).
     m: usize,
     inbox: Sender<Msg>,
+    /// Milliseconds since daemon start at the last control frame
+    /// (REQUEST or PING) — the STATUS report derives heartbeat ages
+    /// from this.
+    last_ctrl: Arc<AtomicU64>,
 }
 
-#[derive(Default)]
+/// Shared daemon state: the session registry plus lifetime counters for
+/// the STATUS report.
 struct WorkerState {
-    route: Mutex<Option<Route>>,
+    started: Instant,
+    /// Listener auth secret (empty = unauthenticated).
+    auth_token: String,
+    sessions_served: AtomicU64,
+    requests_executed: AtomicU64,
+    routes: Mutex<HashMap<u64, Route>>,
+}
+
+impl WorkerState {
+    fn new(auth_token: String) -> WorkerState {
+        WorkerState {
+            started: Instant::now(),
+            auth_token,
+            sessions_served: AtomicU64::new(0),
+            requests_executed: AtomicU64::new(0),
+            routes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    fn status(&self) -> wire::WorkerStatus {
+        let now = self.now_ms();
+        let active = {
+            let routes = self.routes.lock().unwrap();
+            let mut v: Vec<wire::SessionStatus> = routes
+                .values()
+                .map(|r| wire::SessionStatus {
+                    session: r.session,
+                    epoch: r.epoch,
+                    dev: r.dev as u32,
+                    last_ctrl_ms: now.saturating_sub(r.last_ctrl.load(Ordering::Relaxed)),
+                })
+                .collect();
+            v.sort_by_key(|s| s.session);
+            v
+        };
+        wire::WorkerStatus {
+            uptime_secs: self.started.elapsed().as_secs_f64(),
+            sessions_served: self.sessions_served.load(Ordering::Relaxed),
+            requests_executed: self.requests_executed.load(Ordering::Relaxed),
+            active,
+        }
+    }
 }
 
 /// `iop worker --listen ADDR`: bind and serve sessions until killed.
 /// One process == one cooperative device; the coordinator assigns the
-/// plan-local identity per epoch via CONFIG.
-pub fn run_worker(listen: &str) -> Result<()> {
+/// plan-local identity per epoch via CONFIG. The daemon serves any
+/// number of concurrent sessions (distinct session ids), each on its
+/// own control connection and thread.
+///
+/// A non-loopback TCP listener refuses to start without an auth token:
+/// the wire protocol executes whatever CONFIG it is sent, so an open
+/// port on a real network would be an unauthenticated remote-execution
+/// endpoint. Unix sockets and loopback binds are exempt.
+pub fn run_worker(listen: &str, auth_token: Option<String>) -> Result<()> {
     let addr = wire::Addr::parse(listen).map_err(|e| anyhow!(e))?;
+    let token = auth_token.unwrap_or_default();
+    if !addr.is_loopback() && token.is_empty() {
+        return Err(anyhow!(
+            "refusing to listen on non-loopback address {addr} without an auth token: \
+             pass --auth-token TOKEN or set IOP_AUTH_TOKEN (unix sockets and loopback \
+             addresses are exempt)"
+        ));
+    }
     let listener = wire::Listener::bind(&addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("iop worker: listening on {addr}");
-    serve_accept_loop(listener)
+    serve_accept_loop(listener, token)
 }
 
 /// Accept loop: every connection gets its own handler thread (control
-/// links run a whole epoch; mesh links pump tensor frames).
-fn serve_accept_loop(listener: wire::Listener) -> Result<()> {
-    let state = Arc::new(WorkerState::default());
+/// links run a whole epoch; mesh links pump tensor frames; status
+/// probes are answered and closed).
+fn serve_accept_loop(listener: wire::Listener, auth_token: String) -> Result<()> {
+    let state = Arc::new(WorkerState::new(auth_token));
     loop {
         match listener.accept() {
             Ok(conn) => {
@@ -685,26 +961,48 @@ fn handle_conn(mut conn: Stream, state: Arc<WorkerState>) -> Result<()> {
             return Ok(());
         }
     };
+    // Auth gate: constant-time compare, and the refusal never echoes
+    // either token. Applies to every role, status probes included.
+    if !wire::token_eq(&hello.token, &state.auth_token) {
+        reject(&mut conn, wire::REJ_BAD, "authentication failed".into());
+        return Ok(());
+    }
     match hello.role {
         wire::ROLE_CTRL => serve_session(conn, state, hello),
+        wire::ROLE_STATUS => answer_status(conn, state),
         _ => attach_peer(conn, state, hello),
     }
 }
 
-/// Mesh link handler: admit a peer's hello against the current route
-/// and pump its tensor frames into the epoch's inbox until EOF.
+/// One-shot liveness probe: answer a STATUS frame and close.
+fn answer_status(mut conn: Stream, state: Arc<WorkerState>) -> Result<()> {
+    let s = state.status();
+    wire::write_frame(&mut conn, wire::K_STATUS, &wire::encode_status(&s))?;
+    conn.shutdown_both();
+    Ok(())
+}
+
+/// Mesh link handler: admit a peer's hello against the registry entry
+/// for its session and pump its tensor frames into the epoch's inbox
+/// until EOF.
 fn attach_peer(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Result<()> {
     let inbox = {
-        let route = state.route.lock().unwrap();
-        match route.as_ref() {
+        let routes = state.routes.lock().unwrap();
+        match routes.get(&hello.session) {
             None => {
-                reject(&mut conn, wire::REJ_NOT_READY, "no live session yet".into());
+                // This session's CONFIG has not reached us yet; the
+                // dialer backs off and retries.
+                reject(
+                    &mut conn,
+                    wire::REJ_NOT_READY,
+                    format!("session {:#x} is not configured here yet", hello.session),
+                );
                 return Ok(());
             }
             Some(r) => {
-                if r.session != hello.session || hello.epoch > r.epoch {
-                    // This epoch's CONFIG has not reached us yet; the
-                    // dialer backs off and retries.
+                if hello.epoch > r.epoch {
+                    // Same story, one epoch later: the newer CONFIG is
+                    // still in flight.
                     reject(
                         &mut conn,
                         wire::REJ_NOT_READY,
@@ -787,9 +1085,9 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
         return Ok(());
     }
     {
-        let route = state.route.lock().unwrap();
-        if let Some(r) = route.as_ref() {
-            if r.session == hello.session && r.epoch >= hello.epoch {
+        let routes = state.routes.lock().unwrap();
+        if let Some(r) = routes.get(&hello.session) {
+            if r.epoch >= hello.epoch {
                 reject(
                     &mut conn,
                     wire::REJ_STALE,
@@ -835,23 +1133,29 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
     // Install the route before dialing out: peers admit our mesh links
     // only once their own CONFIG landed, and vice versa.
     let (inbox_tx, inbox_rx) = channel::<Msg>();
+    let last_ctrl = Arc::new(AtomicU64::new(state.now_ms()));
     {
-        let mut route = state.route.lock().unwrap();
-        if let Some(r) = route.as_ref() {
+        let mut routes = state.routes.lock().unwrap();
+        if let Some(r) = routes.get(&hello.session) {
             // Another control link may have raced a newer epoch in
             // between our admission check and now.
-            if r.session == hello.session && r.epoch >= hello.epoch {
+            if r.epoch >= hello.epoch {
                 return Err(anyhow!("lost the control race to a newer epoch"));
             }
         }
-        *route = Some(Route {
-            session: cfg.session,
-            epoch: cfg.epoch,
-            dev: cfg.dev,
-            m: plan.m,
-            inbox: inbox_tx.clone(),
-        });
+        routes.insert(
+            cfg.session,
+            Route {
+                session: cfg.session,
+                epoch: cfg.epoch,
+                dev: cfg.dev,
+                m: plan.m,
+                inbox: inbox_tx.clone(),
+                last_ctrl: Arc::clone(&last_ctrl),
+            },
+        );
     }
+    state.sessions_served.fetch_add(1, Ordering::Relaxed);
     eprintln!(
         "iop worker: serving session {:#x} epoch {} as device {} (m={})",
         cfg.session, cfg.epoch, cfg.dev, plan.m
@@ -879,11 +1183,18 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
         None => Box::new(sock),
     };
     wire::write_frame(&mut conn, wire::K_CONFIG_OK, &[])?;
-    conn.set_read_timeout(None)?;
-    // Bridge: this thread reads REQUEST/SHUTDOWN frames into the control
-    // channel; a writer thread turns completion reports into DONE frames
-    // on the other half of the socket; worker_loop runs unmodified in
-    // between.
+    // Worker-side lease: with the keepalive on, the coordinator is
+    // never silent longer than ~2 intervals (PINGs keep flowing even on
+    // an idle session), so a control link silent past the lease means
+    // the coordinator is gone or partitioned — tear the epoch down
+    // instead of pinning a thread and a registry entry forever.
+    let lease = cfg.liveness().map(|p| Duration::from_millis(p.lease_ms()));
+    conn.set_read_timeout(lease)?;
+    // Bridge: this thread reads REQUEST/PING/SHUTDOWN frames into the
+    // control channel; a writer thread turns completion reports into
+    // DONE frames on the shared write half (mutexed, so PONGs written
+    // here never interleave into a DONE frame); worker_loop runs
+    // unmodified in between.
     let (ctl_tx, ctl_rx) = channel::<Control>();
     let (done_tx, done_rx) = channel::<Done>();
     let recv_timeout = Duration::from_millis(cfg.recv_timeout_ms.max(1));
@@ -898,24 +1209,36 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
             )
         })
     };
-    let mut wconn = conn.try_clone().context("cloning the control stream")?;
-    let writer = std::thread::spawn(move || {
-        while let Ok((req, dev, result)) = done_rx.recv() {
-            let frame = wire::DoneFrame {
-                req,
-                dev,
-                result: to_remote(result),
-            };
-            if wire::write_frame(&mut wconn, wire::K_DONE, &wire::encode_done(&frame)).is_err() {
-                break; // coordinator gone; the reader side tears down
+    let wshared = Arc::new(Mutex::new(
+        conn.try_clone().context("cloning the control stream")?,
+    ));
+    let writer = {
+        let wshared = Arc::clone(&wshared);
+        std::thread::spawn(move || {
+            while let Ok((req, dev, result)) = done_rx.recv() {
+                let frame = wire::DoneFrame {
+                    req,
+                    dev,
+                    result: to_remote(result),
+                };
+                let r = wire::write_frame(
+                    &mut *wshared.lock().unwrap(),
+                    wire::K_DONE,
+                    &wire::encode_done(&frame),
+                );
+                if r.is_err() {
+                    break; // coordinator gone; the reader side tears down
+                }
             }
-        }
-        wconn.shutdown_write();
-    });
+            wshared.lock().unwrap().shutdown_write();
+        })
+    };
     loop {
         match wire::read_frame(&mut conn) {
             Ok((wire::K_REQUEST, body)) => match wire::decode_request(&body) {
                 Ok(rf) => {
+                    last_ctrl.store(state.now_ms(), Ordering::Relaxed);
+                    state.requests_executed.fetch_add(1, Ordering::Relaxed);
                     if ctl_tx
                         .send(Control::Request {
                             reqs: vec![rf.req],
@@ -931,12 +1254,41 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
                     break;
                 }
             },
+            Ok((wire::K_PING, body)) => {
+                last_ctrl.store(state.now_ms(), Ordering::Relaxed);
+                let nonce = wire::decode_ping(&body).unwrap_or(0);
+                let r = wire::write_frame(
+                    &mut *wshared.lock().unwrap(),
+                    wire::K_PONG,
+                    &wire::encode_ping(nonce),
+                );
+                if r.is_err() {
+                    break; // coordinator's read half is gone
+                }
+            }
             Ok((wire::K_SHUTDOWN, _)) | Err(wire::WireError::Eof) => {
                 let _ = ctl_tx.send(Control::Shutdown);
                 break;
             }
             Ok((k, _)) => {
                 eprintln!("iop worker: unexpected frame kind {k:#04x} on the control link");
+                break;
+            }
+            Err(wire::WireError::Io(ref e))
+                if lease.is_some()
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                eprintln!(
+                    "iop worker: control lease expired (no frame in {} ms), closing \
+                     session {:#x} epoch {}",
+                    lease.map(|d| d.as_millis()).unwrap_or(0),
+                    cfg.session,
+                    cfg.epoch
+                );
+                let _ = ctl_tx.send(Control::Shutdown);
                 break;
             }
             Err(e) => {
@@ -953,10 +1305,10 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
     let _ = worker.join();
     let _ = writer.join();
     {
-        let mut route = state.route.lock().unwrap();
-        if let Some(r) = route.as_ref() {
-            if r.session == cfg.session && r.epoch == cfg.epoch {
-                *route = None;
+        let mut routes = state.routes.lock().unwrap();
+        if let Some(r) = routes.get(&cfg.session) {
+            if r.epoch == cfg.epoch {
+                routes.remove(&cfg.session);
             }
         }
     }
@@ -966,6 +1318,37 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
         cfg.session, cfg.epoch
     );
     Ok(())
+}
+
+/// Dial a worker's listener and fetch its [`wire::WorkerStatus`] with a
+/// one-shot [`wire::ROLE_STATUS`] hello (`iop worker --status` and the
+/// serve report's per-worker status lines use this).
+pub fn probe_status(addr_s: &str, token: Option<&str>) -> Result<wire::WorkerStatus> {
+    let addr = wire::Addr::parse(addr_s).map_err(|e| anyhow!(e))?;
+    let mut rng = SplitMix64::new(0x57A7_05);
+    let mut s = wire::connect_with_backoff(&addr, Duration::from_secs(5), &mut rng)
+        .map_err(|e| anyhow!("{e}"))?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let h = Hello {
+        role: wire::ROLE_STATUS,
+        session: 0,
+        epoch: 0,
+        from: 0,
+        to: 0,
+        token: token.unwrap_or("").to_string(),
+    };
+    wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&h))?;
+    match wire::read_frame(&mut s) {
+        Ok((wire::K_STATUS, body)) => wire::decode_status(&body).map_err(|e| anyhow!("{e}")),
+        Ok((wire::K_HELLO_REJECT, body)) => {
+            let r = wire::decode_hello_reject(&body).map_err(|e| anyhow!("{e}"))?;
+            Err(anyhow!("worker at {addr} refused the status probe: {r}"))
+        }
+        Ok((k, _)) => Err(anyhow!(
+            "worker at {addr} answered the status probe with frame kind {k:#04x}"
+        )),
+        Err(e) => Err(anyhow!("status probe to {addr} failed: {e}")),
+    }
 }
 
 /// Dial one outbound mesh link, retrying `REJ_NOT_READY` refusals with
@@ -997,6 +1380,7 @@ fn dial_peer(
             epoch: cfg.epoch,
             from: cfg.dev as u32,
             to: to as u32,
+            token: cfg.auth_token.clone(),
         };
         wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&h))?;
         match wire::read_frame(&mut s) {
@@ -1070,6 +1454,18 @@ mod tests {
                     at_stage: None,
                 },
             ],
+            stalls: vec![
+                StallSpec {
+                    dev: 1,
+                    after_ms: 200,
+                    duration_ms: Some(450),
+                },
+                StallSpec {
+                    dev: 0,
+                    after_ms: 1000,
+                    duration_ms: None,
+                },
+            ],
         };
         let back = fault_plan_from_json(&fault_plan_to_json(&plan)).unwrap();
         assert_eq!(back, plan);
@@ -1105,7 +1501,15 @@ mod tests {
                     at_req: 1,
                     at_stage: None,
                 }],
+                stalls: vec![StallSpec {
+                    dev: 0,
+                    after_ms: 50,
+                    duration_ms: Some(100),
+                }],
             }),
+            auth_token: "hunter2".into(),
+            heartbeat_ms: 250,
+            miss_limit: 4,
         };
         let back = SessionConfig::from_json(&cfg.to_json().unwrap()).unwrap();
         assert_eq!(back.session, cfg.session);
@@ -1117,6 +1521,11 @@ mod tests {
         assert_eq!(back.strategy, cfg.strategy);
         assert_eq!(back.recv_timeout_ms, cfg.recv_timeout_ms);
         assert_eq!(back.fault, cfg.fault);
+        assert_eq!(back.auth_token, "hunter2");
+        assert_eq!(
+            back.liveness(),
+            Some(LivenessPolicy { interval_ms: 250, miss_limit: 4 })
+        );
         assert!(matches!(back.backend, Backend::Compiled { threads: 2 }));
         // The cluster must survive *exactly* — the worker re-plans from
         // these floats.
@@ -1146,8 +1555,36 @@ mod tests {
             },
             recv_timeout_ms: 100,
             fault: None,
+            auth_token: String::new(),
+            heartbeat_ms: 0,
+            miss_limit: 1,
         };
         assert!(cfg.to_json().is_err());
+    }
+
+    #[test]
+    fn disabled_heartbeat_has_no_policy() {
+        let cfg_json = Json::obj(vec![
+            ("session", Json::num(1.0)),
+            ("epoch", Json::num(0.0)),
+            ("dev", Json::num(0.0)),
+            ("m", Json::num(1.0)),
+            ("devmap", Json::arr(vec![Json::num(0.0)])),
+            ("peers", Json::arr(vec![Json::str("127.0.0.1:1")])),
+            ("model", Json::Null),
+            (
+                "cluster",
+                Cluster::homogeneous(1, 0.6e9, 512 << 20, 50e6, 4e-3).to_json(),
+            ),
+            ("strategy", Json::str("iop")),
+            ("backend", Json::str("reference")),
+            ("recv_timeout_ms", Json::num(100.0)),
+        ]);
+        // heartbeat fields absent entirely (an old-style config): the
+        // keepalive must read as disabled, not panic or default on.
+        let cfg = SessionConfig::from_json(&cfg_json).unwrap();
+        assert_eq!(cfg.liveness(), None);
+        assert_eq!(cfg.auth_token, "");
     }
 
     #[test]
@@ -1195,7 +1632,7 @@ mod tests {
         {
             let a = addr.clone();
             std::thread::spawn(move || {
-                let _ = run_worker(&a);
+                let _ = run_worker(&a, None);
             });
         }
         let connect = || {
@@ -1219,6 +1656,7 @@ mod tests {
             epoch,
             from,
             to: 0,
+            token: String::new(),
         };
         let shake = |h: &Hello| {
             let mut s = connect();
@@ -1243,6 +1681,9 @@ mod tests {
             backend: Backend::Reference,
             recv_timeout_ms: 2000,
             fault: None,
+            auth_token: String::new(),
+            heartbeat_ms: 0,
+            miss_limit: 1,
         };
         let (mut ctrl, kind, _) = shake(&hello(wire::ROLE_CTRL, 5, wire::CTRL_FROM));
         assert_eq!(kind, wire::K_HELLO_OK);
@@ -1280,5 +1721,56 @@ mod tests {
         );
         // Dropping the control link shuts the epoch down gracefully.
         drop(ctrl);
+
+        // The daemon answers status probes between sessions too: it has
+        // served one session and executed zero requests.
+        let status = probe_status(&addr, None).unwrap();
+        assert_eq!(status.sessions_served, 1);
+        assert_eq!(status.requests_executed, 0);
+    }
+
+    /// A token-protected worker rejects wrong and missing tokens on every
+    /// role with `REJ_BAD`, without echoing the expected token, and
+    /// answers properly authenticated status probes.
+    #[cfg(unix)]
+    #[test]
+    fn live_worker_enforces_auth_token() {
+        let path = std::env::temp_dir().join(format!("iop-auth-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let addr = format!("unix:{}", path.display());
+        {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                let _ = run_worker(&a, Some("s3cret".into()));
+            });
+        }
+        // Probe with the wrong token: the handshake must be refused
+        // before any session state is touched. (`probe_status` retries
+        // the connect internally until the listener is up.)
+        let err = probe_status(&addr, Some("wrong")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("authentication failed"), "{msg}");
+        assert!(!msg.contains("s3cret"), "reject must not echo the token: {msg}");
+
+        // Missing token: same refusal.
+        let err = probe_status(&addr, None).unwrap_err();
+        assert!(format!("{err:#}").contains("authentication failed"));
+
+        // Correct token: a fresh daemon with zero sessions.
+        let status = probe_status(&addr, Some("s3cret")).unwrap();
+        assert_eq!(status.sessions_served, 0);
+        assert_eq!(status.requests_executed, 0);
+        assert!(status.active.is_empty());
+        assert!(status.uptime_secs >= 0.0);
+    }
+
+    /// Listening on a non-loopback TCP address without a token is refused
+    /// outright; loopback and unix sockets stay exempt.
+    #[test]
+    fn tokenless_public_listener_is_refused() {
+        let err = run_worker("tcp:0.0.0.0:0", None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("auth token"), "{msg}");
+        assert!(msg.contains("--auth-token"), "{msg}");
     }
 }

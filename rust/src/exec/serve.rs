@@ -40,6 +40,7 @@ use crate::util::prng::SplitMix64;
 
 use super::batcher::BatchStats;
 use super::harness::{ExecResult, ExecSession, RecoveryStats};
+use super::transport::LivenessStats;
 
 /// Closed-loop run parameters.
 #[derive(Debug, Clone)]
@@ -133,6 +134,12 @@ pub struct ThroughputReport {
     /// run; this time is inside `wall_secs`, so it also shows up as a
     /// latency-percentile bump.
     pub recovery_secs: f64,
+    /// Keepalive counters accumulated during this run (delta of the
+    /// session's [`LivenessStats`] over the call, warm-up included).
+    /// All zero for in-process sessions and with the heartbeat off;
+    /// `suspects`/`grace_resumes` > 0 with `hung_workers == 0` is the
+    /// signature of a transient stall the grace window absorbed.
+    pub liveness: LivenessStats,
     /// Measured shaped-medium busy seconds per pipeline stage over the
     /// measured window (warm-up excluded), when the session runs over a
     /// shaped link — the measured side of the `cost::comm` per-stage
@@ -188,6 +195,17 @@ impl ThroughputReport {
                 Json::num(self.requests_replayed as f64),
             ),
             ("recovery_secs", Json::num(self.recovery_secs)),
+            ("pings_sent", Json::num(self.liveness.pings_sent as f64)),
+            (
+                "pongs_received",
+                Json::num(self.liveness.pongs_received as f64),
+            ),
+            ("suspects", Json::num(self.liveness.suspects as f64)),
+            (
+                "grace_resumes",
+                Json::num(self.liveness.grace_resumes as f64),
+            ),
+            ("hung_workers", Json::num(self.liveness.hung_workers as f64)),
             (
                 "wire_busy_by_stage_secs",
                 Json::Arr(
@@ -256,11 +274,13 @@ fn finish_report(
     wall_secs: f64,
     offered_rps: f64,
     recovery_before: &RecoveryStats,
+    liveness_before: &LivenessStats,
     wire_before: Option<(Vec<f64>, f64)>,
     batch_before: &BatchStats,
 ) -> ThroughputReport {
     acc.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rec = session.recovery_stats();
+    let live = session.liveness_stats().delta_since(liveness_before);
     let bs = session.batch_stats().delta_since(batch_before);
     let (wire_busy_by_stage, wire_busy_final) = match (wire_before, session.shaped_meter()) {
         (Some((before, before_final)), Some((after, after_final))) => {
@@ -296,6 +316,7 @@ fn finish_report(
         replans: rec.replans - recovery_before.replans,
         requests_replayed: rec.requests_replayed - recovery_before.requests_replayed,
         recovery_secs: rec.recovery_secs - recovery_before.recovery_secs,
+        liveness: live,
         wire_busy_by_stage,
         wire_busy_final,
     }
@@ -322,6 +343,7 @@ pub fn serve_closed_loop(
     let m = session.devices();
     session.set_max_inflight(depth);
     let recovery_before = session.recovery_stats();
+    let liveness_before = session.liveness_stats();
 
     // Warm-up: serial, unmeasured.
     for _ in 0..opts.warmup {
@@ -360,6 +382,7 @@ pub fn serve_closed_loop(
         wall_secs,
         0.0,
         &recovery_before,
+        &liveness_before,
         wire_before,
         &batch_before,
     ))
@@ -396,6 +419,7 @@ pub fn serve_open_loop(
     let m = session.devices();
     session.set_max_inflight(depth);
     let recovery_before = session.recovery_stats();
+    let liveness_before = session.liveness_stats();
 
     for _ in 0..opts.warmup {
         session.infer(input_for(0))?;
@@ -459,6 +483,7 @@ pub fn serve_open_loop(
         wall_secs,
         opts.rate,
         &recovery_before,
+        &liveness_before,
         wire_before,
         &batch_before,
     ))
@@ -535,6 +560,8 @@ mod tests {
         assert_eq!(rep.replans, 0);
         assert_eq!(rep.requests_replayed, 0);
         assert_eq!(rep.recovery_secs, 0.0);
+        // in-process session: no keepalive, every liveness counter zero
+        assert_eq!(rep.liveness, LivenessStats::default());
         // session is drained afterwards
         assert_eq!(session.inflight(), 0);
         let j = rep.to_json();
@@ -542,6 +569,9 @@ mod tests {
         assert_eq!(j.get("batch_occupancy_mean").as_f64(), Some(1.0));
         assert_eq!(j.get("flushes_full").as_f64(), Some(8.0));
         assert_eq!(j.get("offered_rps").as_f64(), Some(0.0));
+        assert_eq!(j.get("pings_sent").as_f64(), Some(0.0));
+        assert_eq!(j.get("hung_workers").as_f64(), Some(0.0));
+        assert_eq!(j.get("grace_resumes").as_f64(), Some(0.0));
     }
 
     #[test]

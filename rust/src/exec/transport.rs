@@ -34,6 +34,7 @@
 //! supervisor tell a dead peer from a slow one.
 
 use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -132,6 +133,292 @@ impl fmt::Display for RecvDeadline {
 }
 
 impl std::error::Error for RecvDeadline {}
+
+/// Heartbeat policy for socket-transport control links: the
+/// coordinator keepalive sends a PING every `interval_ms` of link
+/// silence, and `miss_limit` consecutive unanswered intervals move the
+/// link from suspect into its grace window (reconnect probes for one
+/// more detection window) before it is declared dead. In-process
+/// transports ignore the policy — channels cannot hang independently
+/// of the process hosting them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LivenessPolicy {
+    /// Heartbeat period in milliseconds (must be > 0).
+    pub interval_ms: u64,
+    /// Consecutive missed intervals before the grace window opens
+    /// (must be > 0).
+    pub miss_limit: u32,
+}
+
+impl Default for LivenessPolicy {
+    fn default() -> Self {
+        LivenessPolicy { interval_ms: 500, miss_limit: 3 }
+    }
+}
+
+impl LivenessPolicy {
+    /// Silence budget before a worker is *suspected* dead:
+    /// `interval_ms × miss_limit`. This is the detection bound the
+    /// chaos tests assert against.
+    pub fn detect_ms(&self) -> u64 {
+        self.interval_ms.saturating_mul(self.miss_limit as u64).max(1)
+    }
+
+    /// Extra window after detection during which reconnect probes may
+    /// still resurrect the link without a replan (one more detection
+    /// window).
+    pub fn grace_ms(&self) -> u64 {
+        self.detect_ms()
+    }
+
+    /// Worker-side lease: how long a worker's bridge loop tolerates
+    /// control-link silence before assuming the coordinator is gone.
+    /// Twice the full coordinator budget (detect + grace) so the
+    /// coordinator always times out first.
+    pub fn lease_ms(&self) -> u64 {
+        2 * (self.detect_ms() + self.grace_ms())
+    }
+}
+
+/// Typed error the liveness layer raises when a worker's control link
+/// goes silent past the heartbeat policy: `missed` consecutive PINGs
+/// drew no PONG and the grace-window reconnect probes failed, so the
+/// supervisor folds the worker into the same dead-worker signal as a
+/// broken pipe and recovery takes over.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerUnresponsive {
+    /// Original cluster device id (stable across recovery epochs).
+    pub dev: usize,
+    /// How long the control link had been silent at declaration.
+    pub silent_ms: u64,
+    /// Consecutive heartbeats missed, including grace-window probes.
+    pub missed: u32,
+}
+
+impl fmt::Display for WorkerUnresponsive {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "device {} unresponsive: {} consecutive heartbeats missed, control link silent for {} ms",
+            self.dev, self.missed, self.silent_ms
+        )
+    }
+}
+
+impl std::error::Error for WorkerUnresponsive {}
+
+/// Liveness verdict on one worker's control link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkState {
+    /// Heard from recently.
+    Alive,
+    /// At least one heartbeat interval has elapsed in silence.
+    Suspect,
+    /// `miss_limit` consecutive misses; reconnect probes running. A
+    /// PONG here resumes the live epoch with no replan.
+    Grace,
+    /// Grace window exhausted — the supervisor sees the same signal as
+    /// a broken pipe.
+    Dead,
+}
+
+const S_ALIVE: u8 = 0;
+const S_SUSPECT: u8 = 1;
+const S_GRACE: u8 = 2;
+const S_DEAD: u8 = 3;
+
+/// Per-epoch liveness counters, summed over all workers. The harness
+/// accumulates these across recovery epochs and `iop serve` reports
+/// them as deltas per measurement window.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LivenessStats {
+    /// Keepalive PINGs written to control links.
+    pub pings_sent: u64,
+    /// PONGs (or any proof-of-life frame while suspect) received.
+    pub pongs_received: u64,
+    /// Alive → suspect transitions (a keepalive probe went unanswered
+    /// for a full interval).
+    pub suspects: u64,
+    /// Suspect/grace links that came back without a replan.
+    pub grace_resumes: u64,
+    /// Links declared dead by heartbeat verdict (not broken pipe).
+    pub hung_workers: u64,
+}
+
+impl LivenessStats {
+    pub fn add(&mut self, o: &LivenessStats) {
+        self.pings_sent += o.pings_sent;
+        self.pongs_received += o.pongs_received;
+        self.suspects += o.suspects;
+        self.grace_resumes += o.grace_resumes;
+        self.hung_workers += o.hung_workers;
+    }
+
+    /// Counters accumulated since `before` was snapshotted (the serve
+    /// drivers report per-measurement-window deltas). Saturating, so a
+    /// snapshot raced against an epoch retirement never underflows.
+    pub fn delta_since(&self, before: &LivenessStats) -> LivenessStats {
+        LivenessStats {
+            pings_sent: self.pings_sent.saturating_sub(before.pings_sent),
+            pongs_received: self.pongs_received.saturating_sub(before.pongs_received),
+            suspects: self.suspects.saturating_sub(before.suspects),
+            grace_resumes: self.grace_resumes.saturating_sub(before.grace_resumes),
+            hung_workers: self.hung_workers.saturating_sub(before.hung_workers),
+        }
+    }
+}
+
+/// Shared per-worker liveness cell. Three parties touch it: the
+/// coordinator keepalive thread drives the state machine and records
+/// the death verdict, the done-reader refreshes it on every inbound
+/// frame, and the session supervisor reads the verdict when the
+/// control link dies to tell a hang (heartbeat) from a crash (broken
+/// pipe). All clocks are milliseconds since the cell was created, so
+/// the cell is self-contained and cheap to share.
+pub struct LinkHealth {
+    anchor: Instant,
+    last_heard_ms: AtomicU64,
+    state: AtomicU8,
+    /// Stall-shim switch: while set, inbound proof-of-life is ignored,
+    /// simulating a partition without touching the real socket.
+    muffled: std::sync::atomic::AtomicBool,
+    pings_sent: AtomicU64,
+    pongs_received: AtomicU64,
+    suspects: AtomicU64,
+    grace_resumes: AtomicU64,
+    cause: Mutex<Option<WorkerUnresponsive>>,
+}
+
+impl LinkHealth {
+    pub fn new() -> Arc<LinkHealth> {
+        Arc::new(LinkHealth {
+            anchor: Instant::now(),
+            last_heard_ms: AtomicU64::new(0),
+            state: AtomicU8::new(S_ALIVE),
+            muffled: std::sync::atomic::AtomicBool::new(false),
+            pings_sent: AtomicU64::new(0),
+            pongs_received: AtomicU64::new(0),
+            suspects: AtomicU64::new(0),
+            grace_resumes: AtomicU64::new(0),
+            cause: Mutex::new(None),
+        })
+    }
+
+    /// Fault-shim hook ([`crate::config::StallSpec`]): while muffled,
+    /// `heard`/`pong` are dropped on the floor, so the keepalive sees
+    /// exactly the silence a partitioned link would produce.
+    pub fn set_muffled(&self, on: bool) {
+        self.muffled.store(on, Ordering::Relaxed);
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.anchor.elapsed().as_millis() as u64
+    }
+
+    /// Milliseconds of control-link silence.
+    pub fn silent_ms(&self) -> u64 {
+        self.now_ms().saturating_sub(self.last_heard_ms.load(Ordering::Relaxed))
+    }
+
+    /// Monotone marker of the last inbound proof-of-life (ms since the
+    /// cell's anchor). The keepalive samples this at every check and
+    /// compares against the previous sample to ask "was anything heard
+    /// since I last looked?" — drift-proof where a strict
+    /// silence-window comparison is not: on an idle healthy link the
+    /// PONG lands just *after* each check-time PING, so at the next
+    /// check the raw silence is a hair over one interval and would
+    /// score a miss against a perfectly responsive worker.
+    pub fn heard_marker(&self) -> u64 {
+        self.last_heard_ms.load(Ordering::Relaxed)
+    }
+
+    pub fn state(&self) -> LinkState {
+        match self.state.load(Ordering::Relaxed) {
+            S_ALIVE => LinkState::Alive,
+            S_SUSPECT => LinkState::Suspect,
+            S_GRACE => LinkState::Grace,
+            _ => LinkState::Dead,
+        }
+    }
+
+    /// Any inbound frame is proof of life: refresh the silence clock
+    /// and, if the link was suspect or in grace, resume it (a dead
+    /// link stays dead — its socket is already shut and recovery is
+    /// under way).
+    pub fn heard(&self) {
+        if self.muffled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.last_heard_ms.store(self.now_ms(), Ordering::Relaxed);
+        match self.state.load(Ordering::Relaxed) {
+            S_DEAD | S_ALIVE => {}
+            _ => {
+                self.state.store(S_ALIVE, Ordering::Relaxed);
+                self.grace_resumes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// A PONG specifically (counted separately from generic traffic).
+    pub fn pong(&self) {
+        if self.muffled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.pongs_received.fetch_add(1, Ordering::Relaxed);
+        self.heard();
+    }
+
+    pub fn ping_sent(&self) {
+        self.pings_sent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Keepalive: a full interval elapsed in silence.
+    pub fn mark_suspect(&self) {
+        if self
+            .state
+            .compare_exchange(S_ALIVE, S_SUSPECT, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.suspects.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Keepalive: `miss_limit` consecutive misses — reconnect probes
+    /// start, the replan is still held back.
+    pub fn mark_grace(&self) {
+        let _ = self.state.compare_exchange(
+            S_SUSPECT,
+            S_GRACE,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Keepalive: grace window exhausted. Records the verdict the
+    /// supervisor will surface instead of a generic broken-pipe story.
+    pub fn mark_dead(&self, dev: usize, missed: u32) {
+        let verdict = WorkerUnresponsive { dev, silent_ms: self.silent_ms(), missed };
+        *self.cause.lock().unwrap() = Some(verdict);
+        self.state.store(S_DEAD, Ordering::Relaxed);
+    }
+
+    /// The heartbeat verdict, if this link died by liveness (None for
+    /// a plain crash/broken pipe).
+    pub fn verdict(&self) -> Option<WorkerUnresponsive> {
+        *self.cause.lock().unwrap()
+    }
+
+    /// Counter snapshot for this epoch's link.
+    pub fn stats(&self) -> LivenessStats {
+        LivenessStats {
+            pings_sent: self.pings_sent.load(Ordering::Relaxed),
+            pongs_received: self.pongs_received.load(Ordering::Relaxed),
+            suspects: self.suspects.load(Ordering::Relaxed),
+            grace_resumes: self.grace_resumes.load(Ordering::Relaxed),
+            hung_workers: if self.verdict().is_some() { 1 } else { 0 },
+        }
+    }
+}
 
 /// In-process full-mesh channel transport (the default): `tx[j]` is the
 /// sender into device j's mailbox, `rx` is this device's own inbox.
@@ -693,5 +980,82 @@ mod tests {
         assert_eq!(a, b, "same seed replays the same drops");
         assert!(!a.is_empty() && a.len() < 32, "p=0.5 drops some, not all");
         assert_ne!(a, c, "different seed shifts the drop pattern");
+    }
+
+    #[test]
+    fn liveness_policy_windows() {
+        let p = LivenessPolicy { interval_ms: 100, miss_limit: 2 };
+        assert_eq!(p.detect_ms(), 200);
+        assert_eq!(p.grace_ms(), 200);
+        assert_eq!(p.lease_ms(), 800, "worker lease outlives detect + grace");
+        let d = LivenessPolicy::default();
+        assert!(d.interval_ms > 0 && d.miss_limit > 0);
+    }
+
+    #[test]
+    fn link_health_state_machine_resumes_and_counts() {
+        let h = LinkHealth::new();
+        assert_eq!(h.state(), LinkState::Alive);
+        // silence -> suspect -> grace, then a pong resumes
+        h.ping_sent();
+        h.mark_suspect();
+        assert_eq!(h.state(), LinkState::Suspect);
+        h.mark_suspect(); // idempotent: suspects counted once per episode
+        h.mark_grace();
+        assert_eq!(h.state(), LinkState::Grace);
+        h.pong();
+        assert_eq!(h.state(), LinkState::Alive);
+        let s = h.stats();
+        assert_eq!(
+            (s.pings_sent, s.pongs_received, s.suspects, s.grace_resumes, s.hung_workers),
+            (1, 1, 1, 1, 0)
+        );
+        assert!(h.verdict().is_none());
+    }
+
+    #[test]
+    fn link_health_death_is_sticky_and_carries_verdict() {
+        let h = LinkHealth::new();
+        h.mark_suspect();
+        h.mark_grace();
+        h.mark_dead(3, 4);
+        assert_eq!(h.state(), LinkState::Dead);
+        let v = h.verdict().expect("heartbeat death records a verdict");
+        assert_eq!((v.dev, v.missed), (3, 4));
+        let text = v.to_string();
+        assert!(text.contains("device 3"), "{text}");
+        assert!(text.contains("heartbeats missed"), "{text}");
+        // late traffic can't resurrect a dead link
+        h.heard();
+        h.pong();
+        assert_eq!(h.state(), LinkState::Dead);
+        assert_eq!(h.stats().hung_workers, 1);
+        // grace_resumes was not bumped by the post-death pong
+        assert_eq!(h.stats().grace_resumes, 0);
+    }
+
+    #[test]
+    fn link_health_muffle_simulates_partition() {
+        let h = LinkHealth::new();
+        h.set_muffled(true);
+        std::thread::sleep(Duration::from_millis(5));
+        let before = h.silent_ms();
+        h.pong();
+        assert!(h.silent_ms() >= before, "muffled pong must not reset the silence clock");
+        assert_eq!(h.stats().pongs_received, 0, "muffled pong is not counted");
+        h.set_muffled(false);
+        h.pong();
+        assert_eq!(h.stats().pongs_received, 1);
+    }
+
+    #[test]
+    fn link_health_grace_requires_suspect_first() {
+        let h = LinkHealth::new();
+        h.mark_grace(); // no-op from Alive
+        assert_eq!(h.state(), LinkState::Alive);
+        h.mark_suspect();
+        h.heard(); // proof of life resumes before grace
+        assert_eq!(h.state(), LinkState::Alive);
+        assert_eq!(h.stats().grace_resumes, 1);
     }
 }

@@ -38,8 +38,10 @@ use crate::util::prng::SplitMix64;
 
 /// Frame magic: the bytes `IOP1` read as a little-endian u32.
 pub const MAGIC: u32 = 0x3150_4F49;
-/// Protocol version carried in every [`Hello`]; bumped on breaking changes.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in every [`Hello`]; bumped on breaking
+/// changes. v2 added the auth-token field to HELLO and the liveness
+/// frames (PING/PONG/STATUS).
+pub const VERSION: u16 = 2;
 /// Hard cap on a frame body. Largest legitimate payload is one activation
 /// tensor; 64 MiB is ~16M f32s, far above anything the model zoo ships,
 /// and small enough that a hostile length field can't balloon memory.
@@ -64,6 +66,15 @@ pub const K_REQUEST: u8 = 0x07;
 pub const K_DONE: u8 = 0x08;
 /// Coordinator->worker: drain and end the session (empty body).
 pub const K_SHUTDOWN: u8 = 0x09;
+/// Keepalive probe on an otherwise-idle control link (u64 nonce body).
+/// Either side may send one; the peer must answer with a PONG echoing
+/// the nonce promptly even while a request is executing.
+pub const K_PING: u8 = 0x0A;
+/// Keepalive reply: echoes the PING's nonce.
+pub const K_PONG: u8 = 0x0B;
+/// Worker->prober liveness report ([`WorkerStatus`] body), answered to
+/// a [`ROLE_STATUS`] hello.
+pub const K_STATUS: u8 = 0x0C;
 
 /// `Hello.from` sentinel for the coordinator (not a plan-local device).
 pub const CTRL_FROM: u32 = u32::MAX;
@@ -73,6 +84,10 @@ pub const CTRL_FROM: u32 = u32::MAX;
 pub const ROLE_CTRL: u8 = 0;
 /// Handshake role: the connection is a one-way worker->worker tensor link.
 pub const ROLE_PEER: u8 = 1;
+/// Handshake role: a one-shot liveness probe. The worker answers with a
+/// [`K_STATUS`] frame and closes; session/epoch/from/to are ignored
+/// (send zeros) but the auth token is still enforced.
+pub const ROLE_STATUS: u8 = 2;
 
 // HelloReject codes.
 /// Receiver has no live session yet (or an older epoch): retry shortly.
@@ -339,24 +354,29 @@ pub fn decode_msg(body: &[u8]) -> Result<Msg, WireError> {
 
 /// Connection opener. `session`/`epoch` pin the sender to one recovery
 /// generation; `from`/`to` are plan-local device ids (`from` is
-/// [`CTRL_FROM`] on coordinator control links).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// [`CTRL_FROM`] on coordinator control links). `token` is the shared
+/// auth secret (empty when the listener is unauthenticated); the
+/// version check runs before the token is even decoded, so a version
+/// mismatch is always reported by name.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Hello {
     pub role: u8,
     pub session: u64,
     pub epoch: u64,
     pub from: u32,
     pub to: u32,
+    pub token: String,
 }
 
 pub fn encode_hello(h: &Hello) -> Vec<u8> {
-    let mut out = Vec::with_capacity(27);
+    let mut out = Vec::with_capacity(31 + h.token.len());
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(h.role);
     out.extend_from_slice(&h.session.to_le_bytes());
     out.extend_from_slice(&h.epoch.to_le_bytes());
     out.extend_from_slice(&h.from.to_le_bytes());
     out.extend_from_slice(&h.to.to_le_bytes());
+    put_str(&mut out, &h.token);
     out
 }
 
@@ -367,7 +387,7 @@ pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
         return Err(WireError::BadVersion(version));
     }
     let role = rd.u8()?;
-    if role != ROLE_CTRL && role != ROLE_PEER {
+    if role != ROLE_CTRL && role != ROLE_PEER && role != ROLE_STATUS {
         return Err(WireError::BadFrame(format!("unknown hello role {role}")));
     }
     let h = Hello {
@@ -376,6 +396,7 @@ pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
         epoch: rd.u64()?,
         from: rd.u32()?,
         to: rd.u32()?,
+        token: rd.str()?,
     };
     rd.done()?;
     Ok(h)
@@ -559,6 +580,103 @@ pub fn decode_done(body: &[u8]) -> Result<DoneFrame, WireError> {
     Ok(DoneFrame { req, dev, result })
 }
 
+// ---------- PING / PONG ----------
+
+/// Keepalive probe body: a nonce the peer must echo. The nonce lets a
+/// keepalive distinguish a fresh PONG from one that sat in a kernel
+/// buffer across a stall.
+pub fn encode_ping(nonce: u64) -> Vec<u8> {
+    nonce.to_le_bytes().to_vec()
+}
+
+pub fn decode_ping(body: &[u8]) -> Result<u64, WireError> {
+    let mut rd = Rd::new(body);
+    let nonce = rd.u64()?;
+    rd.done()?;
+    Ok(nonce)
+}
+
+// ---------- STATUS ----------
+
+/// One live session entry in a [`WorkerStatus`] report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionStatus {
+    pub session: u64,
+    pub epoch: u64,
+    /// Plan-local device id this worker serves in that session.
+    pub dev: u32,
+    /// Milliseconds since the last control-link frame (REQUEST or PING)
+    /// for this session — the coordinator-side heartbeat age as seen
+    /// from the worker.
+    pub last_ctrl_ms: u64,
+}
+
+/// Worker daemon liveness report, answered to a [`ROLE_STATUS`] hello.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStatus {
+    /// Seconds since the listener came up.
+    pub uptime_secs: f64,
+    /// Sessions configured over the daemon's lifetime (epochs count
+    /// separately: a re-plan onto the same worker increments this).
+    pub sessions_served: u64,
+    /// REQUEST frames executed over the daemon's lifetime.
+    pub requests_executed: u64,
+    /// Currently installed sessions.
+    pub active: Vec<SessionStatus>,
+}
+
+pub fn encode_status(s: &WorkerStatus) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28 + s.active.len() * 28);
+    out.extend_from_slice(&s.uptime_secs.to_le_bytes());
+    out.extend_from_slice(&s.sessions_served.to_le_bytes());
+    out.extend_from_slice(&s.requests_executed.to_le_bytes());
+    out.extend_from_slice(&(s.active.len() as u32).to_le_bytes());
+    for a in &s.active {
+        out.extend_from_slice(&a.session.to_le_bytes());
+        out.extend_from_slice(&a.epoch.to_le_bytes());
+        out.extend_from_slice(&a.dev.to_le_bytes());
+        out.extend_from_slice(&a.last_ctrl_ms.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_status(body: &[u8]) -> Result<WorkerStatus, WireError> {
+    let mut rd = Rd::new(body);
+    let uptime_secs = rd.f64()?;
+    let sessions_served = rd.u64()?;
+    let requests_executed = rd.u64()?;
+    let n = rd.u32()? as usize;
+    if n > body.len() / 28 {
+        return Err(WireError::BadFrame(format!("status claims {n} sessions for {} bytes", body.len())));
+    }
+    let mut active = Vec::with_capacity(n);
+    for _ in 0..n {
+        active.push(SessionStatus {
+            session: rd.u64()?,
+            epoch: rd.u64()?,
+            dev: rd.u32()?,
+            last_ctrl_ms: rd.u64()?,
+        });
+    }
+    rd.done()?;
+    Ok(WorkerStatus { uptime_secs, sessions_served, requests_executed, active })
+}
+
+// ---------- auth ----------
+
+/// Constant-time token comparison: the loop length and memory access
+/// pattern depend only on the *lengths*, never on where the bytes first
+/// differ, so a listener's accept/reject timing leaks nothing about the
+/// configured secret.
+pub fn token_eq(a: &str, b: &str) -> bool {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        diff |= (*a.get(i).unwrap_or(&0) ^ *b.get(i).unwrap_or(&0)) as usize;
+    }
+    diff == 0
+}
+
 // ---------- addresses / sockets ----------
 
 /// A worker address: `host:port` (optional `tcp:` prefix) or
@@ -592,6 +710,23 @@ impl Addr {
     /// Parse a comma-separated `--workers` list.
     pub fn parse_list(s: &str) -> Result<Vec<Addr>, String> {
         s.split(',').map(Addr::parse).collect()
+    }
+
+    /// True when binding this address can only be reached from the local
+    /// host: any unix socket, or a TCP host that names a loopback
+    /// interface. A wildcard bind (`0.0.0.0` / `::`) is reachable from
+    /// the network and therefore NOT loopback.
+    pub fn is_loopback(&self) -> bool {
+        match self {
+            Addr::Unix(_) => true,
+            Addr::Tcp(hp) => {
+                let host = hp.rsplit_once(':').map(|(h, _)| h).unwrap_or(hp.as_str());
+                let host = host.trim_start_matches('[').trim_end_matches(']');
+                host.eq_ignore_ascii_case("localhost")
+                    || host.starts_with("127.")
+                    || host == "::1"
+            }
+        }
     }
 }
 
@@ -911,11 +1046,74 @@ mod tests {
 
     #[test]
     fn hello_roundtrip_and_version_gate() {
-        let h = Hello { role: ROLE_PEER, session: 42, epoch: 3, from: 1, to: 2 };
-        assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
+        for token in ["", "s3cret"] {
+            let h = Hello {
+                role: ROLE_PEER,
+                session: 42,
+                epoch: 3,
+                from: 1,
+                to: 2,
+                token: token.into(),
+            };
+            assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
+        }
+        let h = Hello { role: ROLE_STATUS, session: 0, epoch: 0, from: 0, to: 0, token: "".into() };
+        assert_eq!(decode_hello(&encode_hello(&h)).unwrap().role, ROLE_STATUS);
         let mut body = encode_hello(&h);
         body[0..2].copy_from_slice(&(VERSION + 1).to_le_bytes());
         assert!(matches!(decode_hello(&body), Err(WireError::BadVersion(v)) if v == VERSION + 1));
+        // a v1-layout hello (27 bytes, no token field) with a spoofed v2
+        // version stamp fails decode cleanly instead of misparsing
+        let mut old = encode_hello(&h)[..27].to_vec();
+        old[0..2].copy_from_slice(&VERSION.to_le_bytes());
+        assert!(decode_hello(&old).is_err());
+    }
+
+    #[test]
+    fn ping_and_status_roundtrip() {
+        assert_eq!(decode_ping(&encode_ping(0xDEAD_BEEF_u64)).unwrap(), 0xDEAD_BEEF_u64);
+        assert!(decode_ping(b"short").is_err());
+        let s = WorkerStatus {
+            uptime_secs: 12.5,
+            sessions_served: 3,
+            requests_executed: 128,
+            active: vec![
+                SessionStatus { session: 0x77, epoch: 2, dev: 1, last_ctrl_ms: 40 },
+                SessionStatus { session: 0x99, epoch: 0, dev: 0, last_ctrl_ms: 7 },
+            ],
+        };
+        assert_eq!(decode_status(&encode_status(&s)).unwrap(), s);
+        let empty = WorkerStatus {
+            uptime_secs: 0.0,
+            sessions_served: 0,
+            requests_executed: 0,
+            active: vec![],
+        };
+        assert_eq!(decode_status(&encode_status(&empty)).unwrap(), empty);
+        // absurd session count is rejected before any allocation
+        let mut bad = encode_status(&empty);
+        bad[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_status(&bad), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
+    fn token_compare_is_exact() {
+        assert!(token_eq("", ""));
+        assert!(token_eq("hunter2", "hunter2"));
+        assert!(!token_eq("hunter2", "hunter3"));
+        assert!(!token_eq("hunter2", "hunter"));
+        assert!(!token_eq("", "x"));
+    }
+
+    #[test]
+    fn loopback_classification() {
+        assert!(Addr::parse("unix:/tmp/w.sock").unwrap().is_loopback());
+        assert!(Addr::parse("127.0.0.1:7000").unwrap().is_loopback());
+        assert!(Addr::parse("tcp:localhost:7000").unwrap().is_loopback());
+        assert!(Addr::parse("tcp:[::1]:7000").unwrap().is_loopback());
+        assert!(!Addr::parse("0.0.0.0:7000").unwrap().is_loopback());
+        assert!(!Addr::parse("tcp:10.0.0.5:7000").unwrap().is_loopback());
+        assert!(!Addr::parse("example.com:7000").unwrap().is_loopback());
     }
 
     #[test]

@@ -30,6 +30,7 @@ fn kill_plan(dev: usize, at_req: usize) -> FaultPlan {
             at_req,
             at_stage: None,
         }],
+        stalls: vec![],
     }
 }
 
@@ -150,6 +151,7 @@ fn cascading_kills_degrade_to_single_survivor() {
                 at_stage: None,
             },
         ],
+        stalls: vec![],
     };
     let mut session = ExecSession::open(
         &model,
@@ -257,6 +259,7 @@ fn dropped_link_times_out_with_deadline_error() {
             drop_prob: 1.0,
         }],
         kills: vec![],
+        stalls: vec![],
     };
     let mut session = ExecSession::open(
         &model,
@@ -304,6 +307,7 @@ fn dropped_link_recovers_by_replanning_around_the_peer() {
             drop_prob: 1.0,
         }],
         kills: vec![],
+        stalls: vec![],
     };
     let mut session = ExecSession::open(
         &model,
@@ -353,7 +357,7 @@ fn socket_kill_replays_bit_identically_to_channels() {
             let addr = format!("unix:{path}");
             let a = addr.clone();
             std::thread::spawn(move || {
-                let _ = iop::exec::run_worker(&a);
+                let _ = iop::exec::run_worker(&a, None);
             });
             addr
         })

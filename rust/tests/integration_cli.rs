@@ -470,6 +470,84 @@ fn serve_shaped_reports_wire_table() {
 }
 
 #[test]
+fn serve_batch_over_sockets_is_rejected_with_guidance() {
+    // The refusal must name the actual limitation (one REQUEST frame
+    // per request on the wire — nothing to coalesce) and point at both
+    // ways out. Fires at session build, before any socket is dialed.
+    let err = run(&[
+        "serve",
+        "--model",
+        "lenet",
+        "--strategy",
+        "iop",
+        "--workers",
+        "unix:/tmp/iop-nope-a.sock,unix:/tmp/iop-nope-b.sock,unix:/tmp/iop-nope-c.sock",
+        "--batch",
+        "2",
+        "--requests",
+        "2",
+    ])
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("cross-request batching is not supported over socket workers"),
+        "{msg}"
+    );
+    assert!(
+        msg.contains("drop --workers to batch on the in-process path"),
+        "the refusal must point at the in-process batching path: {msg}"
+    );
+}
+
+#[test]
+fn liveness_flag_validation() {
+    // A zero miss limit would declare every idle link dead instantly.
+    let err = run(&[
+        "serve", "--model", "lenet", "--strategy", "iop", "--miss-limit", "0", "--requests", "2",
+    ])
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("--miss-limit must be >= 1"));
+    let err = run(&[
+        "exec", "--model", "lenet", "--strategy", "iop", "--heartbeat-ms", "soon",
+    ])
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("--heartbeat-ms expects milliseconds"));
+    // The liveness flags are remote-transport knobs but harmless on the
+    // in-process path (the policy only attaches to socket links).
+    run(&[
+        "exec", "--model", "lenet", "--strategy", "iop", "--heartbeat-ms", "200",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn worker_flag_contradictions_are_rejected() {
+    // Probe and serve are different modes of the same subcommand.
+    let err = run(&[
+        "worker", "--listen", "unix:/tmp/iop-x.sock", "--status", "unix:/tmp/iop-x.sock",
+    ])
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("drop --listen"));
+    // --json renders a probe report; there is no JSON daemon mode.
+    let err = run(&["worker", "--listen", "unix:/tmp/iop-x.sock", "--json"]).unwrap_err();
+    assert!(format!("{err:#}").contains("--status"));
+    // Neither mode selected: the error must offer both.
+    let err = run(&["worker"]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--listen ADDR") && msg.contains("--status ADDR"), "{msg}");
+}
+
+#[test]
+fn worker_public_tcp_listener_requires_a_token() {
+    // Refused before binding, so this returns instead of serving.
+    std::env::remove_var("IOP_AUTH_TOKEN");
+    let err = run(&["worker", "--listen", "tcp:0.0.0.0:0"]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--auth-token"), "{msg}");
+    assert!(msg.contains("IOP_AUTH_TOKEN"), "{msg}");
+}
+
+#[test]
 fn serve_flag_contradictions_are_rejected() {
     // --link-* without the shaped transport is a typo, not a request.
     assert!(run(&[

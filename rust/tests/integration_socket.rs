@@ -1,8 +1,10 @@
 //! Integration: the real socket transport. UDS loopback fleets of
 //! `run_worker` listeners (the same loop the `iop worker` subcommand
 //! runs) driven through the public session API, wire-level handshake
-//! refusals against a live worker, and a multi-process SIGKILL chaos
-//! run against the shipped binary.
+//! refusals against a live worker, heartbeat-driven hang detection
+//! (scheduled stall shim + a real SIGSTOPped worker process), token
+//! auth end to end, and a multi-process SIGKILL chaos run against the
+//! shipped binary.
 #![cfg(unix)]
 
 use std::io::Write;
@@ -12,12 +14,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use iop::device::profiles;
+use iop::config::{FaultPlan, StallSpec};
+use iop::device::{profiles, Cluster};
 use iop::exec::weights::model_input;
 use iop::exec::wire;
-use iop::exec::{ExecSession, SessionOptions};
+use iop::exec::{Backend, ExecSession, LivenessPolicy, SessionOptions};
 use iop::model::zoo;
 use iop::partition::Strategy;
+use iop::pipeline;
 
 static FLEET: AtomicUsize = AtomicUsize::new(0);
 
@@ -55,7 +59,7 @@ fn spawn_fleet(tag: &str, n: usize) -> Vec<String> {
             let addr = format!("unix:{path}");
             let a = addr.clone();
             thread::spawn(move || {
-                let _ = iop::exec::run_worker(&a);
+                let _ = iop::exec::run_worker(&a, None);
             });
             addr
         })
@@ -141,6 +145,7 @@ fn handshake_refuses_bad_version_and_unready_mesh_links() {
         epoch: 0,
         from: 1,
         to: 0,
+        token: String::new(),
     };
     wire::write_frame(&mut s, wire::K_HELLO, &wire::encode_hello(&h)).unwrap();
     let (kind, rb) = wire::read_frame(&mut s).unwrap();
@@ -190,6 +195,362 @@ fn handshake_refuses_bad_version_and_unready_mesh_links() {
     let r = remote.infer(input.clone()).unwrap();
     let l = local.infer(input).unwrap();
     assert_eq!(r.output.max_abs_diff(&l.output), 0.0);
+}
+
+/// A fault plan whose only fault is a scheduled control-link stall on
+/// device `dev`: the coordinator's health cell for that link is muffled
+/// for the window, so the keepalive sees exactly the silence a
+/// partitioned or wedged worker would produce while the real socket
+/// stays up (no broken pipe to lean on).
+fn stall_plan(dev: usize, after_ms: u64, duration_ms: Option<u64>) -> FaultPlan {
+    FaultPlan {
+        seed: 5,
+        recv_timeout_ms: None,
+        links: vec![],
+        kills: vec![],
+        stalls: vec![StallSpec {
+            dev,
+            after_ms,
+            duration_ms,
+        }],
+    }
+}
+
+/// The keepalive policy the stall tests run under: misses are scored
+/// every 100 ms, the grace window opens after 3, so the full
+/// detect + grace budget is 600 ms.
+fn fast_liveness() -> LivenessPolicy {
+    LivenessPolicy {
+        interval_ms: 100,
+        miss_limit: 3,
+    }
+}
+
+/// A transient stall longer than the miss limit (300 ms against a
+/// 3 × 100 ms detection bound) must be absorbed by the grace window:
+/// the link turns suspect, resumes when the first post-stall PONG
+/// lands, and the session keeps serving the *same* epoch — zero
+/// replans, zero lost workers, outputs still bit-identical.
+#[test]
+fn transient_stall_resumes_live_epoch_without_replan() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let addrs = spawn_fleet("stallt", cluster.m());
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            fault: Some(stall_plan(1, 100, Some(300))),
+            workers: Some(addrs.clone()),
+            liveness: Some(fast_liveness()),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let mut local =
+        ExecSession::open(&model, &cluster, Strategy::Iop, SessionOptions::default()).unwrap();
+    let a = session.infer(input.clone()).unwrap();
+    let b = local.infer(input.clone()).unwrap();
+    assert_eq!(a.output.data, b.output.data);
+    // Sleep out the stall window [100 ms, 400 ms) plus a couple of
+    // keepalive intervals so the post-stall PONG resumes the link.
+    thread::sleep(Duration::from_millis(700));
+    let live = session.liveness_stats();
+    assert!(live.pings_sent >= 2, "{live:?}");
+    assert!(live.suspects >= 1, "the stall must be noticed: {live:?}");
+    assert!(
+        live.grace_resumes >= 1,
+        "the post-stall PONG must resume the link: {live:?}"
+    );
+    assert_eq!(live.hung_workers, 0, "{live:?}");
+    let rec = session.recovery_stats();
+    assert_eq!(rec.replans, 0, "a transient stall must not replan");
+    assert_eq!(rec.workers_lost, 0);
+    let a = session.infer(input.clone()).unwrap();
+    let b = local.infer(input).unwrap();
+    assert_eq!(
+        a.output.data, b.output.data,
+        "the resumed epoch must stay bit-identical"
+    );
+    assert!(!session.poisoned());
+}
+
+/// Miss-limit boundary: a stall shorter than the detection bound
+/// (one to two intervals of silence against miss_limit = 3) turns the
+/// link suspect but never opens the grace window or touches recovery —
+/// suspects ≥ 1 with zero replans and zero hung workers is the
+/// signature the serve report documents for absorbed blips.
+#[test]
+fn stall_below_the_miss_limit_stays_suspect_only() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let addrs = spawn_fleet("stallb", cluster.m());
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            fault: Some(stall_plan(1, 100, Some(200))),
+            workers: Some(addrs),
+            liveness: Some(fast_liveness()),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let warm = session.infer(input.clone()).unwrap();
+    assert!(!warm.output.data.is_empty());
+    thread::sleep(Duration::from_millis(600));
+    let live = session.liveness_stats();
+    assert!(live.suspects >= 1, "{live:?}");
+    assert_eq!(live.hung_workers, 0, "{live:?}");
+    assert_eq!(session.recovery_stats().replans, 0);
+    assert_eq!(session.recovery_stats().workers_lost, 0);
+    let again = session.infer(input).unwrap();
+    assert_eq!(warm.output.data, again.output.data);
+    assert!(!session.poisoned());
+}
+
+/// A permanent stall (no end to the window) must exhaust the grace
+/// window and map onto the *same* dead-worker signal as a broken pipe:
+/// the keepalive declares the link hung, recovery re-plans onto the
+/// survivors, and post-recovery outputs are bit-identical to a fresh
+/// session planned directly on the survivor cluster.
+#[test]
+fn permanent_stall_is_declared_hung_and_recovery_replans() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let addrs = spawn_fleet("stallp", cluster.m());
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            fault: Some(stall_plan(1, 100, None)),
+            workers: Some(addrs),
+            liveness: Some(fast_liveness()),
+            recv_timeout: Some(Duration::from_secs(2)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let warm = session.infer(input.clone()).unwrap();
+    assert!(!warm.output.data.is_empty());
+    // detect (up to ~500 ms with scheduling slack) + grace (300 ms),
+    // then the keepalive shuts the link; the next pump reaps it.
+    thread::sleep(Duration::from_millis(1200));
+    let out = session.infer(input.clone()).unwrap();
+    let rec = session.recovery_stats();
+    assert_eq!(rec.workers_lost, 1, "{rec:?}");
+    assert!(rec.replans >= 1, "{rec:?}");
+    let live = session.liveness_stats();
+    assert_eq!(
+        live.hung_workers, 1,
+        "the loss must be a heartbeat verdict, not a broken pipe: {live:?}"
+    );
+    assert_eq!(session.alive_devices(), cluster.m() - 1);
+    let survivors = Cluster::new(
+        vec![cluster.devices[0], cluster.devices[2]],
+        cluster.bandwidth_bps,
+        cluster.t_est,
+    );
+    let plan = pipeline::plan(&model, &survivors, Strategy::Iop);
+    let mut fresh = ExecSession::new(&model, &plan, Backend::Reference).unwrap();
+    let f = fresh.infer(input).unwrap();
+    assert_eq!(
+        out.output.data, f.output.data,
+        "recovery from a hang must replay bit-identically"
+    );
+    assert!(!session.poisoned());
+}
+
+/// SIGSTOP a real worker *process* mid-session: the socket never breaks
+/// (a stopped process keeps its descriptors), so only the heartbeat can
+/// notice. With a deliberately huge receive deadline, recovery
+/// completing promptly proves the detection was keepalive-driven; the
+/// replayed outputs must be bit-identical to a fresh session planned on
+/// the survivor cluster.
+#[test]
+fn sigstopped_worker_is_declared_hung_and_recovery_is_bit_identical() {
+    let bin = env!("CARGO_BIN_EXE_iop");
+    let paths: Vec<String> = (0..3).map(|i| sock_path("stop", i)).collect();
+    let mut workers: Vec<Child> = paths
+        .iter()
+        .map(|p| {
+            let _ = std::fs::remove_file(p);
+            Command::new(bin)
+                .args(["worker", "--listen", &format!("unix:{p}")])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for p in &paths {
+        wait_listening(&format!("unix:{p}"));
+    }
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            recover: true,
+            workers: Some(paths.iter().map(|p| format!("unix:{p}")).collect()),
+            liveness: Some(fast_liveness()),
+            // Huge on purpose: if detection leaned on the receive
+            // deadline instead of the heartbeat, the recovering infer
+            // below would take a minute, and the elapsed assert fails.
+            recv_timeout: Some(Duration::from_secs(60)),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let warm = session.infer(input.clone()).unwrap();
+    assert!(!warm.output.data.is_empty());
+
+    let pid = workers[1].id().to_string();
+    let stopped = Command::new("kill").args(["-STOP", &pid]).status().unwrap();
+    assert!(stopped.success(), "kill -STOP {pid} failed");
+
+    let t0 = Instant::now();
+    let out = session.infer(input.clone()).unwrap();
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(30),
+        "heartbeat detection + recovery took {waited:?} — that smells like \
+         the 60 s receive deadline did the detecting"
+    );
+    let rec = session.recovery_stats();
+    assert_eq!(rec.workers_lost, 1, "{rec:?}");
+    assert!(rec.replans >= 1, "{rec:?}");
+    let live = session.liveness_stats();
+    assert_eq!(live.hung_workers, 1, "{live:?}");
+    assert!(live.suspects >= 1, "{live:?}");
+    assert_eq!(session.alive_devices(), 2);
+
+    let survivors = Cluster::new(
+        vec![cluster.devices[0], cluster.devices[2]],
+        cluster.bandwidth_bps,
+        cluster.t_est,
+    );
+    let plan = pipeline::plan(&model, &survivors, Strategy::Iop);
+    let mut fresh = ExecSession::new(&model, &plan, Backend::Reference).unwrap();
+    let f = fresh.infer(input.clone()).unwrap();
+    assert_eq!(
+        out.output.data, f.output.data,
+        "recovery from the SIGSTOP must replay bit-identically"
+    );
+    for _ in 0..2 {
+        let a = session.infer(input.clone()).unwrap();
+        let b = fresh.infer(input.clone()).unwrap();
+        assert_eq!(a.output.data, b.output.data);
+    }
+    assert!(!session.poisoned());
+
+    let _ = Command::new("kill").args(["-CONT", &pid]).status();
+    for w in &mut workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+}
+
+/// Token auth end to end through the shipped binary: a fleet started
+/// with `--auth-token` refuses wrong and missing tokens with the
+/// generic refusal (never echoing the expected secret) and serves a
+/// correctly-tokened session bit-identically to the in-process path.
+#[test]
+fn auth_token_gates_session_open_end_to_end() {
+    let bin = env!("CARGO_BIN_EXE_iop");
+    let paths: Vec<String> = (0..3).map(|i| sock_path("auth", i)).collect();
+    let mut workers: Vec<Child> = paths
+        .iter()
+        .map(|p| {
+            let _ = std::fs::remove_file(p);
+            Command::new(bin)
+                .args([
+                    "worker",
+                    "--listen",
+                    &format!("unix:{p}"),
+                    "--auth-token",
+                    "s3cret-fleet-token",
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for p in &paths {
+        wait_listening(&format!("unix:{p}"));
+    }
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let input = model_input(&model);
+    let addrs: Vec<String> = paths.iter().map(|p| format!("unix:{p}")).collect();
+
+    let err = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            workers: Some(addrs.clone()),
+            auth_token: Some("wr0ng".into()),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("authentication failed"), "{msg}");
+    assert!(
+        !msg.contains("s3cret"),
+        "the refusal must not echo the expected token: {msg}"
+    );
+
+    let err = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            workers: Some(addrs.clone()),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("authentication failed"),
+        "missing token must draw the same refusal: {err:#}"
+    );
+
+    let mut remote = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            workers: Some(addrs),
+            auth_token: Some("s3cret-fleet-token".into()),
+            ..SessionOptions::default()
+        },
+    )
+    .unwrap();
+    let mut local =
+        ExecSession::open(&model, &cluster, Strategy::Iop, SessionOptions::default()).unwrap();
+    let r = remote.infer(input.clone()).unwrap();
+    let l = local.infer(input).unwrap();
+    assert_eq!(r.output.data, l.output.data);
+
+    for w in &mut workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
 }
 
 /// Kill -9 a worker *process* mid-run: the coordinator must detect the
