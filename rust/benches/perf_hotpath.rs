@@ -9,6 +9,8 @@
 //!    im2col+GEMM fast kernels (serial and multi-threaded),
 //!  * end-to-end distributed inference on both host backends (thread
 //!    harness overhead + compute),
+//!  * the quantized tier: the compiled steady-state case again at
+//!    --dtype i8, paired with its f32 twin for the int8 speedup,
 //!  * steady-state serving throughput: closed-loop submit/collect at
 //!    inflight=1 vs inflight=m over one warmed session (the pipelining
 //!    win, measured — see EXPERIMENTS.md §Perf "Pipelined serving").
@@ -277,6 +279,50 @@ fn main() {
             println!(
                 "fused im2col speedup vs materialized (vgg_mini IOP compiled steady): {:.2}x",
                 mat.median / fused.median
+            );
+        }
+    }
+
+    // Quantized-tier twin: the same compiled steady-state case with the
+    // session opened at --dtype i8 (symmetric per-channel int8 panels,
+    // i8×i8→i32 microkernels, dequant+bias+ReLU fused into the f32
+    // writeback). Paired with the f32 "(compiled, steady)" case above
+    // in the same run; CI gates the pair at >= 1.3x on AVX2 runners,
+    // where madd-based i8 tiles beat the FMA f32 tiles on arithmetic
+    // density and the packed panels are ~4x lighter on cache.
+    println!("\n== quantized tier (compiled steady-state, int8) ==");
+    {
+        use iop::exec::SessionOptions;
+        use iop::tensor::quant::Dtype;
+        let model = zoo::vgg_mini();
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                backend: Backend::Compiled { threads: 1 },
+                dtype: Dtype::I8,
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        println!(
+            "i8 microkernel: {} | packed weights: {}",
+            kernels::selected_i8().describe(),
+            iop::util::units::fmt_bytes(session.packed_bytes())
+        );
+        let input = model_input(&model);
+        bench!("session.infer vgg_mini IOP (compiled, steady, i8)", || {
+            session.infer(input.clone()).unwrap()
+        });
+        if let (Some(f32c), Some(i8c)) = (
+            rep.get("session.infer vgg_mini IOP (compiled, steady)"),
+            rep.get("session.infer vgg_mini IOP (compiled, steady, i8)"),
+        ) {
+            println!(
+                "int8 steady-state speedup vs f32 ({}, vgg_mini IOP compiled): {:.2}x",
+                kernels::selected_i8().describe(),
+                f32c.median / i8c.median
             );
         }
     }

@@ -114,6 +114,11 @@ impl BenchReport {
                 "kernel_isa",
                 Json::str(crate::tensor::kernels::selected().describe()),
             ),
+            // Its int8-tier counterpart (the "(..., i8)" cases run on it).
+            (
+                "kernel_isa_i8",
+                Json::str(crate::tensor::kernels::selected_i8().describe()),
+            ),
             ("cases", Json::Arr(cases)),
         ])
     }

@@ -53,6 +53,7 @@ COMMANDS:
                                  Device-count scaling study (extension)
   exec       --model M --strategy S
              [--backend reference|fast|compiled|pjrt] [--threads N]
+             [--dtype f32|i8] [--wire-dtype f32|f16]
              [--fault-plan F.json] [--recover] [--json]
                                  Real distributed execution, checked
                                  against the centralized model (compiled
@@ -60,6 +61,7 @@ COMMANDS:
                                  --json reports the dispatched GEMM
                                  kernel (kernel_isa / kernel_tile)
   serve      --model M --strategy S [--backend ...] [--threads N]
+             [--dtype f32|i8] [--wire-dtype f32|f16]
              [--requests N] [--inflight K] [--warmup W] [--check]
              [--compare-serial] [--assert-pipelined]
              [--batch B] [--batch-wait-ms W] [--assert-batched]
@@ -139,6 +141,21 @@ SIMD KERNEL DISPATCH (fast/compiled backends):
   `iop serve` and the benches print the selected ISA + tile so numbers
   are attributable to a code path. Override with IOP_KERNEL=scalar|
   avx2|neon (unsupported values abort with the supported list).
+
+QUANTIZED TIER (`iop exec|serve`, compiled backend):
+  --dtype f32|i8       compute dtype [f32]. i8 runs symmetric per-
+                       output-channel int8 weights (packed panels ~4x
+                       smaller, see packed_bytes in --json) against
+                       per-stage activation scales calibrated at
+                       session warm-up; i32 accumulators are bit-
+                       identical across scalar/AVX2/NEON. Correctness
+                       checks widen to the documented int8 budget
+                       (0.05 x oracle max-abs).
+  --wire-dtype f32|f16 inter-worker activation payload encoding [f32].
+                       f16 halves wire bytes (MSG frames only; the
+                       shaped-medium meter and cost table price the
+                       halved bytes) at a 4e-3 x max-abs error budget.
+                       Not supported on the pjrt backend.
 
 FAULT INJECTION & RECOVERY (`iop exec|serve`):
   --fault-plan F.json  reproducible chaos schedule: per-link delay/drop

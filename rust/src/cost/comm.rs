@@ -8,25 +8,58 @@
 
 use crate::device::Cluster;
 use crate::partition::plan::CommStep;
+use crate::tensor::quant::WireDtype;
 
-/// Seconds for one unicast message.
-pub fn message_secs(cluster: &Cluster, bytes: u64) -> f64 {
-    cluster.t_est + cluster.xfer_secs(bytes)
+/// Scale f32-denominated payload bytes to their on-wire size: plans
+/// size every [`CommStep`] in f32 elements (4 bytes each); an f16 wire
+/// carries the same elements at 2 bytes. Message *count* — and with it
+/// the `t_est` establishment term — is unchanged.
+fn on_wire_bytes(bytes: u64, wire: WireDtype) -> u64 {
+    match wire {
+        WireDtype::F32 => bytes,
+        WireDtype::F16 => bytes / 2,
+    }
 }
 
-/// Seconds for a whole communication step (serialized shared medium).
+/// Seconds for one unicast message (f32 wire).
+pub fn message_secs(cluster: &Cluster, bytes: u64) -> f64 {
+    message_secs_wire(cluster, bytes, WireDtype::F32)
+}
+
+/// Seconds for one unicast message under a wire dtype.
+pub fn message_secs_wire(cluster: &Cluster, bytes: u64, wire: WireDtype) -> f64 {
+    cluster.t_est + cluster.xfer_secs(on_wire_bytes(bytes, wire))
+}
+
+/// Seconds for a whole communication step (serialized shared medium,
+/// f32 wire).
 pub fn step_secs(cluster: &Cluster, step: &CommStep) -> f64 {
+    step_secs_wire(cluster, step, WireDtype::F32)
+}
+
+/// Seconds for a whole communication step under a wire dtype.
+pub fn step_secs_wire(cluster: &Cluster, step: &CommStep, wire: WireDtype) -> f64 {
     step.messages(cluster.m())
         .iter()
-        .map(|&(_, _, b)| message_secs(cluster, b))
+        .map(|&(_, _, b)| message_secs_wire(cluster, b, wire))
         .sum()
 }
 
 /// Decompose a step into (establishment seconds, transfer seconds).
 pub fn step_breakdown(cluster: &Cluster, step: &CommStep) -> (f64, f64) {
+    step_breakdown_wire(cluster, step, WireDtype::F32)
+}
+
+/// [`step_breakdown`] under a wire dtype: f16 halves the transfer term
+/// and leaves establishment alone, so the connection-count argument the
+/// paper makes is unchanged by payload compression.
+pub fn step_breakdown_wire(cluster: &Cluster, step: &CommStep, wire: WireDtype) -> (f64, f64) {
     let msgs = step.messages(cluster.m());
     let est = msgs.len() as f64 * cluster.t_est;
-    let xfer: f64 = msgs.iter().map(|&(_, _, b)| cluster.xfer_secs(b)).sum();
+    let xfer: f64 = msgs
+        .iter()
+        .map(|&(_, _, b)| cluster.xfer_secs(on_wire_bytes(b, wire)))
+        .sum();
     (est, xfer)
 }
 
@@ -91,5 +124,23 @@ mod tests {
     fn none_is_free() {
         let c = cluster(0.008);
         assert_eq!(step_secs(&c, &CommStep::None), 0.0);
+    }
+
+    #[test]
+    fn f16_wire_halves_transfer_not_establishment() {
+        let c = cluster(0.004);
+        let step = CommStep::ReduceBroadcast {
+            root: 0,
+            bytes: 80_000,
+        };
+        let (est32, xfer32) = step_breakdown_wire(&c, &step, WireDtype::F32);
+        let (est16, xfer16) = step_breakdown_wire(&c, &step, WireDtype::F16);
+        assert_eq!(est32, est16, "t_est term is per message, not per byte");
+        assert!((xfer16 - xfer32 / 2.0).abs() < 1e-12);
+        assert!(
+            (step_secs_wire(&c, &step, WireDtype::F16) - (est16 + xfer16)).abs() < 1e-12
+        );
+        // f32 wrappers stay exactly the old pricing.
+        assert_eq!(step_secs(&c, &step), step_secs_wire(&c, &step, WireDtype::F32));
     }
 }

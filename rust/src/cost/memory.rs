@@ -16,38 +16,74 @@ use crate::partition::plan::{Plan, SliceKind};
 use crate::partition::rows::{input_rows_needed, input_rows_needed_clamped};
 use crate::tensor::gemm::pack_scratch_bytes;
 use crate::tensor::kernels;
+use crate::tensor::quant::Dtype;
 
-/// Resident weight bytes a slice of `stage` requires.
-pub fn slice_weight_bytes(model: &Model, stage: Stage, slice: &SliceKind) -> u64 {
+/// Weight-tensor geometry of a slice: `(weight elements, output
+/// channels)` — each carried channel holds an f32 bias and, under the
+/// int8 tier, an f32 dequantization scale. `(0, 0)` for idle slices and
+/// weightless ops.
+fn slice_weight_elems(model: &Model, stage: Stage, slice: &SliceKind) -> (u64, u64) {
     let op = &model.ops[stage.op_idx];
-    let total = op.weight_bytes();
+    let full = || match &op.kind {
+        OpKind::Conv2d {
+            c_in,
+            c_out,
+            k_h,
+            k_w,
+            ..
+        } => ((c_out * c_in * k_h * k_w) as u64, *c_out as u64),
+        OpKind::Dense { c_in, c_out, .. } => ((c_out * c_in) as u64, *c_out as u64),
+        _ => (0, 0),
+    };
     match (slice, &op.kind) {
-        (SliceKind::Idle, _) => 0,
-        (SliceKind::Full, _) | (SliceKind::Replicate, _) => total,
+        (SliceKind::Idle, _) => (0, 0),
+        (SliceKind::Full, _) | (SliceKind::Replicate, _) => full(),
         // Row shards need every output channel for their rows: the whole
         // kernel tensor is replicated.
         (SliceKind::Rows { count, .. }, _) => {
             if *count == 0 {
-                0
+                (0, 0)
             } else {
-                total
+                full()
             }
         }
         (SliceKind::Oc { count, .. }, OpKind::Conv2d { c_in, k_h, k_w, .. }) => {
-            4 * (*count * c_in * k_h * k_w + *count) as u64
+            ((count * c_in * k_h * k_w) as u64, *count as u64)
         }
         (SliceKind::Oc { count, .. }, OpKind::Dense { c_in, .. }) => {
-            4 * (*count * c_in + *count) as u64
+            ((count * c_in) as u64, *count as u64)
         }
+        // IC shards: weight columns for `count` input channels + a
+        // replicated bias (applied after the partial-sum reduction).
         (SliceKind::Ic { count, .. }, OpKind::Conv2d { c_out, k_h, k_w, .. }) => {
-            // weight columns for `count` input channels + a replicated
-            // bias (applied after the partial-sum reduction)
-            4 * (c_out * count * k_h * k_w + c_out) as u64
+            ((c_out * count * k_h * k_w) as u64, *c_out as u64)
         }
         (SliceKind::Ic { count, .. }, OpKind::Dense { c_out, .. }) => {
-            4 * (c_out * count + c_out) as u64
+            ((c_out * count) as u64, *c_out as u64)
         }
         _ => unreachable!("slice kind incompatible with op kind"),
+    }
+}
+
+/// Resident weight bytes a slice of `stage` requires (f32 tier).
+pub fn slice_weight_bytes(model: &Model, stage: Stage, slice: &SliceKind) -> u64 {
+    slice_weight_bytes_dtype(model, stage, slice, Dtype::F32)
+}
+
+/// Resident weight bytes under a compute dtype: f32 stores 4 bytes per
+/// weight element and per bias; int8 stores one byte per weight element
+/// plus 8 per output channel (f32 bias + f32 dequant scale) — the ~4x
+/// panel shrink the quantized tier buys.
+pub fn slice_weight_bytes_dtype(
+    model: &Model,
+    stage: Stage,
+    slice: &SliceKind,
+    dtype: Dtype,
+) -> u64 {
+    let (w, ch) = slice_weight_elems(model, stage, slice);
+    match dtype {
+        Dtype::F32 => 4 * w + 4 * ch,
+        Dtype::I8 => w + 8 * ch,
     }
 }
 
@@ -236,14 +272,21 @@ impl MemoryReport {
     }
 }
 
-/// Evaluate eq. (1) terms for every device.
+/// Evaluate eq. (1) terms for every device (f32 tier).
 pub fn plan_memory(model: &Model, plan: &Plan) -> MemoryReport {
+    plan_memory_dtype(model, plan, Dtype::F32)
+}
+
+/// Evaluate eq. (1) terms for every device under a compute dtype.
+/// Activations are dequantized to f32 at every stage boundary in the
+/// int8 tier, so only the resident-weight term shrinks.
+pub fn plan_memory_dtype(model: &Model, plan: &Plan, dtype: Dtype) -> MemoryReport {
     let m = plan.m;
     let mut weights = vec![0u64; m];
     let mut peak_act = vec![0u64; m];
     for sp in &plan.stages {
         for (j, slice) in sp.slices.iter().enumerate() {
-            weights[j] += slice_weight_bytes(model, sp.stage, slice);
+            weights[j] += slice_weight_bytes_dtype(model, sp.stage, slice, dtype);
             peak_act[j] = peak_act[j].max(slice_activation_bytes(model, sp.stage, slice));
         }
     }
@@ -417,6 +460,43 @@ mod tests {
         assert_eq!(
             slice_conv_scratch_bytes(&model, fc, &SliceKind::Full, ConvLowering::Materialized, 1),
             0
+        );
+    }
+
+    #[test]
+    fn int8_weight_bytes_shrink_near_4x() {
+        let model = zoo::lenet();
+        for st in model.stages() {
+            for slice in [
+                SliceKind::Full,
+                SliceKind::Oc { start: 0, count: 2 },
+                SliceKind::Ic { start: 0, count: 1 },
+            ] {
+                // Oc/Ic shards only apply to weighted ops.
+                if matches!(slice, SliceKind::Oc { .. } | SliceKind::Ic { .. })
+                    && model.ops[st.op_idx].c_out().is_none()
+                {
+                    continue;
+                }
+                let f32b = slice_weight_bytes_dtype(&model, st, &slice, Dtype::F32);
+                let i8b = slice_weight_bytes_dtype(&model, st, &slice, Dtype::I8);
+                assert_eq!(f32b, slice_weight_bytes(&model, st, &slice));
+                if f32b == 0 {
+                    assert_eq!(i8b, 0);
+                    continue;
+                }
+                assert!(i8b < f32b, "{slice:?}: i8 {i8b} vs f32 {f32b}");
+            }
+        }
+        // Whole-plan resident weights: the per-channel scale/bias
+        // overhead is tiny next to the 4x element shrink.
+        let cluster = profiles::paper_default();
+        let plan = plan_oc(&model, &cluster);
+        let f32_total: u64 = plan_memory_dtype(&model, &plan, Dtype::F32).weights.iter().sum();
+        let i8_total: u64 = plan_memory_dtype(&model, &plan, Dtype::I8).weights.iter().sum();
+        assert!(
+            (f32_total as f64) / (i8_total as f64) >= 3.5,
+            "resident-weight shrink {f32_total}/{i8_total} below 3.5x"
         );
     }
 

@@ -35,8 +35,8 @@ use crate::tensor::Tensor;
 
 use super::backend::ComputeBackend;
 use super::prepack::{
-    run_conv, run_conv_batched, run_dense, run_dense_batched, CompiledDevice, CompiledKernel,
-    ScratchArena,
+    run_conv, run_conv_batched, run_conv_i8, run_conv_i8_batched, run_dense, run_dense_batched,
+    run_dense_i8, run_dense_i8_batched, CompiledDevice, CompiledKernel, ScratchArena,
 };
 use super::weights::WeightBundle;
 
@@ -305,6 +305,47 @@ pub fn compute_slice_compiled(
             run_dense(k, input, cd.threads)
         }
 
+        // Int8 tier: identical slice semantics; the stage tail (pool /
+        // ReLU / flatten) runs in f32 on the dequantized output.
+        (
+            CompiledKernel::ConvI8(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => {
+            let y = run_conv_i8(k, input, cd.threads, arena);
+            run_tail_with(backend, model, stage, y, false)
+        }
+        (CompiledKernel::ConvI8(k), SliceKind::Ic { count, .. }) => {
+            debug_assert_eq!(input.c, *count, "IC slice expects its channel block");
+            run_conv_i8(k, input, cd.threads, arena)
+        }
+        (CompiledKernel::ConvI8(k), SliceKind::Rows { start, count }) => {
+            let (lo, hi) = input_rows_needed(model, stage, *start, *start + *count);
+            let built;
+            let window: &Tensor = match window_rows {
+                Some((wlo, whi)) => {
+                    debug_assert_eq!((wlo, whi), (lo, hi), "window mismatch");
+                    input // already a window
+                }
+                None => {
+                    built = act_rows_window(input, lo, hi);
+                    &built
+                }
+            };
+            let y = run_conv_i8(k, window, cd.threads, arena);
+            run_tail_with(backend, model, stage, y, true) // defer flatten
+        }
+        (
+            CompiledKernel::DenseI8(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => {
+            let y = run_dense_i8(k, input, cd.threads, arena);
+            run_tail_with(backend, model, stage, y, false)
+        }
+        (CompiledKernel::DenseI8(k), SliceKind::Ic { count, .. }) => {
+            debug_assert_eq!(input.len(), *count, "IC slice expects its feature block");
+            run_dense_i8(k, input, cd.threads, arena)
+        }
+
         (kernel, slice) => {
             unreachable!("compiled kernel {kernel:?} incompatible with slice {slice:?}")
         }
@@ -381,6 +422,56 @@ pub fn compute_slice_compiled_batch(
                 "IC slice expects its feature block"
             );
             run_dense_batched(k, inputs, cd.threads)
+        }
+
+        // Int8 tier: the batched entry points loop per member (the i8
+        // GEMM is exact either way — see `run_conv_i8_batched`), so the
+        // bit-identical-to-batch-1 contract holds trivially.
+        (
+            CompiledKernel::ConvI8(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => run_conv_i8_batched(k, inputs, cd.threads, arena)
+            .into_iter()
+            .map(|y| run_tail_with(backend, model, stage, y, false))
+            .collect(),
+        (CompiledKernel::ConvI8(k), SliceKind::Ic { count, .. }) => {
+            debug_assert!(
+                inputs.iter().all(|t| t.c == *count),
+                "IC slice expects its channel block"
+            );
+            run_conv_i8_batched(k, inputs, cd.threads, arena)
+        }
+        (CompiledKernel::ConvI8(k), SliceKind::Rows { start, count }) => {
+            let (lo, hi) = input_rows_needed(model, stage, *start, *start + *count);
+            let built: Vec<Tensor>;
+            let windows: Vec<&Tensor> = match window_rows {
+                Some((wlo, whi)) => {
+                    debug_assert_eq!((wlo, whi), (lo, hi), "window mismatch");
+                    inputs.to_vec() // already windows
+                }
+                None => {
+                    built = inputs.iter().map(|t| act_rows_window(t, lo, hi)).collect();
+                    built.iter().collect()
+                }
+            };
+            run_conv_i8_batched(k, &windows, cd.threads, arena)
+                .into_iter()
+                .map(|y| run_tail_with(backend, model, stage, y, true)) // defer flatten
+                .collect()
+        }
+        (
+            CompiledKernel::DenseI8(k),
+            SliceKind::Full | SliceKind::Replicate | SliceKind::Oc { .. },
+        ) => run_dense_i8_batched(k, inputs, cd.threads, arena)
+            .into_iter()
+            .map(|y| run_tail_with(backend, model, stage, y, false))
+            .collect(),
+        (CompiledKernel::DenseI8(k), SliceKind::Ic { count, .. }) => {
+            debug_assert!(
+                inputs.iter().all(|t| t.len() == *count),
+                "IC slice expects its feature block"
+            );
+            run_dense_i8_batched(k, inputs, cd.threads, arena)
         }
 
         (kernel, slice) => {

@@ -47,10 +47,11 @@ use super::pjrt::PjrtRunner;
 use super::prepack::{CompiledDevice, CompiledPlan, ScratchArena};
 use super::remote::{spawn_remote_workers, RemoteCtx};
 use super::transport::{
-    make_endpoints_shaped, LinkHealth, LivenessPolicy, LivenessStats, Msg, RecvDeadline, Shaping,
-    Transport, WorkerKilled,
+    make_endpoints_shaped_wire, LinkHealth, LivenessPolicy, LivenessStats, Msg, RecvDeadline,
+    Shaping, Transport, WorkerKilled,
 };
 use super::weights::{model_input, WeightBundle};
+use crate::tensor::quant::{self, Dtype, WireDtype};
 
 /// Which compute backend workers use.
 #[derive(Debug, Clone)]
@@ -146,6 +147,19 @@ pub struct SessionOptions {
     /// workers listening on non-loopback TCP refuse to start without
     /// one.
     pub auth_token: Option<String>,
+    /// Compute dtype of the workers' kernels (`--dtype`). `I8` selects
+    /// the quantized tier — symmetric per-channel int8 weights, exact
+    /// i32 accumulation, f32 dequantized activations between stages —
+    /// and requires [`Backend::Compiled`] (the tier lives behind the
+    /// prepacked kernel dispatch). `F32` — the default — is the
+    /// numerical oracle the int8 path is gated against.
+    pub dtype: Dtype,
+    /// Payload encoding for inter-worker activation messages
+    /// (`--wire-dtype`). `F16` halves wire bytes at a bounded rounding
+    /// cost per hop; values are rounded *before* they enter the
+    /// transport, so channel and socket sessions stay bit-identical to
+    /// each other. Excluded by the PJRT backend.
+    pub wire_dtype: WireDtype,
 }
 
 /// Default deadline for a single tagged receive. Generous, so healthy
@@ -196,10 +210,22 @@ pub struct ExecStats {
     /// packed for). `"reference"`/`"pjrt"` for backends that do not
     /// route through the SIMD dispatch.
     pub kernel_isa: &'static str,
+    /// Compute dtype the session's kernels ran (`"f32"` / `"i8"`),
+    /// resolved at session creation ([`SessionOptions::dtype`]).
+    pub dtype: &'static str,
+    /// Wire payload encoding for inter-worker activations (`"f32"` /
+    /// `"f16"`; [`SessionOptions::wire_dtype`]).
+    pub wire_dtype: &'static str,
 }
 
 impl ExecStats {
-    fn zeroed(m: usize, kernel_isa: &'static str, conv_lowering: &'static str) -> ExecStats {
+    fn zeroed(
+        m: usize,
+        kernel_isa: &'static str,
+        conv_lowering: &'static str,
+        dtype: &'static str,
+        wire_dtype: &'static str,
+    ) -> ExecStats {
         ExecStats {
             wall_secs: 0.0,
             bytes_sent: vec![0; m],
@@ -210,6 +236,8 @@ impl ExecStats {
             replays: 0,
             conv_lowering,
             kernel_isa,
+            dtype,
+            wire_dtype,
         }
     }
 }
@@ -266,10 +294,20 @@ struct Mailbox {
     /// Per-request wire counters (reset by `begin_request`).
     bytes_sent: u64,
     messages_sent: usize,
+    /// Wire payload encoding: under `F16` every outbound tensor is
+    /// rounded to the binary16 grid *here*, before the transport sees
+    /// it, so channel sessions compute on exactly the values a socket
+    /// session's peers would decode — the two paths stay bit-identical.
+    wire: WireDtype,
 }
 
 impl Mailbox {
-    fn new(dev: usize, transport: Box<dyn Transport>, timeout: Duration) -> Mailbox {
+    fn new(
+        dev: usize,
+        transport: Box<dyn Transport>,
+        timeout: Duration,
+        wire: WireDtype,
+    ) -> Mailbox {
         Mailbox {
             dev,
             transport,
@@ -277,6 +315,7 @@ impl Mailbox {
             pending: Vec::new(),
             bytes_sent: 0,
             messages_sent: 0,
+            wire,
         }
     }
 
@@ -288,9 +327,15 @@ impl Mailbox {
 
     /// Send one tagged message, counting it against this request's wire
     /// totals (counted even if the transport then drops it — the cost
-    /// was paid on this side of the wire).
+    /// was paid on this side of the wire). Byte totals count *on-wire*
+    /// payload bytes (2/element under f16), so serve reports show the
+    /// halved traffic whichever transport carries it.
     fn send(&mut self, to: usize, req: usize, stage: usize, phase: u8, tensor: Tensor) -> Result<()> {
-        self.bytes_sent += tensor.bytes() as u64;
+        let mut tensor = tensor;
+        if self.wire == WireDtype::F16 {
+            quant::f16_round_tensor(&mut tensor);
+        }
+        self.bytes_sent += (tensor.len() * self.wire.bytes_per_elem()) as u64;
         self.messages_sent += 1;
         self.transport.send(
             to,
@@ -608,6 +653,15 @@ pub struct ExecSession {
     model: Arc<Model>,
     wb: Arc<WeightBundle>,
     backend: Backend,
+    /// Compute dtype of the workers' kernels, fixed at session creation
+    /// (recoveries recompile the survivor plan at the same dtype).
+    dtype: Dtype,
+    /// Wire payload encoding for inter-worker activations.
+    wire_dtype: WireDtype,
+    /// Unique prepacked weight bytes of the current compiled plan
+    /// (Arc-dedup'd across devices; 0 on non-compiled and remote
+    /// sessions, whose workers compile in their own processes).
+    packed_bytes: u64,
     /// Recovery context: re-planning needs the cluster and strategy, not
     /// just the finished plan (only [`ExecSession::open`] provides them).
     cluster: Option<Cluster>,
@@ -770,6 +824,18 @@ impl ExecSession {
                 ));
             }
         }
+        if opts.dtype == Dtype::I8 && !matches!(opts.backend, Backend::Compiled { .. }) {
+            return Err(anyhow!(
+                "--dtype i8 requires the compiled backend: the quantized tier lives \
+                 behind the prepacked kernel dispatch (run with --backend compiled)"
+            ));
+        }
+        if opts.wire_dtype == WireDtype::F16 && matches!(opts.backend, Backend::Pjrt { .. }) {
+            return Err(anyhow!(
+                "--wire-dtype f16 is not supported on the PJRT backend (its reference \
+                 outputs are checked bit-exact against the f32 wire)"
+            ));
+        }
         let batch_policy = BatchPolicy::new(
             opts.batch,
             opts.batch_wait.unwrap_or(DEFAULT_BATCH_WAIT),
@@ -789,17 +855,23 @@ impl ExecSession {
                     .and_then(|f| f.recv_timeout_ms.map(Duration::from_millis))
             })
             .unwrap_or(DEFAULT_RECV_TIMEOUT);
-        let kernel_isa = match &opts.backend {
-            Backend::Reference => "reference",
-            Backend::Fast { .. } | Backend::Compiled { .. } => {
+        let kernel_isa = match (&opts.backend, opts.dtype) {
+            (Backend::Reference, _) => "reference",
+            // The int8 tier dispatches through its own kernel table
+            // (`tensor::kernels::selected_i8`), so report that ISA.
+            (Backend::Compiled { .. }, Dtype::I8) => crate::tensor::kernels::selected_i8().name(),
+            (Backend::Fast { .. }, _) | (Backend::Compiled { .. }, _) => {
                 crate::tensor::kernels::selected().name()
             }
-            Backend::Pjrt { .. } => "pjrt",
+            (Backend::Pjrt { .. }, _) => "pjrt",
         };
         // Only the compiled backend resolves an im2col lowering (the
         // other backends either materialize per call or never lower).
-        let conv_lowering = match &opts.backend {
-            Backend::Compiled { .. } => super::prepack::lowering_selected().name(),
+        // The int8 conv path is always the implicit (fused) lowering —
+        // its quantized B-panel provider packs straight from the image.
+        let conv_lowering = match (&opts.backend, opts.dtype) {
+            (Backend::Compiled { .. }, Dtype::I8) => "fused",
+            (Backend::Compiled { .. }, _) => super::prepack::lowering_selected().name(),
             _ => "n/a",
         };
         let model = Arc::new(model.clone());
@@ -814,12 +886,15 @@ impl ExecSession {
             None => None,
         };
         let mut draining = Vec::new();
+        let mut packed_bytes = 0u64;
         let (remote, ctrl_tx, done_rx, handles, health) = match &opts.workers {
             Some(addrs) => {
                 let mut ctx = RemoteCtx::create(addrs.clone(), &model)?;
                 if let Some(t) = &opts.auth_token {
                     ctx.auth_token = t.clone();
                 }
+                ctx.dtype = opts.dtype;
+                ctx.wire_dtype = opts.wire_dtype;
                 if let Some(p) = opts.liveness {
                     // interval 0 is the documented off switch; the ctx
                     // models "off" as the absence of a policy.
@@ -839,7 +914,7 @@ impl ExecSession {
                 (Some(ctx), ctrl_tx, done_rx, handles, health)
             }
             None => {
-                let (ctrl_tx, done_rx, handles) = spawn_workers(
+                let (ctrl_tx, done_rx, handles, pb) = spawn_workers(
                     &model,
                     &plan,
                     &wb,
@@ -848,7 +923,10 @@ impl ExecSession {
                     &devmap,
                     recv_timeout,
                     shaping.as_ref(),
+                    opts.dtype,
+                    opts.wire_dtype,
                 );
+                packed_bytes = pb;
                 (None, ctrl_tx, done_rx, handles, Vec::new())
             }
         };
@@ -861,6 +939,9 @@ impl ExecSession {
             model,
             wb,
             backend: opts.backend,
+            dtype: opts.dtype,
+            wire_dtype: opts.wire_dtype,
+            packed_bytes,
             cluster,
             strategy,
             recover: opts.recover,
@@ -944,6 +1025,26 @@ impl ExecSession {
     /// backends), resolved at session creation.
     pub fn conv_lowering(&self) -> &'static str {
         self.conv_lowering
+    }
+
+    /// Compute dtype of this session's kernels (`"f32"` / `"i8"`).
+    pub fn dtype_name(&self) -> &'static str {
+        self.dtype.name()
+    }
+
+    /// Wire payload encoding for inter-worker activations (`"f32"` /
+    /// `"f16"`).
+    pub fn wire_dtype_name(&self) -> &'static str {
+        self.wire_dtype.name()
+    }
+
+    /// Unique prepacked weight bytes of the current compiled plan
+    /// (weight-identical kernels Arc-dedup'd across devices). The
+    /// i8-vs-f32 ratio on this number is the quantized tier's ~4×
+    /// weight-memory win. 0 on non-compiled backends and on remote
+    /// sessions (their workers compile in their own processes).
+    pub fn packed_bytes(&self) -> u64 {
+        self.packed_bytes
     }
 
     /// Requests submitted and still being processed by the workers
@@ -1067,7 +1168,13 @@ impl ExecSession {
                 input: Arc::clone(&input),
                 remaining: self.m,
                 output: None,
-                stats: ExecStats::zeroed(self.orig_m, self.kernel_isa, self.conv_lowering),
+                stats: ExecStats::zeroed(
+                    self.orig_m,
+                    self.kernel_isa,
+                    self.conv_lowering,
+                    self.dtype.name(),
+                    self.wire_dtype.name(),
+                ),
                 replays: 0,
                 last_finish: None,
             },
@@ -1380,7 +1487,7 @@ impl ExecSession {
                 }
             },
             None => {
-                let (ctrl_tx, done_rx, handles) = spawn_workers(
+                let (ctrl_tx, done_rx, handles, pb) = spawn_workers(
                     &self.model,
                     &plan,
                     &self.wb,
@@ -1389,7 +1496,10 @@ impl ExecSession {
                     &self.devmap,
                     self.recv_timeout,
                     self.shaping.as_ref(),
+                    self.dtype,
+                    self.wire_dtype,
                 );
+                self.packed_bytes = pb;
                 (ctrl_tx, done_rx, handles, Vec::new())
             }
         };
@@ -1417,7 +1527,13 @@ impl ExecSession {
             p.remaining = self.m;
             p.output = None;
             p.last_finish = None;
-            p.stats = ExecStats::zeroed(self.orig_m, self.kernel_isa, self.conv_lowering);
+            p.stats = ExecStats::zeroed(
+                self.orig_m,
+                self.kernel_isa,
+                self.conv_lowering,
+                self.dtype.name(),
+                self.wire_dtype.name(),
+            );
             p.replays += 1;
             self.recovery.requests_replayed += 1;
         }
@@ -1491,23 +1607,34 @@ fn spawn_workers(
     devmap: &[usize],
     recv_timeout: Duration,
     shaping: Option<&Arc<Shaping>>,
+    dtype: Dtype,
+    wire: WireDtype,
 ) -> (
     Vec<Sender<Control>>,
     Receiver<Done>,
     Vec<std::thread::JoinHandle<()>>,
+    u64,
 ) {
     let m = plan.m;
     // Compiled backend: build the whole plan's kernels up front, deduping
     // weight-identical stages across devices (Rows/Full/Replicate all
     // pack the full weight — one shared Arc instead of m copies), then
-    // hand each worker its shard.
+    // hand each worker its shard. `dtype` selects the kernel tier the
+    // plan compiles to (i8 quantizes weights + calibrates activations).
     let compiled = match backend {
-        Backend::Compiled { threads } => {
-            Some(CompiledPlan::compile(model, plan, wb, (*threads).max(1)))
-        }
+        Backend::Compiled { threads } => Some(CompiledPlan::compile_with_dtype(
+            model,
+            plan,
+            wb,
+            (*threads).max(1),
+            dtype,
+        )),
         _ => None,
     };
-    let endpoints = make_endpoints_shaped(m, devmap, fault, shaping);
+    let packed_bytes = compiled
+        .as_ref()
+        .map_or(0, |cp| cp.unique_packed_bytes() as u64);
+    let endpoints = make_endpoints_shaped_wire(m, devmap, fault, shaping, wire);
     let (done_tx, done_rx) = channel::<Done>();
     let mut ctrl_tx = Vec::with_capacity(m);
     let mut handles = Vec::with_capacity(m);
@@ -1532,10 +1659,11 @@ fn spawn_workers(
                 done,
                 backend,
                 shard,
+                wire,
             )
         }));
     }
-    (ctrl_tx, done_rx, handles)
+    (ctrl_tx, done_rx, handles, packed_bytes)
 }
 
 /// Execute a plan once (spawns a fresh session). Returns the output
@@ -1567,8 +1695,9 @@ pub(crate) fn worker_loop(
     done: Sender<Done>,
     backend: Backend,
     shard: Option<CompiledDevice>,
+    wire: WireDtype,
 ) {
-    let mut mailbox = Mailbox::new(dev, transport, recv_timeout);
+    let mut mailbox = Mailbox::new(dev, transport, recv_timeout, wire);
     let mut runner = match &backend {
         Backend::Reference => Ok(Runner::Host(ComputeBackend::Reference)),
         Backend::Fast { threads } => Ok(Runner::Host(ComputeBackend::Fast {

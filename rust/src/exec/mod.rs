@@ -61,6 +61,15 @@
 //!    straight into the GEMM's B-panel pack buffers and the full im2col
 //!    column matrix is never materialized, cutting each worker's
 //!    transient high-water footprint (`ExecStats::peak_scratch_bytes`).
+//!    [`SessionOptions::dtype`] `= I8` switches this backend to the
+//!    quantized tier: symmetric per-output-channel int8 weight panels
+//!    (~4x smaller), per-stage activation scales calibrated at compile
+//!    from a deterministic f32 walk, i8×i8→i32 microkernels with the
+//!    dequant+bias+ReLU epilogue fused into the f32 writeback, and
+//!    accumulators bit-identical across scalar/AVX2/NEON.
+//!    Orthogonally, [`SessionOptions::wire_dtype`] `= F16` sends
+//!    inter-worker activations as IEEE binary16 (half the wire bytes on
+//!    any backend but PJRT).
 //!  * [`Backend::Pjrt`] — each worker owns a PJRT CPU client and runs the
 //!    per-shard executables named in `artifacts/manifest.json` (requires
 //!    the `pjrt` build feature).

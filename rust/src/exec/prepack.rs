@@ -32,6 +32,17 @@
 //! transient footprint either way (surfaced as
 //! `ExecStats::peak_scratch_bytes`).
 //!
+//! The int8 tier ([`CompiledPlan::compile_with_dtype`] with
+//! `Dtype::I8`) compiles every slice to [`ConvKernelI8`] /
+//! [`DenseKernelI8`]: weights quantized to symmetric per-output-channel
+//! int8 and packed into the pair-interleaved i8 micro-panel layout
+//! (`tensor::qgemm::PackedAI8`, ~4× smaller), activation scales
+//! calibrated once per stage from a deterministic f32 walk
+//! ([`Calibration`]), and the dequantizing bias+ReLU epilogue fused
+//! into the i32→f32 writeback. Stage tails and all cross-device
+//! exchanges stay f32 — the f32 tier remains the numerical oracle the
+//! accuracy gates compare against.
+//!
 //! Sessions compile all m shards up front via [`CompiledPlan::compile`]
 //! (`Backend::Compiled`), which `Arc`-shares weight-identical kernels
 //! across devices (`Rows`/`Full`/`Replicate` stages pack the full weight
@@ -52,6 +63,11 @@ use crate::tensor::gemm::{
     gemm_prepacked, gemm_prepacked_from, matvec, Epilogue, PackScratch, PackedA,
 };
 use crate::tensor::im2col::{im2col_into, BatchIm2colView, Im2colView};
+use crate::tensor::kernels::EpilogueI8;
+use crate::tensor::qgemm::{
+    gemm_i8_prepacked_from, matvec_i8, PackedAI8, QIm2colView, QPackScratch,
+};
+use crate::tensor::quant::{self, Dtype};
 use crate::tensor::slice::{
     conv_weight_ic_slice, conv_weight_oc_slice, dense_weight_ic_slice, dense_weight_oc_slice,
 };
@@ -153,8 +169,17 @@ pub struct ScratchArena {
     /// [`run_conv_batched`] — grows to the batch high-water mark once,
     /// then the de-interleave into per-member tensors reuses it.
     batch_out: Vec<f32>,
+    /// Quantized stage-input buffer for the int8 tier ([`run_conv_i8`] /
+    /// [`run_dense_i8`]) — the whole input is quantized once per call,
+    /// then the quantized im2col view gathers from it. Empty (zero
+    /// bytes, zero grows) on f32 sessions.
+    qin: Vec<i8>,
+    /// Int8 GEMM scratch: per-thread pair-format B-panel buffers plus
+    /// the i32 accumulator matrix. Empty on f32 sessions.
+    qpack: QPackScratch,
     cols_grows: u64,
     batch_out_grows: u64,
+    qin_grows: u64,
 }
 
 impl ScratchArena {
@@ -167,7 +192,11 @@ impl ScratchArena {
     /// the executor exposes this per device in `ExecStats::arena_grows`
     /// and the soak tests assert it.
     pub fn grow_count(&self) -> u64 {
-        self.cols_grows + self.batch_out_grows + self.pack.grow_count()
+        self.cols_grows
+            + self.batch_out_grows
+            + self.qin_grows
+            + self.pack.grow_count()
+            + self.qpack.grow_count()
     }
 
     /// High-water transient bytes this arena ever held (buffers are
@@ -175,7 +204,10 @@ impl ScratchArena {
     /// `ExecStats::peak_scratch_bytes`; the fused-vs-materialized drop
     /// on this number is the implicit-GEMM memory win.
     pub fn peak_bytes(&self) -> u64 {
-        (self.cols.len() + self.batch_out.len()) as u64 * 4 + self.pack.bytes()
+        (self.cols.len() + self.batch_out.len()) as u64 * 4
+            + self.pack.bytes()
+            + self.qin.len() as u64
+            + self.qpack.bytes()
     }
 
     /// Split borrow: the first `cols_len` im2col elements and the GEMM
@@ -201,6 +233,17 @@ impl ScratchArena {
         let c = &mut self.batch_out[..len];
         c.fill(0.0);
         (c, &mut self.pack)
+    }
+
+    /// Split borrow for the int8 path: the first `len` bytes of the
+    /// quantized-input buffer and the i8 GEMM scratch, both needed
+    /// simultaneously by [`run_conv_i8`].
+    fn qin_and_qpack(&mut self, len: usize) -> (&mut [i8], &mut QPackScratch) {
+        if self.qin.len() < len {
+            self.qin.resize(len, 0);
+            self.qin_grows += 1;
+        }
+        (&mut self.qin[..len], &mut self.qpack)
     }
 }
 
@@ -244,12 +287,58 @@ pub struct DenseKernel {
     pub relu: bool,
 }
 
+/// A conv slice compiled for the int8 tier: weights quantized
+/// (symmetric per-output-channel) and packed into the pair-interleaved
+/// i8 micro-panel layout, with the *combined* dequant scales
+/// (`w_scale[oc] · x_scale`) precomputed so the hot loop never touches
+/// the factors separately. Int8 conv always runs as implicit GEMM
+/// ([`QIm2colView`] — there is no materialized i8 twin); the stage input
+/// is quantized once per call with the calibrated `x_scale`.
+#[derive(Debug, Clone)]
+pub struct ConvKernelI8 {
+    /// Quantized weight rows in the i8 GEMM micro-panel layout.
+    pub packed: PackedAI8,
+    /// Combined dequant scales per local output channel.
+    pub scales: Vec<f32>,
+    /// Bias for the local output channels; `None` on IC partial slices.
+    pub bias: Option<Vec<f32>>,
+    /// Calibrated activation quantization scale for this stage's input.
+    pub x_scale: f32,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub stride: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    pub relu: bool,
+}
+
+/// A dense slice compiled for the int8 tier: row-major quantized weights
+/// (k-consecutive bytes are natural `madd` pairs — no panel packing),
+/// combined dequant scales, calibrated input scale.
+#[derive(Debug, Clone)]
+pub struct DenseKernelI8 {
+    /// `c_out × c_in` row-major quantized weight block.
+    pub weight: Vec<i8>,
+    /// Combined dequant scales per local output channel.
+    pub scales: Vec<f32>,
+    pub bias: Option<Vec<f32>>,
+    /// Calibrated activation quantization scale for this stage's input.
+    pub x_scale: f32,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub relu: bool,
+}
+
 /// One (device, stage) entry of a compiled plan.
 #[derive(Debug, Clone)]
 pub enum CompiledKernel {
     Idle,
     Conv(ConvKernel),
     Dense(DenseKernel),
+    ConvI8(ConvKernelI8),
+    DenseI8(DenseKernelI8),
 }
 
 /// One device's compiled shard of a plan: per-stage kernels with weights
@@ -311,6 +400,41 @@ impl CompiledDevice {
         }
     }
 
+    /// [`CompiledDevice::compile_centralized`] with an explicit compute
+    /// tier (the int8 tier calibrates first, like the plan compile).
+    pub fn compile_centralized_with_dtype(
+        model: &Model,
+        wb: &WeightBundle,
+        threads: usize,
+        dtype: Dtype,
+    ) -> CompiledDevice {
+        match dtype {
+            Dtype::F32 => Self::compile_centralized(model, wb, threads),
+            Dtype::I8 => {
+                let calib = Calibration::build(model, wb);
+                let stages = model
+                    .stages()
+                    .iter()
+                    .map(|&stage| {
+                        let xs = calib.x_scale_for(model, stage);
+                        Arc::new(compile_slice_i8(
+                            model,
+                            wb,
+                            stage,
+                            &SliceKind::Full,
+                            threads,
+                            xs,
+                        ))
+                    })
+                    .collect();
+                CompiledDevice {
+                    stages,
+                    threads: threads.max(1),
+                }
+            }
+        }
+    }
+
     /// Total bytes of compiled weight + bias state reachable from this
     /// device (deployment reporting: the per-device memory a real
     /// physical device would pin; `Arc`-shared kernels count here on
@@ -320,13 +444,21 @@ impl CompiledDevice {
     }
 }
 
-/// Bytes of packed weight + bias state in one kernel.
+/// Bytes of packed weight + bias state in one kernel. Int8 kernels
+/// count 1 byte per packed weight plus their f32 scale and bias vectors
+/// — the ~4× shrink the deployment reports surface.
 fn kernel_bytes(k: &CompiledKernel) -> usize {
     match k {
         CompiledKernel::Idle => 0,
         CompiledKernel::Conv(c) => c.packed.bytes() + c.bias.as_ref().map_or(0, |b| b.len() * 4),
         CompiledKernel::Dense(d) => {
             d.weight.len() * 4 + d.bias.as_ref().map_or(0, |b| b.len() * 4)
+        }
+        CompiledKernel::ConvI8(c) => {
+            c.packed.bytes() + c.scales.len() * 4 + c.bias.as_ref().map_or(0, |b| b.len() * 4)
+        }
+        CompiledKernel::DenseI8(d) => {
+            d.weight.len() + d.scales.len() * 4 + d.bias.as_ref().map_or(0, |b| b.len() * 4)
         }
     }
 }
@@ -348,6 +480,65 @@ pub struct CompiledPlan {
     pub devices: Vec<CompiledDevice>,
 }
 
+/// Per-stage activation-scale calibration for the int8 tier, recorded
+/// into the compiled plan at session warm-up.
+///
+/// Built by walking the *f32 compiled* model (threads pinned to 1 so the
+/// walk is bit-deterministic regardless of the session's thread count)
+/// over the deterministic calibration set
+/// (`weights::calibration_inputs`) and recording the max |input| each
+/// stage ever sees. Everything here is a pure function of
+/// `(Model, WeightBundle)` — socket workers recompute the identical
+/// table instead of receiving it over the wire, and replayed requests
+/// quantize with the exact scales the original run used.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Max |stage input| across the calibration set, indexed in
+    /// `model.stages()` order.
+    pub stage_max: Vec<f32>,
+}
+
+impl Calibration {
+    /// Run the calibration set through the f32 compiled model and record
+    /// per-stage input maxima.
+    pub fn build(model: &Model, wb: &WeightBundle) -> Calibration {
+        let cd = CompiledDevice::compile_centralized(model, wb, 1);
+        let mut arena = ScratchArena::new();
+        let stages = model.stages();
+        let mut stage_max = vec![0.0f32; stages.len()];
+        for input in super::weights::calibration_inputs(model) {
+            let mut t = input;
+            for (si, &stage) in stages.iter().enumerate() {
+                stage_max[si] = stage_max[si].max(quant::max_abs(&t.data));
+                t = super::compute::compute_slice_compiled(
+                    model,
+                    &cd,
+                    si,
+                    stage,
+                    &SliceKind::Full,
+                    &t,
+                    None,
+                    &mut arena,
+                );
+            }
+        }
+        Calibration { stage_max }
+    }
+
+    /// The activation quantization scale for a stage's input. Valid for
+    /// every slice kind: IC channel shards, row windows, and halo rows
+    /// are all value subsets of the full stage input (padding quantizes
+    /// to exactly 0), so one per-stage scale covers them.
+    pub fn x_scale_for(&self, model: &Model, stage: Stage) -> f32 {
+        let si = model
+            .stages()
+            .iter()
+            .position(|s| s.op_idx == stage.op_idx)
+            .expect("calibration: stage not in model");
+        quant::act_scale(self.stage_max[si])
+    }
+}
+
 /// Sharing key: slices whose compiled kernels are identical map to the
 /// same key (see [`CompiledPlan`] for why every `Rows` range shares).
 fn share_key(s: &SliceKind) -> SliceKind {
@@ -362,16 +553,37 @@ impl CompiledPlan {
     /// Compile every device's shard, stage-parallel (`thread::scope`,
     /// one task per stage — stages are independent; within a stage the
     /// dedup cache makes sharing decisions deterministically in device
-    /// order).
+    /// order). F32 tier — the default and the numerical oracle.
     pub fn compile(model: &Model, plan: &Plan, wb: &WeightBundle, threads: usize) -> CompiledPlan {
+        Self::compile_with_dtype(model, plan, wb, threads, Dtype::F32)
+    }
+
+    /// [`CompiledPlan::compile`] with an explicit compute tier. The int8
+    /// tier first calibrates activation scales (deterministic f32 walk —
+    /// [`Calibration::build`]) and then compiles every slice through
+    /// [`compile_slice_i8`]; kernel sharing applies identically since
+    /// quantization is a pure function of the slice.
+    pub fn compile_with_dtype(
+        model: &Model,
+        plan: &Plan,
+        wb: &WeightBundle,
+        threads: usize,
+        dtype: Dtype,
+    ) -> CompiledPlan {
         let threads = threads.max(1);
+        let calib = match dtype {
+            Dtype::F32 => None,
+            Dtype::I8 => Some(Calibration::build(model, wb)),
+        };
         let m = plan.m;
         let per_stage: Vec<Vec<Arc<CompiledKernel>>> = std::thread::scope(|s| {
             let handles: Vec<_> = plan
                 .stages
                 .iter()
                 .map(|sp| {
+                    let calib = calib.as_ref();
                     s.spawn(move || {
+                        let x_scale = calib.map(|c| c.x_scale_for(model, sp.stage));
                         let mut cache: Vec<(SliceKind, Arc<CompiledKernel>)> = Vec::new();
                         (0..m)
                             .map(|dev| {
@@ -379,13 +591,23 @@ impl CompiledPlan {
                                 if let Some((_, k)) = cache.iter().find(|(c, _)| *c == key) {
                                     Arc::clone(k)
                                 } else {
-                                    let k = Arc::new(compile_slice(
-                                        model,
-                                        wb,
-                                        sp.stage,
-                                        &sp.slices[dev],
-                                        threads,
-                                    ));
+                                    let k = Arc::new(match x_scale {
+                                        None => compile_slice(
+                                            model,
+                                            wb,
+                                            sp.stage,
+                                            &sp.slices[dev],
+                                            threads,
+                                        ),
+                                        Some(xs) => compile_slice_i8(
+                                            model,
+                                            wb,
+                                            sp.stage,
+                                            &sp.slices[dev],
+                                            threads,
+                                            xs,
+                                        ),
+                                    });
                                     cache.push((key, Arc::clone(&k)));
                                     k
                                 }
@@ -559,6 +781,161 @@ pub fn compile_slice(
     }
 }
 
+/// Int8 counterpart of [`compile_slice`]: identical slicing semantics,
+/// but the sliced f32 weight block is quantized (symmetric per-output-
+/// channel — [`PackedAI8`] / `quant::quantize_rows`) and the combined
+/// dequant scales (`w_scale · x_scale`) are precomputed. IC partial
+/// slices quantize *their own* weight sub-matrix (per-row scales over
+/// the shard's columns) and dequantize their own partial — the
+/// cross-device reduction stays f32, so partial sums compose exactly
+/// like the f32 tier's.
+pub fn compile_slice_i8(
+    model: &Model,
+    wb: &WeightBundle,
+    stage: Stage,
+    slice: &SliceKind,
+    threads: usize,
+    x_scale: f32,
+) -> CompiledKernel {
+    let op = &model.ops[stage.op_idx];
+    let combined = |pa: &PackedAI8| -> Vec<f32> { pa.scales().iter().map(|s| s * x_scale).collect() };
+    match (slice, &op.kind) {
+        (SliceKind::Idle, _) => CompiledKernel::Idle,
+
+        (
+            SliceKind::Full | SliceKind::Replicate,
+            OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, relu },
+        ) => {
+            let packed =
+                PackedAI8::pack_for_threads(*c_out, c_in * k_h * k_w, wb.w(&op.name), threads);
+            let scales = combined(&packed);
+            CompiledKernel::ConvI8(ConvKernelI8 {
+                packed,
+                scales,
+                bias: Some(wb.b(&op.name).to_vec()),
+                x_scale,
+                c_in: *c_in,
+                c_out: *c_out,
+                k_h: *k_h,
+                k_w: *k_w,
+                stride: *stride,
+                pad_h: *pad,
+                pad_w: *pad,
+                relu: *relu,
+            })
+        }
+        (SliceKind::Full | SliceKind::Replicate, OpKind::Dense { c_in, c_out, relu }) => {
+            let (weight, wscales) = wb.quantized_w(&op.name, *c_out, *c_in);
+            CompiledKernel::DenseI8(DenseKernelI8 {
+                weight,
+                scales: wscales.iter().map(|s| s * x_scale).collect(),
+                bias: Some(wb.b(&op.name).to_vec()),
+                x_scale,
+                c_in: *c_in,
+                c_out: *c_out,
+                relu: *relu,
+            })
+        }
+
+        (
+            SliceKind::Oc { start, count },
+            OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, relu },
+        ) => {
+            let w = conv_weight_oc_slice(wb.w(&op.name), *c_out, *c_in, *k_h, *k_w, *start, *count);
+            let packed = PackedAI8::pack_for_threads(*count, c_in * k_h * k_w, &w, threads);
+            let scales = combined(&packed);
+            CompiledKernel::ConvI8(ConvKernelI8 {
+                packed,
+                scales,
+                bias: Some(wb.b(&op.name)[*start..*start + *count].to_vec()),
+                x_scale,
+                c_in: *c_in,
+                c_out: *count,
+                k_h: *k_h,
+                k_w: *k_w,
+                stride: *stride,
+                pad_h: *pad,
+                pad_w: *pad,
+                relu: *relu,
+            })
+        }
+        (SliceKind::Oc { start, count }, OpKind::Dense { c_in, c_out, relu }) => {
+            let w = dense_weight_oc_slice(wb.w(&op.name), *c_out, *c_in, *start, *count);
+            let (weight, wscales) = quant::quantize_rows(&w, *count, *c_in);
+            CompiledKernel::DenseI8(DenseKernelI8 {
+                weight,
+                scales: wscales.iter().map(|s| s * x_scale).collect(),
+                bias: Some(wb.b(&op.name)[*start..*start + *count].to_vec()),
+                x_scale,
+                c_in: *c_in,
+                c_out: *count,
+                relu: *relu,
+            })
+        }
+
+        // IC partials: linear part only — no bias, no ReLU (they apply
+        // after the cross-device f32 reduction, `apply_tail`).
+        (
+            SliceKind::Ic { start, count },
+            OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, .. },
+        ) => {
+            let w = conv_weight_ic_slice(wb.w(&op.name), *c_out, *c_in, *k_h, *k_w, *start, *count);
+            let packed = PackedAI8::pack_for_threads(*c_out, count * k_h * k_w, &w, threads);
+            let scales = combined(&packed);
+            CompiledKernel::ConvI8(ConvKernelI8 {
+                packed,
+                scales,
+                bias: None,
+                x_scale,
+                c_in: *count,
+                c_out: *c_out,
+                k_h: *k_h,
+                k_w: *k_w,
+                stride: *stride,
+                pad_h: *pad,
+                pad_w: *pad,
+                relu: false,
+            })
+        }
+        (SliceKind::Ic { start, count }, OpKind::Dense { c_in, c_out, .. }) => {
+            let w = dense_weight_ic_slice(wb.w(&op.name), *c_out, *c_in, *start, *count);
+            let (weight, wscales) = quant::quantize_rows(&w, *c_out, *count);
+            CompiledKernel::DenseI8(DenseKernelI8 {
+                weight,
+                scales: wscales.iter().map(|s| s * x_scale).collect(),
+                bias: None,
+                x_scale,
+                c_in: *count,
+                c_out: *c_out,
+                relu: false,
+            })
+        }
+
+        // Row shards convolve a materialized input-row window: vertical
+        // padding is already in the window, so pad_h is 0 at run time.
+        (SliceKind::Rows { .. }, OpKind::Conv2d { c_in, c_out, k_h, k_w, stride, pad, relu }) => {
+            let packed =
+                PackedAI8::pack_for_threads(*c_out, c_in * k_h * k_w, wb.w(&op.name), threads);
+            let scales = combined(&packed);
+            CompiledKernel::ConvI8(ConvKernelI8 {
+                packed,
+                scales,
+                bias: Some(wb.b(&op.name).to_vec()),
+                x_scale,
+                c_in: *c_in,
+                c_out: *c_out,
+                k_h: *k_h,
+                k_w: *k_w,
+                stride: *stride,
+                pad_h: 0,
+                pad_w: *pad,
+                relu: *relu,
+            })
+        }
+        _ => unreachable!("slice kind {slice:?} incompatible with {}", op.name),
+    }
+}
+
 /// Run a compiled conv slice through the lowering recorded at compile
 /// time: fused (implicit GEMM — patches gathered straight into the
 /// per-thread B-panel buffers, no column matrix) or materialized
@@ -691,6 +1068,92 @@ pub fn run_dense(k: &DenseKernel, input: &Tensor, threads: usize) -> Tensor {
         &mut y,
     );
     Tensor::vector(y)
+}
+
+/// Run an int8-compiled conv slice: quantize the stage input once into
+/// the arena's i8 buffer, gather pair-format panels through the
+/// quantized im2col view (implicit GEMM — no i8 column matrix), and let
+/// the i8 microkernel's epilogue dequantize straight into the f32
+/// output with bias+ReLU fused. Steady-state allocation-free once the
+/// arena is warm, exactly like the f32 path.
+pub fn run_conv_i8(
+    k: &ConvKernelI8,
+    input: &Tensor,
+    threads: usize,
+    arena: &mut ScratchArena,
+) -> Tensor {
+    assert_eq!(input.c, k.c_in, "compiled i8 conv: input channel mismatch");
+    crate::tensor::ops::assert_conv_fits(input, k.k_h, k.k_w, k.pad_h, k.pad_w);
+    let out_h = (input.h + 2 * k.pad_h - k.k_h) / k.stride + 1;
+    let out_w = (input.w + 2 * k.pad_w - k.k_w) / k.stride + 1;
+    let mut out = Tensor::zeros(k.c_out, out_h, out_w);
+    let (qin, qpack) = arena.qin_and_qpack(input.len());
+    let view = QIm2colView::quantize(
+        input, k.x_scale, qin, k.k_h, k.k_w, k.stride, k.pad_h, k.pad_w, out_h, out_w,
+    );
+    let ep = EpilogueI8 {
+        scales: &k.scales,
+        bias: k.bias.as_deref(),
+        relu: k.relu,
+    };
+    gemm_i8_prepacked_from(&k.packed, &view, &mut out.data, ep, threads, qpack);
+    out
+}
+
+/// Batched int8 conv runs per member on purpose: each member quantizes
+/// into the same arena buffer, and the per-member i8 GEMM is already
+/// exact, so a batched i8 GEMM would buy occupancy at the cost of a
+/// second panel layout. Outputs are therefore trivially bit-identical
+/// to batch-1 — the contract the cross-request batcher requires.
+pub fn run_conv_i8_batched(
+    k: &ConvKernelI8,
+    inputs: &[&Tensor],
+    threads: usize,
+    arena: &mut ScratchArena,
+) -> Vec<Tensor> {
+    inputs
+        .iter()
+        .map(|t| run_conv_i8(k, t, threads, arena))
+        .collect()
+}
+
+/// Run an int8-compiled dense slice: quantize the input vector into the
+/// arena's i8 buffer, then the exact i32 row-dot matvec with the
+/// dequantizing epilogue.
+pub fn run_dense_i8(
+    k: &DenseKernelI8,
+    input: &Tensor,
+    threads: usize,
+    arena: &mut ScratchArena,
+) -> Tensor {
+    assert_eq!(
+        input.len(),
+        k.c_in,
+        "compiled i8 dense: input feature mismatch"
+    );
+    let (qin, _) = arena.qin_and_qpack(input.len());
+    quant::quantize_into(&input.data, k.x_scale, qin);
+    let mut y = vec![0.0f32; k.c_out];
+    let ep = EpilogueI8 {
+        scales: &k.scales,
+        bias: k.bias.as_deref(),
+        relu: k.relu,
+    };
+    matvec_i8(k.c_out, k.c_in, &k.weight, qin, ep, threads, &mut y);
+    Tensor::vector(y)
+}
+
+/// Per-member loop (see [`run_conv_i8_batched`] for why).
+pub fn run_dense_i8_batched(
+    k: &DenseKernelI8,
+    inputs: &[&Tensor],
+    threads: usize,
+    arena: &mut ScratchArena,
+) -> Vec<Tensor> {
+    inputs
+        .iter()
+        .map(|t| run_dense_i8(k, t, threads, arena))
+        .collect()
 }
 
 #[cfg(test)]
@@ -1138,6 +1601,102 @@ mod tests {
             cp.unique_packed_bytes(),
             cp.replicated_packed_bytes()
         );
+    }
+
+    #[test]
+    fn compiled_i8_centralized_tracks_f32_and_shrinks() {
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let x = model_input(&m);
+        let f32_cd = CompiledDevice::compile_centralized(&m, &wb, 1);
+        let i8_cd = CompiledDevice::compile_centralized_with_dtype(&m, &wb, 1, Dtype::I8);
+        let mut fa = ScratchArena::new();
+        let mut qa = ScratchArena::new();
+        let want = centralized_inference_compiled(&m, &f32_cd, &x, &mut fa);
+        let got = centralized_inference_compiled(&m, &i8_cd, &x, &mut qa);
+        // The documented int8 accuracy gate vs the f32 oracle.
+        let tol = quant::check_tolerance(
+            Dtype::I8,
+            quant::WireDtype::F32,
+            quant::max_abs(&want.data),
+        );
+        let diff = want.max_abs_diff(&got) as f64;
+        assert!(diff <= tol, "i8 drift {diff} exceeds gate {tol}");
+        // Margin-aware top-1 agreement: when the f32 logit margin
+        // exceeds twice the elementwise gate, quantization provably
+        // cannot flip the argmax.
+        let argmax = |t: &Tensor| {
+            t.data
+                .iter()
+                .enumerate()
+                .fold((0usize, f32::MIN), |best, (i, &v)| {
+                    if v > best.1 {
+                        (i, v)
+                    } else {
+                        best
+                    }
+                })
+                .0
+        };
+        let mut sorted = want.data.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if (sorted[0] - sorted[1]) as f64 > 2.0 * tol {
+            assert_eq!(argmax(&got), argmax(&want), "top-1 flipped outside margin");
+        }
+        // The acceptance bar: compiled int8 state >= 3.5x smaller.
+        let ratio = f32_cd.packed_bytes() as f64 / i8_cd.packed_bytes() as f64;
+        assert!(ratio >= 3.5, "packed_bytes shrink {ratio:.2} below 3.5x");
+        // Steady state stays allocation-free and deterministic.
+        let warm = qa.grow_count();
+        assert!(warm > 0);
+        for _ in 0..4 {
+            let again = centralized_inference_compiled(&m, &i8_cd, &x, &mut qa);
+            assert_eq!(again, got, "i8 inference must be deterministic");
+        }
+        assert_eq!(qa.grow_count(), warm, "i8 hot loop must not reallocate");
+        // The f32 arena never touched the int8 buffers (the exact-peak
+        // accounting test above depends on this staying true).
+        assert!(fa.peak_bytes() > 0);
+    }
+
+    #[test]
+    fn compiled_i8_plan_all_strategies_shrinks_and_dedups() {
+        use crate::partition::Strategy;
+        let m = zoo::lenet();
+        let cluster = crate::device::profiles::paper_default();
+        let wb = WeightBundle::generate(&m);
+        for strategy in Strategy::all() {
+            let plan = crate::pipeline::plan(&m, &cluster, strategy);
+            let f = CompiledPlan::compile(&m, &plan, &wb, 1);
+            let q = CompiledPlan::compile_with_dtype(&m, &plan, &wb, 1, Dtype::I8);
+            assert_eq!(q.devices.len(), plan.m);
+            let ratio =
+                f.replicated_packed_bytes() as f64 / q.replicated_packed_bytes() as f64;
+            assert!(
+                ratio >= 3.5,
+                "{}: i8 plan shrink {ratio:.2} below 3.5x",
+                strategy.name()
+            );
+            assert!(q.unique_packed_bytes() <= q.replicated_packed_bytes());
+        }
+    }
+
+    #[test]
+    fn i8_conv_kernel_ic_slice_drops_bias_and_relu() {
+        let m = zoo::vgg_mini();
+        let wb = WeightBundle::generate(&m);
+        let calib = Calibration::build(&m, &wb);
+        let stages = m.stages();
+        let slice = SliceKind::Ic { start: 2, count: 5 };
+        let xs = calib.x_scale_for(&m, stages[1]);
+        match compile_slice_i8(&m, &wb, stages[1], &slice, 1, xs) {
+            CompiledKernel::ConvI8(k) => {
+                assert!(k.bias.is_none() && !k.relu);
+                assert_eq!(k.c_in, 5);
+                assert_eq!(k.x_scale, xs);
+            }
+            other => panic!("expected i8 conv kernel, got {other:?}"),
+        }
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::config::{fault_plan_from_json, model_from_json, FaultPlan, StallSpec}
 use crate::device::Cluster;
 use crate::model::{Model, OpKind};
 use crate::partition::Strategy;
+use crate::tensor::quant::{Dtype, WireDtype};
 use crate::util::json::Json;
 use crate::util::prng::SplitMix64;
 
@@ -86,6 +87,11 @@ pub(crate) struct RemoteCtx {
     /// keepalive entirely (detection falls back to broken pipes and
     /// receive deadlines, the pre-liveness behavior).
     pub liveness: Option<LivenessPolicy>,
+    /// Compute dtype every worker compiles its shard with (workers
+    /// re-quantize deterministically, so no packed panels cross the wire).
+    pub dtype: Dtype,
+    /// Payload dtype for mesh MSG frames between workers.
+    pub wire_dtype: WireDtype,
 }
 
 impl RemoteCtx {
@@ -100,6 +106,8 @@ impl RemoteCtx {
             model_spec: model_to_spec_json(model)?,
             auth_token: String::new(),
             liveness: Some(LivenessPolicy::default()),
+            dtype: Dtype::F32,
+            wire_dtype: WireDtype::F32,
         })
     }
 }
@@ -286,6 +294,11 @@ pub(crate) struct SessionConfig {
     pub heartbeat_ms: u64,
     /// Consecutive missed intervals before the grace window opens.
     pub miss_limit: u32,
+    /// Compute dtype for the compiled shard (weights are re-quantized
+    /// locally from the shared deterministic bundle).
+    pub dtype: Dtype,
+    /// Payload dtype for mesh MSG frames this worker sends.
+    pub wire_dtype: WireDtype,
 }
 
 impl SessionConfig {
@@ -330,6 +343,8 @@ impl SessionConfig {
             ("auth_token", Json::str(self.auth_token.as_str())),
             ("heartbeat_ms", Json::num(self.heartbeat_ms as f64)),
             ("miss_limit", Json::num(self.miss_limit as f64)),
+            ("dtype", Json::str(self.dtype.name())),
+            ("wire_dtype", Json::str(self.wire_dtype.name())),
         ];
         if let Some(f) = &self.fault {
             pairs.push(("fault", fault_plan_to_json(f)));
@@ -392,6 +407,18 @@ impl SessionConfig {
             Json::Null => None,
             f => Some(fault_plan_from_json(f)?),
         };
+        // Absent dtype fields read as f32 (an old-style config from a
+        // pre-quantization coordinator); unknown names are refused.
+        let dtype = match j.get("dtype").as_str() {
+            None => Dtype::F32,
+            Some(s) => Dtype::from_name(s)
+                .ok_or_else(|| anyhow!("session config: unknown dtype '{s}'"))?,
+        };
+        let wire_dtype = match j.get("wire_dtype").as_str() {
+            None => WireDtype::F32,
+            Some(s) => WireDtype::from_name(s)
+                .ok_or_else(|| anyhow!("session config: unknown wire dtype '{s}'"))?,
+        };
         Ok(SessionConfig {
             session: need("session")? as u64,
             epoch: need("epoch")? as u64,
@@ -412,6 +439,8 @@ impl SessionConfig {
                 .unwrap_or_default(),
             heartbeat_ms: j.get("heartbeat_ms").as_f64().unwrap_or(0.0) as u64,
             miss_limit: j.get("miss_limit").as_f64().unwrap_or(1.0) as u32,
+            dtype,
+            wire_dtype,
         })
     }
 }
@@ -564,6 +593,8 @@ pub(crate) fn spawn_remote_workers(
             auth_token: ctx.auth_token.clone(),
             heartbeat_ms: ctx.liveness.map_or(0, |p| p.interval_ms),
             miss_limit: ctx.liveness.map_or(1, |p| p.miss_limit),
+            dtype: ctx.dtype,
+            wire_dtype: ctx.wire_dtype,
         };
         wire::write_frame(&mut s, wire::K_CONFIG, &wire::encode_config(&cfg.to_json()?))
             .with_context(|| format!("worker {i} at {addr}: sending config"))?;
@@ -1125,11 +1156,20 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
     let wb = Arc::new(WeightBundle::generate(&model));
     let shard = match &cfg.backend {
         Backend::Compiled { threads } => {
-            let cp = CompiledPlan::compile(&model, &plan, &wb, (*threads).max(1));
+            // compile_with_dtype quantizes from the deterministic weight
+            // bundle and calibration walk, so every worker's int8 shard is
+            // bit-identical to what the coordinator planned against.
+            let cp =
+                CompiledPlan::compile_with_dtype(&model, &plan, &wb, (*threads).max(1), cfg.dtype);
             Some(cp.devices[cfg.dev].clone())
         }
         _ => None,
     };
+    if cfg.dtype == Dtype::I8 && !matches!(cfg.backend, Backend::Compiled { .. }) {
+        return Err(anyhow!(
+            "session config: dtype i8 requires the compiled backend"
+        ));
+    }
     // Install the route before dialing out: peers admit our mesh links
     // only once their own CONFIG landed, and vice versa.
     let (inbox_tx, inbox_rx) = channel::<Msg>();
@@ -1157,8 +1197,13 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
     }
     state.sessions_served.fetch_add(1, Ordering::Relaxed);
     eprintln!(
-        "iop worker: serving session {:#x} epoch {} as device {} (m={})",
-        cfg.session, cfg.epoch, cfg.dev, plan.m
+        "iop worker: serving session {:#x} epoch {} as device {} (m={}, dtype={}, wire={})",
+        cfg.session,
+        cfg.epoch,
+        cfg.dev,
+        plan.m,
+        cfg.dtype.name(),
+        cfg.wire_dtype.name()
     );
     // Dial the outbound half of the simplex mesh.
     let mut rng = SplitMix64::new(
@@ -1172,7 +1217,7 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
         }
         out.push(Some(dial_peer(peer, &cfg, j, &mut rng)?));
     }
-    let sock = SocketTransport::new(cfg.dev, out, inbox_tx, inbox_rx);
+    let sock = SocketTransport::with_wire_dtype(cfg.dev, out, inbox_tx, inbox_rx, cfg.wire_dtype);
     let transport: Box<dyn Transport> = match &cfg.fault {
         Some(fp) => Box::new(FaultTransport::new(
             Box::new(sock),
@@ -1203,9 +1248,20 @@ fn serve_session(mut conn: Stream, state: Arc<WorkerState>, hello: Hello) -> Res
         let plan = Arc::clone(&plan);
         let backend = cfg.backend.clone();
         let dev = cfg.dev;
+        let wire_dtype = cfg.wire_dtype;
         std::thread::spawn(move || {
             worker_loop(
-                dev, model, plan, wb, transport, recv_timeout, ctl_rx, done_tx, backend, shard,
+                dev,
+                model,
+                plan,
+                wb,
+                transport,
+                recv_timeout,
+                ctl_rx,
+                done_tx,
+                backend,
+                shard,
+                wire_dtype,
             )
         })
     };
@@ -1510,6 +1566,8 @@ mod tests {
             auth_token: "hunter2".into(),
             heartbeat_ms: 250,
             miss_limit: 4,
+            dtype: Dtype::I8,
+            wire_dtype: WireDtype::F16,
         };
         let back = SessionConfig::from_json(&cfg.to_json().unwrap()).unwrap();
         assert_eq!(back.session, cfg.session);
@@ -1522,6 +1580,8 @@ mod tests {
         assert_eq!(back.recv_timeout_ms, cfg.recv_timeout_ms);
         assert_eq!(back.fault, cfg.fault);
         assert_eq!(back.auth_token, "hunter2");
+        assert_eq!(back.dtype, Dtype::I8);
+        assert_eq!(back.wire_dtype, WireDtype::F16);
         assert_eq!(
             back.liveness(),
             Some(LivenessPolicy { interval_ms: 250, miss_limit: 4 })
@@ -1558,6 +1618,8 @@ mod tests {
             auth_token: String::new(),
             heartbeat_ms: 0,
             miss_limit: 1,
+            dtype: Dtype::F32,
+            wire_dtype: WireDtype::F32,
         };
         assert!(cfg.to_json().is_err());
     }
@@ -1585,6 +1647,9 @@ mod tests {
         let cfg = SessionConfig::from_json(&cfg_json).unwrap();
         assert_eq!(cfg.liveness(), None);
         assert_eq!(cfg.auth_token, "");
+        // Pre-quantization configs carry no dtype fields: both read f32.
+        assert_eq!(cfg.dtype, Dtype::F32);
+        assert_eq!(cfg.wire_dtype, WireDtype::F32);
     }
 
     #[test]
@@ -1684,6 +1749,8 @@ mod tests {
             auth_token: String::new(),
             heartbeat_ms: 0,
             miss_limit: 1,
+            dtype: Dtype::F32,
+            wire_dtype: WireDtype::F32,
         };
         let (mut ctrl, kind, _) = shake(&hello(wire::ROLE_CTRL, 5, wire::CTRL_FROM));
         assert_eq!(kind, wire::K_HELLO_OK);

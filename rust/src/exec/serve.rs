@@ -148,6 +148,14 @@ pub struct ThroughputReport {
     /// Measured shaped-medium busy seconds for final-assembly traffic
     /// (gather to device 0); 0 on unshaped sessions.
     pub wire_busy_final: f64,
+    /// Compute dtype the session ran with ("f32" or "i8").
+    pub dtype: &'static str,
+    /// Payload dtype of inter-worker MSG frames ("f32" or "f16").
+    pub wire_dtype: &'static str,
+    /// Unique packed weight-panel bytes across the session's compiled
+    /// shards (0 on non-compiled and remote sessions). The ~4x shrink
+    /// from f32 to i8 panels shows up here.
+    pub packed_bytes: u64,
 }
 
 impl ThroughputReport {
@@ -216,6 +224,9 @@ impl ThroughputReport {
                 ),
             ),
             ("wire_busy_final_secs", Json::num(self.wire_busy_final)),
+            ("dtype", Json::str(self.dtype)),
+            ("wire_dtype", Json::str(self.wire_dtype)),
+            ("packed_bytes", Json::num(self.packed_bytes as f64)),
         ])
     }
 }
@@ -319,6 +330,9 @@ fn finish_report(
         liveness: live,
         wire_busy_by_stage,
         wire_busy_final,
+        dtype: session.dtype_name(),
+        wire_dtype: session.wire_dtype_name(),
+        packed_bytes: session.packed_bytes(),
     }
 }
 
@@ -572,6 +586,13 @@ mod tests {
         assert_eq!(j.get("pings_sent").as_f64(), Some(0.0));
         assert_eq!(j.get("hung_workers").as_f64(), Some(0.0));
         assert_eq!(j.get("grace_resumes").as_f64(), Some(0.0));
+        // f32 compiled session: dtype fields default, packed panels exist
+        assert_eq!(rep.dtype, "f32");
+        assert_eq!(rep.wire_dtype, "f32");
+        assert!(rep.packed_bytes > 0, "compiled session packs weights");
+        assert_eq!(j.get("dtype").as_str(), Some("f32"));
+        assert_eq!(j.get("wire_dtype").as_str(), Some("f32"));
+        assert!(j.get("packed_bytes").as_f64().unwrap_or(0.0) > 0.0);
     }
 
     #[test]

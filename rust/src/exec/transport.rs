@@ -43,6 +43,7 @@ use anyhow::Result;
 
 use super::wire::{self, Stream};
 use crate::config::{FaultPlan, LinkShape};
+use crate::tensor::quant::WireDtype;
 use crate::tensor::Tensor;
 use crate::util::prng::SplitMix64;
 
@@ -534,6 +535,10 @@ pub struct SocketTransport {
     /// send-to-self case.
     self_tx: Sender<Msg>,
     rx: Receiver<Msg>,
+    /// Payload encoding for outbound MSG frames (`--wire-dtype`); every
+    /// peer decodes from the frame's own dtype byte, so mixed meshes
+    /// still interoperate.
+    wire: WireDtype,
 }
 
 impl SocketTransport {
@@ -541,18 +546,37 @@ impl SocketTransport {
     /// the accept loop feeds. The matching `Sender` clone for loopback
     /// is passed separately so the accept loop can keep its own.
     pub fn new(dev: usize, out: Vec<Option<Stream>>, self_tx: Sender<Msg>, rx: Receiver<Msg>) -> Self {
-        SocketTransport { dev, out, self_tx, rx }
+        Self::with_wire_dtype(dev, out, self_tx, rx, WireDtype::F32)
+    }
+
+    /// [`SocketTransport::new`] with an explicit outbound payload
+    /// encoding. f16 halves activation bytes on the wire at a bounded
+    /// rounding cost per hop.
+    pub fn with_wire_dtype(
+        dev: usize,
+        out: Vec<Option<Stream>>,
+        self_tx: Sender<Msg>,
+        rx: Receiver<Msg>,
+        wire: WireDtype,
+    ) -> Self {
+        SocketTransport { dev, out, self_tx, rx, wire }
     }
 }
 
 impl Transport for SocketTransport {
     fn send(&mut self, to: usize, msg: Msg) -> Result<()> {
         if to == self.dev {
+            // Loopback stays in-process; round exactly like the wire
+            // would so self-sends and socket sends agree bit-for-bit.
+            let mut msg = msg;
+            if self.wire == WireDtype::F16 {
+                crate::tensor::quant::f16_round_tensor(&mut msg.tensor);
+            }
             let _ = self.self_tx.send(msg);
             return Ok(());
         }
         if let Some(s) = self.out.get_mut(to).and_then(|o| o.as_mut()) {
-            let body = wire::encode_msg(&msg);
+            let body = wire::encode_msg(&msg, self.wire);
             if wire::write_frame(s, wire::K_MSG, &body).is_err() {
                 // Broken pipe / connection reset == the peer is gone.
                 // Same contract as every other transport: drop the
@@ -642,6 +666,10 @@ pub struct ShapedTransport {
     shaping: Arc<Shaping>,
     dev_global: usize,
     devmap: Vec<usize>,
+    /// Payload encoding the underlying link actually carries; the
+    /// modeled transmission time prices the on-wire bytes, so f16
+    /// payloads hold the medium half as long.
+    wire: WireDtype,
 }
 
 impl ShapedTransport {
@@ -651,14 +679,25 @@ impl ShapedTransport {
         dev_global: usize,
         devmap: Vec<usize>,
     ) -> Self {
-        ShapedTransport { inner, shaping, dev_global, devmap }
+        Self::with_wire_dtype(inner, shaping, dev_global, devmap, WireDtype::F32)
+    }
+
+    pub fn with_wire_dtype(
+        inner: Box<dyn Transport>,
+        shaping: Arc<Shaping>,
+        dev_global: usize,
+        devmap: Vec<usize>,
+        wire: WireDtype,
+    ) -> Self {
+        ShapedTransport { inner, shaping, dev_global, devmap, wire }
     }
 }
 
 impl Transport for ShapedTransport {
     fn send(&mut self, to: usize, msg: Msg) -> Result<()> {
         let (latency, bps) = self.shaping.shape.params(self.dev_global, self.devmap[to]);
-        let cost = latency + msg.tensor.bytes() as f64 / bps;
+        let wire_bytes = msg.tensor.len() * self.wire.bytes_per_elem();
+        let cost = latency + wire_bytes as f64 / bps;
         {
             let _medium = self.shaping.medium.lock().unwrap();
             // Busy time is measured while *holding* the medium, so the
@@ -703,6 +742,20 @@ pub fn make_endpoints_shaped(
     fault: Option<&Arc<FaultPlan>>,
     shaping: Option<&Arc<Shaping>>,
 ) -> Vec<Box<dyn Transport>> {
+    make_endpoints_shaped_wire(m, devmap, fault, shaping, WireDtype::F32)
+}
+
+/// [`make_endpoints_shaped`] with an explicit wire payload encoding:
+/// the shaped medium prices on-wire bytes (f16 halves them). The
+/// in-process channels still carry f32 `Msg`s — the mailbox layer does
+/// the f16 rounding so channel and socket runs agree bit-for-bit.
+pub fn make_endpoints_shaped_wire(
+    m: usize,
+    devmap: &[usize],
+    fault: Option<&Arc<FaultPlan>>,
+    shaping: Option<&Arc<Shaping>>,
+    wire: WireDtype,
+) -> Vec<Box<dyn Transport>> {
     assert_eq!(devmap.len(), m, "devmap must cover every endpoint");
     let mut txs = Vec::with_capacity(m);
     let mut rxs = Vec::with_capacity(m);
@@ -719,7 +772,13 @@ pub fn make_endpoints_shaped(
                 rx,
             });
             if let Some(sh) = shaping {
-                ep = Box::new(ShapedTransport::new(ep, Arc::clone(sh), devmap[i], devmap.to_vec()));
+                ep = Box::new(ShapedTransport::with_wire_dtype(
+                    ep,
+                    Arc::clone(sh),
+                    devmap[i],
+                    devmap.to_vec(),
+                    wire,
+                ));
             }
             if let Some(fp) = fault {
                 ep = Box::new(FaultTransport::new(ep, Arc::clone(fp), devmap[i], devmap.to_vec()));
@@ -904,6 +963,31 @@ mod tests {
         assert_eq!(eps[0].recv(TICK).unwrap().stage, usize::MAX);
         let (_, fin) = shaping.meter().snapshot();
         assert!(fin >= 5e-3);
+    }
+
+    #[test]
+    fn shaped_f16_wire_halves_modeled_transmission() {
+        // 0.32 Mbps = 4e4 B/s; a 1000-f32 tensor is 4 KB -> 100 ms on
+        // the modeled medium at f32, 50 ms at f16.
+        let send_busy = |wire| {
+            let shaping = Shaping::new(LinkShape::new(0.0, 0.32));
+            let mut eps = make_endpoints_shaped_wire(2, &[0, 1], None, Some(&shaping), wire);
+            let m = Msg {
+                from: 0,
+                req: 0,
+                stage: 0,
+                phase: 0,
+                tensor: Tensor::vector(vec![1.0; 1000]),
+            };
+            eps[0].send(1, m).unwrap();
+            assert_eq!(eps[1].recv(TICK).unwrap().tensor.len(), 1000);
+            shaping.meter().snapshot().0[0]
+        };
+        let f32_busy = send_busy(WireDtype::F32);
+        let f16_busy = send_busy(WireDtype::F16);
+        assert!(f32_busy >= 0.1, "f32 price is 100 ms, measured {f32_busy}");
+        assert!(f16_busy >= 0.05, "f16 price is 50 ms, measured {f16_busy}");
+        assert!(f16_busy < f32_busy, "halved payload must hold the medium for less time");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! the rust reference ops see.
 
 use crate::model::{Model, OpKind};
-use crate::tensor::init;
+use crate::tensor::{init, quant, Tensor};
 use std::collections::BTreeMap;
 
 /// Weights + biases for every weighted op, keyed by op name.
@@ -70,16 +70,42 @@ impl WeightBundle {
         let b: usize = self.biases.values().map(|v| v.len() * 4).sum();
         w + b
     }
+
+    /// Symmetric per-output-channel int8 quantization of an op's weight
+    /// matrix (`rows` = output channels) — the int8 tier's weight load
+    /// path. Returns the quantized bytes and the per-row scales.
+    pub fn quantized_w(&self, op_name: &str, rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+        quant::quantize_rows(self.w(op_name), rows, cols)
+    }
 }
 
 /// The deterministic synthetic inference input for a model.
-pub fn model_input(model: &Model) -> crate::tensor::Tensor {
+pub fn model_input(model: &Model) -> Tensor {
     init::input_tensor(
         &format!("{}/input", model.name),
         model.input.c,
         model.input.h,
         model.input.w,
     )
+}
+
+/// Representative inputs for int8 activation-scale calibration: the
+/// deterministic inference input plus attenuated and amplified variants,
+/// so the recorded per-stage maxima carry headroom rather than being
+/// tuned to a single magnitude. Deterministic — every worker recomputes
+/// the identical set, so calibration tables agree without a broadcast.
+pub fn calibration_inputs(model: &Model) -> Vec<Tensor> {
+    let base = model_input(model);
+    [0.5f32, 1.0, 1.25]
+        .iter()
+        .map(|&s| {
+            let mut t = base.clone();
+            for v in &mut t.data {
+                *v *= s;
+            }
+            t
+        })
+        .collect()
 }
 
 #[cfg(test)]

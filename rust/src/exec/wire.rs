@@ -32,6 +32,7 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::tensor::quant::{self, WireDtype};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::prng::SplitMix64;
@@ -40,8 +41,9 @@ use crate::util::prng::SplitMix64;
 pub const MAGIC: u32 = 0x3150_4F49;
 /// Protocol version carried in every [`Hello`]; bumped on breaking
 /// changes. v2 added the auth-token field to HELLO and the liveness
-/// frames (PING/PONG/STATUS).
-pub const VERSION: u16 = 2;
+/// frames (PING/PONG/STATUS); v3 added the wire-dtype byte to MSG so
+/// activation payloads can travel as IEEE binary16.
+pub const VERSION: u16 = 3;
 /// Hard cap on a frame body. Largest legitimate payload is one activation
 /// tensor; 64 MiB is ~16M f32s, far above anything the model zoo ships,
 /// and small enough that a hostile length field can't balloon memory.
@@ -325,17 +327,51 @@ fn take_tensor(rd: &mut Rd) -> Result<Tensor, WireError> {
     Ok(Tensor::from_vec(c, h, w, data))
 }
 
+/// f16 payload variant: same shape header, 2 bytes per element
+/// (round-to-nearest-even truncation via `quant::f32_to_f16_bits`).
+fn put_tensor_f16(out: &mut Vec<u8>, t: &Tensor) {
+    out.extend_from_slice(&(t.c as u32).to_le_bytes());
+    out.extend_from_slice(&(t.h as u32).to_le_bytes());
+    out.extend_from_slice(&(t.w as u32).to_le_bytes());
+    for v in &t.data {
+        out.extend_from_slice(&quant::f32_to_f16_bits(*v).to_le_bytes());
+    }
+}
+
+fn take_tensor_f16(rd: &mut Rd) -> Result<Tensor, WireError> {
+    let (c, h, w) = (rd.u32()? as usize, rd.u32()? as usize, rd.u32()? as usize);
+    let elems = (c as u64) * (h as u64) * (w as u64);
+    if elems > (MAX_BODY as u64) / 2 {
+        return Err(WireError::BadFrame(format!("tensor of {elems} f16s exceeds the frame cap")));
+    }
+    let bytes = rd.take(elems as usize * 2)?;
+    let data = bytes
+        .chunks_exact(2)
+        .map(|q| quant::f16_bits_to_f32(u16::from_le_bytes(q.try_into().unwrap())))
+        .collect();
+    Ok(Tensor::from_vec(c, h, w, data))
+}
+
 // ---------- MSG ----------
 
 use super::transport::Msg;
 
-pub fn encode_msg(m: &Msg) -> Vec<u8> {
-    let mut out = Vec::with_capacity(29 + m.tensor.bytes());
+/// Encode a worker->worker tensor message. The byte after `phase` names
+/// the payload encoding ([`WireDtype::code`]); f16 halves the payload.
+/// Decoding always yields an f32 [`Msg`] — the wire dtype is a transport
+/// concern that never leaks into the execution graph.
+pub fn encode_msg(m: &Msg, wire: WireDtype) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(30 + 12 + m.tensor.len() * wire.bytes_per_elem());
     out.extend_from_slice(&(m.from as u32).to_le_bytes());
     out.extend_from_slice(&(m.req as u64).to_le_bytes());
     out.extend_from_slice(&stage_to_wire(m.stage).to_le_bytes());
     out.push(m.phase);
-    put_tensor(&mut out, &m.tensor);
+    out.push(wire.code());
+    match wire {
+        WireDtype::F32 => put_tensor(&mut out, &m.tensor),
+        WireDtype::F16 => put_tensor_f16(&mut out, &m.tensor),
+    }
     out
 }
 
@@ -345,7 +381,13 @@ pub fn decode_msg(body: &[u8]) -> Result<Msg, WireError> {
     let req = rd.u64()? as usize;
     let stage = stage_from_wire(rd.u64()?)?;
     let phase = rd.u8()?;
-    let tensor = take_tensor(&mut rd)?;
+    let code = rd.u8()?;
+    let wire = WireDtype::from_code(code)
+        .ok_or_else(|| WireError::BadFrame(format!("unknown wire dtype {code}")))?;
+    let tensor = match wire {
+        WireDtype::F32 => take_tensor(&mut rd)?,
+        WireDtype::F16 => take_tensor_f16(&mut rd)?,
+    };
     rd.done()?;
     Ok(Msg { from, req, stage, phase, tensor })
 }
@@ -984,7 +1026,7 @@ mod tests {
             Tensor::from_vec(2, 3, 4, (0..24).map(|i| i as f32 * 0.5).collect()),
         ] {
             let m = Msg { from: 2, req: 71, stage: 5, phase: 1, tensor: t };
-            let d = decode_msg(&encode_msg(&m)).unwrap();
+            let d = decode_msg(&encode_msg(&m, WireDtype::F32)).unwrap();
             assert_eq!(
                 (d.from, d.req, d.stage, d.phase),
                 (m.from, m.req, m.stage, m.phase)
@@ -998,6 +1040,45 @@ mod tests {
     }
 
     #[test]
+    fn msg_f16_roundtrip_halves_payload_and_is_exact_on_rounded_values() {
+        // Values already on the f16 grid survive the wire bit-exactly;
+        // arbitrary values land within the binary16 rounding bound.
+        let exact = Tensor::vector(vec![0.0, 1.0, -2.5, 0.125, 65504.0, -0.0078125]);
+        let m = Msg { from: 1, req: 9, stage: 2, phase: 0, tensor: exact.clone() };
+        let body16 = encode_msg(&m, WireDtype::F16);
+        let body32 = encode_msg(&m, WireDtype::F32);
+        // 22-byte header + 12-byte shape, then 2 vs 4 bytes per element
+        assert_eq!(body16.len(), 34 + exact.len() * 2);
+        assert_eq!(body32.len(), 34 + exact.len() * 4);
+        let d = decode_msg(&body16).unwrap();
+        assert_eq!(d.tensor.data, exact.data, "f16-grid values must be exact");
+        assert_eq!((d.from, d.req, d.stage, d.phase), (m.from, m.req, m.stage, m.phase));
+
+        let rough = Tensor::vector(vec![std::f32::consts::PI, -1e-3, 123.456]);
+        let m = Msg { from: 0, req: 0, stage: 0, phase: 1, tensor: rough.clone() };
+        let d = decode_msg(&encode_msg(&m, WireDtype::F16)).unwrap();
+        for (a, b) in d.tensor.data.iter().zip(&rough.data) {
+            assert!((a - b).abs() <= b.abs() * 1e-3, "{a} vs {b}");
+            // decoding is exactly the round-to-nearest-even projection
+            assert_eq!(*a, quant::f16_round(*b));
+        }
+    }
+
+    #[test]
+    fn msg_with_unknown_wire_dtype_is_rejected() {
+        let m = Msg {
+            from: 0,
+            req: 0,
+            stage: 0,
+            phase: 0,
+            tensor: Tensor::vector(vec![1.0]),
+        };
+        let mut body = encode_msg(&m, WireDtype::F32);
+        body[21] = 0x7F; // dtype byte sits right after phase
+        assert!(matches!(decode_msg(&body), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
     fn final_stage_sentinel_survives_the_wire() {
         let m = Msg {
             from: 0,
@@ -1006,7 +1087,7 @@ mod tests {
             phase: 0,
             tensor: Tensor::vector(vec![1.0]),
         };
-        let d = decode_msg(&encode_msg(&m)).unwrap();
+        let d = decode_msg(&encode_msg(&m, WireDtype::F32)).unwrap();
         assert_eq!(d.stage, usize::MAX);
         assert_eq!(stage_to_wire(usize::MAX), u64::MAX);
         assert_eq!(stage_from_wire(u64::MAX).unwrap(), usize::MAX);
@@ -1021,12 +1102,12 @@ mod tests {
             phase: 0,
             tensor: Tensor::vector(vec![1.0, 2.0]),
         };
-        let mut body = encode_msg(&m);
+        let mut body = encode_msg(&m, WireDtype::F32);
         // inflate the claimed channel count: payload no longer matches
-        body[21..25].copy_from_slice(&10u32.to_le_bytes());
+        body[22..26].copy_from_slice(&10u32.to_le_bytes());
         assert!(matches!(decode_msg(&body), Err(WireError::Truncated)));
         // absurd shape product is rejected before any allocation
-        body[21..25].copy_from_slice(&u32::MAX.to_le_bytes());
+        body[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(decode_msg(&body), Err(WireError::BadFrame(_))));
     }
 
@@ -1039,7 +1120,7 @@ mod tests {
             phase: 0,
             tensor: Tensor::vector(vec![1.0]),
         };
-        let mut body = encode_msg(&m);
+        let mut body = encode_msg(&m, WireDtype::F32);
         body.push(0xAB);
         assert!(matches!(decode_msg(&body), Err(WireError::BadFrame(_))));
     }

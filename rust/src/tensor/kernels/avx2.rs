@@ -21,10 +21,15 @@
 
 use std::arch::x86_64::*;
 
-use super::{write_tile_edge, Epilogue, Isa, Kernel};
+use super::{write_tile_edge, write_tile_edge_i8, Epilogue, EpilogueI8, Isa, Kernel, KernelI8};
 
 const MR: usize = 6;
 const NR: usize = 16;
+
+// Int8 tile geometry — shared by every ISA (see `KernelI8` docs), so
+// keep these in sync with `scalar.rs`/`neon.rs`.
+const MRQ: usize = 4;
+const NRQ: usize = 16;
 
 /// Both features this kernel's `#[target_feature]` impls rely on.
 /// The dispatch table guarantees this before handing the kernel out;
@@ -137,6 +142,185 @@ unsafe fn tile_impl(
     }
 }
 
+pub(super) static KERNEL_I8: KernelI8 = KernelI8 {
+    isa: Isa::Avx2,
+    mr: MRQ,
+    nr: NRQ,
+    tile_fn: tile_i8,
+    matvec_fn: matvec_rows_i8,
+};
+
+/// Int8 feature gate: the i8 tier uses only AVX2 integer ops (no FMA),
+/// but this kernel is handed out alongside the f32 AVX2 kernel, so the
+/// same detection applies.
+#[allow(clippy::too_many_arguments)]
+fn tile_i8(
+    ap: &[i8],
+    bp: &[i8],
+    kc: usize,
+    acc_c: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8>,
+) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    let kp = kc.div_ceil(2);
+    assert!(
+        ap.len() >= kp * MRQ * 2 && bp.len() >= kp * NRQ * 2,
+        "avx2-i8 tile: packed panel shorter than kc"
+    );
+    assert!((1..=MRQ).contains(&rows) && (1..=NRQ).contains(&cols));
+    let end = (row0 + rows - 1) * n + col0 + cols;
+    assert!(end <= acc_c.len(), "avx2-i8 tile: acc tile out of bounds");
+    if ep.is_some() {
+        assert!(end <= out.len(), "avx2-i8 tile: out tile out of bounds");
+    }
+    // SAFETY: bounds asserted above; avx2 presence guaranteed by the
+    // dispatch table (see module docs).
+    unsafe { tile_i8_impl(ap, bp, kc, acc_c, out, n, row0, col0, rows, cols, ep) }
+}
+
+/// Exact i8 arithmetic: sign-extend 16 packed B bytes to i16
+/// (`vpmovsxbw`), broadcast the A pair as an i16 duo, and let
+/// `vpmaddwd` produce the 8 exact i32 pair sums `a0·b0 + a1·b1` — i16
+/// products of i8 inputs cannot overflow the i32 pair sum, unlike the
+/// saturating `vpmaddubsw` path, which is why this kernel deliberately
+/// avoids `_mm256_maddubs_epi16`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i8_impl(
+    ap: &[i8],
+    bp: &[i8],
+    kc: usize,
+    acc_c: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8>,
+) {
+    let kp = kc.div_ceil(2);
+    let mut acc = [[_mm256_setzero_si256(); 2]; MRQ];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kp {
+        let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b as *const __m128i));
+        let b1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.add(16) as *const __m128i));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let a0 = *a.add(r * 2) as i16 as u16 as u32;
+            let a1 = *a.add(r * 2 + 1) as i16 as u16 as u32;
+            let pair = _mm256_set1_epi32(((a1 << 16) | a0) as i32);
+            accr[0] = _mm256_add_epi32(accr[0], _mm256_madd_epi16(b0, pair));
+            accr[1] = _mm256_add_epi32(accr[1], _mm256_madd_epi16(b1, pair));
+        }
+        a = a.add(MRQ * 2);
+        b = b.add(NRQ * 2);
+    }
+    if rows == MRQ && cols == NRQ {
+        match ep {
+            None => {
+                for (r, accr) in acc.iter().enumerate() {
+                    let p = acc_c.as_mut_ptr().add((row0 + r) * n + col0);
+                    let t0 = _mm256_add_epi32(_mm256_loadu_si256(p as *const __m256i), accr[0]);
+                    _mm256_storeu_si256(p as *mut __m256i, t0);
+                    let p8 = p.add(8);
+                    let t1 = _mm256_add_epi32(_mm256_loadu_si256(p8 as *const __m256i), accr[1]);
+                    _mm256_storeu_si256(p8 as *mut __m256i, t1);
+                }
+            }
+            Some(ep) => {
+                // Dequant writeback stays unfused (mul then add) so the
+                // f32 results match the scalar expression bitwise.
+                let zero = _mm256_setzero_ps();
+                for (r, accr) in acc.iter().enumerate() {
+                    let base = (row0 + r) * n + col0;
+                    let pa = acc_c.as_ptr().add(base);
+                    let t0 = _mm256_add_epi32(_mm256_loadu_si256(pa as *const __m256i), accr[0]);
+                    let t1 = _mm256_add_epi32(
+                        _mm256_loadu_si256(pa.add(8) as *const __m256i),
+                        accr[1],
+                    );
+                    let scale = _mm256_set1_ps(ep.scales[row0 + r]);
+                    let bias = _mm256_set1_ps(ep.bias.map_or(0.0, |bv| bv[row0 + r]));
+                    let mut v0 =
+                        _mm256_add_ps(_mm256_mul_ps(_mm256_cvtepi32_ps(t0), scale), bias);
+                    let mut v1 =
+                        _mm256_add_ps(_mm256_mul_ps(_mm256_cvtepi32_ps(t1), scale), bias);
+                    if ep.relu {
+                        v0 = _mm256_max_ps(v0, zero);
+                        v1 = _mm256_max_ps(v1, zero);
+                    }
+                    let po = out.as_mut_ptr().add(base);
+                    _mm256_storeu_ps(po, v0);
+                    _mm256_storeu_ps(po.add(8), v1);
+                }
+            }
+        }
+    } else {
+        let mut flat = [0i32; MRQ * NRQ];
+        for (r, accr) in acc.iter().enumerate() {
+            _mm256_storeu_si256(flat.as_mut_ptr().add(r * NRQ) as *mut __m256i, accr[0]);
+            _mm256_storeu_si256(flat.as_mut_ptr().add(r * NRQ + 8) as *mut __m256i, accr[1]);
+        }
+        write_tile_edge_i8(&flat, NRQ, acc_c, out, n, row0, col0, rows, cols, ep);
+    }
+}
+
+/// Int8 dense rows: 16 bytes of weights/activations per step through
+/// `vpmovsxbw` + `vpmaddwd` into an i32 accumulator vector — i32 adds
+/// are associative, so the horizontal sum matches the scalar loop
+/// exactly.
+fn matvec_rows_i8(w: &[i8], x: &[i8], ep: EpilogueI8, y: &mut [f32], k: usize) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    assert!(
+        x.len() >= k && w.len() >= y.len() * k,
+        "avx2-i8 matvec: bounds"
+    );
+    // SAFETY: bounds asserted; features guaranteed by the dispatch table.
+    unsafe { matvec_i8_impl(w, x, ep, y, k) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn matvec_i8_impl(w: &[i8], x: &[i8], ep: EpilogueI8, y: &mut [f32], k: usize) {
+    let xp = x.as_ptr();
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let wp = w_row.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= k {
+            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp.add(i) as *const __m128i));
+            let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(xp.add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wv, xv));
+            i += 16;
+        }
+        let mut s = hsum256_epi32(acc);
+        while i < k {
+            s += w_row[i] as i32 * x[i] as i32;
+            i += 1;
+        }
+        let bias = ep.bias.map_or(0.0, |b| b[row]);
+        let v = s as f32 * ep.scales[row] + bias;
+        *out = if ep.relu { v.max(0.0) } else { v };
+    }
+}
+
+/// Horizontal sum of the 8 i32 lanes (exact).
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256_epi32(v: __m256i) -> i32 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+    _mm_cvtsi128_si32(s)
+}
+
 /// Dense rows: four 8-lane FMA accumulators per row, horizontal sum at
 /// the end. `k >= 1` (caller handles `k = 0`).
 fn matvec_rows(w: &[f32], x: &[f32], bias: Option<&[f32]>, relu: bool, y: &mut [f32], k: usize) {
@@ -202,10 +386,10 @@ unsafe fn matvec_impl(
 #[target_feature(enable = "avx2")]
 unsafe fn hsum256(v: __m256) -> f32 {
     let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps(v, 1);
+    let hi = _mm256_extractf128_ps::<1>(v);
     let s = _mm_add_ps(lo, hi);
     let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
     _mm_cvtss_f32(s)
 }
 

@@ -70,6 +70,19 @@ pub struct Epilogue<'a> {
     pub relu: bool,
 }
 
+/// Epilogue of the int8 tier, fused into the i32→f32 dequantizing
+/// writeback: `y = acc · (w_scale[row] · x_scale) (+ bias[row]) (→
+/// ReLU)`. `scales` carries the *combined* per-output-row factor; bias
+/// and ReLU are applied in f32, exactly as the f32 tier's [`Epilogue`].
+#[derive(Debug, Clone, Copy)]
+pub struct EpilogueI8<'a> {
+    /// Combined dequant factor per output row, length `m`.
+    pub scales: &'a [f32],
+    /// Per-output-row bias (f32), length `m`; `None` on IC partials.
+    pub bias: Option<&'a [f32]>,
+    pub relu: bool,
+}
+
 /// Instruction-set family of a microkernel variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Isa {
@@ -131,6 +144,30 @@ type MatvecFn = for<'a> fn(
 
 /// Elementwise map over equal-length slices.
 type MapFn = fn(src: &[f32], dst: &mut [f32]);
+
+/// Int8 register tile over *k-pair interleaved* packed panels (see
+/// `tensor::qgemm` for the layout): accumulate `ap · bp` into the `i32`
+/// accumulator matrix `acc` at `(row0, col0)`; when `ep` is given (last
+/// k-block) additionally dequantize `acc + partial` into the f32 output
+/// `out` (same `n`-stride indexing as `acc`). All arithmetic is exact
+/// integer math — every ISA produces bit-identical `i32` accumulators.
+type TileFnI8 = for<'a> fn(
+    ap: &[i8],
+    bp: &[i8],
+    kc: usize,
+    acc: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8<'a>>,
+);
+
+/// Int8 dense rows: exact `i32` dot of row-major i8 `w` rows against i8
+/// `x`, dequantized through the epilogue into f32 `y`. `k >= 1`.
+type MatvecFnI8 = for<'a> fn(w: &[i8], x: &[i8], ep: EpilogueI8<'a>, y: &mut [f32], k: usize);
 
 /// One microkernel variant: its tile geometry plus every ISA-specific
 /// entry point the hot path dispatches through. Instances are `'static`
@@ -208,6 +245,65 @@ impl Kernel {
     pub fn max_into(&self, src: &[f32], dst: &mut [f32]) {
         assert_eq!(src.len(), dst.len(), "max_into: length mismatch");
         (self.max_fn)(src, dst)
+    }
+}
+
+/// One int8 microkernel variant. Geometry is shared across all ISAs
+/// (`mr = 4`, `nr = 16`, k-pair interleaved panels) so quantized
+/// `PackedA` panels are ISA-portable and the per-ISA parity tests can
+/// demand *bit-identical* `i32` accumulators, not just close floats —
+/// int8 arithmetic is exact, so there is no FMA-style rounding excuse.
+#[derive(Debug)]
+pub struct KernelI8 {
+    pub isa: Isa,
+    /// Tile height (rows of A/C per register tile).
+    pub mr: usize,
+    /// Tile width (columns of B/C per register tile).
+    pub nr: usize,
+    tile_fn: TileFnI8,
+    matvec_fn: MatvecFnI8,
+}
+
+impl KernelI8 {
+    /// ISA tag of the int8 variant, e.g. `avx2-i8` — distinct from the
+    /// f32 names so reports attribute numbers to the right tier.
+    pub fn name(&self) -> &'static str {
+        match self.isa {
+            Isa::Scalar => "scalar-i8",
+            Isa::Avx2 => "avx2-i8",
+            Isa::Neon => "neon-i8",
+        }
+    }
+
+    /// Human-readable tag + tile geometry, e.g. `avx2-i8 4x16`.
+    pub fn describe(&self) -> String {
+        format!("{} {}x{}", self.name(), self.mr, self.nr)
+    }
+
+    /// Run the int8 register tile (see [`TileFnI8`]).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn tile(
+        &self,
+        ap: &[i8],
+        bp: &[i8],
+        kc: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+        n: usize,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+        ep: Option<EpilogueI8>,
+    ) {
+        (self.tile_fn)(ap, bp, kc, acc, out, n, row0, col0, rows, cols, ep)
+    }
+
+    /// Dense rows `y = dequant(W·x)`, `k >= 1` (see [`MatvecFnI8`]).
+    #[inline]
+    pub fn matvec_rows(&self, w: &[i8], x: &[i8], ep: EpilogueI8, y: &mut [f32], k: usize) {
+        (self.matvec_fn)(w, x, ep, y, k)
     }
 }
 
@@ -298,6 +394,43 @@ pub fn by_name(name: &str) -> Option<&'static Kernel> {
     supported().into_iter().find(|k| k.name() == name)
 }
 
+/// The int8 twin of an ISA family. Every f32 variant has an i8 sibling
+/// in the same submodule, so the mapping is total; the scalar fallback
+/// arm is unreachable in practice (only supported ISAs are dispatched)
+/// but keeps the match exhaustive on every target.
+fn i8_for(isa: Isa) -> &'static KernelI8 {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        return &avx2::KERNEL_I8;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == Isa::Neon {
+        return &neon::KERNEL_I8;
+    }
+    let _ = isa;
+    &scalar::KERNEL_I8
+}
+
+/// The int8 microkernel for the current session: follows the same
+/// [`force`]/`IOP_KERNEL`/auto-detect resolution as [`selected`] — one
+/// override knob steers both tiers, so a forced-scalar bench twin forces
+/// scalar-i8 too.
+pub fn selected_i8() -> &'static KernelI8 {
+    i8_for(selected().isa)
+}
+
+/// Every int8 variant this binary can run on this CPU (mirrors
+/// [`supported`]). The quantized parity tests sweep this list asserting
+/// bit-identical i32 accumulators across variants.
+pub fn supported_i8() -> Vec<&'static KernelI8> {
+    supported().into_iter().map(|k| i8_for(k.isa)).collect()
+}
+
+/// Look up a *supported* int8 variant by tag (`scalar-i8|avx2-i8|neon-i8`).
+pub fn by_name_i8(name: &str) -> Option<&'static KernelI8> {
+    supported_i8().into_iter().find(|k| k.name() == name)
+}
+
 /// Shared ragged-edge writeback: `tile` is a row-major `rows×nr` (at
 /// least) register-tile spill; add it into `c` at `(row0, col0)`,
 /// trimmed to `rows×cols`, applying the epilogue if given. SIMD kernels
@@ -335,6 +468,52 @@ pub(crate) fn write_tile_edge(
                 for (dst, &v) in c[base..base + cols].iter_mut().zip(acc) {
                     let x = *dst + v + bias;
                     *dst = if ep.relu { x.max(0.0) } else { x };
+                }
+            }
+        }
+    }
+}
+
+/// Int8 ragged-edge writeback shared across ISAs: `tile` is a row-major
+/// `rows×nr` (at least) i32 register-tile spill. Without an epilogue,
+/// add it into `acc` at `(row0, col0)` trimmed to `rows×cols`; with one
+/// (last k-block), dequantize `acc + tile` straight into the f32 `out`
+/// instead — `acc` is dead after the final k-block, so it is not written
+/// back.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn write_tile_edge_i8(
+    tile: &[i32],
+    nr: usize,
+    acc: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8>,
+) {
+    match ep {
+        None => {
+            for r in 0..rows {
+                let base = (row0 + r) * n + col0;
+                let t = &tile[r * nr..r * nr + cols];
+                for (dst, &v) in acc[base..base + cols].iter_mut().zip(t) {
+                    *dst += v;
+                }
+            }
+        }
+        Some(ep) => {
+            for r in 0..rows {
+                let row = row0 + r;
+                let base = row * n + col0;
+                let scale = ep.scales[row];
+                let bias = ep.bias.map_or(0.0, |b| b[row]);
+                let t = &tile[r * nr..r * nr + cols];
+                for (j, &v) in t.iter().enumerate() {
+                    let total = acc[base + j] + v;
+                    let x = total as f32 * scale + bias;
+                    out[base + j] = if ep.relu { x.max(0.0) } else { x };
                 }
             }
         }
@@ -500,5 +679,176 @@ mod tests {
         // Untouched cells keep the seed value.
         assert_eq!(c[0], 0.5);
         assert_eq!(c[6], 0.5);
+    }
+
+    fn rand_i8(len: usize, seed: u64) -> Vec<i8> {
+        let mut r = SplitMix64::new(seed);
+        (0..len)
+            .map(|_| (r.next_symmetric(127.0) as i32).clamp(-127, 127) as i8)
+            .collect()
+    }
+
+    /// Pack row-major `mr×kc` A and `kc×nr` B into the k-pair interleaved
+    /// panel layout the i8 tiles expect (odd `kc` zero-padded).
+    fn pack_pairs(
+        a: &[i8],
+        b: &[i8],
+        mr: usize,
+        nr: usize,
+        kc: usize,
+    ) -> (Vec<i8>, Vec<i8>) {
+        let kp = kc.div_ceil(2);
+        let mut ap = vec![0i8; kp * mr * 2];
+        let mut bp = vec![0i8; kp * nr * 2];
+        for p2 in 0..kp {
+            for r in 0..mr {
+                ap[(p2 * mr + r) * 2] = a[r * kc + 2 * p2];
+                if 2 * p2 + 1 < kc {
+                    ap[(p2 * mr + r) * 2 + 1] = a[r * kc + 2 * p2 + 1];
+                }
+            }
+            for j in 0..nr {
+                bp[(p2 * nr + j) * 2] = b[2 * p2 * nr + j];
+                if 2 * p2 + 1 < kc {
+                    bp[(p2 * nr + j) * 2 + 1] = b[(2 * p2 + 1) * nr + j];
+                }
+            }
+        }
+        (ap, bp)
+    }
+
+    #[test]
+    fn i8_selection_mirrors_f32_dispatch() {
+        assert_eq!(selected_i8().isa, selected().isa);
+        assert_eq!(supported_i8().len(), supported().len());
+        let sc = by_name_i8("scalar-i8").expect("scalar-i8 always supported");
+        assert_eq!(sc.describe(), format!("scalar-i8 {}x{}", sc.mr, sc.nr));
+        assert!(by_name_i8("scalar").is_none());
+        // Shared geometry: quantized panels are ISA-portable.
+        for k in supported_i8() {
+            assert_eq!((k.mr, k.nr), (4, 16), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn every_i8_variant_tile_bit_identical_accumulators() {
+        // Odd kc exercises the zero-padded trailing pair; the ragged
+        // (rows=3, cols=11) call exercises the edge writeback.
+        let (mr, nr, kc) = (4usize, 16usize, 37usize);
+        let a = rand_i8(mr * kc, 7);
+        let b = rand_i8(kc * nr, 8);
+        let (ap, bp) = pack_pairs(&a, &b, mr, nr, kc);
+        // Exact integer reference.
+        let mut want = vec![0i32; mr * nr];
+        for r in 0..mr {
+            for j in 0..nr {
+                for p in 0..kc {
+                    want[r * nr + j] += a[r * kc + p] as i32 * b[p * nr + j] as i32;
+                }
+            }
+        }
+        let scales: Vec<f32> = (0..mr).map(|r| 0.01 + r as f32 * 0.003).collect();
+        let bias: Vec<f32> = (0..mr).map(|r| r as f32 * 0.25 - 0.3).collect();
+        for kern in supported_i8() {
+            // Full tile, no epilogue: accumulators must match exactly.
+            let mut acc = vec![0i32; mr * nr];
+            let mut out = vec![0.0f32; mr * nr];
+            kern.tile(&ap, &bp, kc, &mut acc, &mut out, nr, 0, 0, mr, nr, None);
+            assert_eq!(acc, want, "{} full-tile acc diverged", kern.name());
+            // Ragged tile with dequant epilogue: f32 out is exact too
+            // (same scalar dequant expression on identical i32 totals).
+            let ep = EpilogueI8 {
+                scales: &scales,
+                bias: Some(&bias),
+                relu: true,
+            };
+            let mut acc2 = vec![0i32; mr * nr];
+            let mut out2 = vec![0.0f32; mr * nr];
+            kern.tile(&ap, &bp, kc, &mut acc2, &mut out2, nr, 0, 0, 3, 11, Some(ep));
+            for r in 0..3 {
+                for j in 0..11 {
+                    let x = want[r * nr + j] as f32 * scales[r] + bias[r];
+                    assert_eq!(
+                        out2[r * nr + j],
+                        x.max(0.0),
+                        "{} ragged dequant ({r},{j})",
+                        kern.name()
+                    );
+                }
+            }
+            // Full tile with epilogue: the vectorized dequant path must
+            // match the scalar expression exactly (unfused mul + add on
+            // identical i32 totals — no rounding freedom).
+            let mut acc3 = vec![0i32; mr * nr];
+            let mut out3 = vec![0.0f32; mr * nr];
+            kern.tile(&ap, &bp, kc, &mut acc3, &mut out3, nr, 0, 0, mr, nr, Some(ep));
+            for r in 0..mr {
+                for j in 0..nr {
+                    let x = want[r * nr + j] as f32 * scales[r] + bias[r];
+                    assert_eq!(
+                        out3[r * nr + j],
+                        x.max(0.0),
+                        "{} full dequant ({r},{j})",
+                        kern.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_i8_variant_matvec_bit_identical() {
+        let (m, k) = (5usize, 83usize); // odd k exercises SIMD tails
+        let w = rand_i8(m * k, 21);
+        let x = rand_i8(k, 22);
+        let scales: Vec<f32> = (0..m).map(|r| 0.02 + r as f32 * 0.001).collect();
+        let bias: Vec<f32> = (0..m).map(|r| 0.1 - r as f32 * 0.05).collect();
+        let mut want = vec![0.0f32; m];
+        for r in 0..m {
+            let mut acc = 0i32;
+            for i in 0..k {
+                acc += w[r * k + i] as i32 * x[i] as i32;
+            }
+            want[r] = (acc as f32 * scales[r] + bias[r]).max(0.0);
+        }
+        for kern in supported_i8() {
+            let ep = EpilogueI8 {
+                scales: &scales,
+                bias: Some(&bias),
+                relu: true,
+            };
+            let mut y = vec![0.0f32; m];
+            kern.matvec_rows(&w, &x, ep, &mut y, k);
+            assert_eq!(y, want, "{} matvec diverged", kern.name());
+        }
+    }
+
+    #[test]
+    fn write_tile_edge_i8_accumulates_then_dequantizes() {
+        let nr = 4usize;
+        let tile = vec![10i32, -20, 30, 99, -40, 50, -60, 99];
+        let mut acc = vec![5i32; 3 * 5];
+        let mut out = vec![0.0f32; 3 * 5];
+        // No epilogue: adds into acc, leaves out untouched.
+        write_tile_edge_i8(&tile, nr, &mut acc, &mut out, 5, 1, 2, 2, 3, None);
+        assert_eq!(&acc[7..10], &[15, -15, 35]);
+        assert_eq!(&acc[12..15], &[-35, 55, -55]);
+        assert_eq!(acc[0], 5);
+        assert!(out.iter().all(|&v| v == 0.0));
+        // Epilogue: dequantizes acc + tile into out (acc already holds
+        // the earlier partial, so pass the same tile again). Scales are
+        // powers of two so the expected values are exact in f32.
+        let scales = vec![1.0f32, 0.5, 0.25];
+        let bias = vec![0.0f32, 1.0, -1.0];
+        let ep = EpilogueI8 {
+            scales: &scales,
+            bias: Some(&bias),
+            relu: false,
+        };
+        write_tile_edge_i8(&tile, nr, &mut acc, &mut out, 5, 1, 2, 2, 3, Some(ep));
+        // Row 1 (scale 0.5, bias 1.0): (acc + tile) * 0.5 + 1.
+        assert_eq!(&out[7..10], &[13.5, -16.5, 33.5]);
+        // Row 2 (scale 0.25, bias -1.0).
+        assert_eq!(&out[12..15], &[-19.75, 25.25, -29.75]);
     }
 }

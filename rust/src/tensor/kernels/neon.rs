@@ -19,10 +19,16 @@
 
 use std::arch::aarch64::*;
 
-use super::{write_tile_edge, Epilogue, Isa, Kernel};
+use super::{write_tile_edge, write_tile_edge_i8, Epilogue, EpilogueI8, Isa, Kernel, KernelI8};
 
 const MR: usize = 8;
 const NR: usize = 8;
+
+// Int8 tile geometry — shared by every ISA (see `KernelI8` docs), so
+// keep these in sync with `scalar.rs`/`avx2.rs`. 16 columns run as two
+// 8-wide `vld2` de-interleaved groups.
+const MRQ: usize = 4;
+const NRQ: usize = 16;
 
 pub(super) static KERNEL: Kernel = Kernel {
     isa: Isa::Neon,
@@ -123,6 +129,177 @@ unsafe fn tile_impl(
             vst1q_f32(flat.as_mut_ptr().add(r * NR + 4), accr[1]);
         }
         write_tile_edge(&flat, NR, c, n, row0, col0, rows, cols, ep);
+    }
+}
+
+pub(super) static KERNEL_I8: KernelI8 = KernelI8 {
+    isa: Isa::Neon,
+    mr: MRQ,
+    nr: NRQ,
+    tile_fn: tile_i8,
+    matvec_fn: matvec_rows_i8,
+};
+
+#[allow(clippy::too_many_arguments)]
+fn tile_i8(
+    ap: &[i8],
+    bp: &[i8],
+    kc: usize,
+    acc_c: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8>,
+) {
+    let kp = kc.div_ceil(2);
+    assert!(
+        ap.len() >= kp * MRQ * 2 && bp.len() >= kp * NRQ * 2,
+        "neon-i8 tile: packed panel shorter than kc"
+    );
+    assert!((1..=MRQ).contains(&rows) && (1..=NRQ).contains(&cols));
+    let end = (row0 + rows - 1) * n + col0 + cols;
+    assert!(end <= acc_c.len(), "neon-i8 tile: acc tile out of bounds");
+    if ep.is_some() {
+        assert!(end <= out.len(), "neon-i8 tile: out tile out of bounds");
+    }
+    // SAFETY: bounds asserted above; neon presence guaranteed by the
+    // dispatch table (see module docs).
+    unsafe { tile_i8_impl(ap, bp, kc, acc_c, out, n, row0, col0, rows, cols, ep) }
+}
+
+/// Exact i8 arithmetic: `vld2` de-interleaves each pair block back into
+/// the (b0, b1) byte rows, `vmull_s8` widens the i8 products to i16
+/// (max |127·127| — no overflow), and `vaddl_s16` forms the exact i32
+/// pair sums `a0·b0 + a1·b1`, matching the scalar/AVX2 accumulators
+/// bit for bit.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i8_impl(
+    ap: &[i8],
+    bp: &[i8],
+    kc: usize,
+    acc_c: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8>,
+) {
+    let kp = kc.div_ceil(2);
+    // acc[r][g]: columns 4g..4g+4 of row r.
+    let mut acc = [[vdupq_n_s32(0); 4]; MRQ];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kp {
+        // Two 8-column groups of interleaved (b0, b1) pairs.
+        let g0 = vld2_s8(b);
+        let g1 = vld2_s8(b.add(16));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let a0 = vdup_n_s8(*a.add(r * 2));
+            let a1 = vdup_n_s8(*a.add(r * 2 + 1));
+            let p00 = vmull_s8(g0.0, a0);
+            let p01 = vmull_s8(g0.1, a1);
+            let p10 = vmull_s8(g1.0, a0);
+            let p11 = vmull_s8(g1.1, a1);
+            accr[0] = vaddq_s32(
+                accr[0],
+                vaddl_s16(vget_low_s16(p00), vget_low_s16(p01)),
+            );
+            accr[1] = vaddq_s32(
+                accr[1],
+                vaddl_s16(vget_high_s16(p00), vget_high_s16(p01)),
+            );
+            accr[2] = vaddq_s32(
+                accr[2],
+                vaddl_s16(vget_low_s16(p10), vget_low_s16(p11)),
+            );
+            accr[3] = vaddq_s32(
+                accr[3],
+                vaddl_s16(vget_high_s16(p10), vget_high_s16(p11)),
+            );
+        }
+        a = a.add(MRQ * 2);
+        b = b.add(NRQ * 2);
+    }
+    if rows == MRQ && cols == NRQ {
+        match ep {
+            None => {
+                for (r, accr) in acc.iter().enumerate() {
+                    let p = acc_c.as_mut_ptr().add((row0 + r) * n + col0);
+                    for (g, av) in accr.iter().enumerate() {
+                        let pg = p.add(g * 4);
+                        vst1q_s32(pg, vaddq_s32(vld1q_s32(pg), *av));
+                    }
+                }
+            }
+            Some(ep) => {
+                // Dequant writeback stays unfused (mul then add) so the
+                // f32 results match the scalar expression bitwise.
+                let zero = vdupq_n_f32(0.0);
+                for (r, accr) in acc.iter().enumerate() {
+                    let base = (row0 + r) * n + col0;
+                    let scale = vdupq_n_f32(ep.scales[row0 + r]);
+                    let bias = vdupq_n_f32(ep.bias.map_or(0.0, |bv| bv[row0 + r]));
+                    for (g, av) in accr.iter().enumerate() {
+                        let total = vaddq_s32(vld1q_s32(acc_c.as_ptr().add(base + g * 4)), *av);
+                        let mut v =
+                            vaddq_f32(vmulq_f32(vcvtq_f32_s32(total), scale), bias);
+                        if ep.relu {
+                            v = vmaxq_f32(v, zero);
+                        }
+                        vst1q_f32(out.as_mut_ptr().add(base + g * 4), v);
+                    }
+                }
+            }
+        }
+    } else {
+        let mut flat = [0i32; MRQ * NRQ];
+        for (r, accr) in acc.iter().enumerate() {
+            for (g, av) in accr.iter().enumerate() {
+                vst1q_s32(flat.as_mut_ptr().add(r * NRQ + g * 4), *av);
+            }
+        }
+        write_tile_edge_i8(&flat, NRQ, acc_c, out, n, row0, col0, rows, cols, ep);
+    }
+}
+
+/// Int8 dense rows: `vmull_s8` widening products, pairwise-accumulated
+/// into i32 lanes (`vpadalq_s16`) — exact, so the `vaddvq` horizontal
+/// sum matches the scalar loop bit for bit.
+fn matvec_rows_i8(w: &[i8], x: &[i8], ep: EpilogueI8, y: &mut [f32], k: usize) {
+    assert!(
+        x.len() >= k && w.len() >= y.len() * k,
+        "neon-i8 matvec: bounds"
+    );
+    // SAFETY: bounds asserted; features guaranteed by the dispatch table.
+    unsafe { matvec_i8_impl(w, x, ep, y, k) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn matvec_i8_impl(w: &[i8], x: &[i8], ep: EpilogueI8, y: &mut [f32], k: usize) {
+    let xp = x.as_ptr();
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let wp = w_row.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 8 <= k {
+            let prod = vmull_s8(vld1_s8(wp.add(i)), vld1_s8(xp.add(i)));
+            acc = vpadalq_s16(acc, prod);
+            i += 8;
+        }
+        let mut s = vaddvq_s32(acc);
+        while i < k {
+            s += w_row[i] as i32 * x[i] as i32;
+            i += 1;
+        }
+        let bias = ep.bias.map_or(0.0, |b| b[row]);
+        let v = s as f32 * ep.scales[row] + bias;
+        *out = if ep.relu { v.max(0.0) } else { v };
     }
 }
 

@@ -7,10 +7,15 @@
 //! anywhere. It doubles as the numerical baseline the SIMD variants are
 //! parity-tested against (beyond the `ops` reference oracle).
 
-use super::{write_tile_edge, Epilogue, Isa, Kernel};
+use super::{write_tile_edge, write_tile_edge_i8, Epilogue, EpilogueI8, Isa, Kernel, KernelI8};
 
 const MR: usize = 4;
 const NR: usize = 16;
+
+// Int8 tile geometry — shared by every ISA (see `KernelI8` docs), so
+// keep these in sync with `avx2.rs`/`neon.rs`.
+const MRQ: usize = 4;
+const NRQ: usize = 16;
 
 pub(super) static KERNEL: Kernel = Kernel {
     isa: Isa::Scalar,
@@ -86,6 +91,70 @@ fn dot(w: &[f32], x: &[f32]) -> f32 {
         s += a * b;
     }
     s
+}
+
+pub(super) static KERNEL_I8: KernelI8 = KernelI8 {
+    isa: Isa::Scalar,
+    mr: MRQ,
+    nr: NRQ,
+    tile_fn: tile_i8,
+    matvec_fn: matvec_rows_i8,
+};
+
+/// Int8 `MRQ×NRQ` register tile over k-pair interleaved panels: per
+/// pair block, `acc[r][j] += a0·b0 + a1·b1` in exact i32 — the same
+/// pair-sum order the SIMD variants use (`madd`/widening adds), so all
+/// ISAs produce bit-identical accumulators.
+#[allow(clippy::too_many_arguments)]
+fn tile_i8(
+    ap: &[i8],
+    bp: &[i8],
+    kc: usize,
+    acc_c: &mut [i32],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    ep: Option<EpilogueI8>,
+) {
+    let kp = kc.div_ceil(2);
+    debug_assert!(ap.len() >= kp * MRQ * 2 && bp.len() >= kp * NRQ * 2);
+    let mut acc = [[0i32; NRQ]; MRQ];
+    for (av, bv) in ap
+        .chunks_exact(MRQ * 2)
+        .zip(bp.chunks_exact(NRQ * 2))
+        .take(kp)
+    {
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let a0 = av[r * 2] as i32;
+            let a1 = av[r * 2 + 1] as i32;
+            for (j, dst) in accr.iter_mut().enumerate() {
+                *dst += a0 * bv[j * 2] as i32 + a1 * bv[j * 2 + 1] as i32;
+            }
+        }
+    }
+    let mut flat = [0i32; MRQ * NRQ];
+    for (r, accr) in acc.iter().enumerate() {
+        flat[r * NRQ..(r + 1) * NRQ].copy_from_slice(accr);
+    }
+    write_tile_edge_i8(&flat, NRQ, acc_c, out, n, row0, col0, rows, cols, ep);
+}
+
+/// Int8 dense rows: exact i32 dot per row, dequantized through the
+/// epilogue. Row-major i8 weights need no pair interleaving — the k
+/// axis is already contiguous.
+fn matvec_rows_i8(w: &[i8], x: &[i8], ep: EpilogueI8, y: &mut [f32], k: usize) {
+    for (row, (w_row, out)) in w.chunks_exact(k).zip(y.iter_mut()).enumerate() {
+        let mut acc = 0i32;
+        for (&a, &b) in w_row.iter().zip(x.iter()) {
+            acc += a as i32 * b as i32;
+        }
+        let bias = ep.bias.map_or(0.0, |b| b[row]);
+        let v = acc as f32 * ep.scales[row] + bias;
+        *out = if ep.relu { v.max(0.0) } else { v };
+    }
 }
 
 fn relu_map(src: &[f32], dst: &mut [f32]) {

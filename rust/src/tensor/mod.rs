@@ -26,6 +26,8 @@ pub mod im2col;
 pub mod init;
 pub mod kernels;
 pub mod ops;
+pub mod qgemm;
+pub mod quant;
 pub mod slice;
 
 use std::fmt;

@@ -1,0 +1,987 @@
+//! Int8 counterpart of `tensor::gemm`: cache-blocked i8×i8→i32 GEMM
+//! with the dequantizing bias+ReLU epilogue fused into the i32→f32
+//! writeback.
+//!
+//! Same BLIS-style structure as the f32 path — `NC`-wide column panels,
+//! `KC`-deep k blocks, `mr`-tall prepacked A row panels, per-thread
+//! grow-only B-pack scratch — with two int8-specific twists:
+//!
+//!  * **k-pair interleaved panels.** The i8 microkernels consume the
+//!    reduction axis two taps at a time (`vpmaddwd` / widening-add pair
+//!    sums), so panels store byte *pairs*: A keeps `(a[r][p], a[r][p+1])`
+//!    at offset `((p2*mr)+r)*2` and B keeps `(b[p][j], b[p+1][j])` at
+//!    `((p2*nr)+j)*2`, where `p2 = p/2` is local to the k block. Odd
+//!    `kc` pads the trailing pair with zero — exact under integer math.
+//!  * **overwrite, not accumulate.** The f32 GEMM accumulates into C;
+//!    here the i32 accumulator matrix lives in scratch and the final
+//!    k block dequantizes it straight into the f32 output
+//!    (`out = acc · scale (+ bias) (→ ReLU)`), so `c` is overwritten.
+//!    Partial products across k blocks still accumulate — in i32, which
+//!    is exact: every ISA variant produces bit-identical accumulators
+//!    *and* (because the dequant expression is fixed and unfused)
+//!    bit-identical f32 outputs.
+//!
+//! Quantization scheme (see `tensor::quant`): symmetric per-output-
+//! channel weight scales, symmetric per-tensor activation scale,
+//! zero-point 0 everywhere — conv zero padding quantizes to exactly 0,
+//! so the virtual [`QIm2colView`] pads with the same byte the f32 view
+//! pads with.
+
+use super::gemm::{BPanelProvider, KC, NC};
+use super::im2col::Im2colView;
+use super::kernels::{self, EpilogueI8, KernelI8};
+use super::quant;
+use super::Tensor;
+
+/// Row-block height cap, rounded down to the i8 tile's `mr` multiple
+/// (mirrors `gemm::MC`).
+const MC: usize = 64;
+
+fn row_block(kern: &KernelI8) -> usize {
+    (MC / kern.mr).max(1) * kern.mr
+}
+
+/// An `m×k` f32 matrix quantized to symmetric per-row int8 and packed
+/// into the i8 GEMM's k-pair interleaved, `mr`-tall row-panel layout,
+/// blocked `(k block, row block)` exactly like `gemm::PackedA`. The
+/// per-row weight scales ride alongside the panels; the packing kernel
+/// is recorded so panels and the consuming microkernel always agree.
+#[derive(Debug, Clone)]
+pub struct PackedAI8 {
+    /// Rows of the original matrix (output channels).
+    pub m: usize,
+    /// Columns of the original matrix (reduction depth).
+    pub k: usize,
+    data: Vec<i8>,
+    /// Per-row symmetric weight scales (`quant::quantize_rows`).
+    scales: Vec<f32>,
+    /// Start of each `(k block, row block)` group in `data`, k-block-major.
+    offsets: Vec<usize>,
+    n_row_blocks: usize,
+    rb: usize,
+    kernel: &'static KernelI8,
+}
+
+impl PackedAI8 {
+    /// Quantize + pack for the selected i8 kernel, row-blocked so at
+    /// least `threads` row blocks exist whenever `m` allows it.
+    pub fn pack_for_threads(m: usize, k: usize, a: &[f32], threads: usize) -> PackedAI8 {
+        Self::pack_with(kernels::selected_i8(), m, k, a, threads)
+    }
+
+    /// [`PackedAI8::pack_for_threads`] against an explicit i8 kernel
+    /// variant (ISA-parity tests / side-by-side benches).
+    pub fn pack_with(
+        kern: &'static KernelI8,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        threads: usize,
+    ) -> PackedAI8 {
+        assert_eq!(a.len(), m * k, "qpack: A must be m*k");
+        let (q, scales) = quant::quantize_rows(a, m, k);
+        let mr = kern.mr;
+        let rb = (m.div_ceil(threads.max(1)).div_ceil(mr) * mr).clamp(mr, row_block(kern));
+        let n_row_blocks = m.div_ceil(rb);
+        let mut data = Vec::new();
+        let mut offsets = Vec::new();
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            let kp = kc.div_ceil(2);
+            for ic in (0..m).step_by(rb) {
+                let mc = rb.min(m - ic);
+                let start = data.len();
+                offsets.push(start);
+                let n_tiles = mc.div_ceil(mr);
+                data.resize(start + n_tiles * kp * mr * 2, 0);
+                let block = &mut data[start..];
+                for it in 0..n_tiles {
+                    let i0 = ic + it * mr;
+                    let rows = mr.min(ic + mc - i0);
+                    let tile = &mut block[it * kp * mr * 2..(it + 1) * kp * mr * 2];
+                    for p2 in 0..kp {
+                        for r in 0..rows {
+                            let base = (p2 * mr + r) * 2;
+                            tile[base] = q[(i0 + r) * k + pc + 2 * p2];
+                            if 2 * p2 + 1 < kc {
+                                tile[base + 1] = q[(i0 + r) * k + pc + 2 * p2 + 1];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        PackedAI8 {
+            m,
+            k,
+            data,
+            scales,
+            offsets,
+            n_row_blocks,
+            rb,
+            kernel: kern,
+        }
+    }
+
+    /// Packed size in bytes: 1 byte per packed weight plus the f32
+    /// per-row scales — the number deployment reports compare against
+    /// the f32 `PackedA` footprint (≈ 4× shrink).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Per-row symmetric weight scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// The i8 microkernel this matrix was packed for.
+    pub fn kernel(&self) -> &'static KernelI8 {
+        self.kernel
+    }
+
+    fn block(&self, pc_idx: usize, ic_idx: usize) -> &[i8] {
+        let i = pc_idx * self.n_row_blocks + ic_idx;
+        let start = self.offsets[i];
+        let end = self.offsets.get(i + 1).copied().unwrap_or(self.data.len());
+        &self.data[start..end]
+    }
+}
+
+/// Grow-only scratch for the i8 prepacked GEMM: per-thread B-pack
+/// buffers (i8, pair-interleaved) plus the shared i32 accumulator
+/// matrix. Mirrors `gemm::PackScratch`'s contract — buffers are
+/// retained across calls and [`QPackScratch::grow_count`] is flat once
+/// warm, so the executor's no-alloc soak assertions extend to the
+/// quantized tier unchanged.
+#[derive(Debug, Default)]
+pub struct QPackScratch {
+    bufs: Vec<Vec<i8>>,
+    acc: Vec<i32>,
+    grows: u64,
+}
+
+impl QPackScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of buffer growths since creation.
+    pub fn grow_count(&self) -> u64 {
+        self.grows
+    }
+
+    /// Scratch bytes currently held (pack buffers + i32 accumulator).
+    /// Zero until the first i8 call — f32 sessions report unchanged
+    /// peaks.
+    pub fn bytes(&self) -> u64 {
+        self.bufs.iter().map(|b| b.len() as u64).sum::<u64>() + self.acc.len() as u64 * 4
+    }
+
+    /// At least `t` pack buffers of `len` bytes and an accumulator of
+    /// `acc_len` i32s, returned as disjoint borrows.
+    fn parts(&mut self, t: usize, len: usize, acc_len: usize) -> (&mut [Vec<i8>], &mut [i32]) {
+        if self.bufs.len() < t {
+            self.bufs.resize_with(t, Vec::new);
+            self.grows += 1;
+        }
+        for b in &mut self.bufs[..t] {
+            if b.len() < len {
+                b.resize(len, 0);
+                self.grows += 1;
+            }
+        }
+        if self.acc.len() < acc_len {
+            self.acc.resize(acc_len, 0);
+            self.grows += 1;
+        }
+        (&mut self.bufs[..t], &mut self.acc[..acc_len])
+    }
+}
+
+/// Source of the i8 GEMM's B operand: packed `kc×nc` blocks in the
+/// k-pair interleaved layout (`((p2*nr)+j)*2`; `p2` local to the k
+/// block, odd `kc` zero-padded). Same role as `gemm::BPanelProvider` —
+/// a materialized i8 matrix ([`DenseBI8`]) or the virtual quantized
+/// im2col view ([`QIm2colView`]).
+pub trait BPanelProviderI8: Sync {
+    /// Rows of B (the reduction depth `k`).
+    fn k(&self) -> usize;
+    /// Columns of B (the output width `n`).
+    fn n(&self) -> usize;
+    /// Pack the `kc×nc` block at `(pc, jc)` into pair-interleaved
+    /// `nr`-wide panels in `bpack` (panel `jt` occupies
+    /// `bpack[jt*kp*nr*2..(jt+1)*kp*nr*2]`, `kp = kc.div_ceil(2)`).
+    fn pack_panel(&self, bpack: &mut [i8], jc: usize, nc: usize, pc: usize, kc: usize, nr: usize);
+}
+
+/// The trivial provider: a materialized row-major `k×n` i8 matrix.
+pub struct DenseBI8<'a> {
+    k: usize,
+    n: usize,
+    b: &'a [i8],
+}
+
+impl<'a> DenseBI8<'a> {
+    pub fn new(k: usize, n: usize, b: &'a [i8]) -> DenseBI8<'a> {
+        assert_eq!(b.len(), k * n, "qgemm: B must be k*n");
+        DenseBI8 { k, n, b }
+    }
+}
+
+impl BPanelProviderI8 for DenseBI8<'_> {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn pack_panel(&self, bpack: &mut [i8], jc: usize, nc: usize, pc: usize, kc: usize, nr: usize) {
+        let kp = kc.div_ceil(2);
+        let n_panels = nc.div_ceil(nr);
+        assert!(
+            bpack.len() >= n_panels * kp * nr * 2,
+            "qgemm pack_panel: scratch buffer too small"
+        );
+        for jt in 0..n_panels {
+            let j0 = jc + jt * nr;
+            let cols = nr.min(jc + nc - j0);
+            let panel = &mut bpack[jt * kp * nr * 2..(jt + 1) * kp * nr * 2];
+            for (p2, dst) in panel.chunks_exact_mut(nr * 2).enumerate() {
+                let r0 = (pc + 2 * p2) * self.n + j0;
+                let hi = 2 * p2 + 1 < kc;
+                for j in 0..nr {
+                    if j < cols {
+                        dst[j * 2] = self.b[r0 + j];
+                        dst[j * 2 + 1] = if hi { self.b[r0 + self.n + j] } else { 0 };
+                    } else {
+                        dst[j * 2] = 0;
+                        dst[j * 2 + 1] = 0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The implicit-GEMM conv provider of the int8 tier: a virtual im2col
+/// matrix over a *pre-quantized* i8 stage input (the whole input is
+/// quantized once per stage into an arena buffer; zero-point 0 means
+/// conv padding gathers the literal 0 byte). Gathers two tap rows per
+/// pair step through the same interior/border segment walk as
+/// `im2col::Im2colView`, interleaving straight into the pair-format
+/// panel — no i8 column matrix is ever materialized.
+pub struct QIm2colView<'a> {
+    data: &'a [i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k_h: usize,
+    k_w: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    out_h: usize,
+    out_w: usize,
+}
+
+impl<'a> QIm2colView<'a> {
+    /// `data` is the quantized input, CHW layout, `c*h*w` bytes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        data: &'a [i8],
+        c: usize,
+        h: usize,
+        w: usize,
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        pad_h: usize,
+        pad_w: usize,
+        out_h: usize,
+        out_w: usize,
+    ) -> QIm2colView<'a> {
+        assert_eq!(data.len(), c * h * w, "qim2col: data must be c*h*w");
+        assert!(stride >= 1, "qim2col: stride must be >= 1");
+        assert_eq!(
+            out_h,
+            (h + 2 * pad_h - k_h) / stride + 1,
+            "qim2col: out_h inconsistent with conv geometry"
+        );
+        assert_eq!(
+            out_w,
+            (w + 2 * pad_w - k_w) / stride + 1,
+            "qim2col: out_w inconsistent with conv geometry"
+        );
+        QIm2colView {
+            data,
+            c,
+            h,
+            w,
+            k_h,
+            k_w,
+            stride,
+            pad_h,
+            pad_w,
+            out_h,
+            out_w,
+        }
+    }
+
+    /// Quantize `input` with `scale` into `buf` and view it (the conv
+    /// serving path: `buf` is the arena's i8 stage-input buffer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn quantize(
+        input: &Tensor,
+        scale: f32,
+        buf: &'a mut [i8],
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        pad_h: usize,
+        pad_w: usize,
+        out_h: usize,
+        out_w: usize,
+    ) -> QIm2colView<'a> {
+        let used = &mut buf[..input.len()];
+        quant::quantize_into(&input.data, scale, used);
+        QIm2colView::new(
+            used, input.c, input.h, input.w, k_h, k_w, stride, pad_h, pad_w, out_h, out_w,
+        )
+    }
+
+    /// One tap row's bytes for `count` consecutive output pixels
+    /// starting at flat output index `j0` — the i8 twin of
+    /// `Im2colView::gather_tap_cols`, stepping `step` bytes between
+    /// writes (2 to interleave directly into a pair panel).
+    #[allow(clippy::too_many_arguments)]
+    fn gather_tap_cols(
+        &self,
+        ic: usize,
+        ky: usize,
+        kx: usize,
+        j0: usize,
+        dst: &mut [i8],
+        count: usize,
+        step: usize,
+    ) {
+        let h = self.h as isize;
+        let w = self.w as isize;
+        let mut j = j0;
+        let mut done = 0usize;
+        while done < count {
+            let oy = j / self.out_w;
+            let ox0 = j % self.out_w;
+            let seg = (self.out_w - ox0).min(count - done);
+            let iy = (oy * self.stride + ky) as isize - self.pad_h as isize;
+            if iy < 0 || iy >= h {
+                for t in 0..seg {
+                    dst[(done + t) * step] = 0;
+                }
+            } else {
+                let src_row = (ic * self.h + iy as usize) * self.w;
+                if self.stride == 1 {
+                    let off = kx as isize - self.pad_w as isize;
+                    let seg_end = (ox0 + seg) as isize;
+                    let lo = (-off).clamp(ox0 as isize, seg_end) as usize;
+                    let hi = (w - off).clamp(ox0 as isize, seg_end) as usize;
+                    for t in 0..lo - ox0 {
+                        dst[(done + t) * step] = 0;
+                    }
+                    let src0 = (src_row as isize + lo as isize + off) as usize;
+                    for t in 0..hi - lo {
+                        dst[(done + lo - ox0 + t) * step] = self.data[src0 + t];
+                    }
+                    for t in hi - ox0..seg {
+                        dst[(done + t) * step] = 0;
+                    }
+                } else {
+                    for t in 0..seg {
+                        let ix = ((ox0 + t) * self.stride + kx) as isize - self.pad_w as isize;
+                        dst[(done + t) * step] = if ix >= 0 && ix < w {
+                            self.data[src_row + ix as usize]
+                        } else {
+                            0
+                        };
+                    }
+                }
+            }
+            done += seg;
+            j += seg;
+        }
+    }
+}
+
+impl BPanelProviderI8 for QIm2colView<'_> {
+    fn k(&self) -> usize {
+        self.c * self.k_h * self.k_w
+    }
+
+    fn n(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    fn pack_panel(&self, bpack: &mut [i8], jc: usize, nc: usize, pc: usize, kc: usize, nr: usize) {
+        let kp = kc.div_ceil(2);
+        let n_panels = nc.div_ceil(nr);
+        assert!(
+            bpack.len() >= n_panels * kp * nr * 2,
+            "qim2col pack_panel: scratch buffer too small"
+        );
+        for jt in 0..n_panels {
+            let j0 = jc + jt * nr;
+            let cols = nr.min(jc + nc - j0);
+            let panel = &mut bpack[jt * kp * nr * 2..(jt + 1) * kp * nr * 2];
+            for (p2, dst) in panel.chunks_exact_mut(nr * 2).enumerate() {
+                for j in cols..nr {
+                    dst[j * 2] = 0;
+                    dst[j * 2 + 1] = 0;
+                }
+                // Low byte of each pair: tap row pc + 2*p2.
+                let row = pc + 2 * p2;
+                let kx = row % self.k_w;
+                let ky = (row / self.k_w) % self.k_h;
+                let ic = row / (self.k_w * self.k_h);
+                self.gather_tap_cols(ic, ky, kx, j0, dst, cols, 2);
+                // High byte: tap row pc + 2*p2 + 1, zero-padded past kc.
+                if 2 * p2 + 1 < kc {
+                    let row = pc + 2 * p2 + 1;
+                    let kx = row % self.k_w;
+                    let ky = (row / self.k_w) % self.k_h;
+                    let ic = row / (self.k_w * self.k_h);
+                    self.gather_tap_cols(ic, ky, kx, j0, &mut dst[1..], cols, 2);
+                } else {
+                    for j in 0..cols {
+                        dst[j * 2 + 1] = 0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `c = dequant(pa · src)` — the i8 prepacked GEMM. `ep.scales` must
+/// carry the *combined* per-row factor (`w_scale[row] · x_scale`,
+/// length `m`); the output is overwritten, not accumulated (see module
+/// docs). `threads > 1` row-splits at the pack-time row-block
+/// granularity over `std::thread::scope`, exactly like the f32 path —
+/// the i32 accumulator and f32 output split into the same disjoint row
+/// slices.
+pub fn gemm_i8_prepacked_from<S: BPanelProviderI8>(
+    pa: &PackedAI8,
+    src: &S,
+    c: &mut [f32],
+    ep: EpilogueI8,
+    threads: usize,
+    scratch: &mut QPackScratch,
+) {
+    let (m, k) = (pa.m, pa.k);
+    let n = src.n();
+    let kern = pa.kernel;
+    assert_eq!(src.k(), k, "qgemm: provider depth must match packed A");
+    assert_eq!(c.len(), m * n, "qgemm: C must be m*n");
+    assert_eq!(ep.scales.len(), m, "qgemm: one scale per row");
+    if let Some(bias) = ep.bias {
+        assert_eq!(bias.len(), m, "qgemm: bias must have one entry per row");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        for (row, crow) in c.chunks_exact_mut(n).enumerate() {
+            let bias = ep.bias.map_or(0.0, |b| b[row]);
+            let v = if ep.relu { bias.max(0.0) } else { bias };
+            crow.fill(v);
+        }
+        return;
+    }
+    let nr = kern.nr;
+    let bpack_len = NC.min(n).div_ceil(nr) * nr * KC.min(k).div_ceil(2) * 2;
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let t = if flops < 2e6 {
+        1
+    } else {
+        threads.clamp(1, pa.n_row_blocks)
+    };
+    let (bufs, acc) = scratch.parts(t, bpack_len, m * n);
+    acc.fill(0);
+    if t == 1 {
+        gemm_i8_rows(pa, 0, pa.n_row_blocks, src, c, acc, ep, &mut bufs[0]);
+        return;
+    }
+    let base = pa.n_row_blocks / t;
+    let extra = pa.n_row_blocks % t;
+    std::thread::scope(|scope| {
+        let mut c_rest = c;
+        let mut a_rest = acc;
+        let mut blk0 = 0usize;
+        for (i, buf) in bufs.iter_mut().enumerate().take(t) {
+            let n_blks = base + usize::from(i < extra);
+            let row0 = blk0 * pa.rb;
+            let rows = (n_blks * pa.rb).min(m - row0);
+            let (c_blk, c_tail) = std::mem::take(&mut c_rest).split_at_mut(rows * n);
+            c_rest = c_tail;
+            let (a_blk, a_tail) = std::mem::take(&mut a_rest).split_at_mut(rows * n);
+            a_rest = a_tail;
+            let ep_blk = EpilogueI8 {
+                scales: &ep.scales[row0..row0 + rows],
+                bias: ep.bias.map(|bv| &bv[row0..row0 + rows]),
+                relu: ep.relu,
+            };
+            let b0 = blk0;
+            scope.spawn(move || {
+                gemm_i8_rows(pa, b0, n_blks, src, c_blk, a_blk, ep_blk, buf);
+            });
+            blk0 += n_blks;
+        }
+    });
+}
+
+/// Serial i8 kernel over row blocks `[row_blk0, row_blk0+n_blks)`;
+/// `c_blk`/`acc_blk` hold exactly those rows (epilogue slices are
+/// row-block-local).
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_rows<S: BPanelProviderI8>(
+    pa: &PackedAI8,
+    row_blk0: usize,
+    n_blks: usize,
+    src: &S,
+    c_blk: &mut [f32],
+    acc_blk: &mut [i32],
+    ep: EpilogueI8,
+    bpack: &mut [i8],
+) {
+    let k = pa.k;
+    let n = src.n();
+    let kern = pa.kernel;
+    let (mr, nr) = (kern.mr, kern.nr);
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let n_panels = nc.div_ceil(nr);
+        for (pc_idx, pc) in (0..k).step_by(KC).enumerate() {
+            let kc = KC.min(k - pc);
+            let kp = kc.div_ceil(2);
+            let last_k = pc + kc == k;
+            src.pack_panel(bpack, jc, nc, pc, kc, nr);
+            for blk in 0..n_blks {
+                let ic_global = (row_blk0 + blk) * pa.rb;
+                let mc = pa.rb.min(pa.m - ic_global);
+                let ap_block = pa.block(pc_idx, row_blk0 + blk);
+                let local_base = blk * pa.rb;
+                let n_tiles = mc.div_ceil(mr);
+                for it in 0..n_tiles {
+                    let i0 = it * mr;
+                    let rows = mr.min(mc - i0);
+                    let ap = &ap_block[it * kp * mr * 2..(it + 1) * kp * mr * 2];
+                    for jt in 0..n_panels {
+                        let j0 = jt * nr;
+                        let cols = nr.min(nc - j0);
+                        let bp = &bpack[jt * kp * nr * 2..(jt + 1) * kp * nr * 2];
+                        let tile_ep = if last_k { Some(ep) } else { None };
+                        kern.tile(
+                            ap,
+                            bp,
+                            kc,
+                            acc_blk,
+                            c_blk,
+                            n,
+                            local_base + i0,
+                            jc + j0,
+                            rows,
+                            cols,
+                            tile_ep,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Bytes of per-thread i8 B-panel scratch a `k×n` problem needs on
+/// kernel `kern` (pair-interleaved, so ~half the f32 figure) — the i32
+/// accumulator is accounted separately (`4·m·n`).
+pub fn pack_scratch_bytes_i8(kern: &KernelI8, k: usize, n: usize) -> usize {
+    if k == 0 || n == 0 {
+        return 0;
+    }
+    NC.min(n).div_ceil(kern.nr) * kern.nr * KC.min(k).div_ceil(2) * 2
+}
+
+/// `y = dequant(W·x)` — the dense-layer special case on row-major i8
+/// weights (k-consecutive bytes are natural `madd` pairs, so no
+/// re-packing is needed). Row-parallel for large layers, mirroring
+/// `gemm::matvec`.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_i8(
+    m: usize,
+    k: usize,
+    w: &[i8],
+    x: &[i8],
+    ep: EpilogueI8,
+    threads: usize,
+    y: &mut [f32],
+) {
+    matvec_i8_with(kernels::selected_i8(), m, k, w, x, ep, threads, y)
+}
+
+/// [`matvec_i8`] on an explicit i8 kernel variant (ISA-parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_i8_with(
+    kern: &'static KernelI8,
+    m: usize,
+    k: usize,
+    w: &[i8],
+    x: &[i8],
+    ep: EpilogueI8,
+    threads: usize,
+    y: &mut [f32],
+) {
+    assert_eq!(w.len(), m * k, "matvec_i8: W must be m*k");
+    assert_eq!(x.len(), k, "matvec_i8: x must be k");
+    assert_eq!(y.len(), m, "matvec_i8: y must be m");
+    assert_eq!(ep.scales.len(), m, "matvec_i8: one scale per row");
+    if let Some(b) = ep.bias {
+        assert_eq!(b.len(), m, "matvec_i8: bias must be m");
+    }
+    if m == 0 {
+        return;
+    }
+    if k == 0 {
+        for (i, out) in y.iter_mut().enumerate() {
+            let s = ep.bias.map_or(0.0, |b| b[i]);
+            *out = if ep.relu { s.max(0.0) } else { s };
+        }
+        return;
+    }
+    let flops = 2.0 * m as f64 * k as f64;
+    let t = threads.clamp(1, m);
+    if t == 1 || flops < 2e6 {
+        kern.matvec_rows(w, x, ep, y, k);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|scope| {
+        let w_blocks = w.chunks(rows_per * k);
+        let y_blocks = y.chunks_mut(rows_per);
+        for (i, (w_blk, y_blk)) in w_blocks.zip(y_blocks).enumerate() {
+            let row0 = i * rows_per;
+            let ep_blk = EpilogueI8 {
+                scales: &ep.scales[row0..row0 + y_blk.len()],
+                bias: ep.bias.map(|b| &b[row0..row0 + y_blk.len()]),
+                relu: ep.relu,
+            };
+            scope.spawn(move || kern.matvec_rows(w_blk, x, ep_blk, y_blk, k));
+        }
+    });
+}
+
+/// Materialize the f32 values a quantized im2col view would dequantize
+/// from — test/support helper: quantize `input` with `scale` and return
+/// both the i8 buffer and the matching [`QIm2colView`] geometry inputs.
+/// (The serving path uses [`QIm2colView::quantize`] into arena memory.)
+pub fn quantize_tensor(input: &Tensor, scale: f32) -> Vec<i8> {
+    let mut buf = vec![0i8; input.len()];
+    quant::quantize_into(&input.data, scale, &mut buf);
+    buf
+}
+
+/// The f32 `Im2colView` geometry check mirrored for tests: both views
+/// over the same conv geometry expose identical `k`/`n`.
+pub fn qview_matches_f32_geometry(q: &QIm2colView, f: &Im2colView) -> bool {
+    q.k() == f.k() && q.n() == f.n()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::im2col::im2col;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = SplitMix64::new(seed);
+        (0..len).map(|_| r.next_symmetric(1.0)).collect()
+    }
+
+    fn rand_i8(len: usize, seed: u64) -> Vec<i8> {
+        let mut r = SplitMix64::new(seed);
+        (0..len)
+            .map(|_| (r.next_symmetric(127.0) as i32).clamp(-127, 127) as i8)
+            .collect()
+    }
+
+    /// Exact integer oracle: i32 accumulate, then the dequant epilogue.
+    fn qgemm_naive(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i8],
+        b: &[i8],
+        scales: &[f32],
+        bias: Option<&[f32]>,
+        relu: bool,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for p in 0..k {
+                    acc += a[i * k + p] as i32 * b[p * n + j] as i32;
+                }
+                let v = acc as f32 * scales[i] + bias.map_or(0.0, |bv| bv[i]);
+                c[i * n + j] = if relu { v.max(0.0) } else { v };
+            }
+        }
+        c
+    }
+
+    /// Dequantize a quantized matrix back to the f32 values the packer
+    /// saw, so the naive oracle can run on the exact same ints.
+    fn requant_rows(a: &[f32], m: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+        quant::quantize_rows(a, m, k)
+    }
+
+    #[test]
+    fn prepacked_i8_matches_naive_every_kernel_exactly() {
+        // Shapes straddling KC/NC/row-block boundaries, odd k for the
+        // pair padding, every compiled-in i8 variant, serial + threaded.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, KC, 16),
+            (5, KC + 3, 17),
+            (64, 40, NC),
+            (67, KC + 9, NC + 17),
+            (70, 301, 33),
+        ];
+        for kern in kernels::supported_i8() {
+            let mut scratch = QPackScratch::new();
+            for (i, &(m, k, n)) in shapes.iter().enumerate() {
+                let a = rand_vec(m * k, 100 + i as u64);
+                let b = rand_i8(k * n, 200 + i as u64);
+                let bias = rand_vec(m, 300 + i as u64);
+                let pa = PackedAI8::pack_with(kern, m, k, &a, 3);
+                let (qa, wscales) = requant_rows(&a, m, k);
+                // Combined scale: pretend x_scale = 0.02.
+                let scales: Vec<f32> = wscales.iter().map(|s| s * 0.02).collect();
+                for relu in [false, true] {
+                    let want = qgemm_naive(m, k, n, &qa, &b, &scales, Some(&bias), relu);
+                    let ep = EpilogueI8 {
+                        scales: &scales,
+                        bias: Some(&bias),
+                        relu,
+                    };
+                    for threads in [1usize, 3] {
+                        let src = DenseBI8::new(k, n, &b);
+                        // Dirty output proves the i8 path overwrites.
+                        let mut got = vec![9.9f32; m * n];
+                        gemm_i8_prepacked_from(&pa, &src, &mut got, ep, threads, &mut scratch);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} case {i} ({m}x{k}x{n}) relu={relu} threads={threads}",
+                            kern.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_variants_agree_bitwise_with_each_other() {
+        // The cross-ISA claim at the GEMM level: every supported i8
+        // kernel produces the same f32 bytes (exact integer accumulators
+        // + fixed dequant expression).
+        let (m, k, n) = (70, 301, 33);
+        let a = rand_vec(m * k, 41);
+        let b = rand_i8(k * n, 42);
+        let bias = rand_vec(m, 43);
+        let (_, wscales) = requant_rows(&a, m, k);
+        let scales: Vec<f32> = wscales.iter().map(|s| s * 0.015).collect();
+        let ep = EpilogueI8 {
+            scales: &scales,
+            bias: Some(&bias),
+            relu: true,
+        };
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for kern in kernels::supported_i8() {
+            let pa = PackedAI8::pack_with(kern, m, k, &a, 2);
+            let mut scratch = QPackScratch::new();
+            let mut c = vec![0.0f32; m * n];
+            gemm_i8_prepacked_from(&pa, &DenseBI8::new(k, n, &b), &mut c, ep, 2, &mut scratch);
+            outs.push(c);
+        }
+        for (i, o) in outs.iter().enumerate().skip(1) {
+            assert_eq!(o, &outs[0], "i8 variant {i} diverged from scalar-i8");
+        }
+    }
+
+    #[test]
+    fn qim2col_packs_identically_to_materialized_quantized_cols() {
+        // Quantize an input, materialize its im2col in i8 (quantized
+        // values are exactly representable in f32, so the f32 im2col of
+        // the dequantized-int image is exact), and require the virtual
+        // view to pack the same bytes.
+        let cases = [
+            // (c, h, w, k_h, k_w, stride, pad_h, pad_w)
+            (3usize, 12usize, 12usize, 3usize, 3usize, 1usize, 1usize, 1usize),
+            (2, 11, 7, 3, 5, 2, 0, 2),
+            (1, 5, 5, 1, 1, 1, 0, 0),
+            (4, 9, 9, 5, 5, 3, 2, 2),
+        ];
+        for (ci, &(c, h, w, kh, kw, s, ph, pw)) in cases.iter().enumerate() {
+            let input = Tensor::from_vec(c, h, w, rand_vec(c * h * w, 700 + ci as u64));
+            let scale = quant::act_scale(quant::max_abs(&input.data));
+            let q = quantize_tensor(&input, scale);
+            let qf = Tensor::from_vec(c, h, w, q.iter().map(|&v| v as f32).collect());
+            let (oh, ow) = ((h + 2 * ph - kh) / s + 1, (w + 2 * pw - kw) / s + 1);
+            let (k, n) = (c * kh * kw, oh * ow);
+            let cols_f = im2col(&qf, kh, kw, s, ph, pw, oh, ow);
+            let cols_i8: Vec<i8> = cols_f.iter().map(|&v| v as i8).collect();
+            let dense = DenseBI8::new(k, n, &cols_i8);
+            let view = QIm2colView::new(&q, c, h, w, kh, kw, s, ph, pw, oh, ow);
+            assert_eq!((view.k(), view.n()), (k, n));
+            let nr = 16usize;
+            for jc in (0..n).step_by(NC) {
+                let nc = NC.min(n - jc);
+                for pc in (0..k).step_by(KC) {
+                    let kc = KC.min(k - pc);
+                    let len = nc.div_ceil(nr) * nr * kc.div_ceil(2) * 2;
+                    let mut want = vec![55i8; len];
+                    let mut got = vec![77i8; len];
+                    dense.pack_panel(&mut want, jc, nc, pc, kc, nr);
+                    view.pack_panel(&mut got, jc, nc, pc, kc, nr);
+                    assert_eq!(got, want, "case {ci} jc={jc} pc={pc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_i8_matches_naive_every_kernel() {
+        for kern in kernels::supported_i8() {
+            for (i, &(m, k)) in [(1usize, 1usize), (7, 9), (64, 257), (130, 1030)]
+                .iter()
+                .enumerate()
+            {
+                let w = rand_i8(m * k, 20 + i as u64);
+                let x = rand_i8(k, 30 + i as u64);
+                let scales: Vec<f32> = (0..m).map(|r| 0.01 + r as f32 * 1e-4).collect();
+                let bias = rand_vec(m, 40 + i as u64);
+                for relu in [false, true] {
+                    let mut want = vec![0.0f32; m];
+                    for r in 0..m {
+                        let mut acc = 0i32;
+                        for p in 0..k {
+                            acc += w[r * k + p] as i32 * x[p] as i32;
+                        }
+                        let v = acc as f32 * scales[r] + bias[r];
+                        want[r] = if relu { v.max(0.0) } else { v };
+                    }
+                    let ep = EpilogueI8 {
+                        scales: &scales,
+                        bias: Some(&bias),
+                        relu,
+                    };
+                    for threads in [1usize, 4] {
+                        let mut y = vec![0.0f32; m];
+                        matvec_i8_with(kern, m, k, &w, &x, ep, threads, &mut y);
+                        assert_eq!(
+                            y,
+                            want,
+                            "{} case {i} relu={relu} threads={threads}",
+                            kern.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qscratch_stops_growing_after_warmup() {
+        let shapes = [(70usize, 301usize, 33usize), (9, 40, 17), (67, KC + 9, 64)];
+        let mut scratch = QPackScratch::new();
+        let run_all = |scratch: &mut QPackScratch| {
+            for (i, &(m, k, n)) in shapes.iter().enumerate() {
+                let a = rand_vec(m * k, 7000 + i as u64);
+                let b = rand_i8(k * n, 8000 + i as u64);
+                let pa = PackedAI8::pack_for_threads(m, k, &a, 2);
+                let scales: Vec<f32> = pa.scales().iter().map(|s| s * 0.01).collect();
+                let ep = EpilogueI8 {
+                    scales: &scales,
+                    bias: None,
+                    relu: false,
+                };
+                let mut c = vec![0.0f32; m * n];
+                gemm_i8_prepacked_from(&pa, &DenseBI8::new(k, n, &b), &mut c, ep, 2, &mut scratch);
+            }
+        };
+        run_all(&mut scratch);
+        let after_warmup = scratch.grow_count();
+        assert!(after_warmup > 0, "first pass must have grown the scratch");
+        for _ in 0..5 {
+            run_all(&mut scratch);
+        }
+        assert_eq!(
+            scratch.grow_count(),
+            after_warmup,
+            "steady-state i8 GEMM must not grow the scratch"
+        );
+    }
+
+    #[test]
+    fn packed_bytes_shrink_vs_f32() {
+        use crate::tensor::gemm::PackedA;
+        let (m, k) = (64usize, 576usize);
+        let a = rand_vec(m * k, 5);
+        let f32p = PackedA::pack_for_threads(m, k, &a, 1);
+        let i8p = PackedAI8::pack_for_threads(m, k, &a, 1);
+        assert_eq!(i8p.kernel().mr, kernels::selected_i8().mr);
+        let ratio = f32p.bytes() as f64 / i8p.bytes() as f64;
+        assert!(
+            ratio >= 3.5,
+            "packed_bytes must shrink >= 3.5x (got {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn zero_k_and_empty_edges() {
+        let mut scratch = QPackScratch::new();
+        let pa0 = PackedAI8::pack_for_threads(2, 0, &[], 1);
+        let scales = vec![1.0f32, 1.0];
+        let bias = vec![1.0f32, -2.0];
+        let mut c = vec![9.0f32; 2 * 3];
+        gemm_i8_prepacked_from(
+            &pa0,
+            &DenseBI8::new(0, 3, &[]),
+            &mut c,
+            EpilogueI8 {
+                scales: &scales,
+                bias: Some(&bias),
+                relu: true,
+            },
+            1,
+            &mut scratch,
+        );
+        assert_eq!(c, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        let mut y = vec![0.0f32; 2];
+        matvec_i8(
+            2,
+            0,
+            &[],
+            &[],
+            EpilogueI8 {
+                scales: &scales,
+                bias: Some(&bias),
+                relu: false,
+            },
+            1,
+            &mut y,
+        );
+        assert_eq!(y, vec![1.0, -2.0]);
+    }
+}

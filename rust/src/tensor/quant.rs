@@ -1,0 +1,386 @@
+//! Quantization primitives for the int8 compute tier and the f16 wire
+//! encoding.
+//!
+//! The scheme is deliberately the simplest one that preserves the
+//! repo's bit-stability contracts:
+//!
+//! * **Weights** — symmetric per-output-channel int8
+//!   ([`quantize_rows`]): `scale[oc] = max|w[oc,·]| / 127`, values
+//!   clamped to `[-127, 127]` (never −128, so `|a·b| ≤ 127²` and an
+//!   i32 accumulator is exact for any k the zoo reaches — worst case
+//!   `127·127·25088 ≈ 4.05e8 ≪ i32::MAX`).
+//! * **Activations** — symmetric per-tensor, zero-point 0
+//!   ([`act_scale`] from a calibrated max-abs): conv zero padding
+//!   quantizes to exactly 0, so padded and unpadded paths agree.
+//! * **Accumulation** — exact i32 everywhere. The i8 microkernels use
+//!   only exact integer instructions (widening multiplies + pairwise
+//!   i16→i32 adds), so scalar/AVX2/NEON produce **bit-identical i32
+//!   accumulators** — the i8 tier keeps the same cross-ISA parity
+//!   contract the f32 tier has in tolerance form, but exactly.
+//! * **Dequantization** — fused into the epilogue:
+//!   `y = acc as f32 * (w_scale[oc] * x_scale) (+ bias) (→ ReLU)`,
+//!   one multiply per output element, bias and ReLU in f32 exactly as
+//!   the f32 tier applies them.
+//!
+//! The f16 wire codec ([`f32_to_f16_bits`] / [`f16_bits_to_f32`]) is a
+//! dependency-free IEEE 754 binary16 conversion with round-to-nearest-
+//! even, used by the transport layer to halve activation wire bytes
+//! (`--wire-dtype f16`). Values are rounded **before** they enter the
+//! transport ([`f16_round`]), so in-process channel sessions and socket
+//! sessions see identical numbers and stay bit-identical to each other.
+
+use super::Tensor;
+
+/// Compute dtype of a session's kernels (`iop exec|serve --dtype`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// f32 kernels — the default and the numerical oracle.
+    #[default]
+    F32,
+    /// int8 kernels with per-channel scales and an exact-i32 epilogue.
+    I8,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I8 => "i8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "i8" => Some(Dtype::I8),
+            _ => None,
+        }
+    }
+}
+
+/// Wire encoding of activation payloads (`--wire-dtype`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireDtype {
+    /// 4 bytes/element, lossless (the default).
+    #[default]
+    F32,
+    /// IEEE binary16: 2 bytes/element, round-to-nearest-even per hop.
+    F16,
+}
+
+impl WireDtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            WireDtype::F32 => "f32",
+            WireDtype::F16 => "f16",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WireDtype> {
+        match s {
+            "f32" => Some(WireDtype::F32),
+            "f16" => Some(WireDtype::F16),
+            _ => None,
+        }
+    }
+
+    /// Wire byte tag (frame codec `exec::wire`).
+    pub fn code(self) -> u8 {
+        match self {
+            WireDtype::F32 => 0,
+            WireDtype::F16 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<WireDtype> {
+        match c {
+            0 => Some(WireDtype::F32),
+            1 => Some(WireDtype::F16),
+            _ => None,
+        }
+    }
+
+    /// Payload bytes per tensor element under this encoding.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            WireDtype::F32 => 4,
+            WireDtype::F16 => 2,
+        }
+    }
+}
+
+/// Largest magnitude in a slice (0.0 for an empty slice).
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+}
+
+/// Symmetric activation scale from a calibrated max-abs: `max / 127`,
+/// with an all-zero tensor degrading to scale 1.0 (any scale represents
+/// zero exactly).
+pub fn act_scale(calib_max: f32) -> f32 {
+    if calib_max > 0.0 {
+        calib_max / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value: round-to-nearest, clamped to `[-127, 127]`
+/// (−128 is excluded on purpose — see the module docs' overflow bound).
+#[inline]
+pub fn quantize_one(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Symmetric per-row int8 quantization of a row-major `rows × cols`
+/// matrix (weight rows = output channels). Returns the quantized values
+/// and one scale per row; `dequant = q as f32 * scale[row]`.
+pub fn quantize_rows(w: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), rows * cols, "quantize_rows: shape mismatch");
+    let mut q = vec![0i8; rows * cols];
+    let mut scales = vec![1.0f32; rows];
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let scale = act_scale(max_abs(row));
+        scales[r] = scale;
+        for (dst, &v) in q[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *dst = quantize_one(v, scale);
+        }
+    }
+    (q, scales)
+}
+
+/// Quantize a whole activation slice with one symmetric scale into a
+/// caller-provided buffer (the compiled path reuses an arena buffer so
+/// the hot loop stays allocation-free).
+pub fn quantize_into(x: &[f32], scale: f32, out: &mut [i8]) {
+    assert_eq!(x.len(), out.len(), "quantize_into: length mismatch");
+    for (dst, &v) in out.iter_mut().zip(x) {
+        *dst = quantize_one(v, scale);
+    }
+}
+
+/// Convert an f32 to IEEE binary16 bits with round-to-nearest-even.
+/// Overflow saturates to ±Inf; NaN stays NaN (payload collapsed to one
+/// quiet bit); values below the smallest subnormal round to ±0.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mut man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN.
+        let payload: u16 = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | payload;
+    }
+    let e = exp - 127 + 15; // rebias f32 → f16
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±Inf
+    }
+    if e <= 0 {
+        // Subnormal (or underflow to zero).
+        if e < -10 {
+            return sign;
+        }
+        man |= 0x0080_0000; // implicit leading bit, now explicit
+        let shift = (13 + 1 - e) as u32;
+        let rounded = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && rounded & 1 == 1) {
+            rounded + 1 // may carry into exponent 1 — still correct
+        } else {
+            rounded
+        };
+        return sign | rounded as u16;
+    }
+    // Normal: drop 13 mantissa bits, round-to-nearest-even. A mantissa
+    // carry rolls into the exponent (and, at the top, into Inf) by
+    // plain integer addition — both are the correct IEEE results.
+    let rounded = man >> 13;
+    let rem = man & 0x1fff;
+    let mut h = ((e as u32) << 10) | rounded;
+    if rem > 0x1000 || (rem == 0x1000 && rounded & 1 == 1) {
+        h += 1;
+    }
+    sign | h as u16
+}
+
+/// Convert IEEE binary16 bits to the exactly-representable f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        // Inf / NaN (mantissa shifted up keeps NaN a NaN).
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: renormalize into an f32 normal.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man << 13;
+            while m & 0x0080_0000 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | (m & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 to the nearest representable f16 value, returned as
+/// f32. This is what the transport applies to every payload element
+/// under `--wire-dtype f16` *before* the bytes leave the mailbox, so
+/// channel and socket sessions compute on identical values.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round a whole tensor to f16 precision in place.
+pub fn f16_round_tensor(t: &mut Tensor) {
+    for v in &mut t.data {
+        *v = f16_round(*v);
+    }
+}
+
+/// Oracle-check tolerance for `iop exec` / `iop serve --check`,
+/// scaled to the oracle output's magnitude:
+///
+/// * f32 compute over an f32 wire keeps the historical 1e-3 absolute
+///   bound (those paths are bit-identical to the oracle up to GEMM
+///   summation-order effects);
+/// * an f16 wire adds relative slack for per-hop round-to-nearest
+///   (unit roundoff 2⁻¹¹ ≈ 4.9e-4 per hop, a few hops end to end);
+/// * i8 compute adds the quantization budget: per-stage activation and
+///   weight grids are ~1/254 of each tensor's max-abs, compounding
+///   across stages — 5% of the output magnitude bounds the zoo models
+///   comfortably (the equivalence suite pins much tighter observed
+///   errors; top-1 agreement is the accuracy gate that matters).
+pub fn check_tolerance(dtype: Dtype, wire: WireDtype, oracle_max_abs: f32) -> f64 {
+    let mut tol = 1e-3f64;
+    if wire == WireDtype::F16 {
+        tol += 4e-3 * oracle_max_abs as f64;
+    }
+    if dtype == Dtype::I8 {
+        tol += 0.05 * oracle_max_abs as f64;
+    }
+    tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_names_round_trip() {
+        for d in [Dtype::F32, Dtype::I8] {
+            assert_eq!(Dtype::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::from_name("f16"), None);
+        for w in [WireDtype::F32, WireDtype::F16] {
+            assert_eq!(WireDtype::from_name(w.name()), Some(w));
+            assert_eq!(WireDtype::from_code(w.code()), Some(w));
+        }
+        assert_eq!(WireDtype::from_code(7), None);
+        assert_eq!(WireDtype::F32.bytes_per_elem(), 4);
+        assert_eq!(WireDtype::F16.bytes_per_elem(), 2);
+    }
+
+    #[test]
+    fn f16_round_trips_exactly_representable_values() {
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1.5, 3.140625,
+            // largest f16 subnormal and smallest positive subnormal
+            6.097555e-5,
+            5.9604645e-8,
+        ] {
+            let r = f16_round(v);
+            assert_eq!(r.to_bits(), v.to_bits(), "{v} not preserved (got {r})");
+        }
+    }
+
+    #[test]
+    fn f16_special_values() {
+        assert_eq!(f16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(f16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(f16_round(f32::NAN).is_nan());
+        // Overflow saturates to Inf; deep underflow flushes to ±0.
+        assert_eq!(f16_round(1e6), f32::INFINITY);
+        assert_eq!(f16_round(-1e6), f32::NEG_INFINITY);
+        assert_eq!(f16_round(1e-9).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_round(-1e-9).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 2049 is exactly between 2048 and 2050 (f16 spacing is 2 in
+        // [2048, 4096)); ties go to the even mantissa → 2048.
+        assert_eq!(f16_round(2049.0), 2048.0);
+        // 2051 is between 2050 and 2052 → even → 2052.
+        assert_eq!(f16_round(2051.0), 2052.0);
+        // Just above the tie rounds away.
+        assert_eq!(f16_round(2049.001), 2050.0);
+    }
+
+    #[test]
+    fn f16_relative_error_bounded_in_normal_range() {
+        // |f16(x) - x| ≤ 2^-11 · |x| for f16-normal magnitudes.
+        let mut x = 1e-3f32;
+        while x < 6e4 {
+            for s in [x, -x, x * 1.000123, x * 1.4999] {
+                let err = (f16_round(s) - s).abs();
+                assert!(
+                    err <= s.abs() * (1.0 / 2048.0) + f32::EPSILON,
+                    "err {err} too large at {s}"
+                );
+            }
+            x *= 3.7;
+        }
+    }
+
+    #[test]
+    fn quantize_rows_symmetric_and_clamped() {
+        let w = vec![1.0f32, -2.0, 0.5, 0.0, 0.0, 0.0];
+        let (q, s) = quantize_rows(&w, 2, 3);
+        // Row 0: scale = 2/127; the max-abs element hits ±127 exactly.
+        assert!((s[0] - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q[1], -127);
+        // Zero row: degrades to scale 1.0, all zeros.
+        assert_eq!(s[1], 1.0);
+        assert_eq!(&q[3..], &[0, 0, 0]);
+        // No value may ever quantize to -128.
+        let extreme: Vec<f32> = (0..64).map(|i| -1.0 + 0.001 * i as f32).collect();
+        let (q, _) = quantize_rows(&extreme, 1, 64);
+        assert!(q.iter().all(|&v| v >= -127));
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_one_and_zero_is_exact() {
+        let xs = vec![0.0f32, 0.3, -0.7, 1.0, -1.0];
+        let scale = act_scale(max_abs(&xs));
+        let mut out = vec![0i8; xs.len()];
+        quantize_into(&xs, scale, &mut out);
+        for (&x, &q) in xs.iter().zip(&out) {
+            assert_eq!(q, quantize_one(x, scale));
+        }
+        assert_eq!(out[0], 0, "zero (conv padding) must quantize to 0");
+        assert_eq!(out[3], 127);
+        assert_eq!(out[4], -127);
+    }
+
+    #[test]
+    fn check_tolerance_orders_by_precision_loss() {
+        let f = check_tolerance(Dtype::F32, WireDtype::F32, 10.0);
+        let h = check_tolerance(Dtype::F32, WireDtype::F16, 10.0);
+        let q = check_tolerance(Dtype::I8, WireDtype::F32, 10.0);
+        let qh = check_tolerance(Dtype::I8, WireDtype::F16, 10.0);
+        assert!((f - 1e-3).abs() < 1e-12);
+        assert!(f < h && h < q && q < qh);
+    }
+}

@@ -1,0 +1,567 @@
+//! Integration: the quantized inference tier. Int8 compiled sessions
+//! are gated against the f32 Reference oracle on every zoo model, every
+//! strategy, and both cluster shapes — max-abs error inside the
+//! documented budget (`quant::check_tolerance`) and top-1 agreement
+//! wherever the oracle's argmax margin makes agreement decidable under
+//! elementwise-bounded error. Int8 arithmetic is exact, so the per-ISA
+//! tests demand *bit-identical* outputs across microkernel variants,
+//! not just close floats. f16 wire payloads are checked end to end, the
+//! packed-weight footprint must show the ~4x shrink, and (unix) a
+//! socket i8/f16 session must survive a worker kill and replay
+//! bit-identically to a fresh session planned on the survivors.
+
+use iop::device::profiles;
+use iop::exec::compute::centralized_inference;
+use iop::exec::weights::{model_input, WeightBundle};
+use iop::exec::{Backend, ExecSession, SessionOptions};
+use iop::model::zoo;
+use iop::partition::Strategy;
+use iop::tensor::quant::{self, Dtype, WireDtype};
+
+fn compiled(dtype: Dtype, wire: WireDtype) -> SessionOptions {
+    SessionOptions {
+        backend: Backend::Compiled { threads: 1 },
+        dtype,
+        wire_dtype: wire,
+        ..SessionOptions::default()
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Oracle top-1 margin: `top1 - top2` of the f32 logits. When the
+/// margin exceeds twice an elementwise error bound, no perturbation
+/// inside that bound can flip the argmax — so agreement is a theorem
+/// there and an assertion here; below it, disagreement is legitimate
+/// quantization behavior, not a bug, and the test stays silent.
+fn top1_margin(xs: &[f32]) -> f32 {
+    let mut top1 = f32::NEG_INFINITY;
+    let mut top2 = f32::NEG_INFINITY;
+    for &v in xs {
+        if v > top1 {
+            top2 = top1;
+            top1 = v;
+        } else if v > top2 {
+            top2 = v;
+        }
+    }
+    top1 - top2
+}
+
+// ---------- accuracy gates: i8 vs the f32 oracle ----------
+
+fn check_i8_against_oracle(model: &iop::model::Model, cluster: &iop::device::Cluster) {
+    let wb = WeightBundle::generate(model);
+    let input = model_input(model);
+    let oracle = centralized_inference(model, &wb, &input);
+    let tol =
+        quant::check_tolerance(Dtype::I8, WireDtype::F32, quant::max_abs(&oracle.data)) as f32;
+    let margin = top1_margin(&oracle.data);
+    for s in Strategy::all() {
+        let mut session =
+            ExecSession::open(model, cluster, s, compiled(Dtype::I8, WireDtype::F32)).unwrap();
+        assert_eq!(session.dtype_name(), "i8");
+        let r = session.infer(input.clone()).unwrap();
+        let diff = r.output.max_abs_diff(&oracle);
+        assert!(
+            diff <= tol,
+            "{} {} m={}: int8 max-abs error {diff:.3e} over budget {tol:.3e}",
+            model.name,
+            s.name(),
+            cluster.m()
+        );
+        assert_eq!(r.stats.dtype, "i8");
+        assert!(
+            r.stats.kernel_isa.ends_with("-i8"),
+            "i8 session must report an i8 kernel, got {}",
+            r.stats.kernel_isa
+        );
+        if margin > 2.0 * tol {
+            assert_eq!(
+                argmax(&r.output.data),
+                argmax(&oracle.data),
+                "{} {}: top-1 flipped despite decisive f32 margin {margin:.3e} (tol {tol:.3e})",
+                model.name,
+                s.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn i8_lenet_all_strategies_paper_default() {
+    check_i8_against_oracle(&zoo::lenet(), &profiles::paper_default());
+}
+
+#[test]
+fn i8_alexnet_all_strategies_paper_default() {
+    check_i8_against_oracle(&zoo::alexnet(), &profiles::paper_default());
+}
+
+#[test]
+fn i8_vgg_mini_all_strategies_paper_default() {
+    check_i8_against_oracle(&zoo::vgg_mini(), &profiles::paper_default());
+}
+
+#[test]
+fn i8_lenet_all_strategies_heterogeneous() {
+    check_i8_against_oracle(&zoo::lenet(), &profiles::heterogeneous());
+}
+
+#[test]
+fn i8_alexnet_all_strategies_heterogeneous() {
+    check_i8_against_oracle(&zoo::alexnet(), &profiles::heterogeneous());
+}
+
+#[test]
+fn i8_vgg_mini_all_strategies_heterogeneous() {
+    check_i8_against_oracle(&zoo::vgg_mini(), &profiles::heterogeneous());
+}
+
+/// i8 must refuse every backend but Compiled — the tier lives behind
+/// the prepacked kernel dispatch, and a silent f32 fallback would make
+/// every speedup claim a lie.
+#[test]
+fn i8_requires_the_compiled_backend() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    for backend in [Backend::Reference, Backend::Fast { threads: 1 }] {
+        let err = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                backend,
+                dtype: Dtype::I8,
+                ..SessionOptions::default()
+            },
+        )
+        .err()
+        .expect("i8 on a non-compiled backend must be refused");
+        assert!(err.to_string().contains("compiled"), "{err}");
+    }
+}
+
+/// Multi-request i8 soak: responses must not drift across requests
+/// (arena reuse must not leak quantized state) and must stay inside the
+/// budget every time.
+#[test]
+fn i8_soak_no_drift_across_requests() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let oracle = centralized_inference(&model, &wb, &input);
+    let tol =
+        quant::check_tolerance(Dtype::I8, WireDtype::F32, quant::max_abs(&oracle.data)) as f32;
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        compiled(Dtype::I8, WireDtype::F32),
+    )
+    .unwrap();
+    let first = session.infer(input.clone()).unwrap();
+    assert!(first.output.max_abs_diff(&oracle) <= tol);
+    for i in 1..=8 {
+        let r = session.infer(input.clone()).unwrap();
+        assert!(
+            r.output.allclose(&first.output, 1e-5, 1e-5),
+            "request {i}: i8 output drifted by {}",
+            r.output.max_abs_diff(&first.output)
+        );
+    }
+}
+
+// ---------- per-ISA parity: bit-identical i32 accumulators ----------
+
+/// Deterministic pseudo-random f32 in [-1, 1) — no RNG dependency.
+fn lcg_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 32) as u32 as f32 / (1u64 << 31) as f32) - 1.0
+        })
+        .collect()
+}
+
+fn lcg_i8(n: usize, seed: u64) -> Vec<i8> {
+    lcg_f32(n, seed).iter().map(|v| (v * 127.0) as i8).collect()
+}
+
+/// Every supported i8 GEMM variant must produce *exactly* the scalar
+/// kernel's output — integer accumulation has no rounding excuse, and
+/// the shared MRQ=4/NRQ=16 panel geometry makes the comparison fair.
+/// Ragged edges in both dimensions and an odd k (unpaired trailing
+/// madd lane) are the cases that break a sloppy SIMD tail.
+#[test]
+fn i8_gemm_bit_identical_across_isas() {
+    use iop::tensor::kernels::{by_name_i8, supported_i8, EpilogueI8};
+    use iop::tensor::qgemm::{gemm_i8_prepacked_from, DenseBI8, PackedAI8, QPackScratch};
+
+    let scalar = by_name_i8("scalar-i8").unwrap();
+    for (m, k, n) in [(7usize, 35usize, 19usize), (16, 64, 32), (5, 1, 3)] {
+        let a = lcg_f32(m * k, 11 + (m * k) as u64);
+        let b = lcg_i8(k * n, 23 + (k * n) as u64);
+        let bias = lcg_f32(m, 31);
+        let scales: Vec<f32> = (0..m).map(|i| 0.01 + 0.001 * i as f32).collect();
+        let mut want = vec![0.0f32; m * n];
+        {
+            let pa = PackedAI8::pack_with(scalar, m, k, &a, 1);
+            let ep = EpilogueI8 {
+                scales: &scales,
+                bias: Some(&bias),
+                relu: true,
+            };
+            let mut scratch = QPackScratch::new();
+            gemm_i8_prepacked_from(&pa, &DenseBI8::new(k, n, &b), &mut want, ep, 1, &mut scratch);
+        }
+        for kern in supported_i8() {
+            for threads in [1usize, 3] {
+                let pa = PackedAI8::pack_with(kern, m, k, &a, threads);
+                let ep = EpilogueI8 {
+                    scales: &scales,
+                    bias: Some(&bias),
+                    relu: true,
+                };
+                let mut got = vec![0.0f32; m * n];
+                let mut scratch = QPackScratch::new();
+                gemm_i8_prepacked_from(
+                    &pa,
+                    &DenseBI8::new(k, n, &b),
+                    &mut got,
+                    ep,
+                    threads,
+                    &mut scratch,
+                );
+                assert_eq!(
+                    got,
+                    want,
+                    "{} threads={threads} m={m} k={k} n={n}: i8 GEMM not bit-identical to scalar",
+                    kern.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn i8_matvec_bit_identical_across_isas() {
+    use iop::tensor::kernels::{by_name_i8, supported_i8, EpilogueI8};
+    use iop::tensor::qgemm::matvec_i8_with;
+
+    let scalar = by_name_i8("scalar-i8").unwrap();
+    for (m, k) in [(9usize, 33usize), (32, 128), (1, 1)] {
+        let w = lcg_i8(m * k, 41);
+        let x = lcg_i8(k, 43);
+        let bias = lcg_f32(m, 47);
+        let scales: Vec<f32> = (0..m).map(|i| 0.02 + 0.0005 * i as f32).collect();
+        let ep = EpilogueI8 {
+            scales: &scales,
+            bias: Some(&bias),
+            relu: false,
+        };
+        let mut want = vec![0.0f32; m];
+        matvec_i8_with(scalar, m, k, &w, &x, ep, 1, &mut want);
+        for kern in supported_i8() {
+            let mut got = vec![0.0f32; m];
+            matvec_i8_with(kern, m, k, &w, &x, ep, 1, &mut got);
+            assert_eq!(
+                got,
+                want,
+                "{} m={m} k={k}: i8 matvec not bit-identical to scalar",
+                kern.name()
+            );
+        }
+    }
+}
+
+// ---------- f16 wire payloads ----------
+
+/// An f32-compute session with f16 activation payloads must land inside
+/// the f16 budget of the all-f32 session — and both inside the f32
+/// budget of the oracle. Per-hop rounding compounds across stages, so
+/// this is the end-to-end check the unit roundtrip can't give.
+#[test]
+fn f16_wire_session_within_budget_end_to_end() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let oracle = centralized_inference(&model, &wb, &input);
+    let tol16 =
+        quant::check_tolerance(Dtype::F32, WireDtype::F16, quant::max_abs(&oracle.data)) as f32;
+    for s in Strategy::all() {
+        let mut f16s =
+            ExecSession::open(&model, &cluster, s, compiled(Dtype::F32, WireDtype::F16)).unwrap();
+        assert_eq!(f16s.wire_dtype_name(), "f16");
+        let r = f16s.infer(input.clone()).unwrap();
+        assert_eq!(r.stats.wire_dtype, "f16");
+        let diff = r.output.max_abs_diff(&oracle);
+        assert!(
+            diff <= tol16,
+            "{}: f16-wire error {diff:.3e} over budget {tol16:.3e}",
+            s.name()
+        );
+    }
+}
+
+/// Stacking both reduced precisions must stay inside the combined
+/// budget — the tolerance model is additive, the errors had better be.
+#[test]
+fn i8_compute_with_f16_wire_within_combined_budget() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::heterogeneous();
+    let wb = WeightBundle::generate(&model);
+    let input = model_input(&model);
+    let oracle = centralized_inference(&model, &wb, &input);
+    let tol =
+        quant::check_tolerance(Dtype::I8, WireDtype::F16, quant::max_abs(&oracle.data)) as f32;
+    let mut session = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        compiled(Dtype::I8, WireDtype::F16),
+    )
+    .unwrap();
+    let r = session.infer(input).unwrap();
+    let diff = r.output.max_abs_diff(&oracle);
+    assert!(diff <= tol, "i8+f16 error {diff:.3e} over budget {tol:.3e}");
+    assert_eq!((r.stats.dtype, r.stats.wire_dtype), ("i8", "f16"));
+}
+
+/// The pjrt backend checks its AOT outputs bit-exact against the f32
+/// wire, so f16 payloads must be refused rather than silently ignored.
+/// The option validation runs before any artifact is touched, so this
+/// holds whether or not the `pjrt` feature is compiled in.
+#[test]
+fn f16_wire_refused_on_pjrt() {
+    let model = zoo::lenet();
+    let cluster = profiles::paper_default();
+    let err = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        SessionOptions {
+            backend: Backend::Pjrt {
+                artifacts_dir: "artifacts".into(),
+            },
+            wire_dtype: WireDtype::F16,
+            ..SessionOptions::default()
+        },
+    )
+    .err()
+    .expect("f16 wire on pjrt must be refused");
+    assert!(err.to_string().contains("f16"), "{err}");
+}
+
+// ---------- packed footprint: the ~4x shrink ----------
+
+/// The deployment claim in one number: unique packed weight-panel bytes
+/// of an i8 session must be at least 3.5x below the f32 session's, on
+/// the same model and plan (1 B/weight + f32 scale per row vs
+/// 4 B/weight — padding and bias keep it shy of exactly 4x).
+#[test]
+fn i8_packed_bytes_shrink_at_least_3_5x() {
+    let model = zoo::vgg_mini();
+    let cluster = profiles::paper_default();
+    let f32s = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        compiled(Dtype::F32, WireDtype::F32),
+    )
+    .unwrap();
+    let i8s = ExecSession::open(
+        &model,
+        &cluster,
+        Strategy::Iop,
+        compiled(Dtype::I8, WireDtype::F32),
+    )
+    .unwrap();
+    let (fb, ib) = (f32s.packed_bytes(), i8s.packed_bytes());
+    assert!(fb > 0 && ib > 0, "compiled sessions must report packed bytes");
+    assert!(
+        fb as f64 / ib as f64 >= 3.5,
+        "packed shrink {fb}/{ib} = {:.2}x below the 3.5x bar",
+        fb as f64 / ib as f64
+    );
+}
+
+// ---------- sockets: i8/f16 over real transport, kill-and-replay ----------
+
+#[cfg(unix)]
+mod socket {
+    use super::*;
+    use std::os::unix::net::UnixStream;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::{Duration, Instant};
+
+    use iop::config::{FaultPlan, KillSpec};
+    use iop::device::Cluster;
+    use iop::pipeline;
+
+    static FLEET: AtomicUsize = AtomicUsize::new(0);
+
+    fn sock_path(tag: &str, i: usize) -> String {
+        format!(
+            "{}/iop-qt-{}-{}-{}-{}.sock",
+            std::env::temp_dir().display(),
+            std::process::id(),
+            tag,
+            FLEET.fetch_add(1, Ordering::Relaxed),
+            i
+        )
+    }
+
+    fn wait_listening(addr: &str) {
+        let path = addr.strip_prefix("unix:").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if UnixStream::connect(path).is_ok() {
+                return;
+            }
+            assert!(Instant::now() < deadline, "worker {addr} never came up");
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    fn spawn_fleet(tag: &str, n: usize) -> Vec<String> {
+        let addrs: Vec<String> = (0..n)
+            .map(|i| {
+                let path = sock_path(tag, i);
+                let _ = std::fs::remove_file(&path);
+                let addr = format!("unix:{path}");
+                let a = addr.clone();
+                thread::spawn(move || {
+                    let _ = iop::exec::run_worker(&a, None);
+                });
+                addr
+            })
+            .collect();
+        for addr in &addrs {
+            wait_listening(addr);
+        }
+        addrs
+    }
+
+    /// An i8/f16 session over real worker sockets must be bit-identical
+    /// to the in-process channel transport: workers re-quantize from the
+    /// deterministic weight bundle and calibration walk (no panels cross
+    /// the wire), and f16 rounding happens *before* the transport, so
+    /// the medium cannot change the numbers. Then kill a worker
+    /// mid-stream: recovery must re-plan onto the survivors — still in
+    /// i8/f16 — replay the in-flight request, and keep answering
+    /// bit-identically to a fresh session planned directly on the
+    /// survivor cluster.
+    #[test]
+    fn socket_i8_f16_kill_and_replay_bit_identical() {
+        let model = zoo::lenet();
+        let cluster = profiles::paper_default();
+        let input = model_input(&model);
+        let addrs = spawn_fleet("i8kill", cluster.m());
+
+        let kill_at = 2usize;
+        let mut session = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            SessionOptions {
+                workers: Some(addrs.clone()),
+                recover: true,
+                fault: Some(FaultPlan {
+                    seed: 7,
+                    recv_timeout_ms: None,
+                    links: vec![],
+                    kills: vec![KillSpec {
+                        dev: 1,
+                        at_req: kill_at,
+                        at_stage: None,
+                    }],
+                    stalls: vec![],
+                }),
+                recv_timeout: Some(Duration::from_secs(20)),
+                ..compiled(Dtype::I8, WireDtype::F16)
+            },
+        )
+        .unwrap();
+        assert_eq!(session.dtype_name(), "i8");
+        assert_eq!(session.wire_dtype_name(), "f16");
+
+        // Pre-kill: bit-identical to an in-process i8/f16 session on the
+        // full cluster.
+        let mut local = ExecSession::open(
+            &model,
+            &cluster,
+            Strategy::Iop,
+            compiled(Dtype::I8, WireDtype::F16),
+        )
+        .unwrap();
+        for req in 0..kill_at {
+            let r = session.infer(input.clone()).unwrap();
+            let l = local.infer(input.clone()).unwrap();
+            assert_eq!(
+                r.output.data, l.output.data,
+                "request {req} diverged over the socket before the kill"
+            );
+        }
+
+        // The kill lands on this request; --recover replays it on the
+        // survivors.
+        let out = session.infer(input.clone()).unwrap();
+        let rec = session.recovery_stats();
+        assert!(rec.workers_lost >= 1, "{rec:?}");
+        assert!(rec.replans >= 1, "{rec:?}");
+        assert_eq!(session.alive_devices(), cluster.m() - 1);
+
+        // Post-kill: bit-identical to a fresh i8/f16 session planned
+        // directly on the survivor cluster (original ids 0 and 2).
+        let survivors = Cluster::new(
+            vec![cluster.devices[0], cluster.devices[2]],
+            cluster.bandwidth_bps,
+            cluster.t_est,
+        );
+        let mut fresh = ExecSession::open(
+            &model,
+            &survivors,
+            Strategy::Iop,
+            compiled(Dtype::I8, WireDtype::F16),
+        )
+        .unwrap();
+        let f = fresh.infer(input.clone()).unwrap();
+        assert_eq!(
+            out.output.data, f.output.data,
+            "replayed i8/f16 request must match the survivor-cluster plan bitwise"
+        );
+        for req in 0..2 {
+            let a = session.infer(input.clone()).unwrap();
+            let b = fresh.infer(input.clone()).unwrap();
+            assert_eq!(
+                a.output.data, b.output.data,
+                "post-recovery request {req} diverged from the survivor plan"
+            );
+        }
+        assert!(!session.poisoned());
+
+        // And the replayed answer still honors the accuracy gate.
+        let wb = WeightBundle::generate(&model);
+        let oracle = centralized_inference(&model, &wb, &input);
+        let tol =
+            quant::check_tolerance(Dtype::I8, WireDtype::F16, quant::max_abs(&oracle.data)) as f32;
+        let diff = out.output.max_abs_diff(&oracle);
+        assert!(diff <= tol, "recovered i8/f16 error {diff:.3e} over {tol:.3e}");
+
+        // Verify the plan really shrank to the survivors (sanity that the
+        // bitwise comparison compared like against like).
+        let plan = pipeline::plan(&model, &survivors, Strategy::Iop);
+        assert_eq!(plan.m, cluster.m() - 1);
+    }
+}
